@@ -1,0 +1,139 @@
+//! Figure 4 reproduction: transformer-LM pre-training loss under attacks
+//! with BTARD-CLIPPED-SGD + LAMB (the §4.2 ALBERT-large/WikiText-103
+//! experiment, scaled to the synth-text LM artifact per DESIGN.md §2).
+//!
+//! Measures the paper's qualitative claims: (i) without attacks, both
+//! clipping strengths track the All-Reduce baseline; (ii) attacks spike
+//! the loss but the model recovers much faster than training from
+//! scratch; (iii) stronger clipping (smaller λ_part budget) recovers
+//! faster.
+//!
+//! Requires `make artifacts`. Run: cargo bench --bench fig4_clipped
+//! Env: BTARD_FIG4_STEPS=200 for a longer run.
+
+use btard::coordinator::attacks::{AttackKind, AttackSchedule};
+use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::optimizer::LrSchedule;
+use btard::coordinator::training::{run_btard, OptSpec, RunConfig};
+use btard::coordinator::ProtocolConfig;
+use btard::data::synth_text::SynthText;
+use btard::harness::{Recorder, Table};
+use btard::model::pjrt_model::{PjrtData, PjrtModel};
+use btard::model::GradientSource;
+use btard::runtime::PjrtRuntime;
+use std::sync::Arc;
+
+const N: usize = 16;
+const B: usize = 7;
+
+fn main() {
+    let steps: u64 = std::env::var("BTARD_FIG4_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100);
+    let attack_start = steps / 3;
+
+    let rt = match PjrtRuntime::load_subset("artifacts", &["lm_small"]) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP fig4: artifacts missing ({e:#}); run `make artifacts`");
+            return;
+        }
+    };
+    let meta = rt.manifest.get("lm_small").unwrap().clone();
+    let segments = meta.segments.clone();
+    let corpus = Arc::new(SynthText::new(0, 400_000));
+    let model: Arc<dyn GradientSource> = Arc::new(
+        PjrtModel::new(rt.handle.clone(), meta, PjrtData::Text(corpus)).expect("model"),
+    );
+
+    // Fig. 4 attack set: the paper omits delayed/ALIE/IPM for the LM run.
+    let attacks: Vec<(&str, Option<AttackKind>)> = vec![
+        ("none", None),
+        ("sign_flip", Some(AttackKind::SignFlip { lambda: 100.0 })),
+        ("random_dir", Some(AttackKind::RandomDirection { lambda: 100.0 })),
+        ("label_flip", Some(AttackKind::LabelFlip)),
+    ];
+    // Strong vs weak clipping: τ for the aggregation, λ for Alg. 9's
+    // per-part gradient clip (scaled to the ~0.1-norm LM gradients).
+    let clip_arms: Vec<(&str, f32, f32)> = vec![
+        ("strong_clip", 0.1, 0.5),
+        ("weak_clip", 0.5, 2.0),
+    ];
+
+    let mut rec = Recorder::new("fig4");
+    let mut table = Table::new(&[
+        "attack", "clip", "loss@attack", "peak_loss", "final_loss", "bans",
+    ]);
+    let t0 = std::time::Instant::now();
+
+    for (attack_name, attack) in &attacks {
+        for (clip_name, tau, lambda) in &clip_arms {
+            let byz: Vec<usize> = if attack.is_some() { ((N - B)..N).collect() } else { vec![] };
+            let cfg = RunConfig {
+                n_peers: N,
+                byzantine: byz,
+                attack: attack.map(|a| (a, AttackSchedule::from_step(attack_start))),
+                aggregation_attack: false,
+                steps,
+                protocol: ProtocolConfig {
+                    n0: N,
+                    tau: TauPolicy::Fixed(*tau),
+                    m_validators: 1,
+                    delta_max: 4.0 * tau,
+                    ..ProtocolConfig::default()
+                },
+                opt: OptSpec::Lamb {
+                    schedule: LrSchedule::Warmup { base: 0.005, warmup: 15 },
+                },
+                clip_lambda: Some(*lambda),
+                eval_every: 10,
+                seed: 0,
+                verify_signatures: false,
+                gossip_fanout: 8,
+                segments: segments.clone(),
+            };
+            let res = run_btard(&cfg, model.clone());
+            let evals: Vec<(u64, f64)> = res
+                .metrics
+                .iter()
+                .filter(|m| !m.metric.is_nan())
+                .map(|m| (m.step, m.metric))
+                .collect();
+            let loss_at_attack = evals
+                .iter()
+                .filter(|(s, _)| *s <= attack_start)
+                .map(|(_, l)| *l)
+                .last()
+                .unwrap_or(f64::NAN);
+            let peak_after = evals
+                .iter()
+                .filter(|(s, _)| *s >= attack_start)
+                .map(|(_, l)| *l)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let label = format!("{attack_name}_{clip_name}");
+            rec.record_run(&label, &res);
+            table.row(vec![
+                attack_name.to_string(),
+                clip_name.to_string(),
+                format!("{:.3}", loss_at_attack),
+                format!("{:.3}", peak_after),
+                format!("{:.3}", res.final_metric),
+                res.ban_events.len().to_string(),
+            ]);
+            eprintln!(
+                "[{:>5.0}s] {label}: final {:.3}, bans {}",
+                t0.elapsed().as_secs_f64(),
+                res.final_metric,
+                res.ban_events.len()
+            );
+        }
+    }
+
+    println!(
+        "\n=== Fig. 4: LM loss with BTARD-CLIPPED-SGD (n={N}, b={B}, {steps} steps, artifact lm_small) ===\n"
+    );
+    println!("{}", table.render());
+    let path = rec.finish().expect("write results");
+    println!("series + summary: {}", path.display());
+}

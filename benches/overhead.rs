@@ -1,0 +1,233 @@
+//! Appendix I.2 + §B reproduction: BTARD's computation and communication
+//! overhead, plus the Fig. 9 CenteredClip-iteration ablation and the
+//! Rust-vs-Pallas/XLA aggregation cross-check.
+//!
+//! Reports:
+//!   1. per-step wall-time split (gradients / clip / MPRNG / verify /
+//!      comm / validate) for BTARD vs the plain-averaging configuration;
+//!   2. per-peer bytes by message class for several (d, n) — the
+//!      O(d + n²) claim vs the O(n·d) PS regime;
+//!   3. Fig. 9: final accuracy vs CenteredClip iteration budget;
+//!   4. CenteredClip hot path: Rust loop vs the AOT Pallas/XLA artifact.
+//!
+//! Run: cargo bench --bench overhead
+
+use btard::coordinator::attacks::{AttackKind, AttackSchedule};
+use btard::coordinator::centered_clip::{centered_clip, TauPolicy};
+use btard::coordinator::optimizer::LrSchedule;
+use btard::coordinator::training::{run_btard, run_ps, OptSpec, PsConfig, RunConfig};
+use btard::coordinator::{Aggregator, ProtocolConfig};
+use btard::data::synth_vision::SynthVision;
+use btard::harness::Table;
+use btard::model::mlp::MlpModel;
+use btard::model::synthetic::Quadratic;
+use btard::model::GradientSource;
+use btard::runtime::PjrtRuntime;
+use btard::util::bench::{bench, black_box, fmt_ns};
+use btard::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    timing_split();
+    traffic_table();
+    fig9_clip_iters();
+    clip_rust_vs_artifact();
+}
+
+// --- 1. per-step wall time split ------------------------------------------
+
+fn timing_split() {
+    println!("=== App. I.2: per-step wall-time split (quadratic d=65536, n=16) ===\n");
+    let src: Arc<dyn GradientSource> = Arc::new(Quadratic::new(65_536, 0.1, 2.0, 1.0, 5));
+    let mut table = Table::new(&[
+        "config", "step_ms", "grad_ms", "clip_ms", "mprng_ms", "verify_ms", "comm_ms", "validate_ms",
+    ]);
+    for (name, tau, m, sigs) in [
+        ("btard_tau1_sigs", TauPolicy::Fixed(1.0), 1usize, true),
+        ("btard_tau1", TauPolicy::Fixed(1.0), 1, false),
+        ("btard_2validators", TauPolicy::Fixed(1.0), 2, false),
+        ("plain_allreduce", TauPolicy::Infinite, 0, false),
+    ] {
+        let mut cfg = RunConfig::quick(16, 12);
+        cfg.protocol.tau = tau;
+        cfg.protocol.m_validators = m;
+        cfg.verify_signatures = sigs;
+        cfg.opt = OptSpec::Sgd {
+            schedule: LrSchedule::Constant(0.05),
+            momentum: 0.0,
+            nesterov: false,
+        };
+        cfg.eval_every = 1000;
+        let res = run_btard(&cfg, src.clone());
+        let n = res.metrics.len().max(1) as f64;
+        let avg = |f: &dyn Fn(&btard::coordinator::training::StepMetric) -> f64| {
+            res.metrics.iter().map(|m| f(m)).sum::<f64>() / n * 1e3
+        };
+        table.row(vec![
+            name.to_string(),
+            format!("{:.1}", avg(&|m| m.step_wall_s)),
+            format!("{:.1}", avg(&|m| m.grad_s)),
+            format!("{:.1}", avg(&|m| m.clip_s)),
+            format!("{:.1}", avg(&|m| m.mprng_s)),
+            format!("{:.1}", avg(&|m| m.verify_s)),
+            format!("{:.1}", avg(&|m| m.comm_s)),
+            format!("{:.1}", avg(&|m| m.validate_s)),
+        ]);
+    }
+    println!("{}", table.render());
+}
+
+// --- 2. communication accounting -------------------------------------------
+
+fn traffic_table() {
+    println!("=== §B / Table: per-peer bytes per step — O(d + n²) vs PS O(n·d) ===\n");
+    let mut table = Table::new(&[
+        "d", "n", "btard_bytes/peer/step", "ps_server_bytes/step(≈n·d·4)", "ratio",
+    ]);
+    for (d, n) in [(16_384usize, 4usize), (16_384, 8), (16_384, 16), (262_144, 16)] {
+        let src: Arc<dyn GradientSource> = Arc::new(Quadratic::new(d, 0.1, 2.0, 0.5, 1));
+        let mut cfg = RunConfig::quick(n, 4);
+        cfg.protocol.n0 = n;
+        cfg.verify_signatures = false;
+        cfg.eval_every = 1000;
+        let res = run_btard(&cfg, src);
+        let per_step = *res.peer_bytes.iter().max().unwrap() as f64 / 4.0;
+        let ps_bytes = (n * d * 4 * 2) as f64; // server receives nd, sends nd
+        table.row(vec![
+            d.to_string(),
+            n.to_string(),
+            format!("{:.0}", per_step),
+            format!("{:.0}", ps_bytes),
+            format!("{:.1}x", ps_bytes / per_step),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(BTARD per-peer cost stays ~2·d·4 bytes as n grows; a robust PS moves n× more.)\n");
+}
+
+// --- 3. Fig. 9: CenteredClip iteration budget --------------------------------
+
+fn fig9_clip_iters() {
+    println!("=== Fig. 9: final accuracy vs CenteredClip iteration budget (PS, sign-flip b=7/16) ===\n");
+    let ds = Arc::new(SynthVision::new(0, 64, 10));
+    let model: Arc<dyn GradientSource> = Arc::new(MlpModel::new(ds, 64, 8));
+    let mut table = Table::new(&["clip_iters", "final_acc"]);
+    // PS CenteredClip with a *limited* iteration budget: emulated by the
+    // BTARD path with clip_iters override (the PS baseline runs to
+    // convergence by design, so we use the protocol path with τ=1).
+    for iters in [1usize, 2, 5, 20, 100, 500] {
+        let mut cfg = RunConfig::quick(16, 150);
+        cfg.byzantine = (9..16).collect();
+        cfg.attack = Some((
+            AttackKind::SignFlip { lambda: 1000.0 },
+            AttackSchedule::from_step(30),
+        ));
+        cfg.protocol.tau = TauPolicy::Fixed(1.0);
+        cfg.protocol.clip_iters = iters;
+        cfg.protocol.clip_eps = 0.0; // force exactly `iters` iterations
+        // Loose Σs tolerance: truncated clip leaves a real residual; this
+        // ablation measures quality, not the verification (Fig. 9 regime).
+        cfg.protocol.sum_rel_tol = 1e9;
+        cfg.protocol.delta_max = 1e9;
+        cfg.verify_signatures = false;
+        cfg.opt = OptSpec::Sgd {
+            schedule: LrSchedule::Constant(0.15),
+            momentum: 0.9,
+            nesterov: true,
+        };
+        cfg.eval_every = 25;
+        let res = run_btard(&cfg, model.clone());
+        table.row(vec![iters.to_string(), format!("{:.3}", res.final_metric)]);
+    }
+    println!("{}", table.render());
+    println!("(Few iterations leave the aggregate off the fixed point → lower final quality.)\n");
+}
+
+// --- 4. Rust vs Pallas/XLA CenteredClip --------------------------------------
+
+fn clip_rust_vs_artifact() {
+    println!("=== Perf: CenteredClip Rust hot path vs AOT Pallas/XLA artifact (16×4096, 8 iters) ===\n");
+    let (n, p, iters) = (16usize, 4096usize, 8usize);
+    let mut rng = Rng::new(1);
+    let rows: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; p];
+            rng.fill_gaussian(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let tau = 2.0f32;
+
+    let rust = bench("rust centered_clip", Duration::from_secs(2), || {
+        black_box(centered_clip(&refs, tau, iters, 0.0));
+    });
+    println!("{}", rust.report());
+
+    match PjrtRuntime::load_subset("artifacts", &["centered_clip_16x4096"]) {
+        Ok(rt) => {
+            let mut flat = Vec::with_capacity(n * p);
+            for r in &rows {
+                flat.extend_from_slice(r);
+            }
+            let mask = vec![1.0f32; n];
+            let handle = rt.handle.clone();
+            let xla = bench("pallas/xla artifact", Duration::from_secs(2), || {
+                let out = handle
+                    .run(
+                        "centered_clip_16x4096",
+                        vec![
+                            (flat.clone(), vec![n, p]),
+                            (mask.clone(), vec![n]),
+                            (vec![tau], vec![1]),
+                        ],
+                    )
+                    .expect("artifact run");
+                black_box(out);
+            });
+            println!("{}", xla.report());
+            println!(
+                "(ratio {:.2}x — the artifact pays PJRT dispatch + buffer copies at this size; \
+                 the Pallas path exists for the TPU target, see DESIGN.md §Hardware-Adaptation)",
+                xla.median_ns / rust.median_ns
+            );
+        }
+        Err(_) => println!("artifact not built; run `make artifacts` for the XLA column"),
+    }
+    println!();
+
+    // Also: PS aggregation rules head-to-head (context for Fig. 3 costs).
+    println!("=== Aggregation rules, 16 rows × 4096 ===");
+    for (name, agg) in [
+        ("mean", Aggregator::Mean),
+        ("coord_median", Aggregator::CoordMedian),
+        ("trimmed_mean", Aggregator::TrimmedMean),
+        ("geo_median", Aggregator::GeoMedian),
+        ("centered_clip", Aggregator::CenteredClip),
+        ("krum", Aggregator::Krum),
+    ] {
+        let s = bench(name, Duration::from_millis(800), || {
+            black_box(agg.aggregate(&refs, tau, 3));
+        });
+        println!("  {:<14} {}", name, fmt_ns(s.median_ns));
+    }
+    let _ = run_ps(
+        &PsConfig {
+            n_peers: 4,
+            byzantine: vec![],
+            attack: None,
+            aggregator: Aggregator::Mean,
+            tau: 1.0,
+            steps: 1,
+            opt: OptSpec::Sgd {
+                schedule: LrSchedule::Constant(0.1),
+                momentum: 0.0,
+                nesterov: false,
+            },
+            eval_every: 1,
+            seed: 0,
+        },
+        Arc::new(Quadratic::new(64, 0.1, 2.0, 0.5, 1)) as Arc<dyn GradientSource>,
+    );
+}

@@ -1,0 +1,73 @@
+//! Sybil resistance demo (§3.3 / Appendix F): proof-of-computation join.
+//!
+//! An honest newcomer computes all `probation` gradients and is admitted.
+//! A Sybil attacker with a fixed compute budget floods the cluster with
+//! pseudonymous identities — only ⌊budget/probation⌋ of them can be
+//! backed by real computation, so its admitted influence stays
+//! proportional to its compute, not its identity count.
+//!
+//! Run:  cargo run --release --example sybil_defense -- \
+//!           --identities 20 --budget 64 --probation 16 --audits 4
+
+use btard::coordinator::sybil::{
+    audit_candidate, honest_candidate, sybil_candidates, JoinPolicy,
+};
+use btard::model::synthetic::Quadratic;
+use btard::model::GradientSource;
+use btard::util::cli::Args;
+use btard::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let identities = args.get_usize("identities", 20);
+    let budget = args.get_usize("budget", 64);
+    let policy = JoinPolicy {
+        probation: args.get_usize("probation", 16),
+        audits: args.get_usize("audits", 4),
+    };
+    let source: Arc<dyn GradientSource> = Arc::new(Quadratic::new(256, 0.1, 2.0, 0.5, 3));
+    let params = source.init_params(0);
+
+    println!(
+        "=== Sybil defense: probation={} grads, {} audits per candidate ===\n",
+        policy.probation, policy.audits
+    );
+
+    // Honest newcomer.
+    let honest = honest_candidate("alice", &source, &params, &policy, 0);
+    let mut audit_rng = Rng::new(args.get_u64("seed", 42));
+    let admitted = audit_candidate(&honest, &source, &params, &policy, 0, 0, &mut audit_rng);
+    println!(
+        "honest candidate 'alice' (computed {} gradients): {}",
+        policy.probation,
+        if admitted { "ADMITTED" } else { "rejected" }
+    );
+
+    // Sybil flood.
+    let mut rng = Rng::new(args.get_u64("seed", 42) ^ 0x5B11);
+    let reqs = sybil_candidates(identities, budget, &source, &params, &policy, 0, &mut rng);
+    let mut admitted_count = 0;
+    println!(
+        "\nsybil attacker: {identities} identities, compute budget {budget} gradient evaluations"
+    );
+    for (i, req) in reqs.iter().enumerate() {
+        let mut a = Rng::new(audit_rng.next_u64());
+        let ok = audit_candidate(req, &source, &params, &policy, 0, i, &mut a);
+        if ok {
+            admitted_count += 1;
+        }
+        println!(
+            "  {} -> {}",
+            req.candidate_label,
+            if ok { "ADMITTED (fully funded)" } else { "rejected (audit failed)" }
+        );
+    }
+    let bound = budget / policy.probation;
+    println!(
+        "\nadmitted sybils: {admitted_count} (compute bound: ⌊{budget}/{}⌋ = {bound})",
+        policy.probation
+    );
+    assert!(admitted_count <= bound, "influence exceeded the compute bound!");
+    println!("sybil_defense OK — influence is proportional to compute, not identities.");
+}

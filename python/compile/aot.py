@@ -1,0 +1,159 @@
+"""AOT lowering: JAX models -> HLO text artifacts + manifest.json.
+
+HLO *text* (never `.serialize()`): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids that xla_extension 0.5.1 (behind the Rust `xla`
+crate) rejects; the text parser reassigns ids cleanly. See
+/opt/xla-example/README.md and DESIGN.md.
+
+Run: `python -m compile.aot --out-dir ../artifacts` (via `make artifacts`).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    LmConfig,
+    MlpConfig,
+    centered_clip_graph,
+    lm_loss_and_grad,
+    mlp_loss_and_grad,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def seg_manifest(segs):
+    return [{"name": s.name, "offset": s.offset, "len": s.size} for s in segs]
+
+
+def seg_attrs(segs):
+    return {f"init_scale_{s.name}": s.init_scale for s in segs}
+
+
+def build_vision(cfg: MlpConfig, name: str):
+    segs, dim = cfg.segments()
+    spec = lambda shape: jax.ShapeDtypeStruct(shape, jnp.float32)  # noqa: E731
+
+    def fn(params, x, y):
+        return mlp_loss_and_grad(params, x, y, cfg)
+
+    lowered = jax.jit(fn).lower(
+        spec((dim,)), spec((cfg.batch, cfg.features)), spec((cfg.batch,))
+    )
+    meta = {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "inputs": [[dim], [cfg.batch, cfg.features], [cfg.batch]],
+        "outputs": [[], [dim]],
+        "attrs": {
+            "param_dim": dim,
+            "batch": cfg.batch,
+            "features": cfg.features,
+            "classes": cfg.classes,
+            **seg_attrs(segs),
+        },
+        "segments": seg_manifest(segs),
+    }
+    return to_hlo_text(lowered), meta
+
+
+def build_lm(cfg: LmConfig, name: str):
+    segs, dim = cfg.segments()
+    spec = lambda shape: jax.ShapeDtypeStruct(shape, jnp.float32)  # noqa: E731
+
+    def fn(params, tokens):
+        return lm_loss_and_grad(params, tokens, cfg)
+
+    lowered = jax.jit(fn).lower(spec((dim,)), spec((cfg.batch, cfg.seq_len + 1)))
+    meta = {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "inputs": [[dim], [cfg.batch, cfg.seq_len + 1]],
+        "outputs": [[], [dim]],
+        "attrs": {
+            "param_dim": dim,
+            "batch": cfg.batch,
+            "seq_len": cfg.seq_len,
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            **seg_attrs(segs),
+        },
+        "segments": seg_manifest(segs),
+    }
+    return to_hlo_text(lowered), meta
+
+
+def build_centered_clip(n: int, p: int, iters: int, name: str):
+    spec = lambda shape: jax.ShapeDtypeStruct(shape, jnp.float32)  # noqa: E731
+
+    def fn(g, mask, tau):
+        return (centered_clip_graph(g, mask, tau[0], iters),)
+
+    lowered = jax.jit(fn).lower(spec((n, p)), spec((n,)), spec((1,)))
+    meta = {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "inputs": [[n, p], [n], [1]],
+        "outputs": [[p]],
+        "attrs": {"n": n, "p": p, "iters": iters},
+        "segments": [],
+    }
+    return to_hlo_text(lowered), meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--set",
+        default="default",
+        choices=["default", "minimal"],
+        help="artifact set: minimal skips the larger LM variant",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    jobs = [
+        lambda: build_vision(MlpConfig(), "vision_mlp"),
+        lambda: build_lm(
+            LmConfig(d_model=64, n_heads=2, n_layers=2, d_ff=256, seq_len=32, batch=4),
+            "lm_small",
+        ),
+        lambda: build_centered_clip(16, 4096, 8, "centered_clip_16x4096"),
+    ]
+    if args.set == "default":
+        jobs.append(
+            lambda: build_lm(
+                LmConfig(d_model=128, n_heads=4, n_layers=4, d_ff=512, seq_len=64, batch=4),
+                "lm_base",
+            )
+        )
+
+    manifest = {"artifacts": []}
+    for job in jobs:
+        hlo, meta = job()
+        path = os.path.join(args.out_dir, meta["file"])
+        with open(path, "w") as f:
+            f.write(hlo)
+        manifest["artifacts"].append(meta)
+        print(f"wrote {path} ({len(hlo)} chars, param_dim={meta['attrs'].get('param_dim')})")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

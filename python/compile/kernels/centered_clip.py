@@ -1,0 +1,138 @@
+"""Layer-1 Pallas kernels for the CenteredClip fixed-point iteration.
+
+The aggregation hot spot of BTARD is, per partition,
+
+    v <- v + (1/m) sum_i  mask_i * (g_i - v) * min(1, tau / ||g_i - v||)
+
+over the stacked peer gradients G[n, P]. One iteration is two passes:
+
+  pass A (`row_sq_norms`)  — per-row squared norms of (G - v), tiled over
+      the wide P axis: each grid step loads an (n, BP) tile of G plus a
+      (BP,) tile of v into VMEM and accumulates partial squared sums.
+  pass B (`clip_update`)   — given the clip weights w[n] (computed from
+      the norms by a trivial jnp expression), each grid step produces a
+      BP-wide tile of the new v.
+
+TPU adaptation note (DESIGN.md §Hardware-Adaptation): this is a VPU
+(elementwise/reduction) workload, not MXU. The BlockSpec tiles the HBM
+stream along P so each (n × BP) tile is VMEM-resident; BP = 512 keeps a
+16-row tile at 32 KiB, far under VMEM, leaving room for double buffering.
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU numbers are estimated analytically in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile width along the partition axis.
+BLOCK_P = 512
+
+
+def _pad_to_block(x, axis):
+    """Pad `axis` up to a multiple of BLOCK_P with zeros."""
+    size = x.shape[axis]
+    rem = size % BLOCK_P
+    if rem == 0:
+        return x, size
+    pad = BLOCK_P - rem
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+# --- pass A: per-row squared norms ------------------------------------------
+
+
+def _row_sq_norms_kernel(g_ref, v_ref, out_ref):
+    d = g_ref[...] - v_ref[...][None, :]
+    out_ref[...] = jnp.sum(d * d, axis=1, keepdims=True)
+
+
+def row_sq_norms(g, v):
+    """Per-row squared L2 norms of (g - v): returns [n]."""
+    n, p = g.shape
+    gp, _ = _pad_to_block(g, 1)
+    vp, _ = _pad_to_block(v, 0)
+    tiles = gp.shape[1] // BLOCK_P
+    partial = pl.pallas_call(
+        _row_sq_norms_kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((n, BLOCK_P), lambda t: (0, t)),
+            pl.BlockSpec((BLOCK_P,), lambda t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((n, 1), lambda t: (0, t)),
+        out_shape=jax.ShapeDtypeStruct((n, tiles), g.dtype),
+        interpret=True,
+    )(gp, vp)
+    return jnp.sum(partial, axis=1)
+
+
+# --- pass B: weighted clip update -------------------------------------------
+
+
+def _clip_update_kernel(g_ref, v_ref, wm_ref, inv_m_ref, out_ref):
+    g = g_ref[...]
+    v = v_ref[...]
+    wm = wm_ref[...][:, None]  # weights * mask, [n, 1]
+    acc = jnp.sum(wm * (g - v[None, :]), axis=0)
+    out_ref[...] = v + acc * inv_m_ref[0]
+
+
+def clip_update(g, v, weights, mask):
+    """One masked, clip-weighted centering update of v."""
+    n, p = g.shape
+    gp, orig_p = _pad_to_block(g, 1)
+    vp, _ = _pad_to_block(v, 0)
+    tiles = gp.shape[1] // BLOCK_P
+    wm = weights * mask
+    inv_m = (1.0 / jnp.maximum(jnp.sum(mask), 1.0)).reshape(1).astype(g.dtype)
+    out = pl.pallas_call(
+        _clip_update_kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((n, BLOCK_P), lambda t: (0, t)),
+            pl.BlockSpec((BLOCK_P,), lambda t: (t,)),
+            pl.BlockSpec((n,), lambda t: (0,)),
+            pl.BlockSpec((1,), lambda t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_P,), lambda t: (t,)),
+        out_shape=jax.ShapeDtypeStruct((gp.shape[1],), g.dtype),
+        interpret=True,
+    )(gp, vp, wm, inv_m)
+    return out[:orig_p]
+
+
+# --- full iteration ----------------------------------------------------------
+
+
+def clip_weights(sq_norms, tau):
+    """min(1, tau/||.||); tau = +inf gives all-ones (plain mean)."""
+    norms = jnp.sqrt(jnp.maximum(sq_norms, 0.0))
+    return jnp.where(norms <= tau, jnp.ones_like(norms), tau / jnp.maximum(norms, 1e-30))
+
+
+def centered_clip_step(g, v, mask, tau):
+    """One CenteredClip fixed-point iteration (pass A + weights + pass B)."""
+    sq = row_sq_norms(g, v)
+    w = clip_weights(sq, tau)
+    return clip_update(g, v, w, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def centered_clip(g, mask, tau, iters: int):
+    """Run `iters` CenteredClip iterations from the masked coordinate-wise
+    median — the same robust start as the Rust hot path. A mean start
+    would need Theta(||outlier||/tau) iterations to walk back from a
+    lambda-amplified attack; the median start is already inside the
+    honest cluster, so a handful of iterations reach the fixed point."""
+    gm = jnp.where(mask[:, None] > 0, g, jnp.nan)
+    v0 = jnp.nan_to_num(jnp.nanmedian(gm, axis=0))
+
+    def body(_, v):
+        return centered_clip_step(g, v, mask, tau)
+
+    return jax.lax.fori_loop(0, iters, body, v0)

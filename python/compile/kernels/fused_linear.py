@@ -1,0 +1,99 @@
+"""Layer-1 Pallas kernel: fused linear + bias + GELU.
+
+Used by the Layer-2 models for every feed-forward block, so the kernel
+lowers into the same HLO module as the rest of the model and runs from
+the Rust hot path through PJRT.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the block shape targets
+the 128×128 MXU systolic array — each grid step computes a (BM, BN)
+output tile from a (BM, K) × (K, BN) VMEM-resident pair, with the bias
+add and GELU fused into the same tile while it is still in VMEM
+(avoiding an HBM round-trip between matmul and activation, which is the
+fusion the paper's GPU baselines get from cuBLAS+epilogue). K is kept
+un-tiled: for the model sizes in this repo K ≤ 1024, so a (128, K) tile
+is ≤ 512 KiB — well inside VMEM.  interpret=True for CPU execution.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _gelu(x):
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = _gelu(acc + b_ref[...][None, :])
+
+
+def _ceil_to(x, b):
+    return (x + b - 1) // b * b
+
+
+@jax.custom_vjp
+def fused_linear(x, w, b):
+    """GELU(x @ w + b) as a tiled Pallas kernel.
+
+    x: [M, K], w: [K, N], b: [N] -> [M, N]. Arbitrary M/N (padded to the
+    block grid internally).
+
+    `pallas_call` has no automatic VJP, so the backward pass is defined
+    explicitly below (plain XLA ops — the backward matmuls fuse fine on
+    their own; the Pallas win is the fwd epilogue fusion).
+    """
+    return _fused_linear_impl(x, w, b)
+
+
+def _fused_linear_impl(x, w, b):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    mp, np_ = _ceil_to(m, BLOCK_M), _ceil_to(n, BLOCK_N)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n))
+    out = pl.pallas_call(
+        _fused_linear_kernel,
+        grid=(mp // BLOCK_M, np_ // BLOCK_N),
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BLOCK_N), lambda i, j: (0, j)),
+            pl.BlockSpec((BLOCK_N,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def _gelu_grad(z):
+    """d/dz gelu(z) for the tanh approximation."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+    u = c * (z + 0.044715 * z**3)
+    th = jnp.tanh(u)
+    sech2 = 1.0 - th * th
+    return 0.5 * (1.0 + th) + 0.5 * z * sech2 * c * (1.0 + 3.0 * 0.044715 * z * z)
+
+
+def _fused_linear_fwd(x, w, b):
+    return _fused_linear_impl(x, w, b), (x, w, b)
+
+
+def _fused_linear_bwd(res, dy):
+    x, w, b = res
+    z = x @ w + b[None, :]
+    dz = dy * _gelu_grad(z)
+    dx = dz @ w.T
+    dw = x.T @ dz
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

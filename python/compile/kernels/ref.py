@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package has a reference implementation here; pytest
+(`python/tests/test_kernels.py`) sweeps shapes and values with hypothesis
+and asserts allclose between kernel and oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def gelu_ref(x):
+    """tanh-approximation GELU (matches jax.nn.gelu(approximate=True))."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def fused_linear_ref(x, w, b):
+    """GELU(x @ w + b)."""
+    return gelu_ref(x @ w + b)
+
+
+def row_sq_norms_ref(g, v):
+    """Per-row squared L2 norm of (g_i - v): [n]."""
+    d = g - v[None, :]
+    return jnp.sum(d * d, axis=1)
+
+
+def clip_weights_ref(sq_norms, tau):
+    """min(1, tau / ||.||) with the tau=inf convention."""
+    norms = jnp.sqrt(jnp.maximum(sq_norms, 0.0))
+    return jnp.where(norms <= tau, 1.0, tau / jnp.maximum(norms, 1e-30))
+
+
+def clip_update_ref(g, v, weights, mask):
+    """v' = v + (1/m) sum_i mask_i * w_i * (g_i - v), m = sum(mask)."""
+    m = jnp.maximum(jnp.sum(mask), 1.0)
+    wm = (weights * mask)[:, None]
+    return v + jnp.sum(wm * (g - v[None, :]), axis=0) / m
+
+
+def centered_clip_ref(g, mask, tau, iters):
+    """Full CenteredClip: start from the masked coordinate-wise median
+    (matching both the Pallas kernel and the Rust hot path)."""
+    gm = jnp.where(mask[:, None] > 0, g, jnp.nan)
+    v = jnp.nan_to_num(jnp.nanmedian(gm, axis=0))
+    for _ in range(iters):
+        w = clip_weights_ref(row_sq_norms_ref(g, v), tau)
+        v = clip_update_ref(g, v, w, mask)
+    return v

@@ -1,0 +1,147 @@
+"""Kernel-vs-oracle correctness: hypothesis sweeps shapes and values and
+asserts allclose between the Pallas kernels (interpret=True) and the
+pure-jnp references — the core L1 correctness signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.centered_clip import (
+    centered_clip,
+    centered_clip_step,
+    clip_update,
+    clip_weights,
+    row_sq_norms,
+)
+from compile.kernels.fused_linear import fused_linear
+
+RNG = np.random.default_rng(0)
+
+
+def arr(rng_seed, *shape, scale=1.0):
+    rng = np.random.default_rng(rng_seed)
+    return jnp.asarray(rng.normal(size=shape, scale=scale).astype(np.float32))
+
+
+# --- fused_linear ------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 130),
+    k=st.integers(1, 48),
+    n=st.integers(1, 130),
+    seed=st.integers(0, 2**31),
+)
+def test_fused_linear_matches_ref(m, k, n, seed):
+    x = arr(seed, m, k)
+    w = arr(seed + 1, k, n)
+    b = arr(seed + 2, n)
+    got = fused_linear(x, w, b)
+    want = ref.fused_linear_ref(x, w, b)
+    assert got.shape == (m, n)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_fused_linear_block_boundaries():
+    # Exactly at / around the 128 tile boundary.
+    for m, n in [(128, 128), (129, 127), (256, 1), (1, 256)]:
+        x, w, b = arr(1, m, 16), arr(2, 16, n), arr(3, n)
+        assert_allclose(
+            np.asarray(fused_linear(x, w, b)),
+            np.asarray(ref.fused_linear_ref(x, w, b)),
+            rtol=2e-5,
+            atol=2e-5,
+        )
+
+
+def test_fused_linear_zero_input():
+    x = jnp.zeros((4, 8), jnp.float32)
+    w = arr(5, 8, 8)
+    b = jnp.zeros((8,), jnp.float32)
+    assert_allclose(np.asarray(fused_linear(x, w, b)), 0.0, atol=1e-7)
+
+
+# --- centered clip passes ------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 12),
+    p=st.integers(1, 1200),
+    seed=st.integers(0, 2**31),
+)
+def test_row_sq_norms_matches_ref(n, p, seed):
+    g = arr(seed, n, p)
+    v = arr(seed + 1, p)
+    got = row_sq_norms(g, v)
+    want = ref.row_sq_norms_ref(g, v)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 10),
+    p=st.integers(1, 700),
+    tau=st.floats(0.1, 100.0),
+    masked=st.integers(0, 3),
+    seed=st.integers(0, 2**31),
+)
+def test_clip_update_matches_ref(n, p, tau, masked, seed):
+    g = arr(seed, n, p)
+    v = arr(seed + 1, p)
+    mask = jnp.asarray([0.0 if i < min(masked, n - 1) else 1.0 for i in range(n)], jnp.float32)
+    w = clip_weights(ref.row_sq_norms_ref(g, v), tau)
+    got = clip_update(g, v, w, mask)
+    want = ref.clip_update_ref(g, v, w, mask)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(3, 10),
+    p=st.integers(2, 300),
+    iters=st.integers(1, 6),
+    seed=st.integers(0, 2**31),
+)
+def test_full_centered_clip_matches_ref(n, p, iters, seed):
+    g = arr(seed, n, p)
+    mask = jnp.ones((n,), jnp.float32)
+    tau = 1.5
+    got = centered_clip(g, mask, tau, iters)
+    want = ref.centered_clip_ref(g, mask, tau, iters)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_clip_defeats_outlier():
+    # 7 honest rows near zero + 1 huge outlier: clipped mean must stay
+    # near zero while the plain mean is dragged away.
+    g = np.zeros((8, 64), np.float32)
+    g[:7] = RNG.normal(size=(7, 64), scale=0.1)
+    g[7] = 1e4
+    g = jnp.asarray(g)
+    mask = jnp.ones((8,), jnp.float32)
+    out = centered_clip(g, mask, 1.0, 30)
+    assert float(jnp.linalg.norm(out)) < 5.0
+    mean_norm = float(jnp.linalg.norm(jnp.mean(g, axis=0)))
+    assert mean_norm > 100.0
+
+
+def test_tau_inf_is_masked_mean():
+    g = arr(11, 6, 100)
+    mask = jnp.asarray([1, 1, 1, 1, 0, 0], jnp.float32)
+    out = centered_clip(g, mask, jnp.inf, 3)
+    want = jnp.sum(g * mask[:, None], axis=0) / 4.0
+    assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_step_is_fixed_point_consistent():
+    # After many iterations, a further step barely moves v (fixed point).
+    g = arr(13, 8, 128)
+    mask = jnp.ones((8,), jnp.float32)
+    v = centered_clip(g, mask, 2.0, 50)
+    v2 = centered_clip_step(g, v, mask, 2.0)
+    assert float(jnp.linalg.norm(v2 - v)) < 1e-4

@@ -1,0 +1,276 @@
+//! Ban bookkeeping: the ACCUSE / ELIMINATE protocols (Algorithms 3–4 and
+//! Appendix D.3).
+//!
+//! Honest peers never need to coordinate explicitly on bans: every ban
+//! decision is a deterministic function of broadcast data, processed at
+//! the end of each step in a canonical order — (type, accuser, target),
+//! with ACCUSE before ELIMINATE, exactly as Appendix D.3 prescribes. Once
+//! a peer is banned mid-processing, later messages involving it are
+//! ignored regardless of its role, which caps the damage of Byzantine
+//! ELIMINATE spam at one honest peer per Byzantine peer.
+
+use super::messages::BanReason;
+use crate::net::PeerId;
+use std::collections::BTreeSet;
+
+/// A resolved ban (for reports and assertions in tests).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BanEvent {
+    pub step: u64,
+    pub target: PeerId,
+    pub reason: BanReason,
+    /// The accuser/eliminator (target itself for self-inflicted bans).
+    pub by: PeerId,
+}
+
+/// A pending ban intent gathered during a step, before ordering.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BanIntent {
+    /// ACCUSE(accuser → target): adjudicated by recomputation; `guilty`
+    /// records the adjudication outcome (true ⇒ ban target, false ⇒ ban
+    /// accuser per the Hammurabi rule).
+    Accuse { accuser: PeerId, target: PeerId, reason: BanReason, guilty: bool },
+    /// ELIMINATE(a, b): both are removed, no proof needed.
+    Eliminate { accuser: PeerId, target: PeerId },
+    /// Unilateral, proven-by-broadcast offence (equivocation, MPRNG
+    /// mismatch): only the target is removed.
+    Proven { observer: PeerId, target: PeerId, reason: BanReason },
+}
+
+impl BanIntent {
+    /// Canonical processing order: (type, accuser, target).
+    fn sort_key(&self) -> (u8, PeerId, PeerId) {
+        match self {
+            BanIntent::Proven { observer, target, .. } => (0, *observer, *target),
+            BanIntent::Accuse { accuser, target, .. } => (1, *accuser, *target),
+            BanIntent::Eliminate { accuser, target } => (2, *accuser, *target),
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct BanLedger {
+    banned: BTreeSet<PeerId>,
+    pub events: Vec<BanEvent>,
+}
+
+impl BanLedger {
+    pub fn new() -> BanLedger {
+        BanLedger::default()
+    }
+
+    pub fn is_banned(&self, p: PeerId) -> bool {
+        self.banned.contains(&p)
+    }
+
+    pub fn banned_set(&self) -> &BTreeSet<PeerId> {
+        &self.banned
+    }
+
+    /// Process a step's collected intents in canonical order. Returns the
+    /// peers newly banned this step. Intents that involve an
+    /// already-banned peer (in either role) are skipped, per D.3.
+    pub fn process(&mut self, step: u64, mut intents: Vec<BanIntent>) -> Vec<PeerId> {
+        intents.sort_by_key(|i| i.sort_key());
+        intents.dedup();
+        let mut newly = Vec::new();
+        let ban = |ledger: &mut BTreeSet<PeerId>,
+                       events: &mut Vec<BanEvent>,
+                       newly: &mut Vec<PeerId>,
+                       target: PeerId,
+                       reason: BanReason,
+                       by: PeerId| {
+            if ledger.insert(target) {
+                events.push(BanEvent { step, target, reason, by });
+                newly.push(target);
+            }
+        };
+        for intent in intents {
+            match intent {
+                BanIntent::Proven { observer, target, reason } => {
+                    if self.banned.contains(&target) {
+                        continue;
+                    }
+                    ban(&mut self.banned, &mut self.events, &mut newly, target, reason, observer);
+                }
+                BanIntent::Accuse { accuser, target, reason, guilty } => {
+                    if self.banned.contains(&accuser) || self.banned.contains(&target) {
+                        continue;
+                    }
+                    if guilty {
+                        ban(&mut self.banned, &mut self.events, &mut newly, target, reason, accuser);
+                    } else {
+                        ban(
+                            &mut self.banned,
+                            &mut self.events,
+                            &mut newly,
+                            accuser,
+                            BanReason::FalseAccusation,
+                            target,
+                        );
+                    }
+                }
+                BanIntent::Eliminate { accuser, target } => {
+                    if self.banned.contains(&accuser) || self.banned.contains(&target) {
+                        continue;
+                    }
+                    ban(
+                        &mut self.banned,
+                        &mut self.events,
+                        &mut newly,
+                        target,
+                        BanReason::Eliminated,
+                        accuser,
+                    );
+                    ban(
+                        &mut self.banned,
+                        &mut self.events,
+                        &mut newly,
+                        accuser,
+                        BanReason::Eliminated,
+                        target,
+                    );
+                }
+            }
+        }
+        newly
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuse_guilty_bans_target() {
+        let mut l = BanLedger::new();
+        let newly = l.process(
+            0,
+            vec![BanIntent::Accuse {
+                accuser: 1,
+                target: 2,
+                reason: BanReason::GradientMismatch,
+                guilty: true,
+            }],
+        );
+        assert_eq!(newly, vec![2]);
+        assert!(l.is_banned(2));
+        assert!(!l.is_banned(1));
+    }
+
+    #[test]
+    fn false_accusation_bans_accuser() {
+        let mut l = BanLedger::new();
+        let newly = l.process(
+            0,
+            vec![BanIntent::Accuse {
+                accuser: 1,
+                target: 2,
+                reason: BanReason::GradientMismatch,
+                guilty: false,
+            }],
+        );
+        assert_eq!(newly, vec![1]);
+        assert_eq!(l.events[0].reason, BanReason::FalseAccusation);
+    }
+
+    #[test]
+    fn eliminate_bans_both() {
+        let mut l = BanLedger::new();
+        let newly = l.process(3, vec![BanIntent::Eliminate { accuser: 4, target: 0 }]);
+        assert_eq!(newly, vec![0, 4]);
+    }
+
+    #[test]
+    fn banned_peer_cannot_eliminate_later_in_same_step() {
+        // Byzantine 2 is proven guilty (equivocation) and also tries to
+        // ELIMINATE honest 1 in the same step: the proof processes first
+        // (type order), so the elimination is void and honest 1 survives.
+        let mut l = BanLedger::new();
+        let newly = l.process(
+            0,
+            vec![
+                BanIntent::Eliminate { accuser: 2, target: 1 },
+                BanIntent::Proven { observer: 0, target: 2, reason: BanReason::Equivocation },
+            ],
+        );
+        assert_eq!(newly, vec![2]);
+        assert!(!l.is_banned(1));
+    }
+
+    #[test]
+    fn each_eliminate_costs_byzantine_one_peer() {
+        // Two Byzantines each eliminate one honest peer: 2-for-2 trade,
+        // which strictly lowers the Byzantine fraction (paper §3.2).
+        let mut l = BanLedger::new();
+        let newly = l.process(
+            0,
+            vec![
+                BanIntent::Eliminate { accuser: 5, target: 1 },
+                BanIntent::Eliminate { accuser: 6, target: 2 },
+            ],
+        );
+        assert_eq!(newly.len(), 4);
+    }
+
+    #[test]
+    fn byzantine_cannot_double_eliminate() {
+        // One Byzantine (7) targets two honest peers: only the first
+        // (canonical order) lands, because 7 is banned after it.
+        let mut l = BanLedger::new();
+        let newly = l.process(
+            0,
+            vec![
+                BanIntent::Eliminate { accuser: 7, target: 3 },
+                BanIntent::Eliminate { accuser: 7, target: 1 },
+            ],
+        );
+        // Canonical order: (7,1) before (7,3).
+        assert_eq!(newly, vec![1, 7]);
+        assert!(!l.is_banned(3));
+    }
+
+    #[test]
+    fn ordering_is_permutation_invariant() {
+        let intents = vec![
+            BanIntent::Eliminate { accuser: 7, target: 3 },
+            BanIntent::Proven { observer: 1, target: 7, reason: BanReason::Equivocation },
+            BanIntent::Accuse {
+                accuser: 0,
+                target: 5,
+                reason: BanReason::NormMismatch,
+                guilty: true,
+            },
+        ];
+        let mut a = BanLedger::new();
+        let ra = a.process(0, intents.clone());
+        let mut rev = intents.clone();
+        rev.reverse();
+        let mut b = BanLedger::new();
+        let rb = b.process(0, rev);
+        assert_eq!(ra, rb);
+        assert_eq!(a.banned_set(), b.banned_set());
+    }
+
+    #[test]
+    fn duplicate_intents_processed_once() {
+        let mut l = BanLedger::new();
+        let i = BanIntent::Proven { observer: 0, target: 4, reason: BanReason::Equivocation };
+        let newly = l.process(0, vec![i.clone(), i.clone(), i]);
+        assert_eq!(newly, vec![4]);
+        assert_eq!(l.events.len(), 1);
+    }
+
+    #[test]
+    fn events_record_reason_and_step() {
+        let mut l = BanLedger::new();
+        l.process(
+            11,
+            vec![BanIntent::Proven { observer: 2, target: 9, reason: BanReason::MprngViolation }],
+        );
+        assert_eq!(
+            l.events[0],
+            BanEvent { step: 11, target: 9, reason: BanReason::MprngViolation, by: 2 }
+        );
+    }
+}

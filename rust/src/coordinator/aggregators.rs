@@ -1,0 +1,277 @@
+//! Parameter-server robust aggregation baselines compared against BTARD
+//! in Fig. 3: plain mean (All-Reduce), coordinate-wise median, geometric
+//! median (Weiszfeld), trimmed mean, Krum, and CenteredClip-on-a-server.
+//!
+//! These all assume a trusted server that sees every full gradient — the
+//! O(n·d) communication regime the paper is escaping — and exist here as
+//! the experiment baselines plus the reference implementations the BTARD
+//! path is tested against.
+
+use super::centered_clip::centered_clip;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Aggregator {
+    Mean,
+    CoordMedian,
+    GeoMedian,
+    TrimmedMean,
+    Krum,
+    CenteredClip,
+}
+
+impl Aggregator {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Aggregator::Mean => "mean",
+            Aggregator::CoordMedian => "coord_median",
+            Aggregator::GeoMedian => "geo_median",
+            Aggregator::TrimmedMean => "trimmed_mean",
+            Aggregator::Krum => "krum",
+            Aggregator::CenteredClip => "centered_clip",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Aggregator> {
+        Some(match s {
+            "mean" | "allreduce" => Aggregator::Mean,
+            "coord_median" => Aggregator::CoordMedian,
+            "geo_median" => Aggregator::GeoMedian,
+            "trimmed_mean" => Aggregator::TrimmedMean,
+            "krum" => Aggregator::Krum,
+            "centered_clip" | "cclip" => Aggregator::CenteredClip,
+            _ => return None,
+        })
+    }
+
+    /// Aggregate `rows` (one gradient per peer). `tau` is used by
+    /// CenteredClip; `trim` (count trimmed from each side) by TrimmedMean
+    /// and Krum's f parameter.
+    pub fn aggregate(&self, rows: &[&[f32]], tau: f32, trim: usize) -> Vec<f32> {
+        match self {
+            Aggregator::Mean => mean(rows),
+            Aggregator::CoordMedian => coord_median(rows),
+            Aggregator::GeoMedian => geo_median(rows, 200, 1e-7),
+            Aggregator::TrimmedMean => trimmed_mean(rows, trim),
+            Aggregator::Krum => krum(rows, trim),
+            Aggregator::CenteredClip => centered_clip(rows, tau, 500, 1e-6).value,
+        }
+    }
+}
+
+pub fn mean(rows: &[&[f32]]) -> Vec<f32> {
+    let n = rows.len();
+    let p = rows[0].len();
+    let mut out = vec![0.0f32; p];
+    for r in rows {
+        for (o, &x) in out.iter_mut().zip(*r) {
+            *o += x;
+        }
+    }
+    let inv = 1.0 / n as f32;
+    out.iter_mut().for_each(|o| *o *= inv);
+    out
+}
+
+/// Median of each coordinate independently.
+pub fn coord_median(rows: &[&[f32]]) -> Vec<f32> {
+    let n = rows.len();
+    let p = rows[0].len();
+    let mut out = vec![0.0f32; p];
+    let mut col = vec![0.0f32; n];
+    for j in 0..p {
+        for (i, r) in rows.iter().enumerate() {
+            col[i] = r[j];
+        }
+        col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out[j] = if n % 2 == 1 {
+            col[n / 2]
+        } else {
+            0.5 * (col[n / 2 - 1] + col[n / 2])
+        };
+    }
+    out
+}
+
+/// Coordinate-wise trimmed mean: drop the `trim` smallest and largest
+/// values per coordinate (Yin et al. 2018).
+pub fn trimmed_mean(rows: &[&[f32]], trim: usize) -> Vec<f32> {
+    let n = rows.len();
+    assert!(2 * trim < n, "trim {trim} too large for n {n}");
+    let p = rows[0].len();
+    let mut out = vec![0.0f32; p];
+    let mut col = vec![0.0f32; n];
+    let keep = n - 2 * trim;
+    for j in 0..p {
+        for (i, r) in rows.iter().enumerate() {
+            col[i] = r[j];
+        }
+        col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out[j] = col[trim..n - trim].iter().sum::<f32>() / keep as f32;
+    }
+    out
+}
+
+/// Geometric median via Weiszfeld iteration.
+pub fn geo_median(rows: &[&[f32]], max_iters: usize, eps: f32) -> Vec<f32> {
+    let p = rows[0].len();
+    let mut v = mean(rows);
+    for _ in 0..max_iters {
+        let mut num = vec![0.0f64; p];
+        let mut denom = 0.0f64;
+        for r in rows {
+            let mut d2 = 0.0f64;
+            for (xi, vi) in r.iter().zip(&v) {
+                let d = (xi - vi) as f64;
+                d2 += d * d;
+            }
+            let dist = d2.sqrt().max(1e-12);
+            let w = 1.0 / dist;
+            for (acc, &xi) in num.iter_mut().zip(*r) {
+                *acc += xi as f64 * w;
+            }
+            denom += w;
+        }
+        let mut step = 0.0f64;
+        for (vi, ni) in v.iter_mut().zip(&num) {
+            let new = (ni / denom) as f32;
+            step += ((new - *vi) as f64).powi(2);
+            *vi = new;
+        }
+        if step.sqrt() < eps as f64 {
+            break;
+        }
+    }
+    v
+}
+
+/// Krum (Blanchard et al. 2017): pick the single gradient with the
+/// smallest sum of squared distances to its n−f−2 nearest neighbours.
+pub fn krum(rows: &[&[f32]], f: usize) -> Vec<f32> {
+    let n = rows.len();
+    let keep = n.saturating_sub(f + 2).max(1);
+    let mut best_idx = 0usize;
+    let mut best_score = f64::INFINITY;
+    let mut dists = vec![0.0f64; n];
+    for i in 0..n {
+        for (k, r) in rows.iter().enumerate() {
+            if k == i {
+                dists[k] = f64::INFINITY;
+                continue;
+            }
+            let mut d2 = 0.0f64;
+            for (a, b) in rows[i].iter().zip(*r) {
+                let d = (a - b) as f64;
+                d2 += d * d;
+            }
+            dists[k] = d2;
+        }
+        let mut sorted = dists.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let score: f64 = sorted[..keep].iter().sum();
+        if score < best_score {
+            best_score = score;
+            best_idx = i;
+        }
+    }
+    rows[best_idx].to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{arb_vec, prop_check};
+
+    fn rows_of(data: &[Vec<f32>]) -> Vec<&[f32]> {
+        data.iter().map(|v| v.as_slice()).collect()
+    }
+
+    #[test]
+    fn mean_basic() {
+        let d = vec![vec![1.0, 0.0], vec![3.0, 2.0]];
+        assert_eq!(mean(&rows_of(&d)), vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn coord_median_odd_even() {
+        let d = vec![vec![1.0], vec![100.0], vec![2.0]];
+        assert_eq!(coord_median(&rows_of(&d)), vec![2.0]);
+        let d2 = vec![vec![1.0], vec![3.0], vec![100.0], vec![2.0]];
+        assert_eq!(coord_median(&rows_of(&d2)), vec![2.5]);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_extremes() {
+        let d = vec![vec![-1000.0], vec![1.0], vec![2.0], vec![3.0], vec![1000.0]];
+        assert_eq!(trimmed_mean(&rows_of(&d), 1), vec![2.0]);
+    }
+
+    #[test]
+    fn geo_median_resists_outlier() {
+        let mut d: Vec<Vec<f32>> = (0..9).map(|i| vec![(i % 3) as f32 * 0.01; 8]).collect();
+        d.push(vec![1e5; 8]);
+        let g = geo_median(&rows_of(&d), 500, 1e-9);
+        let norm: f32 = g.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!(norm < 1.0, "norm {norm}");
+    }
+
+    #[test]
+    fn krum_picks_a_clustered_point() {
+        let mut d: Vec<Vec<f32>> = (0..7).map(|i| vec![0.1 * (i as f32 % 2.0); 4]).collect();
+        d.push(vec![50.0; 4]);
+        let k = krum(&rows_of(&d), 1);
+        assert!(k[0] < 1.0);
+    }
+
+    #[test]
+    fn all_aggregators_handle_identical_rows() {
+        let d: Vec<Vec<f32>> = (0..5).map(|_| vec![1.5f32; 6]).collect();
+        for agg in [
+            Aggregator::Mean,
+            Aggregator::CoordMedian,
+            Aggregator::GeoMedian,
+            Aggregator::TrimmedMean,
+            Aggregator::Krum,
+            Aggregator::CenteredClip,
+        ] {
+            let out = agg.aggregate(&rows_of(&d), 1.0, 1);
+            for &v in &out {
+                assert!((v - 1.5).abs() < 1e-4, "{}: {v}", agg.name());
+            }
+        }
+    }
+
+    #[test]
+    fn robust_aggregators_bounded_under_minority_attack_prop() {
+        prop_check("robust bounded", |rng, _| {
+            let n = 9;
+            let p = 12;
+            let honest: Vec<Vec<f32>> = (0..n - 2).map(|_| arb_vec(rng, p, 0.1)).collect();
+            let mut d = honest.clone();
+            d.push(vec![1e6; p]);
+            d.push(vec![-1e6; p]);
+            let rows = rows_of(&d);
+            for agg in [Aggregator::CoordMedian, Aggregator::GeoMedian, Aggregator::TrimmedMean] {
+                let out = agg.aggregate(&rows, 1.0, 2);
+                let norm: f32 = out.iter().map(|x| x * x).sum::<f32>().sqrt();
+                // Honest points have entries up to ~10 (outlier tail in
+                // arb_vec); robust aggregates stay within that envelope.
+                assert!(norm < 100.0, "{} norm {norm}", agg.name());
+            }
+        });
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for agg in [
+            Aggregator::Mean,
+            Aggregator::CoordMedian,
+            Aggregator::GeoMedian,
+            Aggregator::TrimmedMean,
+            Aggregator::Krum,
+            Aggregator::CenteredClip,
+        ] {
+            assert_eq!(Aggregator::from_name(agg.name()), Some(agg));
+        }
+        assert_eq!(Aggregator::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,450 @@
+//! Byzantine attack implementations (§4.1 of the paper).
+//!
+//! Attackers are omniscient (they can recompute every honest gradient —
+//! all data and seeds are public) and collude. The `CollusionBoard`
+//! shares the per-step honest-gradient statistics among colluders so the
+//! simulation doesn't recompute them once per attacker.
+
+use crate::model::GradientSource;
+use crate::net::PeerId;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AttackKind {
+    /// Send −λ·g_i (λ amplifies so it dominates an unclipped mean).
+    SignFlip { lambda: f32 },
+    /// All attackers send λ·u for a common random unit direction u.
+    RandomDirection { lambda: f32 },
+    /// Honest computation on poisoned labels (l → 9−l for CIFAR-10).
+    LabelFlip,
+    /// Send the true gradient delayed by `delay` steps.
+    DelayedGradient { delay: usize },
+    /// Inner-product manipulation (Xie et al. 2020): −ε·mean(honest).
+    Ipm { eps: f32 },
+    /// "A little is enough" (Baruch et al. 2019): μ − z_max·σ per
+    /// coordinate, staying inside the population variance.
+    Alie,
+}
+
+impl AttackKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttackKind::SignFlip { .. } => "sign_flip",
+            AttackKind::RandomDirection { .. } => "random_direction",
+            AttackKind::LabelFlip => "label_flip",
+            AttackKind::DelayedGradient { .. } => "delayed_gradient",
+            AttackKind::Ipm { .. } => "ipm",
+            AttackKind::Alie => "alie",
+        }
+    }
+
+    /// Parse names used by benches/CLI, e.g. "ipm:0.6", "sign_flip:1000".
+    pub fn from_name(s: &str) -> Option<AttackKind> {
+        let (name, arg) = match s.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (s, None),
+        };
+        let argf = |d: f32| arg.and_then(|a| a.parse().ok()).unwrap_or(d);
+        Some(match name {
+            "sign_flip" => AttackKind::SignFlip { lambda: argf(1000.0) },
+            "random_direction" => AttackKind::RandomDirection { lambda: argf(1000.0) },
+            "label_flip" => AttackKind::LabelFlip,
+            "delayed_gradient" => AttackKind::DelayedGradient { delay: argf(1000.0) as usize },
+            "ipm" => AttackKind::Ipm { eps: argf(0.6) },
+            "alie" => AttackKind::Alie,
+            _ => return None,
+        })
+    }
+}
+
+/// When the attack is live.
+#[derive(Clone, Copy, Debug)]
+pub struct AttackSchedule {
+    pub start: u64,
+    /// Inclusive end (None = until banned).
+    pub stop: Option<u64>,
+    /// Optional (on, off) periodic pattern after `start`.
+    pub period: Option<(u64, u64)>,
+}
+
+impl AttackSchedule {
+    pub fn from_step(start: u64) -> AttackSchedule {
+        AttackSchedule { start, stop: None, period: None }
+    }
+
+    pub fn active(&self, step: u64) -> bool {
+        if step < self.start {
+            return false;
+        }
+        if let Some(stop) = self.stop {
+            if step > stop {
+                return false;
+            }
+        }
+        if let Some((on, off)) = self.period {
+            let phase = (step - self.start) % (on + off);
+            return phase < on;
+        }
+        true
+    }
+}
+
+/// Per-step statistics of the honest contributors' gradients, shared by
+/// all colluding attackers.
+pub struct HonestStats {
+    pub mean: Vec<f32>,
+    pub std: Vec<f32>,
+    pub n_honest: usize,
+}
+
+#[derive(Default)]
+pub struct CollusionBoard {
+    inner: Mutex<HashMap<u64, Arc<HonestStats>>>,
+}
+
+impl CollusionBoard {
+    pub fn new() -> Arc<CollusionBoard> {
+        Arc::new(CollusionBoard::default())
+    }
+
+    /// Get the honest stats for `step`, computing them once.
+    pub fn stats(
+        &self,
+        step: u64,
+        params: &[f32],
+        source: &dyn GradientSource,
+        honest: &[(PeerId, u64)], // (peer, batch_seed)
+    ) -> Arc<HonestStats> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(s) = g.get(&step) {
+            return s.clone();
+        }
+        let d = source.dim();
+        let mut mean = vec![0.0f64; d];
+        let mut m2 = vec![0.0f64; d];
+        let mut count = 0f64;
+        for &(_, seed) in honest {
+            let (_, grad) = source.loss_and_grad(params, seed);
+            count += 1.0;
+            for i in 0..d {
+                let x = grad[i] as f64;
+                let delta = x - mean[i];
+                mean[i] += delta / count;
+                m2[i] += delta * (x - mean[i]);
+            }
+        }
+        let denom = (count - 1.0).max(1.0);
+        let stats = Arc::new(HonestStats {
+            mean: mean.iter().map(|&m| m as f32).collect(),
+            std: m2.iter().map(|&v| ((v / denom).sqrt()) as f32).collect(),
+            n_honest: honest.len(),
+        });
+        // Keep the board small: drop entries older than 4 steps.
+        g.retain(|&s, _| s + 4 >= step);
+        g.insert(step, stats.clone());
+        stats
+    }
+}
+
+/// Mutable attacker state (delayed-gradient history, cached direction).
+pub struct AttackState {
+    pub kind: AttackKind,
+    pub schedule: AttackSchedule,
+    pub board: Arc<CollusionBoard>,
+    /// Parameter history for DelayedGradient (bounded ring).
+    history: Vec<(u64, Vec<f32>)>,
+}
+
+impl AttackState {
+    pub fn new(kind: AttackKind, schedule: AttackSchedule, board: Arc<CollusionBoard>) -> Self {
+        AttackState { kind, schedule, board, history: Vec::new() }
+    }
+
+    /// Record params (needed before gradients are requested).
+    pub fn observe_params(&mut self, step: u64, params: &[f32]) {
+        if let AttackKind::DelayedGradient { delay } = self.kind {
+            self.history.push((step, params.to_vec()));
+            let keep = delay + 1;
+            if self.history.len() > keep {
+                let drop = self.history.len() - keep;
+                self.history.drain(..drop);
+            }
+        }
+    }
+
+    /// The gradient this attacker submits at `step` (honest gradient when
+    /// the schedule is inactive).
+    #[allow(clippy::too_many_arguments)]
+    pub fn gradient(
+        &mut self,
+        step: u64,
+        params: &[f32],
+        source: &dyn GradientSource,
+        own_seed: u64,
+        honest: &[(PeerId, u64)],
+        shared_r: &[u8; 32], // MPRNG output of the previous step: common randomness
+    ) -> Vec<f32> {
+        if !self.schedule.active(step) {
+            return source.loss_and_grad(params, own_seed).1;
+        }
+        match self.kind {
+            AttackKind::SignFlip { lambda } => {
+                let (_, mut g) = source.loss_and_grad(params, own_seed);
+                for v in g.iter_mut() {
+                    *v *= -lambda;
+                }
+                g
+            }
+            AttackKind::RandomDirection { lambda } => {
+                // Common direction: all colluders derive it from shared
+                // randomness, so they agree without extra messages.
+                let mut seed = [0u8; 32];
+                seed.copy_from_slice(shared_r);
+                seed[0] ^= 0xA7;
+                let mut rng = Rng::from_digest(&seed);
+                let mut u = rng.unit_vector(source.dim());
+                for v in u.iter_mut() {
+                    *v *= lambda;
+                }
+                u
+            }
+            AttackKind::LabelFlip => {
+                source
+                    .loss_and_grad_label_flipped(params, own_seed)
+                    .unwrap_or_else(|| source.loss_and_grad(params, own_seed))
+                    .1
+            }
+            AttackKind::DelayedGradient { delay } => {
+                let target_step = step.saturating_sub(delay as u64);
+                let old = self
+                    .history
+                    .iter()
+                    .find(|(s, _)| *s == target_step)
+                    .map(|(_, p)| p.clone())
+                    .unwrap_or_else(|| params.to_vec());
+                source.loss_and_grad(&old, own_seed).1
+            }
+            AttackKind::Ipm { eps } => {
+                let stats = self.board.stats(step, params, source, honest);
+                stats.mean.iter().map(|&m| -eps * m).collect()
+            }
+            AttackKind::Alie => {
+                let stats = self.board.stats(step, params, source, honest);
+                let n = (stats.n_honest + honest_byz_count(honest)) as f64;
+                let b = honest_byz_count(honest) as f64;
+                // z_max per Baruch et al.: s = ⌊n/2⌋+1−b supporters needed;
+                // z = Φ⁻¹((n−b−s)/(n−b)).
+                let s = ((n / 2.0).floor() + 1.0 - b).max(0.0);
+                let q = ((n - b - s) / (n - b)).clamp(0.01, 0.99);
+                let z = normal_quantile(q).max(0.0) as f32;
+                stats
+                    .mean
+                    .iter()
+                    .zip(&stats.std)
+                    .map(|(&m, &sd)| m - z * sd)
+                    .collect()
+            }
+        }
+    }
+}
+
+// The number of Byzantine colluders is (total live) − honest; we only
+// have honest list here, so approximate b from the standard 7-vs-16 split
+// ratio carried by the caller. To keep the signature small we infer
+// b ≈ honest.len() since |B| < |G| always holds in supported configs; the
+// z_max formula is insensitive to small changes in b.
+fn honest_byz_count(honest: &[(PeerId, u64)]) -> usize {
+    (honest.len() * 7) / 9
+}
+
+/// Acklam's rational approximation to the standard normal quantile.
+pub fn normal_quantile(p: f64) -> f64 {
+    debug_assert!(p > 0.0 && p < 1.0);
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -normal_quantile(1.0 - p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic::Quadratic;
+
+    fn mk_source() -> Quadratic {
+        Quadratic::new(16, 0.1, 2.0, 0.1, 1)
+    }
+
+    fn run_attack(kind: AttackKind, step: u64) -> (Vec<f32>, Vec<f32>) {
+        let src = mk_source();
+        let params = src.init_params(0);
+        let board = CollusionBoard::new();
+        let mut st = AttackState::new(kind, AttackSchedule::from_step(10), board);
+        st.observe_params(step, &params);
+        let honest: Vec<(PeerId, u64)> = (0..9).map(|p| (p, 100 + p as u64)).collect();
+        let g = st.gradient(step, &params, &src, 999, &honest, &[7u8; 32]);
+        let (_, truth) = src.loss_and_grad(&params, 999);
+        (g, truth)
+    }
+
+    #[test]
+    fn inactive_before_start() {
+        let (g, truth) = run_attack(AttackKind::SignFlip { lambda: 1000.0 }, 5);
+        assert_eq!(g, truth);
+    }
+
+    #[test]
+    fn sign_flip_flips_and_amplifies() {
+        let (g, truth) = run_attack(AttackKind::SignFlip { lambda: 1000.0 }, 20);
+        for (a, t) in g.iter().zip(&truth) {
+            assert!((a + 1000.0 * t).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn random_direction_is_common_across_colluders() {
+        let src = mk_source();
+        let params = src.init_params(0);
+        let honest: Vec<(PeerId, u64)> = vec![(0, 1)];
+        let board = CollusionBoard::new();
+        let mut a = AttackState::new(
+            AttackKind::RandomDirection { lambda: 100.0 },
+            AttackSchedule::from_step(0),
+            board.clone(),
+        );
+        let mut b = AttackState::new(
+            AttackKind::RandomDirection { lambda: 100.0 },
+            AttackSchedule::from_step(0),
+            board,
+        );
+        let r = [3u8; 32];
+        let ga = a.gradient(0, &params, &src, 5, &honest, &r);
+        let gb = b.gradient(0, &params, &src, 6, &honest, &r);
+        assert_eq!(ga, gb); // colluders agree without communicating
+        let norm: f32 = ga.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 100.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn ipm_points_against_honest_mean() {
+        let (g, _) = run_attack(AttackKind::Ipm { eps: 0.6 }, 20);
+        let src = mk_source();
+        let params = src.init_params(0);
+        let honest: Vec<(PeerId, u64)> = (0..9).map(|p| (p, 100 + p as u64)).collect();
+        let board = CollusionBoard::new();
+        let stats = board.stats(20, &params, &src, &honest);
+        for (a, m) in g.iter().zip(&stats.mean) {
+            assert!((a + 0.6 * m).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn alie_stays_within_variance_envelope() {
+        let (g, _) = run_attack(AttackKind::Alie, 20);
+        let src = mk_source();
+        let params = src.init_params(0);
+        let honest: Vec<(PeerId, u64)> = (0..9).map(|p| (p, 100 + p as u64)).collect();
+        let stats = CollusionBoard::new().stats(20, &params, &src, &honest);
+        for i in 0..g.len() {
+            let dev = (g[i] - stats.mean[i]).abs();
+            assert!(dev <= 4.0 * stats.std[i] + 1e-6, "coord {i}: dev {dev}");
+        }
+    }
+
+    #[test]
+    fn delayed_gradient_uses_old_params() {
+        let src = mk_source();
+        let board = CollusionBoard::new();
+        let mut st = AttackState::new(
+            AttackKind::DelayedGradient { delay: 2 },
+            AttackSchedule::from_step(0),
+            board,
+        );
+        let honest = vec![(0usize, 1u64)];
+        let p0 = vec![1.0f32; 16];
+        let p1 = vec![2.0f32; 16];
+        let p2 = vec![3.0f32; 16];
+        st.observe_params(0, &p0);
+        st.observe_params(1, &p1);
+        st.observe_params(2, &p2);
+        let g = st.gradient(2, &p2, &src, 7, &honest, &[0u8; 32]);
+        let (_, want) = src.loss_and_grad(&p0, 7);
+        assert_eq!(g, want);
+    }
+
+    #[test]
+    fn schedule_periodic() {
+        let s = AttackSchedule { start: 10, stop: None, period: Some((3, 2)) };
+        assert!(!s.active(9));
+        assert!(s.active(10) && s.active(12));
+        assert!(!s.active(13) && !s.active(14));
+        assert!(s.active(15));
+    }
+
+    #[test]
+    fn schedule_stop() {
+        let s = AttackSchedule { start: 5, stop: Some(8), period: None };
+        assert!(s.active(8));
+        assert!(!s.active(9));
+    }
+
+    #[test]
+    fn normal_quantile_sanity() {
+        assert!((normal_quantile(0.5)).abs() < 1e-9);
+        assert!((normal_quantile(0.975) - 1.95996).abs() < 1e-3);
+        assert!((normal_quantile(0.025) + 1.95996).abs() < 1e-3);
+        assert!((normal_quantile(0.8413) - 1.0).abs() < 2e-3);
+    }
+
+    #[test]
+    fn attack_name_roundtrip() {
+        for s in ["sign_flip:1000", "random_direction", "label_flip", "ipm:0.1", "alie"] {
+            assert!(AttackKind::from_name(s).is_some(), "{s}");
+        }
+        assert!(AttackKind::from_name("bogus").is_none());
+        assert_eq!(
+            AttackKind::from_name("ipm:0.1"),
+            Some(AttackKind::Ipm { eps: 0.1 })
+        );
+    }
+}

@@ -1,0 +1,346 @@
+//! Protocol message payloads and their binary codec.
+//!
+//! Envelopes carry opaque bytes; this module defines what's inside for
+//! each protocol slot. The codec is a simple length-prefixed LE format —
+//! deterministic (equal messages encode to equal bytes, which the
+//! equivocation tracker relies on).
+
+use crate::crypto::Digest;
+use crate::net::PeerId;
+
+// --- byte reader/writer -----------------------------------------------------
+
+pub struct Writer(pub Vec<u8>);
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer(Vec::new())
+    }
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.0.push(v);
+        self
+    }
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.0.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.0.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn f32(&mut self, v: f32) -> &mut Self {
+        self.0.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn digest(&mut self, d: &Digest) -> &mut Self {
+        self.0.extend_from_slice(d);
+        self
+    }
+    pub fn f32s(&mut self, vs: &[f32]) -> &mut Self {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.0.extend_from_slice(&v.to_le_bytes());
+        }
+        self
+    }
+    pub fn digests(&mut self, ds: &[Digest]) -> &mut Self {
+        self.u32(ds.len() as u32);
+        for d in ds {
+            self.0.extend_from_slice(d);
+        }
+        self
+    }
+    pub fn bytes(&mut self, b: &[u8]) -> &mut Self {
+        self.u32(b.len() as u32);
+        self.0.extend_from_slice(b);
+        self
+    }
+    pub fn finish(self) -> Vec<u8> {
+        self.0
+    }
+}
+
+impl Default for Writer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+pub struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(b: &'a [u8]) -> Reader<'a> {
+        Reader { b, i: 0 }
+    }
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            return None;
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Some(s)
+    }
+    pub fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|s| s[0])
+    }
+    pub fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|s| u32::from_le_bytes(s.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|s| u64::from_le_bytes(s.try_into().unwrap()))
+    }
+    pub fn f32(&mut self) -> Option<f32> {
+        self.take(4).map(|s| f32::from_le_bytes(s.try_into().unwrap()))
+    }
+    pub fn digest(&mut self) -> Option<Digest> {
+        self.take(32).map(|s| {
+            let mut d = [0u8; 32];
+            d.copy_from_slice(s);
+            d
+        })
+    }
+    pub fn f32s(&mut self) -> Option<Vec<f32>> {
+        let n = self.u32()? as usize;
+        if n > 100_000_000 {
+            return None;
+        }
+        let raw = self.take(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Some(out)
+    }
+    pub fn digests(&mut self) -> Option<Vec<Digest>> {
+        let n = self.u32()? as usize;
+        if n > 1_000_000 {
+            return None;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.digest()?);
+        }
+        Some(out)
+    }
+    pub fn bytes(&mut self) -> Option<Vec<u8>> {
+        let n = self.u32()? as usize;
+        self.take(n).map(|s| s.to_vec())
+    }
+    pub fn done(&self) -> bool {
+        self.i == self.b.len()
+    }
+}
+
+// --- typed payloads ----------------------------------------------------------
+
+/// Phase A broadcast: commitment to the full gradient and to each part.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GradCommit {
+    /// hash(g_i) — checked by validators recomputing the gradient.
+    pub full: Digest,
+    /// hash(g_i(j)) for each part j — checked by part owners on receipt.
+    pub parts: Vec<Digest>,
+}
+
+impl GradCommit {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.digest(&self.full).digests(&self.parts);
+        w.finish()
+    }
+    pub fn decode(b: &[u8]) -> Option<GradCommit> {
+        let mut r = Reader::new(b);
+        let full = r.digest()?;
+        let parts = r.digests()?;
+        r.done().then_some(GradCommit { full, parts })
+    }
+}
+
+/// Phase E broadcast: per-part verification scalars.
+/// s[j]   = ⟨z[j], Δ_i^j⟩   (inner product of clipped diff with z)
+/// norm[j] = ‖g_i(j) − ĝ(j)‖ (Verification 1)
+/// over[j] = 1 if norm[j] > Δ_max (Verification 3 vote)
+#[derive(Clone, Debug, PartialEq)]
+pub struct VerifyScalars {
+    pub s: Vec<f32>,
+    pub norms: Vec<f32>,
+    pub over: Vec<u8>,
+}
+
+impl VerifyScalars {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.f32s(&self.s).f32s(&self.norms).bytes(&self.over);
+        w.finish()
+    }
+    pub fn decode(b: &[u8]) -> Option<VerifyScalars> {
+        let mut r = Reader::new(b);
+        let s = r.f32s()?;
+        let norms = r.f32s()?;
+        let over = r.bytes()?;
+        (r.done() && s.len() == norms.len() && s.len() == over.len())
+            .then_some(VerifyScalars { s, norms, over })
+    }
+}
+
+/// Why a peer got accused/banned — carried in control messages and kept
+/// in the ban ledger for the experiment reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BanReason {
+    /// Validator found the recomputed gradient hash ≠ commitment.
+    GradientMismatch = 0,
+    /// Verification 1: reported norm inconsistent with the sent part.
+    NormMismatch = 1,
+    /// Verification 2: reported s inconsistent, or Σs ≠ 0 for its part.
+    InnerProductMismatch = 2,
+    /// Aggregated part failed re-aggregation (CheckAveraging / ACCUSE).
+    AggregationMismatch = 3,
+    /// Broadcast equivocation (contradicting signed messages).
+    Equivocation = 4,
+    /// False accusation (Hammurabi rule: the accuser is banned).
+    FalseAccusation = 5,
+    /// Mutual elimination (protocol violation visible to one peer).
+    Eliminated = 6,
+    /// MPRNG abort or commitment mismatch.
+    MprngViolation = 7,
+}
+
+impl BanReason {
+    pub fn from_u8(v: u8) -> Option<BanReason> {
+        Some(match v {
+            0 => BanReason::GradientMismatch,
+            1 => BanReason::NormMismatch,
+            2 => BanReason::InnerProductMismatch,
+            3 => BanReason::AggregationMismatch,
+            4 => BanReason::Equivocation,
+            5 => BanReason::FalseAccusation,
+            6 => BanReason::Eliminated,
+            7 => BanReason::MprngViolation,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BanReason::GradientMismatch => "gradient_mismatch",
+            BanReason::NormMismatch => "norm_mismatch",
+            BanReason::InnerProductMismatch => "inner_product_mismatch",
+            BanReason::AggregationMismatch => "aggregation_mismatch",
+            BanReason::Equivocation => "equivocation",
+            BanReason::FalseAccusation => "false_accusation",
+            BanReason::Eliminated => "eliminated",
+            BanReason::MprngViolation => "mprng_violation",
+        }
+    }
+}
+
+/// ACCUSE(i→j) / ELIMINATE(i,j) control payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Accusation {
+    pub target: PeerId,
+    pub reason: BanReason,
+    /// Part index the accusation refers to (if applicable).
+    pub part: u32,
+}
+
+impl Accusation {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u64(self.target as u64).u8(self.reason as u8).u32(self.part);
+        w.finish()
+    }
+    pub fn decode(b: &[u8]) -> Option<Accusation> {
+        let mut r = Reader::new(b);
+        let target = r.u64()? as PeerId;
+        let reason = BanReason::from_u8(r.u8()?)?;
+        let part = r.u32()?;
+        r.done().then_some(Accusation { target, reason, part })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn grad_commit_roundtrip() {
+        let gc = GradCommit { full: [1u8; 32], parts: vec![[2u8; 32], [3u8; 32]] };
+        assert_eq!(GradCommit::decode(&gc.encode()), Some(gc));
+    }
+
+    #[test]
+    fn verify_scalars_roundtrip() {
+        let vs = VerifyScalars {
+            s: vec![0.5, -1.25, f32::MIN_POSITIVE],
+            norms: vec![1.0, 2.0, 3.0],
+            over: vec![0, 1, 0],
+        };
+        assert_eq!(VerifyScalars::decode(&vs.encode()), Some(vs));
+    }
+
+    #[test]
+    fn verify_scalars_rejects_mismatched_lengths() {
+        let mut w = Writer::new();
+        w.f32s(&[1.0, 2.0]).f32s(&[1.0]).bytes(&[0, 1]);
+        assert_eq!(VerifyScalars::decode(&w.finish()), None);
+    }
+
+    #[test]
+    fn accusation_roundtrip() {
+        for reason in [
+            BanReason::GradientMismatch,
+            BanReason::Equivocation,
+            BanReason::Eliminated,
+            BanReason::MprngViolation,
+        ] {
+            let a = Accusation { target: 7, reason, part: 3 };
+            assert_eq!(Accusation::decode(&a.encode()), Some(a));
+        }
+    }
+
+    #[test]
+    fn truncated_inputs_rejected() {
+        let gc = GradCommit { full: [1u8; 32], parts: vec![[2u8; 32]] };
+        let enc = gc.encode();
+        for cut in [0, 1, 33, enc.len() - 1] {
+            assert_eq!(GradCommit::decode(&enc[..cut]), None, "cut={cut}");
+        }
+        // Trailing garbage also rejected.
+        let mut padded = enc.clone();
+        padded.push(0);
+        assert_eq!(GradCommit::decode(&padded), None);
+    }
+
+    #[test]
+    fn codec_primitives_prop() {
+        prop_check("codec roundtrip", |rng, _| {
+            let f: Vec<f32> = (0..rng.below_usize(50))
+                .map(|_| f32::from_bits(rng.next_u32()))
+                .collect();
+            // Skip NaNs for equality testing.
+            let f: Vec<f32> = f.into_iter().filter(|x| !x.is_nan()).collect();
+            let mut w = Writer::new();
+            w.u64(rng.next_u64()).f32s(&f).u8(rng.next_u32() as u8);
+            let bytes = w.finish();
+            let mut r = Reader::new(&bytes);
+            r.u64().unwrap();
+            assert_eq!(r.f32s().unwrap(), f);
+            r.u8().unwrap();
+            assert!(r.done());
+        });
+    }
+
+    #[test]
+    fn ban_reason_roundtrip() {
+        for v in 0..=7u8 {
+            let r = BanReason::from_u8(v).unwrap();
+            assert_eq!(r as u8, v);
+            assert!(!r.name().is_empty());
+        }
+        assert_eq!(BanReason::from_u8(99), None);
+    }
+}

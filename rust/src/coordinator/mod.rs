@@ -1,0 +1,34 @@
+//! The paper's Layer-3 contribution: Byzantine-Tolerant All-Reduce and
+//! the BTARD-SGD training loops built on it.
+//!
+//! Module map (bottom-up):
+//! - `partition` — SPLIT/MERGE + part ownership (Butterfly topology)
+//! - `centered_clip` — the robust aggregation rule + fixed-point test
+//! - `aggregators` — trusted-PS baselines (Fig. 3 comparison arms)
+//! - `messages` — protocol payloads + binary codec
+//! - `accuse` — ACCUSE/ELIMINATE ban ledger with canonical ordering
+//! - `attacks` — the §4.1 attack zoo (omniscient, colluding)
+//! - `step` — Algorithm 6: one full BTARD step with Verifications 1–3
+//! - `validator`-logic lives inside `step` (CHECKCOMPUTATIONS)
+//! - `optimizer` — SGD+Nesterov+cosine, LAMB, global-norm clipping
+//! - `training` — Algorithms 7–9 + PS baseline loops
+//! - `sybil` — Appendix F proof-of-computation join heuristic
+
+pub mod accuse;
+pub mod aggregators;
+pub mod attacks;
+pub mod centered_clip;
+pub mod messages;
+pub mod optimizer;
+pub mod partition;
+pub mod runconfig;
+pub mod step;
+pub mod sybil;
+pub mod training;
+
+pub use accuse::{BanEvent, BanIntent, BanLedger};
+pub use aggregators::Aggregator;
+pub use attacks::{AttackKind, AttackSchedule};
+pub use centered_clip::{centered_clip, TauPolicy};
+pub use step::{btard_step, Behavior, PeerCtx, ProtocolConfig, StepOutput};
+pub use training::{run_btard, run_ps, OptSpec, PsConfig, RunConfig, RunResult};

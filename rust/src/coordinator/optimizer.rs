@@ -1,0 +1,268 @@
+//! Optimizers applied to the aggregated gradient: SGD with Nesterov
+//! momentum + cosine-annealed learning rate (the CIFAR setup, §4.1) and
+//! LAMB (the ALBERT setup, §4.2), plus global-norm gradient clipping used
+//! by BTARD-CLIPPED-SGD.
+//!
+//! Every peer runs the optimizer on identical aggregated gradients, so
+//! parameter state stays bit-identical across the cluster.
+
+use crate::runtime::ParamSegment;
+
+/// Learning-rate schedule.
+#[derive(Clone, Copy, Debug)]
+pub enum LrSchedule {
+    Constant(f32),
+    /// Cosine annealing from `base` to `floor` over `total_steps`.
+    Cosine { base: f32, floor: f32, total_steps: u64 },
+    /// Linear warmup to `base` over `warmup` steps, then constant.
+    Warmup { base: f32, warmup: u64 },
+}
+
+impl LrSchedule {
+    pub fn lr(&self, step: u64) -> f32 {
+        match *self {
+            LrSchedule::Constant(lr) => lr,
+            LrSchedule::Cosine { base, floor, total_steps } => {
+                let t = (step.min(total_steps)) as f32 / total_steps.max(1) as f32;
+                floor + 0.5 * (base - floor) * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+            LrSchedule::Warmup { base, warmup } => {
+                if step < warmup {
+                    base * (step + 1) as f32 / warmup as f32
+                } else {
+                    base
+                }
+            }
+        }
+    }
+}
+
+/// Scale the gradient so its global L2 norm is ≤ `max_norm` (the clipping
+/// step of BTARD-CLIPPED-SGD, Algorithm 9). Returns the pre-clip norm.
+pub fn clip_global_norm(grad: &mut [f32], max_norm: f32) -> f32 {
+    let norm = crate::util::rng::l2_norm(grad);
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grad.iter_mut() {
+            *g *= scale;
+        }
+    }
+    norm
+}
+
+pub trait Optimizer: Send {
+    fn step(&mut self, step: u64, params: &mut [f32], grad: &[f32]);
+    fn name(&self) -> &'static str;
+}
+
+/// SGD with (Nesterov) momentum.
+pub struct Sgd {
+    pub schedule: LrSchedule,
+    pub momentum: f32,
+    pub nesterov: bool,
+    pub weight_decay: f32,
+    velocity: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(dim: usize, schedule: LrSchedule, momentum: f32, nesterov: bool) -> Sgd {
+        Sgd { schedule, momentum, nesterov, weight_decay: 0.0, velocity: vec![0.0; dim] }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, step: u64, params: &mut [f32], grad: &[f32]) {
+        let lr = self.schedule.lr(step);
+        let m = self.momentum;
+        for i in 0..params.len() {
+            let g = grad[i] + self.weight_decay * params[i];
+            self.velocity[i] = m * self.velocity[i] + g;
+            let update = if self.nesterov { g + m * self.velocity[i] } else { self.velocity[i] };
+            params[i] -= lr * update;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// LAMB (You et al. 2020): Adam statistics with layer-wise trust ratios.
+/// Layer boundaries come from the artifact manifest's parameter segments.
+pub struct Lamb {
+    pub schedule: LrSchedule,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    segments: Vec<ParamSegment>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Lamb {
+    pub fn new(dim: usize, schedule: LrSchedule, segments: Vec<ParamSegment>) -> Lamb {
+        let segments = if segments.is_empty() {
+            vec![ParamSegment { name: "all".into(), offset: 0, len: dim }]
+        } else {
+            segments
+        };
+        Lamb {
+            schedule,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-6,
+            weight_decay: 0.01,
+            segments,
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+        }
+    }
+}
+
+impl Optimizer for Lamb {
+    fn step(&mut self, step: u64, params: &mut [f32], grad: &[f32]) {
+        let lr = self.schedule.lr(step);
+        let t = (step + 1) as i32;
+        let bc1 = 1.0 - self.beta1.powi(t);
+        let bc2 = 1.0 - self.beta2.powi(t);
+        for seg in &self.segments {
+            let r = seg.offset..seg.offset + seg.len;
+            // Adam moments + bias correction, per segment.
+            let mut update = vec![0.0f32; seg.len];
+            for (k, i) in r.clone().enumerate() {
+                self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+                self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+                let mh = self.m[i] / bc1;
+                let vh = self.v[i] / bc2;
+                update[k] = mh / (vh.sqrt() + self.eps) + self.weight_decay * params[i];
+            }
+            // Trust ratio: ‖w‖ / ‖update‖ (both clamped away from 0).
+            let w_norm = crate::util::rng::l2_norm(&params[r.clone()]);
+            let u_norm = crate::util::rng::l2_norm(&update);
+            let trust = if w_norm > 0.0 && u_norm > 0.0 { w_norm / u_norm } else { 1.0 };
+            for (k, i) in r.enumerate() {
+                params[i] -= lr * trust * update[k];
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "lamb"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic::Quadratic;
+    use crate::model::GradientSource;
+
+    #[test]
+    fn cosine_schedule_endpoints() {
+        let s = LrSchedule::Cosine { base: 1.0, floor: 0.1, total_steps: 100 };
+        assert!((s.lr(0) - 1.0).abs() < 1e-6);
+        assert!((s.lr(100) - 0.1).abs() < 1e-6);
+        assert!(s.lr(50) < s.lr(10));
+    }
+
+    #[test]
+    fn warmup_ramps() {
+        let s = LrSchedule::Warmup { base: 0.1, warmup: 10 };
+        assert!(s.lr(0) < s.lr(5));
+        assert_eq!(s.lr(10), 0.1);
+        assert_eq!(s.lr(100), 0.1);
+    }
+
+    #[test]
+    fn clip_global_norm_works() {
+        let mut g = vec![3.0f32, 4.0];
+        let pre = clip_global_norm(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        let post = crate::util::rng::l2_norm(&g);
+        assert!((post - 1.0).abs() < 1e-6);
+        // No-op below threshold.
+        let mut g2 = vec![0.3f32, 0.4];
+        clip_global_norm(&mut g2, 1.0);
+        assert_eq!(g2, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn sgd_momentum_converges_on_quadratic() {
+        let q = Quadratic::new(30, 0.5, 5.0, 0.0, 9);
+        let mut p = q.init_params(0);
+        let mut opt = Sgd::new(30, LrSchedule::Constant(0.05), 0.9, true);
+        for s in 0..600 {
+            let (_, g) = q.loss_and_grad(&p, s);
+            opt.step(s, &mut p, &g);
+        }
+        assert!(q.suboptimality(&p) < 1e-5, "subopt {}", q.suboptimality(&p));
+    }
+
+    #[test]
+    fn sgd_momentum_beats_plain_sgd() {
+        let q = Quadratic::new(30, 0.05, 5.0, 0.0, 10);
+        let run = |momentum: f32| {
+            let mut p = q.init_params(0);
+            let mut opt = Sgd::new(30, LrSchedule::Constant(0.05), momentum, true);
+            for s in 0..200 {
+                let (_, g) = q.loss_and_grad(&p, s);
+                opt.step(s, &mut p, &g);
+            }
+            q.suboptimality(&p)
+        };
+        assert!(run(0.9) < run(0.0));
+    }
+
+    #[test]
+    fn lamb_converges_on_quadratic() {
+        let q = Quadratic::new(40, 0.1, 10.0, 0.0, 11);
+        let mut p = q.init_params(0);
+        let mut opt = Lamb::new(40, LrSchedule::Constant(0.05), vec![]);
+        opt.weight_decay = 0.0;
+        let start = q.suboptimality(&p);
+        for s in 0..800 {
+            let (_, g) = q.loss_and_grad(&p, s);
+            opt.step(s, &mut p, &g);
+        }
+        let end = q.suboptimality(&p);
+        assert!(end < start * 0.05, "{start} -> {end}");
+    }
+
+    #[test]
+    fn lamb_respects_segments() {
+        // Two segments with very different scales should both make
+        // progress thanks to per-segment trust ratios.
+        let segs = vec![
+            ParamSegment { name: "a".into(), offset: 0, len: 5 },
+            ParamSegment { name: "b".into(), offset: 5, len: 5 },
+        ];
+        let mut opt = Lamb::new(10, LrSchedule::Constant(0.1), segs);
+        opt.weight_decay = 0.0;
+        let mut params = vec![1.0f32; 10];
+        for p in params[5..].iter_mut() {
+            *p = 100.0;
+        }
+        let grad: Vec<f32> = (0..10).map(|i| if i < 5 { 0.01 } else { 50.0 }).collect();
+        let before = params.clone();
+        opt.step(0, &mut params, &grad);
+        for i in 0..10 {
+            assert!(params[i] < before[i], "coord {i} did not move");
+        }
+    }
+
+    #[test]
+    fn optimizer_is_deterministic() {
+        let q = Quadratic::new(10, 0.1, 2.0, 0.5, 12);
+        let run = || {
+            let mut p = q.init_params(3);
+            let mut opt = Sgd::new(10, LrSchedule::Constant(0.1), 0.9, false);
+            for s in 0..50 {
+                let (_, g) = q.loss_and_grad(&p, s);
+                opt.step(s, &mut p, &g);
+            }
+            p
+        };
+        assert_eq!(run(), run());
+    }
+}

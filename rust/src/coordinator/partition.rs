@@ -1,0 +1,203 @@
+//! Gradient vector partitioning for Butterfly All-Reduce (SPLIT/MERGE in
+//! the paper's glossary, Appendix D.1) plus the part→owner map.
+//!
+//! The number of parts is pinned to the *initial* peer count n0 so every
+//! AOT artifact keeps a static shape for the whole run (XLA requires
+//! static shapes). When a peer is banned, its parts are reassigned to
+//! surviving peers round-robin, so a survivor may own several parts —
+//! bandwidth stays balanced to within one part.
+
+use crate::net::PeerId;
+
+/// SPLIT(v, n): the first (d mod n) parts have ⌈d/n⌉ elements, the rest
+/// ⌊d/n⌋ (paper Appendix D.1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionSpec {
+    pub dim: usize,
+    pub n_parts: usize,
+    /// Part boundaries: part j covers [bounds[j], bounds[j+1]).
+    bounds: Vec<usize>,
+}
+
+impl PartitionSpec {
+    pub fn new(dim: usize, n_parts: usize) -> PartitionSpec {
+        assert!(n_parts > 0 && dim >= n_parts, "dim {dim} < parts {n_parts}");
+        let base = dim / n_parts;
+        let extra = dim % n_parts;
+        let mut bounds = Vec::with_capacity(n_parts + 1);
+        let mut off = 0;
+        bounds.push(0);
+        for j in 0..n_parts {
+            off += base + usize::from(j < extra);
+            bounds.push(off);
+        }
+        debug_assert_eq!(off, dim);
+        PartitionSpec { dim, n_parts, bounds }
+    }
+
+    pub fn range(&self, part: usize) -> std::ops::Range<usize> {
+        self.bounds[part]..self.bounds[part + 1]
+    }
+
+    pub fn len(&self, part: usize) -> usize {
+        self.bounds[part + 1] - self.bounds[part]
+    }
+
+    /// Largest part size (the padded width of the CenteredClip artifact).
+    pub fn max_len(&self) -> usize {
+        (0..self.n_parts).map(|j| self.len(j)).max().unwrap()
+    }
+
+    pub fn slice<'a>(&self, v: &'a [f32], part: usize) -> &'a [f32] {
+        &v[self.range(part)]
+    }
+
+    /// MERGE: scatter per-part vectors back into a flat vector.
+    pub fn merge(&self, parts: &[Vec<f32>]) -> Vec<f32> {
+        assert_eq!(parts.len(), self.n_parts);
+        let mut out = vec![0.0f32; self.dim];
+        for (j, p) in parts.iter().enumerate() {
+            let r = self.range(j);
+            assert_eq!(p.len(), r.len(), "part {j} length mismatch");
+            out[r].copy_from_slice(p);
+        }
+        out
+    }
+}
+
+/// Which live peer aggregates each part.
+#[derive(Clone, Debug)]
+pub struct OwnerMap {
+    /// owner[j] = peer id aggregating part j.
+    owners: Vec<PeerId>,
+}
+
+impl OwnerMap {
+    /// Initial assignment: part j → peer j.
+    pub fn initial(n_parts: usize) -> OwnerMap {
+        OwnerMap { owners: (0..n_parts).collect() }
+    }
+
+    pub fn owner(&self, part: usize) -> PeerId {
+        self.owners[part]
+    }
+
+    /// Parts owned by `peer`.
+    pub fn parts_of(&self, peer: PeerId) -> Vec<usize> {
+        self.owners
+            .iter()
+            .enumerate()
+            .filter_map(|(j, &o)| (o == peer).then_some(j))
+            .collect()
+    }
+
+    /// Reassign all parts of banned peers to the live set, balancing by
+    /// current load (deterministic: lowest-loaded, then lowest id).
+    pub fn reassign_banned(&mut self, live: &[PeerId]) {
+        assert!(!live.is_empty());
+        let is_live = |p: PeerId| live.contains(&p);
+        let mut load: std::collections::BTreeMap<PeerId, usize> =
+            live.iter().map(|&p| (p, 0)).collect();
+        for &o in &self.owners {
+            if is_live(o) {
+                *load.get_mut(&o).unwrap() += 1;
+            }
+        }
+        for j in 0..self.owners.len() {
+            if !is_live(self.owners[j]) {
+                // Pick the live peer with the lowest load (ties → lowest id).
+                let (&target, _) = load.iter().min_by_key(|(&p, &l)| (l, p)).unwrap();
+                self.owners[j] = target;
+                *load.get_mut(&target).unwrap() += 1;
+            }
+        }
+    }
+
+    pub fn n_parts(&self) -> usize {
+        self.owners.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn split_sizes_match_paper() {
+        // d=10, n=4 → parts of 3,3,2,2.
+        let s = PartitionSpec::new(10, 4);
+        assert_eq!((0..4).map(|j| s.len(j)).collect::<Vec<_>>(), vec![3, 3, 2, 2]);
+        assert_eq!(s.range(0), 0..3);
+        assert_eq!(s.range(3), 8..10);
+        assert_eq!(s.max_len(), 3);
+    }
+
+    #[test]
+    fn split_merge_roundtrip_prop() {
+        prop_check("split/merge roundtrip", |rng, _| {
+            let n = 1 + rng.below_usize(16);
+            let dim = n + rng.below_usize(1000);
+            let spec = PartitionSpec::new(dim, n);
+            let v: Vec<f32> = (0..dim).map(|i| i as f32).collect();
+            let parts: Vec<Vec<f32>> = (0..n).map(|j| spec.slice(&v, j).to_vec()).collect();
+            assert_eq!(spec.merge(&parts), v);
+            // Sizes differ by at most 1 and sum to dim.
+            let sizes: Vec<usize> = (0..n).map(|j| spec.len(j)).collect();
+            assert_eq!(sizes.iter().sum::<usize>(), dim);
+            let mx = *sizes.iter().max().unwrap();
+            let mn = *sizes.iter().min().unwrap();
+            assert!(mx - mn <= 1);
+        });
+    }
+
+    #[test]
+    fn initial_owner_map() {
+        let m = OwnerMap::initial(4);
+        assert_eq!(m.owner(2), 2);
+        assert_eq!(m.parts_of(3), vec![3]);
+    }
+
+    #[test]
+    fn reassign_on_ban() {
+        let mut m = OwnerMap::initial(6);
+        // Peers 1 and 4 banned; live = {0,2,3,5}.
+        m.reassign_banned(&[0, 2, 3, 5]);
+        for j in 0..6 {
+            assert!([0, 2, 3, 5].contains(&m.owner(j)), "part {j}");
+        }
+        // Load stays balanced: each live peer owns 1 or 2 parts.
+        for p in [0usize, 2, 3, 5] {
+            let k = m.parts_of(p).len();
+            assert!(k == 1 || k == 2, "peer {p} owns {k}");
+        }
+    }
+
+    #[test]
+    fn reassign_deterministic() {
+        let mut a = OwnerMap::initial(8);
+        let mut b = OwnerMap::initial(8);
+        a.reassign_banned(&[0, 3, 7]);
+        b.reassign_banned(&[0, 3, 7]);
+        assert_eq!(a.parts_of(0), b.parts_of(0));
+        assert_eq!(a.parts_of(3), b.parts_of(3));
+    }
+
+    #[test]
+    fn repeated_bans_keep_all_parts_owned() {
+        let mut m = OwnerMap::initial(16);
+        let mut live: Vec<PeerId> = (0..16).collect();
+        for banned in [15usize, 3, 8, 0, 7, 12, 1] {
+            live.retain(|&p| p != banned);
+            m.reassign_banned(&live);
+            for j in 0..16 {
+                assert!(live.contains(&m.owner(j)));
+            }
+        }
+        // 9 live peers, 16 parts → loads of 1 or 2.
+        for &p in &live {
+            let k = m.parts_of(p).len();
+            assert!((1..=2).contains(&k), "peer {p} owns {k}");
+        }
+    }
+}

@@ -1,0 +1,1306 @@
+//! One step of Byzantine-Tolerant All-Reduce (Algorithm 6 + the
+//! verification/validation machinery of Algorithms 4 and 7).
+//!
+//! Every peer thread runs `btard_step` synchronously. Phases:
+//!
+//!   V. validators (drawn from last step's MPRNG) check a target peer's
+//!      previous-step computation and broadcast OK / ACCUSE;
+//!   A. contributors compute gradients and broadcast hash commitments
+//!      (full gradient + every partition);
+//!   B. Butterfly exchange: part j of every gradient → owner(j), verified
+//!      against the committed hashes;
+//!   C. owners run CENTEREDCLIP per owned part and broadcast the hash of
+//!      the result *before* learning z (commit-then-reveal);
+//!   D. owners distribute aggregated parts, verified against hashes;
+//!   E. MPRNG round ⇒ shared randomness r^t ⇒ per-part direction z[j];
+//!      contributors broadcast s_i^j = ⟨z[j], Δ_i^j⟩, ‖g_i(j)−ĝ(j)‖ and
+//!      the Verification-3 votes;
+//!   F. Verifications 1–3 + adjudication of any ACCUSE by deterministic
+//!      local recomputation (Algorithm 4);
+//!   G. bans are applied in canonical order; validators for the next
+//!      step are drawn from r^t.
+//!
+//! Everything an honest peer decides is a deterministic function of
+//! broadcast data, so honest peers never diverge.
+
+use super::accuse::{BanIntent, BanLedger};
+use super::attacks::AttackState;
+use super::centered_clip::{centered_clip_init, clipped_diff, TauPolicy};
+use super::messages::{Accusation, BanReason, GradCommit, VerifyScalars, Writer};
+use super::partition::{OwnerMap, PartitionSpec};
+use crate::crypto::{sha256_f32, sha256_parts, Digest};
+use crate::model::GradientSource;
+use crate::mprng::{combine, MprngOutcome, MprngRound};
+use crate::net::gossip::EquivocationTracker;
+use crate::net::local::{PeerNet, RecvError};
+use crate::net::{slots, Envelope, MsgClass, PeerId};
+use crate::util::rng::{dot, Rng};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Protocol parameters shared by all peers.
+#[derive(Clone, Debug)]
+pub struct ProtocolConfig {
+    /// Initial peer count (= number of gradient partitions for the run).
+    pub n0: usize,
+    pub tau: TauPolicy,
+    pub clip_iters: usize,
+    pub clip_eps: f32,
+    /// Number of validators drawn per step (m in the paper).
+    pub m_validators: usize,
+    /// Verification 3 threshold Δ_max (absolute; the paper's
+    /// (1+√3)·√2·σ/√(n−m) with σ estimated for the workload).
+    pub delta_max: f32,
+    /// Relative tolerance for the Σ s_i^j ≈ 0 check (f32 accumulation).
+    pub sum_rel_tol: f32,
+    /// Absolute floor for scalar equality checks.
+    pub abs_tol: f32,
+    pub global_seed: u64,
+    /// Base per-phase receive timeout (ms). Each later phase waits one
+    /// more multiple, so a peer stalled by an upstream withholder still
+    /// delivers before its own waiters give up (no timeout cascades).
+    pub base_timeout_ms: u64,
+}
+
+impl Default for ProtocolConfig {
+    fn default() -> Self {
+        ProtocolConfig {
+            n0: 16,
+            tau: TauPolicy::Fixed(1.0),
+            clip_iters: 500,
+            clip_eps: 1e-6,
+            m_validators: 1,
+            delta_max: 10.0,
+            sum_rel_tol: 1e-3,
+            abs_tol: 1e-5,
+            global_seed: 0,
+            base_timeout_ms: 4000,
+        }
+    }
+}
+
+/// Byzantine behaviour knobs. `attack` drives the submitted gradient;
+/// the remaining flags model the other attack classes of Appendix C.
+pub struct ByzantineConfig {
+    pub attack: AttackState,
+    /// Corrupt owned aggregation parts while the attack is active
+    /// (aggregation attack + single-handed s cover-up).
+    pub aggregation_attack: bool,
+    /// Magnitude of the aggregation shift (kept ≤ Δ_max to dodge V3).
+    pub aggregation_shift: f32,
+    /// As a validator, always report OK (the paper's Byzantine
+    /// validators "never accuse").
+    pub lazy_validator: bool,
+    /// Test hook: broadcast contradicting gradient commitments.
+    pub equivocate: bool,
+    /// Test hook: refuse to send our gradient part to this peer.
+    pub withhold_part_from: Option<PeerId>,
+    /// Test hook: commit to a different gradient than announced norms/s
+    /// (caught only by validators).
+    pub wrong_scalars: bool,
+}
+
+pub enum Behavior {
+    Honest,
+    Byzantine(Box<ByzantineConfig>),
+}
+
+impl Behavior {
+    pub fn is_byzantine(&self) -> bool {
+        matches!(self, Behavior::Byzantine(_))
+    }
+}
+
+/// Data archived from step t, needed to validate peers during step t+1.
+pub struct StepArchive {
+    pub step: u64,
+    pub params: Vec<f32>,
+    /// r^{t-1}: the randomness that derived this step's batch seeds.
+    pub seed_r: [u8; 32],
+    pub commits: Vec<Option<GradCommit>>,
+    pub scalars: Vec<Option<VerifyScalars>>,
+    pub ghat: Vec<f32>,
+    pub z_r: [u8; 32],
+    pub contributors: Vec<PeerId>,
+}
+
+/// Per-peer protocol context, owned by the peer's thread.
+pub struct PeerCtx {
+    pub net: PeerNet,
+    pub cfg: ProtocolConfig,
+    pub source: Arc<dyn GradientSource>,
+    pub spec: PartitionSpec,
+    pub owners: OwnerMap,
+    pub live: Vec<PeerId>,
+    pub ledger: BanLedger,
+    pub equiv: EquivocationTracker,
+    pub behavior: Behavior,
+    pub local_rng: Rng,
+    /// MPRNG output of the previous step (r^{t-1}); derives batch seeds.
+    pub r_prev: [u8; 32],
+    /// (validator, target) pairs drawn at the end of the previous step.
+    pub validators: Vec<(PeerId, PeerId)>,
+    pub archive: Option<StepArchive>,
+    /// Count of "global recompute" adjudications performed (cost metric).
+    pub recompute_count: u64,
+}
+
+/// Wall-time breakdown of one step (Appendix I.2 / §B overhead numbers).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimings {
+    pub grad_s: f64,
+    pub comm_s: f64,
+    pub clip_s: f64,
+    pub mprng_s: f64,
+    pub verify_s: f64,
+    pub validate_s: f64,
+}
+
+impl PhaseTimings {
+    pub fn total(&self) -> f64 {
+        self.grad_s + self.comm_s + self.clip_s + self.mprng_s + self.verify_s + self.validate_s
+    }
+}
+
+pub struct StepOutput {
+    pub aggregated: Vec<f32>,
+    pub newly_banned: Vec<PeerId>,
+    pub loss: f32,
+    pub timings: PhaseTimings,
+    /// r^t — next step's shared randomness.
+    pub r_out: [u8; 32],
+    /// CheckAveraging triggered for these parts (Verification 3).
+    pub check_averaging_parts: Vec<usize>,
+}
+
+#[derive(Debug)]
+pub enum StepError {
+    /// Too many peers vanished; the run cannot continue.
+    ClusterCollapsed(String),
+}
+
+/// Batch seed ξ_i^t = first 8 bytes of H(r^{t-1} ‖ i) (Alg. 1, line 18).
+pub fn batch_seed(r_prev: &[u8; 32], peer: PeerId) -> u64 {
+    let d = sha256_parts(&[b"btard-batch", r_prev, &(peer as u64).to_le_bytes()]);
+    u64::from_le_bytes(d[..8].try_into().unwrap())
+}
+
+/// Per-part verification direction z[j] = unit vector from H(r^t ‖ j).
+pub fn z_vector(r: &[u8; 32], part: usize, len: usize) -> Vec<f32> {
+    let d = sha256_parts(&[b"btard-z", r, &(part as u64).to_le_bytes()]);
+    Rng::from_digest(&d).unit_vector(len)
+}
+
+impl PeerCtx {
+    fn me(&self) -> PeerId {
+        self.net.id
+    }
+
+    /// Contributors this step = live peers that are not validating.
+    pub fn contributors(&self) -> Vec<PeerId> {
+        let vs: Vec<PeerId> = self.validators.iter().map(|(v, _)| *v).collect();
+        self.live.iter().copied().filter(|p| !vs.contains(p)).collect()
+    }
+
+    /// Broadcast an ELIMINATE(me, target): mutual removal, visible to the
+    /// whole cluster (Appendix D.3 — bans must be decided from broadcast
+    /// data so honest peers never diverge). Picked up at the end-of-step
+    /// drain, including by ourselves via loopback.
+    fn broadcast_eliminate(&self, step: u64, target: PeerId) {
+        let acc =
+            Accusation { target, reason: BanReason::Eliminated, part: u32::MAX };
+        // Slot is keyed by *target* (sender identity is in the envelope):
+        // eliminating two peers is two slots, not an equivocation; a
+        // repeated eliminate of the same target is byte-identical.
+        self.net.broadcast(
+            step,
+            slots::sub(slots::ELIMINATE, target),
+            MsgClass::Control,
+            acc.encode(),
+        );
+    }
+
+    /// Collect one broadcast envelope per peer in `from` for `slot`,
+    /// observing equivocations. Missing peers trigger broadcast
+    /// ELIMINATE (timeout = protocol violation).
+    fn collect_broadcast(
+        &mut self,
+        step: u64,
+        slot: u32,
+        from: &[PeerId],
+        intents: &mut Vec<BanIntent>,
+    ) -> HashMap<PeerId, Vec<u8>> {
+        let mut out: HashMap<PeerId, Vec<u8>> = HashMap::new();
+        let mut missing: Vec<PeerId> = from.to_vec();
+        while !missing.is_empty() {
+            let want: Vec<PeerId> = missing.clone();
+            let res = self.net.recv_match(|e: &Envelope| {
+                e.step == step && e.slot == slot && want.contains(&e.from)
+            });
+            match res {
+                Ok(env) => {
+                    if let Some(ev) = self.equiv.observe(&env) {
+                        intents.push(BanIntent::Proven {
+                            observer: self.me(),
+                            target: ev.peer,
+                            reason: BanReason::Equivocation,
+                        });
+                    }
+                    out.entry(env.from).or_insert(env.payload);
+                    missing.retain(|&p| p != env.from);
+                }
+                Err(RecvError::Timeout) | Err(RecvError::Disconnected) => {
+                    for &p in &missing {
+                        self.broadcast_eliminate(step, p);
+                    }
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Collect one p2p payload per peer in `from` at `slot`.
+    fn collect_p2p(
+        &mut self,
+        step: u64,
+        slot: u32,
+        from: &[PeerId],
+        _intents: &mut Vec<BanIntent>,
+    ) -> HashMap<PeerId, Vec<u8>> {
+        let mut out = HashMap::new();
+        let mut missing: Vec<PeerId> = from.to_vec();
+        while !missing.is_empty() {
+            let want = missing.clone();
+            let res = self.net.recv_match(|e: &Envelope| {
+                e.step == step && e.slot == slot && !e.broadcast && want.contains(&e.from)
+            });
+            match res {
+                Ok(env) => {
+                    out.insert(env.from, env.payload);
+                    missing.retain(|&p| p != env.from);
+                }
+                Err(_) => {
+                    for &p in &missing {
+                        self.broadcast_eliminate(step, p);
+                    }
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// MPRNG: commit + reveal, restarting without offenders if needed.
+    fn mprng_round(
+        &mut self,
+        step: u64,
+        intents: &mut Vec<BanIntent>,
+    ) -> Result<[u8; 32], StepError> {
+        let mut participants = self.live.clone();
+        for attempt in 0..self.cfg.n0 + 1 {
+            let round = MprngRound::new(self.me(), &mut self.local_rng);
+            let slot_c = slots::sub(slots::MPRNG_COMMIT, attempt);
+            let slot_r = slots::sub(slots::MPRNG_REVEAL, attempt);
+            self.net
+                .broadcast(step, slot_c, MsgClass::Mprng, round.commitment().to_vec());
+            let commits_raw = self.collect_broadcast(step, slot_c, &participants.clone(), intents);
+            self.net.broadcast(step, slot_r, MsgClass::Mprng, round.reveal());
+            let reveals_raw = self.collect_broadcast(step, slot_r, &participants.clone(), intents);
+
+            let max_id = self.cfg.n0;
+            let mut commits: Vec<Option<Digest>> = vec![None; max_id];
+            let mut reveals: Vec<Option<Vec<u8>>> = vec![None; max_id];
+            for (&p, payload) in &commits_raw {
+                if payload.len() == 32 {
+                    let mut d = [0u8; 32];
+                    d.copy_from_slice(payload);
+                    commits[p] = Some(d);
+                }
+            }
+            for (&p, payload) in &reveals_raw {
+                reveals[p] = Some(payload.clone());
+            }
+            match combine(&participants, &commits, &reveals) {
+                MprngOutcome::Ok(r) => return Ok(r),
+                MprngOutcome::Offenders(off) => {
+                    for &p in &off {
+                        intents.push(BanIntent::Proven {
+                            observer: self.me(),
+                            target: p,
+                            reason: BanReason::MprngViolation,
+                        });
+                    }
+                    participants.retain(|p| !off.contains(p));
+                    if participants.len() < 2 {
+                        return Err(StepError::ClusterCollapsed(
+                            "MPRNG lost quorum".to_string(),
+                        ));
+                    }
+                }
+            }
+        }
+        Err(StepError::ClusterCollapsed("MPRNG never converged".into()))
+    }
+}
+
+/// Scalar consistency check with both relative and absolute tolerance.
+fn close(a: f32, b: f32, rel: f32, abs_tol: f32) -> bool {
+    (a - b).abs() <= abs_tol + rel * a.abs().max(b.abs())
+}
+
+/// Run one full BTARD step. `params` must be identical on every peer.
+pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOutput, StepError> {
+    let me = ctx.net.id;
+    let base_ms = ctx.cfg.base_timeout_ms;
+    macro_rules! phase_timeout {
+        ($mult:expr) => {
+            ctx.net.timeout = std::time::Duration::from_millis(base_ms * $mult)
+        };
+    }
+    let mut t = PhaseTimings::default();
+    let mut intents: Vec<BanIntent> = Vec::new();
+    let contributors = ctx.contributors();
+    let i_contribute = contributors.contains(&me);
+    let my_validation = ctx.validators.iter().find(|(v, _)| *v == me).copied();
+    let n_parts = ctx.spec.n_parts;
+    let tau = ctx.cfg.tau.tau();
+
+    // ---- Phase V: validate previous step (validators only) ---------------
+    let t0 = Instant::now();
+    if let Some((_, target)) = my_validation {
+        let lazy = match &ctx.behavior {
+            Behavior::Byzantine(b) => b.lazy_validator,
+            Behavior::Honest => false,
+        };
+        let accusation = if lazy { None } else { validate_target(ctx, target) };
+        match accusation {
+            Some(acc) => {
+                ctx.net.broadcast(
+                    step,
+                    slots::sub(slots::ACCUSE, me),
+                    MsgClass::Control,
+                    acc.encode(),
+                );
+            }
+            None => {
+                ctx.net.broadcast(
+                    step,
+                    slots::sub(slots::VALIDATION_OK, me),
+                    MsgClass::Control,
+                    (target as u64).to_le_bytes().to_vec(),
+                );
+            }
+        }
+    }
+    t.validate_s += t0.elapsed().as_secs_f64();
+
+    // ---- Phase A: gradient + commitments ---------------------------------
+    let t0 = Instant::now();
+    let my_seed = batch_seed(&ctx.r_prev, me);
+    let honest_seeds: Vec<(PeerId, u64)> = contributors
+        .iter()
+        .map(|&p| (p, batch_seed(&ctx.r_prev, p)))
+        .collect();
+    let (loss, grad) = if i_contribute {
+        match &mut ctx.behavior {
+            Behavior::Honest => ctx.source.loss_and_grad(params, my_seed),
+            Behavior::Byzantine(b) => {
+                b.attack.observe_params(step, params);
+                let g = b.attack.gradient(
+                    step,
+                    params,
+                    ctx.source.as_ref(),
+                    my_seed,
+                    &honest_seeds,
+                    &ctx.r_prev,
+                );
+                (f32::NAN, g)
+            }
+        }
+    } else {
+        (f32::NAN, vec![0.0f32; ctx.spec.dim])
+    };
+    t.grad_s += t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    if i_contribute {
+        let part_hashes: Vec<Digest> =
+            (0..n_parts).map(|j| sha256_f32(ctx.spec.slice(&grad, j))).collect();
+        let commit = GradCommit { full: sha256_f32(&grad), parts: part_hashes };
+        let equivocate = matches!(&ctx.behavior, Behavior::Byzantine(b) if b.equivocate);
+        if equivocate {
+            // Contradicting commitments to different halves of the
+            // cluster — every honest peer eventually sees both variants.
+            let mut alt = commit.clone();
+            alt.full[0] ^= 0xFF;
+            let variants: Vec<(PeerId, Vec<u8>)> = ctx
+                .live
+                .iter()
+                .map(|&p| {
+                    let payload =
+                        if p % 2 == 0 { commit.encode() } else { alt.encode() };
+                    (p, payload)
+                })
+                .collect();
+            ctx.net.broadcast_split(
+                step,
+                slots::sub(slots::GRAD_COMMIT, me),
+                MsgClass::Commitment,
+                variants,
+            );
+        } else {
+            ctx.net.broadcast(
+                step,
+                slots::sub(slots::GRAD_COMMIT, me),
+                MsgClass::Commitment,
+                commit.encode(),
+            );
+        }
+    }
+    // Collect commitments from every contributor.
+    phase_timeout!(2);
+    let mut commits: Vec<Option<GradCommit>> = vec![None; ctx.cfg.n0];
+    for &p in &contributors {
+        let raw = ctx.collect_broadcast(
+            step,
+            slots::sub(slots::GRAD_COMMIT, p),
+            &[p],
+            &mut intents,
+        );
+        if let Some(bytes) = raw.get(&p) {
+            commits[p] = GradCommit::decode(bytes);
+        }
+    }
+    t.comm_s += t0.elapsed().as_secs_f64();
+
+    // ---- Phase B: butterfly exchange of gradient parts --------------------
+    let t0 = Instant::now();
+    if i_contribute {
+        for j in 0..n_parts {
+            let owner = ctx.owners.owner(j);
+            if owner == me {
+                continue; // local
+            }
+            let withhold = matches!(
+                &ctx.behavior,
+                Behavior::Byzantine(b) if b.withhold_part_from == Some(owner)
+            );
+            if withhold {
+                continue;
+            }
+            let mut w = Writer::new();
+            w.f32s(ctx.spec.slice(&grad, j));
+            ctx.net.send(
+                owner,
+                step,
+                slots::sub(slots::GRAD_PART, j),
+                MsgClass::GradientPart,
+                w.finish(),
+            );
+        }
+    }
+    let my_parts = ctx.owners.parts_of(me);
+    phase_timeout!(3);
+    // rows[j]: (peer, part values) for each contributor, sorted by peer.
+    let mut rows: HashMap<usize, Vec<(PeerId, Vec<f32>)>> = HashMap::new();
+    for &j in &my_parts {
+        let mut part_rows: Vec<(PeerId, Vec<f32>)> = Vec::new();
+        let senders: Vec<PeerId> =
+            contributors.iter().copied().filter(|&p| p != me).collect();
+        let raw = ctx.collect_p2p(step, slots::sub(slots::GRAD_PART, j), &senders, &mut intents);
+        for (&p, payload) in &raw {
+            let vals = super::messages::Reader::new(payload).f32s();
+            match vals {
+                Some(v)
+                    if v.len() == ctx.spec.len(j)
+                        && commits[p]
+                            .as_ref()
+                            .map(|c| c.parts[j] == sha256_f32(&v))
+                            .unwrap_or(false) =>
+                {
+                    part_rows.push((p, v));
+                }
+                _ => {
+                    // Hash mismatch vs commitment: mutual elimination
+                    // (only this owner can see the discrepancy).
+                    ctx.broadcast_eliminate(step, p);
+                }
+            }
+        }
+        if i_contribute {
+            part_rows.push((me, ctx.spec.slice(&grad, j).to_vec()));
+        }
+        part_rows.sort_by_key(|(p, _)| *p);
+        rows.insert(j, part_rows);
+    }
+    t.comm_s += t0.elapsed().as_secs_f64();
+
+    // ---- Phase C: CenteredClip per owned part + commit --------------------
+    let t0 = Instant::now();
+    let mut my_agg: HashMap<usize, Vec<f32>> = HashMap::new();
+    for &j in &my_parts {
+        let part_rows = &rows[&j];
+        let refs: Vec<&[f32]> = part_rows.iter().map(|(_, v)| v.as_slice()).collect();
+        if refs.is_empty() {
+            my_agg.insert(j, vec![0.0; ctx.spec.len(j)]);
+            continue;
+        }
+        // Warm-start from the previous step's aggregate for this part:
+        // honest gradients move slowly, so the previous aggregate sits in
+        // the honest basin even when a coordinated attack puts the
+        // median-start on a spurious equilibrium (see centered_clip.rs).
+        let warm = ctx.archive.as_ref().map(|a| ctx.spec.slice(&a.ghat, j).to_vec());
+        let mut value = centered_clip_init(
+            &refs,
+            tau,
+            ctx.cfg.clip_iters,
+            ctx.cfg.clip_eps,
+            warm.as_deref(),
+        )
+        .value;
+        // Aggregation attack: shift the result (≤ Δ_max to dodge V3).
+        if let Behavior::Byzantine(b) = &ctx.behavior {
+            if b.aggregation_attack && b.attack.schedule.active(step) {
+                let shift = b.aggregation_shift / (value.len() as f32).sqrt();
+                for v in value.iter_mut() {
+                    *v += shift;
+                }
+            }
+        }
+        my_agg.insert(j, value);
+    }
+    t.clip_s += t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    for &j in &my_parts {
+        ctx.net.broadcast(
+            step,
+            slots::sub(slots::AGG_COMMIT, j),
+            MsgClass::Commitment,
+            sha256_f32(&my_agg[&j]).to_vec(),
+        );
+    }
+    // Collect aggregation commitments for all parts.
+    phase_timeout!(4);
+    let mut agg_commits: Vec<Option<Digest>> = vec![None; n_parts];
+    for j in 0..n_parts {
+        let owner = ctx.owners.owner(j);
+        let raw =
+            ctx.collect_broadcast(step, slots::sub(slots::AGG_COMMIT, j), &[owner], &mut intents);
+        if let Some(bytes) = raw.get(&owner) {
+            if bytes.len() == 32 {
+                let mut d = [0u8; 32];
+                d.copy_from_slice(bytes);
+                agg_commits[j] = Some(d);
+            }
+        }
+    }
+
+    // ---- Phase D: distribute aggregated parts -----------------------------
+    for &j in &my_parts {
+        let mut w = Writer::new();
+        w.f32s(&my_agg[&j]);
+        let payload = w.finish();
+        for &p in &ctx.live {
+            if p != me {
+                ctx.net.send(
+                    p,
+                    step,
+                    slots::sub(slots::AGG_PART, j),
+                    MsgClass::AggregatedPart,
+                    payload.clone(),
+                );
+            }
+        }
+    }
+    phase_timeout!(5);
+    let mut ghat_parts: Vec<Vec<f32>> = vec![Vec::new(); n_parts];
+    for j in 0..n_parts {
+        let owner = ctx.owners.owner(j);
+        if owner == me {
+            ghat_parts[j] = my_agg[&j].clone();
+            continue;
+        }
+        let raw = ctx.collect_p2p(step, slots::sub(slots::AGG_PART, j), &[owner], &mut intents);
+        match raw.get(&owner).and_then(|b| super::messages::Reader::new(b).f32s()) {
+            Some(v)
+                if v.len() == ctx.spec.len(j)
+                    && agg_commits[j].map(|c| c == sha256_f32(&v)).unwrap_or(false) =>
+            {
+                ghat_parts[j] = v;
+            }
+            _ => {
+                ctx.broadcast_eliminate(step, owner);
+                ghat_parts[j] = vec![0.0; ctx.spec.len(j)];
+            }
+        }
+    }
+    let ghat = ctx.spec.merge(&ghat_parts);
+    t.comm_s += t0.elapsed().as_secs_f64();
+
+    // ---- Phase E: MPRNG + verification scalars ----------------------------
+    let t0 = Instant::now();
+    phase_timeout!(6);
+    let r_out = ctx.mprng_round(step, &mut intents)?;
+    t.mprng_s += t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let z: Vec<Vec<f32>> =
+        (0..n_parts).map(|j| z_vector(&r_out, j, ctx.spec.len(j))).collect();
+
+    if i_contribute {
+        let mut s = vec![0.0f32; n_parts];
+        let mut norms = vec![0.0f32; n_parts];
+        let mut over = vec![0u8; n_parts];
+        for j in 0..n_parts {
+            let gj = ctx.spec.slice(&grad, j);
+            let hj = &ghat_parts[j];
+            let diff_norm = {
+                let mut acc = 0.0f64;
+                for (a, b) in gj.iter().zip(hj) {
+                    let d = a - b;
+                    acc += d as f64 * d as f64;
+                }
+                acc.sqrt() as f32
+            };
+            let delta = clipped_diff(gj, hj, tau);
+            s[j] = dot(&z[j], &delta) as f32;
+            norms[j] = diff_norm;
+            over[j] = u8::from(diff_norm > ctx.cfg.delta_max);
+        }
+        // Aggregation-attack cover-up: the cheating owner absorbs the
+        // whole discrepancy on its own parts so Σᵢ s_i^j stays ≈ 0.
+        if let Behavior::Byzantine(b) = &ctx.behavior {
+            if b.aggregation_attack && b.attack.schedule.active(step) {
+                for &j in &my_parts {
+                    let mut total = 0.0f64;
+                    for (_, row) in &rows[&j] {
+                        let delta = clipped_diff(row, &my_agg[&j], tau);
+                        total += dot(&z[j], &delta);
+                    }
+                    // Own true contribution is already inside `total`;
+                    // replace own report so the sum comes out to zero.
+                    let own_delta = clipped_diff(ctx.spec.slice(&grad, j), &my_agg[&j], tau);
+                    let own_true = dot(&z[j], &own_delta);
+                    s[j] = (own_true - total) as f32;
+                }
+            }
+            if b.wrong_scalars {
+                for v in s.iter_mut() {
+                    *v += 1.0;
+                }
+            }
+        }
+        let payload = VerifyScalars { s, norms, over }.encode();
+        ctx.net.broadcast(
+            step,
+            slots::sub(slots::VERIFY_SCALARS, me),
+            MsgClass::Verification,
+            payload,
+        );
+    }
+    phase_timeout!(7);
+    let mut scalars: Vec<Option<VerifyScalars>> = vec![None; ctx.cfg.n0];
+    for &p in &contributors {
+        let raw = ctx.collect_broadcast(
+            step,
+            slots::sub(slots::VERIFY_SCALARS, p),
+            &[p],
+            &mut intents,
+        );
+        if let Some(bytes) = raw.get(&p) {
+            scalars[p] = VerifyScalars::decode(bytes);
+        }
+    }
+
+    // ---- Phase F: verifications -------------------------------------------
+    // V1+V2 (owner-side): recompute each contributor's norm and s for our
+    // parts; both sides run identical f32 code, so honest values match
+    // bit-for-bit and any discrepancy is an accusation.
+    #[allow(unused_mut)]
+    let mut accusations_out: Vec<Accusation> = Vec::new();
+    let honest_behavior = !ctx.behavior.is_byzantine();
+    if honest_behavior {
+        for &j in &my_parts {
+            for (p, row) in &rows[&j] {
+                if *p == me {
+                    continue;
+                }
+                let Some(sc) = &scalars[*p] else { continue };
+                let true_norm = {
+                    let mut acc = 0.0f64;
+                    for (a, b) in row.iter().zip(&ghat_parts[j]) {
+                        let d = a - b;
+                        acc += d as f64 * d as f64;
+                    }
+                    acc.sqrt() as f32
+                };
+                if !close(sc.norms[j], true_norm, ctx.cfg.sum_rel_tol, ctx.cfg.abs_tol) {
+                    accusations_out.push(Accusation {
+                        target: *p,
+                        reason: BanReason::NormMismatch,
+                        part: j as u32,
+                    });
+                    continue;
+                }
+                let delta = clipped_diff(row, &ghat_parts[j], tau);
+                let true_s = dot(&z[j], &delta) as f32;
+                if !close(sc.s[j], true_s, ctx.cfg.sum_rel_tol, ctx.cfg.abs_tol) {
+                    accusations_out.push(Accusation {
+                        target: *p,
+                        reason: BanReason::InnerProductMismatch,
+                        part: j as u32,
+                    });
+                }
+            }
+        }
+        // V2 (everyone): Σᵢ s_i^j ≈ 0 per part. The tolerance must cover
+        // the honest residual sources: (a) f32 accumulation over the
+        // reported s values, (b) the fixed-point *truncation* — the owner
+        // stops CenteredClip at step ≤ clip_eps·max(1,‖v‖), leaving a
+        // residual of up to ~n·that. Without (b) the alarm fires on honest
+        // aggregations at large d and every peer pays a full O(n) gradient
+        // recompute per step (measured: a 10× step-time regression).
+        for j in 0..n_parts {
+            let mut total = 0.0f64;
+            let mut abs_total = 0.0f64;
+            for &p in &contributors {
+                if let Some(sc) = &scalars[p] {
+                    total += sc.s[j] as f64;
+                    abs_total += sc.s[j].abs() as f64;
+                }
+            }
+            let ghat_scale = crate::util::rng::l2_norm(&ghat_parts[j]).max(1.0) as f64;
+            let trunc = contributors.len() as f64 * ctx.cfg.clip_eps as f64 * ghat_scale * 10.0;
+            let tol =
+                ctx.cfg.abs_tol as f64 + ctx.cfg.sum_rel_tol as f64 * abs_total + trunc;
+            if total.abs() > tol {
+                accusations_out.push(Accusation {
+                    target: ctx.owners.owner(j),
+                    reason: BanReason::AggregationMismatch,
+                    part: j as u32,
+                });
+            }
+        }
+    }
+    accusations_out.sort_by_key(|a| (a.target, a.reason as u8, a.part));
+    accusations_out.dedup();
+    for (k, acc) in accusations_out.iter().enumerate() {
+        // One slot per accusation index: several distinct accusations
+        // from one peer are distinct slots, not equivocation (the slot
+        // key includes the sender, so indices don't collide across
+        // peers).
+        ctx.net.broadcast(
+            step,
+            slots::sub(slots::ACCUSE, (me << 8) | (k & 0xFF)),
+            MsgClass::Control,
+            acc.encode(),
+        );
+    }
+    // Barrier: every live peer announces it has finished broadcasting its
+    // verifications. Per-sender FIFO delivery then guarantees that all
+    // accusations are already in our mailbox when we drain below.
+    ctx.net
+        .broadcast(step, slots::VERIFY_DONE, MsgClass::Control, vec![]);
+    {
+        phase_timeout!(9);
+        let live_now = ctx.live.clone();
+        let _ = ctx.collect_broadcast(step, slots::VERIFY_DONE, &live_now, &mut intents);
+    }
+    t.verify_s += t0.elapsed().as_secs_f64();
+
+    // V3: majority vote on ‖g_i(j) − ĝ(j)‖ > Δ_max ⇒ CheckAveraging.
+    let t0 = Instant::now();
+    let mut check_averaging_parts: Vec<usize> = Vec::new();
+    for j in 0..n_parts {
+        let votes: usize = contributors
+            .iter()
+            .filter_map(|&p| scalars[p].as_ref())
+            .map(|sc| sc.over[j] as usize)
+            .sum();
+        if votes * 2 > contributors.len() {
+            check_averaging_parts.push(j);
+        }
+    }
+
+    // Gather everything still unprocessed from this step (and stragglers
+    // from earlier steps): ACCUSE/VALIDATION_OK broadcasts plus any extra
+    // broadcast variants an equivocator emitted — those never match a
+    // collect predicate (the first variant satisfied it), so this drain
+    // is where contradictions are observed and banned.
+    let drained = ctx.net.drain_match(|e: &Envelope| e.step <= step);
+    let mut all_accusations: Vec<(PeerId, Accusation)> = Vec::new();
+    // Who eliminated whom this step (broadcast data, consensus-visible):
+    // needed to adjudicate Σs accusations against owners whose
+    // aggregation legitimately excluded a withholding peer.
+    let mut eliminated_by: HashMap<PeerId, Vec<PeerId>> = HashMap::new();
+    for env in &drained {
+        if let Some(ev) = ctx.equiv.observe(env) {
+            intents.push(BanIntent::Proven {
+                observer: me,
+                target: ev.peer,
+                reason: BanReason::Equivocation,
+            });
+        }
+        if env.step == step && slots::tag(env.slot) == slots::ACCUSE {
+            if let Some(acc) = Accusation::decode(&env.payload) {
+                all_accusations.push((env.from, acc));
+            }
+        }
+        // ELIMINATE broadcasts (any step up to now — stragglers included).
+        if slots::tag(env.slot) == slots::ELIMINATE {
+            if let Some(acc) = Accusation::decode(&env.payload) {
+                intents.push(BanIntent::Eliminate { accuser: env.from, target: acc.target });
+                eliminated_by.entry(env.from).or_insert_with(Vec::new).push(acc.target);
+            }
+        }
+    }
+    // Include our own accusations (broadcast also loops back, but the
+    // drain may have raced; dedup below handles the overlap).
+    for acc in &accusations_out {
+        all_accusations.push((me, acc.clone()));
+    }
+    all_accusations.sort_by_key(|(from, a)| (*from, a.target, a.reason as u8, a.part));
+    all_accusations.dedup();
+
+    // ---- Adjudicate accusations (Algorithm 4) -----------------------------
+    for (accuser, acc) in &all_accusations {
+        let verdict = adjudicate(
+            ctx,
+            step,
+            params,
+            acc,
+            &contributors,
+            &commits,
+            &scalars,
+            &ghat_parts,
+            &agg_commits,
+            &z,
+            &rows,
+            &eliminated_by,
+        );
+        match verdict {
+            Verdict::TargetGuilty => intents.push(BanIntent::Accuse {
+                accuser: *accuser,
+                target: acc.target,
+                reason: acc.reason,
+                guilty: true,
+            }),
+            Verdict::AccuserGuilty => intents.push(BanIntent::Accuse {
+                accuser: *accuser,
+                target: acc.target,
+                reason: acc.reason,
+                guilty: false,
+            }),
+            Verdict::Others(culprits) => {
+                // The accusation exposed different offenders (e.g. a
+                // contributor whose committed gradient is forged poisoned
+                // the Σs check); neither accuser nor target is punished.
+                for (p, reason) in culprits {
+                    intents.push(BanIntent::Proven { observer: me, target: p, reason });
+                }
+            }
+        }
+    }
+    // CheckAveraging (V3): full re-aggregation of flagged parts.
+    for &j in &check_averaging_parts {
+        let owner = ctx.owners.owner(j);
+        let acc = Accusation {
+            target: owner,
+            reason: BanReason::AggregationMismatch,
+            part: j as u32,
+        };
+        let verdict = adjudicate(
+            ctx,
+            step,
+            params,
+            &acc,
+            &contributors,
+            &commits,
+            &scalars,
+            &ghat_parts,
+            &agg_commits,
+            &z,
+            &rows,
+            &eliminated_by,
+        );
+        match verdict {
+            Verdict::TargetGuilty => intents.push(BanIntent::Proven {
+                observer: me,
+                target: owner,
+                reason: BanReason::AggregationMismatch,
+            }),
+            Verdict::Others(culprits) => {
+                for (p, reason) in culprits {
+                    intents.push(BanIntent::Proven { observer: me, target: p, reason });
+                }
+            }
+            Verdict::AccuserGuilty => {} // vote-triggered: no accuser to punish
+        }
+    }
+    t.verify_s += t0.elapsed().as_secs_f64();
+
+    // ---- Phase G: apply bans, draw next validators -------------------------
+    let newly_banned = ctx.ledger.process(step, intents);
+    ctx.live.retain(|p| !ctx.ledger.is_banned(*p));
+    if ctx.live.len() < 2 {
+        return Err(StepError::ClusterCollapsed(format!(
+            "only {} live peers remain",
+            ctx.live.len()
+        )));
+    }
+    ctx.owners.reassign_banned(&ctx.live);
+
+    // Validators for the next step, drawn from r^t (consensus data).
+    let m = ctx.cfg.m_validators.min(ctx.live.len() / 2);
+    let mut vrng = Rng::from_digest(&sha256_parts(&[b"btard-validators", &r_out]));
+    let picks = vrng.sample_distinct(ctx.live.len(), 2 * m);
+    ctx.validators = (0..m)
+        .map(|k| (ctx.live[picks[k]], ctx.live[picks[m + k]]))
+        .collect();
+
+    // Archive this step for next step's validation.
+    ctx.archive = Some(StepArchive {
+        step,
+        params: params.to_vec(),
+        seed_r: ctx.r_prev,
+        commits,
+        scalars,
+        ghat: ghat.clone(),
+        z_r: r_out,
+        contributors: contributors.clone(),
+    });
+    ctx.r_prev = r_out;
+    ctx.equiv.gc(step, 4);
+
+    Ok(StepOutput {
+        aggregated: ghat,
+        newly_banned,
+        loss,
+        timings: t,
+        r_out,
+        check_averaging_parts,
+    })
+}
+
+/// Validator check of `target`'s previous step (CHECKCOMPUTATIONS).
+fn validate_target(ctx: &mut PeerCtx, target: PeerId) -> Option<Accusation> {
+    let archive = ctx.archive.as_ref()?;
+    if !archive.contributors.contains(&target) {
+        return None;
+    }
+    let commit = archive.commits.get(target)?.as_ref()?;
+    let seed = batch_seed(&archive.seed_r, target);
+    let (_, g) = ctx.source.loss_and_grad(&archive.params, seed);
+    ctx.recompute_count += 1;
+    if sha256_f32(&g) != commit.full {
+        return Some(Accusation {
+            target,
+            reason: BanReason::GradientMismatch,
+            part: u32::MAX,
+        });
+    }
+    for j in 0..ctx.spec.n_parts {
+        if sha256_f32(ctx.spec.slice(&g, j)) != commit.parts[j] {
+            return Some(Accusation {
+                target,
+                reason: BanReason::GradientMismatch,
+                part: j as u32,
+            });
+        }
+    }
+    // Re-derive the verification scalars the target broadcast.
+    if let Some(sc) = archive.scalars.get(target).and_then(|s| s.as_ref()) {
+        let tau = ctx.cfg.tau.tau();
+        for j in 0..ctx.spec.n_parts {
+            let gj = ctx.spec.slice(&g, j);
+            let hj = ctx.spec.slice(&archive.ghat, j);
+            let mut acc = 0.0f64;
+            for (a, b) in gj.iter().zip(hj) {
+                let d = a - b;
+                acc += d as f64 * d as f64;
+            }
+            let true_norm = acc.sqrt() as f32;
+            if !close(sc.norms[j], true_norm, ctx.cfg.sum_rel_tol, ctx.cfg.abs_tol) {
+                return Some(Accusation {
+                    target,
+                    reason: BanReason::NormMismatch,
+                    part: j as u32,
+                });
+            }
+            let zj = z_vector(&archive.z_r, j, ctx.spec.len(j));
+            let delta = clipped_diff(gj, hj, tau);
+            let true_s = dot(&zj, &delta) as f32;
+            if !close(sc.s[j], true_s, ctx.cfg.sum_rel_tol, ctx.cfg.abs_tol) {
+                return Some(Accusation {
+                    target,
+                    reason: BanReason::InnerProductMismatch,
+                    part: j as u32,
+                });
+            }
+        }
+    }
+    None
+}
+
+/// Adjudication outcome of Algorithm 4.
+pub enum Verdict {
+    TargetGuilty,
+    /// The accusation was false: the accuser pays (Hammurabi rule).
+    AccuserGuilty,
+    /// The recomputation exposed different offenders — e.g. contributors
+    /// whose committed gradients are forged, which made Σ s_i^j ≠ 0
+    /// without the aggregator cheating. Those are banned; accuser and
+    /// target walk.
+    Others(Vec<(PeerId, BanReason)>),
+}
+
+/// Algorithm 4: deterministic adjudication of an accusation by
+/// recomputation. Every honest peer reaches the same verdict because
+/// every input is broadcast data plus seed-deterministic recomputation.
+#[allow(clippy::too_many_arguments)]
+fn adjudicate(
+    ctx: &mut PeerCtx,
+    _step: u64,
+    params: &[f32],
+    acc: &Accusation,
+    contributors: &[PeerId],
+    commits: &[Option<GradCommit>],
+    scalars: &[Option<VerifyScalars>],
+    ghat_parts: &[Vec<f32>],
+    agg_commits: &[Option<Digest>],
+    z: &[Vec<f32>],
+    rows: &HashMap<usize, Vec<(PeerId, Vec<f32>)>>,
+    eliminated_by: &HashMap<PeerId, Vec<PeerId>>,
+) -> Verdict {
+    let tau = ctx.cfg.tau.tau();
+    match acc.reason {
+        BanReason::GradientMismatch => {
+            // Validator claims the *previous* step's gradient was forged.
+            let Some(archive) = ctx.archive.as_ref() else { return Verdict::AccuserGuilty };
+            let Some(commit) = archive.commits.get(acc.target).and_then(|c| c.as_ref()) else {
+                return Verdict::TargetGuilty; // never committed at all
+            };
+            let seed = batch_seed(&archive.seed_r, acc.target);
+            let (_, g) = ctx.source.loss_and_grad(&archive.params, seed);
+            ctx.recompute_count += 1;
+            let forged = sha256_f32(&g) != commit.full
+                || (0..ctx.spec.n_parts)
+                    .any(|j| sha256_f32(ctx.spec.slice(&g, j)) != commit.parts[j]);
+            if forged {
+                Verdict::TargetGuilty
+            } else {
+                Verdict::AccuserGuilty
+            }
+        }
+        BanReason::NormMismatch | BanReason::InnerProductMismatch => {
+            // Current-step scalar lie: recompute target's gradient from
+            // its public seed and check the broadcast scalars.
+            let j = acc.part as usize;
+            if j >= ctx.spec.n_parts {
+                return adjudicate_prev_scalars(ctx, acc);
+            }
+            let Some(sc) = scalars.get(acc.target).and_then(|s| s.as_ref()) else {
+                return Verdict::TargetGuilty;
+            };
+            let seed = batch_seed(&ctx.r_prev, acc.target);
+            let (_, g) = ctx.source.loss_and_grad(params, seed);
+            ctx.recompute_count += 1;
+            // A forged committed gradient is itself a bannable offence.
+            if let Some(c) = commits.get(acc.target).and_then(|c| c.as_ref()) {
+                if sha256_f32(&g) != c.full {
+                    return Verdict::TargetGuilty;
+                }
+            }
+            let gj = ctx.spec.slice(&g, j);
+            let hj = &ghat_parts[j];
+            let mut a2 = 0.0f64;
+            for (a, b) in gj.iter().zip(hj) {
+                let d = a - b;
+                a2 += d as f64 * d as f64;
+            }
+            let true_norm = a2.sqrt() as f32;
+            if !close(sc.norms[j], true_norm, ctx.cfg.sum_rel_tol, ctx.cfg.abs_tol) {
+                return Verdict::TargetGuilty;
+            }
+            let delta = clipped_diff(gj, hj, tau);
+            let true_s = dot(&z[j], &delta) as f32;
+            if !close(sc.s[j], true_s, ctx.cfg.sum_rel_tol, ctx.cfg.abs_tol) {
+                Verdict::TargetGuilty
+            } else {
+                Verdict::AccuserGuilty
+            }
+        }
+        BanReason::AggregationMismatch => {
+            // Σ s_i^j ≠ 0 (or a CheckAveraging vote) against owner(j).
+            // Algorithm 4, faithfully: FIRST recompute every
+            // contributor's gradient from its public seed — a contributor
+            // whose commitment doesn't match forged its gradient and is
+            // the actual offender (its broadcast s poisoned the sum); a
+            // contributor whose commitment matches but whose broadcast s
+            // doesn't match recomputation lied to cover someone. Only if
+            // every contributor checks out is the aggregator judged by
+            // re-running CenteredClip.
+            let j = acc.part as usize;
+            if j >= ctx.spec.n_parts {
+                return Verdict::AccuserGuilty;
+            }
+            let Some(expected) = agg_commits.get(j).and_then(|c| *c) else {
+                return Verdict::TargetGuilty; // owner never committed
+            };
+            // Contributors the owner ELIMINATEd this step (e.g. a peer
+            // that withheld its part): their rows were legitimately
+            // absent from the aggregation, which explains Σs ≠ 0 without
+            // anyone beyond the mutual elimination being at fault.
+            let excluded: &[PeerId] = eliminated_by
+                .get(&acc.target)
+                .map(|v| v.as_slice())
+                .unwrap_or(&[]);
+            let mut culprits: Vec<(PeerId, BanReason)> = Vec::new();
+            let mut recomputed_rows: Vec<(PeerId, Vec<f32>)> = Vec::new();
+            for &p in contributors.iter().filter(|p| !excluded.contains(p)) {
+                let seed = batch_seed(&ctx.r_prev, p);
+                let (_, g) = ctx.source.loss_and_grad(params, seed);
+                ctx.recompute_count += 1;
+                let committed_ok = commits
+                    .get(p)
+                    .and_then(|c| c.as_ref())
+                    .map(|c| sha256_f32(&g) == c.full)
+                    .unwrap_or(false);
+                if !committed_ok {
+                    culprits.push((p, BanReason::GradientMismatch));
+                    continue;
+                }
+                // Check the broadcast scalars against the recomputation.
+                if let Some(sc) = scalars.get(p).and_then(|s| s.as_ref()) {
+                    let gj = ctx.spec.slice(&g, j);
+                    let delta = clipped_diff(gj, &ghat_parts[j], tau);
+                    let true_s = dot(&z[j], &delta) as f32;
+                    if !close(sc.s[j], true_s, ctx.cfg.sum_rel_tol, ctx.cfg.abs_tol) {
+                        culprits.push((p, BanReason::InnerProductMismatch));
+                        continue;
+                    }
+                }
+                recomputed_rows.push((p, ctx.spec.slice(&g, j).to_vec()));
+            }
+            if !culprits.is_empty() {
+                return Verdict::Others(culprits);
+            }
+            // All inputs were honest: re-run the aggregation. Owners use
+            // their raw rows (bit-exact); everyone else uses the
+            // recomputed rows — identical, since all commitments matched.
+            let mut part_rows: Vec<(PeerId, Vec<f32>)> = match rows.get(&j) {
+                Some(r) if ctx.owners.owner(j) == ctx.net.id => r.clone(),
+                _ => recomputed_rows,
+            };
+            part_rows.sort_by_key(|(p, _)| *p);
+            let refs: Vec<&[f32]> = part_rows.iter().map(|(_, v)| v.as_slice()).collect();
+            if refs.is_empty() {
+                return Verdict::AccuserGuilty;
+            }
+            let warm = ctx.archive.as_ref().map(|a| ctx.spec.slice(&a.ghat, j).to_vec());
+            let clip = centered_clip_init(
+                &refs,
+                tau,
+                ctx.cfg.clip_iters,
+                ctx.cfg.clip_eps,
+                warm.as_deref(),
+            );
+            if sha256_f32(&clip.value) == expected {
+                // The aggregate is exactly what honest inputs produce.
+                // The Σs alarm came from f32 truncation of the fixed
+                // point (or a withholder the owner eliminated) — a
+                // legitimate observation, so nobody is punished. (The
+                // Hammurabi rule still applies to the bit-exact
+                // norm/inner-product/gradient accusations.)
+                return Verdict::Others(vec![]);
+            }
+            // Value-level tolerance: honest recomputation of a
+            // contractive fixed point lands within ~clip_eps·n.
+            let mut dist = 0.0f64;
+            for (a, b) in clip.value.iter().zip(&ghat_parts[j]) {
+                let d = a - b;
+                dist += d as f64 * d as f64;
+            }
+            let tol = (ctx.cfg.clip_eps as f64 * contributors.len() as f64)
+                .max(ctx.cfg.abs_tol as f64)
+                * 10.0;
+            if dist.sqrt() > tol {
+                Verdict::TargetGuilty
+            } else {
+                Verdict::Others(vec![])
+            }
+        }
+        // Proven/Eliminated reasons never reach adjudication.
+        _ => Verdict::AccuserGuilty,
+    }
+}
+
+/// Adjudicate a validator's scalar accusation about the previous step
+/// (part == u32::MAX or archived data).
+fn adjudicate_prev_scalars(ctx: &mut PeerCtx, acc: &Accusation) -> Verdict {
+    let Some(archive) = ctx.archive.as_ref() else { return Verdict::AccuserGuilty };
+    let Some(sc) = archive.scalars.get(acc.target).and_then(|s| s.as_ref()) else {
+        return Verdict::TargetGuilty;
+    };
+    let seed = batch_seed(&archive.seed_r, acc.target);
+    let (_, g) = ctx.source.loss_and_grad(&archive.params, seed);
+    ctx.recompute_count += 1;
+    let tau = ctx.cfg.tau.tau();
+    for j in 0..ctx.spec.n_parts {
+        let gj = ctx.spec.slice(&g, j);
+        let hj = ctx.spec.slice(&archive.ghat, j);
+        let mut a2 = 0.0f64;
+        for (a, b) in gj.iter().zip(hj) {
+            let d = a - b;
+            a2 += d as f64 * d as f64;
+        }
+        let true_norm = a2.sqrt() as f32;
+        if !close(sc.norms[j], true_norm, ctx.cfg.sum_rel_tol, ctx.cfg.abs_tol) {
+            return Verdict::TargetGuilty;
+        }
+        let zj = z_vector(&archive.z_r, j, ctx.spec.len(j));
+        let delta = clipped_diff(gj, hj, tau);
+        let true_s = dot(&zj, &delta) as f32;
+        if !close(sc.s[j], true_s, ctx.cfg.sum_rel_tol, ctx.cfg.abs_tol) {
+            return Verdict::TargetGuilty;
+        }
+    }
+    Verdict::AccuserGuilty
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::l2_norm;
+
+    #[test]
+    fn batch_seed_is_deterministic_and_distinct() {
+        let r = [5u8; 32];
+        assert_eq!(batch_seed(&r, 3), batch_seed(&r, 3));
+        assert_ne!(batch_seed(&r, 3), batch_seed(&r, 4));
+        let r2 = [6u8; 32];
+        assert_ne!(batch_seed(&r, 3), batch_seed(&r2, 3));
+    }
+
+    #[test]
+    fn z_vector_unit_and_deterministic() {
+        let r = [9u8; 32];
+        let z1 = z_vector(&r, 0, 100);
+        let z2 = z_vector(&r, 0, 100);
+        assert_eq!(z1, z2);
+        let n = l2_norm(&z1);
+        assert!((n - 1.0).abs() < 1e-4);
+        assert_ne!(z_vector(&r, 1, 100), z1);
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0, 0.0, 0.0));
+        assert!(close(1.0, 1.0005, 1e-3, 0.0));
+        assert!(!close(1.0, 1.1, 1e-3, 0.0));
+        assert!(close(0.0, 1e-6, 0.0, 1e-5));
+    }
+}

@@ -1,0 +1,196 @@
+//! Sybil resistance (§3.3 / Appendix F): a proof-of-computation join
+//! protocol. A candidate must honestly compute gradients for `probation`
+//! consecutive steps, committing a hash each step; before admission the
+//! cluster spot-checks `audits` random commitments by recomputation. A
+//! computationally constrained attacker running many pseudonymous
+//! identities can only back ~(budget / probation) of them with real
+//! computation, so the admitted-Sybil count is proportional to compute —
+//! the property the paper's heuristic targets.
+
+use crate::crypto::{sha256_f32, Digest};
+use crate::model::GradientSource;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+#[derive(Clone, Copy, Debug)]
+pub struct JoinPolicy {
+    /// Steps of gradient work required before applying.
+    pub probation: usize,
+    /// Number of randomly chosen commitments recomputed at admission.
+    pub audits: usize,
+}
+
+impl Default for JoinPolicy {
+    fn default() -> Self {
+        JoinPolicy { probation: 16, audits: 4 }
+    }
+}
+
+/// A candidate's submitted dossier: one gradient commitment per
+/// probation step.
+#[derive(Clone, Debug)]
+pub struct JoinRequest {
+    pub candidate_label: String,
+    pub commitments: Vec<Digest>,
+}
+
+/// An honest candidate computes every gradient (cost: probation grads).
+pub fn honest_candidate(
+    label: &str,
+    source: &Arc<dyn GradientSource>,
+    params: &[f32],
+    policy: &JoinPolicy,
+    seed_base: u64,
+) -> JoinRequest {
+    let commitments = (0..policy.probation)
+        .map(|s| {
+            let (_, g) = source.loss_and_grad(params, seed_base + s as u64);
+            sha256_f32(&g)
+        })
+        .collect();
+    JoinRequest { candidate_label: label.to_string(), commitments }
+}
+
+/// A Sybil attacker with `compute_budget` total gradient computations,
+/// spread over `identities` candidates. Identities it cannot afford get
+/// junk commitments (it cannot forge hashes of gradients it never
+/// computed). Budget is spent greedily: fully fund as many identities as
+/// possible.
+pub fn sybil_candidates(
+    identities: usize,
+    compute_budget: usize,
+    source: &Arc<dyn GradientSource>,
+    params: &[f32],
+    policy: &JoinPolicy,
+    seed_base: u64,
+    rng: &mut Rng,
+) -> Vec<JoinRequest> {
+    let mut remaining = compute_budget;
+    let mut out = Vec::with_capacity(identities);
+    for id in 0..identities {
+        let funded = remaining >= policy.probation;
+        let commitments: Vec<Digest> = (0..policy.probation)
+            .map(|s| {
+                if funded {
+                    let (_, g) =
+                        source.loss_and_grad(params, seed_base + (id * 1000 + s) as u64);
+                    sha256_f32(&g)
+                } else {
+                    // Junk: attacker guesses a digest.
+                    let mut d = [0u8; 32];
+                    for b in d.iter_mut() {
+                        *b = rng.next_u32() as u8;
+                    }
+                    d
+                }
+            })
+            .collect();
+        if funded {
+            remaining -= policy.probation;
+        }
+        out.push(JoinRequest { candidate_label: format!("sybil-{id}"), commitments });
+    }
+    out
+}
+
+/// Admission check run by the existing cluster: recompute `audits`
+/// randomly drawn probation steps and compare hashes. The audit seed
+/// comes from the cluster MPRNG so candidates cannot predict which steps
+/// are checked.
+pub fn audit_candidate(
+    req: &JoinRequest,
+    source: &Arc<dyn GradientSource>,
+    params: &[f32],
+    policy: &JoinPolicy,
+    seed_base: u64,
+    candidate_index: usize,
+    audit_rng: &mut Rng,
+) -> bool {
+    let picks = audit_rng.sample_distinct(policy.probation, policy.audits.min(policy.probation));
+    for s in picks {
+        let (_, g) = source.loss_and_grad(params, seed_base + (candidate_index * 1000 + s) as u64);
+        if sha256_f32(&g) != req.commitments[s] {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic::Quadratic;
+
+    fn setup() -> (Arc<dyn GradientSource>, Vec<f32>) {
+        let src: Arc<dyn GradientSource> = Arc::new(Quadratic::new(32, 0.1, 2.0, 0.5, 5));
+        let p = src.init_params(0);
+        (src, p)
+    }
+
+    #[test]
+    fn honest_candidate_admitted() {
+        let (src, params) = setup();
+        let policy = JoinPolicy::default();
+        // Honest candidate uses the canonical seed base 0 (candidate 0).
+        let req = honest_candidate("alice", &src, &params, &policy, 0);
+        let mut audit = Rng::new(42);
+        assert!(audit_candidate(&req, &src, &params, &policy, 0, 0, &mut audit));
+    }
+
+    #[test]
+    fn unfunded_sybils_rejected() {
+        let (src, params) = setup();
+        let policy = JoinPolicy { probation: 8, audits: 3 };
+        let mut rng = Rng::new(1);
+        // 10 identities, budget for exactly 2.
+        let reqs = sybil_candidates(10, 16, &src, &params, &policy, 0, &mut rng);
+        let mut audit = Rng::new(77);
+        let admitted: Vec<_> = reqs
+            .iter()
+            .enumerate()
+            .filter(|(i, r)| {
+                let mut a = Rng::new(audit.next_u64());
+                audit_candidate(r, &src, &params, &policy, 0, *i, &mut a)
+            })
+            .collect();
+        assert_eq!(admitted.len(), 2, "admitted = funded identities only");
+    }
+
+    #[test]
+    fn influence_proportional_to_compute() {
+        let (src, params) = setup();
+        let policy = JoinPolicy { probation: 4, audits: 2 };
+        for budget_steps in [0usize, 4, 12] {
+            let mut rng = Rng::new(9);
+            let reqs = sybil_candidates(8, budget_steps, &src, &params, &policy, 0, &mut rng);
+            let mut audit = Rng::new(13);
+            let admitted = reqs
+                .iter()
+                .enumerate()
+                .filter(|(i, r)| {
+                    let mut a = Rng::new(audit.next_u64());
+                    audit_candidate(r, &src, &params, &policy, 0, *i, &mut a)
+                })
+                .count();
+            assert_eq!(admitted, budget_steps / policy.probation);
+        }
+    }
+
+    #[test]
+    fn partial_work_caught_with_positive_probability() {
+        // A candidate that computed only half the steps: probability all
+        // `audits` draws land in the computed half is small; with the
+        // fixed test seed it must be caught.
+        let (src, params) = setup();
+        let policy = JoinPolicy { probation: 16, audits: 6 };
+        let mut req = honest_candidate("lazy", &src, &params, &policy, 0);
+        let mut rng = Rng::new(3);
+        for d in req.commitments.iter_mut().skip(8) {
+            for b in d.iter_mut() {
+                *b = rng.next_u32() as u8;
+            }
+        }
+        let mut audit = Rng::new(21);
+        assert!(!audit_candidate(&req, &src, &params, &policy, 0, 0, &mut audit));
+    }
+}

@@ -1,0 +1,560 @@
+//! Training loops: BTARD-SGD (Algorithm 7), BTARD-CLIPPED-SGD
+//! (Algorithm 9), RESTARTED-BTARD-SGD (Algorithm 8), and the
+//! parameter-server baselines used in Fig. 3.
+//!
+//! `run_btard` spawns one OS thread per peer; each thread drives
+//! `btard_step` and applies the optimizer to the aggregated gradient, so
+//! parameters stay bit-identical across honest peers. Peer 0 (always
+//! honest in supported configs) records metrics.
+
+use super::accuse::BanEvent;
+use super::aggregators::Aggregator;
+use super::attacks::{AttackKind, AttackSchedule, AttackState, CollusionBoard};
+use super::optimizer::{clip_global_norm, Lamb, LrSchedule, Optimizer, Sgd};
+use super::step::{batch_seed, btard_step, Behavior, ByzantineConfig, PeerCtx, ProtocolConfig};
+use crate::model::GradientSource;
+use crate::net::local::build_cluster;
+use crate::net::PeerId;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Optimizer choice for a run.
+#[derive(Clone, Debug)]
+pub enum OptSpec {
+    Sgd { schedule: LrSchedule, momentum: f32, nesterov: bool },
+    Lamb { schedule: LrSchedule },
+}
+
+impl OptSpec {
+    pub fn build(
+        &self,
+        dim: usize,
+        segments: Vec<crate::runtime::ParamSegment>,
+    ) -> Box<dyn Optimizer> {
+        match self {
+            OptSpec::Sgd { schedule, momentum, nesterov } => {
+                Box::new(Sgd::new(dim, *schedule, *momentum, *nesterov))
+            }
+            OptSpec::Lamb { schedule } => Box::new(Lamb::new(dim, *schedule, segments)),
+        }
+    }
+}
+
+#[derive(Clone)]
+pub struct RunConfig {
+    pub n_peers: usize,
+    /// Byzantine peer ids (peer 0 must stay honest: it records metrics).
+    pub byzantine: Vec<PeerId>,
+    pub attack: Option<(AttackKind, AttackSchedule)>,
+    /// Byzantine owners also corrupt their aggregation parts.
+    pub aggregation_attack: bool,
+    pub steps: u64,
+    pub protocol: ProtocolConfig,
+    pub opt: OptSpec,
+    /// BTARD-CLIPPED-SGD: per-part clipping level λ (None = plain BTARD).
+    pub clip_lambda: Option<f32>,
+    pub eval_every: u64,
+    pub seed: u64,
+    pub verify_signatures: bool,
+    pub gossip_fanout: u64,
+    /// Optimizer parameter segments (from the artifact manifest; empty
+    /// for Rust-native models).
+    pub segments: Vec<crate::runtime::ParamSegment>,
+}
+
+impl RunConfig {
+    pub fn quick(n_peers: usize, steps: u64) -> RunConfig {
+        RunConfig {
+            n_peers,
+            byzantine: vec![],
+            attack: None,
+            aggregation_attack: false,
+            steps,
+            protocol: ProtocolConfig { n0: n_peers, ..ProtocolConfig::default() },
+            opt: OptSpec::Sgd {
+                schedule: LrSchedule::Constant(0.1),
+                momentum: 0.9,
+                nesterov: true,
+            },
+            clip_lambda: None,
+            eval_every: 10,
+            seed: 0,
+            verify_signatures: true,
+            gossip_fanout: 8,
+            segments: vec![],
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct StepMetric {
+    pub step: u64,
+    pub loss: f32,
+    /// Eval metric (only at eval_every steps; NaN otherwise).
+    pub metric: f64,
+    pub banned_now: Vec<PeerId>,
+    pub step_wall_s: f64,
+    pub grad_s: f64,
+    pub clip_s: f64,
+    pub mprng_s: f64,
+    pub verify_s: f64,
+    pub comm_s: f64,
+    pub validate_s: f64,
+}
+
+#[derive(Debug)]
+pub struct RunResult {
+    pub metrics: Vec<StepMetric>,
+    pub ban_events: Vec<BanEvent>,
+    pub final_params: Vec<f32>,
+    pub final_metric: f64,
+    /// Per-peer total bytes sent (from traffic stats).
+    pub peer_bytes: Vec<u64>,
+    /// Total gradient recomputations spent on validation/adjudication.
+    pub recomputes: u64,
+    /// Steps actually completed (may stop early on cluster collapse).
+    pub steps_done: u64,
+}
+
+/// BTARD-CLIPPED-SGD wrapper: clips each gradient partition to λ_part =
+/// λ/√n_parts before submission (Algorithm 9). Implemented as a
+/// GradientSource so validators recompute exactly the same clipped
+/// vectors.
+pub struct ClippedSource {
+    pub inner: Arc<dyn GradientSource>,
+    pub lambda: f32,
+    pub n_parts: usize,
+}
+
+impl GradientSource for ClippedSource {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        self.inner.init_params(seed)
+    }
+    fn loss_and_grad(&self, params: &[f32], batch_seed: u64) -> (f32, Vec<f32>) {
+        let (loss, mut g) = self.inner.loss_and_grad(params, batch_seed);
+        self.clip_parts(&mut g);
+        (loss, g)
+    }
+    fn eval(&self, params: &[f32]) -> f64 {
+        self.inner.eval(params)
+    }
+    fn metric_name(&self) -> &'static str {
+        self.inner.metric_name()
+    }
+    fn loss_and_grad_label_flipped(
+        &self,
+        params: &[f32],
+        batch_seed: u64,
+    ) -> Option<(f32, Vec<f32>)> {
+        let (loss, mut g) = self.inner.loss_and_grad_label_flipped(params, batch_seed)?;
+        self.clip_parts(&mut g);
+        Some((loss, g))
+    }
+}
+
+impl ClippedSource {
+    fn clip_parts(&self, g: &mut [f32]) {
+        let spec = super::partition::PartitionSpec::new(g.len(), self.n_parts);
+        let lam = self.lambda / (self.n_parts as f32).sqrt();
+        for j in 0..self.n_parts {
+            let r = spec.range(j);
+            clip_global_norm(&mut g[r], lam);
+        }
+    }
+}
+
+/// Run BTARD-SGD with one thread per peer. `source` is shared: the data
+/// is public and gradient computation is a pure function of (params,
+/// seed), matching the paper's setting.
+pub fn run_btard(cfg: &RunConfig, source: Arc<dyn GradientSource>) -> RunResult {
+    assert!(!cfg.byzantine.contains(&0), "peer 0 must stay honest (metrics)");
+    assert!(cfg.n_peers >= 2);
+    let source: Arc<dyn GradientSource> = match cfg.clip_lambda {
+        Some(lambda) => Arc::new(ClippedSource {
+            inner: source,
+            lambda,
+            n_parts: cfg.protocol.n0,
+        }),
+        None => source,
+    };
+    let init_params = source.init_params(cfg.seed);
+    let cluster = build_cluster(cfg.n_peers, cfg.seed ^ 0xC1A5, cfg.gossip_fanout, cfg.verify_signatures);
+    let info = cluster[0].info.clone();
+    let board = CollusionBoard::new();
+
+    let mut handles = Vec::new();
+    for net in cluster {
+        let peer = net.id;
+        let cfg = cfg.clone();
+        let source = source.clone();
+        let init_params = init_params.clone();
+        let board = board.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("peer-{peer}"))
+            .spawn(move || peer_main(net, peer, cfg, source, init_params, board))
+            .expect("spawn peer thread");
+        handles.push(handle);
+    }
+    let mut result: Option<RunResult> = None;
+    let mut recomputes = 0u64;
+    for (peer, h) in handles.into_iter().enumerate() {
+        let peer_out = h.join().expect("peer thread panicked");
+        recomputes += peer_out.recomputes;
+        if peer == 0 {
+            result = Some(peer_out.into_result());
+        }
+    }
+    let mut result = result.unwrap();
+    result.recomputes = recomputes;
+    result.peer_bytes = (0..cfg.n_peers).map(|p| info.stats.total_bytes(p)).collect();
+    result
+}
+
+struct PeerOutput {
+    metrics: Vec<StepMetric>,
+    ban_events: Vec<BanEvent>,
+    final_params: Vec<f32>,
+    final_metric: f64,
+    recomputes: u64,
+    steps_done: u64,
+}
+
+impl PeerOutput {
+    fn into_result(self) -> RunResult {
+        RunResult {
+            metrics: self.metrics,
+            ban_events: self.ban_events,
+            final_params: self.final_params,
+            final_metric: self.final_metric,
+            peer_bytes: vec![],
+            recomputes: self.recomputes,
+            steps_done: self.steps_done,
+        }
+    }
+}
+
+fn peer_main(
+    net: crate::net::local::PeerNet,
+    peer: PeerId,
+    cfg: RunConfig,
+    source: Arc<dyn GradientSource>,
+    init_params: Vec<f32>,
+    board: Arc<CollusionBoard>,
+) -> PeerOutput {
+    let behavior = if cfg.byzantine.contains(&peer) {
+        let (kind, schedule) = cfg
+            .attack
+            .unwrap_or((AttackKind::SignFlip { lambda: 1.0 }, AttackSchedule::from_step(u64::MAX)));
+        Behavior::Byzantine(Box::new(ByzantineConfig {
+            attack: AttackState::new(kind, schedule, board),
+            aggregation_attack: cfg.aggregation_attack,
+            aggregation_shift: cfg.protocol.delta_max * 0.5,
+            lazy_validator: true,
+            equivocate: false,
+            withhold_part_from: None,
+            wrong_scalars: false,
+        }))
+    } else {
+        Behavior::Honest
+    };
+    let r0 = crate::crypto::sha256_parts(&[b"btard-r0", &cfg.seed.to_le_bytes()]);
+    let mut ctx = PeerCtx {
+        net,
+        cfg: cfg.protocol.clone(),
+        source: source.clone(),
+        spec: super::partition::PartitionSpec::new(init_params.len(), cfg.protocol.n0),
+        owners: super::partition::OwnerMap::initial(cfg.protocol.n0),
+        live: (0..cfg.n_peers).collect(),
+        ledger: super::accuse::BanLedger::new(),
+        equiv: crate::net::gossip::EquivocationTracker::new(),
+        behavior,
+        local_rng: Rng::new(cfg.seed ^ (0xA0C0_FFEE + peer as u64)),
+        r_prev: r0,
+        validators: vec![],
+        archive: None,
+        recompute_count: 0,
+    };
+    let mut params = init_params;
+    let mut opt = cfg.opt.build(params.len(), cfg.segments.clone());
+    let mut metrics = Vec::new();
+    let mut steps_done = 0u64;
+    let mut final_metric = f64::NAN;
+
+    for step in 0..cfg.steps {
+        let t0 = std::time::Instant::now();
+        let out = match btard_step(&mut ctx, step, &params) {
+            Ok(o) => o,
+            Err(_) => break,
+        };
+        if peer == 0 && std::env::var("BTARD_DEBUG_AGG").is_ok() {
+            eprintln!(
+                "dbg step {step}: |ghat|={:.4} loss={:.4}",
+                crate::util::rng::l2_norm(&out.aggregated),
+                out.loss
+            );
+        }
+        opt.step(step, &mut params, &out.aggregated);
+        steps_done = step + 1;
+        if ctx.ledger.is_banned(peer) {
+            break; // we were banned (Byzantine caught, or eliminated)
+        }
+        if peer == 0 {
+            let metric = if step % cfg.eval_every == 0 || step + 1 == cfg.steps {
+                let m = source.eval(&params);
+                final_metric = m;
+                m
+            } else {
+                f64::NAN
+            };
+            metrics.push(StepMetric {
+                step,
+                loss: out.loss,
+                metric,
+                banned_now: out.newly_banned.clone(),
+                step_wall_s: t0.elapsed().as_secs_f64(),
+                grad_s: out.timings.grad_s,
+                clip_s: out.timings.clip_s,
+                mprng_s: out.timings.mprng_s,
+                verify_s: out.timings.verify_s,
+                comm_s: out.timings.comm_s,
+                validate_s: out.timings.validate_s,
+            });
+        }
+    }
+    PeerOutput {
+        metrics,
+        ban_events: ctx.ledger.events.clone(),
+        final_params: params,
+        final_metric,
+        recomputes: ctx.recompute_count,
+        steps_done,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parameter-server baselines (Fig. 3 comparison arms)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+pub struct PsConfig {
+    pub n_peers: usize,
+    pub byzantine: Vec<PeerId>,
+    pub attack: Option<(AttackKind, AttackSchedule)>,
+    pub aggregator: Aggregator,
+    pub tau: f32,
+    pub steps: u64,
+    pub opt: OptSpec,
+    pub eval_every: u64,
+    pub seed: u64,
+}
+
+/// Trusted-PS training loop: all gradients visit one aggregator. The
+/// robust-aggregation baselines of Fig. 3 (and the no-defense All-Reduce
+/// arm, aggregator = Mean).
+pub fn run_ps(cfg: &PsConfig, source: Arc<dyn GradientSource>) -> RunResult {
+    let mut params = source.init_params(cfg.seed);
+    let mut opt = cfg.opt.build(params.len(), vec![]);
+    let board = CollusionBoard::new();
+    let mut attackers: std::collections::HashMap<PeerId, AttackState> = cfg
+        .byzantine
+        .iter()
+        .map(|&p| {
+            let (kind, schedule) = cfg.attack.unwrap_or((
+                AttackKind::SignFlip { lambda: 1.0 },
+                AttackSchedule::from_step(u64::MAX),
+            ));
+            (p, AttackState::new(kind, schedule, board.clone()))
+        })
+        .collect();
+    let mut metrics = Vec::new();
+    let mut r = crate::crypto::sha256_parts(&[b"ps-r0", &cfg.seed.to_le_bytes()]);
+    let trim = cfg.byzantine.len().min((cfg.n_peers - 1) / 2);
+    let mut final_metric = f64::NAN;
+    for step in 0..cfg.steps {
+        let honest_seeds: Vec<(PeerId, u64)> = (0..cfg.n_peers)
+            .filter(|p| !cfg.byzantine.contains(p))
+            .map(|p| (p, batch_seed(&r, p)))
+            .collect();
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(cfg.n_peers);
+        let mut loss_acc = 0.0f32;
+        let mut loss_n = 0;
+        for p in 0..cfg.n_peers {
+            if let Some(att) = attackers.get_mut(&p) {
+                att.observe_params(step, &params);
+                grads.push(att.gradient(
+                    step,
+                    &params,
+                    source.as_ref(),
+                    batch_seed(&r, p),
+                    &honest_seeds,
+                    &r,
+                ));
+            } else {
+                let (l, g) = source.loss_and_grad(&params, batch_seed(&r, p));
+                loss_acc += l;
+                loss_n += 1;
+                grads.push(g);
+            }
+        }
+        let rows: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let agg = cfg.aggregator.aggregate(&rows, cfg.tau, trim.max(1));
+        opt.step(step, &mut params, &agg);
+        // advance shared randomness chain
+        r = crate::crypto::sha256_parts(&[b"ps-step", &r]);
+        if step % cfg.eval_every == 0 || step + 1 == cfg.steps {
+            final_metric = source.eval(&params);
+        }
+        metrics.push(StepMetric {
+            step,
+            loss: loss_acc / loss_n.max(1) as f32,
+            metric: if step % cfg.eval_every == 0 || step + 1 == cfg.steps {
+                final_metric
+            } else {
+                f64::NAN
+            },
+            banned_now: vec![],
+            step_wall_s: 0.0,
+            grad_s: 0.0,
+            clip_s: 0.0,
+            mprng_s: 0.0,
+            verify_s: 0.0,
+            comm_s: 0.0,
+            validate_s: 0.0,
+        });
+    }
+    RunResult {
+        metrics,
+        ban_events: vec![],
+        final_params: params,
+        final_metric,
+        peer_bytes: vec![],
+        recomputes: 0,
+        steps_done: cfg.steps,
+    }
+}
+
+/// RESTARTED-BTARD-SGD (Algorithm 8): run BTARD-SGD in stages with
+/// halving step sizes (the strongly-convex theory driver).
+pub fn run_restarted(
+    base: &RunConfig,
+    source: Arc<dyn GradientSource>,
+    restarts: usize,
+    base_lr: f32,
+    steps_per_stage: u64,
+) -> Vec<RunResult> {
+    let mut out = Vec::new();
+    let mut cfg = base.clone();
+    for t in 0..restarts {
+        cfg.steps = steps_per_stage;
+        cfg.seed = base.seed + t as u64 * 7919;
+        cfg.opt = OptSpec::Sgd {
+            schedule: LrSchedule::Constant(base_lr / 2f32.powi(t as i32)),
+            momentum: 0.0,
+            nesterov: false,
+        };
+        // NOTE: each stage restarts from the previous stage's params via
+        // a source wrapper would require param threading; the harness
+        // uses the average iterate from `final_params` instead.
+        out.push(run_btard(&cfg, source.clone()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic::Quadratic;
+
+    #[test]
+    fn ps_mean_converges_without_attack() {
+        let src = Arc::new(Quadratic::new(32, 0.5, 5.0, 0.5, 1));
+        let cfg = PsConfig {
+            n_peers: 8,
+            byzantine: vec![],
+            attack: None,
+            aggregator: Aggregator::Mean,
+            tau: 1.0,
+            steps: 300,
+            opt: OptSpec::Sgd {
+                schedule: LrSchedule::Constant(0.1),
+                momentum: 0.0,
+                nesterov: false,
+            },
+            eval_every: 50,
+            seed: 0,
+        };
+        let res = run_ps(&cfg, src);
+        assert!(res.final_metric < 0.01, "subopt {}", res.final_metric);
+    }
+
+    #[test]
+    fn ps_mean_destroyed_by_sign_flip() {
+        let src = Arc::new(Quadratic::new(32, 0.5, 5.0, 0.5, 1));
+        let cfg = PsConfig {
+            n_peers: 8,
+            byzantine: vec![5, 6, 7],
+            attack: Some((
+                AttackKind::SignFlip { lambda: 1000.0 },
+                AttackSchedule::from_step(50),
+            )),
+            aggregator: Aggregator::Mean,
+            tau: 1.0,
+            steps: 120,
+            opt: OptSpec::Sgd {
+                schedule: LrSchedule::Constant(0.05),
+                momentum: 0.0,
+                nesterov: false,
+            },
+            eval_every: 20,
+            seed: 0,
+        };
+        let res = run_ps(&cfg, src);
+        assert!(
+            !res.final_metric.is_finite() || res.final_metric > 10.0,
+            "mean should diverge, got {}",
+            res.final_metric
+        );
+    }
+
+    #[test]
+    fn ps_centered_clip_survives_sign_flip() {
+        let src = Arc::new(Quadratic::new(32, 0.5, 5.0, 0.5, 1));
+        let cfg = PsConfig {
+            n_peers: 8,
+            byzantine: vec![6, 7],
+            attack: Some((
+                AttackKind::SignFlip { lambda: 1000.0 },
+                AttackSchedule::from_step(30),
+            )),
+            aggregator: Aggregator::CenteredClip,
+            tau: 2.0,
+            steps: 300,
+            opt: OptSpec::Sgd {
+                schedule: LrSchedule::Constant(0.05),
+                momentum: 0.0,
+                nesterov: false,
+            },
+            eval_every: 50,
+            seed: 0,
+        };
+        let res = run_ps(&cfg, src);
+        assert!(res.final_metric < 1.0, "subopt {}", res.final_metric);
+    }
+
+    #[test]
+    fn clipped_source_bounds_part_norms() {
+        let src = Arc::new(Quadratic::new(64, 0.1, 5.0, 10.0, 3));
+        let clipped = ClippedSource { inner: src, lambda: 1.0, n_parts: 4 };
+        let params = clipped.init_params(0);
+        let (_, g) = clipped.loss_and_grad(&params, 7);
+        let spec = crate::coordinator::partition::PartitionSpec::new(64, 4);
+        let lam = 1.0 / 2.0; // λ/√n_parts
+        for j in 0..4 {
+            let n = crate::util::rng::l2_norm(spec.slice(&g, j));
+            assert!(n <= lam * 1.001, "part {j} norm {n}");
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Salted hash commitments (used by the MPRNG and by gradient hashing).
+//!
+//! `commit = H(tag ‖ peer_id ‖ payload ‖ salt)`. Including the peer id
+//! protects against replay attacks (re-broadcasting someone else's
+//! commitment) and the 32-byte salt against dictionary attacks, exactly
+//! as described in Appendix A.2 of the paper.
+
+use super::sha256::sha256_parts;
+
+pub type Digest = [u8; 32];
+
+/// A commitment opening: the payload plus the salt used at commit time.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Opening {
+    pub payload: Vec<u8>,
+    pub salt: [u8; 32],
+}
+
+/// Compute the commitment digest for (tag, peer, payload, salt).
+pub fn commit(tag: &[u8], peer_id: u64, payload: &[u8], salt: &[u8; 32]) -> Digest {
+    sha256_parts(&[tag, &peer_id.to_le_bytes(), payload, salt])
+}
+
+/// Verify an opening against a commitment digest.
+pub fn verify_opening(tag: &[u8], peer_id: u64, opening: &Opening, digest: &Digest) -> bool {
+    commit(tag, peer_id, &opening.payload, &opening.salt) == *digest
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let salt = [9u8; 32];
+        let d = commit(b"mprng", 3, b"randomness", &salt);
+        let op = Opening { payload: b"randomness".to_vec(), salt };
+        assert!(verify_opening(b"mprng", 3, &op, &d));
+    }
+
+    #[test]
+    fn binding() {
+        let salt = [9u8; 32];
+        let d = commit(b"mprng", 3, b"x", &salt);
+        // Different payload, salt, peer, or tag all fail.
+        assert!(!verify_opening(b"mprng", 3, &Opening { payload: b"y".to_vec(), salt }, &d));
+        assert!(!verify_opening(
+            b"mprng",
+            3,
+            &Opening { payload: b"x".to_vec(), salt: [8u8; 32] },
+            &d
+        ));
+        assert!(!verify_opening(b"mprng", 4, &Opening { payload: b"x".to_vec(), salt }, &d));
+        assert!(!verify_opening(b"other", 3, &Opening { payload: b"x".to_vec(), salt }, &d));
+    }
+
+    #[test]
+    fn replay_protection_distinct_peers() {
+        // Same payload+salt committed by two peers yields different digests.
+        let salt = [1u8; 32];
+        assert_ne!(commit(b"t", 1, b"p", &salt), commit(b"t", 2, b"p", &salt));
+    }
+}

@@ -1,0 +1,12 @@
+//! Cryptographic substrate, implemented from scratch (no crypto crates
+//! are available in the offline vendored set): SHA-256, fixed-width
+//! bignum arithmetic, Schnorr signatures, and salted commitments.
+
+pub mod commit;
+pub mod schnorr;
+pub mod sha256;
+pub mod u256;
+
+pub use commit::{commit, verify_opening, Digest, Opening};
+pub use schnorr::{keygen, sign, verify, Mont, PublicKey, SecretKey, Signature};
+pub use sha256::{sha256, sha256_f32, sha256_parts, Sha256};

@@ -1,0 +1,360 @@
+//! Schnorr signatures over the multiplicative group Z_p*, p = 2^255 - 19.
+//!
+//! Every broadcast message in BTARD is signed so that (a) peers cannot be
+//! impersonated and (b) equivocation (two contradicting signed messages)
+//! is transferable evidence that gets the signer banned.
+//!
+//! Group choice: we need constants that are *certainly* correct offline;
+//! p = 2^255 - 19 is a well-known prime. Exponent arithmetic is done mod
+//! p-1 (composite), which keeps sign/verify correct for any generator:
+//!     s = k + e·x (mod p-1)  ⇒  g^s = R · y^e (mod p).
+//! SECURITY NOTE (also in DESIGN.md): a 255-bit MODP group with composite
+//! exponent order is simulation-grade. A production deployment would swap
+//! `P`/`G` for a ≥2048-bit MODP group or an elliptic-curve group; the
+//! protocol logic is unchanged.
+//!
+//! Multiplications mod p use Montgomery reduction (CIOS) so a full
+//! exponentiation costs ~20µs; signature checks are therefore cheap
+//! enough to keep enabled during simulated training runs.
+
+use super::sha256::{sha256_parts, Sha256};
+use super::u256::U256;
+
+/// p = 2^255 - 19.
+fn modulus_p() -> U256 {
+    U256([
+        0xFFFF_FFFF_FFFF_FFED,
+        0xFFFF_FFFF_FFFF_FFFF,
+        0xFFFF_FFFF_FFFF_FFFF,
+        0x7FFF_FFFF_FFFF_FFFF,
+    ])
+}
+
+/// p - 1 (exponent modulus).
+fn modulus_pm1() -> U256 {
+    U256([
+        0xFFFF_FFFF_FFFF_FFEC,
+        0xFFFF_FFFF_FFFF_FFFF,
+        0xFFFF_FFFF_FFFF_FFFF,
+        0x7FFF_FFFF_FFFF_FFFF,
+    ])
+}
+
+const GENERATOR: u64 = 2;
+
+// ---------------------------------------------------------------------------
+// Montgomery arithmetic mod p (fixed modulus).
+// ---------------------------------------------------------------------------
+
+/// Montgomery context for p = 2^255 - 19 with R = 2^256.
+#[derive(Clone)]
+pub struct Mont {
+    p: U256,
+    /// -p^{-1} mod 2^64
+    n0: u64,
+    /// R^2 mod p (to convert into Montgomery form)
+    r2: U256,
+    /// 1 in Montgomery form (= R mod p)
+    one: U256,
+}
+
+impl Mont {
+    pub fn new() -> Mont {
+        let p = modulus_p();
+        // n0 = -p^{-1} mod 2^64 via Newton iteration on the inverse.
+        let mut inv: u64 = 1;
+        for _ in 0..6 {
+            inv = inv.wrapping_mul(2u64.wrapping_sub(p.0[0].wrapping_mul(inv)));
+        }
+        let n0 = inv.wrapping_neg();
+        // R mod p where R = 2^256: compute by reducing 2^256 - 1 then +1.
+        let all_ones = U256([u64::MAX; 4]);
+        let one = all_ones.rem256(&p).add_mod(&U256::ONE, &p);
+        // R^2 mod p via repeated doubling of R mod p, 256 times.
+        let mut r2 = one;
+        for _ in 0..256 {
+            r2 = r2.add_mod(&r2, &p);
+        }
+        Mont { p, n0, r2, one }
+    }
+
+    /// CIOS Montgomery multiplication: returns a·b·R^{-1} mod p.
+    pub fn mul(&self, a: &U256, b: &U256) -> U256 {
+        let mut t = [0u64; 6]; // 4 limbs + 2 carry slots
+        for i in 0..4 {
+            // t += a[i] * b
+            let mut carry: u128 = 0;
+            for j in 0..4 {
+                let cur = t[j] as u128 + (a.0[i] as u128) * (b.0[j] as u128) + carry;
+                t[j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let cur = t[4] as u128 + carry;
+            t[4] = cur as u64;
+            t[5] = (cur >> 64) as u64;
+
+            // m = t[0] * n0 mod 2^64; t += m * p; t >>= 64
+            let m = t[0].wrapping_mul(self.n0);
+            let cur = t[0] as u128 + (m as u128) * (self.p.0[0] as u128);
+            let mut carry: u128 = cur >> 64;
+            for j in 1..4 {
+                let cur = t[j] as u128 + (m as u128) * (self.p.0[j] as u128) + carry;
+                t[j - 1] = cur as u64;
+                carry = cur >> 64;
+            }
+            let cur = t[4] as u128 + carry;
+            t[3] = cur as u64;
+            t[4] = t[5] + ((cur >> 64) as u64);
+            t[5] = 0;
+        }
+        let mut out = U256([t[0], t[1], t[2], t[3]]);
+        if t[4] != 0 || !out.lt(&self.p) {
+            out = out.sbb(&self.p).0;
+        }
+        out
+    }
+
+    pub fn to_mont(&self, a: &U256) -> U256 {
+        self.mul(a, &self.r2)
+    }
+
+    pub fn from_mont(&self, a: &U256) -> U256 {
+        self.mul(a, &U256::ONE)
+    }
+
+    /// g^e mod p (inputs/outputs in normal form).
+    pub fn pow(&self, base: &U256, exp: &U256) -> U256 {
+        let b = self.to_mont(&base.rem256(&self.p));
+        let mut acc = self.one;
+        let nbits = exp.bits();
+        for i in (0..nbits).rev() {
+            acc = self.mul(&acc, &acc);
+            if exp.bit(i) {
+                acc = self.mul(&acc, &b);
+            }
+        }
+        self.from_mont(&acc)
+    }
+
+    /// a·b mod p in normal form.
+    pub fn mul_norm(&self, a: &U256, b: &U256) -> U256 {
+        let am = self.to_mont(a);
+        let bm = self.to_mont(b);
+        self.from_mont(&self.mul(&am, &bm))
+    }
+}
+
+impl Default for Mont {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Keys and signatures
+// ---------------------------------------------------------------------------
+
+/// Public key: y = g^x mod p (32 bytes, big-endian).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct PublicKey(pub [u8; 32]);
+
+/// Secret key: exponent x.
+#[derive(Clone)]
+pub struct SecretKey {
+    x: U256,
+    pub public: PublicKey,
+}
+
+/// Signature (R, s): R = g^k, s = k + e·x mod (p-1).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Signature {
+    pub r: [u8; 32],
+    pub s: [u8; 32],
+}
+
+impl Signature {
+    pub fn to_bytes(&self) -> [u8; 64] {
+        let mut out = [0u8; 64];
+        out[..32].copy_from_slice(&self.r);
+        out[32..].copy_from_slice(&self.s);
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Option<Signature> {
+        if b.len() != 64 {
+            return None;
+        }
+        let mut r = [0u8; 32];
+        let mut s = [0u8; 32];
+        r.copy_from_slice(&b[..32]);
+        s.copy_from_slice(&b[32..]);
+        Some(Signature { r, s })
+    }
+}
+
+/// Deterministic keypair from a seed (peers are configured with seeds so
+/// experiments are reproducible).
+pub fn keygen(mont: &Mont, seed: u64) -> SecretKey {
+    let digest = sha256_parts(&[b"btard-keygen", &seed.to_le_bytes()]);
+    let x = U256::from_be_bytes(&digest).rem256(&modulus_pm1());
+    let x = if x.is_zero() { U256::ONE } else { x };
+    let y = mont.pow(&U256::from_u64(GENERATOR), &x);
+    SecretKey { x, public: PublicKey(y.to_be_bytes()) }
+}
+
+/// Challenge e = H(R ‖ y ‖ msg) reduced mod p-1.
+fn challenge(r: &[u8; 32], y: &[u8; 32], msg: &[u8]) -> U256 {
+    let mut h = Sha256::new();
+    h.update(b"btard-schnorr");
+    h.update(r);
+    h.update(y);
+    h.update(msg);
+    U256::from_be_bytes(&h.finalize()).rem256(&modulus_pm1())
+}
+
+/// Deterministic nonce k = H(x ‖ msg) mod (p-1)  (RFC 6979 in spirit).
+fn nonce(x: &U256, msg: &[u8]) -> U256 {
+    let digest = sha256_parts(&[b"btard-nonce", &x.to_be_bytes(), msg]);
+    let k = U256::from_be_bytes(&digest).rem256(&modulus_pm1());
+    if k.is_zero() {
+        U256::ONE
+    } else {
+        k
+    }
+}
+
+pub fn sign(mont: &Mont, sk: &SecretKey, msg: &[u8]) -> Signature {
+    let pm1 = modulus_pm1();
+    let k = nonce(&sk.x, msg);
+    let r_point = mont.pow(&U256::from_u64(GENERATOR), &k);
+    let r_bytes = r_point.to_be_bytes();
+    let e = challenge(&r_bytes, &sk.public.0, msg);
+    // s = k + e*x mod (p-1)
+    let ex = e.widening_mul(&sk.x).rem(&pm1);
+    let s = k.rem256(&pm1).add_mod(&ex, &pm1);
+    Signature { r: r_bytes, s: s.to_be_bytes() }
+}
+
+pub fn verify(mont: &Mont, pk: &PublicKey, msg: &[u8], sig: &Signature) -> bool {
+    let p = modulus_p();
+    let y = U256::from_be_bytes(&pk.0);
+    let r = U256::from_be_bytes(&sig.r);
+    if y.is_zero() || r.is_zero() || !y.lt(&p) || !r.lt(&p) {
+        return false;
+    }
+    let s = U256::from_be_bytes(&sig.s);
+    let e = challenge(&sig.r, &pk.0, msg);
+    // g^s ?= R * y^e  (mod p)
+    let lhs = mont.pow(&U256::from_u64(GENERATOR), &s);
+    let rhs = mont.mul_norm(&r, &mont.pow(&y, &e));
+    lhs == rhs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn montgomery_matches_schoolbook() {
+        let mont = Mont::new();
+        let p = modulus_p();
+        prop_check("mont mul vs mul_mod", |rng, _| {
+            let a = U256([rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()])
+                .rem256(&p);
+            let b = U256([rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()])
+                .rem256(&p);
+            assert_eq!(mont.mul_norm(&a, &b), a.mul_mod(&b, &p));
+        });
+    }
+
+    #[test]
+    fn pow_matches_slow_pow() {
+        let mont = Mont::new();
+        let p = modulus_p();
+        let base = U256::from_u64(7);
+        let exp = U256::from_u64(65537);
+        assert_eq!(mont.pow(&base, &exp), base.pow_mod(&exp, &p));
+    }
+
+    #[test]
+    fn p_is_prime_fermat() {
+        // Fermat tests with several bases (p = 2^255-19 is known prime;
+        // this guards against typos in the embedded constant).
+        let mont = Mont::new();
+        let pm1 = modulus_pm1();
+        for a in [2u64, 3, 5, 7, 11, 13, 65537] {
+            assert_eq!(mont.pow(&U256::from_u64(a), &pm1), U256::ONE, "base {a}");
+        }
+    }
+
+    #[test]
+    fn sign_verify_roundtrip() {
+        let mont = Mont::new();
+        let sk = keygen(&mont, 42);
+        let msg = b"gradient hash commitment step 17";
+        let sig = sign(&mont, &sk, msg);
+        assert!(verify(&mont, &sk.public, msg, &sig));
+    }
+
+    #[test]
+    fn tampered_message_rejected() {
+        let mont = Mont::new();
+        let sk = keygen(&mont, 1);
+        let sig = sign(&mont, &sk, b"hello");
+        assert!(!verify(&mont, &sk.public, b"hellp", &sig));
+    }
+
+    #[test]
+    fn tampered_signature_rejected() {
+        let mont = Mont::new();
+        let sk = keygen(&mont, 2);
+        let mut sig = sign(&mont, &sk, b"msg");
+        sig.s[31] ^= 1;
+        assert!(!verify(&mont, &sk.public, b"msg", &sig));
+        let mut sig2 = sign(&mont, &sk, b"msg");
+        sig2.r[0] ^= 0x40;
+        assert!(!verify(&mont, &sk.public, b"msg", &sig2));
+    }
+
+    #[test]
+    fn wrong_key_rejected() {
+        let mont = Mont::new();
+        let sk1 = keygen(&mont, 3);
+        let sk2 = keygen(&mont, 4);
+        let sig = sign(&mont, &sk1, b"msg");
+        assert!(!verify(&mont, &sk2.public, b"msg", &sig));
+    }
+
+    #[test]
+    fn distinct_seeds_distinct_keys() {
+        let mont = Mont::new();
+        let pks: Vec<_> = (0..20).map(|i| keygen(&mont, i).public).collect();
+        for i in 0..pks.len() {
+            for j in i + 1..pks.len() {
+                assert_ne!(pks[i], pks[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn signature_bytes_roundtrip() {
+        let mont = Mont::new();
+        let sk = keygen(&mont, 5);
+        let sig = sign(&mont, &sk, b"x");
+        assert_eq!(Signature::from_bytes(&sig.to_bytes()).unwrap(), sig);
+        assert!(Signature::from_bytes(&[0u8; 10]).is_none());
+    }
+
+    #[test]
+    fn many_messages_prop() {
+        let mont = Mont::new();
+        let sk = keygen(&mont, 77);
+        prop_check("sign/verify arbitrary msgs", |rng, _| {
+            let len = rng.below_usize(200);
+            let msg: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+            let sig = sign(&mont, &sk, &msg);
+            assert!(verify(&mont, &sk.public, &msg, &sig));
+        });
+    }
+}

@@ -1,0 +1,356 @@
+//! Fixed-width 256-bit unsigned arithmetic (with 512-bit intermediates)
+//! for the Schnorr signature group. Little-endian limb order ([u64; 4],
+//! limb 0 = least significant).
+
+/// 256-bit unsigned integer.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct U256(pub [u64; 4]);
+
+impl U256 {
+    pub const ZERO: U256 = U256([0, 0, 0, 0]);
+    pub const ONE: U256 = U256([1, 0, 0, 0]);
+
+    pub fn from_u64(v: u64) -> U256 {
+        U256([v, 0, 0, 0])
+    }
+
+    /// Parse from big-endian bytes (up to 32).
+    pub fn from_be_bytes(b: &[u8]) -> U256 {
+        assert!(b.len() <= 32);
+        let mut buf = [0u8; 32];
+        buf[32 - b.len()..].copy_from_slice(b);
+        let mut limbs = [0u64; 4];
+        for i in 0..4 {
+            let mut chunk = [0u8; 8];
+            chunk.copy_from_slice(&buf[32 - (i + 1) * 8..32 - i * 8]);
+            limbs[i] = u64::from_be_bytes(chunk);
+        }
+        U256(limbs)
+    }
+
+    pub fn to_be_bytes(self) -> [u8; 32] {
+        let mut out = [0u8; 32];
+        for i in 0..4 {
+            out[32 - (i + 1) * 8..32 - i * 8].copy_from_slice(&self.0[i].to_be_bytes());
+        }
+        out
+    }
+
+    /// Parse a hex string (no 0x prefix needed).
+    pub fn from_hex(s: &str) -> U256 {
+        let s = s.trim_start_matches("0x");
+        assert!(s.len() <= 64, "hex too long for U256");
+        let padded = format!("{:0>64}", s);
+        let bytes: Vec<u8> = (0..32)
+            .map(|i| u8::from_str_radix(&padded[i * 2..i * 2 + 2], 16).expect("bad hex"))
+            .collect();
+        U256::from_be_bytes(&bytes)
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.0 == [0, 0, 0, 0]
+    }
+
+    pub fn bit(&self, i: usize) -> bool {
+        (self.0[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Index of the highest set bit + 1 (0 for zero).
+    pub fn bits(&self) -> usize {
+        for i in (0..4).rev() {
+            if self.0[i] != 0 {
+                return i * 64 + (64 - self.0[i].leading_zeros() as usize);
+            }
+        }
+        0
+    }
+
+    pub fn cmp256(&self, other: &U256) -> std::cmp::Ordering {
+        for i in (0..4).rev() {
+            match self.0[i].cmp(&other.0[i]) {
+                std::cmp::Ordering::Equal => continue,
+                o => return o,
+            }
+        }
+        std::cmp::Ordering::Equal
+    }
+
+    pub fn lt(&self, other: &U256) -> bool {
+        self.cmp256(other) == std::cmp::Ordering::Less
+    }
+
+    /// Wrapping addition, returns (sum, carry).
+    pub fn adc(&self, other: &U256) -> (U256, bool) {
+        let mut out = [0u64; 4];
+        let mut carry = false;
+        for i in 0..4 {
+            let (s1, c1) = self.0[i].overflowing_add(other.0[i]);
+            let (s2, c2) = s1.overflowing_add(carry as u64);
+            out[i] = s2;
+            carry = c1 || c2;
+        }
+        (U256(out), carry)
+    }
+
+    /// Wrapping subtraction, returns (diff, borrow).
+    pub fn sbb(&self, other: &U256) -> (U256, bool) {
+        let mut out = [0u64; 4];
+        let mut borrow = false;
+        for i in 0..4 {
+            let (d1, b1) = self.0[i].overflowing_sub(other.0[i]);
+            let (d2, b2) = d1.overflowing_sub(borrow as u64);
+            out[i] = d2;
+            borrow = b1 || b2;
+        }
+        (U256(out), borrow)
+    }
+
+    /// Full 256×256 → 512-bit product.
+    pub fn widening_mul(&self, other: &U256) -> U512 {
+        let mut out = [0u64; 8];
+        for i in 0..4 {
+            let mut carry: u128 = 0;
+            for j in 0..4 {
+                let cur = out[i + j] as u128
+                    + (self.0[i] as u128) * (other.0[j] as u128)
+                    + carry;
+                out[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+            out[i + 4] = carry as u64;
+        }
+        U512(out)
+    }
+
+    /// Modular addition (requires self, other < m).
+    pub fn add_mod(&self, other: &U256, m: &U256) -> U256 {
+        let (sum, carry) = self.adc(other);
+        if carry || !sum.lt(m) {
+            sum.sbb(m).0
+        } else {
+            sum
+        }
+    }
+
+    /// Modular subtraction (requires self, other < m).
+    pub fn sub_mod(&self, other: &U256, m: &U256) -> U256 {
+        let (diff, borrow) = self.sbb(other);
+        if borrow {
+            diff.adc(m).0
+        } else {
+            diff
+        }
+    }
+
+    /// Modular multiplication via 512-bit product + reduction.
+    pub fn mul_mod(&self, other: &U256, m: &U256) -> U256 {
+        self.widening_mul(other).rem(m)
+    }
+
+    /// Modular exponentiation (square-and-multiply, left-to-right).
+    pub fn pow_mod(&self, exp: &U256, m: &U256) -> U256 {
+        if m == &U256::ONE {
+            return U256::ZERO;
+        }
+        let mut result = U256::ONE;
+        let base = self.rem256(m);
+        let nbits = exp.bits();
+        for i in (0..nbits).rev() {
+            result = result.mul_mod(&result, m);
+            if exp.bit(i) {
+                result = result.mul_mod(&base, m);
+            }
+        }
+        result
+    }
+
+    /// Remainder of a 256-bit value.
+    pub fn rem256(&self, m: &U256) -> U256 {
+        if self.lt(m) {
+            *self
+        } else {
+            let mut wide = [0u64; 8];
+            wide[..4].copy_from_slice(&self.0);
+            U512(wide).rem(m)
+        }
+    }
+}
+
+/// 512-bit unsigned integer (product intermediate).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct U512(pub [u64; 8]);
+
+impl U512 {
+    pub fn bits(&self) -> usize {
+        for i in (0..8).rev() {
+            if self.0[i] != 0 {
+                return i * 64 + (64 - self.0[i].leading_zeros() as usize);
+            }
+        }
+        0
+    }
+
+    fn bit(&self, i: usize) -> bool {
+        (self.0[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    fn shl1(&mut self) {
+        let mut carry = 0u64;
+        for limb in self.0.iter_mut() {
+            let new_carry = *limb >> 63;
+            *limb = (*limb << 1) | carry;
+            carry = new_carry;
+        }
+    }
+
+    fn sub_in_place_256(&mut self, m: &U256) {
+        let mut borrow = false;
+        for i in 0..8 {
+            let rhs = if i < 4 { m.0[i] } else { 0 };
+            let (d1, b1) = self.0[i].overflowing_sub(rhs);
+            let (d2, b2) = d1.overflowing_sub(borrow as u64);
+            self.0[i] = d2;
+            borrow = b1 || b2;
+        }
+        debug_assert!(!borrow);
+    }
+
+    fn geq_256(&self, m: &U256) -> bool {
+        for i in (4..8).rev() {
+            if self.0[i] != 0 {
+                return true;
+            }
+        }
+        for i in (0..4).rev() {
+            if self.0[i] != m.0[i] {
+                return self.0[i] > m.0[i];
+            }
+        }
+        true
+    }
+
+    /// Binary long-division remainder mod a 256-bit modulus.
+    pub fn rem(&self, m: &U256) -> U256 {
+        assert!(!m.is_zero(), "division by zero");
+        let nbits = self.bits();
+        let mut rem = U512([0u64; 8]);
+        for i in (0..nbits).rev() {
+            rem.shl1();
+            if self.bit(i) {
+                rem.0[0] |= 1;
+            }
+            if rem.geq_256(m) {
+                rem.sub_in_place_256(m);
+            }
+        }
+        U256([rem.0[0], rem.0[1], rem.0[2], rem.0[3]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn be_bytes_roundtrip() {
+        let v = U256::from_hex("deadbeef00112233445566778899aabbccddeeff0102030405060708090a0b0c");
+        assert_eq!(U256::from_be_bytes(&v.to_be_bytes()), v);
+    }
+
+    #[test]
+    fn add_sub_basics() {
+        let a = U256::from_u64(u64::MAX);
+        let (s, c) = a.adc(&U256::ONE);
+        assert!(!c);
+        assert_eq!(s, U256([0, 1, 0, 0]));
+        let (d, b) = s.sbb(&U256::ONE);
+        assert!(!b);
+        assert_eq!(d, a);
+        let (_, b2) = U256::ZERO.sbb(&U256::ONE);
+        assert!(b2);
+    }
+
+    #[test]
+    fn mul_small() {
+        let a = U256::from_u64(1 << 40);
+        let p = a.widening_mul(&a);
+        assert_eq!(p.0[1], 1 << 16); // 2^80
+        assert_eq!(p.rem(&U256::from_u64(1_000_003)), {
+            // 2^80 mod 1000003 computed independently: pow_mod check below
+            U256::from_u64(mod_pow_u64(2, 80, 1_000_003))
+        });
+    }
+
+    fn mod_pow_u64(mut b: u64, mut e: u64, m: u64) -> u64 {
+        let mut r: u128 = 1;
+        let mut bb = b as u128 % m as u128;
+        while e > 0 {
+            if e & 1 == 1 {
+                r = r * bb % m as u128;
+            }
+            bb = bb * bb % m as u128;
+            e >>= 1;
+        }
+        let _ = &mut b;
+        r as u64
+    }
+
+    #[test]
+    fn pow_mod_matches_u64_reference() {
+        prop_check("pow_mod vs u64", |rng, _| {
+            let base = rng.next_u64() >> 1;
+            let exp = rng.next_u64() % 10_000;
+            let m = (rng.next_u64() >> 33).max(2);
+            let got = U256::from_u64(base).pow_mod(&U256::from_u64(exp), &U256::from_u64(m));
+            let want = mod_pow_u64(base % m, exp, m);
+            assert_eq!(got, U256::from_u64(want), "base={base} exp={exp} m={m}");
+        });
+    }
+
+    #[test]
+    fn fermat_little_theorem() {
+        // p prime => a^(p-1) = 1 mod p for a not divisible by p.
+        let p = U256::from_u64(0xFFFF_FFFF_FFFF_FFC5); // largest 64-bit prime
+        let pm1 = p.sbb(&U256::ONE).0;
+        for a in [2u64, 3, 65537, 0x1234_5678_9abc_def1] {
+            assert_eq!(U256::from_u64(a).pow_mod(&pm1, &p), U256::ONE);
+        }
+    }
+
+    #[test]
+    fn add_mod_sub_mod_inverse() {
+        prop_check("add/sub mod roundtrip", |rng, _| {
+            let m = U256([rng.next_u64() | 1, rng.next_u64(), rng.next_u64(), rng.next_u64() | (1 << 62)]);
+            let a = U256([rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()]).rem256(&m);
+            let b = U256([rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()]).rem256(&m);
+            let s = a.add_mod(&b, &m);
+            assert!(s.lt(&m));
+            assert_eq!(s.sub_mod(&b, &m), a);
+            assert_eq!(s.sub_mod(&a, &m), b);
+        });
+    }
+
+    #[test]
+    fn mul_mod_commutes_and_distributes() {
+        prop_check("mul_mod algebra", |rng, _| {
+            let m = U256([rng.next_u64() | 1, rng.next_u64(), rng.next_u64(), rng.next_u64() | (1 << 62)]);
+            let a = U256([rng.next_u64(), 0, rng.next_u64(), 0]).rem256(&m);
+            let b = U256([0, rng.next_u64(), 0, rng.next_u64()]).rem256(&m);
+            let c = U256([rng.next_u64(), rng.next_u64(), 0, 0]).rem256(&m);
+            assert_eq!(a.mul_mod(&b, &m), b.mul_mod(&a, &m));
+            // a*(b+c) == a*b + a*c (mod m)
+            let lhs = a.mul_mod(&b.add_mod(&c, &m), &m);
+            let rhs = a.mul_mod(&b, &m).add_mod(&a.mul_mod(&c, &m), &m);
+            assert_eq!(lhs, rhs);
+        });
+    }
+
+    #[test]
+    fn rem_of_exact_multiple_is_zero() {
+        let m = U256::from_hex("ffffffffffffffffffffffffffffffffffffffffffffffffffffffff00000001");
+        let k = U256::from_u64(12345);
+        let prod = m.widening_mul(&k);
+        assert_eq!(prod.rem(&m), U256::ZERO);
+    }
+}

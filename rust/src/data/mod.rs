@@ -1,0 +1,25 @@
+//! Synthetic datasets with seed-deterministic batch sampling.
+//!
+//! BTARD assumes *public* data: every peer can sample any minibatch, and
+//! a validator can recompute another peer's gradient from the public seed
+//! `ξ_i^t = H(r^{t-1} ‖ i)`. Both generators here are pure functions of
+//! (dataset seed, batch seed), which is exactly that property.
+
+pub mod synth_text;
+pub mod synth_vision;
+
+/// A classification batch: `x` is row-major [batch, features], `y` holds
+/// class indices.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<u32>,
+    pub batch: usize,
+    pub features: usize,
+}
+
+impl Batch {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.features..(i + 1) * self.features]
+    }
+}

@@ -1,0 +1,159 @@
+//! `synth-text`: the WikiText-103 stand-in for the Fig. 4 experiments.
+//!
+//! A seeded order-2 Markov chain over a 64-symbol alphabet generates a
+//! corpus with realistic statistical structure (skewed unigram
+//! distribution, strong bigram dependencies), giving a language-modelling
+//! task where cross-entropy decreases smoothly with training — which is
+//! what the Fig. 4 loss-recovery curves require. Batches are (context,
+//! next-symbol) windows sampled deterministically from a seed.
+
+use crate::util::rng::Rng;
+
+pub const VOCAB: usize = 64;
+
+#[derive(Clone)]
+pub struct SynthText {
+    pub corpus: Vec<u8>,
+    pub seed: u64,
+}
+
+/// A language-model batch: `tokens` is [batch, seq_len+1] row-major; the
+/// model trains next-token prediction over each window.
+#[derive(Clone, Debug)]
+pub struct LmBatch {
+    pub tokens: Vec<u32>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl SynthText {
+    pub fn new(seed: u64, corpus_len: usize) -> SynthText {
+        let mut rng = Rng::new(seed ^ 0x7E97);
+        // Build a sparse order-2 transition table: for each (a, b) pair of
+        // previous symbols, only `k` successor symbols have mass, with a
+        // Zipf-ish profile. Stored as successor lists for compactness.
+        let k = 6usize;
+        let mut table = vec![0u8; VOCAB * VOCAB * k];
+        for e in table.iter_mut() {
+            // Skew successor symbols toward low ids (u² warp) so the
+            // corpus unigram distribution is non-uniform, like text.
+            let u = rng.next_f64();
+            *e = ((u * u * VOCAB as f64) as usize).min(VOCAB - 1) as u8;
+        }
+        let mut corpus = Vec::with_capacity(corpus_len);
+        let (mut a, mut b) = (0usize, 1usize);
+        for _ in 0..corpus_len {
+            let idx = (a * VOCAB + b) * k;
+            // Zipf-like choice among the k successors: rank r with
+            // probability ∝ 1/(r+1).
+            let weights: [f32; 6] = [1.0, 0.5, 0.333, 0.25, 0.2, 0.167];
+            let total: f32 = weights.iter().sum();
+            let mut t = rng.next_f32() * total;
+            let mut chosen = 0usize;
+            for (r, w) in weights.iter().enumerate() {
+                if t < *w {
+                    chosen = r;
+                    break;
+                }
+                t -= w;
+                chosen = r;
+            }
+            let next = table[idx + chosen] as usize;
+            corpus.push(next as u8);
+            a = b;
+            b = next;
+        }
+        SynthText { corpus, seed }
+    }
+
+    /// Sample a batch of (seq_len+1)-token windows deterministically.
+    pub fn batch(&self, batch_seed: u64, batch: usize, seq_len: usize) -> LmBatch {
+        let mut rng = Rng::new(self.seed.wrapping_mul(0xA24B_AED4).wrapping_add(batch_seed));
+        let window = seq_len + 1;
+        assert!(self.corpus.len() > window, "corpus shorter than window");
+        let mut tokens = Vec::with_capacity(batch * window);
+        for _ in 0..batch {
+            let start = rng.below_usize(self.corpus.len() - window);
+            tokens.extend(self.corpus[start..start + window].iter().map(|&t| t as u32));
+        }
+        LmBatch { tokens, batch, seq_len }
+    }
+
+    /// Empirical unigram entropy of the corpus in nats (sanity metric: a
+    /// perfect unigram model reaches this loss; the markov structure
+    /// allows going below it).
+    pub fn unigram_entropy(&self) -> f64 {
+        let mut counts = [0u64; VOCAB];
+        for &c in &self.corpus {
+            counts[c as usize] += 1;
+        }
+        let total = self.corpus.len() as f64;
+        counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / total;
+                -p * p.ln()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = SynthText::new(1, 10_000);
+        let b = SynthText::new(1, 10_000);
+        assert_eq!(a.corpus, b.corpus);
+        assert_ne!(a.corpus, SynthText::new(2, 10_000).corpus);
+    }
+
+    #[test]
+    fn batches_deterministic_and_in_vocab() {
+        let d = SynthText::new(3, 50_000);
+        let b1 = d.batch(9, 4, 32);
+        let b2 = d.batch(9, 4, 32);
+        assert_eq!(b1.tokens, b2.tokens);
+        assert_eq!(b1.tokens.len(), 4 * 33);
+        assert!(b1.tokens.iter().all(|&t| (t as usize) < VOCAB));
+    }
+
+    #[test]
+    fn corpus_has_structure() {
+        // Unigram entropy should be well below log(VOCAB) (skewed
+        // distribution) but far from 0 (not degenerate).
+        let d = SynthText::new(4, 100_000);
+        let h = d.unigram_entropy();
+        let max_h = (VOCAB as f64).ln();
+        assert!(h < 0.98 * max_h, "h={h} max={max_h}");
+        assert!(h > 0.3 * max_h, "h={h}");
+    }
+
+    #[test]
+    fn bigram_predictability() {
+        // Order-2 structure: the most frequent successor of a fixed
+        // context pair should carry large mass (predictable next token).
+        let d = SynthText::new(5, 200_000);
+        let mut ctx_counts = std::collections::HashMap::new();
+        for w in d.corpus.windows(3) {
+            let e = ctx_counts
+                .entry((w[0], w[1]))
+                .or_insert_with(|| vec![0u32; VOCAB]);
+            e[w[2] as usize] += 1;
+        }
+        // Average max-successor probability over frequent contexts.
+        let mut probs = Vec::new();
+        for (_, succ) in ctx_counts.iter() {
+            let total: u32 = succ.iter().sum();
+            if total >= 50 {
+                let mx = *succ.iter().max().unwrap();
+                probs.push(mx as f64 / total as f64);
+            }
+        }
+        let avg = probs.iter().sum::<f64>() / probs.len() as f64;
+        assert!(avg > 0.3, "avg max successor prob {avg}");
+    }
+}

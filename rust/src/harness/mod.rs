@@ -1,0 +1,183 @@
+//! Experiment harness: runs scenarios and records metric series as CSV
+//! under `results/`, plus a JSON summary per experiment. The bench
+//! targets (`benches/*.rs`) drive this module to regenerate each of the
+//! paper's tables and figures.
+
+use crate::coordinator::training::{RunResult, StepMetric};
+use crate::util::csv::{format_f64, CsvWriter};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+pub struct Recorder {
+    pub dir: PathBuf,
+    pub name: String,
+    rows: Vec<(String, Vec<(String, Json)>)>,
+}
+
+impl Recorder {
+    pub fn new(name: &str) -> Recorder {
+        let dir = results_dir();
+        Recorder { dir, name: name.to_string(), rows: vec![] }
+    }
+
+    /// Write a run's per-step metric series as `<name>_<label>.csv`.
+    pub fn write_series(&self, label: &str, metrics: &[StepMetric]) -> std::io::Result<PathBuf> {
+        let path = self.dir.join(format!("{}_{}.csv", self.name, sanitize(label)));
+        let mut w = CsvWriter::create(
+            &path,
+            &["step", "loss", "metric", "banned", "wall_s"],
+        )?;
+        for m in metrics {
+            w.row(&[
+                m.step.to_string(),
+                format_f64(m.loss as f64),
+                if m.metric.is_nan() { String::new() } else { format_f64(m.metric) },
+                m.banned_now.iter().map(|p| p.to_string()).collect::<Vec<_>>().join(";"),
+                format_f64(m.step_wall_s),
+            ])?;
+        }
+        w.flush()?;
+        Ok(path)
+    }
+
+    /// Accumulate a summary row (written by `finish`).
+    pub fn add_summary(&mut self, label: &str, fields: Vec<(&str, Json)>) {
+        self.rows.push((
+            label.to_string(),
+            fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        ));
+    }
+
+    /// Record a run end-to-end: CSV series + summary row.
+    pub fn record_run(&mut self, label: &str, res: &RunResult) {
+        let _ = self.write_series(label, &res.metrics);
+        let bans: Vec<Json> = res
+            .ban_events
+            .iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("step", Json::num(b.step as f64)),
+                    ("target", Json::num(b.target as f64)),
+                    ("reason", Json::str(b.reason.name())),
+                ])
+            })
+            .collect();
+        self.add_summary(
+            label,
+            vec![
+                ("final_metric", Json::num(res.final_metric)),
+                ("steps_done", Json::num(res.steps_done as f64)),
+                ("bans", Json::Arr(bans)),
+                ("recomputes", Json::num(res.recomputes as f64)),
+                (
+                    "max_peer_bytes",
+                    Json::num(res.peer_bytes.iter().copied().max().unwrap_or(0) as f64),
+                ),
+            ],
+        );
+    }
+
+    /// Write `<name>_summary.json` and return its path.
+    pub fn finish(&self) -> std::io::Result<PathBuf> {
+        let path = self.dir.join(format!("{}_summary.json", self.name));
+        let obj = Json::Obj(
+            self.rows
+                .iter()
+                .map(|(label, fields)| {
+                    (
+                        label.clone(),
+                        Json::Obj(fields.iter().map(|(k, v)| (k.clone(), v.clone())).collect()),
+                    )
+                })
+                .collect(),
+        );
+        std::fs::create_dir_all(&self.dir)?;
+        std::fs::write(&path, obj.to_string_pretty())?;
+        Ok(path)
+    }
+}
+
+/// results/ at the workspace root (overridable for tests).
+pub fn results_dir() -> PathBuf {
+    std::env::var("BTARD_RESULTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| Path::new("results").to_path_buf())
+}
+
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .collect()
+}
+
+/// Compact console table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{:<width$}", c, width = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["attack", "acc"]);
+        t.row(vec!["sign_flip".into(), "0.91".into()]);
+        let s = t.render();
+        assert!(s.contains("attack"));
+        assert!(s.contains("sign_flip"));
+        assert!(s.lines().count() == 3);
+    }
+
+    #[test]
+    fn recorder_writes_files() {
+        let tmp = std::env::temp_dir().join("btard_rec_test");
+        std::env::set_var("BTARD_RESULTS_DIR", &tmp);
+        let mut rec = Recorder::new("unit");
+        rec.add_summary("case1", vec![("x", Json::num(1.0))]);
+        let path = rec.finish().unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("case1"));
+        std::env::remove_var("BTARD_RESULTS_DIR");
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

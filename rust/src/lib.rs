@@ -1,0 +1,21 @@
+//! BTARD: Byzantine-Tolerant All-Reduce for secure distributed training.
+//!
+//! Reproduction of *Secure Distributed Training at Scale* (Gorbunov,
+//! Borzunov, Diskin, Ryabinin — ICML 2022) as a three-layer
+//! Rust + JAX + Pallas stack. See DESIGN.md for the system map.
+//!
+//! Layer 3 (this crate) owns the protocol: Butterfly All-Reduce with
+//! CenteredClip aggregation, hash commitments, a commit-reveal multi-party
+//! RNG, randomly drawn validators, ACCUSE/ELIMINATE ban protocols and the
+//! training loops. Layers 1–2 (python/) are AOT-compiled to HLO text and
+//! executed from `runtime` via PJRT; python never runs on the step path.
+
+pub mod coordinator;
+pub mod crypto;
+pub mod data;
+pub mod harness;
+pub mod model;
+pub mod mprng;
+pub mod net;
+pub mod runtime;
+pub mod util;

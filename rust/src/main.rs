@@ -1,0 +1,250 @@
+//! `btard` — CLI launcher for the BTARD secure distributed training
+//! framework. Subcommands:
+//!
+//!   train       run BTARD-SGD on a built-in workload (mlp | quadratic)
+//!   ps          run a trusted-PS baseline with a chosen aggregator
+//!   inspect     list the AOT artifacts in the manifest
+//!   selftest    quick end-to-end smoke test (no artifacts needed)
+//!
+//! Examples:
+//!   btard train --workload mlp --peers 16 --byzantine 7 \
+//!         --attack sign_flip:1000 --attack-start 100 --tau 1 --steps 500
+//!   btard ps --aggregator coord_median --steps 300
+//!   btard inspect --artifacts artifacts
+
+use btard::coordinator::attacks::{AttackKind, AttackSchedule};
+use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::optimizer::LrSchedule;
+use btard::coordinator::training::{run_btard, run_ps, OptSpec, PsConfig, RunConfig};
+use btard::coordinator::{Aggregator, ProtocolConfig};
+use btard::data::synth_vision::SynthVision;
+use btard::harness::{Recorder, Table};
+use btard::model::mlp::MlpModel;
+use btard::model::synthetic::Quadratic;
+use btard::model::GradientSource;
+use btard::util::cli::Args;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "ps" => cmd_ps(&args),
+        "inspect" => cmd_inspect(&args),
+        "selftest" => cmd_selftest(),
+        _ => {
+            println!(
+                "btard — Byzantine-Tolerant All-Reduce (ICML 2022 reproduction)\n\n\
+                 usage: btard <train|ps|inspect|selftest> [flags]\n\
+                 common flags:\n\
+                 \x20 --workload mlp|quadratic    training objective\n\
+                 \x20 --peers N --byzantine B     cluster composition\n\
+                 \x20 --attack KIND[:ARG]         sign_flip, random_direction, label_flip,\n\
+                 \x20                             delayed_gradient, ipm, alie\n\
+                 \x20 --attack-start S            first attacking step\n\
+                 \x20 --tau T | --tau inf         CenteredClip clipping level\n\
+                 \x20 --validators M --steps K --lr LR --seed S\n\
+                 \x20 --aggregator NAME           (ps) mean, coord_median, geo_median,\n\
+                 \x20                             trimmed_mean, krum, centered_clip"
+            );
+        }
+    }
+}
+
+fn build_source(args: &Args) -> Arc<dyn GradientSource> {
+    match args.get_str("workload", "mlp") {
+        "quadratic" => Arc::new(Quadratic::new(
+            args.get_usize("dim", 128),
+            args.get_f32("mu", 0.1),
+            args.get_f32("L", 5.0),
+            args.get_f32("sigma", 1.0),
+            args.get_u64("seed", 0),
+        )),
+        _ => {
+            let ds = Arc::new(SynthVision::new(args.get_u64("seed", 0), 64, 10));
+            Arc::new(MlpModel::new(ds, args.get_usize("hidden", 64), args.get_usize("batch", 8)))
+        }
+    }
+}
+
+fn parse_tau(args: &Args) -> TauPolicy {
+    match args.get_str("tau", "1") {
+        "inf" | "infinite" => TauPolicy::Infinite,
+        s => TauPolicy::Fixed(s.parse().expect("--tau expects a float or 'inf'")),
+    }
+}
+
+fn parse_attack(args: &Args) -> Option<(AttackKind, AttackSchedule)> {
+    let name = args.get("attack")?;
+    let kind =
+        AttackKind::from_name(name).unwrap_or_else(|| panic!("unknown attack '{name}'"));
+    Some((kind, AttackSchedule::from_step(args.get_u64("attack-start", 100))))
+}
+
+fn cmd_train(args: &Args) {
+    // --config <file.json> takes precedence over individual flags.
+    if let Some(path) = args.get("config") {
+        let cfg = btard::coordinator::runconfig::load_run_config(path)
+            .unwrap_or_else(|e| panic!("{e:#}"));
+        let source = build_source(args);
+        run_and_report(cfg, source);
+        return;
+    }
+    let n = args.get_usize("peers", 16);
+    let b = args.get_usize("byzantine", 0);
+    let steps = args.get_u64("steps", 300);
+    let source = build_source(args);
+    let cfg = RunConfig {
+        n_peers: n,
+        byzantine: ((n - b)..n).collect(),
+        attack: parse_attack(args),
+        aggregation_attack: args.get_bool("aggregation-attack"),
+        steps,
+        protocol: ProtocolConfig {
+            n0: n,
+            tau: parse_tau(args),
+            m_validators: args.get_usize("validators", 1),
+            delta_max: args.get_f32("delta-max", 10.0),
+            global_seed: args.get_u64("seed", 0),
+            ..ProtocolConfig::default()
+        },
+        opt: OptSpec::Sgd {
+            schedule: LrSchedule::Cosine {
+                base: args.get_f32("lr", 0.5),
+                floor: args.get_f32("lr-floor", 0.01),
+                total_steps: steps,
+            },
+            momentum: 0.9,
+            nesterov: true,
+        },
+        clip_lambda: args.get("clip-lambda").map(|s| s.parse().expect("bad --clip-lambda")),
+        eval_every: args.get_u64("eval-every", 20),
+        seed: args.get_u64("seed", 0),
+        verify_signatures: !args.get_bool("no-sigs"),
+        gossip_fanout: 8,
+        segments: vec![],
+    };
+    run_and_report(cfg, source);
+}
+
+fn run_and_report(cfg: RunConfig, source: Arc<dyn GradientSource>) {
+    eprintln!(
+        "btard train: {} peers ({} byzantine), {} steps, attack={:?}",
+        cfg.n_peers,
+        cfg.byzantine.len(),
+        cfg.steps,
+        cfg.attack.map(|(k, _)| k.name())
+    );
+    let t0 = std::time::Instant::now();
+    let res = run_btard(&cfg, source);
+    let wall = t0.elapsed().as_secs_f64();
+    let mut rec = Recorder::new("cli_train");
+    rec.record_run("run", &res);
+    let summary = rec.finish().expect("write summary");
+    let mut table = Table::new(&["step", "loss", "metric", "bans"]);
+    for m in res.metrics.iter().filter(|m| !m.metric.is_nan()) {
+        table.row(vec![
+            m.step.to_string(),
+            format!("{:.4}", m.loss),
+            format!("{:.4}", m.metric),
+            m.banned_now.iter().map(|p| p.to_string()).collect::<Vec<_>>().join(";"),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "final metric: {:.4} | bans: {} | steps done: {} | wall: {:.1}s | summary: {}",
+        res.final_metric,
+        res.ban_events.len(),
+        res.steps_done,
+        wall,
+        summary.display()
+    );
+}
+
+fn cmd_ps(args: &Args) {
+    let n = args.get_usize("peers", 16);
+    let b = args.get_usize("byzantine", 0);
+    let source = build_source(args);
+    let cfg = PsConfig {
+        n_peers: n,
+        byzantine: ((n - b)..n).collect(),
+        attack: parse_attack(args),
+        aggregator: Aggregator::from_name(args.get_str("aggregator", "centered_clip"))
+            .expect("unknown --aggregator"),
+        tau: args.get_f32("tau", 1.0),
+        steps: args.get_u64("steps", 300),
+        opt: OptSpec::Sgd {
+            schedule: LrSchedule::Constant(args.get_f32("lr", 0.5)),
+            momentum: 0.9,
+            nesterov: true,
+        },
+        eval_every: args.get_u64("eval-every", 20),
+        seed: args.get_u64("seed", 0),
+    };
+    let res = run_ps(&cfg, source);
+    println!(
+        "ps baseline ({}) final metric: {:.4}",
+        cfg.aggregator.name(),
+        res.final_metric
+    );
+}
+
+fn cmd_inspect(args: &Args) {
+    let dir = args.get_str("artifacts", "artifacts");
+    match btard::runtime::Manifest::load(dir) {
+        Ok(m) => {
+            let mut table = Table::new(&["artifact", "file", "inputs", "outputs", "param_dim"]);
+            for a in m.artifacts.values() {
+                table.row(vec![
+                    a.name.clone(),
+                    a.file.display().to_string(),
+                    format!("{:?}", a.inputs),
+                    format!("{:?}", a.outputs),
+                    a.attrs
+                        .get("param_dim")
+                        .map(|v| (*v as usize).to_string())
+                        .unwrap_or_default(),
+                ]);
+            }
+            println!("{}", table.render());
+        }
+        Err(e) => {
+            eprintln!("cannot load manifest from '{dir}': {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_selftest() {
+    println!("selftest: 4 peers, 1 sign-flipper, quadratic objective, 150 steps");
+    let source = Arc::new(Quadratic::new(64, 0.2, 4.0, 0.5, 7));
+    let mut cfg = RunConfig::quick(4, 150);
+    cfg.byzantine = vec![3];
+    cfg.attack = Some((
+        AttackKind::SignFlip { lambda: 1000.0 },
+        AttackSchedule::from_step(10),
+    ));
+    cfg.protocol.tau = TauPolicy::Fixed(2.0);
+    cfg.opt = OptSpec::Sgd {
+        schedule: LrSchedule::Constant(0.1),
+        momentum: 0.0,
+        nesterov: false,
+    };
+    let res = run_btard(&cfg, source);
+    println!(
+        "  final suboptimality: {:.5} (want < 1.0)\n  bans: {:?}",
+        res.final_metric,
+        res.ban_events
+            .iter()
+            .map(|b| format!("peer {} @ step {} ({})", b.target, b.step, b.reason.name()))
+            .collect::<Vec<_>>()
+    );
+    let attacker_banned = res.ban_events.iter().any(|b| b.target == 3);
+    if attacker_banned && res.final_metric < 1.0 {
+        println!("selftest OK");
+    } else {
+        println!("selftest FAILED");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,276 @@
+//! Hand-written MLP classifier (forward + backward in Rust).
+//!
+//! This is the Fig. 3 workload (the ResNet-18/CIFAR-10 stand-in, see
+//! DESIGN.md §2). Keeping a pure-Rust gradient path alongside the PJRT
+//! artifact path serves two purposes: the protocol benches don't pay XLA
+//! dispatch overhead for a ~10k-parameter model, and the integration
+//! tests cross-check the two gradient implementations against each other.
+//!
+//! Architecture: x → W1 → tanh → W2 → softmax cross-entropy.
+//! Flat parameter layout: [W1 (f×h), b1 (h), W2 (h×c), b2 (c)].
+
+use super::GradientSource;
+use crate::data::synth_vision::SynthVision;
+use crate::data::Batch;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+#[derive(Clone)]
+pub struct MlpModel {
+    pub features: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub batch_size: usize,
+    pub dataset: Arc<SynthVision>,
+    eval_batch: Arc<Batch>,
+}
+
+impl MlpModel {
+    pub fn new(dataset: Arc<SynthVision>, hidden: usize, batch_size: usize) -> MlpModel {
+        let eval_batch = Arc::new(dataset.eval_set(512));
+        MlpModel {
+            features: dataset.features,
+            hidden,
+            classes: dataset.classes,
+            batch_size,
+            dataset,
+            eval_batch,
+        }
+    }
+
+    pub fn param_dim(&self) -> usize {
+        self.features * self.hidden + self.hidden + self.hidden * self.classes + self.classes
+    }
+
+    fn split_params<'a>(&self, p: &'a [f32]) -> (&'a [f32], &'a [f32], &'a [f32], &'a [f32]) {
+        let (f, h, c) = (self.features, self.hidden, self.classes);
+        let w1 = &p[0..f * h];
+        let b1 = &p[f * h..f * h + h];
+        let w2 = &p[f * h + h..f * h + h + h * c];
+        let b2 = &p[f * h + h + h * c..];
+        (w1, b1, w2, b2)
+    }
+
+    /// Forward pass for a batch; returns (loss, hidden activations,
+    /// softmax probs). Probabilities are per-row [classes].
+    fn forward(&self, p: &[f32], batch: &Batch) -> (f32, Vec<f32>, Vec<f32>) {
+        let (w1, b1, w2, b2) = self.split_params(p);
+        let (f, h, c) = (self.features, self.hidden, self.classes);
+        let n = batch.batch;
+        let mut hid = vec![0.0f32; n * h];
+        let mut probs = vec![0.0f32; n * c];
+        let mut loss = 0.0f64;
+        for i in 0..n {
+            let x = batch.row(i);
+            // Hidden layer: tanh(x W1 + b1)
+            for j in 0..h {
+                let mut acc = b1[j];
+                for k in 0..f {
+                    acc += x[k] * w1[k * h + j];
+                }
+                hid[i * h + j] = acc.tanh();
+            }
+            // Output logits + stable softmax
+            let row = &mut probs[i * c..(i + 1) * c];
+            for j in 0..c {
+                let mut acc = b2[j];
+                for k in 0..h {
+                    acc += hid[i * h + k] * w2[k * c + j];
+                }
+                row[j] = acc;
+            }
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - max).exp();
+                denom += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= denom;
+            }
+            let y = batch.y[i] as usize;
+            loss -= (row[y].max(1e-12) as f64).ln();
+        }
+        ((loss / n as f64) as f32, hid, probs)
+    }
+
+    /// Full loss+grad on an explicit batch (shared by GradientSource and
+    /// the label-flipping attack, which substitutes poisoned labels).
+    pub fn loss_and_grad_on(&self, p: &[f32], batch: &Batch) -> (f32, Vec<f32>) {
+        let (loss, hid, probs) = self.forward(p, batch);
+        let (w1_off, b1_off, w2_off, b2_off) = {
+            let (f, h, c) = (self.features, self.hidden, self.classes);
+            (0usize, f * h, f * h + h, f * h + h + h * c)
+        };
+        let (f, h, c) = (self.features, self.hidden, self.classes);
+        let (_, _, w2, _) = self.split_params(p);
+        let n = batch.batch;
+        let mut grad = vec![0.0f32; self.param_dim()];
+        let inv_n = 1.0 / n as f32;
+        let mut dhid = vec![0.0f32; h];
+        for i in 0..n {
+            let x = batch.row(i);
+            let y = batch.y[i] as usize;
+            // dlogits = probs - onehot(y)
+            // Accumulate grads for W2, b2 and backprop into hidden.
+            dhid.iter_mut().for_each(|v| *v = 0.0);
+            for j in 0..c {
+                let d = (probs[i * c + j] - if j == y { 1.0 } else { 0.0 }) * inv_n;
+                grad[b2_off + j] += d;
+                for k in 0..h {
+                    grad[w2_off + k * c + j] += hid[i * h + k] * d;
+                    dhid[k] += w2[k * c + j] * d;
+                }
+            }
+            // Through tanh: dpre = dhid * (1 - hid^2)
+            for k in 0..h {
+                let a = hid[i * h + k];
+                let dpre = dhid[k] * (1.0 - a * a);
+                grad[b1_off + k] += dpre;
+                for q in 0..f {
+                    grad[w1_off + q * h + k] += x[q] * dpre;
+                }
+            }
+        }
+        (loss, grad)
+    }
+
+    /// Accuracy on an explicit batch.
+    pub fn accuracy_on(&self, p: &[f32], batch: &Batch) -> f64 {
+        let (_, _, probs) = self.forward(p, batch);
+        let c = self.classes;
+        let mut correct = 0usize;
+        for i in 0..batch.batch {
+            let row = &probs[i * c..(i + 1) * c];
+            let mut best = 0usize;
+            for j in 1..c {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            if best == batch.y[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / batch.batch as f64
+    }
+}
+
+impl GradientSource for MlpModel {
+    fn dim(&self) -> usize {
+        self.param_dim()
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed ^ 0x11A9);
+        let mut p = vec![0.0f32; self.param_dim()];
+        let (f, h, c) = (self.features, self.hidden, self.classes);
+        // Xavier-ish init per layer; biases zero.
+        let w1_scale = (1.0 / f as f32).sqrt();
+        let w2_scale = (1.0 / h as f32).sqrt();
+        for v in p[0..f * h].iter_mut() {
+            *v = rng.gaussian_f32() * w1_scale;
+        }
+        let w2_start = f * h + h;
+        for v in p[w2_start..w2_start + h * c].iter_mut() {
+            *v = rng.gaussian_f32() * w2_scale;
+        }
+        p
+    }
+
+    fn loss_and_grad(&self, params: &[f32], batch_seed: u64) -> (f32, Vec<f32>) {
+        let batch = self.dataset.batch(batch_seed, self.batch_size);
+        self.loss_and_grad_on(params, &batch)
+    }
+
+    fn eval(&self, params: &[f32]) -> f64 {
+        self.accuracy_on(params, &self.eval_batch)
+    }
+
+    fn loss_and_grad_label_flipped(
+        &self,
+        params: &[f32],
+        batch_seed: u64,
+    ) -> Option<(f32, Vec<f32>)> {
+        let mut batch = self.dataset.batch(batch_seed, self.batch_size);
+        let c = self.classes as u32;
+        for y in batch.y.iter_mut() {
+            *y = c - 1 - *y; // paper: l → 9−l for CIFAR-10
+        }
+        Some(self.loss_and_grad_on(params, &batch))
+    }
+
+    fn metric_name(&self) -> &'static str {
+        "test_accuracy"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::check_grad;
+
+    fn small_model() -> MlpModel {
+        let ds = Arc::new(SynthVision::new(7, 12, 4));
+        MlpModel::new(ds, 8, 16)
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let m = small_model();
+        let p = m.init_params(1);
+        let d = m.param_dim();
+        // Spot-check coordinates in every parameter block.
+        let coords = [0, 5, 12 * 8 - 1, 12 * 8 + 3, 12 * 8 + 8 + 7, d - 1];
+        check_grad(&m, &p, 3, &coords, 0.05);
+    }
+
+    #[test]
+    fn deterministic_gradients() {
+        let m = small_model();
+        let p = m.init_params(0);
+        let (l1, g1) = m.loss_and_grad(&p, 99);
+        let (l2, g2) = m.loss_and_grad(&p, 99);
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn sgd_learns_the_task() {
+        let ds = Arc::new(SynthVision::new(11, 16, 4));
+        let m = MlpModel::new(ds, 24, 32);
+        let mut p = m.init_params(0);
+        let acc0 = m.eval(&p);
+        for s in 0..400 {
+            let (_, g) = m.loss_and_grad(&p, s);
+            for i in 0..p.len() {
+                p[i] -= 0.5 * g[i];
+            }
+        }
+        let acc1 = m.eval(&p);
+        assert!(acc1 > 0.7, "acc {acc0} -> {acc1}");
+        assert!(acc1 > acc0 + 0.2);
+    }
+
+    #[test]
+    fn loss_decreases() {
+        let m = small_model();
+        let mut p = m.init_params(2);
+        let (l0, _) = m.loss_and_grad(&p, 0);
+        for s in 0..100 {
+            let (_, g) = m.loss_and_grad(&p, s);
+            for i in 0..p.len() {
+                p[i] -= 0.3 * g[i];
+            }
+        }
+        let (l1, _) = m.loss_and_grad(&p, 0);
+        assert!(l1 < l0 * 0.8, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn param_dim_layout() {
+        let m = small_model();
+        assert_eq!(m.param_dim(), 12 * 8 + 8 + 8 * 4 + 4);
+        assert_eq!(m.init_params(0).len(), m.param_dim());
+    }
+}

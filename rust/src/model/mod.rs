@@ -1,0 +1,66 @@
+//! Gradient sources: every trainable objective implements one trait so
+//! the coordinator is agnostic to whether gradients come from a
+//! hand-written Rust model, a synthetic objective, or the AOT-compiled
+//! JAX model executed through PJRT.
+
+pub mod mlp;
+pub mod pjrt_model;
+pub mod synthetic;
+
+/// A differentiable objective with seed-deterministic stochastic
+/// gradients. Determinism in `batch_seed` is what lets validators
+/// recompute (and hash-check) another peer's gradient.
+pub trait GradientSource: Send + Sync {
+    /// Number of parameters d.
+    fn dim(&self) -> usize;
+
+    /// Initial parameter vector (deterministic).
+    fn init_params(&self, seed: u64) -> Vec<f32>;
+
+    /// Stochastic loss and gradient at `params` for the minibatch
+    /// identified by `batch_seed`.
+    fn loss_and_grad(&self, params: &[f32], batch_seed: u64) -> (f32, Vec<f32>);
+
+    /// Evaluation metric on held-out data (accuracy for classifiers,
+    /// negative loss for LMs, distance-to-optimum for synthetics).
+    fn eval(&self, params: &[f32]) -> f64;
+
+    /// Gradient computed on a label-poisoned batch (the LABEL FLIPPING
+    /// attack). None for objectives without labels — the attack then
+    /// degrades to honest behaviour.
+    fn loss_and_grad_label_flipped(
+        &self,
+        _params: &[f32],
+        _batch_seed: u64,
+    ) -> Option<(f32, Vec<f32>)> {
+        None
+    }
+
+    /// Human-readable metric name for logs/CSV headers.
+    fn metric_name(&self) -> &'static str {
+        "metric"
+    }
+}
+
+/// Numerical gradient check helper shared by model tests: central
+/// differences on a few coordinates.
+#[cfg(test)]
+pub fn check_grad<S: GradientSource>(src: &S, params: &[f32], seed: u64, coords: &[usize], tol: f32) {
+    let (_, grad) = src.loss_and_grad(params, seed);
+    let eps = 1e-3f32;
+    for &c in coords {
+        let mut p_plus = params.to_vec();
+        p_plus[c] += eps;
+        let (l_plus, _) = src.loss_and_grad(&p_plus, seed);
+        let mut p_minus = params.to_vec();
+        p_minus[c] -= eps;
+        let (l_minus, _) = src.loss_and_grad(&p_minus, seed);
+        let numeric = (l_plus - l_minus) / (2.0 * eps);
+        let analytic = grad[c];
+        let denom = numeric.abs().max(analytic.abs()).max(1e-3);
+        assert!(
+            (numeric - analytic).abs() / denom < tol,
+            "coord {c}: numeric {numeric} vs analytic {analytic}"
+        );
+    }
+}

@@ -1,0 +1,164 @@
+//! GradientSource backed by an AOT-compiled JAX model artifact.
+//!
+//! The artifact computes `(loss, grad) = f(params, batch_x, batch_y)`
+//! with static shapes; batches are generated in Rust from the public
+//! seed (so validators can recompute them bit-exactly) and fed to the
+//! executable. Parameter initialization uses the per-segment init scales
+//! recorded in the manifest, so Rust never needs to re-trace the model.
+
+use super::GradientSource;
+use crate::data::synth_text::SynthText;
+use crate::data::synth_vision::SynthVision;
+use crate::runtime::{ArtifactMeta, PjrtHandle};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Which dataset feeds the artifact.
+pub enum PjrtData {
+    Vision(Arc<SynthVision>),
+    Text(Arc<SynthText>),
+}
+
+pub struct PjrtModel {
+    pub handle: Arc<PjrtHandle>,
+    pub artifact: String,
+    pub meta: ArtifactMeta,
+    pub data: PjrtData,
+    pub param_dim: usize,
+    pub batch: usize,
+    /// Sequence length (LM artifacts only).
+    pub seq_len: usize,
+    /// Eval batch seeds (fixed, disjoint from training by construction).
+    eval_seeds: Vec<u64>,
+}
+
+impl PjrtModel {
+    pub fn new(
+        handle: Arc<PjrtHandle>,
+        meta: ArtifactMeta,
+        data: PjrtData,
+    ) -> Result<PjrtModel> {
+        let param_dim = meta.attr_usize("param_dim")?;
+        let batch = meta.attr_usize("batch")?;
+        let seq_len = meta.attrs.get("seq_len").map(|&v| v as usize).unwrap_or(0);
+        Ok(PjrtModel {
+            artifact: meta.name.clone(),
+            handle,
+            meta,
+            data,
+            param_dim,
+            batch,
+            seq_len,
+            eval_seeds: (0..4).map(|i| 0xEAA1_0000 + i).collect(),
+        })
+    }
+
+    /// Pack (x, y) inputs for one batch seed.
+    fn batch_inputs(&self, batch_seed: u64) -> Vec<(Vec<f32>, Vec<usize>)> {
+        match &self.data {
+            PjrtData::Vision(ds) => {
+                let b = ds.batch(batch_seed, self.batch);
+                let y: Vec<f32> = b.y.iter().map(|&v| v as f32).collect();
+                vec![
+                    (b.x, vec![self.batch, ds.features]),
+                    (y, vec![self.batch]),
+                ]
+            }
+            PjrtData::Text(ds) => {
+                let b = ds.batch(batch_seed, self.batch, self.seq_len);
+                let toks: Vec<f32> = b.tokens.iter().map(|&t| t as f32).collect();
+                vec![(toks, vec![self.batch, self.seq_len + 1])]
+            }
+        }
+    }
+
+    fn run(&self, params: &[f32], batch_seed: u64) -> Result<(f32, Vec<f32>)> {
+        let mut inputs = vec![(params.to_vec(), vec![self.param_dim])];
+        inputs.extend(self.batch_inputs(batch_seed));
+        let out = self.handle.run(&self.artifact, inputs)?;
+        let loss = out[0][0];
+        let grad = out[1].clone();
+        Ok((loss, grad))
+    }
+
+    /// Mean eval loss over the fixed eval seeds.
+    pub fn eval_loss(&self, params: &[f32]) -> f64 {
+        let mut total = 0.0f64;
+        for &s in &self.eval_seeds {
+            match self.run(params, s) {
+                Ok((loss, _)) => total += loss as f64,
+                Err(e) => panic!("pjrt eval failed: {e:?}"),
+            }
+        }
+        total / self.eval_seeds.len() as f64
+    }
+}
+
+impl GradientSource for PjrtModel {
+    fn dim(&self) -> usize {
+        self.param_dim
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut p = vec![0.0f32; self.param_dim];
+        let mut rng = Rng::new(seed ^ 0xF1A7);
+        // Per-segment init: manifest attrs carry "init_scale_<segment>"
+        // falling back to 0.02 (transformer-style) when absent.
+        for seg in &self.meta.segments {
+            let scale = self
+                .meta
+                .attrs
+                .get(&format!("init_scale_{}", seg.name))
+                .copied()
+                .unwrap_or(0.02) as f32;
+            rng.fill_gaussian(&mut p[seg.offset..seg.offset + seg.len], scale);
+        }
+        if self.meta.segments.is_empty() {
+            rng.fill_gaussian(&mut p, 0.02);
+        }
+        p
+    }
+
+    fn loss_and_grad(&self, params: &[f32], batch_seed: u64) -> (f32, Vec<f32>) {
+        match self.run(params, batch_seed) {
+            Ok(r) => r,
+            Err(e) => panic!("pjrt loss_and_grad failed: {e:?}"),
+        }
+    }
+
+    fn eval(&self, params: &[f32]) -> f64 {
+        self.eval_loss(params)
+    }
+
+    fn loss_and_grad_label_flipped(
+        &self,
+        params: &[f32],
+        batch_seed: u64,
+    ) -> Option<(f32, Vec<f32>)> {
+        let mut inputs = vec![(params.to_vec(), vec![self.param_dim])];
+        match &self.data {
+            PjrtData::Vision(ds) => {
+                let b = ds.batch(batch_seed, self.batch);
+                let c = ds.classes as f32;
+                let y: Vec<f32> = b.y.iter().map(|&v| c - 1.0 - v as f32).collect();
+                inputs.push((b.x, vec![self.batch, ds.features]));
+                inputs.push((y, vec![self.batch]));
+            }
+            PjrtData::Text(ds) => {
+                // Flip every token t → V−1−t (poisons targets; inputs are
+                // necessarily poisoned too — documented in DESIGN.md).
+                let b = ds.batch(batch_seed, self.batch, self.seq_len);
+                let v = crate::data::synth_text::VOCAB as f32;
+                let toks: Vec<f32> = b.tokens.iter().map(|&t| v - 1.0 - t as f32).collect();
+                inputs.push((toks, vec![self.batch, self.seq_len + 1]));
+            }
+        }
+        let out = self.handle.run(&self.artifact, inputs).ok()?;
+        Some((out[0][0], out[1].clone()))
+    }
+
+    fn metric_name(&self) -> &'static str {
+        "eval_loss"
+    }
+}

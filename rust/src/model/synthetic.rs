@@ -1,0 +1,266 @@
+//! Synthetic objectives with known optima for the Table 1 / Table 2
+//! convergence-shape experiments: strongly convex and convex quadratics
+//! and a smooth non-convex objective. Stochastic gradients carry
+//! isotropic gaussian noise of variance σ², which satisfies Assumption
+//! 3.1 with the same σ (the per-subvector variance is s·σ²/d — the
+//! isotropic case discussed in §E.3.1).
+
+use super::GradientSource;
+use crate::util::rng::Rng;
+
+/// f(x) = ½ Σ aᵢ xᵢ² − Σ bᵢ xᵢ, with spectrum aᵢ ∈ [µ, L] log-spaced.
+/// Optimum x*ᵢ = bᵢ/aᵢ (for µ > 0). `eval` returns f(x) − f(x*).
+pub struct Quadratic {
+    pub dim: usize,
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    pub sigma: f32,
+    pub mu: f32,
+    pub l_smooth: f32,
+    opt: Vec<f32>,
+    f_opt: f64,
+}
+
+impl Quadratic {
+    pub fn new(dim: usize, mu: f32, l_smooth: f32, sigma: f32, seed: u64) -> Quadratic {
+        assert!(mu >= 0.0 && l_smooth >= mu);
+        let mut rng = Rng::new(seed ^ 0x0BAD_CAFE);
+        let mut a = vec![0.0f32; dim];
+        for (i, ai) in a.iter_mut().enumerate() {
+            if dim == 1 {
+                *ai = l_smooth;
+            } else {
+                // Log-spaced spectrum from max(µ, εL) to L.
+                let lo = mu.max(l_smooth * 1e-3);
+                let t = i as f32 / (dim - 1) as f32;
+                *ai = lo * (l_smooth / lo).powf(t);
+            }
+        }
+        // Strong convexity µ = 0 case: flatten the lowest mode to 0 so
+        // the objective is merely convex along it.
+        if mu == 0.0 && dim > 1 {
+            a[0] = 0.0;
+        }
+        let mut b = vec![0.0f32; dim];
+        rng.fill_gaussian(&mut b, 1.0);
+        if mu == 0.0 && dim > 1 {
+            b[0] = 0.0; // keep the flat direction bounded below
+        }
+        let opt: Vec<f32> = a
+            .iter()
+            .zip(&b)
+            .map(|(&ai, &bi)| if ai > 0.0 { bi / ai } else { 0.0 })
+            .collect();
+        let f_opt = Self::f_static(&a, &b, &opt);
+        Quadratic { dim, a, b, sigma, mu, l_smooth, opt, f_opt }
+    }
+
+    fn f_static(a: &[f32], b: &[f32], x: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for i in 0..x.len() {
+            acc += 0.5 * a[i] as f64 * (x[i] as f64).powi(2) - b[i] as f64 * x[i] as f64;
+        }
+        acc
+    }
+
+    pub fn f(&self, x: &[f32]) -> f64 {
+        Self::f_static(&self.a, &self.b, x)
+    }
+
+    pub fn suboptimality(&self, x: &[f32]) -> f64 {
+        self.f(x) - self.f_opt
+    }
+
+    pub fn grad_norm(&self, x: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for i in 0..x.len() {
+            let g = self.a[i] as f64 * x[i] as f64 - self.b[i] as f64;
+            acc += g * g;
+        }
+        acc.sqrt()
+    }
+
+    pub fn optimum(&self) -> &[f32] {
+        &self.opt
+    }
+}
+
+impl GradientSource for Quadratic {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed ^ 0x1217);
+        let mut p = vec![0.0f32; self.dim];
+        rng.fill_gaussian(&mut p, 3.0);
+        p
+    }
+
+    fn loss_and_grad(&self, params: &[f32], batch_seed: u64) -> (f32, Vec<f32>) {
+        let mut rng = Rng::new(batch_seed);
+        let mut grad = vec![0.0f32; self.dim];
+        let noise_scale = self.sigma / (self.dim as f32).sqrt();
+        for i in 0..self.dim {
+            grad[i] = self.a[i] * params[i] - self.b[i] + rng.gaussian_f32() * noise_scale;
+        }
+        (self.f(params) as f32, grad)
+    }
+
+    fn eval(&self, params: &[f32]) -> f64 {
+        self.suboptimality(params)
+    }
+
+    fn metric_name(&self) -> &'static str {
+        "suboptimality"
+    }
+}
+
+/// Smooth non-convex objective: f(x) = Σ [ ¼ aᵢ xᵢ² + cᵢ cos(xᵢ) ].
+/// Gradient ∇ᵢf = ½ aᵢ xᵢ − cᵢ sin(xᵢ); stationary points are plentiful
+/// and the function is L-smooth with L = max(½aᵢ + cᵢ), uniformly lower
+/// bounded — the setting of Theorem E.2. `eval` reports ‖∇f‖².
+pub struct NonConvex {
+    pub dim: usize,
+    a: Vec<f32>,
+    c: Vec<f32>,
+    pub sigma: f32,
+}
+
+impl NonConvex {
+    pub fn new(dim: usize, sigma: f32, seed: u64) -> NonConvex {
+        let mut rng = Rng::new(seed ^ 0x0ACE);
+        let mut a = vec![0.0f32; dim];
+        let mut c = vec![0.0f32; dim];
+        for i in 0..dim {
+            a[i] = 0.5 + rng.next_f32();
+            c[i] = 0.5 + rng.next_f32() * 1.5;
+        }
+        NonConvex { dim, a, c, sigma }
+    }
+
+    pub fn f(&self, x: &[f32]) -> f64 {
+        (0..self.dim)
+            .map(|i| {
+                0.25 * self.a[i] as f64 * (x[i] as f64).powi(2)
+                    + self.c[i] as f64 * (x[i] as f64).cos()
+            })
+            .sum()
+    }
+
+    pub fn grad(&self, x: &[f32]) -> Vec<f32> {
+        (0..self.dim)
+            .map(|i| 0.5 * self.a[i] * x[i] - self.c[i] * x[i].sin())
+            .collect()
+    }
+
+    pub fn grad_norm_sq(&self, x: &[f32]) -> f64 {
+        self.grad(x).iter().map(|&g| (g as f64) * (g as f64)).sum()
+    }
+}
+
+impl GradientSource for NonConvex {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed ^ 0x2219);
+        let mut p = vec![0.0f32; self.dim];
+        rng.fill_gaussian(&mut p, 2.0);
+        p
+    }
+
+    fn loss_and_grad(&self, params: &[f32], batch_seed: u64) -> (f32, Vec<f32>) {
+        let mut rng = Rng::new(batch_seed);
+        let mut grad = self.grad(params);
+        let noise_scale = self.sigma / (self.dim as f32).sqrt();
+        for g in grad.iter_mut() {
+            *g += rng.gaussian_f32() * noise_scale;
+        }
+        (self.f(params) as f32, grad)
+    }
+
+    fn eval(&self, params: &[f32]) -> f64 {
+        self.grad_norm_sq(params)
+    }
+
+    fn metric_name(&self) -> &'static str {
+        "grad_norm_sq"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::check_grad;
+
+    #[test]
+    fn quadratic_optimum_is_stationary() {
+        let q = Quadratic::new(50, 0.1, 10.0, 0.0, 1);
+        assert!(q.grad_norm(q.optimum()) < 1e-4);
+        assert!(q.suboptimality(q.optimum()).abs() < 1e-9);
+        let x0 = q.init_params(0);
+        assert!(q.suboptimality(&x0) > 0.0);
+    }
+
+    #[test]
+    fn quadratic_gd_converges() {
+        let q = Quadratic::new(20, 0.5, 5.0, 0.0, 2);
+        let mut x = q.init_params(0);
+        let lr = 1.0 / q.l_smooth;
+        for s in 0..500 {
+            let (_, g) = q.loss_and_grad(&x, s);
+            for i in 0..x.len() {
+                x[i] -= lr * g[i];
+            }
+        }
+        assert!(q.suboptimality(&x) < 1e-6, "subopt {}", q.suboptimality(&x));
+    }
+
+    #[test]
+    fn noise_is_unbiased() {
+        let q = Quadratic::new(10, 0.1, 2.0, 1.0, 3);
+        let x = vec![1.0f32; 10];
+        let mut mean = vec![0.0f64; 10];
+        let reps = 2000;
+        for s in 0..reps {
+            let (_, g) = q.loss_and_grad(&x, 1000 + s);
+            for i in 0..10 {
+                mean[i] += g[i] as f64;
+            }
+        }
+        let (_, clean) = Quadratic::new(10, 0.1, 2.0, 0.0, 3).loss_and_grad(&x, 0);
+        for i in 0..10 {
+            let m = mean[i] / reps as f64;
+            assert!((m - clean[i] as f64).abs() < 0.05, "i={i} m={m} clean={}", clean[i]);
+        }
+    }
+
+    #[test]
+    fn nonconvex_grad_check() {
+        let nc = NonConvex::new(12, 0.0, 4);
+        let x = nc.init_params(1);
+        check_grad(&nc, &x, 0, &[0, 3, 7, 11], 0.05);
+    }
+
+    #[test]
+    fn nonconvex_sgd_decreases_grad_norm() {
+        let nc = NonConvex::new(30, 0.1, 5);
+        let mut x = nc.init_params(2);
+        let initial = nc.grad_norm_sq(&x);
+        for s in 0..800 {
+            let (_, g) = nc.loss_and_grad(&x, s);
+            for i in 0..x.len() {
+                x[i] -= 0.3 * g[i];
+            }
+        }
+        assert!(nc.grad_norm_sq(&x) < initial * 0.05);
+    }
+
+    #[test]
+    fn convex_case_has_flat_mode() {
+        let q = Quadratic::new(8, 0.0, 4.0, 0.0, 6);
+        assert_eq!(q.a[0], 0.0);
+    }
+}

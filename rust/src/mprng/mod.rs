@@ -1,0 +1,257 @@
+//! Multi-party random number generator (Appendix A.2).
+//!
+//! Generalized Blum (1983) coin tossing over the broadcast channel:
+//! every peer commits `h_i = H(i ‖ x_i ‖ s_i)` to a random string `x_i`
+//! with a large salt `s_i`, waits for all commitments, then reveals
+//! `(x_i, s_i)`. The output is `x_1 ⊕ … ⊕ x_n`. Commit-before-reveal
+//! means no peer can steer the result; peers whose reveal mismatches
+//! their commitment (or who abort) are identified as offenders and
+//! banned, which — per the paper — removes the residual abort-bias
+//! (Cleve 1986) because the protocol restarts without them.
+//!
+//! This module is pure protocol logic (bytes in / bytes out); the
+//! coordinator pumps the messages through the network layer, which keeps
+//! it independently testable.
+
+use crate::crypto::{commit, Digest, Opening};
+use crate::net::PeerId;
+use crate::util::rng::Rng;
+
+pub const TAG: &[u8] = b"btard-mprng";
+/// Output entropy per round (bytes of x_i).
+pub const OUT_LEN: usize = 32;
+
+/// One peer's view of an MPRNG round.
+pub struct MprngRound {
+    pub peer: PeerId,
+    x: [u8; OUT_LEN],
+    salt: [u8; 32],
+}
+
+impl MprngRound {
+    /// Start a round: draw local randomness from `rng`.
+    pub fn new(peer: PeerId, rng: &mut Rng) -> MprngRound {
+        let mut x = [0u8; OUT_LEN];
+        for b in x.iter_mut() {
+            *b = rng.next_u32() as u8;
+        }
+        let mut salt = [0u8; 32];
+        for b in salt.iter_mut() {
+            *b = rng.next_u32() as u8;
+        }
+        MprngRound { peer, x, salt }
+    }
+
+    /// Commitment message payload (phase 1 broadcast).
+    pub fn commitment(&self) -> Digest {
+        commit(TAG, self.peer as u64, &self.x, &self.salt)
+    }
+
+    /// Reveal message payload (phase 2 broadcast): x_i ‖ s_i.
+    pub fn reveal(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(OUT_LEN + 32);
+        out.extend_from_slice(&self.x);
+        out.extend_from_slice(&self.salt);
+        out
+    }
+}
+
+/// Parse a reveal payload.
+pub fn parse_reveal(payload: &[u8]) -> Option<Opening> {
+    if payload.len() != OUT_LEN + 32 {
+        return None;
+    }
+    let mut salt = [0u8; 32];
+    salt.copy_from_slice(&payload[OUT_LEN..]);
+    Some(Opening { payload: payload[..OUT_LEN].to_vec(), salt })
+}
+
+/// Outcome of combining a round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MprngOutcome {
+    /// Everyone opened correctly: the shared random output.
+    Ok([u8; OUT_LEN]),
+    /// These peers aborted or mismatched their commitment; they must be
+    /// banned and the round restarted without them.
+    Offenders(Vec<PeerId>),
+}
+
+/// Combine the collected commitments and reveals of the `live` peers.
+///
+/// `commitments[p]` / `reveals[p]` are `None` if peer p never sent that
+/// phase (an abort). Offenders are: missing commitment, missing reveal,
+/// malformed reveal, or reveal that does not match the commitment.
+pub fn combine(
+    live: &[PeerId],
+    commitments: &[Option<Digest>],
+    reveals: &[Option<Vec<u8>>],
+) -> MprngOutcome {
+    let mut offenders = Vec::new();
+    let mut acc = [0u8; OUT_LEN];
+    for &p in live {
+        let c = match commitments.get(p).and_then(|c| *c) {
+            Some(c) => c,
+            None => {
+                offenders.push(p);
+                continue;
+            }
+        };
+        let reveal = match reveals.get(p).and_then(|r| r.clone()) {
+            Some(r) => r,
+            None => {
+                offenders.push(p);
+                continue;
+            }
+        };
+        let opening = match parse_reveal(&reveal) {
+            Some(o) => o,
+            None => {
+                offenders.push(p);
+                continue;
+            }
+        };
+        if commit(TAG, p as u64, &opening.payload, &opening.salt) != c {
+            offenders.push(p);
+            continue;
+        }
+        for (a, b) in acc.iter_mut().zip(&opening.payload) {
+            *a ^= b;
+        }
+    }
+    if offenders.is_empty() {
+        MprngOutcome::Ok(acc)
+    } else {
+        MprngOutcome::Offenders(offenders)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn run_round(n: usize, seed: u64) -> ([u8; OUT_LEN], Vec<MprngRound>) {
+        let rounds: Vec<MprngRound> = (0..n)
+            .map(|p| MprngRound::new(p, &mut Rng::new(seed + p as u64)))
+            .collect();
+        let live: Vec<PeerId> = (0..n).collect();
+        let commitments: Vec<Option<Digest>> = rounds.iter().map(|r| Some(r.commitment())).collect();
+        let reveals: Vec<Option<Vec<u8>>> = rounds.iter().map(|r| Some(r.reveal())).collect();
+        match combine(&live, &commitments, &reveals) {
+            MprngOutcome::Ok(out) => (out, rounds),
+            MprngOutcome::Offenders(o) => panic!("unexpected offenders {o:?}"),
+        }
+    }
+
+    #[test]
+    fn honest_round_agrees() {
+        let (out, _) = run_round(8, 42);
+        let (out2, _) = run_round(8, 42);
+        assert_eq!(out, out2); // deterministic given same local draws
+        let (out3, _) = run_round(8, 43);
+        assert_ne!(out, out3);
+    }
+
+    #[test]
+    fn single_honest_peer_randomizes_output() {
+        // Even if all other peers collude on fixed strings, one honest
+        // peer's uniform x_i makes the XOR uniform: flipping the honest
+        // draw changes the output.
+        let n = 4;
+        let live: Vec<PeerId> = (0..n).collect();
+        let mk = |honest_seed: u64| {
+            let rounds: Vec<MprngRound> = (0..n)
+                .map(|p| {
+                    let seed = if p == 0 { honest_seed } else { 7 }; // colluders reuse randomness
+                    MprngRound::new(p, &mut Rng::new(seed))
+                })
+                .collect();
+            let cs: Vec<_> = rounds.iter().map(|r| Some(r.commitment())).collect();
+            let rs: Vec<_> = rounds.iter().map(|r| Some(r.reveal())).collect();
+            match combine(&live, &cs, &rs) {
+                MprngOutcome::Ok(o) => o,
+                _ => panic!(),
+            }
+        };
+        assert_ne!(mk(100), mk(101));
+    }
+
+    #[test]
+    fn abort_detected() {
+        let n = 3;
+        let rounds: Vec<MprngRound> =
+            (0..n).map(|p| MprngRound::new(p, &mut Rng::new(p as u64))).collect();
+        let live: Vec<PeerId> = (0..n).collect();
+        let cs: Vec<_> = rounds.iter().map(|r| Some(r.commitment())).collect();
+        let mut rs: Vec<_> = rounds.iter().map(|r| Some(r.reveal())).collect();
+        rs[1] = None; // peer 1 aborts after seeing others' reveals
+        assert_eq!(combine(&live, &cs, &rs), MprngOutcome::Offenders(vec![1]));
+    }
+
+    #[test]
+    fn mismatched_reveal_detected() {
+        let n = 3;
+        let rounds: Vec<MprngRound> =
+            (0..n).map(|p| MprngRound::new(p, &mut Rng::new(10 + p as u64))).collect();
+        let live: Vec<PeerId> = (0..n).collect();
+        let cs: Vec<_> = rounds.iter().map(|r| Some(r.commitment())).collect();
+        let mut rs: Vec<_> = rounds.iter().map(|r| Some(r.reveal())).collect();
+        // Peer 2 tries to steer the output after seeing everyone else.
+        let mut forged = rounds[2].reveal();
+        forged[0] ^= 0xFF;
+        rs[2] = Some(forged);
+        assert_eq!(combine(&live, &cs, &rs), MprngOutcome::Offenders(vec![2]));
+    }
+
+    #[test]
+    fn missing_commitment_detected() {
+        let n = 2;
+        let rounds: Vec<MprngRound> =
+            (0..n).map(|p| MprngRound::new(p, &mut Rng::new(20 + p as u64))).collect();
+        let live: Vec<PeerId> = (0..n).collect();
+        let mut cs: Vec<_> = rounds.iter().map(|r| Some(r.commitment())).collect();
+        cs[0] = None;
+        let rs: Vec<_> = rounds.iter().map(|r| Some(r.reveal())).collect();
+        assert_eq!(combine(&live, &cs, &rs), MprngOutcome::Offenders(vec![0]));
+    }
+
+    #[test]
+    fn restart_without_offenders_succeeds() {
+        let n = 4;
+        let rounds: Vec<MprngRound> =
+            (0..n).map(|p| MprngRound::new(p, &mut Rng::new(30 + p as u64))).collect();
+        let cs: Vec<_> = rounds.iter().map(|r| Some(r.commitment())).collect();
+        let mut rs: Vec<_> = rounds.iter().map(|r| Some(r.reveal())).collect();
+        rs[3] = None;
+        let live: Vec<PeerId> = (0..n).collect();
+        let off = match combine(&live, &cs, &rs) {
+            MprngOutcome::Offenders(o) => o,
+            _ => panic!(),
+        };
+        let live2: Vec<PeerId> = live.into_iter().filter(|p| !off.contains(p)).collect();
+        assert!(matches!(combine(&live2, &cs, &rs), MprngOutcome::Ok(_)));
+    }
+
+    #[test]
+    fn output_is_xor_prop() {
+        prop_check("xor structure", |rng, _| {
+            let n = 2 + rng.below_usize(6);
+            let rounds: Vec<MprngRound> =
+                (0..n).map(|p| MprngRound::new(p, &mut Rng::new(rng.next_u64()))).collect();
+            let live: Vec<PeerId> = (0..n).collect();
+            let cs: Vec<_> = rounds.iter().map(|r| Some(r.commitment())).collect();
+            let rs: Vec<_> = rounds.iter().map(|r| Some(r.reveal())).collect();
+            let out = match combine(&live, &cs, &rs) {
+                MprngOutcome::Ok(o) => o,
+                _ => panic!(),
+            };
+            let mut expect = [0u8; OUT_LEN];
+            for r in &rounds {
+                for (a, b) in expect.iter_mut().zip(&r.x) {
+                    *a ^= b;
+                }
+            }
+            assert_eq!(out, expect);
+        });
+    }
+}

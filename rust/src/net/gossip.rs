@@ -1,0 +1,130 @@
+//! Broadcast-channel consistency: equivocation detection.
+//!
+//! The paper (footnote 4) requires that a peer broadcasting two
+//! contradicting messages for the same protocol slot be banned, because
+//! different honest peers might otherwise act on different values. The
+//! transport guarantees every variant is eventually relayed to everyone;
+//! this tracker records the first digest seen per (peer, step, slot) and
+//! flags any signed contradiction as ban evidence.
+
+use std::collections::HashMap;
+
+use super::{Envelope, PeerId};
+use crate::crypto::sha256;
+
+/// Evidence that a peer equivocated: two distinct signed payloads for the
+/// same broadcast slot.
+#[derive(Clone, Debug)]
+pub struct Equivocation {
+    pub peer: PeerId,
+    pub step: u64,
+    pub slot: u32,
+}
+
+#[derive(Default)]
+pub struct EquivocationTracker {
+    seen: HashMap<(PeerId, u64, u32), [u8; 32]>,
+}
+
+impl EquivocationTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Observe a broadcast envelope. Returns equivocation evidence if this
+    /// sender already broadcast different bytes in the same slot.
+    pub fn observe(&mut self, env: &Envelope) -> Option<Equivocation> {
+        if !env.broadcast {
+            return None;
+        }
+        let digest = sha256(&env.payload);
+        let key = (env.from, env.step, env.slot);
+        match self.seen.get(&key) {
+            None => {
+                self.seen.insert(key, digest);
+                None
+            }
+            Some(prev) if *prev == digest => None,
+            Some(_) => Some(Equivocation { peer: env.from, step: env.step, slot: env.slot }),
+        }
+    }
+
+    /// Drop state from steps older than `horizon` (bounded memory).
+    pub fn gc(&mut self, current_step: u64, horizon: u64) {
+        self.seen
+            .retain(|&(_, step, _), _| step + horizon >= current_step);
+    }
+
+    pub fn len(&self) -> usize {
+        self.seen.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seen.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{slots, MsgClass};
+
+    fn env(from: PeerId, step: u64, slot: u32, payload: Vec<u8>) -> Envelope {
+        Envelope {
+            from,
+            step,
+            slot,
+            class: MsgClass::Commitment,
+            payload,
+            broadcast: true,
+            signature: None,
+        }
+    }
+
+    #[test]
+    fn consistent_rebroadcast_ok() {
+        let mut t = EquivocationTracker::new();
+        let e = env(1, 0, slots::GRAD_COMMIT, vec![1, 2]);
+        assert!(t.observe(&e).is_none());
+        assert!(t.observe(&e).is_none()); // duplicate relay is fine
+    }
+
+    #[test]
+    fn contradiction_detected() {
+        let mut t = EquivocationTracker::new();
+        assert!(t.observe(&env(1, 0, slots::GRAD_COMMIT, vec![1])).is_none());
+        let ev = t.observe(&env(1, 0, slots::GRAD_COMMIT, vec![2])).unwrap();
+        assert_eq!(ev.peer, 1);
+        assert_eq!(ev.slot, slots::GRAD_COMMIT);
+    }
+
+    #[test]
+    fn different_slots_independent() {
+        let mut t = EquivocationTracker::new();
+        assert!(t.observe(&env(1, 0, slots::sub(slots::GRAD_COMMIT, 0), vec![1])).is_none());
+        assert!(t.observe(&env(1, 0, slots::sub(slots::GRAD_COMMIT, 1), vec![2])).is_none());
+        assert!(t.observe(&env(1, 1, slots::sub(slots::GRAD_COMMIT, 0), vec![2])).is_none());
+        assert!(t.observe(&env(2, 0, slots::sub(slots::GRAD_COMMIT, 0), vec![2])).is_none());
+    }
+
+    #[test]
+    fn p2p_not_tracked() {
+        let mut t = EquivocationTracker::new();
+        let mut e = env(1, 0, slots::GRAD_PART, vec![1]);
+        e.broadcast = false;
+        assert!(t.observe(&e).is_none());
+        e.payload = vec![2];
+        assert!(t.observe(&e).is_none());
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn gc_bounds_memory() {
+        let mut t = EquivocationTracker::new();
+        for step in 0..100 {
+            t.observe(&env(1, step, slots::GRAD_COMMIT, vec![1]));
+        }
+        t.gc(100, 10);
+        assert!(t.len() <= 11);
+    }
+}

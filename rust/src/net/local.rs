@@ -1,0 +1,293 @@
+//! In-process cluster transport: one mailbox (mpsc channel) per peer.
+//!
+//! Honest peers use `broadcast` (same bytes to everyone). Byzantine peers
+//! may use `broadcast_split` to send contradicting payloads; the
+//! transport then mimics GossipSub relay by delivering *every* variant to
+//! *every* peer, so honest receivers observe the equivocation and ban the
+//! sender (the paper's eventual-consistency assumption, footnote 4).
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::{Envelope, MsgClass, PeerId, TrafficStats};
+use crate::crypto::{Mont, PublicKey, SecretKey};
+
+/// Shared, immutable cluster facts.
+pub struct ClusterInfo {
+    pub n_peers: usize,
+    pub public_keys: Vec<PublicKey>,
+    pub stats: TrafficStats,
+    /// Whether receivers verify envelope signatures (configurable: long
+    /// training benches can disable to isolate protocol numerics cost).
+    pub verify_signatures: bool,
+}
+
+/// A peer's endpoint: its mailbox plus senders to every other peer.
+pub struct PeerNet {
+    pub id: PeerId,
+    pub info: Arc<ClusterInfo>,
+    pub secret: SecretKey,
+    pub mont: Mont,
+    senders: Vec<Sender<Envelope>>,
+    mailbox: Receiver<Envelope>,
+    /// Buffered envelopes that arrived ahead of the phase we're waiting on.
+    pending: Vec<Envelope>,
+    /// Default receive timeout: elapsed ⇒ counterpart considered in
+    /// violation of the protocol (triggers ELIMINATE upstream).
+    pub timeout: Duration,
+}
+
+/// Build a fully connected in-process cluster.
+pub fn build_cluster(
+    n: usize,
+    key_seed: u64,
+    gossip_fanout: u64,
+    verify_signatures: bool,
+) -> Vec<PeerNet> {
+    let mont = Mont::new();
+    let secrets: Vec<SecretKey> = (0..n).map(|i| crate::crypto::keygen(&mont, key_seed + i as u64)).collect();
+    let public_keys: Vec<PublicKey> = secrets.iter().map(|s| s.public).collect();
+    let info = Arc::new(ClusterInfo {
+        n_peers: n,
+        public_keys,
+        stats: TrafficStats::new(n, gossip_fanout),
+        verify_signatures,
+    });
+    let mut senders = Vec::with_capacity(n);
+    let mut receivers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    receivers
+        .into_iter()
+        .zip(secrets)
+        .enumerate()
+        .map(|(id, (mailbox, secret))| PeerNet {
+            id,
+            info: info.clone(),
+            secret,
+            mont: mont.clone(),
+            senders: senders.clone(),
+            mailbox,
+            pending: Vec::new(),
+            timeout: Duration::from_secs(30),
+        })
+        .collect()
+}
+
+#[derive(Debug)]
+pub enum RecvError {
+    /// No matching message within the timeout.
+    Timeout,
+    /// All senders disconnected (cluster shut down).
+    Disconnected,
+}
+
+impl PeerNet {
+    fn make_envelope(
+        &self,
+        step: u64,
+        slot: u32,
+        class: MsgClass,
+        payload: Vec<u8>,
+        broadcast: bool,
+    ) -> Envelope {
+        let mut env = Envelope {
+            from: self.id,
+            step,
+            slot,
+            class,
+            payload,
+            broadcast,
+            signature: None,
+        };
+        env.sign_with(&self.mont, &self.secret);
+        env
+    }
+
+    /// Point-to-point send.
+    pub fn send(&self, to: PeerId, step: u64, slot: u32, class: MsgClass, payload: Vec<u8>) {
+        let bytes = payload.len();
+        let env = self.make_envelope(step, slot, class, payload, false);
+        self.info.stats.record_p2p(self.id, class, bytes);
+        // Ignore send errors: the receiver may have been banned/stopped.
+        let _ = self.senders[to].send(env);
+    }
+
+    /// Broadcast the same payload to all peers (including self, so the
+    /// sender's own bookkeeping sees the message exactly like others do).
+    pub fn broadcast(&self, step: u64, slot: u32, class: MsgClass, payload: Vec<u8>) {
+        let bytes = payload.len();
+        let env = self.make_envelope(step, slot, class, payload, true);
+        self.info.stats.record_broadcast(self.id, class, bytes);
+        for tx in &self.senders {
+            let _ = tx.send(env.clone());
+        }
+    }
+
+    /// Byzantine equivocation: send per-recipient payload variants. The
+    /// relay layer eventually delivers every distinct variant to every
+    /// peer; we model that by delivering all variants to everyone.
+    pub fn broadcast_split(
+        &self,
+        step: u64,
+        slot: u32,
+        class: MsgClass,
+        variants: Vec<(PeerId, Vec<u8>)>,
+    ) {
+        let mut distinct: Vec<Vec<u8>> = Vec::new();
+        for (_, p) in &variants {
+            if !distinct.contains(p) {
+                distinct.push(p.clone());
+            }
+        }
+        for payload in distinct {
+            let bytes = payload.len();
+            let env = self.make_envelope(step, slot, class, payload, true);
+            self.info.stats.record_broadcast(self.id, class, bytes);
+            for tx in &self.senders {
+                let _ = tx.send(env.clone());
+            }
+        }
+    }
+
+    /// Receive the next envelope matching `pred`, buffering mismatches.
+    /// Envelopes with invalid signatures are dropped (per the paper: a
+    /// receiver ignores unsigned/forged messages).
+    pub fn recv_match<F: Fn(&Envelope) -> bool>(&mut self, pred: F) -> Result<Envelope, RecvError> {
+        if let Some(pos) = self.pending.iter().position(|e| pred(e)) {
+            return Ok(self.pending.swap_remove(pos));
+        }
+        let deadline = std::time::Instant::now() + self.timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            if remaining.is_zero() {
+                return Err(RecvError::Timeout);
+            }
+            match self.mailbox.recv_timeout(remaining) {
+                Ok(env) => {
+                    if self.info.verify_signatures
+                        && !env.verify_with(&self.mont, &self.info.public_keys[env.from])
+                    {
+                        continue; // forged — drop silently
+                    }
+                    if pred(&env) {
+                        return Ok(env);
+                    }
+                    self.pending.push(env);
+                }
+                Err(RecvTimeoutError::Timeout) => return Err(RecvError::Timeout),
+                Err(RecvTimeoutError::Disconnected) => return Err(RecvError::Disconnected),
+            }
+        }
+    }
+
+    /// Drain any already-buffered or immediately available envelopes
+    /// matching `pred` without blocking.
+    pub fn drain_match<F: Fn(&Envelope) -> bool>(&mut self, pred: F) -> Vec<Envelope> {
+        let mut out = Vec::new();
+        let mut keep = Vec::new();
+        for e in self.pending.drain(..) {
+            if pred(&e) {
+                out.push(e);
+            } else {
+                keep.push(e);
+            }
+        }
+        self.pending = keep;
+        while let Ok(env) = self.mailbox.try_recv() {
+            if self.info.verify_signatures
+                && !env.verify_with(&self.mont, &self.info.public_keys[env.from])
+            {
+                continue;
+            }
+            if pred(&env) {
+                out.push(env);
+            } else {
+                self.pending.push(env);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::slots;
+
+    #[test]
+    fn p2p_roundtrip() {
+        let mut cluster = build_cluster(2, 100, 8, true);
+        let p1 = cluster.pop().unwrap();
+        let mut p0 = cluster.pop().unwrap();
+        p1.send(0, 1, slots::GRAD_PART, MsgClass::GradientPart, vec![42]);
+        let env = p0
+            .recv_match(|e| e.from == 1 && e.slot == slots::GRAD_PART)
+            .unwrap();
+        assert_eq!(env.payload, vec![42]);
+        assert_eq!(env.step, 1);
+    }
+
+    #[test]
+    fn broadcast_reaches_everyone_including_self() {
+        let mut cluster = build_cluster(3, 200, 8, true);
+        cluster[0].broadcast(0, slots::GRAD_COMMIT, MsgClass::Commitment, vec![7]);
+        for p in cluster.iter_mut() {
+            let env = p.recv_match(|e| e.slot == slots::GRAD_COMMIT).unwrap();
+            assert_eq!(env.from, 0);
+            assert_eq!(env.payload, vec![7]);
+        }
+    }
+
+    #[test]
+    fn split_broadcast_delivers_all_variants() {
+        let mut cluster = build_cluster(3, 300, 8, true);
+        cluster[2].broadcast_split(
+            0,
+            slots::GRAD_COMMIT,
+            MsgClass::Commitment,
+            vec![(0, vec![1]), (1, vec![2])],
+        );
+        let mut p0 = cluster.remove(0);
+        let a = p0.recv_match(|e| e.from == 2).unwrap();
+        let b = p0.recv_match(|e| e.from == 2).unwrap();
+        let mut seen: Vec<u8> = vec![a.payload[0], b.payload[0]];
+        seen.sort_unstable();
+        assert_eq!(seen, vec![1, 2]); // both variants visible → equivocation evidence
+    }
+
+    #[test]
+    fn pending_buffer_preserves_out_of_order() {
+        let mut cluster = build_cluster(2, 400, 8, true);
+        let p1 = cluster.pop().unwrap();
+        let mut p0 = cluster.pop().unwrap();
+        p1.send(0, 5, slots::VERIFY_SCALARS, MsgClass::Verification, vec![9]);
+        p1.send(0, 5, slots::GRAD_PART, MsgClass::GradientPart, vec![8]);
+        // Ask for the later-sent first; earlier one must stay pending.
+        let g = p0.recv_match(|e| e.slot == slots::GRAD_PART).unwrap();
+        assert_eq!(g.payload, vec![8]);
+        let v = p0.recv_match(|e| e.slot == slots::VERIFY_SCALARS).unwrap();
+        assert_eq!(v.payload, vec![9]);
+    }
+
+    #[test]
+    fn timeout_reported() {
+        let mut cluster = build_cluster(2, 500, 8, true);
+        cluster[0].timeout = Duration::from_millis(10);
+        let err = cluster[0].recv_match(|_| true);
+        assert!(matches!(err, Err(RecvError::Timeout)));
+    }
+
+    #[test]
+    fn traffic_recorded() {
+        let cluster = build_cluster(2, 600, 4, true);
+        cluster[0].send(1, 0, slots::GRAD_PART, MsgClass::GradientPart, vec![0; 100]);
+        cluster[0].broadcast(0, slots::GRAD_COMMIT, MsgClass::Commitment, vec![0; 32]);
+        let info = cluster[0].info.clone();
+        assert_eq!(info.stats.total_bytes(0), 100 + 32 * 4);
+    }
+}

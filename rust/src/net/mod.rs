@@ -1,0 +1,126 @@
+//! Peer-to-peer message substrate for the simulated cluster.
+//!
+//! Every peer runs on its own OS thread with a mailbox; the transport
+//! (`local`) delivers signed envelopes between threads. Broadcast uses a
+//! logical broadcast channel with GossipSub-style cost accounting
+//! (`stats`) and equivocation detection (`gossip`): a peer that signs two
+//! contradicting messages for the same protocol slot is banned by every
+//! honest receiver, matching footnote 4 of the paper.
+
+pub mod gossip;
+pub mod local;
+pub mod stats;
+
+use crate::crypto::{sign, verify, Mont, PublicKey, SecretKey, Signature};
+pub use stats::{MsgClass, TrafficStats};
+
+/// Peer identifier: index into the initial roster (stable across bans).
+pub type PeerId = usize;
+
+/// A transported message.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    pub from: PeerId,
+    /// Training step this message belongs to.
+    pub step: u64,
+    /// Protocol slot within the step (phase tag + sub-index); together
+    /// with `step` this is the equivocation key for broadcasts.
+    pub slot: u32,
+    pub class: MsgClass,
+    pub payload: Vec<u8>,
+    /// True if this envelope was sent on the broadcast channel.
+    pub broadcast: bool,
+    pub signature: Option<Signature>,
+}
+
+impl Envelope {
+    /// The byte string covered by the signature (everything that
+    /// identifies the message and its content).
+    pub fn signing_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.payload.len() + 32);
+        out.extend_from_slice(&(self.from as u64).to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&self.slot.to_le_bytes());
+        out.push(self.class as u8);
+        out.push(self.broadcast as u8);
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    pub fn sign_with(&mut self, mont: &Mont, sk: &SecretKey) {
+        self.signature = Some(sign(mont, sk, &self.signing_bytes()));
+    }
+
+    pub fn verify_with(&self, mont: &Mont, pk: &PublicKey) -> bool {
+        match &self.signature {
+            Some(sig) => verify(mont, pk, &self.signing_bytes(), sig),
+            None => false,
+        }
+    }
+}
+
+/// Protocol slot tags (high byte of `slot`); low bytes index sub-slots
+/// (e.g. which partition a commitment refers to).
+pub mod slots {
+    pub const GRAD_COMMIT: u32 = 0x0100_0000;
+    pub const GRAD_PART: u32 = 0x0200_0000;
+    pub const AGG_COMMIT: u32 = 0x0300_0000;
+    pub const AGG_PART: u32 = 0x0400_0000;
+    pub const MPRNG_COMMIT: u32 = 0x0500_0000;
+    pub const MPRNG_REVEAL: u32 = 0x0600_0000;
+    pub const VERIFY_SCALARS: u32 = 0x0700_0000;
+    pub const CHECK_VOTE: u32 = 0x0800_0000;
+    pub const ACCUSE: u32 = 0x0900_0000;
+    pub const ELIMINATE: u32 = 0x0A00_0000;
+    pub const VALIDATION_OK: u32 = 0x0B00_0000;
+    pub const JOIN: u32 = 0x0C00_0000;
+    pub const VERIFY_DONE: u32 = 0x0D00_0000;
+
+    /// Compose a slot from a tag and a sub-index (< 2^24).
+    pub fn sub(tag: u32, idx: usize) -> u32 {
+        debug_assert!(idx < (1 << 24));
+        tag | idx as u32
+    }
+
+    pub fn tag(slot: u32) -> u32 {
+        slot & 0xFF00_0000
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::keygen;
+
+    #[test]
+    fn envelope_sign_verify() {
+        let mont = Mont::new();
+        let sk = keygen(&mont, 9);
+        let mut env = Envelope {
+            from: 3,
+            step: 17,
+            slot: slots::sub(slots::GRAD_COMMIT, 5),
+            class: MsgClass::Commitment,
+            payload: vec![1, 2, 3],
+            broadcast: true,
+            signature: None,
+        };
+        assert!(!env.verify_with(&mont, &sk.public));
+        env.sign_with(&mont, &sk);
+        assert!(env.verify_with(&mont, &sk.public));
+        // Any field change invalidates.
+        let mut e2 = env.clone();
+        e2.step = 18;
+        assert!(!e2.verify_with(&mont, &sk.public));
+        let mut e3 = env.clone();
+        e3.payload[0] = 99;
+        assert!(!e3.verify_with(&mont, &sk.public));
+    }
+
+    #[test]
+    fn slot_composition() {
+        let s = slots::sub(slots::ACCUSE, 0x1234);
+        assert_eq!(slots::tag(s), slots::ACCUSE);
+        assert_eq!(s & 0x00FF_FFFF, 0x1234);
+    }
+}

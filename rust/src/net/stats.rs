@@ -1,0 +1,147 @@
+//! Per-peer traffic accounting by message class.
+//!
+//! The paper's headline communication claim is that one BTARD step costs
+//! each peer O(d + n²) bytes (vs O(d) for plain Butterfly All-Reduce and
+//! O(n·d) for a robust parameter server). These counters reproduce that
+//! accounting: every send is attributed to its message class, and
+//! broadcast messages are charged with the GossipSub relay factor D
+//! (each peer relays a previously unseen message to D neighbours, so an
+//! n-peer broadcast of b bytes costs O(n·b) total, O(b·D) per peer).
+
+use std::sync::Mutex;
+
+/// Message classes (index into the per-peer counters).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsgClass {
+    /// Gradient partition payloads (the O(d) part).
+    GradientPart = 0,
+    /// Aggregated partition payloads (the other O(d) part).
+    AggregatedPart = 1,
+    /// Hash commitments (O(n) scalars broadcast → O(n²) per peer total).
+    Commitment = 2,
+    /// Inner products s_i^j and norms (O(n) scalars broadcast).
+    Verification = 3,
+    /// MPRNG commit/reveal messages.
+    Mprng = 4,
+    /// Accusations / eliminations / ban notices.
+    Control = 5,
+}
+
+pub const NUM_CLASSES: usize = 6;
+
+pub const CLASS_NAMES: [&str; NUM_CLASSES] = [
+    "gradient_part",
+    "aggregated_part",
+    "commitment",
+    "verification",
+    "mprng",
+    "control",
+];
+
+#[derive(Clone, Debug, Default)]
+pub struct PeerTraffic {
+    /// Bytes sent, by class.
+    pub bytes: [u64; NUM_CLASSES],
+    /// Messages sent, by class.
+    pub msgs: [u64; NUM_CLASSES],
+}
+
+/// Shared traffic accumulator for a simulated cluster.
+#[derive(Debug)]
+pub struct TrafficStats {
+    peers: Mutex<Vec<PeerTraffic>>,
+    /// GossipSub fanout: relay cost multiplier applied to broadcasts.
+    pub gossip_fanout: u64,
+}
+
+impl TrafficStats {
+    pub fn new(n_peers: usize, gossip_fanout: u64) -> TrafficStats {
+        TrafficStats {
+            peers: Mutex::new(vec![PeerTraffic::default(); n_peers]),
+            gossip_fanout,
+        }
+    }
+
+    /// Record a point-to-point send.
+    pub fn record_p2p(&self, from: usize, class: MsgClass, bytes: usize) {
+        let mut g = self.peers.lock().unwrap();
+        let t = &mut g[from];
+        t.bytes[class as usize] += bytes as u64;
+        t.msgs[class as usize] += 1;
+    }
+
+    /// Record a broadcast: the originator pays D relays' worth, modelling
+    /// GossipSub's O(b·D) per-peer cost for an all-to-all broadcast.
+    pub fn record_broadcast(&self, from: usize, class: MsgClass, bytes: usize) {
+        let mut g = self.peers.lock().unwrap();
+        let t = &mut g[from];
+        t.bytes[class as usize] += bytes as u64 * self.gossip_fanout;
+        t.msgs[class as usize] += self.gossip_fanout;
+    }
+
+    pub fn snapshot(&self) -> Vec<PeerTraffic> {
+        self.peers.lock().unwrap().clone()
+    }
+
+    /// Total bytes sent by a peer across all classes.
+    pub fn total_bytes(&self, peer: usize) -> u64 {
+        let g = self.peers.lock().unwrap();
+        g[peer].bytes.iter().sum()
+    }
+
+    /// Max over peers of total bytes (the per-peer cost the paper bounds).
+    pub fn max_peer_bytes(&self) -> u64 {
+        let g = self.peers.lock().unwrap();
+        g.iter().map(|t| t.bytes.iter().sum::<u64>()).max().unwrap_or(0)
+    }
+
+    pub fn reset(&self) {
+        let mut g = self.peers.lock().unwrap();
+        for t in g.iter_mut() {
+            *t = PeerTraffic::default();
+        }
+    }
+
+    /// Pretty summary table (used by the overhead bench).
+    pub fn summary(&self) -> String {
+        let g = self.peers.lock().unwrap();
+        let mut out = String::new();
+        let mut totals = [0u64; NUM_CLASSES];
+        for t in g.iter() {
+            for (i, b) in t.bytes.iter().enumerate() {
+                totals[i] += b;
+            }
+        }
+        let n = g.len().max(1) as u64;
+        out.push_str("class                 total_bytes   avg_per_peer\n");
+        for i in 0..NUM_CLASSES {
+            out.push_str(&format!(
+                "{:<20} {:>12} {:>14}\n",
+                CLASS_NAMES[i],
+                totals[i],
+                totals[i] / n
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting() {
+        let s = TrafficStats::new(2, 8);
+        s.record_p2p(0, MsgClass::GradientPart, 100);
+        s.record_broadcast(0, MsgClass::Commitment, 32);
+        s.record_p2p(1, MsgClass::AggregatedPart, 50);
+        assert_eq!(s.total_bytes(0), 100 + 32 * 8);
+        assert_eq!(s.total_bytes(1), 50);
+        assert_eq!(s.max_peer_bytes(), 100 + 256);
+        let snap = s.snapshot();
+        assert_eq!(snap[0].msgs[MsgClass::Commitment as usize], 8);
+        s.reset();
+        assert_eq!(s.max_peer_bytes(), 0);
+    }
+}

@@ -1,0 +1,183 @@
+//! Artifact manifest: metadata emitted by `python/compile/aot.py`
+//! alongside the HLO text files (`artifacts/manifest.json`).
+//!
+//! The manifest tells the Rust runtime everything it must know to drive
+//! an executable without re-tracing: input/output shapes, the flat
+//! parameter dimension, per-tensor parameter segments (LAMB needs
+//! layer-wise norms), and workload hyper-parameters baked at AOT time.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One named parameter tensor inside the flat parameter vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSegment {
+    pub name: String,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: PathBuf,
+    /// Input shapes in call order (row-major dims).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes in tuple order.
+    pub outputs: Vec<Vec<usize>>,
+    /// Free-form numeric attributes (param_dim, batch, seq_len, n, ...).
+    pub attrs: BTreeMap<String, f64>,
+    /// Parameter segments (model artifacts only).
+    pub segments: Vec<ParamSegment>,
+}
+
+impl ArtifactMeta {
+    pub fn attr(&self, key: &str) -> Result<f64> {
+        self.attrs
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow!("artifact '{}' missing attr '{key}'", self.name))
+    }
+
+    pub fn attr_usize(&self, key: &str) -> Result<usize> {
+        Ok(self.attr(key)? as usize)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let arr = root
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?;
+        let mut artifacts = BTreeMap::new();
+        for item in arr {
+            let name = item
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = PathBuf::from(
+                item.get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("artifact '{name}' missing file"))?,
+            );
+            let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+                item.get(key)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("artifact '{name}' missing {key}"))?
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .ok_or_else(|| anyhow!("bad shape in '{name}'"))
+                            .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                    })
+                    .collect()
+            };
+            let inputs = shapes("inputs")?;
+            let outputs = shapes("outputs")?;
+            let mut attrs = BTreeMap::new();
+            if let Some(obj) = item.get("attrs").and_then(|a| a.as_obj()) {
+                for (k, v) in obj {
+                    if let Some(n) = v.as_f64() {
+                        attrs.insert(k.clone(), n);
+                    }
+                }
+            }
+            let mut segments = Vec::new();
+            if let Some(segs) = item.get("segments").and_then(|s| s.as_arr()) {
+                for s in segs {
+                    segments.push(ParamSegment {
+                        name: s
+                            .get("name")
+                            .and_then(|n| n.as_str())
+                            .unwrap_or("?")
+                            .to_string(),
+                        offset: s.get("offset").and_then(|o| o.as_usize()).unwrap_or(0),
+                        len: s.get("len").and_then(|l| l.as_usize()).unwrap_or(0),
+                    });
+                }
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta { name, file, inputs, outputs, attrs, segments },
+            );
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (run `make artifacts`)"))
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {
+          "name": "mlp_grad",
+          "file": "mlp_grad.hlo.txt",
+          "inputs": [[100], [8, 12], [8]],
+          "outputs": [[], [100]],
+          "attrs": {"param_dim": 100, "batch": 8},
+          "segments": [
+            {"name": "w1", "offset": 0, "len": 96},
+            {"name": "b1", "offset": 96, "len": 4}
+          ]
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let a = m.get("mlp_grad").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[1], vec![8, 12]);
+        assert_eq!(a.outputs[0], Vec::<usize>::new());
+        assert_eq!(a.attr_usize("param_dim").unwrap(), 100);
+        assert_eq!(a.segments[1].offset, 96);
+        assert_eq!(m.hlo_path(a), PathBuf::from("/tmp/a/mlp_grad.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.get("nope").is_err());
+        assert!(m.get("mlp_grad").unwrap().attr("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse("[1,2", PathBuf::new()).is_err());
+    }
+}

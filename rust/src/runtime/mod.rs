@@ -1,0 +1,186 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust step loop.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Threading: the PJRT client lives on a dedicated executor thread; peer
+//! threads submit execute requests over a channel and block on a reply.
+//! This sidesteps any question of client thread-safety and matches the
+//! 1-core testbed (XLA CPU already owns the compute).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactMeta, Manifest, ParamSegment};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+/// A request to run one executable with f32 inputs.
+struct ExecRequest {
+    exe: String,
+    /// Flat f32 buffers, one per input, with their dims.
+    inputs: Vec<(Vec<f32>, Vec<usize>)>,
+    reply: Sender<Result<Vec<Vec<f32>>>>,
+}
+
+enum Msg {
+    Exec(ExecRequest),
+    Shutdown,
+}
+
+/// Handle to the executor thread; shareable across peer threads.
+pub struct PjrtHandle {
+    tx: Mutex<Sender<Msg>>,
+}
+
+impl PjrtHandle {
+    /// Execute artifact `name` with the given inputs; returns the output
+    /// tuple as flat f32 vectors.
+    pub fn run(&self, name: &str, inputs: Vec<(Vec<f32>, Vec<usize>)>) -> Result<Vec<Vec<f32>>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Msg::Exec(ExecRequest { exe: name.to_string(), inputs, reply: reply_tx }))
+            .map_err(|_| anyhow!("pjrt executor thread is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt executor dropped the reply"))?
+    }
+}
+
+/// Owns the executor thread; dropping shuts it down.
+pub struct PjrtRuntime {
+    pub handle: std::sync::Arc<PjrtHandle>,
+    pub manifest: Manifest,
+    thread: Option<JoinHandle<()>>,
+    tx: Sender<Msg>,
+}
+
+impl PjrtRuntime {
+    /// Load every artifact in the manifest directory and compile it on
+    /// the PJRT CPU client.
+    pub fn load<P: AsRef<Path>>(artifacts_dir: P) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        Self::load_subset_inner(manifest, None)
+    }
+
+    /// Load only the named artifacts (faster startup for examples that
+    /// use a single model).
+    pub fn load_subset<P: AsRef<Path>>(artifacts_dir: P, names: &[&str]) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let set: Vec<String> = names.iter().map(|s| s.to_string()).collect();
+        Self::load_subset_inner(manifest, Some(set))
+    }
+
+    fn load_subset_inner(manifest: Manifest, only: Option<Vec<String>>) -> Result<PjrtRuntime> {
+        // Compile on the executor thread itself (the client is created
+        // there and never crosses threads).
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let to_load: Vec<(String, std::path::PathBuf)> = manifest
+            .artifacts
+            .values()
+            .filter(|a| only.as_ref().map(|o| o.contains(&a.name)).unwrap_or(true))
+            .map(|a| (a.name.clone(), manifest.hlo_path(a)))
+            .collect();
+        let thread = std::thread::Builder::new()
+            .name("pjrt-exec".into())
+            .spawn(move || {
+                type Loaded = BTreeMap<String, xla::PjRtLoadedExecutable>;
+                let setup = (|| -> Result<(xla::PjRtClient, Loaded)> {
+                    let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+                    let mut exes = BTreeMap::new();
+                    for (name, path) in &to_load {
+                        let proto = xla::HloModuleProto::from_text_file(
+                            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+                        )
+                        .map_err(|e| anyhow!("loading HLO text {}: {e:?}", path.display()))?;
+                        let comp = xla::XlaComputation::from_proto(&proto);
+                        let exe = client
+                            .compile(&comp)
+                            .map_err(|e| anyhow!("compiling artifact '{name}': {e:?}"))?;
+                        exes.insert(name.clone(), exe);
+                    }
+                    Ok((client, exes))
+                })();
+                let (_client, exes) = match setup {
+                    Ok(ok) => {
+                        let _ = ready_tx.send(Ok(()));
+                        ok
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Shutdown => break,
+                        Msg::Exec(req) => {
+                            let result = execute_one(&exes, &req);
+                            let _ = req.reply.send(result);
+                        }
+                    }
+                }
+            })
+            .context("spawning pjrt executor thread")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt executor died during startup"))??;
+        Ok(PjrtRuntime {
+            handle: std::sync::Arc::new(PjrtHandle { tx: Mutex::new(tx.clone()) }),
+            manifest,
+            thread: Some(thread),
+            tx,
+        })
+    }
+}
+
+fn execute_one(
+    exes: &BTreeMap<String, xla::PjRtLoadedExecutable>,
+    req: &ExecRequest,
+) -> Result<Vec<Vec<f32>>> {
+    let exe = exes
+        .get(&req.exe)
+        .ok_or_else(|| anyhow!("artifact '{}' not loaded", req.exe))?;
+    let mut literals = Vec::with_capacity(req.inputs.len());
+    for (buf, dims) in &req.inputs {
+        let lit = xla::Literal::vec1(buf);
+        let lit = if dims.len() == 1 && dims[0] == buf.len() {
+            lit
+        } else {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            lit.reshape(&dims_i64)
+                .map_err(|e| anyhow!("reshape input to {dims:?}: {e:?}"))?
+        };
+        literals.push(lit);
+    }
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow!("executing '{}': {e:?}", req.exe))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal_sync: {e:?}"))?;
+    // aot.py lowers with return_tuple=True: the result is always a tuple.
+    let parts = result.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+    let mut out = Vec::with_capacity(parts.len());
+    for p in parts {
+        out.push(p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
+    }
+    Ok(out)
+}
+
+impl Drop for PjrtRuntime {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}

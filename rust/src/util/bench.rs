@@ -1,0 +1,146 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warmup, fixed-time measurement, and robust summary statistics
+//! (median / p10 / p90 over per-iteration times).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10}/iter  (p10 {:>10}, p90 {:>10}, n={})",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{:.0} ns", ns)
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark a closure: run `warmup` iterations, then measure batches
+/// until `budget` elapses (at least `min_iters`).
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchStats {
+    // Warmup: run for ~10% of the budget or 3 iterations.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u64;
+    while warm_iters < 3 || warm_start.elapsed() < budget / 10 {
+        f();
+        warm_iters += 1;
+        if warm_iters > 1000 {
+            break;
+        }
+    }
+
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    summarize(name, &mut samples)
+}
+
+/// Benchmark with a per-iteration setup step excluded from timing.
+pub fn bench_with_setup<S, F, T>(
+    name: &str,
+    budget: Duration,
+    mut setup: S,
+    mut f: F,
+) -> BenchStats
+where
+    S: FnMut() -> T,
+    F: FnMut(T),
+{
+    let mut samples: Vec<f64> = Vec::new();
+    // Warmup
+    for _ in 0..3 {
+        let input = setup();
+        f(input);
+    }
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let input = setup();
+        let t0 = Instant::now();
+        f(input);
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    summarize(name, &mut samples)
+}
+
+fn summarize(name: &str, samples: &mut [f64]) -> BenchStats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let pct = |p: f64| samples[((n as f64 * p) as usize).min(n - 1)];
+    BenchStats {
+        name: name.to_string(),
+        iters: n as u64,
+        median_ns: pct(0.5),
+        p10_ns: pct(0.1),
+        p90_ns: pct(0.9),
+        mean_ns: samples.iter().sum::<f64>() / n as f64,
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let s = bench("noop-ish", Duration::from_millis(20), || {
+            let mut acc = 0u64;
+            for i in 0..100 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(s.iters >= 5);
+        assert!(s.median_ns > 0.0);
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,99 @@
+//! Tiny CSV writer for experiment metric series.
+//!
+//! Benches and the harness emit one CSV per experiment under `results/`;
+//! each row is a (step, series...) record matching a figure's plotted
+//! lines so the paper's plots can be regenerated with any plotting tool.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+pub struct CsvWriter {
+    file: fs::File,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncate) a CSV file with the given header columns.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut file = fs::File::create(path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file, cols: header.len() })
+    }
+
+    /// Write a row of raw string fields (quotes fields containing commas).
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        assert_eq!(fields.len(), self.cols, "csv row width mismatch");
+        let escaped: Vec<String> = fields
+            .iter()
+            .map(|f| {
+                if f.contains(',') || f.contains('"') || f.contains('\n') {
+                    format!("\"{}\"", f.replace('"', "\"\""))
+                } else {
+                    f.clone()
+                }
+            })
+            .collect();
+        writeln!(self.file, "{}", escaped.join(","))
+    }
+
+    /// Convenience: a leading label + f64 values.
+    pub fn row_vals(&mut self, label: &str, vals: &[f64]) -> std::io::Result<()> {
+        let mut fields = vec![label.to_string()];
+        fields.extend(vals.iter().map(|v| format_f64(*v)));
+        self.row(&fields)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.file.flush()
+    }
+}
+
+/// Compact float formatting (6 significant digits, no trailing zeros).
+pub fn format_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        let s = format!("{:.6}", v);
+        let s = s.trim_end_matches('0').trim_end_matches('.');
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join("btard_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["x,y".into(), "1".into()]).unwrap();
+            w.row_vals("lbl", &[0.5]).unwrap();
+            w.flush().unwrap();
+        }
+        let got = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(got, "a,b\n\"x,y\",1\nlbl,0.5\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn float_format() {
+        assert_eq!(format_f64(1.0), "1");
+        assert_eq!(format_f64(0.25), "0.25");
+        assert_eq!(format_f64(1.0 / 3.0), "0.333333");
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let dir = std::env::temp_dir().join("btard_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        let _ = w.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,50 @@
+//! In-repo substrates replacing unavailable third-party crates:
+//! deterministic PRNG, JSON codec, CSV writer, micro-bench harness,
+//! property-test harness, and a CLI flag parser.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Hex-encode bytes (used for hashes / commitments in logs and messages).
+pub fn hex(bytes: &[u8]) -> String {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(HEX[(b >> 4) as usize] as char);
+        s.push(HEX[(b & 0xf) as usize] as char);
+    }
+    s
+}
+
+/// Decode a hex string; returns None on bad input.
+pub fn unhex(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(s.len() / 2);
+    let b = s.as_bytes();
+    for i in (0..b.len()).step_by(2) {
+        let hi = (b[i] as char).to_digit(16)?;
+        let lo = (b[i + 1] as char).to_digit(16)?;
+        out.push(((hi << 4) | lo) as u8);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_roundtrip() {
+        let data = vec![0u8, 1, 0xab, 0xff, 0x10];
+        assert_eq!(unhex(&hex(&data)).unwrap(), data);
+        assert_eq!(hex(&[0xde, 0xad]), "dead");
+        assert!(unhex("xyz").is_none());
+        assert!(unhex("abc").is_none());
+    }
+}

@@ -1,0 +1,89 @@
+//! Minimal property-testing harness (proptest is not available offline).
+//!
+//! `prop_check` runs a predicate over N randomly generated cases from a
+//! seeded generator; on failure it reports the failing seed so the case
+//! can be replayed deterministically (`PROP_SEED=… cargo test`).
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with env BTARD_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("BTARD_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `body(rng, case_index)`; the body should panic (assert!) on
+/// property violation. Each case gets a distinct deterministic seed; the
+/// failing seed is printed before unwinding.
+pub fn prop_check<F: FnMut(&mut Rng, usize)>(name: &str, mut body: F) {
+    let base: u64 = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xB7A2D_5EED);
+    let cases = default_cases();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng, case)
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case} (replay: PROP_SEED={} case offset {case})",
+                base
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generate a random f32 vector with entries in roughly [-scale, scale],
+/// occasionally including exact zeros and large outliers (the shapes of
+/// adversarial gradients).
+pub fn arb_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    (0..len)
+        .map(|_| {
+            let roll = rng.next_f32();
+            if roll < 0.05 {
+                0.0
+            } else if roll < 0.10 {
+                scale * 100.0 * (rng.next_f32() - 0.5)
+            } else {
+                scale * 2.0 * (rng.next_f32() - 0.5)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        prop_check("counting", |_rng, _case| {
+            count += 1;
+        });
+        assert_eq!(count, default_cases());
+    }
+
+    #[test]
+    fn deterministic_inputs() {
+        let mut firsts = Vec::new();
+        prop_check("collect", |rng, _| firsts.push(rng.next_u64()));
+        let mut again = Vec::new();
+        prop_check("collect2", |rng, _| again.push(rng.next_u64()));
+        assert_eq!(firsts, again);
+    }
+
+    #[test]
+    fn arb_vec_len_and_range() {
+        let mut rng = Rng::new(1);
+        let v = arb_vec(&mut rng, 1000, 1.0);
+        assert_eq!(v.len(), 1000);
+        assert!(v.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,35 @@
+//! Regression test for the adjudication-storm bug: an honest 16-peer
+//! step at d=65k must not trigger Σs false alarms (each alarm costs every
+//! peer an O(n) gradient recompute; the bug made 4 steps take 230 s with
+//! 68k recomputations — fixed by a relative clip tolerance that respects
+//! the constant-velocity warm-start walk and a Σs tolerance that covers
+//! fixed-point truncation).
+
+#[test]
+fn honest_large_d_step_has_no_recompute_storm() {
+    use btard::coordinator::optimizer::LrSchedule;
+    use btard::coordinator::training::{run_btard, OptSpec, RunConfig};
+    use btard::model::synthetic::Quadratic;
+    use std::sync::Arc;
+    let src: Arc<dyn btard::model::GradientSource> =
+        Arc::new(Quadratic::new(65_536, 0.1, 2.0, 1.0, 5));
+    let mut cfg = RunConfig::quick(16, 4);
+    cfg.verify_signatures = false;
+    cfg.opt = OptSpec::Sgd {
+        schedule: LrSchedule::Constant(0.05),
+        momentum: 0.0,
+        nesterov: false,
+    };
+    cfg.eval_every = 1000;
+    let t0 = std::time::Instant::now();
+    let res = run_btard(&cfg, src);
+    eprintln!(
+        "4 steps in {:.1}s, recomputes={}, bans={}",
+        t0.elapsed().as_secs_f64(),
+        res.recomputes,
+        res.ban_events.len()
+    );
+    assert!(res.ban_events.is_empty());
+    // Budget: validators only (≈ m per step) plus slack.
+    assert!(res.recomputes < 50, "recompute storm: {}", res.recomputes);
+}

@@ -1,0 +1,152 @@
+//! Integration tests over the PJRT runtime + AOT artifacts: the three
+//! layers compose (L1 Pallas kernel → L2 JAX model → L3 Rust executor).
+//!
+//! These tests require `make artifacts`; they self-skip (with a loud
+//! message) when the artifacts directory is missing so `cargo test`
+//! stays runnable on a fresh checkout.
+
+use btard::coordinator::centered_clip::centered_clip;
+use btard::data::synth_text::SynthText;
+use btard::data::synth_vision::SynthVision;
+use btard::model::pjrt_model::{PjrtData, PjrtModel};
+use btard::model::GradientSource;
+use btard::runtime::PjrtRuntime;
+use btard::util::rng::Rng;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts/ (run `make artifacts` first)");
+        None
+    }
+}
+
+#[test]
+fn vision_artifact_runs_and_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load_subset(&dir, &["vision_mlp"]).expect("load artifact");
+    let meta = rt.manifest.get("vision_mlp").unwrap().clone();
+    let ds = Arc::new(SynthVision::new(0, 64, 10));
+    let model = PjrtModel::new(rt.handle.clone(), meta, PjrtData::Vision(ds)).unwrap();
+    let params = model.init_params(1);
+    let (loss, grad) = model.loss_and_grad(&params, 42);
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    assert_eq!(grad.len(), model.param_dim);
+    assert!(grad.iter().any(|&g| g != 0.0));
+    // Bitwise determinism — the property the hash-based protocol needs.
+    let (loss2, grad2) = model.loss_and_grad(&params, 42);
+    assert_eq!(loss.to_bits(), loss2.to_bits());
+    assert!(grad.iter().zip(&grad2).all(|(a, b)| a.to_bits() == b.to_bits()));
+    // Different seed → different gradient.
+    let (_, grad3) = model.loss_and_grad(&params, 43);
+    assert_ne!(grad, grad3);
+}
+
+#[test]
+fn vision_artifact_grad_matches_finite_differences() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load_subset(&dir, &["vision_mlp"]).expect("load");
+    let meta = rt.manifest.get("vision_mlp").unwrap().clone();
+    let ds = Arc::new(SynthVision::new(3, 64, 10));
+    let model = PjrtModel::new(rt.handle.clone(), meta, PjrtData::Vision(ds)).unwrap();
+    let params = model.init_params(5);
+    let (_, grad) = model.loss_and_grad(&params, 7);
+    let eps = 1e-2f32;
+    for c in [0usize, 100, 2000, model.param_dim - 1] {
+        let mut pp = params.clone();
+        pp[c] += eps;
+        let (lp, _) = model.loss_and_grad(&pp, 7);
+        pp[c] -= 2.0 * eps;
+        let (lm, _) = model.loss_and_grad(&pp, 7);
+        let num = (lp - lm) / (2.0 * eps);
+        assert!(
+            (num - grad[c]).abs() < 5e-2 * num.abs().max(grad[c].abs()).max(0.05),
+            "coord {c}: numeric {num} vs analytic {}",
+            grad[c]
+        );
+    }
+}
+
+#[test]
+fn lm_artifact_trains() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load_subset(&dir, &["lm_small"]).expect("load");
+    let meta = rt.manifest.get("lm_small").unwrap().clone();
+    let ds = Arc::new(SynthText::new(1, 100_000));
+    let model = PjrtModel::new(rt.handle.clone(), meta, PjrtData::Text(ds)).unwrap();
+    let mut params = model.init_params(0);
+    let (l0, _) = model.loss_and_grad(&params, 0);
+    // Initial loss near log(64) ≈ 4.16 for a near-uniform model.
+    assert!((l0 - 64f32.ln()).abs() < 0.8, "initial loss {l0}");
+    for s in 0..30 {
+        let (_, g) = model.loss_and_grad(&params, s);
+        for (p, gi) in params.iter_mut().zip(&g) {
+            *p -= 0.5 * gi;
+        }
+    }
+    let (l1, _) = model.loss_and_grad(&params, 1000);
+    assert!(l1 < l0 - 0.2, "loss did not improve: {l0} -> {l1}");
+}
+
+#[test]
+fn clip_artifact_matches_rust_clip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load_subset(&dir, &["centered_clip_16x4096"]).expect("load");
+    let meta = rt.manifest.get("centered_clip_16x4096").unwrap().clone();
+    let (n, p) = (meta.attr_usize("n").unwrap(), meta.attr_usize("p").unwrap());
+    let iters = meta.attr_usize("iters").unwrap();
+    let mut rng = Rng::new(9);
+    let rows: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            let mut v = vec![0.0f32; p];
+            rng.fill_gaussian(&mut v, 1.0);
+            if i >= n - 3 {
+                // a few adversarial rows
+                for x in v.iter_mut() {
+                    *x += 50.0;
+                }
+            }
+            v
+        })
+        .collect();
+    let tau = 2.0f32;
+    // Artifact path
+    let mut g_flat = Vec::with_capacity(n * p);
+    for r in &rows {
+        g_flat.extend_from_slice(r);
+    }
+    let mask = vec![1.0f32; n];
+    let out = rt
+        .handle
+        .run(
+            "centered_clip_16x4096",
+            vec![(g_flat, vec![n, p]), (mask, vec![n]), (vec![tau], vec![1])],
+        )
+        .expect("run clip artifact");
+    let artifact_v = &out[0];
+    // Rust path: same iteration count, no early stop.
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let rust_v = centered_clip(&refs, tau, iters, 0.0).value;
+    assert_eq!(artifact_v.len(), rust_v.len());
+    let mut max_err = 0.0f32;
+    for (a, b) in artifact_v.iter().zip(&rust_v) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 1e-3, "artifact vs rust clip max err {max_err}");
+}
+
+#[test]
+fn label_flip_gradient_differs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load_subset(&dir, &["vision_mlp"]).expect("load");
+    let meta = rt.manifest.get("vision_mlp").unwrap().clone();
+    let ds = Arc::new(SynthVision::new(4, 64, 10));
+    let model = PjrtModel::new(rt.handle.clone(), meta, PjrtData::Vision(ds)).unwrap();
+    let params = model.init_params(2);
+    let (_, honest) = model.loss_and_grad(&params, 5);
+    let (_, flipped) = model.loss_and_grad_label_flipped(&params, 5).unwrap();
+    assert_ne!(honest, flipped);
+}

@@ -1,0 +1,241 @@
+//! Cross-module property tests: invariants that span subsystems
+//! (deterministic replay, aggregation bounds, codec/crypto interplay),
+//! run through the in-repo property harness.
+
+use btard::coordinator::aggregators::{coord_median, geo_median, mean, trimmed_mean};
+use btard::coordinator::centered_clip::{centered_clip, fixed_point_residual};
+use btard::coordinator::messages::{Accusation, BanReason, GradCommit, VerifyScalars};
+use btard::coordinator::optimizer::{clip_global_norm, LrSchedule};
+use btard::coordinator::partition::PartitionSpec;
+use btard::crypto::{keygen, sha256_f32, sign, verify, Mont};
+use btard::mprng::{combine, MprngOutcome, MprngRound};
+use btard::util::prop::{arb_vec, prop_check};
+use btard::util::rng::{l2_norm, Rng};
+
+#[test]
+fn aggregation_translation_equivariance() {
+    // All aggregators commute with translation: agg(x+c) = agg(x)+c.
+    prop_check("translation equivariance", |rng, _| {
+        let n = 3 + rng.below_usize(6);
+        let p = 1 + rng.below_usize(40);
+        let rows: Vec<Vec<f32>> = (0..n).map(|_| arb_vec(rng, p, 1.0)).collect();
+        let shift: Vec<f32> = arb_vec(rng, p, 0.5);
+        let shifted: Vec<Vec<f32>> = rows
+            .iter()
+            .map(|r| r.iter().zip(&shift).map(|(a, b)| a + b).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let srefs: Vec<&[f32]> = shifted.iter().map(|r| r.as_slice()).collect();
+        let a = mean(&refs);
+        let b = mean(&srefs);
+        for j in 0..p {
+            assert!((a[j] + shift[j] - b[j]).abs() < 1e-3 * (1.0 + a[j].abs() + shift[j].abs()));
+        }
+        let a = coord_median(&refs);
+        let b = coord_median(&srefs);
+        for j in 0..p {
+            assert!((a[j] + shift[j] - b[j]).abs() < 1e-3 * (1.0 + a[j].abs() + shift[j].abs()));
+        }
+    });
+}
+
+#[test]
+fn clip_output_within_row_hull_bounds() {
+    // The clip output never leaves the coordinate-wise [min, max] hull of
+    // the rows (each update is a convex-ish combination of pulls toward
+    // rows).
+    prop_check("clip hull", |rng, _| {
+        let n = 3 + rng.below_usize(6);
+        let p = 1 + rng.below_usize(30);
+        let rows: Vec<Vec<f32>> = (0..n).map(|_| arb_vec(rng, p, 1.0)).collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let out = centered_clip(&refs, 0.5, 200, 1e-6).value;
+        for j in 0..p {
+            let lo = rows.iter().map(|r| r[j]).fold(f32::INFINITY, f32::min);
+            let hi = rows.iter().map(|r| r[j]).fold(f32::NEG_INFINITY, f32::max);
+            let slack = 1e-3 * (1.0 + hi.abs().max(lo.abs()));
+            assert!(out[j] >= lo - slack && out[j] <= hi + slack, "coord {j}");
+        }
+    });
+}
+
+#[test]
+fn clip_residual_decreases_with_iterations() {
+    prop_check("residual monotone-ish", |rng, _| {
+        let rows: Vec<Vec<f32>> = (0..8).map(|_| arb_vec(rng, 24, 1.0)).collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let early = centered_clip(&refs, 1.0, 2, 0.0).value;
+        let late = centered_clip(&refs, 1.0, 200, 0.0).value;
+        let r_early = fixed_point_residual(&refs, &early, 1.0);
+        let r_late = fixed_point_residual(&refs, &late, 1.0);
+        assert!(r_late <= r_early + 1e-4, "{r_early} -> {r_late}");
+    });
+}
+
+#[test]
+fn trimmed_mean_between_min_and_max() {
+    prop_check("trimmed mean bounds", |rng, _| {
+        let n = 5 + rng.below_usize(8);
+        let p = 1 + rng.below_usize(20);
+        let trim = rng.below_usize((n - 1) / 2);
+        let rows: Vec<Vec<f32>> = (0..n).map(|_| arb_vec(rng, p, 2.0)).collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let out = trimmed_mean(&refs, trim);
+        for j in 0..p {
+            let lo = rows.iter().map(|r| r[j]).fold(f32::INFINITY, f32::min);
+            let hi = rows.iter().map(|r| r[j]).fold(f32::NEG_INFINITY, f32::max);
+            assert!(out[j] >= lo - 1e-4 && out[j] <= hi + 1e-4);
+        }
+    });
+}
+
+#[test]
+fn geo_median_minimizes_vs_perturbations() {
+    // The Weiszfeld output should (weakly) beat nearby perturbations on
+    // the sum-of-distances objective.
+    let mut rng = Rng::new(5);
+    let rows: Vec<Vec<f32>> = (0..9).map(|_| arb_vec(&mut rng, 16, 1.0)).collect();
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let gm = geo_median(&refs, 500, 1e-9);
+    let cost = |v: &[f32]| -> f64 {
+        rows.iter()
+            .map(|r| {
+                r.iter()
+                    .zip(v)
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .sum()
+    };
+    let c0 = cost(&gm);
+    for k in 0..20 {
+        let mut v = gm.clone();
+        let mut prng = Rng::new(100 + k);
+        for x in v.iter_mut() {
+            *x += prng.gaussian_f32() * 0.05;
+        }
+        assert!(cost(&v) >= c0 - 1e-6, "perturbation improved the objective");
+    }
+}
+
+#[test]
+fn partition_hash_stability_under_split() {
+    // Hashing a part then hashing the merged whole is consistent with
+    // hashing slices of the original vector — the commitment scheme's
+    // assumption.
+    prop_check("split hashing", |rng, _| {
+        let n = 2 + rng.below_usize(8);
+        let d = n + rng.below_usize(500);
+        let v = arb_vec(rng, d, 1.0);
+        let spec = PartitionSpec::new(d, n);
+        for j in 0..n {
+            let h1 = sha256_f32(spec.slice(&v, j));
+            let h2 = sha256_f32(&v[spec.range(j)]);
+            assert_eq!(h1, h2);
+        }
+    });
+}
+
+#[test]
+fn codec_fuzz_never_panics() {
+    // Arbitrary bytes through every decoder: must return None/Some, never
+    // panic (malicious peers control these bytes).
+    prop_check("decoder fuzz", |rng, _| {
+        let len = rng.below_usize(300);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        let _ = GradCommit::decode(&bytes);
+        let _ = VerifyScalars::decode(&bytes);
+        let _ = Accusation::decode(&bytes);
+        let _ = btard::mprng::parse_reveal(&bytes);
+    });
+}
+
+#[test]
+fn signature_unforgeability_smoke() {
+    // Random signature bytes never verify (2^-something, but the point is
+    // the code path rejects garbage without panicking).
+    let mont = Mont::new();
+    let sk = keygen(&mont, 1);
+    prop_check("garbage signatures rejected", |rng, _| {
+        let mut sig = sign(&mont, &sk, b"legit");
+        // Flip random bits.
+        sig.s[rng.below_usize(32)] ^= 1 << rng.below_usize(8) as u8;
+        assert!(!verify(&mont, &sk.public, b"legit", &sig));
+    });
+}
+
+#[test]
+fn mprng_output_bits_look_uniform() {
+    // XOR of honest randomness: quick frequency sanity over many rounds.
+    let mut ones = 0u64;
+    let mut total = 0u64;
+    for round_seed in 0..200u64 {
+        let n = 4;
+        let rounds: Vec<MprngRound> = (0..n)
+            .map(|p| MprngRound::new(p, &mut Rng::new(round_seed * 17 + p as u64)))
+            .collect();
+        let live: Vec<usize> = (0..n).collect();
+        let cs: Vec<_> = rounds.iter().map(|r| Some(r.commitment())).collect();
+        let rs: Vec<_> = rounds.iter().map(|r| Some(r.reveal())).collect();
+        if let MprngOutcome::Ok(out) = combine(&live, &cs, &rs) {
+            for b in out {
+                ones += b.count_ones() as u64;
+                total += 8;
+            }
+        }
+    }
+    let frac = ones as f64 / total as f64;
+    assert!((frac - 0.5).abs() < 0.02, "bit frequency {frac}");
+}
+
+#[test]
+fn lr_schedules_are_positive_and_bounded() {
+    prop_check("lr schedule bounds", |rng, _| {
+        let base = 0.01 + rng.next_f32();
+        let schedules = [
+            LrSchedule::Constant(base),
+            LrSchedule::Cosine { base, floor: base * 0.1, total_steps: 100 },
+            LrSchedule::Warmup { base, warmup: 10 },
+        ];
+        for s in schedules {
+            for step in [0u64, 1, 9, 10, 50, 100, 1000] {
+                let lr = s.lr(step);
+                assert!(lr > 0.0 && lr <= base * 1.0001, "{s:?} step {step} lr {lr}");
+            }
+        }
+    });
+}
+
+#[test]
+fn grad_clip_idempotent() {
+    prop_check("clip idempotent", |rng, _| {
+        let mut g = arb_vec(rng, 64, 10.0);
+        let max = 1.0 + rng.next_f32() * 5.0;
+        clip_global_norm(&mut g, max);
+        let n1 = l2_norm(&g);
+        let before = g.clone();
+        clip_global_norm(&mut g, max);
+        assert!(l2_norm(&g) <= max * 1.0001);
+        if n1 <= max {
+            assert_eq!(g, before); // second clip is a no-op
+        }
+    });
+}
+
+#[test]
+fn ban_reasons_roundtrip_through_accusations() {
+    for reason in [
+        BanReason::GradientMismatch,
+        BanReason::NormMismatch,
+        BanReason::InnerProductMismatch,
+        BanReason::AggregationMismatch,
+        BanReason::Equivocation,
+        BanReason::FalseAccusation,
+        BanReason::Eliminated,
+        BanReason::MprngViolation,
+    ] {
+        let a = Accusation { target: 3, reason, part: 1 };
+        assert_eq!(Accusation::decode(&a.encode()), Some(a));
+    }
+}
