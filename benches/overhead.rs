@@ -29,6 +29,12 @@ use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
+    // Pin the legacy execution model: this bench reproduces the paper's
+    // Appendix-B overhead breakdown, whose phase timings assume blocking
+    // per-peer receives. The pooled scheduler's drain-mode receives never
+    // block and fold worker contention into stage wall times, which
+    // measures something different.
+    std::env::set_var("BTARD_EXEC", "threaded");
     timing_split();
     traffic_table();
     fig9_clip_iters();

@@ -1,0 +1,60 @@
+//! Scenario-matrix example: sweep part of the §4.1 attack zoo across
+//! cluster sizes and defense arms from one declarative spec, on the
+//! pooled peer scheduler.
+//!
+//! Run: cargo run --release --example scenario_matrix
+//! (same sweep via the CLI: `btard scenarios --spec configs/zoo.json`)
+
+use btard::coordinator::training::default_workers;
+use btard::coordinator::Aggregator;
+use btard::harness::{run_matrix, Arm, ScenarioSpec, Table};
+
+fn main() {
+    let spec = ScenarioSpec {
+        name: "attack_zoo".to_string(),
+        cluster_sizes: vec![16, 64],
+        byzantine_frac: 0.25,
+        attacks: vec![
+            "none".to_string(),
+            "sign_flip:1000".to_string(),
+            "ipm:0.6".to_string(),
+            "alie".to_string(),
+        ],
+        arms: vec![
+            Arm::Btard,
+            Arm::Ps(Aggregator::CenteredClip),
+            Arm::Ps(Aggregator::Mean),
+        ],
+        steps: 12,
+        dim: 4096,
+        attack_start: 3,
+        tau: 1.0,
+        delta_max: 4.0,
+        lr: 0.1,
+        seed: 2,
+        workers: default_workers(),
+        eval_every: 4,
+        verify_signatures: false,
+    };
+    eprintln!(
+        "attack zoo: {} sizes × {} attacks × {} arms = {} cells on {} workers",
+        spec.cluster_sizes.len(),
+        spec.attacks.len(),
+        spec.arms.len(),
+        spec.cluster_sizes.len() * spec.attacks.len() * spec.arms.len(),
+        spec.workers
+    );
+    let report = run_matrix(&spec, std::path::Path::new("results")).expect("write results");
+    let mut table = Table::new(&["n", "attack", "arm", "final", "bans"]);
+    for c in &report.cells {
+        table.row(vec![
+            c.n.to_string(),
+            c.attack.clone(),
+            c.arm.clone(),
+            format!("{:.4}", c.final_metric),
+            c.bans.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("csv: {} | json: {}", report.csv_path.display(), report.json_path.display());
+}

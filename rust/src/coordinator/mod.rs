@@ -31,4 +31,7 @@ pub use aggregators::Aggregator;
 pub use attacks::{AttackKind, AttackSchedule};
 pub use centered_clip::{centered_clip, TauPolicy};
 pub use step::{btard_step, Behavior, PeerCtx, ProtocolConfig, StepOutput};
-pub use training::{run_btard, run_ps, OptSpec, PsConfig, RunConfig, RunResult};
+pub use training::{
+    default_workers, run_btard, run_btard_pooled, run_btard_threaded, run_btard_with, run_ps,
+    ExecMode, OptSpec, PsConfig, RunConfig, RunResult,
+};

@@ -230,8 +230,8 @@ impl PeerCtx {
         slot: u32,
         from: &[PeerId],
         intents: &mut Vec<BanIntent>,
-    ) -> HashMap<PeerId, Vec<u8>> {
-        let mut out: HashMap<PeerId, Vec<u8>> = HashMap::new();
+    ) -> HashMap<PeerId, Arc<[u8]>> {
+        let mut out: HashMap<PeerId, Arc<[u8]>> = HashMap::new();
         let mut missing: Vec<PeerId> = from.to_vec();
         while !missing.is_empty() {
             let want: Vec<PeerId> = missing.clone();
@@ -268,7 +268,7 @@ impl PeerCtx {
         slot: u32,
         from: &[PeerId],
         _intents: &mut Vec<BanIntent>,
-    ) -> HashMap<PeerId, Vec<u8>> {
+    ) -> HashMap<PeerId, Arc<[u8]>> {
         let mut out = HashMap::new();
         let mut missing: Vec<PeerId> = from.to_vec();
         while !missing.is_empty() {
@@ -291,58 +291,6 @@ impl PeerCtx {
         }
         out
     }
-
-    /// MPRNG: commit + reveal, restarting without offenders if needed.
-    fn mprng_round(
-        &mut self,
-        step: u64,
-        intents: &mut Vec<BanIntent>,
-    ) -> Result<[u8; 32], StepError> {
-        let mut participants = self.live.clone();
-        for attempt in 0..self.cfg.n0 + 1 {
-            let round = MprngRound::new(self.me(), &mut self.local_rng);
-            let slot_c = slots::sub(slots::MPRNG_COMMIT, attempt);
-            let slot_r = slots::sub(slots::MPRNG_REVEAL, attempt);
-            self.net
-                .broadcast(step, slot_c, MsgClass::Mprng, round.commitment().to_vec());
-            let commits_raw = self.collect_broadcast(step, slot_c, &participants.clone(), intents);
-            self.net.broadcast(step, slot_r, MsgClass::Mprng, round.reveal());
-            let reveals_raw = self.collect_broadcast(step, slot_r, &participants.clone(), intents);
-
-            let max_id = self.cfg.n0;
-            let mut commits: Vec<Option<Digest>> = vec![None; max_id];
-            let mut reveals: Vec<Option<Vec<u8>>> = vec![None; max_id];
-            for (&p, payload) in &commits_raw {
-                if payload.len() == 32 {
-                    let mut d = [0u8; 32];
-                    d.copy_from_slice(payload);
-                    commits[p] = Some(d);
-                }
-            }
-            for (&p, payload) in &reveals_raw {
-                reveals[p] = Some(payload.clone());
-            }
-            match combine(&participants, &commits, &reveals) {
-                MprngOutcome::Ok(r) => return Ok(r),
-                MprngOutcome::Offenders(off) => {
-                    for &p in &off {
-                        intents.push(BanIntent::Proven {
-                            observer: self.me(),
-                            target: p,
-                            reason: BanReason::MprngViolation,
-                        });
-                    }
-                    participants.retain(|p| !off.contains(p));
-                    if participants.len() < 2 {
-                        return Err(StepError::ClusterCollapsed(
-                            "MPRNG lost quorum".to_string(),
-                        ));
-                    }
-                }
-            }
-        }
-        Err(StepError::ClusterCollapsed("MPRNG never converged".into()))
-    }
 }
 
 /// Scalar consistency check with both relative and absolute tolerance.
@@ -350,17 +298,79 @@ fn close(a: f32, b: f32, rel: f32, abs_tol: f32) -> bool {
     (a - b).abs() <= abs_tol + rel * a.abs().max(b.abs())
 }
 
-/// Run one full BTARD step. `params` must be identical on every peer.
+/// Set the receive timeout for a protocol phase. Each later phase waits
+/// one more multiple of the base, so a peer stalled by an upstream
+/// withholder still delivers before its own waiters give up (no timeout
+/// cascades). A no-op for scheduling purposes in drain mode.
+fn phase_timeout(ctx: &mut PeerCtx, mult: u64) {
+    ctx.net.timeout = std::time::Duration::from_millis(ctx.cfg.base_timeout_ms * mult);
+}
+
+/// All per-step temporaries of one peer, carried across the stage
+/// functions below.
+///
+/// The blocking `btard_step` drives the stages back-to-back on the
+/// peer's own OS thread, which reproduces the original monolithic step
+/// bit-for-bit. The pooled scheduler (`training::run_btard_pooled`)
+/// instead interleaves the same stages for many logical peers over a
+/// fixed worker pool, inserting a cluster-wide barrier between stages.
+/// Every stage only *collects* messages that some earlier stage *sent*,
+/// which is the invariant that makes a barrier sufficient for the
+/// transport's non-blocking drain mode.
+pub struct StepState {
+    t: PhaseTimings,
+    intents: Vec<BanIntent>,
+    contributors: Vec<PeerId>,
+    i_contribute: bool,
+    n_parts: usize,
+    tau: f32,
+    loss: f32,
+    grad: Vec<f32>,
+    my_parts: Vec<usize>,
+    commits: Vec<Option<GradCommit>>,
+    /// rows[j]: (peer, part values) per contributor, sorted by peer.
+    rows: HashMap<usize, Vec<(PeerId, Vec<f32>)>>,
+    my_agg: HashMap<usize, Vec<f32>>,
+    agg_commits: Vec<Option<Digest>>,
+    ghat_parts: Vec<Vec<f32>>,
+    ghat: Vec<f32>,
+    mprng_participants: Vec<PeerId>,
+    mprng_attempt: usize,
+    mprng_round: Option<MprngRound>,
+    mprng_commits_raw: HashMap<PeerId, Arc<[u8]>>,
+    /// r^t once the MPRNG round converges (stage 8 reports Ok(true)).
+    pub r_out: Option<[u8; 32]>,
+    z: Vec<Vec<f32>>,
+    scalars: Vec<Option<VerifyScalars>>,
+    accusations_out: Vec<Accusation>,
+}
+
+/// Run one full BTARD step on the calling peer's thread (blocking
+/// transport). `params` must be identical on every peer.
 pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOutput, StepError> {
-    let me = ctx.net.id;
-    let base_ms = ctx.cfg.base_timeout_ms;
-    macro_rules! phase_timeout {
-        ($mult:expr) => {
-            ctx.net.timeout = std::time::Duration::from_millis(base_ms * $mult)
-        };
+    let mut st = stage_begin(ctx, step, params);
+    stage_commits(ctx, &mut st, step);
+    stage_parts(ctx, &mut st, step);
+    stage_agg_commits(ctx, &mut st, step);
+    stage_agg_parts(ctx, &mut st, step);
+    loop {
+        stage_mprng_commit(ctx, &mut st, step);
+        stage_mprng_reveal(ctx, &mut st, step);
+        if stage_mprng_combine(ctx, &mut st, step)? {
+            break;
+        }
     }
+    stage_scalars(ctx, &mut st, step);
+    stage_verify(ctx, &mut st, step);
+    stage_finish(ctx, st, step, params)
+}
+
+/// Stage 1 — Phase V (validators check last step's target) plus Phase
+/// A's send half: compute this step's gradient and broadcast its hash
+/// commitments.
+pub fn stage_begin(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> StepState {
+    let me = ctx.net.id;
     let mut t = PhaseTimings::default();
-    let mut intents: Vec<BanIntent> = Vec::new();
     let contributors = ctx.contributors();
     let i_contribute = contributors.contains(&me);
     let my_validation = ctx.validators.iter().find(|(v, _)| *v == me).copied();
@@ -459,26 +469,59 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
             );
         }
     }
-    // Collect commitments from every contributor.
-    phase_timeout!(2);
-    let mut commits: Vec<Option<GradCommit>> = vec![None; ctx.cfg.n0];
+    t.comm_s += t0.elapsed().as_secs_f64();
+
+    let my_parts = ctx.owners.parts_of(me);
+    StepState {
+        t,
+        intents: Vec::new(),
+        contributors,
+        i_contribute,
+        n_parts,
+        tau,
+        loss,
+        grad,
+        my_parts,
+        commits: vec![None; ctx.cfg.n0],
+        rows: HashMap::new(),
+        my_agg: HashMap::new(),
+        agg_commits: vec![None; n_parts],
+        ghat_parts: vec![Vec::new(); n_parts],
+        ghat: Vec::new(),
+        mprng_participants: ctx.live.clone(),
+        mprng_attempt: 0,
+        mprng_round: None,
+        mprng_commits_raw: HashMap::new(),
+        r_out: None,
+        z: Vec::new(),
+        scalars: vec![None; ctx.cfg.n0],
+        accusations_out: Vec::new(),
+    }
+}
+
+/// Stage 2 — Phase A's collect half (gradient commitments from every
+/// contributor) and Phase B's send half (ship each partition to its
+/// owner).
+pub fn stage_commits(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
+    let me = ctx.net.id;
+    let t0 = Instant::now();
+    phase_timeout(ctx, 2);
+    let contributors = st.contributors.clone();
     for &p in &contributors {
         let raw = ctx.collect_broadcast(
             step,
             slots::sub(slots::GRAD_COMMIT, p),
             &[p],
-            &mut intents,
+            &mut st.intents,
         );
         if let Some(bytes) = raw.get(&p) {
-            commits[p] = GradCommit::decode(bytes);
+            st.commits[p] = GradCommit::decode(bytes);
         }
     }
-    t.comm_s += t0.elapsed().as_secs_f64();
 
     // ---- Phase B: butterfly exchange of gradient parts --------------------
-    let t0 = Instant::now();
-    if i_contribute {
-        for j in 0..n_parts {
+    if st.i_contribute {
+        for j in 0..st.n_parts {
             let owner = ctx.owners.owner(j);
             if owner == me {
                 continue; // local
@@ -491,7 +534,7 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
                 continue;
             }
             let mut w = Writer::new();
-            w.f32s(ctx.spec.slice(&grad, j));
+            w.f32s(ctx.spec.slice(&st.grad, j));
             ctx.net.send(
                 owner,
                 step,
@@ -501,21 +544,31 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
             );
         }
     }
-    let my_parts = ctx.owners.parts_of(me);
-    phase_timeout!(3);
-    // rows[j]: (peer, part values) for each contributor, sorted by peer.
-    let mut rows: HashMap<usize, Vec<(PeerId, Vec<f32>)>> = HashMap::new();
+    st.t.comm_s += t0.elapsed().as_secs_f64();
+}
+
+/// Stage 3 — Phase B's collect half (gradient parts for the partitions
+/// we own, verified against the commitments) and Phase C: CenteredClip
+/// per owned part, closed by broadcasting the aggregate's hash
+/// commitment *before* the verification direction z is known
+/// (commit-then-reveal).
+pub fn stage_parts(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
+    let me = ctx.net.id;
+    let t0 = Instant::now();
+    phase_timeout(ctx, 3);
+    let my_parts = st.my_parts.clone();
+    let contributors = st.contributors.clone();
     for &j in &my_parts {
         let mut part_rows: Vec<(PeerId, Vec<f32>)> = Vec::new();
         let senders: Vec<PeerId> =
             contributors.iter().copied().filter(|&p| p != me).collect();
-        let raw = ctx.collect_p2p(step, slots::sub(slots::GRAD_PART, j), &senders, &mut intents);
+        let raw = ctx.collect_p2p(step, slots::sub(slots::GRAD_PART, j), &senders, &mut st.intents);
         for (&p, payload) in &raw {
             let vals = super::messages::Reader::new(payload).f32s();
             match vals {
                 Some(v)
                     if v.len() == ctx.spec.len(j)
-                        && commits[p]
+                        && st.commits[p]
                             .as_ref()
                             .map(|c| c.parts[j] == sha256_f32(&v))
                             .unwrap_or(false) =>
@@ -529,22 +582,21 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
                 }
             }
         }
-        if i_contribute {
-            part_rows.push((me, ctx.spec.slice(&grad, j).to_vec()));
+        if st.i_contribute {
+            part_rows.push((me, ctx.spec.slice(&st.grad, j).to_vec()));
         }
         part_rows.sort_by_key(|(p, _)| *p);
-        rows.insert(j, part_rows);
+        st.rows.insert(j, part_rows);
     }
-    t.comm_s += t0.elapsed().as_secs_f64();
+    st.t.comm_s += t0.elapsed().as_secs_f64();
 
     // ---- Phase C: CenteredClip per owned part + commit --------------------
     let t0 = Instant::now();
-    let mut my_agg: HashMap<usize, Vec<f32>> = HashMap::new();
     for &j in &my_parts {
-        let part_rows = &rows[&j];
+        let part_rows = &st.rows[&j];
         let refs: Vec<&[f32]> = part_rows.iter().map(|(_, v)| v.as_slice()).collect();
         if refs.is_empty() {
-            my_agg.insert(j, vec![0.0; ctx.spec.len(j)]);
+            st.my_agg.insert(j, vec![0.0; ctx.spec.len(j)]);
             continue;
         }
         // Warm-start from the previous step's aggregate for this part:
@@ -554,7 +606,7 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
         let warm = ctx.archive.as_ref().map(|a| ctx.spec.slice(&a.ghat, j).to_vec());
         let mut value = centered_clip_init(
             &refs,
-            tau,
+            st.tau,
             ctx.cfg.clip_iters,
             ctx.cfg.clip_eps,
             warm.as_deref(),
@@ -569,9 +621,9 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
                 }
             }
         }
-        my_agg.insert(j, value);
+        st.my_agg.insert(j, value);
     }
-    t.clip_s += t0.elapsed().as_secs_f64();
+    st.t.clip_s += t0.elapsed().as_secs_f64();
 
     let t0 = Instant::now();
     for &j in &my_parts {
@@ -579,31 +631,44 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
             step,
             slots::sub(slots::AGG_COMMIT, j),
             MsgClass::Commitment,
-            sha256_f32(&my_agg[&j]).to_vec(),
+            sha256_f32(&st.my_agg[&j]).to_vec(),
         );
     }
+    st.t.comm_s += t0.elapsed().as_secs_f64();
+}
+
+/// Stage 4 — collect every part's aggregation commitment, then Phase
+/// D's send half: distribute our aggregated parts to every live peer.
+pub fn stage_agg_commits(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
+    let me = ctx.net.id;
+    let t0 = Instant::now();
     // Collect aggregation commitments for all parts.
-    phase_timeout!(4);
-    let mut agg_commits: Vec<Option<Digest>> = vec![None; n_parts];
-    for j in 0..n_parts {
+    phase_timeout(ctx, 4);
+    for j in 0..st.n_parts {
         let owner = ctx.owners.owner(j);
-        let raw =
-            ctx.collect_broadcast(step, slots::sub(slots::AGG_COMMIT, j), &[owner], &mut intents);
+        let raw = ctx.collect_broadcast(
+            step,
+            slots::sub(slots::AGG_COMMIT, j),
+            &[owner],
+            &mut st.intents,
+        );
         if let Some(bytes) = raw.get(&owner) {
             if bytes.len() == 32 {
                 let mut d = [0u8; 32];
                 d.copy_from_slice(bytes);
-                agg_commits[j] = Some(d);
+                st.agg_commits[j] = Some(d);
             }
         }
     }
 
     // ---- Phase D: distribute aggregated parts -----------------------------
+    let my_parts = st.my_parts.clone();
+    let live = ctx.live.clone();
     for &j in &my_parts {
         let mut w = Writer::new();
-        w.f32s(&my_agg[&j]);
+        w.f32s(&st.my_agg[&j]);
         let payload = w.finish();
-        for &p in &ctx.live {
+        for &p in &live {
             if p != me {
                 ctx.net.send(
                     p,
@@ -615,48 +680,139 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
             }
         }
     }
-    phase_timeout!(5);
-    let mut ghat_parts: Vec<Vec<f32>> = vec![Vec::new(); n_parts];
-    for j in 0..n_parts {
+    st.t.comm_s += t0.elapsed().as_secs_f64();
+}
+
+/// Stage 5 — Phase D's collect half: receive every owner's aggregated
+/// part, verify it against the commitment, and merge ĝ.
+pub fn stage_agg_parts(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
+    let me = ctx.net.id;
+    let t0 = Instant::now();
+    phase_timeout(ctx, 5);
+    for j in 0..st.n_parts {
         let owner = ctx.owners.owner(j);
         if owner == me {
-            ghat_parts[j] = my_agg[&j].clone();
+            st.ghat_parts[j] = st.my_agg[&j].clone();
             continue;
         }
-        let raw = ctx.collect_p2p(step, slots::sub(slots::AGG_PART, j), &[owner], &mut intents);
+        let raw = ctx.collect_p2p(step, slots::sub(slots::AGG_PART, j), &[owner], &mut st.intents);
         match raw.get(&owner).and_then(|b| super::messages::Reader::new(b).f32s()) {
             Some(v)
                 if v.len() == ctx.spec.len(j)
-                    && agg_commits[j].map(|c| c == sha256_f32(&v)).unwrap_or(false) =>
+                    && st.agg_commits[j].map(|c| c == sha256_f32(&v)).unwrap_or(false) =>
             {
-                ghat_parts[j] = v;
+                st.ghat_parts[j] = v;
             }
             _ => {
                 ctx.broadcast_eliminate(step, owner);
-                ghat_parts[j] = vec![0.0; ctx.spec.len(j)];
+                st.ghat_parts[j] = vec![0.0; ctx.spec.len(j)];
             }
         }
     }
-    let ghat = ctx.spec.merge(&ghat_parts);
-    t.comm_s += t0.elapsed().as_secs_f64();
+    st.ghat = ctx.spec.merge(&st.ghat_parts);
+    st.t.comm_s += t0.elapsed().as_secs_f64();
+}
 
-    // ---- Phase E: MPRNG + verification scalars ----------------------------
+/// Stage 6 — Phase E, MPRNG commit: broadcast the commitment for the
+/// current attempt.
+pub fn stage_mprng_commit(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
     let t0 = Instant::now();
-    phase_timeout!(6);
-    let r_out = ctx.mprng_round(step, &mut intents)?;
-    t.mprng_s += t0.elapsed().as_secs_f64();
+    phase_timeout(ctx, 6);
+    let round = MprngRound::new(ctx.net.id, &mut ctx.local_rng);
+    let slot_c = slots::sub(slots::MPRNG_COMMIT, st.mprng_attempt);
+    ctx.net
+        .broadcast(step, slot_c, MsgClass::Mprng, round.commitment().to_vec());
+    st.mprng_round = Some(round);
+    st.t.mprng_s += t0.elapsed().as_secs_f64();
+}
 
+/// Stage 7 — MPRNG reveal: collect the attempt's commitments, then
+/// broadcast our reveal (commit-before-reveal: the reveal only leaves
+/// once every participant's commitment is in).
+pub fn stage_mprng_reveal(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
     let t0 = Instant::now();
-    let z: Vec<Vec<f32>> =
-        (0..n_parts).map(|j| z_vector(&r_out, j, ctx.spec.len(j))).collect();
+    let slot_c = slots::sub(slots::MPRNG_COMMIT, st.mprng_attempt);
+    let slot_r = slots::sub(slots::MPRNG_REVEAL, st.mprng_attempt);
+    let participants = st.mprng_participants.clone();
+    st.mprng_commits_raw = ctx.collect_broadcast(step, slot_c, &participants, &mut st.intents);
+    let reveal = st.mprng_round.as_ref().expect("mprng round in flight").reveal();
+    ctx.net.broadcast(step, slot_r, MsgClass::Mprng, reveal);
+    st.t.mprng_s += t0.elapsed().as_secs_f64();
+}
 
-    if i_contribute {
+/// Stage 8 — MPRNG combine: collect reveals and derive r^t. Returns
+/// Ok(true) once r^t is agreed, Ok(false) when offenders were ejected
+/// and the round restarts (the driver re-runs stages 6–8), or the
+/// cluster-collapse error when quorum is lost.
+pub fn stage_mprng_combine(
+    ctx: &mut PeerCtx,
+    st: &mut StepState,
+    step: u64,
+) -> Result<bool, StepError> {
+    let t0 = Instant::now();
+    let slot_r = slots::sub(slots::MPRNG_REVEAL, st.mprng_attempt);
+    let participants = st.mprng_participants.clone();
+    let reveals_raw = ctx.collect_broadcast(step, slot_r, &participants, &mut st.intents);
+
+    let max_id = ctx.cfg.n0;
+    let mut commits: Vec<Option<Digest>> = vec![None; max_id];
+    let mut reveals: Vec<Option<Vec<u8>>> = vec![None; max_id];
+    for (&p, payload) in &st.mprng_commits_raw {
+        if payload.len() == 32 {
+            let mut d = [0u8; 32];
+            d.copy_from_slice(payload);
+            commits[p] = Some(d);
+        }
+    }
+    for (&p, payload) in &reveals_raw {
+        reveals[p] = Some(payload.to_vec());
+    }
+    let outcome = combine(&participants, &commits, &reveals);
+    st.t.mprng_s += t0.elapsed().as_secs_f64();
+    match outcome {
+        MprngOutcome::Ok(r) => {
+            st.r_out = Some(r);
+            Ok(true)
+        }
+        MprngOutcome::Offenders(off) => {
+            for &p in &off {
+                st.intents.push(BanIntent::Proven {
+                    observer: ctx.net.id,
+                    target: p,
+                    reason: BanReason::MprngViolation,
+                });
+            }
+            st.mprng_participants.retain(|p| !off.contains(p));
+            if st.mprng_participants.len() < 2 {
+                return Err(StepError::ClusterCollapsed("MPRNG lost quorum".to_string()));
+            }
+            st.mprng_attempt += 1;
+            if st.mprng_attempt > ctx.cfg.n0 {
+                return Err(StepError::ClusterCollapsed("MPRNG never converged".into()));
+            }
+            Ok(false)
+        }
+    }
+}
+
+/// Stage 9 — Phase E's send half: derive the per-part verification
+/// directions z[j] from r^t and broadcast our verification scalars
+/// (contributors only).
+pub fn stage_scalars(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
+    let me = ctx.net.id;
+    let t0 = Instant::now();
+    let r_out = st.r_out.expect("MPRNG must have converged");
+    st.z = (0..st.n_parts).map(|j| z_vector(&r_out, j, ctx.spec.len(j))).collect();
+
+    if st.i_contribute {
+        let n_parts = st.n_parts;
+        let tau = st.tau;
         let mut s = vec![0.0f32; n_parts];
         let mut norms = vec![0.0f32; n_parts];
         let mut over = vec![0u8; n_parts];
         for j in 0..n_parts {
-            let gj = ctx.spec.slice(&grad, j);
-            let hj = &ghat_parts[j];
+            let gj = ctx.spec.slice(&st.grad, j);
+            let hj = &st.ghat_parts[j];
             let diff_norm = {
                 let mut acc = 0.0f64;
                 for (a, b) in gj.iter().zip(hj) {
@@ -666,7 +822,7 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
                 acc.sqrt() as f32
             };
             let delta = clipped_diff(gj, hj, tau);
-            s[j] = dot(&z[j], &delta) as f32;
+            s[j] = dot(&st.z[j], &delta) as f32;
             norms[j] = diff_norm;
             over[j] = u8::from(diff_norm > ctx.cfg.delta_max);
         }
@@ -674,16 +830,16 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
         // whole discrepancy on its own parts so Σᵢ s_i^j stays ≈ 0.
         if let Behavior::Byzantine(b) = &ctx.behavior {
             if b.aggregation_attack && b.attack.schedule.active(step) {
-                for &j in &my_parts {
+                for &j in &st.my_parts {
                     let mut total = 0.0f64;
-                    for (_, row) in &rows[&j] {
-                        let delta = clipped_diff(row, &my_agg[&j], tau);
-                        total += dot(&z[j], &delta);
+                    for (_, row) in &st.rows[&j] {
+                        let delta = clipped_diff(row, &st.my_agg[&j], tau);
+                        total += dot(&st.z[j], &delta);
                     }
                     // Own true contribution is already inside `total`;
                     // replace own report so the sum comes out to zero.
-                    let own_delta = clipped_diff(ctx.spec.slice(&grad, j), &my_agg[&j], tau);
-                    let own_true = dot(&z[j], &own_delta);
+                    let own_delta = clipped_diff(ctx.spec.slice(&st.grad, j), &st.my_agg[&j], tau);
+                    let own_true = dot(&st.z[j], &own_delta);
                     s[j] = (own_true - total) as f32;
                 }
             }
@@ -701,17 +857,26 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
             payload,
         );
     }
-    phase_timeout!(7);
-    let mut scalars: Vec<Option<VerifyScalars>> = vec![None; ctx.cfg.n0];
+    st.t.verify_s += t0.elapsed().as_secs_f64();
+}
+
+/// Stage 10 — collect everyone's verification scalars, run
+/// Verifications 1–2, and broadcast any accusations plus the
+/// VERIFY_DONE barrier marker.
+pub fn stage_verify(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
+    let me = ctx.net.id;
+    let t0 = Instant::now();
+    phase_timeout(ctx, 7);
+    let contributors = st.contributors.clone();
     for &p in &contributors {
         let raw = ctx.collect_broadcast(
             step,
             slots::sub(slots::VERIFY_SCALARS, p),
             &[p],
-            &mut intents,
+            &mut st.intents,
         );
         if let Some(bytes) = raw.get(&p) {
-            scalars[p] = VerifyScalars::decode(bytes);
+            st.scalars[p] = VerifyScalars::decode(bytes);
         }
     }
 
@@ -719,19 +884,18 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
     // V1+V2 (owner-side): recompute each contributor's norm and s for our
     // parts; both sides run identical f32 code, so honest values match
     // bit-for-bit and any discrepancy is an accusation.
-    #[allow(unused_mut)]
     let mut accusations_out: Vec<Accusation> = Vec::new();
     let honest_behavior = !ctx.behavior.is_byzantine();
     if honest_behavior {
-        for &j in &my_parts {
-            for (p, row) in &rows[&j] {
+        for &j in &st.my_parts {
+            for (p, row) in &st.rows[&j] {
                 if *p == me {
                     continue;
                 }
-                let Some(sc) = &scalars[*p] else { continue };
+                let Some(sc) = &st.scalars[*p] else { continue };
                 let true_norm = {
                     let mut acc = 0.0f64;
-                    for (a, b) in row.iter().zip(&ghat_parts[j]) {
+                    for (a, b) in row.iter().zip(&st.ghat_parts[j]) {
                         let d = a - b;
                         acc += d as f64 * d as f64;
                     }
@@ -745,8 +909,8 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
                     });
                     continue;
                 }
-                let delta = clipped_diff(row, &ghat_parts[j], tau);
-                let true_s = dot(&z[j], &delta) as f32;
+                let delta = clipped_diff(row, &st.ghat_parts[j], st.tau);
+                let true_s = dot(&st.z[j], &delta) as f32;
                 if !close(sc.s[j], true_s, ctx.cfg.sum_rel_tol, ctx.cfg.abs_tol) {
                     accusations_out.push(Accusation {
                         target: *p,
@@ -763,17 +927,17 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
         // residual of up to ~n·that. Without (b) the alarm fires on honest
         // aggregations at large d and every peer pays a full O(n) gradient
         // recompute per step (measured: a 10× step-time regression).
-        for j in 0..n_parts {
+        for j in 0..st.n_parts {
             let mut total = 0.0f64;
             let mut abs_total = 0.0f64;
-            for &p in &contributors {
-                if let Some(sc) = &scalars[p] {
+            for &p in &st.contributors {
+                if let Some(sc) = &st.scalars[p] {
                     total += sc.s[j] as f64;
                     abs_total += sc.s[j].abs() as f64;
                 }
             }
-            let ghat_scale = crate::util::rng::l2_norm(&ghat_parts[j]).max(1.0) as f64;
-            let trunc = contributors.len() as f64 * ctx.cfg.clip_eps as f64 * ghat_scale * 10.0;
+            let ghat_scale = crate::util::rng::l2_norm(&st.ghat_parts[j]).max(1.0) as f64;
+            let trunc = st.contributors.len() as f64 * ctx.cfg.clip_eps as f64 * ghat_scale * 10.0;
             let tol =
                 ctx.cfg.abs_tol as f64 + ctx.cfg.sum_rel_tol as f64 * abs_total + trunc;
             if total.abs() > tol {
@@ -787,40 +951,66 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
     }
     accusations_out.sort_by_key(|a| (a.target, a.reason as u8, a.part));
     accusations_out.dedup();
+    // The slot carries 8 bits of accusation index; more than 256
+    // accusations from one peer in a single step would wrap onto an
+    // already-used slot and read as self-equivocation. Truncate instead:
+    // V1/V2 re-detect any offence we drop here on the next step, and the
+    // local adjudication below uses the same truncated list so every
+    // honest peer stays consistent.
+    accusations_out.truncate(256);
     for (k, acc) in accusations_out.iter().enumerate() {
         // One slot per accusation index: several distinct accusations
         // from one peer are distinct slots, not equivocation (the slot
         // key includes the sender, so indices don't collide across
-        // peers).
+        // peers). Bit 23 marks Phase-F accusations so peer 0's slot
+        // never collides with its own Phase-V ACCUSE slot (which is
+        // sub(ACCUSE, me) = ACCUSE|0).
         ctx.net.broadcast(
             step,
-            slots::sub(slots::ACCUSE, (me << 8) | (k & 0xFF)),
+            slots::sub(slots::ACCUSE, 0x0080_0000 | (me << 8) | (k & 0xFF)),
             MsgClass::Control,
             acc.encode(),
         );
     }
     // Barrier: every live peer announces it has finished broadcasting its
-    // verifications. Per-sender FIFO delivery then guarantees that all
-    // accusations are already in our mailbox when we drain below.
+    // verifications. Per-sender FIFO delivery (or the pooled stage
+    // barrier) then guarantees that all accusations are already in our
+    // mailbox when stage 11 drains.
     ctx.net
         .broadcast(step, slots::VERIFY_DONE, MsgClass::Control, vec![]);
+    st.accusations_out = accusations_out;
+    st.t.verify_s += t0.elapsed().as_secs_f64();
+}
+
+/// Stage 11 — wait out the VERIFY_DONE barrier, tally Verification-3
+/// votes, drain the step's control traffic (accusations, eliminations,
+/// equivocation evidence), adjudicate by recomputation (Algorithm 4),
+/// apply bans in canonical order, and draw the next step's validators.
+pub fn stage_finish(
+    ctx: &mut PeerCtx,
+    mut st: StepState,
+    step: u64,
+    params: &[f32],
+) -> Result<StepOutput, StepError> {
+    let me = ctx.net.id;
+    let t0 = Instant::now();
     {
-        phase_timeout!(9);
+        phase_timeout(ctx, 9);
         let live_now = ctx.live.clone();
-        let _ = ctx.collect_broadcast(step, slots::VERIFY_DONE, &live_now, &mut intents);
+        let _ = ctx.collect_broadcast(step, slots::VERIFY_DONE, &live_now, &mut st.intents);
     }
-    t.verify_s += t0.elapsed().as_secs_f64();
+    let mut intents = std::mem::take(&mut st.intents);
 
     // V3: majority vote on ‖g_i(j) − ĝ(j)‖ > Δ_max ⇒ CheckAveraging.
-    let t0 = Instant::now();
     let mut check_averaging_parts: Vec<usize> = Vec::new();
-    for j in 0..n_parts {
-        let votes: usize = contributors
+    for j in 0..st.n_parts {
+        let votes: usize = st
+            .contributors
             .iter()
-            .filter_map(|&p| scalars[p].as_ref())
+            .filter_map(|&p| st.scalars[p].as_ref())
             .map(|sc| sc.over[j] as usize)
             .sum();
-        if votes * 2 > contributors.len() {
+        if votes * 2 > st.contributors.len() {
             check_averaging_parts.push(j);
         }
     }
@@ -853,13 +1043,13 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
         if slots::tag(env.slot) == slots::ELIMINATE {
             if let Some(acc) = Accusation::decode(&env.payload) {
                 intents.push(BanIntent::Eliminate { accuser: env.from, target: acc.target });
-                eliminated_by.entry(env.from).or_insert_with(Vec::new).push(acc.target);
+                eliminated_by.entry(env.from).or_default().push(acc.target);
             }
         }
     }
     // Include our own accusations (broadcast also loops back, but the
     // drain may have raced; dedup below handles the overlap).
-    for acc in &accusations_out {
+    for acc in &st.accusations_out {
         all_accusations.push((me, acc.clone()));
     }
     all_accusations.sort_by_key(|(from, a)| (*from, a.target, a.reason as u8, a.part));
@@ -872,13 +1062,13 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
             step,
             params,
             acc,
-            &contributors,
-            &commits,
-            &scalars,
-            &ghat_parts,
-            &agg_commits,
-            &z,
-            &rows,
+            &st.contributors,
+            &st.commits,
+            &st.scalars,
+            &st.ghat_parts,
+            &st.agg_commits,
+            &st.z,
+            &st.rows,
             &eliminated_by,
         );
         match verdict {
@@ -917,13 +1107,13 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
             step,
             params,
             &acc,
-            &contributors,
-            &commits,
-            &scalars,
-            &ghat_parts,
-            &agg_commits,
-            &z,
-            &rows,
+            &st.contributors,
+            &st.commits,
+            &st.scalars,
+            &st.ghat_parts,
+            &st.agg_commits,
+            &st.z,
+            &st.rows,
             &eliminated_by,
         );
         match verdict {
@@ -940,7 +1130,7 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
             Verdict::AccuserGuilty => {} // vote-triggered: no accuser to punish
         }
     }
-    t.verify_s += t0.elapsed().as_secs_f64();
+    st.t.verify_s += t0.elapsed().as_secs_f64();
 
     // ---- Phase G: apply bans, draw next validators -------------------------
     let newly_banned = ctx.ledger.process(step, intents);
@@ -954,6 +1144,7 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
     ctx.owners.reassign_banned(&ctx.live);
 
     // Validators for the next step, drawn from r^t (consensus data).
+    let r_out = st.r_out.expect("MPRNG must have converged");
     let m = ctx.cfg.m_validators.min(ctx.live.len() / 2);
     let mut vrng = Rng::from_digest(&sha256_parts(&[b"btard-validators", &r_out]));
     let picks = vrng.sample_distinct(ctx.live.len(), 2 * m);
@@ -966,20 +1157,20 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
         step,
         params: params.to_vec(),
         seed_r: ctx.r_prev,
-        commits,
-        scalars,
-        ghat: ghat.clone(),
+        commits: std::mem::take(&mut st.commits),
+        scalars: std::mem::take(&mut st.scalars),
+        ghat: st.ghat.clone(),
         z_r: r_out,
-        contributors: contributors.clone(),
+        contributors: st.contributors.clone(),
     });
     ctx.r_prev = r_out;
     ctx.equiv.gc(step, 4);
 
     Ok(StepOutput {
-        aggregated: ghat,
+        aggregated: st.ghat,
         newly_banned,
-        loss,
-        timings: t,
+        loss: st.loss,
+        timings: st.t,
         r_out,
         check_averaging_parts,
     })

@@ -2,21 +2,39 @@
 //! (Algorithm 9), RESTARTED-BTARD-SGD (Algorithm 8), and the
 //! parameter-server baselines used in Fig. 3.
 //!
-//! `run_btard` spawns one OS thread per peer; each thread drives
-//! `btard_step` and applies the optimizer to the aggregated gradient, so
-//! parameters stay bit-identical across honest peers. Peer 0 (always
+//! Two execution models drive the same staged protocol (`step.rs`):
+//!
+//! - `run_btard_threaded` — the legacy model: one OS thread per peer,
+//!   each driving `btard_step` with blocking receives. Faithful wall
+//!   -clock timeout semantics, but infeasible for large-N sweeps.
+//! - `run_btard_pooled` — the pooled peer scheduler: N logical peers
+//!   multiplexed over W workers. The scheduler walks the cluster through
+//!   the step's stages with a barrier between stages; the transport runs
+//!   in drain mode (deterministic `(step, slot, from)` delivery order),
+//!   so honest peers stay bit-identical to the threaded path on the same
+//!   seed.
+//!
+//! `run_btard` defaults to the pooled scheduler (override with
+//! `BTARD_EXEC=threaded` or `BTARD_EXEC=pooled:<W>`). Peer 0 (always
 //! honest in supported configs) records metrics.
 
 use super::accuse::BanEvent;
 use super::aggregators::Aggregator;
 use super::attacks::{AttackKind, AttackSchedule, AttackState, CollusionBoard};
 use super::optimizer::{clip_global_norm, Lamb, LrSchedule, Optimizer, Sgd};
-use super::step::{batch_seed, btard_step, Behavior, ByzantineConfig, PeerCtx, ProtocolConfig};
+use super::step::{
+    batch_seed, btard_step, stage_agg_commits, stage_agg_parts, stage_begin, stage_commits,
+    stage_finish, stage_mprng_combine, stage_mprng_commit, stage_mprng_reveal, stage_parts,
+    stage_scalars, stage_verify, Behavior, ByzantineConfig, PeerCtx, ProtocolConfig, StepError,
+    StepOutput, StepState,
+};
 use crate::model::GradientSource;
-use crate::net::local::build_cluster;
+use crate::net::local::{build_cluster, RecvMode};
 use crate::net::PeerId;
 use crate::util::rng::Rng;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Instant;
 
 /// Optimizer choice for a run.
 #[derive(Clone, Debug)]
@@ -166,20 +184,79 @@ impl ClippedSource {
     }
 }
 
-/// Run BTARD-SGD with one thread per peer. `source` is shared: the data
-/// is public and gradient computation is a pure function of (params,
-/// seed), matching the paper's setting.
-pub fn run_btard(cfg: &RunConfig, source: Arc<dyn GradientSource>) -> RunResult {
-    assert!(!cfg.byzantine.contains(&0), "peer 0 must stay honest (metrics)");
-    assert!(cfg.n_peers >= 2);
-    let source: Arc<dyn GradientSource> = match cfg.clip_lambda {
+/// How `run_btard` executes the cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One OS thread per peer (legacy; real wall-clock timeout semantics).
+    Threaded,
+    /// N logical peers multiplexed over a fixed worker pool with
+    /// deterministic message ordering.
+    Pooled { workers: usize },
+}
+
+/// Default worker count for the pooled scheduler: the machine's
+/// parallelism, clamped to [2, 16].
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 16)
+}
+
+fn exec_mode_from_env() -> ExecMode {
+    match std::env::var("BTARD_EXEC") {
+        Ok(v) if v == "threaded" => ExecMode::Threaded,
+        Ok(v) if v == "pooled" => ExecMode::Pooled { workers: default_workers() },
+        Ok(v) => {
+            let workers = v.strip_prefix("pooled:").and_then(|w| w.parse().ok());
+            if workers.is_none() {
+                // A typo'd reproducibility knob must not misroute silently.
+                eprintln!(
+                    "warning: unrecognized BTARD_EXEC='{v}' (expected 'threaded', 'pooled' or \
+                     'pooled:<W>'); using the pooled default"
+                );
+            }
+            ExecMode::Pooled { workers: workers.unwrap_or_else(default_workers) }
+        }
+        Err(_) => ExecMode::Pooled { workers: default_workers() },
+    }
+}
+
+/// BTARD-CLIPPED-SGD wraps the source so validators recompute the same
+/// clipped vectors (Algorithm 9); plain BTARD passes it through.
+fn wrap_source(cfg: &RunConfig, source: Arc<dyn GradientSource>) -> Arc<dyn GradientSource> {
+    match cfg.clip_lambda {
         Some(lambda) => Arc::new(ClippedSource {
             inner: source,
             lambda,
             n_parts: cfg.protocol.n0,
         }),
         None => source,
-    };
+    }
+}
+
+/// Run BTARD-SGD. `source` is shared: the data is public and gradient
+/// computation is a pure function of (params, seed), matching the
+/// paper's setting. Defaults to the pooled scheduler; override with the
+/// `BTARD_EXEC` env var or call `run_btard_with` directly.
+pub fn run_btard(cfg: &RunConfig, source: Arc<dyn GradientSource>) -> RunResult {
+    run_btard_with(cfg, source, exec_mode_from_env())
+}
+
+/// Run BTARD-SGD under an explicit execution model.
+pub fn run_btard_with(
+    cfg: &RunConfig,
+    source: Arc<dyn GradientSource>,
+    mode: ExecMode,
+) -> RunResult {
+    match mode {
+        ExecMode::Threaded => run_btard_threaded(cfg, source),
+        ExecMode::Pooled { workers } => run_btard_pooled(cfg, source, workers),
+    }
+}
+
+/// Legacy execution model: one OS thread per peer, blocking receives.
+pub fn run_btard_threaded(cfg: &RunConfig, source: Arc<dyn GradientSource>) -> RunResult {
+    assert!(!cfg.byzantine.contains(&0), "peer 0 must stay honest (metrics)");
+    assert!(cfg.n_peers >= 2);
+    let source = wrap_source(cfg, source);
     let init_params = source.init_params(cfg.seed);
     let cluster = build_cluster(cfg.n_peers, cfg.seed ^ 0xC1A5, cfg.gossip_fanout, cfg.verify_signatures);
     let info = cluster[0].info.clone();
@@ -213,6 +290,368 @@ pub fn run_btard(cfg: &RunConfig, source: Arc<dyn GradientSource>) -> RunResult 
     result
 }
 
+// ---------------------------------------------------------------------------
+// Pooled peer scheduler
+// ---------------------------------------------------------------------------
+
+/// One logical peer's run state, owned by the scheduler and visited by
+/// whichever worker picks it up for the current stage.
+struct PeerTask {
+    peer: PeerId,
+    ctx: PeerCtx,
+    params: Vec<f32>,
+    opt: Box<dyn Optimizer>,
+    metrics: Vec<StepMetric>,
+    final_metric: f64,
+    steps_done: u64,
+    eval_every: u64,
+    total_steps: u64,
+    /// In-flight step state between stage dispatches.
+    state: Option<StepState>,
+    error: Option<StepError>,
+    /// Banned or collapsed: stops participating in further steps.
+    done: bool,
+    step_t0: Instant,
+}
+
+/// The protocol stages the scheduler walks each step through. Stages
+/// only collect messages sent in earlier stages, so a cluster-wide
+/// barrier between dispatches makes the transport's drain mode exact.
+#[derive(Clone, Copy, Debug)]
+enum StageId {
+    Begin,
+    Commits,
+    Parts,
+    AggCommits,
+    AggParts,
+    MprngCommit,
+    MprngReveal,
+    MprngCombine,
+    Scalars,
+    Verify,
+    Finish,
+}
+
+struct PoolShared {
+    tasks: Vec<Mutex<PeerTask>>,
+    /// Current (stage, step) job, set by the scheduler before the start
+    /// barrier.
+    job: Mutex<Option<(StageId, u64)>>,
+    /// Indices of tasks still participating this step.
+    active: Mutex<Vec<usize>>,
+    /// Work-stealing cursor into `active`.
+    cursor: AtomicUsize,
+    start: Barrier,
+    end: Barrier,
+    shutdown: AtomicBool,
+    /// A worker caught a panic in a protocol stage; the scheduler stops
+    /// cleanly and re-raises after the pool has shut down (panicking
+    /// inside the scope would leave parked workers unjoinable).
+    failed: AtomicBool,
+    /// First captured panic message, re-raised by the scheduler.
+    failure_msg: Mutex<Option<String>>,
+}
+
+/// Poison-tolerant lock: a poisoned task is still inspectable, and the
+/// pool-level `failed` flag (not the poison) decides how the run ends.
+fn lock_task(cell: &Mutex<PeerTask>) -> std::sync::MutexGuard<'_, PeerTask> {
+    cell.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        shared.start.wait();
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let (stage, step) = shared.job.lock().unwrap().expect("stage job set");
+        let active = shared.active.lock().unwrap().clone();
+        loop {
+            let k = shared.cursor.fetch_add(1, Ordering::SeqCst);
+            if k >= active.len() {
+                break;
+            }
+            // Contain stage panics: a dead worker would leave the barrier
+            // forever short, deadlocking the scheduler.
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut task = lock_task(&shared.tasks[active[k]]);
+                run_peer_stage(&mut task, stage, step);
+            }));
+            if let Err(payload) = outcome {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                let mut slot = shared.failure_msg.lock().unwrap_or_else(|p| p.into_inner());
+                slot.get_or_insert(msg);
+                shared.failed.store(true, Ordering::SeqCst);
+            }
+        }
+        shared.end.wait();
+    }
+}
+
+fn run_peer_stage(task: &mut PeerTask, stage: StageId, step: u64) {
+    if task.done || task.error.is_some() {
+        return;
+    }
+    match stage {
+        StageId::Begin => {
+            task.step_t0 = Instant::now();
+            task.state = Some(stage_begin(&mut task.ctx, step, &task.params));
+        }
+        StageId::Commits => {
+            stage_commits(&mut task.ctx, task.state.as_mut().expect("step in flight"), step)
+        }
+        StageId::Parts => {
+            stage_parts(&mut task.ctx, task.state.as_mut().expect("step in flight"), step)
+        }
+        StageId::AggCommits => {
+            stage_agg_commits(&mut task.ctx, task.state.as_mut().expect("step in flight"), step)
+        }
+        StageId::AggParts => {
+            stage_agg_parts(&mut task.ctx, task.state.as_mut().expect("step in flight"), step)
+        }
+        StageId::MprngCommit => {
+            stage_mprng_commit(&mut task.ctx, task.state.as_mut().expect("step in flight"), step)
+        }
+        StageId::MprngReveal => {
+            stage_mprng_reveal(&mut task.ctx, task.state.as_mut().expect("step in flight"), step)
+        }
+        StageId::MprngCombine => {
+            let st = task.state.as_mut().expect("step in flight");
+            if let Err(e) = stage_mprng_combine(&mut task.ctx, st, step) {
+                task.error = Some(e);
+            }
+        }
+        StageId::Scalars => {
+            stage_scalars(&mut task.ctx, task.state.as_mut().expect("step in flight"), step)
+        }
+        StageId::Verify => {
+            stage_verify(&mut task.ctx, task.state.as_mut().expect("step in flight"), step)
+        }
+        StageId::Finish => {
+            let st = task.state.take().expect("step in flight");
+            match stage_finish(&mut task.ctx, st, step, &task.params) {
+                Ok(out) => apply_step_output(task, step, out),
+                Err(e) => task.error = Some(e),
+            }
+        }
+    }
+}
+
+/// Post-step bookkeeping, mirroring the tail of `peer_main`: apply the
+/// optimizer, check whether we were banned, and (peer 0) record metrics.
+fn apply_step_output(task: &mut PeerTask, step: u64, out: StepOutput) {
+    let peer = task.peer;
+    if peer == 0 && std::env::var("BTARD_DEBUG_AGG").is_ok() {
+        eprintln!(
+            "dbg step {step}: |ghat|={:.4} loss={:.4}",
+            crate::util::rng::l2_norm(&out.aggregated),
+            out.loss
+        );
+    }
+    task.opt.step(step, &mut task.params, &out.aggregated);
+    task.steps_done = step + 1;
+    if task.ctx.ledger.is_banned(peer) {
+        task.done = true; // banned (Byzantine caught, or eliminated)
+        return;
+    }
+    if peer == 0 {
+        let metric = if step % task.eval_every == 0 || step + 1 == task.total_steps {
+            let m = task.ctx.source.eval(&task.params);
+            task.final_metric = m;
+            m
+        } else {
+            f64::NAN
+        };
+        task.metrics.push(StepMetric {
+            step,
+            loss: out.loss,
+            metric,
+            banned_now: out.newly_banned.clone(),
+            step_wall_s: task.step_t0.elapsed().as_secs_f64(),
+            grad_s: out.timings.grad_s,
+            clip_s: out.timings.clip_s,
+            mprng_s: out.timings.mprng_s,
+            verify_s: out.timings.verify_s,
+            comm_s: out.timings.comm_s,
+            validate_s: out.timings.validate_s,
+        });
+    }
+}
+
+fn dispatch(shared: &PoolShared, stage: StageId, step: u64) {
+    *shared.job.lock().unwrap() = Some((stage, step));
+    shared.cursor.store(0, Ordering::SeqCst);
+    shared.start.wait();
+    shared.end.wait();
+}
+
+/// Pooled execution: multiplex `cfg.n_peers` logical peers over
+/// `workers` OS threads. Honest-peer results are bit-identical to the
+/// threaded path on the same seed (wall-clock timing fields aside): the
+/// stage barrier plus the transport's canonical drain order removes
+/// every scheduling race the per-thread model tolerates.
+pub fn run_btard_pooled(
+    cfg: &RunConfig,
+    source: Arc<dyn GradientSource>,
+    workers: usize,
+) -> RunResult {
+    assert!(!cfg.byzantine.contains(&0), "peer 0 must stay honest (metrics)");
+    assert!(cfg.n_peers >= 2);
+    let source = wrap_source(cfg, source);
+    let init_params = source.init_params(cfg.seed);
+    let cluster = build_cluster(cfg.n_peers, cfg.seed ^ 0xC1A5, cfg.gossip_fanout, cfg.verify_signatures);
+    let info = cluster[0].info.clone();
+    let board = CollusionBoard::new();
+    let workers = workers.clamp(1, cfg.n_peers);
+
+    let tasks: Vec<Mutex<PeerTask>> = cluster
+        .into_iter()
+        .map(|mut net| {
+            net.recv_mode = RecvMode::Drain;
+            let peer = net.id;
+            let ctx = build_peer_ctx(net, cfg, source.clone(), init_params.len(), &board);
+            Mutex::new(PeerTask {
+                peer,
+                ctx,
+                params: init_params.clone(),
+                opt: cfg.opt.build(init_params.len(), cfg.segments.clone()),
+                metrics: Vec::new(),
+                final_metric: f64::NAN,
+                steps_done: 0,
+                eval_every: cfg.eval_every,
+                total_steps: cfg.steps,
+                state: None,
+                error: None,
+                done: false,
+                step_t0: Instant::now(),
+            })
+        })
+        .collect();
+
+    let shared = PoolShared {
+        tasks,
+        job: Mutex::new(None),
+        active: Mutex::new(Vec::new()),
+        cursor: AtomicUsize::new(0),
+        start: Barrier::new(workers + 1),
+        end: Barrier::new(workers + 1),
+        shutdown: AtomicBool::new(false),
+        failed: AtomicBool::new(false),
+        failure_msg: Mutex::new(None),
+    };
+
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let shared_ref = &shared;
+            std::thread::Builder::new()
+                .name(format!("btard-worker-{w}"))
+                .spawn_scoped(s, move || worker_loop(shared_ref))
+                .expect("spawn pool worker");
+        }
+
+        'run: for step in 0..cfg.steps {
+            let active: Vec<usize> = shared
+                .tasks
+                .iter()
+                .enumerate()
+                .filter(|(_, cell)| {
+                    let t = lock_task(cell);
+                    !t.done && t.error.is_none()
+                })
+                .map(|(i, _)| i)
+                .collect();
+            if active.len() < 2 {
+                break;
+            }
+            let probe_idx = active[0];
+            *shared.active.lock().unwrap() = active;
+
+            for stage in [
+                StageId::Begin,
+                StageId::Commits,
+                StageId::Parts,
+                StageId::AggCommits,
+                StageId::AggParts,
+            ] {
+                dispatch(&shared, stage, step);
+            }
+            if shared.failed.load(Ordering::SeqCst) {
+                break; // don't cascade secondary panics through later stages
+            }
+            // The MPRNG round restarts without offenders until it
+            // converges; every participant reaches the same retry
+            // decision deterministically, so one task's state is
+            // representative of the whole cluster.
+            loop {
+                dispatch(&shared, StageId::MprngCommit, step);
+                dispatch(&shared, StageId::MprngReveal, step);
+                dispatch(&shared, StageId::MprngCombine, step);
+                if shared.failed.load(Ordering::SeqCst) {
+                    break 'run;
+                }
+                let probe = lock_task(&shared.tasks[probe_idx]);
+                if probe.error.is_some() {
+                    break 'run;
+                }
+                let converged =
+                    probe.state.as_ref().map(|st| st.r_out.is_some()).unwrap_or(true);
+                drop(probe);
+                if converged {
+                    break;
+                }
+            }
+            for stage in [StageId::Scalars, StageId::Verify, StageId::Finish] {
+                dispatch(&shared, stage, step);
+            }
+            if shared.failed.load(Ordering::SeqCst) {
+                break;
+            }
+            if lock_task(&shared.tasks[probe_idx]).error.is_some() {
+                break; // cluster collapsed (deterministic across peers)
+            }
+        }
+
+        shared.shutdown.store(true, Ordering::SeqCst);
+        shared.start.wait();
+    });
+
+    if shared.failed.load(Ordering::SeqCst) {
+        let msg = shared
+            .failure_msg
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .take()
+            .unwrap_or_else(|| "unknown".to_string());
+        panic!("pooled worker panicked during a protocol stage: {msg}");
+    }
+    let PoolShared { tasks, .. } = shared;
+    let mut result: Option<RunResult> = None;
+    let mut recomputes = 0u64;
+    for cell in tasks {
+        let task = cell.into_inner().unwrap_or_else(|p| p.into_inner());
+        recomputes += task.ctx.recompute_count;
+        if task.peer == 0 {
+            result = Some(RunResult {
+                metrics: task.metrics,
+                ban_events: task.ctx.ledger.events.clone(),
+                final_params: task.params,
+                final_metric: task.final_metric,
+                peer_bytes: vec![],
+                recomputes: 0,
+                steps_done: task.steps_done,
+            });
+        }
+    }
+    let mut result = result.expect("peer 0 task present");
+    result.recomputes = recomputes;
+    result.peer_bytes = (0..cfg.n_peers).map(|p| info.stats.total_bytes(p)).collect();
+    result
+}
+
 struct PeerOutput {
     metrics: Vec<StepMetric>,
     ban_events: Vec<BanEvent>,
@@ -236,20 +675,23 @@ impl PeerOutput {
     }
 }
 
-fn peer_main(
+/// Assemble one peer's protocol context: its behaviour (honest or the
+/// configured attack), partition layout, ban ledger and local RNG.
+/// Shared by both execution models so their peers are interchangeable.
+fn build_peer_ctx(
     net: crate::net::local::PeerNet,
-    peer: PeerId,
-    cfg: RunConfig,
+    cfg: &RunConfig,
     source: Arc<dyn GradientSource>,
-    init_params: Vec<f32>,
-    board: Arc<CollusionBoard>,
-) -> PeerOutput {
+    param_dim: usize,
+    board: &Arc<CollusionBoard>,
+) -> PeerCtx {
+    let peer = net.id;
     let behavior = if cfg.byzantine.contains(&peer) {
         let (kind, schedule) = cfg
             .attack
             .unwrap_or((AttackKind::SignFlip { lambda: 1.0 }, AttackSchedule::from_step(u64::MAX)));
         Behavior::Byzantine(Box::new(ByzantineConfig {
-            attack: AttackState::new(kind, schedule, board),
+            attack: AttackState::new(kind, schedule, board.clone()),
             aggregation_attack: cfg.aggregation_attack,
             aggregation_shift: cfg.protocol.delta_max * 0.5,
             lazy_validator: true,
@@ -261,11 +703,11 @@ fn peer_main(
         Behavior::Honest
     };
     let r0 = crate::crypto::sha256_parts(&[b"btard-r0", &cfg.seed.to_le_bytes()]);
-    let mut ctx = PeerCtx {
+    PeerCtx {
         net,
         cfg: cfg.protocol.clone(),
-        source: source.clone(),
-        spec: super::partition::PartitionSpec::new(init_params.len(), cfg.protocol.n0),
+        source,
+        spec: super::partition::PartitionSpec::new(param_dim, cfg.protocol.n0),
         owners: super::partition::OwnerMap::initial(cfg.protocol.n0),
         live: (0..cfg.n_peers).collect(),
         ledger: super::accuse::BanLedger::new(),
@@ -276,7 +718,18 @@ fn peer_main(
         validators: vec![],
         archive: None,
         recompute_count: 0,
-    };
+    }
+}
+
+fn peer_main(
+    net: crate::net::local::PeerNet,
+    peer: PeerId,
+    cfg: RunConfig,
+    source: Arc<dyn GradientSource>,
+    init_params: Vec<f32>,
+    board: Arc<CollusionBoard>,
+) -> PeerOutput {
+    let mut ctx = build_peer_ctx(net, &cfg, source.clone(), init_params.len(), &board);
     let mut params = init_params;
     let mut opt = cfg.opt.build(params.len(), cfg.segments.clone());
     let mut metrics = Vec::new();

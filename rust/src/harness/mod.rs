@@ -3,6 +3,10 @@
 //! targets (`benches/*.rs`) drive this module to regenerate each of the
 //! paper's tables and figures.
 
+pub mod scenarios;
+
+pub use scenarios::{run_matrix, Arm, CellResult, MatrixReport, ScenarioSpec};
+
 use crate::coordinator::training::{RunResult, StepMetric};
 use crate::util::csv::{format_f64, CsvWriter};
 use crate::util::json::Json;

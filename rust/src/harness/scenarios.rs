@@ -1,0 +1,468 @@
+//! Declarative scenario-matrix runner: sweep {cluster size} × {attack
+//! kind} × {defense arm} from a single spec and emit per-cell CSV and
+//! JSON metrics. This is the workhorse behind `btard scenarios` and the
+//! scale bench: with the pooled peer scheduler a 256-peer cell no longer
+//! costs 256 OS threads, so the §4.1 attack zoo can be swept at sizes
+//! the per-thread execution model could not reach.
+
+use crate::coordinator::attacks::{AttackKind, AttackSchedule};
+use crate::coordinator::centered_clip::TauPolicy;
+use crate::coordinator::optimizer::LrSchedule;
+use crate::coordinator::training::{
+    default_workers, run_btard_pooled, run_ps, OptSpec, PsConfig, RunConfig,
+};
+use crate::coordinator::{Aggregator, ProtocolConfig};
+use crate::model::synthetic::Quadratic;
+use crate::model::GradientSource;
+use crate::util::csv::{format_f64, CsvWriter};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// One defense arm of the sweep.
+#[derive(Clone, Debug)]
+pub enum Arm {
+    /// Full BTARD with CenteredClip at the spec's τ.
+    Btard,
+    /// Trusted parameter-server baseline with the given aggregator.
+    Ps(Aggregator),
+}
+
+impl Arm {
+    pub fn name(&self) -> String {
+        match self {
+            Arm::Btard => "btard".to_string(),
+            Arm::Ps(agg) => format!("ps_{}", agg.name()),
+        }
+    }
+
+    /// Parse "btard" or "ps:<aggregator>".
+    pub fn from_name(s: &str) -> Option<Arm> {
+        if s == "btard" {
+            return Some(Arm::Btard);
+        }
+        let agg = s.strip_prefix("ps:")?;
+        Aggregator::from_name(agg).map(Arm::Ps)
+    }
+}
+
+/// The declarative sweep: every combination of `cluster_sizes` ×
+/// `attacks` × `arms` becomes one cell.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub cluster_sizes: Vec<usize>,
+    /// Fraction of peers that are Byzantine (0 disables attackers even
+    /// when an attack kind is listed); clamped below one half.
+    pub byzantine_frac: f64,
+    /// Attack names per `AttackKind::from_name`, or "none".
+    pub attacks: Vec<String>,
+    pub arms: Vec<Arm>,
+    pub steps: u64,
+    /// Objective dimension (raised to the cluster size when smaller, so
+    /// every peer owns at least one coordinate).
+    pub dim: usize,
+    pub attack_start: u64,
+    pub tau: f32,
+    pub delta_max: f32,
+    pub lr: f32,
+    pub seed: u64,
+    pub workers: usize,
+    pub eval_every: u64,
+    pub verify_signatures: bool,
+}
+
+impl ScenarioSpec {
+    /// A small matrix that exercises the full pipeline in seconds — the
+    /// CI smoke configuration.
+    pub fn smoke() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "smoke".to_string(),
+            cluster_sizes: vec![16, 32],
+            byzantine_frac: 0.25,
+            attacks: vec!["none".to_string(), "sign_flip:1000".to_string()],
+            arms: vec![Arm::Btard],
+            steps: 6,
+            dim: 1024,
+            attack_start: 2,
+            tau: 1.0,
+            delta_max: 4.0,
+            lr: 0.1,
+            seed: 1,
+            workers: default_workers(),
+            eval_every: 5,
+            verify_signatures: false,
+        }
+    }
+
+    /// Parse a JSON spec; absent fields fall back to `smoke()` values.
+    /// Unknown keys and present-but-wrong-typed values are hard errors: a
+    /// typo'd experiment spec must not silently run the wrong experiment.
+    pub fn parse(text: &str) -> Result<ScenarioSpec, String> {
+        const KNOWN: [&str; 15] = [
+            "name",
+            "cluster_sizes",
+            "byzantine_frac",
+            "attacks",
+            "arms",
+            "steps",
+            "dim",
+            "attack_start",
+            "tau",
+            "delta_max",
+            "lr",
+            "seed",
+            "workers",
+            "eval_every",
+            "verify_signatures",
+        ];
+        let j = Json::parse(text)?;
+        let obj = j.as_obj().ok_or("scenario spec must be a JSON object")?;
+        for key in obj.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                return Err(format!("unknown spec key '{key}'"));
+            }
+        }
+        let mut spec = ScenarioSpec::smoke();
+        if let Some(v) = j.get("name") {
+            spec.name = v.as_str().ok_or("name must be a string")?.to_string();
+        }
+        if let Some(v) = j.get("cluster_sizes") {
+            let sizes = v.as_arr().ok_or("cluster_sizes must be an array")?;
+            let parsed: Vec<usize> = sizes.iter().filter_map(|s| s.as_usize()).collect();
+            if parsed.len() != sizes.len() || parsed.iter().any(|&n| n < 2) {
+                return Err("cluster_sizes must be integers ≥ 2".to_string());
+            }
+            spec.cluster_sizes = parsed;
+        }
+        if let Some(v) = j.get("byzantine_frac") {
+            let f = v.as_f64().ok_or("byzantine_frac must be a number")?;
+            if !(0.0..0.5).contains(&f) {
+                return Err(format!("byzantine_frac {f} outside [0, 0.5)"));
+            }
+            spec.byzantine_frac = f;
+        }
+        if let Some(v) = j.get("attacks") {
+            let attacks = v.as_arr().ok_or("attacks must be an array")?;
+            let mut parsed = Vec::new();
+            for a in attacks {
+                let s = a.as_str().ok_or("attacks must be strings")?;
+                if s != "none" && AttackKind::from_name(s).is_none() {
+                    return Err(format!("unknown attack '{s}'"));
+                }
+                parsed.push(s.to_string());
+            }
+            spec.attacks = parsed;
+        }
+        if let Some(v) = j.get("arms") {
+            let arms = v.as_arr().ok_or("arms must be an array")?;
+            let mut parsed = Vec::new();
+            for a in arms {
+                let s = a.as_str().ok_or("arms must be strings")?;
+                parsed.push(Arm::from_name(s).ok_or(format!("unknown arm '{s}'"))?);
+            }
+            spec.arms = parsed;
+        }
+        if let Some(v) = j.get("steps") {
+            spec.steps = v.as_u64().ok_or("steps must be an integer")?;
+        }
+        if let Some(v) = j.get("dim") {
+            spec.dim = v.as_usize().ok_or("dim must be an integer")?;
+        }
+        if let Some(v) = j.get("attack_start") {
+            spec.attack_start = v.as_u64().ok_or("attack_start must be an integer")?;
+        }
+        if let Some(v) = j.get("tau") {
+            spec.tau = v.as_f64().ok_or("tau must be a number")? as f32;
+        }
+        if let Some(v) = j.get("delta_max") {
+            spec.delta_max = v.as_f64().ok_or("delta_max must be a number")? as f32;
+        }
+        if let Some(v) = j.get("lr") {
+            spec.lr = v.as_f64().ok_or("lr must be a number")? as f32;
+        }
+        if let Some(v) = j.get("seed") {
+            spec.seed = v.as_u64().ok_or("seed must be an integer")?;
+        }
+        if let Some(v) = j.get("workers") {
+            spec.workers = v.as_usize().ok_or("workers must be an integer")?.max(1);
+        }
+        if let Some(v) = j.get("eval_every") {
+            spec.eval_every = v.as_u64().ok_or("eval_every must be an integer")?.max(1);
+        }
+        if let Some(v) = j.get("verify_signatures") {
+            spec.verify_signatures = v.as_bool().ok_or("verify_signatures must be a bool")?;
+        }
+        Ok(spec)
+    }
+
+    fn byz_count(&self, n: usize) -> usize {
+        ((n as f64 * self.byzantine_frac) as usize).min(n.saturating_sub(1) / 2)
+    }
+}
+
+/// Metrics for one (n, attack, arm) cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub n: usize,
+    pub byz: usize,
+    pub attack: String,
+    pub arm: String,
+    pub final_metric: f64,
+    pub steps_done: u64,
+    pub bans: usize,
+    pub last_ban_step: Option<u64>,
+    /// Max per-peer traffic divided by completed steps (BTARD arms only;
+    /// the PS baseline does not model transport bytes).
+    pub bytes_per_peer_step: f64,
+    pub recomputes: u64,
+    /// Whole-cell wall time, including cluster construction and evals.
+    pub wall_s: f64,
+    /// Mean per-step wall time from peer 0's metrics (protocol stepping
+    /// only — excludes setup; 0 for arms that don't record step timings).
+    pub avg_step_ms: f64,
+}
+
+pub struct MatrixReport {
+    pub cells: Vec<CellResult>,
+    pub csv_path: PathBuf,
+    pub json_path: PathBuf,
+}
+
+/// Run every cell of the matrix and write `<name>_matrix.csv` plus
+/// `<name>_matrix.json` under `out_dir`. CSV rows are written and
+/// flushed as each cell finishes, so a crash (or Ctrl-C) late in an
+/// hours-long sweep loses at most the in-flight cell.
+pub fn run_matrix(spec: &ScenarioSpec, out_dir: &Path) -> std::io::Result<MatrixReport> {
+    std::fs::create_dir_all(out_dir)?;
+    let csv_path = out_dir.join(format!("{}_matrix.csv", spec.name));
+    let mut w = CsvWriter::create(
+        &csv_path,
+        &[
+            "n",
+            "byz",
+            "attack",
+            "arm",
+            "final_metric",
+            "steps_done",
+            "bans",
+            "last_ban_step",
+            "bytes_per_peer_step",
+            "recomputes",
+            "wall_s",
+            "avg_step_ms",
+        ],
+    )?;
+    let mut cells = Vec::new();
+    for &n in &spec.cluster_sizes {
+        for attack in &spec.attacks {
+            for arm in &spec.arms {
+                let c = run_cell(spec, n, attack, arm);
+                w.row(&[
+                    c.n.to_string(),
+                    c.byz.to_string(),
+                    c.attack.clone(),
+                    c.arm.clone(),
+                    format_f64(c.final_metric),
+                    c.steps_done.to_string(),
+                    c.bans.to_string(),
+                    c.last_ban_step.map(|s| s.to_string()).unwrap_or_default(),
+                    format_f64(c.bytes_per_peer_step),
+                    c.recomputes.to_string(),
+                    format_f64(c.wall_s),
+                    format_f64(c.avg_step_ms),
+                ])?;
+                w.flush()?;
+                cells.push(c);
+            }
+        }
+    }
+
+    let json_path = out_dir.join(format!("{}_matrix.json", spec.name));
+    let cell_objs: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("n", Json::num(c.n as f64)),
+                ("byz", Json::num(c.byz as f64)),
+                ("attack", Json::str(&c.attack)),
+                ("arm", Json::str(&c.arm)),
+                ("final_metric", Json::num(c.final_metric)),
+                ("steps_done", Json::num(c.steps_done as f64)),
+                ("bans", Json::num(c.bans as f64)),
+                ("bytes_per_peer_step", Json::num(c.bytes_per_peer_step)),
+                ("recomputes", Json::num(c.recomputes as f64)),
+                ("wall_s", Json::num(c.wall_s)),
+                ("avg_step_ms", Json::num(c.avg_step_ms)),
+            ])
+        })
+        .collect();
+    let summary = Json::obj(vec![
+        ("name", Json::str(&spec.name)),
+        ("workers", Json::num(spec.workers as f64)),
+        ("cells", Json::Arr(cell_objs)),
+    ]);
+    std::fs::write(&json_path, summary.to_string_pretty())?;
+
+    Ok(MatrixReport { cells, csv_path, json_path })
+}
+
+fn run_cell(spec: &ScenarioSpec, n: usize, attack: &str, arm: &Arm) -> CellResult {
+    let byz = if attack == "none" { 0 } else { spec.byz_count(n) };
+    let attack_cfg = if attack == "none" {
+        None
+    } else {
+        AttackKind::from_name(attack)
+            .map(|k| (k, AttackSchedule::from_step(spec.attack_start)))
+    };
+    let dim = spec.dim.max(n);
+    let source: Arc<dyn GradientSource> = Arc::new(Quadratic::new(dim, 0.1, 2.0, 1.0, spec.seed));
+    let opt = OptSpec::Sgd {
+        schedule: LrSchedule::Constant(spec.lr),
+        momentum: 0.0,
+        nesterov: false,
+    };
+    let t0 = std::time::Instant::now();
+    let res = match arm {
+        Arm::Btard => {
+            let cfg = RunConfig {
+                n_peers: n,
+                byzantine: ((n - byz)..n).collect(),
+                attack: attack_cfg,
+                aggregation_attack: false,
+                steps: spec.steps,
+                protocol: ProtocolConfig {
+                    n0: n,
+                    tau: TauPolicy::Fixed(spec.tau),
+                    m_validators: (n / 8).max(1),
+                    delta_max: spec.delta_max,
+                    global_seed: spec.seed,
+                    ..ProtocolConfig::default()
+                },
+                opt,
+                clip_lambda: None,
+                eval_every: spec.eval_every,
+                seed: spec.seed,
+                verify_signatures: spec.verify_signatures,
+                gossip_fanout: 8,
+                segments: vec![],
+            };
+            run_btard_pooled(&cfg, source, spec.workers)
+        }
+        Arm::Ps(agg) => {
+            let cfg = PsConfig {
+                n_peers: n,
+                byzantine: ((n - byz)..n).collect(),
+                attack: attack_cfg,
+                aggregator: *agg,
+                tau: spec.tau,
+                steps: spec.steps,
+                opt,
+                eval_every: spec.eval_every,
+                seed: spec.seed,
+            };
+            run_ps(&cfg, source)
+        }
+    };
+    let wall_s = t0.elapsed().as_secs_f64();
+    let bytes_per_peer_step = res
+        .peer_bytes
+        .iter()
+        .copied()
+        .max()
+        .map(|b| b as f64 / res.steps_done.max(1) as f64)
+        .unwrap_or(0.0);
+    let avg_step_ms = if res.metrics.is_empty() {
+        0.0
+    } else {
+        res.metrics.iter().map(|m| m.step_wall_s).sum::<f64>() / res.metrics.len() as f64 * 1e3
+    };
+    CellResult {
+        n,
+        byz,
+        attack: attack.to_string(),
+        arm: arm.name(),
+        final_metric: res.final_metric,
+        steps_done: res.steps_done,
+        bans: res.ban_events.len(),
+        last_ban_step: res.ban_events.iter().map(|b| b.step).max(),
+        bytes_per_peer_step,
+        recomputes: res.recomputes,
+        wall_s,
+        avg_step_ms,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let text = r#"{
+          "name": "zoo", "cluster_sizes": [4, 8], "byzantine_frac": 0.25,
+          "attacks": ["none", "sign_flip:100"],
+          "arms": ["btard", "ps:centered_clip"],
+          "steps": 3, "dim": 64, "attack_start": 1, "tau": 2.0,
+          "workers": 2, "verify_signatures": true
+        }"#;
+        let spec = ScenarioSpec::parse(text).unwrap();
+        assert_eq!(spec.name, "zoo");
+        assert_eq!(spec.cluster_sizes, vec![4, 8]);
+        assert_eq!(spec.attacks.len(), 2);
+        assert_eq!(spec.arms.len(), 2);
+        assert_eq!(spec.arms[1].name(), "ps_centered_clip");
+        assert_eq!(spec.tau, 2.0);
+        assert!(spec.verify_signatures);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(ScenarioSpec::parse("{").is_err());
+        assert!(ScenarioSpec::parse(r#"{"attacks": ["bogus"]}"#).is_err());
+        assert!(ScenarioSpec::parse(r#"{"arms": ["ps:bogus"]}"#).is_err());
+        assert!(ScenarioSpec::parse(r#"{"byzantine_frac": 0.7}"#).is_err());
+        assert!(ScenarioSpec::parse(r#"{"cluster_sizes": [1]}"#).is_err());
+        // A typo'd key or wrong-typed value must not silently run the
+        // smoke defaults under the user's experiment name.
+        assert!(ScenarioSpec::parse(r#"{"cluster_size": [4, 8]}"#).is_err());
+        assert!(ScenarioSpec::parse(r#"{"steps": "50"}"#).is_err());
+    }
+
+    #[test]
+    fn tiny_matrix_runs_and_writes_files() {
+        let spec = ScenarioSpec {
+            name: "unit".to_string(),
+            cluster_sizes: vec![4],
+            byzantine_frac: 0.25,
+            attacks: vec!["none".to_string()],
+            arms: vec![Arm::Btard, Arm::Ps(Aggregator::Mean)],
+            steps: 2,
+            dim: 64,
+            attack_start: 1,
+            tau: 2.0,
+            delta_max: 5.0,
+            lr: 0.1,
+            seed: 3,
+            workers: 2,
+            eval_every: 1,
+            verify_signatures: false,
+        };
+        // Per-process dir: concurrent `cargo test` runs must not delete
+        // each other's in-flight output.
+        let dir =
+            std::env::temp_dir().join(format!("btard_scenarios_unit_{}", std::process::id()));
+        let report = run_matrix(&spec, &dir).unwrap();
+        assert_eq!(report.cells.len(), 2);
+        for c in &report.cells {
+            assert_eq!(c.steps_done, 2, "{c:?}");
+            assert_eq!(c.bans, 0, "{c:?}");
+            assert!(c.final_metric.is_finite());
+        }
+        let csv = std::fs::read_to_string(&report.csv_path).unwrap();
+        assert!(csv.lines().count() == 3, "{csv}");
+        let json = std::fs::read_to_string(&report.json_path).unwrap();
+        assert!(json.contains("\"cells\""));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

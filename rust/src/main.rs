@@ -3,26 +3,32 @@
 //!
 //!   train       run BTARD-SGD on a built-in workload (mlp | quadratic)
 //!   ps          run a trusted-PS baseline with a chosen aggregator
+//!   scenarios   run a declarative {size}×{attack}×{arm} matrix sweep
 //!   inspect     list the AOT artifacts in the manifest
 //!   selftest    quick end-to-end smoke test (no artifacts needed)
 //!
 //! Examples:
 //!   btard train --workload mlp --peers 16 --byzantine 7 \
 //!         --attack sign_flip:1000 --attack-start 100 --tau 1 --steps 500
+//!   btard train --peers 256 --steps 10 --workers 8     # pooled scheduler
+//!   btard scenarios --spec zoo.json --out results
 //!   btard ps --aggregator coord_median --steps 300
 //!   btard inspect --artifacts artifacts
 
 use btard::coordinator::attacks::{AttackKind, AttackSchedule};
 use btard::coordinator::centered_clip::TauPolicy;
 use btard::coordinator::optimizer::LrSchedule;
-use btard::coordinator::training::{run_btard, run_ps, OptSpec, PsConfig, RunConfig};
+use btard::coordinator::training::{
+    default_workers, run_btard, run_btard_with, run_ps, ExecMode, OptSpec, PsConfig, RunConfig,
+};
 use btard::coordinator::{Aggregator, ProtocolConfig};
 use btard::data::synth_vision::SynthVision;
-use btard::harness::{Recorder, Table};
+use btard::harness::{run_matrix, Recorder, ScenarioSpec, Table};
 use btard::model::mlp::MlpModel;
 use btard::model::synthetic::Quadratic;
 use btard::model::GradientSource;
 use btard::util::cli::Args;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 fn main() {
@@ -31,12 +37,13 @@ fn main() {
     match cmd {
         "train" => cmd_train(&args),
         "ps" => cmd_ps(&args),
+        "scenarios" => cmd_scenarios(&args),
         "inspect" => cmd_inspect(&args),
         "selftest" => cmd_selftest(),
         _ => {
             println!(
                 "btard — Byzantine-Tolerant All-Reduce (ICML 2022 reproduction)\n\n\
-                 usage: btard <train|ps|inspect|selftest> [flags]\n\
+                 usage: btard <train|ps|scenarios|inspect|selftest> [flags]\n\
                  common flags:\n\
                  \x20 --workload mlp|quadratic    training objective\n\
                  \x20 --peers N --byzantine B     cluster composition\n\
@@ -45,11 +52,65 @@ fn main() {
                  \x20 --attack-start S            first attacking step\n\
                  \x20 --tau T | --tau inf         CenteredClip clipping level\n\
                  \x20 --validators M --steps K --lr LR --seed S\n\
+                 \x20 --exec pooled|threaded      execution model (default pooled)\n\
+                 \x20 --workers W                 pooled-scheduler worker count\n\
                  \x20 --aggregator NAME           (ps) mean, coord_median, geo_median,\n\
-                 \x20                             trimmed_mean, krum, centered_clip"
+                 \x20                             trimmed_mean, krum, centered_clip\n\
+                 scenarios flags:\n\
+                 \x20 --spec FILE.json            scenario matrix spec (default: smoke)\n\
+                 \x20 --out DIR                   output directory (default: results)"
             );
         }
     }
+}
+
+/// Execution model from --exec / --workers (default: pooled scheduler).
+fn parse_exec(args: &Args, n_peers: usize) -> ExecMode {
+    match args.get_str("exec", "pooled") {
+        "threaded" => ExecMode::Threaded,
+        "pooled" => ExecMode::Pooled {
+            workers: args.get_usize("workers", default_workers()).clamp(1, n_peers),
+        },
+        other => panic!("--exec expects 'pooled' or 'threaded', got '{other}'"),
+    }
+}
+
+fn cmd_scenarios(args: &Args) {
+    let mut spec = match args.get("spec") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .unwrap_or_else(|e| panic!("reading spec '{path}': {e}"));
+            ScenarioSpec::parse(&text).unwrap_or_else(|e| panic!("bad scenario spec: {e}"))
+        }
+        None => ScenarioSpec::smoke(),
+    };
+    if let Some(w) = args.get("workers") {
+        spec.workers = w.parse().expect("--workers expects an integer");
+    }
+    let out_dir = PathBuf::from(args.get_str("out", "results"));
+    eprintln!(
+        "scenario matrix '{}': {} sizes × {} attacks × {} arms on {} workers",
+        spec.name,
+        spec.cluster_sizes.len(),
+        spec.attacks.len(),
+        spec.arms.len(),
+        spec.workers
+    );
+    let report = run_matrix(&spec, &out_dir).expect("write matrix results");
+    let mut table = Table::new(&["n", "byz", "attack", "arm", "final", "bans", "wall_s"]);
+    for c in &report.cells {
+        table.row(vec![
+            c.n.to_string(),
+            c.byz.to_string(),
+            c.attack.clone(),
+            c.arm.clone(),
+            format!("{:.4}", c.final_metric),
+            c.bans.to_string(),
+            format!("{:.1}", c.wall_s),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("csv: {} | json: {}", report.csv_path.display(), report.json_path.display());
 }
 
 fn build_source(args: &Args) -> Arc<dyn GradientSource> {
@@ -88,7 +149,8 @@ fn cmd_train(args: &Args) {
         let cfg = btard::coordinator::runconfig::load_run_config(path)
             .unwrap_or_else(|e| panic!("{e:#}"));
         let source = build_source(args);
-        run_and_report(cfg, source);
+        let mode = parse_exec(args, cfg.n_peers);
+        run_and_report(cfg, source, mode);
         return;
     }
     let n = args.get_usize("peers", 16);
@@ -125,19 +187,21 @@ fn cmd_train(args: &Args) {
         gossip_fanout: 8,
         segments: vec![],
     };
-    run_and_report(cfg, source);
+    let mode = parse_exec(args, n);
+    run_and_report(cfg, source, mode);
 }
 
-fn run_and_report(cfg: RunConfig, source: Arc<dyn GradientSource>) {
+fn run_and_report(cfg: RunConfig, source: Arc<dyn GradientSource>, mode: ExecMode) {
     eprintln!(
-        "btard train: {} peers ({} byzantine), {} steps, attack={:?}",
+        "btard train: {} peers ({} byzantine), {} steps, attack={:?}, exec={:?}",
         cfg.n_peers,
         cfg.byzantine.len(),
         cfg.steps,
-        cfg.attack.map(|(k, _)| k.name())
+        cfg.attack.map(|(k, _)| k.name()),
+        mode
     );
     let t0 = std::time::Instant::now();
-    let res = run_btard(&cfg, source);
+    let res = run_btard_with(&cfg, source, mode);
     let wall = t0.elapsed().as_secs_f64();
     let mut rec = Recorder::new("cli_train");
     rec.record_run("run", &res);

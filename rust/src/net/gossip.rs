@@ -75,7 +75,7 @@ mod tests {
             step,
             slot,
             class: MsgClass::Commitment,
-            payload,
+            payload: payload.into(),
             broadcast: true,
             signature: None,
         }
@@ -113,7 +113,7 @@ mod tests {
         let mut e = env(1, 0, slots::GRAD_PART, vec![1]);
         e.broadcast = false;
         assert!(t.observe(&e).is_none());
-        e.payload = vec![2];
+        e.payload = vec![2].into();
         assert!(t.observe(&e).is_none());
         assert!(t.is_empty());
     }

@@ -5,6 +5,21 @@
 //! transport then mimics GossipSub relay by delivering *every* variant to
 //! *every* peer, so honest receivers observe the equivocation and ban the
 //! sender (the paper's eventual-consistency assumption, footnote 4).
+//!
+//! Receives run in one of two modes (`RecvMode`):
+//!
+//! - `Blocking` — the classic one-OS-thread-per-peer execution model:
+//!   `recv_match` parks on the channel until a matching envelope arrives
+//!   or the timeout elapses (timeout ⇒ protocol violation upstream).
+//! - `Drain` — used by the pooled peer scheduler, which guarantees (via a
+//!   cluster-wide barrier between protocol stages) that every message a
+//!   stage may wait for has already been sent. `recv_match` drains the
+//!   channel into the pending buffer, orders it by the canonical
+//!   `(step, slot, from)` key — stable, so a Byzantine sender's
+//!   equivocation variants keep their per-sender FIFO order — and either
+//!   returns a match or reports `Timeout` immediately. The deterministic
+//!   order makes a pooled run bit-identical to a threaded run of the
+//!   same seed regardless of worker interleaving.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -23,6 +38,18 @@ pub struct ClusterInfo {
     pub verify_signatures: bool,
 }
 
+/// How `recv_match` waits for messages (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RecvMode {
+    /// Block on the channel up to `timeout` (per-peer-thread execution).
+    #[default]
+    Blocking,
+    /// Never block: drain the channel, order deterministically, and treat
+    /// a missing message as an immediate timeout (pooled scheduler; a
+    /// stage barrier guarantees expected messages were already sent).
+    Drain,
+}
+
 /// A peer's endpoint: its mailbox plus senders to every other peer.
 pub struct PeerNet {
     pub id: PeerId,
@@ -36,6 +63,7 @@ pub struct PeerNet {
     /// Default receive timeout: elapsed ⇒ counterpart considered in
     /// violation of the protocol (triggers ELIMINATE upstream).
     pub timeout: Duration,
+    pub recv_mode: RecvMode,
 }
 
 /// Build a fully connected in-process cluster.
@@ -74,6 +102,7 @@ pub fn build_cluster(
             mailbox,
             pending: Vec::new(),
             timeout: Duration::from_secs(30),
+            recv_mode: RecvMode::Blocking,
         })
         .collect()
 }
@@ -100,11 +129,15 @@ impl PeerNet {
             step,
             slot,
             class,
-            payload,
+            payload: payload.into(),
             broadcast,
             signature: None,
         };
-        env.sign_with(&self.mont, &self.secret);
+        // When the cluster runs with verification off (numerics benches),
+        // signing would be pure waste: nobody ever checks the bytes.
+        if self.info.verify_signatures {
+            env.sign_with(&self.mont, &self.secret);
+        }
         env
     }
 
@@ -154,10 +187,42 @@ impl PeerNet {
         }
     }
 
+    /// Drain every immediately available envelope into `pending` (dropping
+    /// forged ones) and sort it by the canonical delivery key. The sort is
+    /// stable, so multiple envelopes with the same key — equivocation
+    /// variants from one sender — stay in their per-sender FIFO order,
+    /// exactly as a blocking receiver would have observed them.
+    fn refill_pending_ordered(&mut self) {
+        let mut added = false;
+        while let Ok(env) = self.mailbox.try_recv() {
+            if self.info.verify_signatures
+                && !env.verify_with(&self.mont, &self.info.public_keys[env.from])
+            {
+                continue; // forged — drop silently
+            }
+            self.pending.push(env);
+            added = true;
+        }
+        if added {
+            // Stable + adaptive: appending to an already-sorted prefix
+            // keeps re-sorting near-linear, so per-collect refills stay
+            // cheap even at hundreds of peers.
+            self.pending.sort_by_key(|e| (e.step, e.slot, e.from));
+        }
+    }
+
     /// Receive the next envelope matching `pred`, buffering mismatches.
     /// Envelopes with invalid signatures are dropped (per the paper: a
     /// receiver ignores unsigned/forged messages).
     pub fn recv_match<F: Fn(&Envelope) -> bool>(&mut self, pred: F) -> Result<Envelope, RecvError> {
+        if self.recv_mode == RecvMode::Drain {
+            self.refill_pending_ordered();
+            return match self.pending.iter().position(|e| pred(e)) {
+                // `remove`, not `swap_remove`: keep the canonical order.
+                Some(pos) => Ok(self.pending.remove(pos)),
+                None => Err(RecvError::Timeout),
+            };
+        }
         if let Some(pos) = self.pending.iter().position(|e| pred(e)) {
             return Ok(self.pending.swap_remove(pos));
         }
@@ -188,6 +253,12 @@ impl PeerNet {
     /// Drain any already-buffered or immediately available envelopes
     /// matching `pred` without blocking.
     pub fn drain_match<F: Fn(&Envelope) -> bool>(&mut self, pred: F) -> Vec<Envelope> {
+        if self.recv_mode == RecvMode::Drain {
+            // Pull everything into `pending` first so the result comes out
+            // in canonical order (the loop below then finds the channel
+            // empty and just partitions the buffer).
+            self.refill_pending_ordered();
+        }
         let mut out = Vec::new();
         let mut keep = Vec::new();
         for e in self.pending.drain(..) {
@@ -228,7 +299,7 @@ mod tests {
         let env = p0
             .recv_match(|e| e.from == 1 && e.slot == slots::GRAD_PART)
             .unwrap();
-        assert_eq!(env.payload, vec![42]);
+        assert_eq!(env.payload.to_vec(), vec![42]);
         assert_eq!(env.step, 1);
     }
 
@@ -239,7 +310,7 @@ mod tests {
         for p in cluster.iter_mut() {
             let env = p.recv_match(|e| e.slot == slots::GRAD_COMMIT).unwrap();
             assert_eq!(env.from, 0);
-            assert_eq!(env.payload, vec![7]);
+            assert_eq!(env.payload.to_vec(), vec![7]);
         }
     }
 
@@ -269,9 +340,9 @@ mod tests {
         p1.send(0, 5, slots::GRAD_PART, MsgClass::GradientPart, vec![8]);
         // Ask for the later-sent first; earlier one must stay pending.
         let g = p0.recv_match(|e| e.slot == slots::GRAD_PART).unwrap();
-        assert_eq!(g.payload, vec![8]);
+        assert_eq!(g.payload.to_vec(), vec![8]);
         let v = p0.recv_match(|e| e.slot == slots::VERIFY_SCALARS).unwrap();
-        assert_eq!(v.payload, vec![9]);
+        assert_eq!(v.payload.to_vec(), vec![9]);
     }
 
     #[test]
@@ -280,6 +351,35 @@ mod tests {
         cluster[0].timeout = Duration::from_millis(10);
         let err = cluster[0].recv_match(|_| true);
         assert!(matches!(err, Err(RecvError::Timeout)));
+    }
+
+    #[test]
+    fn drain_mode_orders_deterministically_and_never_blocks() {
+        let mut cluster = build_cluster(2, 700, 8, true);
+        let p1 = cluster.pop().unwrap();
+        let mut p0 = cluster.pop().unwrap();
+        p0.recv_mode = RecvMode::Drain;
+        // Nothing sent yet: immediate timeout instead of a 30 s park.
+        let t0 = std::time::Instant::now();
+        assert!(matches!(p0.recv_match(|_| true), Err(RecvError::Timeout)));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        // Sent out of canonical order; drained in (step, slot, from) order.
+        p1.send(0, 3, slots::GRAD_PART, MsgClass::GradientPart, vec![3]);
+        p1.send(0, 1, slots::GRAD_PART, MsgClass::GradientPart, vec![1]);
+        let a = p0.recv_match(|e| e.slot == slots::GRAD_PART).unwrap();
+        let b = p0.recv_match(|e| e.slot == slots::GRAD_PART).unwrap();
+        assert_eq!((a.step, b.step), (1, 3));
+    }
+
+    #[test]
+    fn signatures_skipped_when_verification_disabled() {
+        let mut cluster = build_cluster(2, 800, 8, false);
+        let p1 = cluster.pop().unwrap();
+        let mut p0 = cluster.pop().unwrap();
+        p1.send(0, 0, slots::GRAD_PART, MsgClass::GradientPart, vec![5]);
+        let env = p0.recv_match(|e| e.from == 1).unwrap();
+        assert!(env.signature.is_none());
+        assert_eq!(env.payload.to_vec(), vec![5]);
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Peer-to-peer message substrate for the simulated cluster.
 //!
-//! Every peer runs on its own OS thread with a mailbox; the transport
-//! (`local`) delivers signed envelopes between threads. Broadcast uses a
+//! Every peer owns a mailbox; the transport (`local`) delivers signed
+//! envelopes between peers whether they run on their own OS threads
+//! (blocking receives) or are multiplexed over a worker pool
+//! (deterministic drain-mode receives). Broadcast uses a
 //! logical broadcast channel with GossipSub-style cost accounting
 //! (`stats`) and equivocation detection (`gossip`): a peer that signs two
 //! contradicting messages for the same protocol slot is banned by every
@@ -12,6 +14,7 @@ pub mod local;
 pub mod stats;
 
 use crate::crypto::{sign, verify, Mont, PublicKey, SecretKey, Signature};
+use std::sync::Arc;
 pub use stats::{MsgClass, TrafficStats};
 
 /// Peer identifier: index into the initial roster (stable across bans).
@@ -27,7 +30,11 @@ pub struct Envelope {
     /// with `step` this is the equivocation key for broadcasts.
     pub slot: u32,
     pub class: MsgClass,
-    pub payload: Vec<u8>,
+    /// Payload bytes, reference-counted so a broadcast to N receivers
+    /// clones a pointer, not the buffer. Commit vectors are O(n) hashes,
+    /// so per-receiver copies would cost O(n³) bytes cluster-wide — the
+    /// difference between a 512-peer sweep fitting in memory or not.
+    pub payload: Arc<[u8]>,
     /// True if this envelope was sent on the broadcast channel.
     pub broadcast: bool,
     pub signature: Option<Signature>,
@@ -101,7 +108,7 @@ mod tests {
             step: 17,
             slot: slots::sub(slots::GRAD_COMMIT, 5),
             class: MsgClass::Commitment,
-            payload: vec![1, 2, 3],
+            payload: vec![1, 2, 3].into(),
             broadcast: true,
             signature: None,
         };
@@ -113,7 +120,7 @@ mod tests {
         e2.step = 18;
         assert!(!e2.verify_with(&mont, &sk.public));
         let mut e3 = env.clone();
-        e3.payload[0] = 99;
+        e3.payload = vec![99, 2, 3].into();
         assert!(!e3.verify_with(&mont, &sk.public));
     }
 

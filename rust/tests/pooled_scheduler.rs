@@ -1,0 +1,133 @@
+//! Pooled-scheduler integration tests.
+//!
+//! The pooled execution model multiplexes N logical peers over W
+//! workers with a barrier between protocol stages and deterministic
+//! drain-mode message ordering. Its contract: a pooled run is
+//! bit-identical to the legacy one-OS-thread-per-peer run on the same
+//! seed (wall-clock timing fields aside), and cluster sizes far beyond
+//! the per-thread model's comfort zone complete on a handful of
+//! workers.
+
+use btard::coordinator::attacks::{AttackKind, AttackSchedule};
+use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::optimizer::LrSchedule;
+use btard::coordinator::training::{
+    run_btard_pooled, run_btard_threaded, OptSpec, RunConfig, RunResult,
+};
+use btard::coordinator::ProtocolConfig;
+use btard::model::synthetic::Quadratic;
+use btard::model::GradientSource;
+use std::sync::Arc;
+
+fn sweep_cfg(n: usize, byz: usize, steps: u64, attack_start: u64) -> RunConfig {
+    RunConfig {
+        n_peers: n,
+        byzantine: ((n - byz)..n).collect(),
+        attack: if byz > 0 {
+            Some((
+                AttackKind::SignFlip { lambda: 1000.0 },
+                AttackSchedule::from_step(attack_start),
+            ))
+        } else {
+            None
+        },
+        aggregation_attack: false,
+        steps,
+        protocol: ProtocolConfig {
+            n0: n,
+            tau: TauPolicy::Fixed(1.0),
+            m_validators: (n / 8).max(1),
+            delta_max: 4.0,
+            ..ProtocolConfig::default()
+        },
+        opt: OptSpec::Sgd {
+            schedule: LrSchedule::Constant(0.1),
+            momentum: 0.0,
+            nesterov: false,
+        },
+        clip_lambda: None,
+        eval_every: 2,
+        seed: 7,
+        verify_signatures: false,
+        gossip_fanout: 8,
+        segments: vec![],
+    }
+}
+
+/// Bitwise comparison of everything deterministic in a RunResult (the
+/// wall-clock timing fields are the only excluded members).
+fn assert_bit_identical(a: &RunResult, b: &RunResult) {
+    assert_eq!(a.steps_done, b.steps_done, "steps_done");
+    assert_eq!(a.final_params.len(), b.final_params.len(), "param dim");
+    for (i, (x, y)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "param {i}: {x} vs {y}");
+    }
+    assert_eq!(a.final_metric.to_bits(), b.final_metric.to_bits(), "final_metric");
+    assert_eq!(a.ban_events, b.ban_events, "ban events");
+    assert_eq!(a.recomputes, b.recomputes, "recomputes");
+    assert_eq!(a.peer_bytes, b.peer_bytes, "traffic accounting");
+    assert_eq!(a.metrics.len(), b.metrics.len(), "metric series length");
+    for (ma, mb) in a.metrics.iter().zip(&b.metrics) {
+        assert_eq!(ma.step, mb.step);
+        assert_eq!(ma.loss.to_bits(), mb.loss.to_bits(), "loss @ step {}", ma.step);
+        assert_eq!(ma.metric.to_bits(), mb.metric.to_bits(), "metric @ step {}", ma.step);
+        assert_eq!(ma.banned_now, mb.banned_now, "bans @ step {}", ma.step);
+    }
+}
+
+#[test]
+fn pooled_64_peers_on_4_workers_matches_threaded_bit_for_bit() {
+    // 8 sign-flippers attack from step 2; validators catch and ban them.
+    // Both execution models must agree on every bit of the result.
+    let cfg = sweep_cfg(64, 8, 4, 2);
+    let src: Arc<dyn GradientSource> = Arc::new(Quadratic::new(1024, 0.1, 2.0, 1.0, 9));
+    let threaded = run_btard_threaded(&cfg, src.clone());
+    let pooled = run_btard_pooled(&cfg, src, 4);
+    assert_eq!(threaded.steps_done, 4);
+    assert_bit_identical(&pooled, &threaded);
+}
+
+#[test]
+fn pooled_honest_run_matches_threaded_bit_for_bit() {
+    let cfg = sweep_cfg(16, 0, 6, 0);
+    let src: Arc<dyn GradientSource> = Arc::new(Quadratic::new(256, 0.2, 4.0, 0.5, 11));
+    let threaded = run_btard_threaded(&cfg, src.clone());
+    let pooled = run_btard_pooled(&cfg, src, 3);
+    assert!(threaded.ban_events.is_empty());
+    assert_bit_identical(&pooled, &threaded);
+}
+
+#[test]
+fn pooled_worker_count_does_not_change_results() {
+    let cfg = sweep_cfg(24, 4, 3, 1);
+    let src: Arc<dyn GradientSource> = Arc::new(Quadratic::new(512, 0.1, 2.0, 1.0, 5));
+    let w2 = run_btard_pooled(&cfg, src.clone(), 2);
+    let w8 = run_btard_pooled(&cfg, src, 8);
+    assert_bit_identical(&w2, &w8);
+}
+
+#[test]
+fn pooled_256_peers_10_steps_sign_flip_completes_on_8_workers() {
+    // The scale acceptance run: 256 logical peers — far past what the
+    // per-peer-thread model was built for — on an 8-worker pool, with
+    // sign-flip attackers live from step 3.
+    let cfg = sweep_cfg(256, 32, 10, 3);
+    let src: Arc<dyn GradientSource> = Arc::new(Quadratic::new(4096, 0.1, 2.0, 1.0, 13));
+    let res = run_btard_pooled(&cfg, src, 8);
+    assert_eq!(res.steps_done, 10, "run must complete all 10 steps");
+    // Only Byzantine peers (224..256) may be banned, and the attack must
+    // not go entirely unpunished.
+    assert!(
+        res.ban_events.iter().all(|b| b.target >= 224),
+        "honest peer banned: {:?}",
+        res.ban_events
+    );
+    assert!(
+        !res.ban_events.is_empty(),
+        "no sign-flipper was ever caught in 10 steps"
+    );
+    assert!(res.final_metric.is_finite(), "final metric {}", res.final_metric);
+    // Every live peer paid traffic; accounting must cover all 256.
+    assert_eq!(res.peer_bytes.len(), 256);
+    assert!(res.peer_bytes.iter().all(|&b| b > 0));
+}

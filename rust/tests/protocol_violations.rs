@@ -3,9 +3,12 @@
 //! peers must never be banned except through the mutual-elimination
 //! trade (at most one honest per Byzantine).
 //!
-//! All runs use the threaded cluster with real signatures, commitments
-//! and MPRNG — these are full-protocol tests, just on small synthetic
-//! objectives so they stay fast on the 1-core testbed.
+//! The `run_btard` tests use the default execution model (the pooled
+//! scheduler, unless BTARD_EXEC overrides it); the `direct` module
+//! drives `btard_step` on real per-peer threads with blocking receives.
+//! All runs use real signatures, commitments and MPRNG — these are
+//! full-protocol tests, just on small synthetic objectives so they stay
+//! fast on the 1-core testbed.
 
 use btard::coordinator::attacks::{AttackKind, AttackSchedule, AttackState, CollusionBoard};
 use btard::coordinator::centered_clip::TauPolicy;

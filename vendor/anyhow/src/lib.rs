@@ -1,0 +1,157 @@
+//! Minimal, std-only shim for the subset of the `anyhow` API this
+//! workspace uses: `anyhow!`, `Error`, `Result`, and the `Context`
+//! extension trait. The testbed builds offline, so the real crate is
+//! unavailable; this shim keeps the call sites source-compatible.
+//!
+//! Display follows anyhow's convention: `{}` prints the outermost
+//! message, `{:#}` prints the whole chain (`outer: inner: root`), and
+//! `{:?}` prints the message followed by a `Caused by:` list.
+
+use std::fmt;
+
+/// An error: a root message plus the contexts wrapped around it, most
+/// recent (outermost) last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (root of the chain).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.push(context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    fn outer(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let mut first = true;
+            for msg in self.chain.iter().rev() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{msg}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.outer())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.outer())?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for msg in self.chain.iter().rev().skip(1) {
+                write!(f, "\n    {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow: any std error converts into `Error`. (`Error`
+// itself deliberately does not implement `std::error::Error`, which is
+// what makes this blanket impl coherent.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error variant of a `Result` (or to `None`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("...")` — format a new `Error`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// `bail!("...")` — early-return an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fail() -> Result<()> {
+        Err(anyhow!("root {}", 42))
+    }
+
+    #[test]
+    fn chain_formats() {
+        let e = fail().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root 42");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing x");
+    }
+}
