@@ -105,6 +105,9 @@ pub struct CollusionBoard {
 }
 
 impl CollusionBoard {
+    /// The board is always shared between colluders, so construction
+    /// hands out the `Arc` directly.
+    #[allow(clippy::new_ret_no_self)]
     pub fn new() -> Arc<CollusionBoard> {
         Arc::new(CollusionBoard::default())
     }

@@ -362,6 +362,7 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
     }
     stage_scalars(ctx, &mut st, step);
     stage_verify(ctx, &mut st, step);
+    stage_verify_done(ctx, &mut st, step);
     stage_finish(ctx, st, step, params)
 }
 
@@ -515,7 +516,12 @@ pub fn stage_commits(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
             &mut st.intents,
         );
         if let Some(bytes) = raw.get(&p) {
-            st.commits[p] = GradCommit::decode(bytes);
+            // A commit with the wrong part count is malformed: keeping it
+            // would let a Byzantine sender panic honest peers on the
+            // per-part index below. Treat it like a missing commit (every
+            // later check then fails deterministically).
+            st.commits[p] =
+                GradCommit::decode(bytes).filter(|c| c.parts.len() == st.n_parts);
         }
     }
 
@@ -876,7 +882,11 @@ pub fn stage_verify(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
             &mut st.intents,
         );
         if let Some(bytes) = raw.get(&p) {
-            st.scalars[p] = VerifyScalars::decode(bytes);
+            // Wrong part count ⇒ malformed (decode already enforces
+            // s/norms/over agree); drop it so per-part indexing below
+            // can't be panicked by a Byzantine sender.
+            st.scalars[p] =
+                VerifyScalars::decode(bytes).filter(|sc| sc.s.len() == st.n_parts);
         }
     }
 
@@ -958,6 +968,13 @@ pub fn stage_verify(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
     // local adjudication below uses the same truncated list so every
     // honest peer stays consistent.
     accusations_out.truncate(256);
+    // The packed slot below carries bit 23 as the Phase-F marker, bits
+    // 8..23 as the sender id and bits 0..8 as the accusation index. A
+    // peer id ≥ 0x8000 would overflow into the marker and re-introduce
+    // the slot-collision/self-equivocation bug the marker fixes, so the
+    // supported range is enforced loudly rather than implied by swept
+    // cluster sizes.
+    assert!(me < 0x8000, "peer id {me} exceeds the ACCUSE slot-packing range (< 0x8000)");
     for (k, acc) in accusations_out.iter().enumerate() {
         // One slot per accusation index: several distinct accusations
         // from one peer are distinct slots, not equivocation (the slot
@@ -982,10 +999,25 @@ pub fn stage_verify(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
     st.t.verify_s += t0.elapsed().as_secs_f64();
 }
 
-/// Stage 11 — wait out the VERIFY_DONE barrier, tally Verification-3
-/// votes, drain the step's control traffic (accusations, eliminations,
-/// equivocation evidence), adjudicate by recomputation (Algorithm 4),
-/// apply bans in canonical order, and draw the next step's validators.
+/// Stage 11 — wait out the VERIFY_DONE barrier. Kept as its own stage
+/// so any ELIMINATE a miss triggers is *sent* here, one stage before
+/// `stage_finish` drains control traffic: under the pooled model every
+/// stage may only collect messages sent by earlier stages, and an
+/// ELIMINATE born inside the final drain dispatch would be observed (or
+/// not) depending on worker interleaving — a determinism hazard if a
+/// future behavior ever withholds VERIFY_DONE.
+pub fn stage_verify_done(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
+    let t0 = Instant::now();
+    phase_timeout(ctx, 9);
+    let live_now = ctx.live.clone();
+    let _ = ctx.collect_broadcast(step, slots::VERIFY_DONE, &live_now, &mut st.intents);
+    st.t.verify_s += t0.elapsed().as_secs_f64();
+}
+
+/// Stage 12 — tally Verification-3 votes, drain the step's control
+/// traffic (accusations, eliminations, equivocation evidence),
+/// adjudicate by recomputation (Algorithm 4), apply bans in canonical
+/// order, and draw the next step's validators.
 pub fn stage_finish(
     ctx: &mut PeerCtx,
     mut st: StepState,
@@ -994,11 +1026,6 @@ pub fn stage_finish(
 ) -> Result<StepOutput, StepError> {
     let me = ctx.net.id;
     let t0 = Instant::now();
-    {
-        phase_timeout(ctx, 9);
-        let live_now = ctx.live.clone();
-        let _ = ctx.collect_broadcast(step, slots::VERIFY_DONE, &live_now, &mut st.intents);
-    }
     let mut intents = std::mem::take(&mut st.intents);
 
     // V3: majority vote on ‖g_i(j) − ĝ(j)‖ > Δ_max ⇒ CheckAveraging.

@@ -25,7 +25,8 @@ use super::optimizer::{clip_global_norm, Lamb, LrSchedule, Optimizer, Sgd};
 use super::step::{
     batch_seed, btard_step, stage_agg_commits, stage_agg_parts, stage_begin, stage_commits,
     stage_finish, stage_mprng_combine, stage_mprng_commit, stage_mprng_reveal, stage_parts,
-    stage_scalars, stage_verify, Behavior, ByzantineConfig, PeerCtx, ProtocolConfig, StepError,
+    stage_scalars, stage_verify, stage_verify_done, Behavior, ByzantineConfig, PeerCtx,
+    ProtocolConfig, StepError,
     StepOutput, StepState,
 };
 use crate::model::GradientSource;
@@ -205,15 +206,18 @@ fn exec_mode_from_env() -> ExecMode {
         Ok(v) if v == "threaded" => ExecMode::Threaded,
         Ok(v) if v == "pooled" => ExecMode::Pooled { workers: default_workers() },
         Ok(v) => {
-            let workers = v.strip_prefix("pooled:").and_then(|w| w.parse().ok());
-            if workers.is_none() {
-                // A typo'd reproducibility knob must not misroute silently.
-                eprintln!(
-                    "warning: unrecognized BTARD_EXEC='{v}' (expected 'threaded', 'pooled' or \
-                     'pooled:<W>'); using the pooled default"
-                );
-            }
-            ExecMode::Pooled { workers: workers.unwrap_or_else(default_workers) }
+            // A typo'd reproducibility knob must not misroute silently:
+            // fail hard, mirroring the scenario-spec parser's strictness.
+            let workers: usize = v
+                .strip_prefix("pooled:")
+                .and_then(|w| w.parse().ok())
+                .unwrap_or_else(|| {
+                    panic!(
+                        "unrecognized BTARD_EXEC='{v}' (expected 'threaded', 'pooled' or \
+                         'pooled:<W>')"
+                    )
+                });
+            ExecMode::Pooled { workers: workers.max(1) }
         }
         Err(_) => ExecMode::Pooled { workers: default_workers() },
     }
@@ -271,7 +275,7 @@ pub fn run_btard_threaded(cfg: &RunConfig, source: Arc<dyn GradientSource>) -> R
         let board = board.clone();
         let handle = std::thread::Builder::new()
             .name(format!("peer-{peer}"))
-            .spawn(move || peer_main(net, peer, cfg, source, init_params, board))
+            .spawn(move || peer_main(net, cfg, source, init_params, board))
             .expect("spawn peer thread");
         handles.push(handle);
     }
@@ -329,6 +333,7 @@ enum StageId {
     MprngCombine,
     Scalars,
     Verify,
+    VerifyDone,
     Finish,
 }
 
@@ -431,6 +436,9 @@ fn run_peer_stage(task: &mut PeerTask, stage: StageId, step: u64) {
         StageId::Verify => {
             stage_verify(&mut task.ctx, task.state.as_mut().expect("step in flight"), step)
         }
+        StageId::VerifyDone => {
+            stage_verify_done(&mut task.ctx, task.state.as_mut().expect("step in flight"), step)
+        }
         StageId::Finish => {
             let st = task.state.take().expect("step in flight");
             match stage_finish(&mut task.ctx, st, step, &task.params) {
@@ -441,10 +449,27 @@ fn run_peer_stage(task: &mut PeerTask, stage: StageId, step: u64) {
     }
 }
 
-/// Post-step bookkeeping, mirroring the tail of `peer_main`: apply the
-/// optimizer, check whether we were banned, and (peer 0) record metrics.
-fn apply_step_output(task: &mut PeerTask, step: u64, out: StepOutput) {
-    let peer = task.peer;
+/// Post-step bookkeeping shared by both execution models: apply the
+/// optimizer and (peer 0) evaluate + record the step metric. Returns
+/// true if this peer was banned during the step (it then stops
+/// participating and records nothing further). A single implementation
+/// is load-bearing for the pooled==threaded bit-identity contract:
+/// diverging copies of the eval condition or metric fields would break
+/// it silently.
+#[allow(clippy::too_many_arguments)]
+fn post_step(
+    ctx: &PeerCtx,
+    step: u64,
+    total_steps: u64,
+    eval_every: u64,
+    out: &StepOutput,
+    params: &mut [f32],
+    opt: &mut dyn Optimizer,
+    metrics: &mut Vec<StepMetric>,
+    final_metric: &mut f64,
+    step_wall_s: f64,
+) -> bool {
+    let peer = ctx.net.id;
     if peer == 0 && std::env::var("BTARD_DEBUG_AGG").is_ok() {
         eprintln!(
             "dbg step {step}: |ghat|={:.4} loss={:.4}",
@@ -452,26 +477,24 @@ fn apply_step_output(task: &mut PeerTask, step: u64, out: StepOutput) {
             out.loss
         );
     }
-    task.opt.step(step, &mut task.params, &out.aggregated);
-    task.steps_done = step + 1;
-    if task.ctx.ledger.is_banned(peer) {
-        task.done = true; // banned (Byzantine caught, or eliminated)
-        return;
+    opt.step(step, params, &out.aggregated);
+    if ctx.ledger.is_banned(peer) {
+        return true; // banned (Byzantine caught, or eliminated)
     }
     if peer == 0 {
-        let metric = if step % task.eval_every == 0 || step + 1 == task.total_steps {
-            let m = task.ctx.source.eval(&task.params);
-            task.final_metric = m;
+        let metric = if step % eval_every == 0 || step + 1 == total_steps {
+            let m = ctx.source.eval(params);
+            *final_metric = m;
             m
         } else {
             f64::NAN
         };
-        task.metrics.push(StepMetric {
+        metrics.push(StepMetric {
             step,
             loss: out.loss,
             metric,
             banned_now: out.newly_banned.clone(),
-            step_wall_s: task.step_t0.elapsed().as_secs_f64(),
+            step_wall_s,
             grad_s: out.timings.grad_s,
             clip_s: out.timings.clip_s,
             mprng_s: out.timings.mprng_s,
@@ -479,6 +502,28 @@ fn apply_step_output(task: &mut PeerTask, step: u64, out: StepOutput) {
             comm_s: out.timings.comm_s,
             validate_s: out.timings.validate_s,
         });
+    }
+    false
+}
+
+/// Pooled-path wrapper around `post_step`.
+fn apply_step_output(task: &mut PeerTask, step: u64, out: StepOutput) {
+    let wall = task.step_t0.elapsed().as_secs_f64();
+    let banned = post_step(
+        &task.ctx,
+        step,
+        task.total_steps,
+        task.eval_every,
+        &out,
+        &mut task.params,
+        &mut *task.opt,
+        &mut task.metrics,
+        &mut task.final_metric,
+        wall,
+    );
+    task.steps_done = step + 1;
+    if banned {
+        task.done = true;
     }
 }
 
@@ -604,7 +649,7 @@ pub fn run_btard_pooled(
                     break;
                 }
             }
-            for stage in [StageId::Scalars, StageId::Verify, StageId::Finish] {
+            for stage in [StageId::Scalars, StageId::Verify, StageId::VerifyDone, StageId::Finish] {
                 dispatch(&shared, stage, step);
             }
             if shared.failed.load(Ordering::SeqCst) {
@@ -723,13 +768,12 @@ fn build_peer_ctx(
 
 fn peer_main(
     net: crate::net::local::PeerNet,
-    peer: PeerId,
     cfg: RunConfig,
     source: Arc<dyn GradientSource>,
     init_params: Vec<f32>,
     board: Arc<CollusionBoard>,
 ) -> PeerOutput {
-    let mut ctx = build_peer_ctx(net, &cfg, source.clone(), init_params.len(), &board);
+    let mut ctx = build_peer_ctx(net, &cfg, source, init_params.len(), &board);
     let mut params = init_params;
     let mut opt = cfg.opt.build(params.len(), cfg.segments.clone());
     let mut metrics = Vec::new();
@@ -742,39 +786,21 @@ fn peer_main(
             Ok(o) => o,
             Err(_) => break,
         };
-        if peer == 0 && std::env::var("BTARD_DEBUG_AGG").is_ok() {
-            eprintln!(
-                "dbg step {step}: |ghat|={:.4} loss={:.4}",
-                crate::util::rng::l2_norm(&out.aggregated),
-                out.loss
-            );
-        }
-        opt.step(step, &mut params, &out.aggregated);
+        let banned = post_step(
+            &ctx,
+            step,
+            cfg.steps,
+            cfg.eval_every,
+            &out,
+            &mut params,
+            &mut *opt,
+            &mut metrics,
+            &mut final_metric,
+            t0.elapsed().as_secs_f64(),
+        );
         steps_done = step + 1;
-        if ctx.ledger.is_banned(peer) {
+        if banned {
             break; // we were banned (Byzantine caught, or eliminated)
-        }
-        if peer == 0 {
-            let metric = if step % cfg.eval_every == 0 || step + 1 == cfg.steps {
-                let m = source.eval(&params);
-                final_metric = m;
-                m
-            } else {
-                f64::NAN
-            };
-            metrics.push(StepMetric {
-                step,
-                loss: out.loss,
-                metric,
-                banned_now: out.newly_banned.clone(),
-                step_wall_s: t0.elapsed().as_secs_f64(),
-                grad_s: out.timings.grad_s,
-                clip_s: out.timings.clip_s,
-                mprng_s: out.timings.mprng_s,
-                verify_s: out.timings.verify_s,
-                comm_s: out.timings.comm_s,
-                validate_s: out.timings.validate_s,
-            });
         }
     }
     PeerOutput {

@@ -10,6 +10,12 @@
 //! training loops. Layers 1–2 (python/) are AOT-compiled to HLO text and
 //! executed from `runtime` via PJRT; python never runs on the step path.
 
+// Lint policy: CI runs `clippy -- -D warnings` as a blocking gate. These
+// two style lints are allowed crate-wide because the protocol code hits
+// them structurally (adjudication takes the full broadcast record as
+// arguments; per-part state is nested row maps), not accidentally.
+#![allow(clippy::too_many_arguments, clippy::type_complexity)]
+
 pub mod coordinator;
 pub mod crypto;
 pub mod data;

@@ -11,7 +11,7 @@
 //!   btard train --workload mlp --peers 16 --byzantine 7 \
 //!         --attack sign_flip:1000 --attack-start 100 --tau 1 --steps 500
 //!   btard train --peers 256 --steps 10 --workers 8     # pooled scheduler
-//!   btard scenarios --spec zoo.json --out results
+//!   btard scenarios --spec configs/zoo.json --out results
 //!   btard ps --aggregator coord_median --steps 300
 //!   btard inspect --artifacts artifacts
 
@@ -67,7 +67,17 @@ fn main() {
 /// Execution model from --exec / --workers (default: pooled scheduler).
 fn parse_exec(args: &Args, n_peers: usize) -> ExecMode {
     match args.get_str("exec", "pooled") {
-        "threaded" => ExecMode::Threaded,
+        "threaded" => {
+            // Same strictness as the BTARD_EXEC parser: a worker count
+            // combined with the threaded model is a contradictory
+            // request, not a knob to ignore silently.
+            assert!(
+                args.get("workers").is_none(),
+                "--workers only applies to --exec pooled (the threaded model runs one OS thread \
+                 per peer)"
+            );
+            ExecMode::Threaded
+        }
         "pooled" => ExecMode::Pooled {
             workers: args.get_usize("workers", default_workers()).clamp(1, n_peers),
         },
