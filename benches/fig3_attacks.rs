@@ -20,6 +20,7 @@ use btard::data::synth_vision::SynthVision;
 use btard::harness::{Recorder, Table};
 use btard::model::mlp::MlpModel;
 use btard::model::GradientSource;
+use btard::net::NetworkProfile;
 use std::sync::Arc;
 
 const N: usize = 16;
@@ -126,6 +127,7 @@ fn main() {
                 seed: 0,
                 verify_signatures: false, // crypto correctness covered by tests
                 gossip_fanout: 8,
+                network: NetworkProfile::perfect(),
                 segments: vec![],
             };
             let res = run_btard(&cfg, model());

@@ -20,6 +20,7 @@ use btard::data::synth_text::SynthText;
 use btard::harness::{Recorder, Table};
 use btard::model::pjrt_model::{PjrtData, PjrtModel};
 use btard::model::GradientSource;
+use btard::net::NetworkProfile;
 use btard::runtime::PjrtRuntime;
 use std::sync::Arc;
 
@@ -91,6 +92,7 @@ fn main() {
                 seed: 0,
                 verify_signatures: false,
                 gossip_fanout: 8,
+                network: NetworkProfile::perfect(),
                 segments: segments.clone(),
             };
             let res = run_btard(&cfg, model.clone());
@@ -131,7 +133,7 @@ fn main() {
     }
 
     println!(
-        "\n=== Fig. 4: LM loss with BTARD-CLIPPED-SGD (n={N}, b={B}, {steps} steps, artifact lm_small) ===\n"
+        "\n=== Fig. 4: LM loss, BTARD-CLIPPED-SGD (n={N}, b={B}, {steps} steps, lm_small) ===\n"
     );
     println!("{}", table.render());
     let path = rec.finish().expect("write results");

@@ -47,7 +47,14 @@ fn timing_split() {
     println!("=== App. I.2: per-step wall-time split (quadratic d=65536, n=16) ===\n");
     let src: Arc<dyn GradientSource> = Arc::new(Quadratic::new(65_536, 0.1, 2.0, 1.0, 5));
     let mut table = Table::new(&[
-        "config", "step_ms", "grad_ms", "clip_ms", "mprng_ms", "verify_ms", "comm_ms", "validate_ms",
+        "config",
+        "step_ms",
+        "grad_ms",
+        "clip_ms",
+        "mprng_ms",
+        "verify_ms",
+        "comm_ms",
+        "validate_ms",
     ]);
     for (name, tau, m, sigs) in [
         ("btard_tau1_sigs", TauPolicy::Fixed(1.0), 1usize, true),
@@ -109,13 +116,13 @@ fn traffic_table() {
         ]);
     }
     println!("{}", table.render());
-    println!("(BTARD per-peer cost stays ~2·d·4 bytes as n grows; a robust PS moves n× more.)\n");
+    println!("(BTARD per-peer cost stays ~2·d·4 bytes as n grows; robust PS moves n× more.)\n");
 }
 
 // --- 3. Fig. 9: CenteredClip iteration budget --------------------------------
 
 fn fig9_clip_iters() {
-    println!("=== Fig. 9: final accuracy vs CenteredClip iteration budget (PS, sign-flip b=7/16) ===\n");
+    println!("=== Fig. 9: accuracy vs CenteredClip iteration budget (PS, sign-flip b=7/16) ===\n");
     let ds = Arc::new(SynthVision::new(0, 64, 10));
     let model: Arc<dyn GradientSource> = Arc::new(MlpModel::new(ds, 64, 8));
     let mut table = Table::new(&["clip_iters", "final_acc"]);
@@ -153,7 +160,7 @@ fn fig9_clip_iters() {
 // --- 4. Rust vs Pallas/XLA CenteredClip --------------------------------------
 
 fn clip_rust_vs_artifact() {
-    println!("=== Perf: CenteredClip Rust hot path vs AOT Pallas/XLA artifact (16×4096, 8 iters) ===\n");
+    println!("=== Perf: CenteredClip Rust hot path vs AOT Pallas/XLA (16×4096, 8 iters) ===\n");
     let (n, p, iters) = (16usize, 4096usize, 8usize);
     let mut rng = Rng::new(1);
     let rows: Vec<Vec<f32>> = (0..n)

@@ -35,6 +35,7 @@ fn main() {
         byzantine_frac: 0.125,
         attacks: vec!["sign_flip:1000".to_string()],
         arms: vec![Arm::Btard],
+        networks: vec!["perfect".to_string()],
         steps,
         dim: if smoke { 4096 } else { 16384 },
         attack_start: 2,
@@ -69,11 +70,45 @@ fn main() {
     );
     println!("{}", table.render());
     println!(
-        "(bytes/peer/step ≈ 2·d·4 + O(n²): near-flat in n while the gradient term\n dominates — the butterfly's communication-efficiency claim at sizes the\n one-thread-per-peer execution model could not reach)"
+        "(bytes/peer/step ≈ 2·d·4 + O(n²): near-flat in n while the gradient term\n \
+         dominates — the butterfly's communication-efficiency claim at sizes the\n \
+         one-thread-per-peer execution model could not reach)"
     );
     println!(
         "summary: {} | total {:.0}s",
         report.json_path.display(),
         t0.elapsed().as_secs_f64()
     );
+
+    // Lossy-network smoke cell: the same 64-peer sign-flip scenario over
+    // a 5%-loss + tail-latency fabric (`lossy` profile), written to its
+    // own CSV so CI uploads it alongside the perfect-fabric artifact.
+    if smoke {
+        let lossy_spec = ScenarioSpec {
+            name: "scale_smoke_lossy".to_string(),
+            cluster_sizes: vec![64],
+            networks: vec!["lossy".to_string()],
+            ..spec.clone()
+        };
+        let lossy =
+            run_matrix(&lossy_spec, std::path::Path::new("results")).expect("write lossy results");
+        let mut table = Table::new(&[
+            "n", "network", "ms/step", "dropped", "late", "retx_bytes", "bans", "final_subopt",
+        ]);
+        for c in &lossy.cells {
+            table.row(vec![
+                c.n.to_string(),
+                c.network.clone(),
+                format!("{:.0}", c.avg_step_ms),
+                c.net_dropped_msgs.to_string(),
+                c.net_late_msgs.to_string(),
+                c.net_retx_bytes.to_string(),
+                c.bans.to_string(),
+                format!("{:.3}", c.final_metric),
+            ]);
+        }
+        println!("\n=== lossy-fabric smoke cell (drop 5% w/ retransmits, tail latency) ===\n");
+        println!("{}", table.render());
+        println!("lossy csv: {}", lossy.csv_path.display());
+    }
 }

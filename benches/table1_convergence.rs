@@ -21,6 +21,7 @@ use btard::coordinator::ProtocolConfig;
 use btard::harness::{Recorder, Table};
 use btard::model::synthetic::Quadratic;
 use btard::model::GradientSource;
+use btard::net::NetworkProfile;
 use btard::util::json::Json;
 use std::sync::Arc;
 
@@ -41,7 +42,12 @@ fn steps_to_eps(metrics: &[btard::coordinator::training::StepMetric], eps: f64) 
         .map(|m| m.step)
 }
 
-fn run(delta_b: usize, m_validators: usize, steps: u64, attack: bool) -> btard::coordinator::training::RunResult {
+fn run(
+    delta_b: usize,
+    m_validators: usize,
+    steps: u64,
+    attack: bool,
+) -> btard::coordinator::training::RunResult {
     let src = source();
     let cfg = RunConfig {
         n_peers: N,
@@ -76,6 +82,7 @@ fn run(delta_b: usize, m_validators: usize, steps: u64, attack: bool) -> btard::
         seed: 3,
         verify_signatures: false,
         gossip_fanout: 8,
+        network: NetworkProfile::perfect(),
         segments: vec![],
     };
     run_btard(&cfg, src)

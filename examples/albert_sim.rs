@@ -23,6 +23,7 @@ use btard::data::synth_text::SynthText;
 use btard::harness::Recorder;
 use btard::model::pjrt_model::{PjrtData, PjrtModel};
 use btard::model::GradientSource;
+use btard::net::NetworkProfile;
 use btard::runtime::PjrtRuntime;
 use btard::util::cli::Args;
 use std::sync::Arc;
@@ -82,6 +83,7 @@ fn main() {
         seed: args.get_u64("seed", 0),
         verify_signatures: !args.get_bool("no-sigs"),
         gossip_fanout: 8,
+        network: NetworkProfile::perfect(),
         segments,
     };
 
@@ -118,7 +120,9 @@ fn main() {
     );
     for byz in (n - b)..n {
         if !res.ban_events.iter().any(|e| e.target == byz) {
-            println!("note: byzantine peer {byz} was not banned (attack may be within clip tolerance)");
+            println!(
+                "note: byzantine peer {byz} was not banned (attack may be within clip tolerance)"
+            );
         }
     }
 }

@@ -18,6 +18,7 @@ use btard::data::synth_vision::SynthVision;
 use btard::harness::Recorder;
 use btard::model::mlp::MlpModel;
 use btard::model::GradientSource;
+use btard::net::NetworkProfile;
 use btard::util::cli::Args;
 use std::sync::Arc;
 
@@ -47,7 +48,8 @@ fn main() {
     };
 
     println!(
-        "cifar_sim: {n} peers / {b} byzantine, attack={attack_name}@{attack_start}, defense={defense}, τ={tau}, {steps} steps"
+        "cifar_sim: {n} peers / {b} byzantine, attack={attack_name}@{attack_start}, \
+         defense={defense}, τ={tau}, {steps} steps"
     );
     let t0 = std::time::Instant::now();
     let res = if defense == "btard" {
@@ -71,6 +73,7 @@ fn main() {
                 seed: args.get_u64("seed", 0),
                 verify_signatures: !args.get_bool("no-sigs"),
                 gossip_fanout: 8,
+                network: NetworkProfile::perfect(),
                 segments: vec![],
             },
             model,

@@ -25,6 +25,7 @@ fn main() {
             Arm::Ps(Aggregator::CenteredClip),
             Arm::Ps(Aggregator::Mean),
         ],
+        networks: vec!["perfect".to_string()],
         steps: 12,
         dim: 4096,
         attack_start: 3,

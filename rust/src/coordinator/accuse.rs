@@ -98,7 +98,14 @@ impl BanLedger {
                         continue;
                     }
                     if guilty {
-                        ban(&mut self.banned, &mut self.events, &mut newly, target, reason, accuser);
+                        ban(
+                            &mut self.banned,
+                            &mut self.events,
+                            &mut newly,
+                            target,
+                            reason,
+                            accuser,
+                        );
                     } else {
                         ban(
                             &mut self.banned,

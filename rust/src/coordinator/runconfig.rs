@@ -14,15 +14,22 @@
 //!   "optimizer": {"kind": "sgd", "lr": 0.2, "momentum": 0.9,
 //!                  "schedule": "cosine", "floor": 0.01, "warmup": 0},
 //!   "clip_lambda": null,
-//!   "eval_every": 20, "verify_signatures": true
+//!   "eval_every": 20, "verify_signatures": true,
+//!   "network": "lossy:0.05"
 //! }
 //! ```
+//!
+//! `network` selects the transport's network-condition model: a preset
+//! name (`perfect`, `lossy[:drop]`, `partitioned[:frac]`,
+//! `straggler[:frac]`) or an object with per-field overrides — see
+//! `net::sim::NetworkProfile::from_json` for the full schema.
 
 use super::attacks::{AttackKind, AttackSchedule};
 use super::centered_clip::TauPolicy;
 use super::optimizer::LrSchedule;
 use super::step::ProtocolConfig;
 use super::training::{OptSpec, RunConfig};
+use crate::net::NetworkProfile;
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 
@@ -50,6 +57,13 @@ pub fn parse_run_config(text: &str) -> Result<RunConfig> {
         .and_then(|v| v.as_bool())
         .unwrap_or(false);
     cfg.clip_lambda = j.get("clip_lambda").and_then(|v| v.as_f64()).map(|v| v as f32);
+
+    // network-condition model (null ⇒ perfect fabric)
+    if let Some(nv) = j.get("network") {
+        if *nv != Json::Null {
+            cfg.network = NetworkProfile::from_json(nv).map_err(|e| anyhow!("{e}"))?;
+        }
+    }
 
     // attack
     if let Some(a) = j.get("attack") {
@@ -184,7 +198,10 @@ mod tests {
         }"#;
         let cfg = parse_run_config(text).unwrap();
         assert_eq!(cfg.protocol.tau, TauPolicy::Infinite);
-        assert!(matches!(cfg.opt, OptSpec::Lamb { schedule: LrSchedule::Warmup { warmup: 10, .. } }));
+        assert!(matches!(
+            cfg.opt,
+            OptSpec::Lamb { schedule: LrSchedule::Warmup { warmup: 10, .. } }
+        ));
     }
 
     #[test]
@@ -193,6 +210,21 @@ mod tests {
         assert!(parse_run_config(r#"{"peers": 4, "byzantine": 4}"#).is_err());
         assert!(parse_run_config(r#"{"attack": {"kind": "bogus"}}"#).is_err());
         assert!(parse_run_config(r#"{"optimizer": {"kind": "adamw"}}"#).is_err());
+        assert!(parse_run_config(r#"{"network": "bogus"}"#).is_err());
+        assert!(parse_run_config(r#"{"network": {"drop": 2.0}}"#).is_err());
+    }
+
+    #[test]
+    fn network_profile_parses() {
+        let cfg = parse_run_config(r#"{"network": "lossy:0.1"}"#).unwrap();
+        assert_eq!(cfg.network.name, "lossy");
+        assert_eq!(cfg.network.drop, 0.1);
+        let cfg = parse_run_config(r#"{"network": {"name": "straggler", "straggle_p": 0.5}}"#)
+            .unwrap();
+        assert_eq!(cfg.network.straggle_p, 0.5);
+        assert!(!cfg.network.is_perfect());
+        let cfg = parse_run_config(r#"{"network": null}"#).unwrap();
+        assert!(cfg.network.is_perfect());
     }
 
     #[test]

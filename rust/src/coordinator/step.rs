@@ -32,8 +32,7 @@ use crate::crypto::{sha256_f32, sha256_parts, Digest};
 use crate::model::GradientSource;
 use crate::mprng::{combine, MprngOutcome, MprngRound};
 use crate::net::gossip::EquivocationTracker;
-use crate::net::local::{PeerNet, RecvError};
-use crate::net::{slots, Envelope, MsgClass, PeerId};
+use crate::net::{slots, Envelope, MsgClass, PeerId, RecvError, Transport};
 use crate::util::rng::{dot, Rng};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -125,9 +124,12 @@ pub struct StepArchive {
     pub contributors: Vec<PeerId>,
 }
 
-/// Per-peer protocol context, owned by the peer's thread.
+/// Per-peer protocol context, owned by the peer's thread. The network
+/// endpoint is a trait object, so any `Transport` backend (perfect
+/// fabric, seeded fault simulation, future socket transports) drives the
+/// same protocol code.
 pub struct PeerCtx {
-    pub net: PeerNet,
+    pub net: Box<dyn Transport>,
     pub cfg: ProtocolConfig,
     pub source: Arc<dyn GradientSource>,
     pub spec: PartitionSpec,
@@ -194,7 +196,7 @@ pub fn z_vector(r: &[u8; 32], part: usize, len: usize) -> Vec<f32> {
 
 impl PeerCtx {
     fn me(&self) -> PeerId {
-        self.net.id
+        self.net.id()
     }
 
     /// Contributors this step = live peers that are not validating.
@@ -207,7 +209,7 @@ impl PeerCtx {
     /// whole cluster (Appendix D.3 — bans must be decided from broadcast
     /// data so honest peers never diverge). Picked up at the end-of-step
     /// drain, including by ourselves via loopback.
-    fn broadcast_eliminate(&self, step: u64, target: PeerId) {
+    fn broadcast_eliminate(&mut self, step: u64, target: PeerId) {
         let acc =
             Accusation { target, reason: BanReason::Eliminated, part: u32::MAX };
         // Slot is keyed by *target* (sender identity is in the envelope):
@@ -223,7 +225,8 @@ impl PeerCtx {
 
     /// Collect one broadcast envelope per peer in `from` for `slot`,
     /// observing equivocations. Missing peers trigger broadcast
-    /// ELIMINATE (timeout = protocol violation).
+    /// ELIMINATE (timeout = protocol violation). Keyed receive: the
+    /// drain-mode backend binary-searches the `(step, slot)` range.
     fn collect_broadcast(
         &mut self,
         step: u64,
@@ -235,9 +238,14 @@ impl PeerCtx {
         let mut missing: Vec<PeerId> = from.to_vec();
         while !missing.is_empty() {
             let want: Vec<PeerId> = missing.clone();
-            let res = self.net.recv_match(|e: &Envelope| {
-                e.step == step && e.slot == slot && want.contains(&e.from)
-            });
+            // `e.broadcast` is load-bearing: a Byzantine sender must not
+            // satisfy a broadcast collect with per-recipient p2p payloads
+            // — those bypass the equivocation tracker (which ignores
+            // non-broadcast envelopes) and would let honest receivers
+            // accept different values for the same slot.
+            let res = self
+                .net
+                .recv_keyed(step, slot, &|e: &Envelope| e.broadcast && want.contains(&e.from));
             match res {
                 Ok(env) => {
                     if let Some(ev) = self.equiv.observe(&env) {
@@ -273,9 +281,9 @@ impl PeerCtx {
         let mut missing: Vec<PeerId> = from.to_vec();
         while !missing.is_empty() {
             let want = missing.clone();
-            let res = self.net.recv_match(|e: &Envelope| {
-                e.step == step && e.slot == slot && !e.broadcast && want.contains(&e.from)
-            });
+            let res = self
+                .net
+                .recv_keyed(step, slot, &|e: &Envelope| !e.broadcast && want.contains(&e.from));
             match res {
                 Ok(env) => {
                     out.insert(env.from, env.payload);
@@ -303,7 +311,7 @@ fn close(a: f32, b: f32, rel: f32, abs_tol: f32) -> bool {
 /// withholder still delivers before its own waiters give up (no timeout
 /// cascades). A no-op for scheduling purposes in drain mode.
 fn phase_timeout(ctx: &mut PeerCtx, mult: u64) {
-    ctx.net.timeout = std::time::Duration::from_millis(ctx.cfg.base_timeout_ms * mult);
+    ctx.net.set_timeout(std::time::Duration::from_millis(ctx.cfg.base_timeout_ms * mult));
 }
 
 /// All per-step temporaries of one peer, carried across the stage
@@ -370,7 +378,10 @@ pub fn btard_step(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> Result<StepOu
 /// A's send half: compute this step's gradient and broadcast its hash
 /// commitments.
 pub fn stage_begin(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> StepState {
-    let me = ctx.net.id;
+    // Every stage entry advances the transport's logical phase clock —
+    // the delivery reference for network models that simulate latency.
+    ctx.net.tick();
+    let me = ctx.net.id();
     let mut t = PhaseTimings::default();
     let contributors = ctx.contributors();
     let i_contribute = contributors.contains(&me);
@@ -504,7 +515,8 @@ pub fn stage_begin(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> StepState {
 /// contributor) and Phase B's send half (ship each partition to its
 /// owner).
 pub fn stage_commits(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
-    let me = ctx.net.id;
+    ctx.net.tick();
+    let me = ctx.net.id();
     let t0 = Instant::now();
     phase_timeout(ctx, 2);
     let contributors = st.contributors.clone();
@@ -559,7 +571,8 @@ pub fn stage_commits(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
 /// commitment *before* the verification direction z is known
 /// (commit-then-reveal).
 pub fn stage_parts(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
-    let me = ctx.net.id;
+    ctx.net.tick();
+    let me = ctx.net.id();
     let t0 = Instant::now();
     phase_timeout(ctx, 3);
     let my_parts = st.my_parts.clone();
@@ -646,7 +659,8 @@ pub fn stage_parts(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
 /// Stage 4 — collect every part's aggregation commitment, then Phase
 /// D's send half: distribute our aggregated parts to every live peer.
 pub fn stage_agg_commits(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
-    let me = ctx.net.id;
+    ctx.net.tick();
+    let me = ctx.net.id();
     let t0 = Instant::now();
     // Collect aggregation commitments for all parts.
     phase_timeout(ctx, 4);
@@ -692,7 +706,8 @@ pub fn stage_agg_commits(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
 /// Stage 5 — Phase D's collect half: receive every owner's aggregated
 /// part, verify it against the commitment, and merge ĝ.
 pub fn stage_agg_parts(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
-    let me = ctx.net.id;
+    ctx.net.tick();
+    let me = ctx.net.id();
     let t0 = Instant::now();
     phase_timeout(ctx, 5);
     for j in 0..st.n_parts {
@@ -722,9 +737,10 @@ pub fn stage_agg_parts(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
 /// Stage 6 — Phase E, MPRNG commit: broadcast the commitment for the
 /// current attempt.
 pub fn stage_mprng_commit(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
+    ctx.net.tick();
     let t0 = Instant::now();
     phase_timeout(ctx, 6);
-    let round = MprngRound::new(ctx.net.id, &mut ctx.local_rng);
+    let round = MprngRound::new(ctx.net.id(), &mut ctx.local_rng);
     let slot_c = slots::sub(slots::MPRNG_COMMIT, st.mprng_attempt);
     ctx.net
         .broadcast(step, slot_c, MsgClass::Mprng, round.commitment().to_vec());
@@ -736,6 +752,7 @@ pub fn stage_mprng_commit(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
 /// broadcast our reveal (commit-before-reveal: the reveal only leaves
 /// once every participant's commitment is in).
 pub fn stage_mprng_reveal(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
+    ctx.net.tick();
     let t0 = Instant::now();
     let slot_c = slots::sub(slots::MPRNG_COMMIT, st.mprng_attempt);
     let slot_r = slots::sub(slots::MPRNG_REVEAL, st.mprng_attempt);
@@ -755,6 +772,7 @@ pub fn stage_mprng_combine(
     st: &mut StepState,
     step: u64,
 ) -> Result<bool, StepError> {
+    ctx.net.tick();
     let t0 = Instant::now();
     let slot_r = slots::sub(slots::MPRNG_REVEAL, st.mprng_attempt);
     let participants = st.mprng_participants.clone();
@@ -783,7 +801,7 @@ pub fn stage_mprng_combine(
         MprngOutcome::Offenders(off) => {
             for &p in &off {
                 st.intents.push(BanIntent::Proven {
-                    observer: ctx.net.id,
+                    observer: ctx.net.id(),
                     target: p,
                     reason: BanReason::MprngViolation,
                 });
@@ -805,7 +823,8 @@ pub fn stage_mprng_combine(
 /// directions z[j] from r^t and broadcast our verification scalars
 /// (contributors only).
 pub fn stage_scalars(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
-    let me = ctx.net.id;
+    ctx.net.tick();
+    let me = ctx.net.id();
     let t0 = Instant::now();
     let r_out = st.r_out.expect("MPRNG must have converged");
     st.z = (0..st.n_parts).map(|j| z_vector(&r_out, j, ctx.spec.len(j))).collect();
@@ -870,7 +889,8 @@ pub fn stage_scalars(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
 /// Verifications 1–2, and broadcast any accusations plus the
 /// VERIFY_DONE barrier marker.
 pub fn stage_verify(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
-    let me = ctx.net.id;
+    ctx.net.tick();
+    let me = ctx.net.id();
     let t0 = Instant::now();
     phase_timeout(ctx, 7);
     let contributors = st.contributors.clone();
@@ -1007,6 +1027,7 @@ pub fn stage_verify(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
 /// not) depending on worker interleaving — a determinism hazard if a
 /// future behavior ever withholds VERIFY_DONE.
 pub fn stage_verify_done(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
+    ctx.net.tick();
     let t0 = Instant::now();
     phase_timeout(ctx, 9);
     let live_now = ctx.live.clone();
@@ -1024,7 +1045,8 @@ pub fn stage_finish(
     step: u64,
     params: &[f32],
 ) -> Result<StepOutput, StepError> {
-    let me = ctx.net.id;
+    ctx.net.tick();
+    let me = ctx.net.id();
     let t0 = Instant::now();
     let mut intents = std::mem::take(&mut st.intents);
 
@@ -1047,7 +1069,7 @@ pub fn stage_finish(
     // broadcast variants an equivocator emitted — those never match a
     // collect predicate (the first variant satisfied it), so this drain
     // is where contradictions are observed and banned.
-    let drained = ctx.net.drain_match(|e: &Envelope| e.step <= step);
+    let drained = ctx.net.drain_match(&|e: &Envelope| e.step <= step);
     let mut all_accusations: Vec<(PeerId, Accusation)> = Vec::new();
     // Who eliminated whom this step (broadcast data, consensus-visible):
     // needed to adjudicate Σs accusations against owners whose
@@ -1410,7 +1432,7 @@ fn adjudicate(
             // their raw rows (bit-exact); everyone else uses the
             // recomputed rows — identical, since all commitments matched.
             let mut part_rows: Vec<(PeerId, Vec<f32>)> = match rows.get(&j) {
-                Some(r) if ctx.owners.owner(j) == ctx.net.id => r.clone(),
+                Some(r) if ctx.owners.owner(j) == ctx.net.id() => r.clone(),
                 _ => recomputed_rows,
             };
             part_rows.sort_by_key(|(p, _)| *p);

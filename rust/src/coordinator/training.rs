@@ -30,8 +30,7 @@ use super::step::{
     StepOutput, StepState,
 };
 use crate::model::GradientSource;
-use crate::net::local::{build_cluster, RecvMode};
-use crate::net::PeerId;
+use crate::net::{build_transports, NetworkProfile, PeerFaults, PeerId, RecvMode, Transport};
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
@@ -76,6 +75,10 @@ pub struct RunConfig {
     pub seed: u64,
     pub verify_signatures: bool,
     pub gossip_fanout: u64,
+    /// Network-condition model for the run: the perfect fabric by
+    /// default, or a seeded fault profile (loss, latency, stragglers,
+    /// partitions) simulated by the `SimNet` transport backend.
+    pub network: NetworkProfile,
     /// Optimizer parameter segments (from the artifact manifest; empty
     /// for Rust-native models).
     pub segments: Vec<crate::runtime::ParamSegment>,
@@ -100,6 +103,7 @@ impl RunConfig {
             seed: 0,
             verify_signatures: true,
             gossip_fanout: 8,
+            network: NetworkProfile::perfect(),
             segments: vec![],
         }
     }
@@ -133,6 +137,8 @@ pub struct RunResult {
     pub recomputes: u64,
     /// Steps actually completed (may stop early on cluster collapse).
     pub steps_done: u64,
+    /// Per-peer network-fault counters (empty on the perfect fabric).
+    pub net_faults: Vec<PeerFaults>,
 }
 
 /// BTARD-CLIPPED-SGD wrapper: clips each gradient partition to λ_part =
@@ -257,18 +263,30 @@ pub fn run_btard_with(
 }
 
 /// Legacy execution model: one OS thread per peer, blocking receives.
+/// Works with any transport backend, but note that with a fault-injecting
+/// network profile a missing message costs a real wall-clock timeout
+/// here — network simulation is built for the pooled scheduler, whose
+/// drain-mode receives time out immediately.
 pub fn run_btard_threaded(cfg: &RunConfig, source: Arc<dyn GradientSource>) -> RunResult {
     assert!(!cfg.byzantine.contains(&0), "peer 0 must stay honest (metrics)");
     assert!(cfg.n_peers >= 2);
     let source = wrap_source(cfg, source);
     let init_params = source.init_params(cfg.seed);
-    let cluster = build_cluster(cfg.n_peers, cfg.seed ^ 0xC1A5, cfg.gossip_fanout, cfg.verify_signatures);
-    let info = cluster[0].info.clone();
+    let transports = build_transports(
+        cfg.n_peers,
+        cfg.seed ^ 0xC1A5,
+        cfg.gossip_fanout,
+        cfg.verify_signatures,
+        &cfg.network,
+        cfg.seed,
+    );
+    let info = transports[0].info().clone();
+    let fault_handle = transports[0].fault_handle();
     let board = CollusionBoard::new();
 
     let mut handles = Vec::new();
-    for net in cluster {
-        let peer = net.id;
+    for net in transports {
+        let peer = net.id();
         let cfg = cfg.clone();
         let source = source.clone();
         let init_params = init_params.clone();
@@ -291,6 +309,7 @@ pub fn run_btard_threaded(cfg: &RunConfig, source: Arc<dyn GradientSource>) -> R
     let mut result = result.unwrap();
     result.recomputes = recomputes;
     result.peer_bytes = (0..cfg.n_peers).map(|p| info.stats.total_bytes(p)).collect();
+    result.net_faults = fault_handle.map(|h| h.snapshot()).unwrap_or_default();
     result
 }
 
@@ -418,16 +437,31 @@ fn run_peer_stage(task: &mut PeerTask, stage: StageId, step: u64) {
         StageId::AggParts => {
             stage_agg_parts(&mut task.ctx, task.state.as_mut().expect("step in flight"), step)
         }
+        // The MPRNG stages may be re-dispatched until the *whole* cluster
+        // converges. A task whose round already produced r^t skips the
+        // re-runs: re-entering stage 6 would broadcast a second commitment
+        // on an already-used slot (self-equivocation) and clobber its
+        // converged state. Under network faults, peers can legitimately
+        // need different retry counts — a partitioned peer's view of the
+        // participant set diverges from the cluster's.
         StageId::MprngCommit => {
-            stage_mprng_commit(&mut task.ctx, task.state.as_mut().expect("step in flight"), step)
+            let st = task.state.as_mut().expect("step in flight");
+            if st.r_out.is_none() {
+                stage_mprng_commit(&mut task.ctx, st, step)
+            }
         }
         StageId::MprngReveal => {
-            stage_mprng_reveal(&mut task.ctx, task.state.as_mut().expect("step in flight"), step)
+            let st = task.state.as_mut().expect("step in flight");
+            if st.r_out.is_none() {
+                stage_mprng_reveal(&mut task.ctx, st, step)
+            }
         }
         StageId::MprngCombine => {
             let st = task.state.as_mut().expect("step in flight");
-            if let Err(e) = stage_mprng_combine(&mut task.ctx, st, step) {
-                task.error = Some(e);
+            if st.r_out.is_none() {
+                if let Err(e) = stage_mprng_combine(&mut task.ctx, st, step) {
+                    task.error = Some(e);
+                }
             }
         }
         StageId::Scalars => {
@@ -469,7 +503,7 @@ fn post_step(
     final_metric: &mut f64,
     step_wall_s: f64,
 ) -> bool {
-    let peer = ctx.net.id;
+    let peer = ctx.net.id();
     if peer == 0 && std::env::var("BTARD_DEBUG_AGG").is_ok() {
         eprintln!(
             "dbg step {step}: |ghat|={:.4} loss={:.4}",
@@ -548,16 +582,24 @@ pub fn run_btard_pooled(
     assert!(cfg.n_peers >= 2);
     let source = wrap_source(cfg, source);
     let init_params = source.init_params(cfg.seed);
-    let cluster = build_cluster(cfg.n_peers, cfg.seed ^ 0xC1A5, cfg.gossip_fanout, cfg.verify_signatures);
-    let info = cluster[0].info.clone();
+    let transports = build_transports(
+        cfg.n_peers,
+        cfg.seed ^ 0xC1A5,
+        cfg.gossip_fanout,
+        cfg.verify_signatures,
+        &cfg.network,
+        cfg.seed,
+    );
+    let info = transports[0].info().clone();
+    let fault_handle = transports[0].fault_handle();
     let board = CollusionBoard::new();
     let workers = workers.clamp(1, cfg.n_peers);
 
-    let tasks: Vec<Mutex<PeerTask>> = cluster
+    let tasks: Vec<Mutex<PeerTask>> = transports
         .into_iter()
         .map(|mut net| {
-            net.recv_mode = RecvMode::Drain;
-            let peer = net.id;
+            net.set_recv_mode(RecvMode::Drain);
+            let peer = net.id();
             let ctx = build_peer_ctx(net, cfg, source.clone(), init_params.len(), &board);
             Mutex::new(PeerTask {
                 peer,
@@ -613,6 +655,7 @@ pub fn run_btard_pooled(
                 break;
             }
             let probe_idx = active[0];
+            let active_idx = active.clone();
             *shared.active.lock().unwrap() = active;
 
             for stage in [
@@ -628,9 +671,15 @@ pub fn run_btard_pooled(
                 break; // don't cascade secondary panics through later stages
             }
             // The MPRNG round restarts without offenders until it
-            // converges; every participant reaches the same retry
-            // decision deterministically, so one task's state is
-            // representative of the whole cluster.
+            // converges. On a consistent cluster every participant needs
+            // the same number of attempts, but under simulated network
+            // faults a partitioned peer's view can diverge and need
+            // extra rounds — so the loop runs until *every* active task
+            // has either converged or errored (already-converged tasks
+            // skip the re-dispatches; see `run_peer_stage`). A straggling
+            // task's retries terminate on their own: with nobody left
+            // re-committing, its participant view shrinks below quorum
+            // and the round errors out deterministically.
             loop {
                 dispatch(&shared, StageId::MprngCommit, step);
                 dispatch(&shared, StageId::MprngReveal, step);
@@ -638,14 +687,16 @@ pub fn run_btard_pooled(
                 if shared.failed.load(Ordering::SeqCst) {
                     break 'run;
                 }
-                let probe = lock_task(&shared.tasks[probe_idx]);
-                if probe.error.is_some() {
-                    break 'run;
+                if lock_task(&shared.tasks[probe_idx]).error.is_some() {
+                    break 'run; // honest-cluster collapse (deterministic)
                 }
-                let converged =
-                    probe.state.as_ref().map(|st| st.r_out.is_some()).unwrap_or(true);
-                drop(probe);
-                if converged {
+                let all_converged = active_idx.iter().all(|&i| {
+                    let t = lock_task(&shared.tasks[i]);
+                    t.done
+                        || t.error.is_some()
+                        || t.state.as_ref().map(|st| st.r_out.is_some()).unwrap_or(true)
+                });
+                if all_converged {
                     break;
                 }
             }
@@ -688,12 +739,14 @@ pub fn run_btard_pooled(
                 peer_bytes: vec![],
                 recomputes: 0,
                 steps_done: task.steps_done,
+                net_faults: vec![],
             });
         }
     }
     let mut result = result.expect("peer 0 task present");
     result.recomputes = recomputes;
     result.peer_bytes = (0..cfg.n_peers).map(|p| info.stats.total_bytes(p)).collect();
+    result.net_faults = fault_handle.map(|h| h.snapshot()).unwrap_or_default();
     result
 }
 
@@ -716,6 +769,7 @@ impl PeerOutput {
             peer_bytes: vec![],
             recomputes: self.recomputes,
             steps_done: self.steps_done,
+            net_faults: vec![],
         }
     }
 }
@@ -724,13 +778,13 @@ impl PeerOutput {
 /// configured attack), partition layout, ban ledger and local RNG.
 /// Shared by both execution models so their peers are interchangeable.
 fn build_peer_ctx(
-    net: crate::net::local::PeerNet,
+    net: Box<dyn Transport>,
     cfg: &RunConfig,
     source: Arc<dyn GradientSource>,
     param_dim: usize,
     board: &Arc<CollusionBoard>,
 ) -> PeerCtx {
-    let peer = net.id;
+    let peer = net.id();
     let behavior = if cfg.byzantine.contains(&peer) {
         let (kind, schedule) = cfg
             .attack
@@ -767,7 +821,7 @@ fn build_peer_ctx(
 }
 
 fn peer_main(
-    net: crate::net::local::PeerNet,
+    net: Box<dyn Transport>,
     cfg: RunConfig,
     source: Arc<dyn GradientSource>,
     init_params: Vec<f32>,
@@ -912,6 +966,7 @@ pub fn run_ps(cfg: &PsConfig, source: Arc<dyn GradientSource>) -> RunResult {
         peer_bytes: vec![],
         recomputes: 0,
         steps_done: cfg.steps,
+        net_faults: vec![],
     }
 }
 

@@ -321,9 +321,16 @@ mod tests {
     #[test]
     fn add_mod_sub_mod_inverse() {
         prop_check("add/sub mod roundtrip", |rng, _| {
-            let m = U256([rng.next_u64() | 1, rng.next_u64(), rng.next_u64(), rng.next_u64() | (1 << 62)]);
-            let a = U256([rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()]).rem256(&m);
-            let b = U256([rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()]).rem256(&m);
+            let m = U256([
+                rng.next_u64() | 1,
+                rng.next_u64(),
+                rng.next_u64(),
+                rng.next_u64() | (1 << 62),
+            ]);
+            let a =
+                U256([rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()]).rem256(&m);
+            let b =
+                U256([rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()]).rem256(&m);
             let s = a.add_mod(&b, &m);
             assert!(s.lt(&m));
             assert_eq!(s.sub_mod(&b, &m), a);
@@ -334,7 +341,12 @@ mod tests {
     #[test]
     fn mul_mod_commutes_and_distributes() {
         prop_check("mul_mod algebra", |rng, _| {
-            let m = U256([rng.next_u64() | 1, rng.next_u64(), rng.next_u64(), rng.next_u64() | (1 << 62)]);
+            let m = U256([
+                rng.next_u64() | 1,
+                rng.next_u64(),
+                rng.next_u64(),
+                rng.next_u64() | (1 << 62),
+            ]);
             let a = U256([rng.next_u64(), 0, rng.next_u64(), 0]).rem256(&m);
             let b = U256([0, rng.next_u64(), 0, rng.next_u64()]).rem256(&m);
             let c = U256([rng.next_u64(), rng.next_u64(), 0, 0]).rem256(&m);

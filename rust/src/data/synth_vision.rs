@@ -73,7 +73,8 @@ impl SynthVision {
         let mut y = Vec::with_capacity(batch);
         let mut scratch = Vec::new();
         for i in 0..batch {
-            let logits = self.teacher_logits(&x[i * self.features..(i + 1) * self.features], &mut scratch);
+            let logits =
+                self.teacher_logits(&x[i * self.features..(i + 1) * self.features], &mut scratch);
             let mut best = 0usize;
             for c in 1..self.classes {
                 if logits[c] > logits[best] {

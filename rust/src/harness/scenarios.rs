@@ -1,9 +1,14 @@
 //! Declarative scenario-matrix runner: sweep {cluster size} × {attack
-//! kind} × {defense arm} from a single spec and emit per-cell CSV and
-//! JSON metrics. This is the workhorse behind `btard scenarios` and the
-//! scale bench: with the pooled peer scheduler a 256-peer cell no longer
-//! costs 256 OS threads, so the §4.1 attack zoo can be swept at sizes
-//! the per-thread execution model could not reach.
+//! kind} × {defense arm} × {network profile} from a single spec and emit
+//! per-cell CSV and JSON metrics. This is the workhorse behind
+//! `btard scenarios` and the scale bench: with the pooled peer scheduler
+//! a 256-peer cell no longer costs 256 OS threads, so the §4.1 attack
+//! zoo can be swept at sizes the per-thread execution model could not
+//! reach — and the `network` axis now runs every cell under simulated
+//! link loss, stragglers or partitions (`net::sim::NetworkProfile`).
+//! The network axis applies to BTARD arms only: the trusted-PS
+//! baselines do not model transport at all, so each PS cell runs once
+//! (tagged with the first listed profile) instead of once per profile.
 
 use crate::coordinator::attacks::{AttackKind, AttackSchedule};
 use crate::coordinator::centered_clip::TauPolicy;
@@ -14,6 +19,7 @@ use crate::coordinator::training::{
 use crate::coordinator::{Aggregator, ProtocolConfig};
 use crate::model::synthetic::Quadratic;
 use crate::model::GradientSource;
+use crate::net::NetworkProfile;
 use crate::util::csv::{format_f64, CsvWriter};
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
@@ -47,7 +53,7 @@ impl Arm {
 }
 
 /// The declarative sweep: every combination of `cluster_sizes` ×
-/// `attacks` × `arms` becomes one cell.
+/// `attacks` × `arms` × `networks` becomes one cell.
 #[derive(Clone, Debug)]
 pub struct ScenarioSpec {
     pub name: String,
@@ -58,6 +64,9 @@ pub struct ScenarioSpec {
     /// Attack names per `AttackKind::from_name`, or "none".
     pub attacks: Vec<String>,
     pub arms: Vec<Arm>,
+    /// Network profiles per `NetworkProfile::from_name`: perfect,
+    /// lossy[:drop], partitioned[:frac], straggler[:frac].
+    pub networks: Vec<String>,
     pub steps: u64,
     /// Objective dimension (raised to the cluster size when smaller, so
     /// every peer owns at least one coordinate).
@@ -82,6 +91,7 @@ impl ScenarioSpec {
             byzantine_frac: 0.25,
             attacks: vec!["none".to_string(), "sign_flip:1000".to_string()],
             arms: vec![Arm::Btard],
+            networks: vec!["perfect".to_string()],
             steps: 6,
             dim: 1024,
             attack_start: 2,
@@ -99,12 +109,13 @@ impl ScenarioSpec {
     /// Unknown keys and present-but-wrong-typed values are hard errors: a
     /// typo'd experiment spec must not silently run the wrong experiment.
     pub fn parse(text: &str) -> Result<ScenarioSpec, String> {
-        const KNOWN: [&str; 15] = [
+        const KNOWN: [&str; 16] = [
             "name",
             "cluster_sizes",
             "byzantine_frac",
             "attacks",
             "arms",
+            "networks",
             "steps",
             "dim",
             "attack_start",
@@ -163,6 +174,18 @@ impl ScenarioSpec {
             }
             spec.arms = parsed;
         }
+        if let Some(v) = j.get("networks") {
+            let networks = v.as_arr().ok_or("networks must be an array")?;
+            let mut parsed = Vec::new();
+            for nw in networks {
+                let s = nw.as_str().ok_or("networks must be strings")?;
+                if NetworkProfile::from_name(s).is_none() {
+                    return Err(format!("unknown network profile '{s}'"));
+                }
+                parsed.push(s.to_string());
+            }
+            spec.networks = parsed;
+        }
         if let Some(v) = j.get("steps") {
             spec.steps = v.as_u64().ok_or("steps must be an integer")?;
         }
@@ -201,13 +224,16 @@ impl ScenarioSpec {
     }
 }
 
-/// Metrics for one (n, attack, arm) cell.
+/// Metrics for one (n, attack, arm, network) cell.
 #[derive(Clone, Debug)]
 pub struct CellResult {
     pub n: usize,
     pub byz: usize,
     pub attack: String,
     pub arm: String,
+    /// Network profile the cell ran under (BTARD arms only; the PS
+    /// baselines do not model transport, so the value is inert there).
+    pub network: String,
     pub final_metric: f64,
     pub steps_done: u64,
     pub bans: usize,
@@ -221,6 +247,12 @@ pub struct CellResult {
     /// Mean per-step wall time from peer 0's metrics (protocol stepping
     /// only — excludes setup; 0 for arms that don't record step timings).
     pub avg_step_ms: f64,
+    /// Cluster-wide messages lost for good by the network model.
+    pub net_dropped_msgs: u64,
+    /// Cluster-wide messages delivered after their collect window.
+    pub net_late_msgs: u64,
+    /// Bytes spent on retransmissions (the bandwidth tax of link loss).
+    pub net_retx_bytes: u64,
 }
 
 pub struct MatrixReport {
@@ -243,6 +275,7 @@ pub fn run_matrix(spec: &ScenarioSpec, out_dir: &Path) -> std::io::Result<Matrix
             "byz",
             "attack",
             "arm",
+            "network",
             "final_metric",
             "steps_done",
             "bans",
@@ -251,29 +284,45 @@ pub fn run_matrix(spec: &ScenarioSpec, out_dir: &Path) -> std::io::Result<Matrix
             "recomputes",
             "wall_s",
             "avg_step_ms",
+            "net_dropped_msgs",
+            "net_late_msgs",
+            "net_retx_bytes",
         ],
     )?;
     let mut cells = Vec::new();
     for &n in &spec.cluster_sizes {
         for attack in &spec.attacks {
             for arm in &spec.arms {
-                let c = run_cell(spec, n, attack, arm);
-                w.row(&[
-                    c.n.to_string(),
-                    c.byz.to_string(),
-                    c.attack.clone(),
-                    c.arm.clone(),
-                    format_f64(c.final_metric),
-                    c.steps_done.to_string(),
-                    c.bans.to_string(),
-                    c.last_ban_step.map(|s| s.to_string()).unwrap_or_default(),
-                    format_f64(c.bytes_per_peer_step),
-                    c.recomputes.to_string(),
-                    format_f64(c.wall_s),
-                    format_f64(c.avg_step_ms),
-                ])?;
-                w.flush()?;
-                cells.push(c);
+                for (ni, network) in spec.networks.iter().enumerate() {
+                    // The PS baselines don't model transport at all, so
+                    // re-running them per network profile would produce
+                    // bit-identical rows at full cost: one cell (tagged
+                    // with the first listed profile) suffices.
+                    if ni > 0 && matches!(arm, Arm::Ps(_)) {
+                        continue;
+                    }
+                    let c = run_cell(spec, n, attack, arm, network);
+                    w.row(&[
+                        c.n.to_string(),
+                        c.byz.to_string(),
+                        c.attack.clone(),
+                        c.arm.clone(),
+                        c.network.clone(),
+                        format_f64(c.final_metric),
+                        c.steps_done.to_string(),
+                        c.bans.to_string(),
+                        c.last_ban_step.map(|s| s.to_string()).unwrap_or_default(),
+                        format_f64(c.bytes_per_peer_step),
+                        c.recomputes.to_string(),
+                        format_f64(c.wall_s),
+                        format_f64(c.avg_step_ms),
+                        c.net_dropped_msgs.to_string(),
+                        c.net_late_msgs.to_string(),
+                        c.net_retx_bytes.to_string(),
+                    ])?;
+                    w.flush()?;
+                    cells.push(c);
+                }
             }
         }
     }
@@ -287,6 +336,7 @@ pub fn run_matrix(spec: &ScenarioSpec, out_dir: &Path) -> std::io::Result<Matrix
                 ("byz", Json::num(c.byz as f64)),
                 ("attack", Json::str(&c.attack)),
                 ("arm", Json::str(&c.arm)),
+                ("network", Json::str(&c.network)),
                 ("final_metric", Json::num(c.final_metric)),
                 ("steps_done", Json::num(c.steps_done as f64)),
                 ("bans", Json::num(c.bans as f64)),
@@ -294,6 +344,9 @@ pub fn run_matrix(spec: &ScenarioSpec, out_dir: &Path) -> std::io::Result<Matrix
                 ("recomputes", Json::num(c.recomputes as f64)),
                 ("wall_s", Json::num(c.wall_s)),
                 ("avg_step_ms", Json::num(c.avg_step_ms)),
+                ("net_dropped_msgs", Json::num(c.net_dropped_msgs as f64)),
+                ("net_late_msgs", Json::num(c.net_late_msgs as f64)),
+                ("net_retx_bytes", Json::num(c.net_retx_bytes as f64)),
             ])
         })
         .collect();
@@ -307,7 +360,7 @@ pub fn run_matrix(spec: &ScenarioSpec, out_dir: &Path) -> std::io::Result<Matrix
     Ok(MatrixReport { cells, csv_path, json_path })
 }
 
-fn run_cell(spec: &ScenarioSpec, n: usize, attack: &str, arm: &Arm) -> CellResult {
+fn run_cell(spec: &ScenarioSpec, n: usize, attack: &str, arm: &Arm, network: &str) -> CellResult {
     let byz = if attack == "none" { 0 } else { spec.byz_count(n) };
     let attack_cfg = if attack == "none" {
         None
@@ -345,6 +398,8 @@ fn run_cell(spec: &ScenarioSpec, n: usize, attack: &str, arm: &Arm) -> CellResul
                 seed: spec.seed,
                 verify_signatures: spec.verify_signatures,
                 gossip_fanout: 8,
+                network: NetworkProfile::from_name(network)
+                    .unwrap_or_else(|| panic!("unknown network profile '{network}'")),
                 segments: vec![],
             };
             run_btard_pooled(&cfg, source, spec.workers)
@@ -377,11 +432,16 @@ fn run_cell(spec: &ScenarioSpec, n: usize, attack: &str, arm: &Arm) -> CellResul
     } else {
         res.metrics.iter().map(|m| m.step_wall_s).sum::<f64>() / res.metrics.len() as f64 * 1e3
     };
+    let (net_dropped_msgs, net_late_msgs, net_retx_bytes) = res.net_faults.iter().fold(
+        (0u64, 0u64, 0u64),
+        |(d, l, r), f| (d + f.dropped_msgs, l + f.late_msgs, r + f.retransmit_bytes),
+    );
     CellResult {
         n,
         byz,
         attack: attack.to_string(),
         arm: arm.name(),
+        network: network.to_string(),
         final_metric: res.final_metric,
         steps_done: res.steps_done,
         bans: res.ban_events.len(),
@@ -390,6 +450,9 @@ fn run_cell(spec: &ScenarioSpec, n: usize, attack: &str, arm: &Arm) -> CellResul
         recomputes: res.recomputes,
         wall_s,
         avg_step_ms,
+        net_dropped_msgs,
+        net_late_msgs,
+        net_retx_bytes,
     }
 }
 
@@ -403,6 +466,7 @@ mod tests {
           "name": "zoo", "cluster_sizes": [4, 8], "byzantine_frac": 0.25,
           "attacks": ["none", "sign_flip:100"],
           "arms": ["btard", "ps:centered_clip"],
+          "networks": ["perfect", "lossy:0.1", "partitioned", "straggler"],
           "steps": 3, "dim": 64, "attack_start": 1, "tau": 2.0,
           "workers": 2, "verify_signatures": true
         }"#;
@@ -412,6 +476,7 @@ mod tests {
         assert_eq!(spec.attacks.len(), 2);
         assert_eq!(spec.arms.len(), 2);
         assert_eq!(spec.arms[1].name(), "ps_centered_clip");
+        assert_eq!(spec.networks.len(), 4);
         assert_eq!(spec.tau, 2.0);
         assert!(spec.verify_signatures);
     }
@@ -421,6 +486,7 @@ mod tests {
         assert!(ScenarioSpec::parse("{").is_err());
         assert!(ScenarioSpec::parse(r#"{"attacks": ["bogus"]}"#).is_err());
         assert!(ScenarioSpec::parse(r#"{"arms": ["ps:bogus"]}"#).is_err());
+        assert!(ScenarioSpec::parse(r#"{"networks": ["wired"]}"#).is_err());
         assert!(ScenarioSpec::parse(r#"{"byzantine_frac": 0.7}"#).is_err());
         assert!(ScenarioSpec::parse(r#"{"cluster_sizes": [1]}"#).is_err());
         // A typo'd key or wrong-typed value must not silently run the
@@ -437,6 +503,7 @@ mod tests {
             byzantine_frac: 0.25,
             attacks: vec!["none".to_string()],
             arms: vec![Arm::Btard, Arm::Ps(Aggregator::Mean)],
+            networks: vec!["perfect".to_string()],
             steps: 2,
             dim: 64,
             attack_start: 1,
@@ -463,6 +530,48 @@ mod tests {
         assert!(csv.lines().count() == 3, "{csv}");
         let json = std::fs::read_to_string(&report.json_path).unwrap();
         assert!(json.contains("\"cells\""));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn network_axis_sweeps_and_reports() {
+        // The same cell swept under perfect and lossy fabrics: the lossy
+        // cell must record its profile in the CSV and still complete (at
+        // tiny n the lossy tail probabilities are negligible, so this
+        // stays a fast smoke of the axis plumbing, not an outcome test).
+        let spec = ScenarioSpec {
+            name: "unit_net".to_string(),
+            cluster_sizes: vec![4],
+            byzantine_frac: 0.0,
+            attacks: vec!["none".to_string()],
+            arms: vec![Arm::Btard],
+            networks: vec!["perfect".to_string(), "lossy".to_string()],
+            steps: 2,
+            dim: 64,
+            attack_start: 1,
+            tau: 2.0,
+            delta_max: 5.0,
+            lr: 0.1,
+            seed: 3,
+            workers: 2,
+            eval_every: 1,
+            verify_signatures: false,
+        };
+        let dir =
+            std::env::temp_dir().join(format!("btard_scenarios_net_{}", std::process::id()));
+        let report = run_matrix(&spec, &dir).unwrap();
+        assert_eq!(report.cells.len(), 2);
+        assert_eq!(report.cells[0].network, "perfect");
+        assert_eq!(report.cells[1].network, "lossy");
+        // Only the perfect cell's outcome is asserted: the lossy cell's
+        // fate schedule is seed-dependent and this test smokes the axis
+        // plumbing, not the protocol's fault response (network_sim.rs
+        // covers that with pinned fault sets).
+        assert!(report.cells[0].final_metric.is_finite(), "{:?}", report.cells[0]);
+        assert_eq!(report.cells[0].steps_done, 2);
+        let csv = std::fs::read_to_string(&report.csv_path).unwrap();
+        assert!(csv.lines().next().unwrap().contains("network"));
+        assert!(csv.contains("lossy"));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

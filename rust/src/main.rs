@@ -27,6 +27,7 @@ use btard::harness::{run_matrix, Recorder, ScenarioSpec, Table};
 use btard::model::mlp::MlpModel;
 use btard::model::synthetic::Quadratic;
 use btard::model::GradientSource;
+use btard::net::NetworkProfile;
 use btard::util::cli::Args;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -54,10 +55,15 @@ fn main() {
                  \x20 --validators M --steps K --lr LR --seed S\n\
                  \x20 --exec pooled|threaded      execution model (default pooled)\n\
                  \x20 --workers W                 pooled-scheduler worker count\n\
+                 \x20 --network PROFILE           network-condition model: perfect (default),\n\
+                 \x20                             lossy[:drop], partitioned[:frac],\n\
+                 \x20                             straggler[:frac] — seeded fault simulation\n\
                  \x20 --aggregator NAME           (ps) mean, coord_median, geo_median,\n\
                  \x20                             trimmed_mean, krum, centered_clip\n\
                  scenarios flags:\n\
-                 \x20 --spec FILE.json            scenario matrix spec (default: smoke)\n\
+                 \x20 --spec FILE.json            scenario matrix spec (default: smoke); sweeps\n\
+                 \x20                             {peers}x{attack}x{arm}x{network} — the\n\
+                 \x20                             'networks' key lists profiles per cell\n\
                  \x20 --out DIR                   output directory (default: results)"
             );
         }
@@ -146,6 +152,13 @@ fn parse_tau(args: &Args) -> TauPolicy {
     }
 }
 
+/// Network-condition profile from --network (None = leave config as-is).
+fn parse_network(args: &Args) -> Option<NetworkProfile> {
+    args.get("network").map(|s| {
+        NetworkProfile::from_name(s).unwrap_or_else(|| panic!("unknown network profile '{s}'"))
+    })
+}
+
 fn parse_attack(args: &Args) -> Option<(AttackKind, AttackSchedule)> {
     let name = args.get("attack")?;
     let kind =
@@ -156,8 +169,11 @@ fn parse_attack(args: &Args) -> Option<(AttackKind, AttackSchedule)> {
 fn cmd_train(args: &Args) {
     // --config <file.json> takes precedence over individual flags.
     if let Some(path) = args.get("config") {
-        let cfg = btard::coordinator::runconfig::load_run_config(path)
+        let mut cfg = btard::coordinator::runconfig::load_run_config(path)
             .unwrap_or_else(|e| panic!("{e:#}"));
+        if let Some(profile) = parse_network(args) {
+            cfg.network = profile; // flag overrides the config file
+        }
         let source = build_source(args);
         let mode = parse_exec(args, cfg.n_peers);
         run_and_report(cfg, source, mode);
@@ -195,6 +211,7 @@ fn cmd_train(args: &Args) {
         seed: args.get_u64("seed", 0),
         verify_signatures: !args.get_bool("no-sigs"),
         gossip_fanout: 8,
+        network: parse_network(args).unwrap_or_default(),
         segments: vec![],
     };
     let mode = parse_exec(args, n);
@@ -234,6 +251,12 @@ fn run_and_report(cfg: RunConfig, source: Arc<dyn GradientSource>, mode: ExecMod
         wall,
         summary.display()
     );
+    if !res.net_faults.is_empty() {
+        let dropped: u64 = res.net_faults.iter().map(|f| f.dropped_msgs).sum();
+        let late: u64 = res.net_faults.iter().map(|f| f.late_msgs).sum();
+        let retx: u64 = res.net_faults.iter().map(|f| f.retransmit_bytes).sum();
+        println!("network faults: {dropped} dropped, {late} late, {retx} retransmit bytes");
+    }
 }
 
 fn cmd_ps(args: &Args) {

@@ -45,7 +45,13 @@ pub trait GradientSource: Send + Sync {
 /// Numerical gradient check helper shared by model tests: central
 /// differences on a few coordinates.
 #[cfg(test)]
-pub fn check_grad<S: GradientSource>(src: &S, params: &[f32], seed: u64, coords: &[usize], tol: f32) {
+pub fn check_grad<S: GradientSource>(
+    src: &S,
+    params: &[f32],
+    seed: u64,
+    coords: &[usize],
+    tol: f32,
+) {
     let (_, grad) = src.loss_and_grad(params, seed);
     let eps = 1e-3f32;
     for &c in coords {

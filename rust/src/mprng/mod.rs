@@ -135,7 +135,8 @@ mod tests {
             .map(|p| MprngRound::new(p, &mut Rng::new(seed + p as u64)))
             .collect();
         let live: Vec<PeerId> = (0..n).collect();
-        let commitments: Vec<Option<Digest>> = rounds.iter().map(|r| Some(r.commitment())).collect();
+        let commitments: Vec<Option<Digest>> =
+            rounds.iter().map(|r| Some(r.commitment())).collect();
         let reveals: Vec<Option<Vec<u8>>> = rounds.iter().map(|r| Some(r.reveal())).collect();
         match combine(&live, &commitments, &reveals) {
             MprngOutcome::Ok(out) => (out, rounds),

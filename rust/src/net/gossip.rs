@@ -77,6 +77,7 @@ mod tests {
             class: MsgClass::Commitment,
             payload: payload.into(),
             broadcast: true,
+            deliver_at: 0,
             signature: None,
         }
     }

@@ -1,4 +1,12 @@
-//! In-process cluster transport: one mailbox (mpsc channel) per peer.
+//! In-process cluster fabric: one mailbox (mpsc channel) per peer.
+//!
+//! `PeerNet` is the perfect-fabric [`Transport`] backend — zero latency,
+//! zero loss — and the delivery substrate the seeded fault simulator
+//! (`net::sim::SimNet`) builds on: faulty backends stamp envelopes with
+//! a `deliver_at` phase-clock gate, and the machinery here (the `future`
+//! buffer plus `advance_clock`) holds them back until the receiver's
+//! logical clock catches up. On the perfect fabric every envelope is
+//! stamped 0 and the gate is inert.
 //!
 //! Honest peers use `broadcast` (same bytes to everyone). Byzantine peers
 //! may use `broadcast_split` to send contradicting payloads; the
@@ -19,13 +27,17 @@
 //!   equivocation variants keep their per-sender FIFO order — and either
 //!   returns a match or reports `Timeout` immediately. The deterministic
 //!   order makes a pooled run bit-identical to a threaded run of the
-//!   same seed regardless of worker interleaving.
+//!   same seed regardless of worker interleaving. Keyed collects
+//!   (`Transport::recv_keyed`) locate their `(step, slot)` range by
+//!   `partition_point` binary search over the sorted buffer instead of a
+//!   linear scan, which keeps per-receive buffer management O(log n) at
+//!   cluster sizes where the pending buffer holds hundreds of envelopes.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::Duration;
 
-use super::{Envelope, MsgClass, PeerId, TrafficStats};
+use super::{Envelope, MsgClass, PeerId, TrafficStats, Transport};
 use crate::crypto::{Mont, PublicKey, SecretKey};
 
 /// Shared, immutable cluster facts.
@@ -60,10 +72,28 @@ pub struct PeerNet {
     mailbox: Receiver<Envelope>,
     /// Buffered envelopes that arrived ahead of the phase we're waiting on.
     pending: Vec<Envelope>,
+    /// Envelopes whose `deliver_at` gate is still ahead of `clock`
+    /// (network-model latency); promoted by `advance_clock`.
+    future: Vec<Envelope>,
+    /// Logical phase clock: incremented once per protocol stage entry.
+    clock: u64,
     /// Default receive timeout: elapsed ⇒ counterpart considered in
     /// violation of the protocol (triggers ELIMINATE upstream).
     pub timeout: Duration,
     pub recv_mode: RecvMode,
+}
+
+/// The distinct payload variants of an equivocating broadcast, in first
+/// -appearance order — the relay semantics every `Transport` backend
+/// shares: each distinct variant is eventually delivered to every peer.
+pub(crate) fn distinct_variants(variants: &[(PeerId, Vec<u8>)]) -> Vec<Vec<u8>> {
+    let mut distinct: Vec<Vec<u8>> = Vec::new();
+    for (_, p) in variants {
+        if !distinct.contains(p) {
+            distinct.push(p.clone());
+        }
+    }
+    distinct
 }
 
 /// Build a fully connected in-process cluster.
@@ -74,7 +104,8 @@ pub fn build_cluster(
     verify_signatures: bool,
 ) -> Vec<PeerNet> {
     let mont = Mont::new();
-    let secrets: Vec<SecretKey> = (0..n).map(|i| crate::crypto::keygen(&mont, key_seed + i as u64)).collect();
+    let secrets: Vec<SecretKey> =
+        (0..n).map(|i| crate::crypto::keygen(&mont, key_seed + i as u64)).collect();
     let public_keys: Vec<PublicKey> = secrets.iter().map(|s| s.public).collect();
     let info = Arc::new(ClusterInfo {
         n_peers: n,
@@ -101,6 +132,8 @@ pub fn build_cluster(
             senders: senders.clone(),
             mailbox,
             pending: Vec::new(),
+            future: Vec::new(),
+            clock: 0,
             timeout: Duration::from_secs(30),
             recv_mode: RecvMode::Blocking,
         })
@@ -116,7 +149,7 @@ pub enum RecvError {
 }
 
 impl PeerNet {
-    fn make_envelope(
+    pub(crate) fn make_envelope(
         &self,
         step: u64,
         slot: u32,
@@ -131,6 +164,7 @@ impl PeerNet {
             class,
             payload: payload.into(),
             broadcast,
+            deliver_at: 0,
             signature: None,
         };
         // When the cluster runs with verification off (numerics benches),
@@ -171,13 +205,7 @@ impl PeerNet {
         class: MsgClass,
         variants: Vec<(PeerId, Vec<u8>)>,
     ) {
-        let mut distinct: Vec<Vec<u8>> = Vec::new();
-        for (_, p) in &variants {
-            if !distinct.contains(p) {
-                distinct.push(p.clone());
-            }
-        }
-        for payload in distinct {
+        for payload in distinct_variants(&variants) {
             let bytes = payload.len();
             let env = self.make_envelope(step, slot, class, payload, true);
             self.info.stats.record_broadcast(self.id, class, bytes);
@@ -187,21 +215,74 @@ impl PeerNet {
         }
     }
 
-    /// Drain every immediately available envelope into `pending` (dropping
-    /// forged ones) and sort it by the canonical delivery key. The sort is
-    /// stable, so multiple envelopes with the same key — equivocation
-    /// variants from one sender — stay in their per-sender FIFO order,
-    /// exactly as a blocking receiver would have observed them.
+    /// Deliver an envelope to this peer's mailbox directly (network-model
+    /// backends route per-recipient envelopes through here).
+    pub(crate) fn push_to(&self, to: PeerId, env: Envelope) {
+        // Ignore send errors: the receiver may have been banned/stopped.
+        let _ = self.senders[to].send(env);
+    }
+
+    /// Current logical phase-clock value (delivery-gate reference).
+    pub(crate) fn now(&self) -> u64 {
+        self.clock
+    }
+
+    /// Advance the logical phase clock and promote any latency-gated
+    /// envelopes that just became deliverable. Promotion preserves
+    /// arrival order, so equal-key envelopes keep per-sender FIFO order
+    /// through the canonical stable sort.
+    pub fn advance_clock(&mut self) {
+        self.clock += 1;
+        if self.future.is_empty() {
+            return;
+        }
+        let clock = self.clock;
+        let mut still = Vec::with_capacity(self.future.len());
+        let mut promoted = false;
+        for env in self.future.drain(..) {
+            if env.deliver_at <= clock {
+                self.pending.push(env);
+                promoted = true;
+            } else {
+                still.push(env);
+            }
+        }
+        self.future = still;
+        if promoted && self.recv_mode == RecvMode::Drain {
+            self.pending.sort_by_key(|e| (e.step, e.slot, e.from));
+        }
+    }
+
+    /// Signature-check and ripeness-gate one incoming envelope: forged
+    /// envelopes are dropped silently (per the paper: a receiver ignores
+    /// unsigned/forged messages), not-yet-deliverable ones are parked in
+    /// `future` until the phase clock reaches their gate.
+    fn gate(&mut self, env: Envelope) -> Option<Envelope> {
+        if self.info.verify_signatures
+            && !env.verify_with(&self.mont, &self.info.public_keys[env.from])
+        {
+            return None; // forged — drop silently
+        }
+        if env.deliver_at > self.clock {
+            self.future.push(env);
+            return None;
+        }
+        Some(env)
+    }
+
+    /// Drain every deliverable envelope into `pending` (dropping forged
+    /// ones, parking latency-gated ones) and sort it by the canonical
+    /// delivery key. The sort is stable, so multiple envelopes with the
+    /// same key — equivocation variants from one sender — stay in their
+    /// per-sender FIFO order, exactly as a blocking receiver would have
+    /// observed them.
     fn refill_pending_ordered(&mut self) {
         let mut added = false;
         while let Ok(env) = self.mailbox.try_recv() {
-            if self.info.verify_signatures
-                && !env.verify_with(&self.mont, &self.info.public_keys[env.from])
-            {
-                continue; // forged — drop silently
+            if let Some(env) = self.gate(env) {
+                self.pending.push(env);
+                added = true;
             }
-            self.pending.push(env);
-            added = true;
         }
         if added {
             // Stable + adaptive: appending to an already-sorted prefix
@@ -234,11 +315,7 @@ impl PeerNet {
             }
             match self.mailbox.recv_timeout(remaining) {
                 Ok(env) => {
-                    if self.info.verify_signatures
-                        && !env.verify_with(&self.mont, &self.info.public_keys[env.from])
-                    {
-                        continue; // forged — drop silently
-                    }
+                    let Some(env) = self.gate(env) else { continue };
                     if pred(&env) {
                         return Ok(env);
                     }
@@ -270,11 +347,7 @@ impl PeerNet {
         }
         self.pending = keep;
         while let Ok(env) = self.mailbox.try_recv() {
-            if self.info.verify_signatures
-                && !env.verify_with(&self.mont, &self.info.public_keys[env.from])
-            {
-                continue;
-            }
+            let Some(env) = self.gate(env) else { continue };
             if pred(&env) {
                 out.push(env);
             } else {
@@ -282,6 +355,76 @@ impl PeerNet {
             }
         }
         out
+    }
+}
+
+impl Transport for PeerNet {
+    fn id(&self) -> PeerId {
+        self.id
+    }
+
+    fn info(&self) -> &Arc<ClusterInfo> {
+        &self.info
+    }
+
+    fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+    }
+
+    fn set_recv_mode(&mut self, mode: RecvMode) {
+        self.recv_mode = mode;
+    }
+
+    fn tick(&mut self) {
+        self.advance_clock();
+    }
+
+    fn send(&mut self, to: PeerId, step: u64, slot: u32, class: MsgClass, payload: Vec<u8>) {
+        PeerNet::send(self, to, step, slot, class, payload);
+    }
+
+    fn broadcast(&mut self, step: u64, slot: u32, class: MsgClass, payload: Vec<u8>) {
+        PeerNet::broadcast(self, step, slot, class, payload);
+    }
+
+    fn broadcast_split(
+        &mut self,
+        step: u64,
+        slot: u32,
+        class: MsgClass,
+        variants: Vec<(PeerId, Vec<u8>)>,
+    ) {
+        PeerNet::broadcast_split(self, step, slot, class, variants);
+    }
+
+    /// Keyed receive. In drain mode the pending buffer is sorted by
+    /// `(step, slot, from)`, so the `(step, slot)` range is located by
+    /// `partition_point` binary search — O(log n) per receive instead of
+    /// the linear scan the generic-predicate path pays (the ROADMAP's
+    /// drain-mode hot path: at n ≳ 512 the scan dominated each collect).
+    /// `remove` (not `swap_remove`) keeps the canonical order.
+    fn recv_keyed(
+        &mut self,
+        step: u64,
+        slot: u32,
+        pred: &dyn Fn(&Envelope) -> bool,
+    ) -> Result<Envelope, RecvError> {
+        if self.recv_mode == RecvMode::Drain {
+            self.refill_pending_ordered();
+            let lo = self.pending.partition_point(|e| (e.step, e.slot) < (step, slot));
+            let len = self.pending[lo..].partition_point(|e| (e.step, e.slot) <= (step, slot));
+            for pos in lo..lo + len {
+                if pred(&self.pending[pos]) {
+                    return Ok(self.pending.remove(pos));
+                }
+            }
+            return Err(RecvError::Timeout);
+        }
+        self.recv_match(|e| e.step == step && e.slot == slot && pred(e))
+    }
+
+    fn drain_match(&mut self, pred: &dyn Fn(&Envelope) -> bool) -> Vec<Envelope> {
+        PeerNet::drain_match(self, |e| pred(e))
     }
 }
 
@@ -380,6 +523,57 @@ mod tests {
         let env = p0.recv_match(|e| e.from == 1).unwrap();
         assert!(env.signature.is_none());
         assert_eq!(env.payload.to_vec(), vec![5]);
+    }
+
+    #[test]
+    fn keyed_recv_binary_search_matches_linear_semantics() {
+        // recv_keyed must return envelopes in the same canonical order a
+        // linear scan of the sorted buffer would, and leave non-matching
+        // keys untouched for later collects.
+        let mut cluster = build_cluster(3, 900, 8, true);
+        let p2 = cluster.pop().unwrap();
+        let p1 = cluster.pop().unwrap();
+        let mut p0 = cluster.pop().unwrap();
+        p0.recv_mode = RecvMode::Drain;
+        // Interleave two slots and two senders, sent out of order.
+        p2.send(0, 4, slots::GRAD_PART, MsgClass::GradientPart, vec![24]);
+        p1.send(0, 4, slots::VERIFY_SCALARS, MsgClass::Verification, vec![91]);
+        p1.send(0, 4, slots::GRAD_PART, MsgClass::GradientPart, vec![14]);
+        p2.send(0, 3, slots::GRAD_PART, MsgClass::GradientPart, vec![23]);
+        // Keyed collect at (4, GRAD_PART): from-order within the key.
+        let a = Transport::recv_keyed(&mut p0, 4, slots::GRAD_PART, &|_| true).unwrap();
+        let b = Transport::recv_keyed(&mut p0, 4, slots::GRAD_PART, &|_| true).unwrap();
+        assert_eq!((a.from, b.from), (1, 2));
+        assert!(Transport::recv_keyed(&mut p0, 4, slots::GRAD_PART, &|_| true).is_err());
+        // The other keys are still pending, in canonical order.
+        let c = Transport::recv_keyed(&mut p0, 3, slots::GRAD_PART, &|_| true).unwrap();
+        assert_eq!(c.payload.to_vec(), vec![23]);
+        let d = Transport::recv_keyed(&mut p0, 4, slots::VERIFY_SCALARS, &|_| true).unwrap();
+        assert_eq!(d.payload.to_vec(), vec![91]);
+        // Predicate filtering inside the key range (wrong sender ⇒ miss).
+        p1.send(0, 5, slots::GRAD_PART, MsgClass::GradientPart, vec![15]);
+        let miss = Transport::recv_keyed(&mut p0, 5, slots::GRAD_PART, &|e| e.from == 2);
+        assert!(miss.is_err());
+        let hit = Transport::recv_keyed(&mut p0, 5, slots::GRAD_PART, &|e| e.from == 1).unwrap();
+        assert_eq!(hit.payload.to_vec(), vec![15]);
+    }
+
+    #[test]
+    fn latency_gate_holds_envelopes_until_clock_catches_up() {
+        let mut cluster = build_cluster(2, 950, 8, false);
+        let p1 = cluster.pop().unwrap();
+        let mut p0 = cluster.pop().unwrap();
+        p0.recv_mode = RecvMode::Drain;
+        // A network model stamped this envelope for phase 2.
+        let mut env = p1.make_envelope(0, slots::GRAD_PART, MsgClass::GradientPart, vec![7], false);
+        env.deliver_at = 2;
+        p1.push_to(0, env);
+        assert!(Transport::recv_keyed(&mut p0, 0, slots::GRAD_PART, &|_| true).is_err());
+        p0.advance_clock(); // clock = 1: still gated (parked in `future`)
+        assert!(Transport::recv_keyed(&mut p0, 0, slots::GRAD_PART, &|_| true).is_err());
+        p0.advance_clock(); // clock = 2: deliverable
+        let got = Transport::recv_keyed(&mut p0, 0, slots::GRAD_PART, &|_| true).unwrap();
+        assert_eq!(got.payload.to_vec(), vec![7]);
     }
 
     #[test]

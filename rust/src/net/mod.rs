@@ -1,20 +1,35 @@
 //! Peer-to-peer message substrate for the simulated cluster.
 //!
-//! Every peer owns a mailbox; the transport (`local`) delivers signed
-//! envelopes between peers whether they run on their own OS threads
-//! (blocking receives) or are multiplexed over a worker pool
-//! (deterministic drain-mode receives). Broadcast uses a
-//! logical broadcast channel with GossipSub-style cost accounting
-//! (`stats`) and equivocation detection (`gossip`): a peer that signs two
+//! The protocol layer talks to the network exclusively through the
+//! [`Transport`] trait — the seam every backend plugs into:
+//!
+//! - [`local::PeerNet`] — the perfect in-process fabric: one mailbox
+//!   (mpsc channel) per peer, zero latency, zero loss. The default.
+//! - [`sim::SimNet`] — wraps the local fabric with a deterministic,
+//!   seeded per-link network-condition model ([`sim::NetworkProfile`]):
+//!   transmission loss with retransmits, tail-latency delays measured in
+//!   protocol phases, straggler uplinks, and peer-scoped blackout
+//!   windows — all reproducible bit-for-bit for a given seed.
+//!
+//! Either backend delivers signed envelopes whether peers run on their
+//! own OS threads (blocking receives) or are multiplexed over a worker
+//! pool (deterministic drain-mode receives). Broadcast uses a logical
+//! broadcast channel with GossipSub-style cost accounting (`stats`) and
+//! equivocation detection (`gossip`): a peer that signs two
 //! contradicting messages for the same protocol slot is banned by every
 //! honest receiver, matching footnote 4 of the paper.
 
 pub mod gossip;
 pub mod local;
+pub mod sim;
 pub mod stats;
 
 use crate::crypto::{sign, verify, Mont, PublicKey, SecretKey, Signature};
 use std::sync::Arc;
+use std::time::Duration;
+
+pub use local::{build_cluster, ClusterInfo, PeerNet, RecvError, RecvMode};
+pub use sim::{build_transports, FaultStats, NetworkProfile, PeerFaults, SimNet};
 pub use stats::{MsgClass, TrafficStats};
 
 /// Peer identifier: index into the initial roster (stable across bans).
@@ -37,6 +52,12 @@ pub struct Envelope {
     pub payload: Arc<[u8]>,
     /// True if this envelope was sent on the broadcast channel.
     pub broadcast: bool,
+    /// Transport-layer delivery gate: the receiver's logical phase clock
+    /// must reach this value before the envelope becomes visible
+    /// (0 = immediate). Routing metadata, not message content — it is
+    /// stamped by the network model, so it is *not* covered by the
+    /// signature, exactly like a relay timestamp would not be.
+    pub deliver_at: u64,
     pub signature: Option<Signature>,
 }
 
@@ -94,6 +115,67 @@ pub mod slots {
     }
 }
 
+/// The pluggable transport seam: everything the staged BTARD protocol
+/// needs from a network backend. `coordinator::step` and both training
+/// loops are written against this trait only, so a backend swap (perfect
+/// local fabric, seeded fault simulation, real sockets, multi-process)
+/// never touches protocol code.
+///
+/// Contract, shared by every backend:
+///
+/// - **Canonical drain order.** In `RecvMode::Drain`, deliverable
+///   envelopes are observed in `(step, slot, from)` order (stable for
+///   equal keys), which is what makes pooled runs bit-identical across
+///   worker counts.
+/// - **Logical phase clock.** `tick()` is called once at the start of
+///   every protocol stage. Backends that model latency use it as the
+///   delivery clock: an envelope stamped `deliver_at = c` is invisible
+///   to receives until the *receiver's* clock reaches `c`. The perfect
+///   fabric stamps every envelope 0, so its clock is inert.
+/// - **Self loopback is exempt from faults.** A peer always sees its own
+///   broadcasts immediately: loopback never crosses the network.
+pub trait Transport: Send {
+    /// This endpoint's peer id (stable index into the initial roster).
+    fn id(&self) -> PeerId;
+    /// Shared immutable cluster facts (roster size, keys, traffic stats).
+    fn info(&self) -> &Arc<ClusterInfo>;
+    /// Set the blocking-receive timeout (no-op for drain-mode receives).
+    fn set_timeout(&mut self, timeout: Duration);
+    fn set_recv_mode(&mut self, mode: RecvMode);
+    /// Advance the logical phase clock (called at every stage entry).
+    fn tick(&mut self);
+    /// Point-to-point send.
+    fn send(&mut self, to: PeerId, step: u64, slot: u32, class: MsgClass, payload: Vec<u8>);
+    /// Broadcast the same payload to all peers (including self).
+    fn broadcast(&mut self, step: u64, slot: u32, class: MsgClass, payload: Vec<u8>);
+    /// Byzantine equivocation: per-recipient payload variants, each
+    /// eventually relayed to every peer.
+    fn broadcast_split(
+        &mut self,
+        step: u64,
+        slot: u32,
+        class: MsgClass,
+        variants: Vec<(PeerId, Vec<u8>)>,
+    );
+    /// Receive the next envelope for exactly `(step, slot)` that also
+    /// satisfies `pred`, buffering mismatches. Keyed receives are the
+    /// protocol's hot path: drain-mode backends locate the `(step, slot)`
+    /// range by binary search over the sorted pending buffer.
+    fn recv_keyed(
+        &mut self,
+        step: u64,
+        slot: u32,
+        pred: &dyn Fn(&Envelope) -> bool,
+    ) -> Result<Envelope, RecvError>;
+    /// Drain every already-deliverable envelope matching `pred` without
+    /// blocking (end-of-step control-traffic sweep).
+    fn drain_match(&mut self, pred: &dyn Fn(&Envelope) -> bool) -> Vec<Envelope>;
+    /// Per-peer network-fault counters, when the backend injects faults.
+    fn fault_handle(&self) -> Option<Arc<FaultStats>> {
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +192,7 @@ mod tests {
             class: MsgClass::Commitment,
             payload: vec![1, 2, 3].into(),
             broadcast: true,
+            deliver_at: 0,
             signature: None,
         };
         assert!(!env.verify_with(&mont, &sk.public));
@@ -122,6 +205,11 @@ mod tests {
         let mut e3 = env.clone();
         e3.payload = vec![99, 2, 3].into();
         assert!(!e3.verify_with(&mont, &sk.public));
+        // Transport routing metadata is NOT covered: the network model
+        // re-stamps it without invalidating the sender's signature.
+        let mut e4 = env.clone();
+        e4.deliver_at = 99;
+        assert!(e4.verify_with(&mont, &sk.public));
     }
 
     #[test]

@@ -5,7 +5,9 @@
 use btard::coordinator::attacks::{AttackKind, AttackSchedule};
 use btard::coordinator::centered_clip::TauPolicy;
 use btard::coordinator::optimizer::LrSchedule;
-use btard::coordinator::training::{run_btard, run_ps, OptSpec, PsConfig, RunConfig};
+use btard::coordinator::training::{
+    run_btard, run_btard_pooled, run_ps, OptSpec, PsConfig, RunConfig,
+};
 use btard::coordinator::{Aggregator, ProtocolConfig};
 use btard::data::synth_vision::SynthVision;
 use btard::model::mlp::MlpModel;
@@ -61,7 +63,9 @@ fn mlp_recovers_accuracy_after_attack_quick() {
     // Scaled-down stand-in for the #[ignore]d full Fig. 3 run below so
     // the accuracy-recovery-after-attack claim stays in default CI:
     // signatures off, fewer steps, a conservative accuracy floor (10
-    // classes ⇒ chance is 0.1).
+    // classes ⇒ chance is 0.1). Pinned to the pooled scheduler with a
+    // fixed worker count so the tier-1 run exercises the default
+    // execution model regardless of the BTARD_EXEC environment.
     let ds = Arc::new(SynthVision::new(1, 32, 10));
     let model: Arc<dyn GradientSource> = Arc::new(MlpModel::new(ds, 24, 8));
     let mut c = RunConfig::quick(8, 250);
@@ -79,7 +83,7 @@ fn mlp_recovers_accuracy_after_attack_quick() {
     };
     c.eval_every = 25;
     c.verify_signatures = false;
-    let res = run_btard(&c, model);
+    let res = run_btard_pooled(&c, model, 4);
     for byz in [5usize, 6, 7] {
         assert!(
             res.ban_events.iter().any(|b| b.target == byz),
@@ -92,7 +96,7 @@ fn mlp_recovers_accuracy_after_attack_quick() {
 }
 
 #[test]
-#[ignore = "expensive: 400-step MLP run with full signature verification (several minutes); run with --ignored"]
+#[ignore = "expensive: 400-step MLP run with full signatures (minutes); run with --ignored"]
 fn mlp_recovers_accuracy_after_attack() {
     // Scaled-down Fig. 3 scenario: 8 peers, 3 Byzantine sign-flippers
     // attacking from step 30, τ=1, 1 validator.

@@ -1,0 +1,114 @@
+//! Golden-metrics regression gate for the default (perfect-fabric)
+//! execution path.
+//!
+//! The Transport-seam refactor must never change the numerics of a
+//! default run: a fixed 64-peer, sign-flip-attacked, pooled run is
+//! reduced to a SHA-256 digest over every deterministic output bit
+//! (final params, per-step losses/metrics/bans, ban events, traffic and
+//! recompute counters) and compared against a checked-in golden digest.
+//!
+//! Blessing protocol: on the first run (no golden file yet — e.g. right
+//! after this test lands, or after an *intentional* numerics change with
+//! `BTARD_BLESS=1`) the digest is written to
+//! `rust/tests/golden/perfect64.digest` and the test passes with a
+//! notice; commit the file to pin the behaviour. Every later run must
+//! reproduce it bit-for-bit.
+
+use btard::coordinator::attacks::{AttackKind, AttackSchedule};
+use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::optimizer::LrSchedule;
+use btard::coordinator::training::{run_btard_pooled, OptSpec, RunConfig, RunResult};
+use btard::coordinator::ProtocolConfig;
+use btard::model::synthetic::Quadratic;
+use btard::model::GradientSource;
+use btard::net::NetworkProfile;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Serialize every deterministic member of a RunResult into a digest.
+fn run_digest(res: &RunResult) -> String {
+    let mut bytes: Vec<u8> = Vec::new();
+    bytes.extend_from_slice(&res.steps_done.to_le_bytes());
+    bytes.extend_from_slice(&res.recomputes.to_le_bytes());
+    bytes.extend_from_slice(&res.final_metric.to_bits().to_le_bytes());
+    for p in &res.final_params {
+        bytes.extend_from_slice(&p.to_bits().to_le_bytes());
+    }
+    for m in &res.metrics {
+        bytes.extend_from_slice(&m.step.to_le_bytes());
+        bytes.extend_from_slice(&m.loss.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&m.metric.to_bits().to_le_bytes());
+        for b in &m.banned_now {
+            bytes.extend_from_slice(&(*b as u64).to_le_bytes());
+        }
+    }
+    for ev in &res.ban_events {
+        bytes.extend_from_slice(&ev.step.to_le_bytes());
+        bytes.extend_from_slice(&(ev.target as u64).to_le_bytes());
+        bytes.extend_from_slice(&(ev.by as u64).to_le_bytes());
+        bytes.extend_from_slice(ev.reason.name().as_bytes());
+    }
+    for b in &res.peer_bytes {
+        bytes.extend_from_slice(&b.to_le_bytes());
+    }
+    let d = btard::crypto::sha256(&bytes);
+    d.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+#[test]
+fn perfect_fabric_64_peer_run_matches_golden_digest() {
+    // The fixed scenario: 64 peers, 8 sign-flippers from step 2, 4
+    // steps on a 4-worker pool — the same shape the pooled-scheduler
+    // bit-identity test pins against the threaded path.
+    let cfg = RunConfig {
+        n_peers: 64,
+        byzantine: (56..64).collect(),
+        attack: Some((AttackKind::SignFlip { lambda: 1000.0 }, AttackSchedule::from_step(2))),
+        aggregation_attack: false,
+        steps: 4,
+        protocol: ProtocolConfig {
+            n0: 64,
+            tau: TauPolicy::Fixed(1.0),
+            m_validators: 8,
+            delta_max: 4.0,
+            ..ProtocolConfig::default()
+        },
+        opt: OptSpec::Sgd {
+            schedule: LrSchedule::Constant(0.1),
+            momentum: 0.0,
+            nesterov: false,
+        },
+        clip_lambda: None,
+        eval_every: 2,
+        seed: 7,
+        verify_signatures: false,
+        gossip_fanout: 8,
+        network: NetworkProfile::perfect(),
+        segments: vec![],
+    };
+    let src: Arc<dyn GradientSource> = Arc::new(Quadratic::new(1024, 0.1, 2.0, 1.0, 9));
+    let digest = run_digest(&run_btard_pooled(&cfg, src, 4));
+
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust")
+        .join("tests")
+        .join("golden")
+        .join("perfect64.digest");
+    let bless = std::env::var("BTARD_BLESS").is_ok();
+    match std::fs::read_to_string(&path) {
+        Ok(want) if !bless => {
+            assert_eq!(
+                digest,
+                want.trim(),
+                "default-path numerics changed! If intentional, re-bless with \
+                 BTARD_BLESS=1 and commit {}",
+                path.display()
+            );
+        }
+        _ => {
+            std::fs::create_dir_all(path.parent().unwrap()).expect("create golden dir");
+            std::fs::write(&path, &digest).expect("write golden digest");
+            eprintln!("golden digest blessed at {}: {digest}", path.display());
+        }
+    }
+}

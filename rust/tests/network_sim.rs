@@ -1,0 +1,134 @@
+//! Transport-seam integration tests: the seeded network-fault simulator
+//! (`SimNet`) must be deterministic across worker counts, and the BTARD
+//! protocol must respond to injected faults with exactly the paper's
+//! machinery — mutual elimination for timed-out p2p counterparts, cheap
+//! `Proven` MPRNG-abort bans for blacked-out peers — never by banning an
+//! uninvolved honest peer.
+
+use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::messages::BanReason;
+use btard::coordinator::optimizer::LrSchedule;
+use btard::coordinator::training::{run_btard_pooled, OptSpec, RunConfig, RunResult};
+use btard::model::synthetic::Quadratic;
+use btard::model::GradientSource;
+use btard::net::NetworkProfile;
+use std::sync::Arc;
+
+fn net_cfg(n: usize, steps: u64, network: NetworkProfile) -> RunConfig {
+    let mut cfg = RunConfig::quick(n, steps);
+    cfg.protocol.tau = TauPolicy::Fixed(2.0);
+    cfg.protocol.delta_max = 5.0;
+    cfg.opt = OptSpec::Sgd {
+        schedule: LrSchedule::Constant(0.3),
+        momentum: 0.0,
+        nesterov: false,
+    };
+    cfg.eval_every = 2;
+    cfg.seed = 7;
+    cfg.verify_signatures = false;
+    cfg.network = network;
+    cfg
+}
+
+/// Bitwise comparison of everything deterministic in a RunResult,
+/// including the network-fault counters (wall-clock timing fields are
+/// the only excluded members).
+fn assert_bit_identical(a: &RunResult, b: &RunResult) {
+    assert_eq!(a.steps_done, b.steps_done, "steps_done");
+    for (i, (x, y)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "param {i}: {x} vs {y}");
+    }
+    assert_eq!(a.final_metric.to_bits(), b.final_metric.to_bits(), "final_metric");
+    assert_eq!(a.ban_events, b.ban_events, "ban events");
+    assert_eq!(a.recomputes, b.recomputes, "recomputes");
+    assert_eq!(a.peer_bytes, b.peer_bytes, "traffic accounting");
+    assert_eq!(a.net_faults, b.net_faults, "fault accounting");
+    assert_eq!(a.metrics.len(), b.metrics.len(), "metric series length");
+    for (ma, mb) in a.metrics.iter().zip(&b.metrics) {
+        assert_eq!(ma.step, mb.step);
+        assert_eq!(ma.loss.to_bits(), mb.loss.to_bits(), "loss @ step {}", ma.step);
+        assert_eq!(ma.metric.to_bits(), mb.metric.to_bits(), "metric @ step {}", ma.step);
+        assert_eq!(ma.banned_now, mb.banned_now, "bans @ step {}", ma.step);
+    }
+}
+
+#[test]
+fn lossy_simnet_is_bit_identical_across_worker_counts() {
+    // Same seed + same profile ⇒ identical fault schedule, delivery
+    // order, ban sequence and final metrics, no matter how the logical
+    // peers are multiplexed over workers.
+    let cfg = net_cfg(24, 4, NetworkProfile::from_name("lossy").unwrap());
+    let src: Arc<dyn GradientSource> = Arc::new(Quadratic::new(512, 0.1, 2.0, 1.0, 5));
+    let w2 = run_btard_pooled(&cfg, src.clone(), 2);
+    let w7 = run_btard_pooled(&cfg, src, 7);
+    assert_bit_identical(&w2, &w7);
+    // The 5%-loss fabric must actually have exercised the retransmit
+    // path: thousands of p2p transmissions at n=24 make zero retries a
+    // statistical impossibility (and the schedule is seed-pinned).
+    let totals: u64 = w2.net_faults.iter().map(|f| f.retransmits).sum();
+    assert!(totals > 0, "lossy profile never retransmitted");
+    assert_eq!(w2.net_faults.len(), 24);
+}
+
+#[test]
+fn dead_link_triggers_one_mutual_elimination_and_training_converges() {
+    // A permanently broken directed link 3 → 5: owner 5 never receives
+    // contributor 3's gradient part, observes the timeout, and the pair
+    // is mutually eliminated at step 0 — the protocol's tit-for-tat cost
+    // for unattributable faults. Nobody else may be punished (the Σs
+    // alarm this raises is adjudicated against the owner's broadcast
+    // ELIMINATE record and acquitted), and training converges with the
+    // remaining 6 peers.
+    let mut profile = NetworkProfile::perfect();
+    profile.name = "deadlink".to_string();
+    profile.faulty_links = vec![(3, 5)];
+    let cfg = net_cfg(8, 120, profile);
+    let src: Arc<dyn GradientSource> = Arc::new(Quadratic::new(64, 0.2, 4.0, 0.5, 11));
+    let res = run_btard_pooled(&cfg, src, 4);
+    assert_eq!(res.steps_done, 120);
+    assert!(!res.ban_events.is_empty(), "dead link must cost the pair");
+    for ev in &res.ban_events {
+        assert_eq!(ev.reason, BanReason::Eliminated, "{ev:?}");
+        assert!(
+            [3, 5].contains(&ev.target) && [3, 5].contains(&ev.by),
+            "ban outside the faulted pair: {ev:?}"
+        );
+        assert_eq!(ev.step, 0, "{ev:?}");
+    }
+    let banned: Vec<_> = res.ban_events.iter().map(|e| e.target).collect();
+    assert!(banned.contains(&3) && banned.contains(&5));
+    assert!(res.final_metric < 1.0, "no convergence after eliminations: {}", res.final_metric);
+}
+
+#[test]
+fn blackout_peers_banned_via_mprng_proof_without_honest_casualties() {
+    // Peers 2 and 3 black out for steps [1, 3): all their outgoing
+    // traffic is dropped. Missing MPRNG commitments are a *proven*
+    // offence (the commit–reveal round identifies aborters), and proven
+    // bans process before eliminations in the canonical order — so the
+    // blacked-out peers are removed without the mutual-elimination tax
+    // costing any honest peer.
+    let mut profile = NetworkProfile::perfect();
+    profile.name = "blackout".to_string();
+    profile.partition_peers = vec![2, 3];
+    profile.partition_start = 1;
+    profile.partition_end = 3;
+    let cfg = net_cfg(8, 6, profile.clone());
+    let src: Arc<dyn GradientSource> = Arc::new(Quadratic::new(64, 0.2, 4.0, 0.5, 11));
+    let res = run_btard_pooled(&cfg, src.clone(), 3);
+    assert_eq!(res.steps_done, 6);
+    assert_eq!(res.ban_events.len(), 2, "{:?}", res.ban_events);
+    for ev in &res.ban_events {
+        assert!([2, 3].contains(&ev.target), "honest peer banned: {ev:?}");
+        assert_eq!(ev.step, 1, "{ev:?}");
+        assert!(
+            matches!(ev.reason, BanReason::MprngViolation | BanReason::AggregationMismatch),
+            "{ev:?}"
+        );
+    }
+    assert!(res.final_metric.is_finite());
+    // The same partitioned run is reproducible across worker counts.
+    let cfg2 = net_cfg(8, 6, profile);
+    let res2 = run_btard_pooled(&cfg2, src, 5);
+    assert_bit_identical(&res, &res2);
+}

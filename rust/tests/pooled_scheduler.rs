@@ -17,6 +17,7 @@ use btard::coordinator::training::{
 use btard::coordinator::ProtocolConfig;
 use btard::model::synthetic::Quadratic;
 use btard::model::GradientSource;
+use btard::net::NetworkProfile;
 use std::sync::Arc;
 
 fn sweep_cfg(n: usize, byz: usize, steps: u64, attack_start: u64) -> RunConfig {
@@ -50,6 +51,7 @@ fn sweep_cfg(n: usize, byz: usize, steps: u64, attack_start: u64) -> RunConfig {
         seed: 7,
         verify_signatures: false,
         gossip_fanout: 8,
+        network: NetworkProfile::perfect(),
         segments: vec![],
     }
 }

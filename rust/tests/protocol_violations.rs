@@ -143,7 +143,7 @@ mod direct {
                 };
                 let r0 = btard::crypto::sha256_parts(&[b"manual", &1u64.to_le_bytes()]);
                 let mut ctx = PeerCtx {
-                    net,
+                    net: Box::new(net),
                     cfg: cfgp,
                     source,
                     spec: PartitionSpec::new(params0.len(), n),
