@@ -1,5 +1,9 @@
-//! Figure 3 reproduction: test accuracy under 7 attack types × 6
-//! defenses, 7 of 16 peers Byzantine (the paper's pessimistic setting).
+//! Figure 3 reproduction: test accuracy under the attack zoo × 6
+//! defenses, 7 of 16 peers Byzantine (the paper's pessimistic setting) —
+//! extended past the paper's gradient attacks with the protocol-surface
+//! adversaries (equivocation, scalar lies, false accusations) that only
+//! the BTARD arms can even express (the trusted-PS baselines model
+//! gradients alone, so those rows are skipped for them).
 //!
 //! Paper setup: ResNet-18/CIFAR-10, 25k steps. Testbed setup (DESIGN.md
 //! §2): synth-vision MLP, 300 steps on 1 CPU core — we check the *shape*:
@@ -9,7 +13,8 @@
 //! Run: cargo bench --bench fig3_attacks
 //! Env: BTARD_FIG3_STEPS=600 for a longer run.
 
-use btard::coordinator::attacks::{AttackKind, AttackSchedule};
+use btard::coordinator::adversary::AdversarySpec;
+use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{
@@ -75,16 +80,27 @@ fn main() {
         .unwrap_or(300);
     let attack_start = steps / 5;
 
-    let attacks: Vec<(&str, Option<AttackKind>)> = vec![
+    let attacks: Vec<(&str, Option<AdversarySpec>)> = vec![
         ("none", None),
-        ("sign_flip", Some(AttackKind::SignFlip { lambda: 1000.0 })),
-        ("random_dir", Some(AttackKind::RandomDirection { lambda: 1000.0 })),
-        ("label_flip", Some(AttackKind::LabelFlip)),
-        ("delayed_grad", Some(AttackKind::DelayedGradient { delay: 40 })),
-        ("ipm_0.1", Some(AttackKind::Ipm { eps: 0.1 })),
-        ("ipm_0.6", Some(AttackKind::Ipm { eps: 0.6 })),
-        ("alie", Some(AttackKind::Alie)),
-    ];
+        ("sign_flip", Some("sign_flip:1000")),
+        ("random_dir", Some("random_direction:1000")),
+        ("label_flip", Some("label_flip")),
+        ("delayed_grad", Some("delayed_gradient:40")),
+        ("ipm_0.1", Some("ipm:0.1")),
+        ("ipm_0.6", Some("ipm:0.6")),
+        ("alie", Some("alie")),
+        // Protocol-surface adversaries (BTARD arms only): the attacks
+        // Lin Lu et al. show matter for decentralized training.
+        ("equivocate", Some("equivocate")),
+        ("bad_scalar", Some("bad_scalar")),
+        ("false_accuse", Some("false_accuse:0.25")),
+        ("alie_aggregation", Some("alie+aggregation")),
+    ]
+    .into_iter()
+    .map(|(name, spec)| {
+        (name, spec.map(|s| AdversarySpec::parse(s).expect("bench attack spec")))
+    })
+    .collect();
     // Defense arms: BTARD with strong/weak clipping; PS baselines.
     let ps_arms: Vec<(&str, Aggregator, f32)> = vec![
         ("allreduce", Aggregator::Mean, f32::INFINITY),
@@ -111,8 +127,7 @@ fn main() {
             let cfg = RunConfig {
                 n_peers: N,
                 byzantine: byz.clone(),
-                attack: attack.map(|a| (a, schedule)),
-                aggregation_attack: false,
+                attack: attack.clone().map(|a| (a, schedule)),
                 steps,
                 protocol: ProtocolConfig {
                     n0: N,
@@ -150,12 +165,19 @@ fn main() {
             );
         }
 
-        // PS baselines.
+        // PS baselines — only for attacks they can express in full (the
+        // PS loop models the gradient surface alone; an equivocation row
+        // would silently measure an honest run, and a composite like
+        // alie+aggregation would measure plain alie under the
+        // composite's label).
+        if attack.as_ref().is_some_and(|a| !a.ps_expressible()) {
+            continue;
+        }
         for (tag, agg, tau) in &ps_arms {
             let cfg = PsConfig {
                 n_peers: N,
                 byzantine: byz.clone(),
-                attack: attack.map(|a| (a, schedule)),
+                attack: attack.clone().map(|a| (a, schedule)),
                 aggregator: *agg,
                 tau: *tau,
                 steps,

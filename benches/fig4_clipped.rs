@@ -11,7 +11,8 @@
 //! Requires `make artifacts`. Run: cargo bench --bench fig4_clipped
 //! Env: BTARD_FIG4_STEPS=200 for a longer run.
 
-use btard::coordinator::attacks::{AttackKind, AttackSchedule};
+use btard::coordinator::adversary::AdversarySpec;
+use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{run_btard, OptSpec, RunConfig};
@@ -49,12 +50,17 @@ fn main() {
     );
 
     // Fig. 4 attack set: the paper omits delayed/ALIE/IPM for the LM run.
-    let attacks: Vec<(&str, Option<AttackKind>)> = vec![
+    let attacks: Vec<(&str, Option<AdversarySpec>)> = vec![
         ("none", None),
-        ("sign_flip", Some(AttackKind::SignFlip { lambda: 100.0 })),
-        ("random_dir", Some(AttackKind::RandomDirection { lambda: 100.0 })),
-        ("label_flip", Some(AttackKind::LabelFlip)),
-    ];
+        ("sign_flip", Some("sign_flip:100")),
+        ("random_dir", Some("random_direction:100")),
+        ("label_flip", Some("label_flip")),
+    ]
+    .into_iter()
+    .map(|(name, spec)| {
+        (name, spec.map(|s| AdversarySpec::parse(s).expect("bench attack spec")))
+    })
+    .collect();
     // Strong vs weak clipping: τ for the aggregation, λ for Alg. 9's
     // per-part gradient clip (scaled to the ~0.1-norm LM gradients).
     let clip_arms: Vec<(&str, f32, f32)> = vec![
@@ -74,8 +80,7 @@ fn main() {
             let cfg = RunConfig {
                 n_peers: N,
                 byzantine: byz,
-                attack: attack.map(|a| (a, AttackSchedule::from_step(attack_start))),
-                aggregation_attack: false,
+                attack: attack.clone().map(|a| (a, AttackSchedule::from_step(attack_start))),
                 steps,
                 protocol: ProtocolConfig {
                     n0: N,

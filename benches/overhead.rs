@@ -12,7 +12,8 @@
 //!
 //! Run: cargo bench --bench overhead
 
-use btard::coordinator::attacks::{AttackKind, AttackSchedule};
+use btard::coordinator::adversary::AdversarySpec;
+use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::{centered_clip, TauPolicy};
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{run_btard, run_ps, OptSpec, PsConfig, RunConfig};
@@ -133,7 +134,7 @@ fn fig9_clip_iters() {
         let mut cfg = RunConfig::quick(16, 150);
         cfg.byzantine = (9..16).collect();
         cfg.attack = Some((
-            AttackKind::SignFlip { lambda: 1000.0 },
+            AdversarySpec::parse("sign_flip:1000").unwrap(),
             AttackSchedule::from_step(30),
         ));
         cfg.protocol.tau = TauPolicy::Fixed(1.0);

@@ -110,5 +110,37 @@ fn main() {
         println!("\n=== lossy-fabric smoke cell (drop 5% w/ retransmits, tail latency) ===\n");
         println!("{}", table.render());
         println!("lossy csv: {}", lossy.csv_path.display());
+
+        // Protocol-surface adversary smoke cell: 64 peers with 8
+        // equivocators (contradicting gradient commitments from step 2).
+        // Exercises the Adversary API's non-gradient surfaces at scale:
+        // the equivocation tracker must ban all 8 with zero honest
+        // casualties while the remaining cluster keeps training. Own CSV
+        // so CI uploads it alongside the perfect- and lossy-fabric cells.
+        let adversary_spec = ScenarioSpec {
+            name: "scale_smoke_adversary".to_string(),
+            cluster_sizes: vec![64],
+            attacks: vec!["equivocate".to_string()],
+            networks: vec!["perfect".to_string()],
+            ..spec.clone()
+        };
+        let adversary = run_matrix(&adversary_spec, std::path::Path::new("results"))
+            .expect("write adversary results");
+        let mut table = Table::new(&[
+            "n", "attack", "ms/step", "bans", "last_ban", "final_subopt",
+        ]);
+        for c in &adversary.cells {
+            table.row(vec![
+                c.n.to_string(),
+                c.attack.clone(),
+                format!("{:.0}", c.avg_step_ms),
+                c.bans.to_string(),
+                c.last_ban_step.map(|s| s.to_string()).unwrap_or_default(),
+                format!("{:.3}", c.final_metric),
+            ]);
+        }
+        println!("\n=== protocol-surface adversary smoke cell (64 peers, equivocate) ===\n");
+        println!("{}", table.render());
+        println!("adversary csv: {}", adversary.csv_path.display());
     }
 }

@@ -13,7 +13,8 @@
 //!
 //! Run: cargo bench --bench table1_convergence
 
-use btard::coordinator::attacks::{AttackKind, AttackSchedule};
+use btard::coordinator::adversary::AdversarySpec;
+use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{run_btard, OptSpec, RunConfig};
@@ -54,7 +55,7 @@ fn run(
         byzantine: ((N - delta_b)..N).collect(),
         attack: if attack && delta_b > 0 {
             Some((
-                AttackKind::SignFlip { lambda: 50.0 },
+                AdversarySpec::parse("sign_flip:50").unwrap(),
                 // Periodic attack pressure: Byzantines re-offend (they are
                 // banned after the first offence — the periodicity matters
                 // only until then).
@@ -63,7 +64,6 @@ fn run(
         } else {
             None
         },
-        aggregation_attack: false,
         steps,
         protocol: ProtocolConfig {
             n0: N,

@@ -14,7 +14,8 @@
 //! The loss curve is written to results/albert_sim_*.csv and summarized
 //! in EXPERIMENTS.md.
 
-use btard::coordinator::attacks::{AttackKind, AttackSchedule};
+use btard::coordinator::adversary::AdversarySpec;
+use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{run_btard, OptSpec, RunConfig};
@@ -52,7 +53,8 @@ fn main() {
     let d = model.param_dim;
     let model: Arc<dyn GradientSource> = Arc::new(model);
 
-    let attack = AttackKind::from_name(&attack_name).expect("unknown --attack");
+    let attack = AdversarySpec::parse(&attack_name)
+        .unwrap_or_else(|e| panic!("bad --attack spec: {e}"));
     println!(
         "albert_sim: artifact={artifact} (d={d}), {n} peers / {b} byzantine, \
          BTARD-CLIPPED-SGD + LAMB, attack={attack_name}@{attack_start}, τ={tau}, {steps} steps"
@@ -62,7 +64,6 @@ fn main() {
         n_peers: n,
         byzantine: ((n - b)..n).collect(),
         attack: Some((attack, AttackSchedule::from_step(attack_start))),
-        aggregation_attack: false,
         steps,
         protocol: ProtocolConfig {
             n0: n,

@@ -9,7 +9,8 @@
 //! Defenses: btard (the paper), or a trusted-PS baseline:
 //! allreduce | centered_clip | coord_median | geo_median | trimmed_mean
 
-use btard::coordinator::attacks::{AttackKind, AttackSchedule};
+use btard::coordinator::adversary::AdversarySpec;
+use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{run_btard, run_ps, OptSpec, PsConfig, RunConfig};
@@ -30,8 +31,15 @@ fn main() {
     let attack_start = args.get_u64("attack-start", 100);
     let tau = args.get_f32("tau", 1.0);
     let defense = args.get_str("defense", "btard").to_string();
-    let attack_name = args.get_str("attack", "sign_flip:1000").to_string();
-    let attack = AttackKind::from_name(&attack_name).expect("unknown --attack");
+    let mut attack = AdversarySpec::parse(args.get_str("attack", "sign_flip:1000"))
+        .unwrap_or_else(|e| panic!("bad --attack spec: {e}"));
+    // --aggregation-attack composes into the adversary spec on the BTARD
+    // path only: the PS baselines have no aggregation surface, and
+    // run_ps rejects specs it cannot express in full.
+    if args.get_bool("aggregation-attack") && defense == "btard" {
+        attack = attack.with_aggregation();
+    }
+    let attack_name = attack.canonical();
     let schedule = AttackSchedule::from_step(attack_start);
 
     let dataset = Arc::new(SynthVision::new(args.get_u64("seed", 0), 64, 10));
@@ -57,8 +65,7 @@ fn main() {
             &RunConfig {
                 n_peers: n,
                 byzantine: ((n - b)..n).collect(),
-                attack: Some((attack, schedule)),
-                aggregation_attack: args.get_bool("aggregation-attack"),
+                attack: Some((attack.clone(), schedule)),
                 steps,
                 protocol: ProtocolConfig {
                     n0: n,
@@ -83,7 +90,7 @@ fn main() {
             &PsConfig {
                 n_peers: n,
                 byzantine: ((n - b)..n).collect(),
-                attack: Some((attack, schedule)),
+                attack: Some((attack.clone(), schedule)),
                 aggregator: Aggregator::from_name(&defense).expect("unknown --defense"),
                 tau,
                 steps,

@@ -7,7 +7,8 @@
 //!
 //! Run:  cargo run --release --example quickstart
 
-use btard::coordinator::attacks::{AttackKind, AttackSchedule};
+use btard::coordinator::adversary::AdversarySpec;
+use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{run_btard, OptSpec, RunConfig};
@@ -24,7 +25,7 @@ fn main() {
     let mut cfg = RunConfig::quick(4, 160);
     cfg.byzantine = vec![3];
     cfg.attack = Some((
-        AttackKind::SignFlip { lambda: 1000.0 },
+        AdversarySpec::parse("sign_flip:1000").unwrap(),
         AttackSchedule::from_step(20),
     ));
     cfg.protocol.tau = TauPolicy::Fixed(1.0);

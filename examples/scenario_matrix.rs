@@ -19,6 +19,10 @@ fn main() {
             "sign_flip:1000".to_string(),
             "ipm:0.6".to_string(),
             "alie".to_string(),
+            // Protocol-surface adversaries (meaningful on the BTARD arm;
+            // the PS baselines only model the gradient surface).
+            "equivocate".to_string(),
+            "alie+bad_scalar".to_string(),
         ],
         arms: vec![
             Arm::Btard,

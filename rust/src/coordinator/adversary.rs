@@ -1,0 +1,848 @@
+//! The pluggable `Adversary` API: one typed, default-honest hook per
+//! protocol surface the BTARD step exposes (§4.1, Appendix C: "any
+//! participant may deviate at any point of the protocol").
+//!
+//! The step functions (`step.rs`) never know *which* attack is running:
+//! every place a Byzantine peer may deviate calls a trait hook, and every
+//! hook defaults to honest behaviour. An attack is a struct implementing
+//! the hooks it cares about:
+//!
+//! | hook                  | protocol surface                              |
+//! |-----------------------|-----------------------------------------------|
+//! | `gradient`            | Phase A: the submitted gradient (the §4.1 zoo) |
+//! | `corrupt_commit`      | Phase A: equivocating hash commitments         |
+//! | `withhold_part_from`  | Phase B: refuse a peer its gradient part       |
+//! | `corrupt_aggregate`   | Phase C: wrong CenteredClip output (+ cover-up)|
+//! | `corrupt_scalars`     | Phase E: wrong s_i / norms / V3 votes          |
+//! | `validation_verdict`  | Phase V: lazy or false validator accusations   |
+//! | `accuse_policy`       | Phase F: false/withheld ACCUSE broadcasts      |
+//! | `mprng_behavior`      | Phase E: MPRNG abort / bias attempts           |
+//!
+//! Adversaries compose: the spec grammar `"name[:arg][+name[:arg]…]"`
+//! (e.g. `"alie+equivocate"`, `"sign_flip:1000+false_accuse:0.1"`) builds
+//! a [`Composed`] adversary that deviates on every listed surface at
+//! once. [`AdversarySpec`] is the cloneable parsed form carried by run
+//! configs; [`AdversarySpec::build`] instantiates per-peer adversary
+//! state. Malformed arguments are hard errors — a typo'd attack spec must
+//! not silently run a default experiment (the `BTARD_EXEC` precedent).
+
+use super::attacks::{
+    Alie, AttackSchedule, CollusionBoard, DelayedGradient, Ipm, LabelFlip, RandomDirection,
+    SignFlip,
+};
+use super::messages::{Accusation, BanReason};
+use crate::crypto::sha256_parts;
+use crate::model::GradientSource;
+use crate::net::PeerId;
+use std::sync::Arc;
+
+/// Everything a gradient-fabrication attack may condition on: attackers
+/// are omniscient (data and seeds are public) and collude via shared
+/// randomness, matching the paper's threat model.
+pub struct GradientCtx<'a> {
+    pub step: u64,
+    pub params: &'a [f32],
+    pub source: &'a dyn GradientSource,
+    /// This peer's public batch seed ξ_i^t.
+    pub own_seed: u64,
+    /// (peer, batch seed) of every honest contributor this step.
+    pub honest: &'a [(PeerId, u64)],
+    /// r^{t-1}: common randomness all colluders share without messages.
+    pub shared_r: &'a [u8; 32],
+}
+
+/// What a Byzantine peer does with its MPRNG reveal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MprngBehavior {
+    /// Reveal honestly.
+    Honest,
+    /// Withhold the reveal after seeing every commitment (Cleve-style
+    /// abort; caught as an MPRNG offender, round restarts without us).
+    Abort,
+    /// Reveal bytes that do not match our commitment (steering attempt;
+    /// caught the same way).
+    Bias,
+}
+
+/// A Byzantine behaviour. Every hook defaults to the honest action, so
+/// an adversary only implements the surfaces it attacks. One instance is
+/// built per Byzantine peer (hooks take `&mut self` for attack state
+/// such as the delayed-gradient parameter history).
+pub trait Adversary: Send {
+    /// Canonical spec string: `AdversarySpec::parse(self.spec())`
+    /// round-trips to the spec that built this adversary.
+    fn spec(&self) -> String;
+
+    /// Called at each step's start, before gradients are requested.
+    fn observe_params(&mut self, _step: u64, _params: &[f32]) {}
+
+    /// Phase A: the gradient to submit; `None` ⇒ compute honestly.
+    fn gradient(&mut self, _cx: &GradientCtx) -> Option<Vec<f32>> {
+        None
+    }
+
+    /// Phase A: broadcast contradicting gradient commitments to
+    /// different halves of the cluster (equivocation).
+    fn corrupt_commit(&mut self, _step: u64) -> bool {
+        false
+    }
+
+    /// Phase B: the peer (if any) we refuse our gradient part, baiting a
+    /// mutual elimination.
+    fn withhold_part_from(&mut self, _step: u64) -> Option<PeerId> {
+        None
+    }
+
+    /// Phase C: corrupt an owned aggregated part in place. Returning
+    /// `true` marks the part corrupted, which arms the Σs cover-up in
+    /// Phase E (the owner absorbs the discrepancy in its own reported
+    /// scalar so the sum check stays ≈ 0).
+    fn corrupt_aggregate(&mut self, _step: u64, _part: usize, _value: &mut [f32]) -> bool {
+        false
+    }
+
+    /// Phase E: corrupt the broadcast verification scalars in place
+    /// (`s[j]`, `norms[j]`, the Verification-3 votes `over[j]`).
+    fn corrupt_scalars(
+        &mut self,
+        _step: u64,
+        _s: &mut [f32],
+        _norms: &mut [f32],
+        _over: &mut [u8],
+    ) {
+    }
+
+    /// Phase V, as a drawn validator: the accusation to broadcast about
+    /// `target`. Default `None` — the paper's Byzantine validators never
+    /// accuse (lazy validation); honest validation is not run for
+    /// Byzantine peers.
+    fn validation_verdict(&mut self, _step: u64, _target: PeerId) -> Option<Accusation> {
+        None
+    }
+
+    /// Phase F: accusations to broadcast in place of the honest V1/V2
+    /// results (false accusations are adjudicated by recomputation and
+    /// cost the accuser its membership — the Hammurabi rule).
+    fn accuse_policy(
+        &mut self,
+        _step: u64,
+        _me: PeerId,
+        _contributors: &[PeerId],
+    ) -> Vec<Accusation> {
+        Vec::new()
+    }
+
+    /// Phase E: what to do with our MPRNG reveal for `attempt`.
+    fn mprng_behavior(&mut self, _step: u64, _attempt: usize) -> MprngBehavior {
+        MprngBehavior::Honest
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spec grammar
+// ---------------------------------------------------------------------------
+
+/// One parsed surface of an adversary spec. The six gradient attacks
+/// preserve their historical names; the rest are the protocol-surface
+/// adversaries this API exists for.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SurfaceSpec {
+    SignFlip { lambda: f32 },
+    RandomDirection { lambda: f32 },
+    LabelFlip,
+    DelayedGradient { delay: usize },
+    Ipm { eps: f32 },
+    Alie,
+    /// Contradicting gradient commitments (broadcast equivocation).
+    Equivocate,
+    /// Wrong CenteredClip verification scalars: s_i^j shifted by `bias`.
+    BadScalar { bias: f32 },
+    /// False accusations with per-step probability `prob`, both as a
+    /// drawn validator and via Phase-F ACCUSE broadcasts.
+    FalseAccuse { prob: f64 },
+    /// Corrupt owned aggregation parts by `shift` (ℓ2, split across
+    /// coordinates) and cover up the Σs check; `None` defers to the
+    /// run's Δ_max/2 — just under the Verification-3 alarm.
+    Aggregation { shift: Option<f32> },
+    /// Withhold our gradient part from one peer (mutual-elimination bait).
+    Withhold { from: PeerId },
+    /// Withhold the MPRNG reveal after seeing all commitments.
+    MprngAbort,
+    /// Reveal MPRNG bytes that mismatch our commitment.
+    MprngBias,
+}
+
+/// Every name the registry knows, for help text and error messages.
+pub const ADVERSARY_NAMES: [&str; 13] = [
+    "sign_flip",
+    "random_direction",
+    "label_flip",
+    "delayed_gradient",
+    "ipm",
+    "alie",
+    "equivocate",
+    "bad_scalar",
+    "false_accuse",
+    "aggregation",
+    "withhold",
+    "mprng_abort",
+    "mprng_bias",
+];
+
+impl SurfaceSpec {
+    /// Canonical `name[:arg]` form; `parse_part(canonical(x)) == x`.
+    pub fn canonical(&self) -> String {
+        match self {
+            SurfaceSpec::SignFlip { lambda } => format!("sign_flip:{lambda}"),
+            SurfaceSpec::RandomDirection { lambda } => format!("random_direction:{lambda}"),
+            SurfaceSpec::LabelFlip => "label_flip".to_string(),
+            SurfaceSpec::DelayedGradient { delay } => format!("delayed_gradient:{delay}"),
+            SurfaceSpec::Ipm { eps } => format!("ipm:{eps}"),
+            SurfaceSpec::Alie => "alie".to_string(),
+            SurfaceSpec::Equivocate => "equivocate".to_string(),
+            SurfaceSpec::BadScalar { bias } => format!("bad_scalar:{bias}"),
+            SurfaceSpec::FalseAccuse { prob } => format!("false_accuse:{prob}"),
+            SurfaceSpec::Aggregation { shift: None } => "aggregation".to_string(),
+            SurfaceSpec::Aggregation { shift: Some(s) } => format!("aggregation:{s}"),
+            SurfaceSpec::Withhold { from } => format!("withhold:{from}"),
+            SurfaceSpec::MprngAbort => "mprng_abort".to_string(),
+            SurfaceSpec::MprngBias => "mprng_bias".to_string(),
+        }
+    }
+
+    /// True for the gradient-fabrication surfaces (the §4.1 zoo) — the
+    /// only surfaces the trusted-PS baselines can express.
+    pub fn is_gradient_attack(&self) -> bool {
+        matches!(
+            self,
+            SurfaceSpec::SignFlip { .. }
+                | SurfaceSpec::RandomDirection { .. }
+                | SurfaceSpec::LabelFlip
+                | SurfaceSpec::DelayedGradient { .. }
+                | SurfaceSpec::Ipm { .. }
+                | SurfaceSpec::Alie
+        )
+    }
+}
+
+fn parse_part(tok: &str) -> Result<SurfaceSpec, String> {
+    let (name, arg) = match tok.split_once(':') {
+        Some((n, a)) => (n, Some(a)),
+        None => (tok, None),
+    };
+    // Malformed arguments are hard errors, never silent defaults: the
+    // old `AttackKind::from_name` let "ipm:abc" fall back to eps=0.6.
+    let f32_arg = |default: f32| -> Result<f32, String> {
+        match arg {
+            None => Ok(default),
+            Some(a) => a.parse::<f32>().map_err(|_| {
+                format!("adversary '{name}': malformed argument '{a}' (want a number)")
+            }),
+        }
+    };
+    let usize_arg = |default: usize| -> Result<usize, String> {
+        match arg {
+            None => Ok(default),
+            Some(a) => a.parse::<usize>().map_err(|_| {
+                format!("adversary '{name}': malformed argument '{a}' (want an integer)")
+            }),
+        }
+    };
+    let no_arg = || -> Result<(), String> {
+        match arg {
+            None => Ok(()),
+            Some(a) => Err(format!("adversary '{name}' takes no argument (got '{a}')")),
+        }
+    };
+    Ok(match name {
+        "sign_flip" => SurfaceSpec::SignFlip { lambda: f32_arg(1000.0)? },
+        "random_direction" => SurfaceSpec::RandomDirection { lambda: f32_arg(1000.0)? },
+        "label_flip" => {
+            no_arg()?;
+            SurfaceSpec::LabelFlip
+        }
+        "delayed_gradient" => SurfaceSpec::DelayedGradient { delay: usize_arg(1000)? },
+        "ipm" => SurfaceSpec::Ipm { eps: f32_arg(0.6)? },
+        "alie" => {
+            no_arg()?;
+            SurfaceSpec::Alie
+        }
+        "equivocate" => {
+            no_arg()?;
+            SurfaceSpec::Equivocate
+        }
+        "bad_scalar" => SurfaceSpec::BadScalar { bias: f32_arg(1.0)? },
+        "false_accuse" => {
+            let prob = match arg {
+                None => 1.0,
+                Some(a) => a.parse::<f64>().map_err(|_| {
+                    format!("adversary 'false_accuse': malformed argument '{a}' (want a number)")
+                })?,
+            };
+            if !(0.0..=1.0).contains(&prob) {
+                return Err(format!("false_accuse probability {prob} outside [0, 1]"));
+            }
+            SurfaceSpec::FalseAccuse { prob }
+        }
+        "aggregation" => SurfaceSpec::Aggregation {
+            shift: match arg {
+                None => None,
+                Some(a) => Some(a.parse::<f32>().map_err(|_| {
+                    format!("adversary 'aggregation': malformed argument '{a}' (want a number)")
+                })?),
+            },
+        },
+        "withhold" => {
+            let from = arg.ok_or("adversary 'withhold' needs a victim peer id (withhold:<peer>)")?;
+            SurfaceSpec::Withhold {
+                from: from.parse::<PeerId>().map_err(|_| {
+                    format!("adversary 'withhold': malformed peer id '{from}' (want an integer)")
+                })?,
+            }
+        }
+        "mprng_abort" => {
+            no_arg()?;
+            SurfaceSpec::MprngAbort
+        }
+        "mprng_bias" => {
+            no_arg()?;
+            SurfaceSpec::MprngBias
+        }
+        _ => {
+            return Err(format!(
+                "unknown adversary '{name}' (known: {})",
+                ADVERSARY_NAMES.join(", ")
+            ))
+        }
+    })
+}
+
+/// A parsed, cloneable adversary specification: one or more surfaces
+/// joined by `+`. This is what run configs carry; each Byzantine peer
+/// builds its own stateful `Box<dyn Adversary>` from it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdversarySpec {
+    pub parts: Vec<SurfaceSpec>,
+}
+
+impl AdversarySpec {
+    /// Parse a composable spec: `"alie"`, `"sign_flip:1000"`,
+    /// `"sign_flip:1000+false_accuse:0.1"`. Unknown names and malformed
+    /// arguments are hard errors.
+    pub fn parse(s: &str) -> Result<AdversarySpec, String> {
+        if s.trim().is_empty() {
+            return Err("empty adversary spec".to_string());
+        }
+        // The dormant adversary's canonical name (Byzantine membership,
+        // no deviation on any surface — lazy validation only).
+        // Recognized standalone only: `dormant+x` would just mean `x`,
+        // so a composition is rejected rather than silently collapsed.
+        if s.trim() == "dormant" {
+            return Ok(AdversarySpec::dormant());
+        }
+        let mut parts = Vec::new();
+        for tok in s.split('+') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                return Err(format!("empty component in adversary spec '{s}'"));
+            }
+            parts.push(parse_part(tok)?);
+        }
+        Ok(AdversarySpec { parts })
+    }
+
+    /// A spec that never deviates (Byzantine membership without an
+    /// active attack — e.g. `RunConfig.byzantine` with `attack: None`).
+    pub fn dormant() -> AdversarySpec {
+        AdversarySpec { parts: Vec::new() }
+    }
+
+    /// Canonical spec string; `parse(canonical())` round-trips
+    /// (including the empty spec, whose canonical name is `dormant`).
+    pub fn canonical(&self) -> String {
+        if self.parts.is_empty() {
+            return "dormant".to_string();
+        }
+        self.parts.iter().map(|p| p.canonical()).collect::<Vec<_>>().join("+")
+    }
+
+    /// Whether the trusted-PS baselines can express this spec in full:
+    /// every component must be a gradient-surface attack (the only
+    /// surface the PS loop models). A *partially* expressible composite
+    /// like `alie+aggregation` is rejected too — running just its
+    /// gradient half under the composite's label would mislabel the
+    /// experiment. Vacuously true for the dormant spec.
+    pub fn ps_expressible(&self) -> bool {
+        self.parts.iter().all(|p| p.is_gradient_attack())
+    }
+
+    /// Fold the legacy `aggregation_attack` flag into the spec: appends
+    /// an `aggregation` component unless one is already present
+    /// (composing two would double the shift and trip the
+    /// Verification-3 alarm the attack is tuned to dodge). The one
+    /// folding path every entry point — CLI, examples, JSON configs —
+    /// shares.
+    pub fn with_aggregation(mut self) -> AdversarySpec {
+        if !self.parts.iter().any(|p| matches!(p, SurfaceSpec::Aggregation { .. })) {
+            self.parts.push(SurfaceSpec::Aggregation { shift: None });
+        }
+        self
+    }
+
+    /// Instantiate per-peer adversary state. `delta_max` resolves the
+    /// aggregation surface's default shift (Δ_max/2 — just under the
+    /// Verification-3 alarm, the original `aggregation_attack` tuning).
+    pub fn build(
+        &self,
+        schedule: AttackSchedule,
+        board: &Arc<CollusionBoard>,
+        delta_max: f32,
+    ) -> Box<dyn Adversary> {
+        let mut built: Vec<Box<dyn Adversary>> = self
+            .parts
+            .iter()
+            .map(|p| -> Box<dyn Adversary> {
+                match p {
+                    SurfaceSpec::SignFlip { lambda } => {
+                        Box::new(SignFlip { lambda: *lambda, schedule })
+                    }
+                    SurfaceSpec::RandomDirection { lambda } => {
+                        Box::new(RandomDirection { lambda: *lambda, schedule })
+                    }
+                    SurfaceSpec::LabelFlip => Box::new(LabelFlip { schedule }),
+                    SurfaceSpec::DelayedGradient { delay } => {
+                        Box::new(DelayedGradient::new(*delay, schedule))
+                    }
+                    SurfaceSpec::Ipm { eps } => {
+                        Box::new(Ipm { eps: *eps, schedule, board: board.clone() })
+                    }
+                    SurfaceSpec::Alie => Box::new(Alie { schedule, board: board.clone() }),
+                    SurfaceSpec::Equivocate => Box::new(Equivocator { schedule }),
+                    SurfaceSpec::BadScalar { bias } => {
+                        Box::new(BadScalar { bias: *bias, schedule })
+                    }
+                    SurfaceSpec::FalseAccuse { prob } => {
+                        Box::new(FalseAccuser { prob: *prob, schedule })
+                    }
+                    SurfaceSpec::Aggregation { shift } => Box::new(AggregationCorruptor {
+                        spec_shift: *shift,
+                        shift: shift.unwrap_or(delta_max * 0.5),
+                        schedule,
+                    }),
+                    SurfaceSpec::Withhold { from } => {
+                        Box::new(Withholder { from: *from, schedule })
+                    }
+                    SurfaceSpec::MprngAbort => Box::new(MprngAborter { schedule }),
+                    SurfaceSpec::MprngBias => Box::new(MprngBiaser { schedule }),
+                }
+            })
+            .collect();
+        if built.len() == 1 {
+            built.pop().unwrap()
+        } else {
+            Box::new(Composed { parts: built })
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Composition
+// ---------------------------------------------------------------------------
+
+/// Several adversaries acting as one peer: each surface defers to the
+/// first component that deviates on it (mutating hooks run every
+/// component in spec order).
+pub struct Composed {
+    parts: Vec<Box<dyn Adversary>>,
+}
+
+impl Adversary for Composed {
+    fn spec(&self) -> String {
+        if self.parts.is_empty() {
+            return "dormant".to_string();
+        }
+        self.parts.iter().map(|p| p.spec()).collect::<Vec<_>>().join("+")
+    }
+    fn observe_params(&mut self, step: u64, params: &[f32]) {
+        for p in &mut self.parts {
+            p.observe_params(step, params);
+        }
+    }
+    fn gradient(&mut self, cx: &GradientCtx) -> Option<Vec<f32>> {
+        self.parts.iter_mut().find_map(|p| p.gradient(cx))
+    }
+    fn corrupt_commit(&mut self, step: u64) -> bool {
+        self.parts.iter_mut().any(|p| p.corrupt_commit(step))
+    }
+    fn withhold_part_from(&mut self, step: u64) -> Option<PeerId> {
+        self.parts.iter_mut().find_map(|p| p.withhold_part_from(step))
+    }
+    fn corrupt_aggregate(&mut self, step: u64, part: usize, value: &mut [f32]) -> bool {
+        let mut changed = false;
+        for p in &mut self.parts {
+            changed |= p.corrupt_aggregate(step, part, value);
+        }
+        changed
+    }
+    fn corrupt_scalars(&mut self, step: u64, s: &mut [f32], norms: &mut [f32], over: &mut [u8]) {
+        for p in &mut self.parts {
+            p.corrupt_scalars(step, s, norms, over);
+        }
+    }
+    fn validation_verdict(&mut self, step: u64, target: PeerId) -> Option<Accusation> {
+        self.parts.iter_mut().find_map(|p| p.validation_verdict(step, target))
+    }
+    fn accuse_policy(&mut self, step: u64, me: PeerId, contributors: &[PeerId]) -> Vec<Accusation> {
+        let mut out = Vec::new();
+        for p in &mut self.parts {
+            out.extend(p.accuse_policy(step, me, contributors));
+        }
+        out
+    }
+    fn mprng_behavior(&mut self, step: u64, attempt: usize) -> MprngBehavior {
+        self.parts
+            .iter_mut()
+            .map(|p| p.mprng_behavior(step, attempt))
+            .find(|b| *b != MprngBehavior::Honest)
+            .unwrap_or(MprngBehavior::Honest)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Protocol-surface adversaries
+// ---------------------------------------------------------------------------
+
+/// Broadcasts contradicting gradient commitments to the two halves of
+/// the cluster. Caught by the equivocation tracker once the variants
+/// meet in one honest mailbox (footnote 4: the broadcast layer relays
+/// every variant to everyone).
+pub struct Equivocator {
+    pub schedule: AttackSchedule,
+}
+
+impl Adversary for Equivocator {
+    fn spec(&self) -> String {
+        "equivocate".to_string()
+    }
+    fn corrupt_commit(&mut self, step: u64) -> bool {
+        self.schedule.active(step)
+    }
+}
+
+/// Shifts every reported s_i^j by `bias`: the CenteredClip verification
+/// lie. Caught by the owner-side Verification 2 recheck (both sides run
+/// identical f32 code, so any shift is a bit-exact mismatch) and
+/// adjudicated by recomputation from the public batch seed.
+pub struct BadScalar {
+    pub bias: f32,
+    pub schedule: AttackSchedule,
+}
+
+impl Adversary for BadScalar {
+    fn spec(&self) -> String {
+        format!("bad_scalar:{}", self.bias)
+    }
+    fn corrupt_scalars(&mut self, step: u64, s: &mut [f32], _norms: &mut [f32], _over: &mut [u8]) {
+        if self.schedule.active(step) {
+            for v in s.iter_mut() {
+                *v += self.bias;
+            }
+        }
+    }
+}
+
+/// Accuses honest peers without cause, with per-step probability `prob`
+/// — both as a drawn validator (Phase V) and through Phase-F ACCUSE
+/// broadcasts. Adjudication recomputes from public seeds, finds the
+/// target clean, and bans the accuser (the Hammurabi rule).
+pub struct FalseAccuser {
+    pub prob: f64,
+    pub schedule: AttackSchedule,
+}
+
+impl FalseAccuser {
+    /// Deterministic pseudo-random decision: identical across execution
+    /// models and replays (no RNG-call-order dependence).
+    fn draw(&self, step: u64, who: u64, salt: u64) -> u64 {
+        let d = sha256_parts(&[
+            b"false-accuse",
+            &step.to_le_bytes(),
+            &who.to_le_bytes(),
+            &salt.to_le_bytes(),
+        ]);
+        u64::from_le_bytes(d[..8].try_into().unwrap())
+    }
+    fn fires(&self, step: u64, who: u64, salt: u64) -> bool {
+        // prob == 1.0 must always fire; map the draw into [0, 1).
+        (self.draw(step, who, salt) as f64 / (u64::MAX as f64 + 1.0)) < self.prob
+    }
+}
+
+impl Adversary for FalseAccuser {
+    fn spec(&self) -> String {
+        format!("false_accuse:{}", self.prob)
+    }
+    fn validation_verdict(&mut self, step: u64, target: PeerId) -> Option<Accusation> {
+        (self.schedule.active(step) && self.fires(step, target as u64, 0)).then_some(Accusation {
+            target,
+            reason: BanReason::GradientMismatch,
+            part: u32::MAX,
+        })
+    }
+    fn accuse_policy(&mut self, step: u64, me: PeerId, contributors: &[PeerId]) -> Vec<Accusation> {
+        if !self.schedule.active(step) || !self.fires(step, me as u64, 1) {
+            return Vec::new();
+        }
+        let victims: Vec<PeerId> = contributors.iter().copied().filter(|&p| p != me).collect();
+        if victims.is_empty() {
+            return Vec::new();
+        }
+        let target = victims[(self.draw(step, me as u64, 2) as usize) % victims.len()];
+        vec![Accusation { target, reason: BanReason::InnerProductMismatch, part: 0 }]
+    }
+}
+
+/// Corrupts every owned aggregation part by an ℓ2 shift and covers up
+/// the Σs check (the step routes the cover-up for any part this hook
+/// marks corrupted). Caught by validators re-deriving the owner's
+/// scalars, or by CheckAveraging when the shift trips Δ_max.
+pub struct AggregationCorruptor {
+    /// The spec's explicit shift, if any (for canonical round-trips).
+    spec_shift: Option<f32>,
+    pub shift: f32,
+    pub schedule: AttackSchedule,
+}
+
+impl Adversary for AggregationCorruptor {
+    fn spec(&self) -> String {
+        match self.spec_shift {
+            None => "aggregation".to_string(),
+            Some(s) => format!("aggregation:{s}"),
+        }
+    }
+    fn corrupt_aggregate(&mut self, step: u64, _part: usize, value: &mut [f32]) -> bool {
+        if !self.schedule.active(step) {
+            return false;
+        }
+        let shift = self.shift / (value.len() as f32).sqrt();
+        for v in value.iter_mut() {
+            *v += shift;
+        }
+        true
+    }
+}
+
+/// Refuses to send our gradient part to one peer: only that owner sees
+/// the gap, so the protocol's answer is the mutual ELIMINATE trade (one
+/// honest casualty per Byzantine, which strictly lowers the Byzantine
+/// fraction — §3.2).
+pub struct Withholder {
+    pub from: PeerId,
+    pub schedule: AttackSchedule,
+}
+
+impl Adversary for Withholder {
+    fn spec(&self) -> String {
+        format!("withhold:{}", self.from)
+    }
+    fn withhold_part_from(&mut self, step: u64) -> Option<PeerId> {
+        self.schedule.active(step).then_some(self.from)
+    }
+}
+
+/// Withholds the MPRNG reveal after seeing every commitment (the
+/// Cleve-style abort-bias attempt). The combine step identifies the
+/// aborter, bans it, and restarts the round without it.
+pub struct MprngAborter {
+    pub schedule: AttackSchedule,
+}
+
+impl Adversary for MprngAborter {
+    fn spec(&self) -> String {
+        "mprng_abort".to_string()
+    }
+    fn mprng_behavior(&mut self, step: u64, _attempt: usize) -> MprngBehavior {
+        if self.schedule.active(step) {
+            MprngBehavior::Abort
+        } else {
+            MprngBehavior::Honest
+        }
+    }
+}
+
+/// Reveals MPRNG bytes that mismatch the commitment (output-steering
+/// attempt); commit-before-reveal makes this self-incriminating.
+pub struct MprngBiaser {
+    pub schedule: AttackSchedule,
+}
+
+impl Adversary for MprngBiaser {
+    fn spec(&self) -> String {
+        "mprng_bias".to_string()
+    }
+    fn mprng_behavior(&mut self, step: u64, _attempt: usize) -> MprngBehavior {
+        if self.schedule.active(step) {
+            MprngBehavior::Bias
+        } else {
+            MprngBehavior::Honest
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every registry name must parse bare, compose with another
+    /// surface, and re-serialize to a stable canonical form.
+    #[test]
+    fn registry_round_trip() {
+        for name in ADVERSARY_NAMES {
+            // `withhold` requires an argument; give it one.
+            let spec_str =
+                if name == "withhold" { "withhold:1".to_string() } else { name.to_string() };
+            let spec = AdversarySpec::parse(&spec_str)
+                .unwrap_or_else(|e| panic!("'{spec_str}' must parse: {e}"));
+            let canon = spec.canonical();
+            let reparsed = AdversarySpec::parse(&canon)
+                .unwrap_or_else(|e| panic!("canonical '{canon}' must re-parse: {e}"));
+            assert_eq!(reparsed, spec, "canonical round-trip for '{spec_str}'");
+            assert_eq!(reparsed.canonical(), canon, "canonical must be a fixed point");
+
+            // Composes with a second surface.
+            let composed_str = format!("{spec_str}+mprng_bias");
+            let composed = AdversarySpec::parse(&composed_str)
+                .unwrap_or_else(|e| panic!("'{composed_str}' must parse: {e}"));
+            assert_eq!(composed.parts.len(), 2);
+            let canon2 = composed.canonical();
+            assert_eq!(AdversarySpec::parse(&canon2).unwrap(), composed);
+
+            // The built adversary reports the same canonical spec.
+            let board = CollusionBoard::new();
+            let built = spec.build(AttackSchedule::from_step(0), &board, 4.0);
+            assert_eq!(built.spec(), canon, "built.spec() for '{spec_str}'");
+        }
+    }
+
+    #[test]
+    fn preexisting_attack_names_parse_with_args() {
+        for (s, want) in [
+            ("sign_flip:1000", SurfaceSpec::SignFlip { lambda: 1000.0 }),
+            ("random_direction:50", SurfaceSpec::RandomDirection { lambda: 50.0 }),
+            ("label_flip", SurfaceSpec::LabelFlip),
+            ("delayed_gradient:40", SurfaceSpec::DelayedGradient { delay: 40 }),
+            ("ipm:0.1", SurfaceSpec::Ipm { eps: 0.1 }),
+            ("alie", SurfaceSpec::Alie),
+        ] {
+            let spec = AdversarySpec::parse(s).unwrap();
+            assert_eq!(spec.parts, vec![want], "{s}");
+            assert!(spec.ps_expressible());
+        }
+    }
+
+    #[test]
+    fn malformed_args_are_hard_errors() {
+        // The old parser silently fell back to defaults on these.
+        for s in [
+            "ipm:abc",
+            "sign_flip:",
+            "delayed_gradient:1.5",
+            "false_accuse:2.0",
+            "false_accuse:x",
+            "withhold",
+            "withhold:peer3",
+            "label_flip:3",
+            "alie:1",
+            "equivocate:0.5",
+            "aggregation:big",
+            "bogus",
+            "",
+            "alie+",
+            "+alie",
+        ] {
+            assert!(AdversarySpec::parse(s).is_err(), "'{s}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn composition_applies_every_surface() {
+        let spec = AdversarySpec::parse("bad_scalar:0.5+equivocate+mprng_abort").unwrap();
+        assert!(!spec.ps_expressible());
+        // Partially-expressible composites are rejected for PS too.
+        assert!(!AdversarySpec::parse("alie+aggregation").unwrap().ps_expressible());
+        let board = CollusionBoard::new();
+        let mut adv = spec.build(AttackSchedule::from_step(0), &board, 4.0);
+        assert!(adv.corrupt_commit(0));
+        assert_eq!(adv.mprng_behavior(0, 0), MprngBehavior::Abort);
+        let mut s = vec![0.0f32; 2];
+        let mut norms = vec![0.0f32; 2];
+        let mut over = vec![0u8; 2];
+        adv.corrupt_scalars(0, &mut s, &mut norms, &mut over);
+        assert_eq!(s, vec![0.5, 0.5]);
+        // Gradient surface untouched: computes honestly.
+        assert_eq!(adv.spec(), "bad_scalar:0.5+equivocate+mprng_abort");
+    }
+
+    #[test]
+    fn schedule_gates_every_surface() {
+        let spec = AdversarySpec::parse("equivocate+bad_scalar+mprng_bias+withhold:2").unwrap();
+        let board = CollusionBoard::new();
+        let mut adv = spec.build(AttackSchedule::from_step(10), &board, 4.0);
+        assert!(!adv.corrupt_commit(9));
+        assert_eq!(adv.mprng_behavior(9, 0), MprngBehavior::Honest);
+        assert_eq!(adv.withhold_part_from(9), None);
+        let mut s = vec![0.0f32];
+        adv.corrupt_scalars(9, &mut s, &mut [0.0], &mut [0]);
+        assert_eq!(s, vec![0.0]);
+        assert!(adv.corrupt_commit(10));
+        assert_eq!(adv.mprng_behavior(10, 0), MprngBehavior::Bias);
+        assert_eq!(adv.withhold_part_from(10), Some(2));
+    }
+
+    #[test]
+    fn false_accuser_is_deterministic_and_respects_prob() {
+        let mut always = FalseAccuser { prob: 1.0, schedule: AttackSchedule::from_step(0) };
+        let mut never = FalseAccuser { prob: 0.0, schedule: AttackSchedule::from_step(0) };
+        let contributors: Vec<PeerId> = (0..8).collect();
+        let a1 = always.accuse_policy(3, 7, &contributors);
+        let a2 = always.accuse_policy(3, 7, &contributors);
+        assert_eq!(a1, a2, "deterministic across replays");
+        assert_eq!(a1.len(), 1);
+        assert_ne!(a1[0].target, 7, "never accuses itself");
+        assert!(never.accuse_policy(3, 7, &contributors).is_empty());
+        assert!(always.validation_verdict(3, 2).is_some());
+        assert!(never.validation_verdict(3, 2).is_none());
+    }
+
+    #[test]
+    fn dormant_spec_never_deviates() {
+        let spec = AdversarySpec::dormant();
+        assert_eq!(spec.canonical(), "dormant");
+        assert_eq!(AdversarySpec::parse("dormant").unwrap(), spec);
+        let board = CollusionBoard::new();
+        let mut adv = spec.build(AttackSchedule::from_step(0), &board, 4.0);
+        assert_eq!(adv.spec(), "dormant", "built.spec() must round-trip for dormant too");
+        assert!(!adv.corrupt_commit(0));
+        assert_eq!(adv.withhold_part_from(0), None);
+        assert_eq!(adv.mprng_behavior(0, 0), MprngBehavior::Honest);
+        assert!(adv.accuse_policy(0, 1, &[0, 2]).is_empty());
+        assert!(adv.validation_verdict(0, 0).is_none());
+    }
+
+    #[test]
+    fn aggregation_default_shift_resolves_from_delta_max() {
+        let spec = AdversarySpec::parse("aggregation").unwrap();
+        let board = CollusionBoard::new();
+        let mut adv = spec.build(AttackSchedule::from_step(0), &board, 4.0);
+        let mut v = vec![0.0f32; 4];
+        assert!(adv.corrupt_aggregate(0, 0, &mut v));
+        // shift = (Δ_max/2)/√len = 2/2 = 1 per coordinate.
+        assert_eq!(v, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(adv.spec(), "aggregation");
+        let explicit = AdversarySpec::parse("aggregation:8").unwrap();
+        let mut adv = explicit.build(AttackSchedule::from_step(0), &board, 4.0);
+        let mut v = vec![0.0f32; 4];
+        adv.corrupt_aggregate(0, 0, &mut v);
+        assert_eq!(v, vec![4.0, 4.0, 4.0, 4.0]);
+    }
+}

@@ -1,65 +1,21 @@
-//! Byzantine attack implementations (§4.1 of the paper).
+//! The §4.1 gradient-fabrication attack zoo, as [`Adversary`] impls.
 //!
 //! Attackers are omniscient (they can recompute every honest gradient —
 //! all data and seeds are public) and collude. The `CollusionBoard`
 //! shares the per-step honest-gradient statistics among colluders so the
-//! simulation doesn't recompute them once per attacker.
+//! simulation doesn't recompute them once per attacker. Each attack only
+//! implements the `gradient()` hook; the protocol-surface adversaries
+//! (equivocation, scalar lies, false accusations, MPRNG abuse) live in
+//! `adversary.rs`.
 
+use super::adversary::{Adversary, GradientCtx};
 use crate::model::GradientSource;
 use crate::net::PeerId;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum AttackKind {
-    /// Send −λ·g_i (λ amplifies so it dominates an unclipped mean).
-    SignFlip { lambda: f32 },
-    /// All attackers send λ·u for a common random unit direction u.
-    RandomDirection { lambda: f32 },
-    /// Honest computation on poisoned labels (l → 9−l for CIFAR-10).
-    LabelFlip,
-    /// Send the true gradient delayed by `delay` steps.
-    DelayedGradient { delay: usize },
-    /// Inner-product manipulation (Xie et al. 2020): −ε·mean(honest).
-    Ipm { eps: f32 },
-    /// "A little is enough" (Baruch et al. 2019): μ − z_max·σ per
-    /// coordinate, staying inside the population variance.
-    Alie,
-}
-
-impl AttackKind {
-    pub fn name(&self) -> &'static str {
-        match self {
-            AttackKind::SignFlip { .. } => "sign_flip",
-            AttackKind::RandomDirection { .. } => "random_direction",
-            AttackKind::LabelFlip => "label_flip",
-            AttackKind::DelayedGradient { .. } => "delayed_gradient",
-            AttackKind::Ipm { .. } => "ipm",
-            AttackKind::Alie => "alie",
-        }
-    }
-
-    /// Parse names used by benches/CLI, e.g. "ipm:0.6", "sign_flip:1000".
-    pub fn from_name(s: &str) -> Option<AttackKind> {
-        let (name, arg) = match s.split_once(':') {
-            Some((n, a)) => (n, Some(a)),
-            None => (s, None),
-        };
-        let argf = |d: f32| arg.and_then(|a| a.parse().ok()).unwrap_or(d);
-        Some(match name {
-            "sign_flip" => AttackKind::SignFlip { lambda: argf(1000.0) },
-            "random_direction" => AttackKind::RandomDirection { lambda: argf(1000.0) },
-            "label_flip" => AttackKind::LabelFlip,
-            "delayed_gradient" => AttackKind::DelayedGradient { delay: argf(1000.0) as usize },
-            "ipm" => AttackKind::Ipm { eps: argf(0.6) },
-            "alie" => AttackKind::Alie,
-            _ => return None,
-        })
-    }
-}
-
-/// When the attack is live.
+/// When an attack is live.
 #[derive(Clone, Copy, Debug)]
 pub struct AttackSchedule {
     pub start: u64,
@@ -151,105 +107,173 @@ impl CollusionBoard {
     }
 }
 
-/// Mutable attacker state (delayed-gradient history, cached direction).
-pub struct AttackState {
-    pub kind: AttackKind,
+// ---------------------------------------------------------------------------
+// The six gradient attacks
+// ---------------------------------------------------------------------------
+
+/// Send −λ·g_i (λ amplifies so it dominates an unclipped mean).
+pub struct SignFlip {
+    pub lambda: f32,
     pub schedule: AttackSchedule,
-    pub board: Arc<CollusionBoard>,
-    /// Parameter history for DelayedGradient (bounded ring).
+}
+
+impl Adversary for SignFlip {
+    fn spec(&self) -> String {
+        format!("sign_flip:{}", self.lambda)
+    }
+    fn gradient(&mut self, cx: &GradientCtx) -> Option<Vec<f32>> {
+        if !self.schedule.active(cx.step) {
+            return None;
+        }
+        let (_, mut g) = cx.source.loss_and_grad(cx.params, cx.own_seed);
+        for v in g.iter_mut() {
+            *v *= -self.lambda;
+        }
+        Some(g)
+    }
+}
+
+/// All attackers send λ·u for a common random unit direction u, derived
+/// from shared randomness so colluders agree without extra messages.
+pub struct RandomDirection {
+    pub lambda: f32,
+    pub schedule: AttackSchedule,
+}
+
+impl Adversary for RandomDirection {
+    fn spec(&self) -> String {
+        format!("random_direction:{}", self.lambda)
+    }
+    fn gradient(&mut self, cx: &GradientCtx) -> Option<Vec<f32>> {
+        if !self.schedule.active(cx.step) {
+            return None;
+        }
+        let mut seed = [0u8; 32];
+        seed.copy_from_slice(cx.shared_r);
+        seed[0] ^= 0xA7;
+        let mut rng = Rng::from_digest(&seed);
+        let mut u = rng.unit_vector(cx.source.dim());
+        for v in u.iter_mut() {
+            *v *= self.lambda;
+        }
+        Some(u)
+    }
+}
+
+/// Honest computation on poisoned labels (l → 9−l for CIFAR-10).
+pub struct LabelFlip {
+    pub schedule: AttackSchedule,
+}
+
+impl Adversary for LabelFlip {
+    fn spec(&self) -> String {
+        "label_flip".to_string()
+    }
+    fn gradient(&mut self, cx: &GradientCtx) -> Option<Vec<f32>> {
+        if !self.schedule.active(cx.step) {
+            return None;
+        }
+        Some(
+            cx.source
+                .loss_and_grad_label_flipped(cx.params, cx.own_seed)
+                .unwrap_or_else(|| cx.source.loss_and_grad(cx.params, cx.own_seed))
+                .1,
+        )
+    }
+}
+
+/// Send the true gradient computed on `delay`-steps-old parameters.
+pub struct DelayedGradient {
+    pub delay: usize,
+    pub schedule: AttackSchedule,
+    /// Parameter history (bounded ring).
     history: Vec<(u64, Vec<f32>)>,
 }
 
-impl AttackState {
-    pub fn new(kind: AttackKind, schedule: AttackSchedule, board: Arc<CollusionBoard>) -> Self {
-        AttackState { kind, schedule, board, history: Vec::new() }
+impl DelayedGradient {
+    pub fn new(delay: usize, schedule: AttackSchedule) -> DelayedGradient {
+        DelayedGradient { delay, schedule, history: Vec::new() }
     }
+}
 
-    /// Record params (needed before gradients are requested).
-    pub fn observe_params(&mut self, step: u64, params: &[f32]) {
-        if let AttackKind::DelayedGradient { delay } = self.kind {
-            self.history.push((step, params.to_vec()));
-            let keep = delay + 1;
-            if self.history.len() > keep {
-                let drop = self.history.len() - keep;
-                self.history.drain(..drop);
-            }
+impl Adversary for DelayedGradient {
+    fn spec(&self) -> String {
+        format!("delayed_gradient:{}", self.delay)
+    }
+    fn observe_params(&mut self, step: u64, params: &[f32]) {
+        self.history.push((step, params.to_vec()));
+        let keep = self.delay + 1;
+        if self.history.len() > keep {
+            let drop = self.history.len() - keep;
+            self.history.drain(..drop);
         }
     }
+    fn gradient(&mut self, cx: &GradientCtx) -> Option<Vec<f32>> {
+        if !self.schedule.active(cx.step) {
+            return None;
+        }
+        let target_step = cx.step.saturating_sub(self.delay as u64);
+        let old = self
+            .history
+            .iter()
+            .find(|(s, _)| *s == target_step)
+            .map(|(_, p)| p.clone())
+            .unwrap_or_else(|| cx.params.to_vec());
+        Some(cx.source.loss_and_grad(&old, cx.own_seed).1)
+    }
+}
 
-    /// The gradient this attacker submits at `step` (honest gradient when
-    /// the schedule is inactive).
-    #[allow(clippy::too_many_arguments)]
-    pub fn gradient(
-        &mut self,
-        step: u64,
-        params: &[f32],
-        source: &dyn GradientSource,
-        own_seed: u64,
-        honest: &[(PeerId, u64)],
-        shared_r: &[u8; 32], // MPRNG output of the previous step: common randomness
-    ) -> Vec<f32> {
-        if !self.schedule.active(step) {
-            return source.loss_and_grad(params, own_seed).1;
+/// Inner-product manipulation (Xie et al. 2020): −ε·mean(honest).
+pub struct Ipm {
+    pub eps: f32,
+    pub schedule: AttackSchedule,
+    pub board: Arc<CollusionBoard>,
+}
+
+impl Adversary for Ipm {
+    fn spec(&self) -> String {
+        format!("ipm:{}", self.eps)
+    }
+    fn gradient(&mut self, cx: &GradientCtx) -> Option<Vec<f32>> {
+        if !self.schedule.active(cx.step) {
+            return None;
         }
-        match self.kind {
-            AttackKind::SignFlip { lambda } => {
-                let (_, mut g) = source.loss_and_grad(params, own_seed);
-                for v in g.iter_mut() {
-                    *v *= -lambda;
-                }
-                g
-            }
-            AttackKind::RandomDirection { lambda } => {
-                // Common direction: all colluders derive it from shared
-                // randomness, so they agree without extra messages.
-                let mut seed = [0u8; 32];
-                seed.copy_from_slice(shared_r);
-                seed[0] ^= 0xA7;
-                let mut rng = Rng::from_digest(&seed);
-                let mut u = rng.unit_vector(source.dim());
-                for v in u.iter_mut() {
-                    *v *= lambda;
-                }
-                u
-            }
-            AttackKind::LabelFlip => {
-                source
-                    .loss_and_grad_label_flipped(params, own_seed)
-                    .unwrap_or_else(|| source.loss_and_grad(params, own_seed))
-                    .1
-            }
-            AttackKind::DelayedGradient { delay } => {
-                let target_step = step.saturating_sub(delay as u64);
-                let old = self
-                    .history
-                    .iter()
-                    .find(|(s, _)| *s == target_step)
-                    .map(|(_, p)| p.clone())
-                    .unwrap_or_else(|| params.to_vec());
-                source.loss_and_grad(&old, own_seed).1
-            }
-            AttackKind::Ipm { eps } => {
-                let stats = self.board.stats(step, params, source, honest);
-                stats.mean.iter().map(|&m| -eps * m).collect()
-            }
-            AttackKind::Alie => {
-                let stats = self.board.stats(step, params, source, honest);
-                let n = (stats.n_honest + honest_byz_count(honest)) as f64;
-                let b = honest_byz_count(honest) as f64;
-                // z_max per Baruch et al.: s = ⌊n/2⌋+1−b supporters needed;
-                // z = Φ⁻¹((n−b−s)/(n−b)).
-                let s = ((n / 2.0).floor() + 1.0 - b).max(0.0);
-                let q = ((n - b - s) / (n - b)).clamp(0.01, 0.99);
-                let z = normal_quantile(q).max(0.0) as f32;
-                stats
-                    .mean
-                    .iter()
-                    .zip(&stats.std)
-                    .map(|(&m, &sd)| m - z * sd)
-                    .collect()
-            }
+        let stats = self.board.stats(cx.step, cx.params, cx.source, cx.honest);
+        Some(stats.mean.iter().map(|&m| -self.eps * m).collect())
+    }
+}
+
+/// "A little is enough" (Baruch et al. 2019): μ − z_max·σ per
+/// coordinate, staying inside the population variance.
+pub struct Alie {
+    pub schedule: AttackSchedule,
+    pub board: Arc<CollusionBoard>,
+}
+
+impl Adversary for Alie {
+    fn spec(&self) -> String {
+        "alie".to_string()
+    }
+    fn gradient(&mut self, cx: &GradientCtx) -> Option<Vec<f32>> {
+        if !self.schedule.active(cx.step) {
+            return None;
         }
+        let stats = self.board.stats(cx.step, cx.params, cx.source, cx.honest);
+        let n = (stats.n_honest + honest_byz_count(cx.honest)) as f64;
+        let b = honest_byz_count(cx.honest) as f64;
+        // z_max per Baruch et al.: s = ⌊n/2⌋+1−b supporters needed;
+        // z = Φ⁻¹((n−b−s)/(n−b)).
+        let s = ((n / 2.0).floor() + 1.0 - b).max(0.0);
+        let q = ((n - b - s) / (n - b)).clamp(0.01, 0.99);
+        let z = normal_quantile(q).max(0.0) as f32;
+        Some(
+            stats
+                .mean
+                .iter()
+                .zip(&stats.std)
+                .map(|(&m, &sd)| m - z * sd)
+                .collect(),
+        )
     }
 }
 
@@ -312,33 +336,60 @@ pub fn normal_quantile(p: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::adversary::AdversarySpec;
     use crate::model::synthetic::Quadratic;
 
     fn mk_source() -> Quadratic {
         Quadratic::new(16, 0.1, 2.0, 0.1, 1)
     }
 
-    fn run_attack(kind: AttackKind, step: u64) -> (Vec<f32>, Vec<f32>) {
+    /// Build the adversary named by `spec` (attack live from step 10)
+    /// and ask it for a gradient at `step`; also return the honest truth.
+    fn run_attack(spec: &str, step: u64) -> (Vec<f32>, Vec<f32>) {
         let src = mk_source();
         let params = src.init_params(0);
         let board = CollusionBoard::new();
-        let mut st = AttackState::new(kind, AttackSchedule::from_step(10), board);
-        st.observe_params(step, &params);
+        let mut adv = AdversarySpec::parse(spec)
+            .unwrap()
+            .build(AttackSchedule::from_step(10), &board, 4.0);
+        adv.observe_params(step, &params);
         let honest: Vec<(PeerId, u64)> = (0..9).map(|p| (p, 100 + p as u64)).collect();
-        let g = st.gradient(step, &params, &src, 999, &honest, &[7u8; 32]);
+        let cx = GradientCtx {
+            step,
+            params: &params,
+            source: &src,
+            own_seed: 999,
+            honest: &honest,
+            shared_r: &[7u8; 32],
+        };
         let (_, truth) = src.loss_and_grad(&params, 999);
+        let g = adv.gradient(&cx).unwrap_or_else(|| truth.clone());
         (g, truth)
     }
 
     #[test]
     fn inactive_before_start() {
-        let (g, truth) = run_attack(AttackKind::SignFlip { lambda: 1000.0 }, 5);
-        assert_eq!(g, truth);
+        let src = mk_source();
+        let params = src.init_params(0);
+        let board = CollusionBoard::new();
+        let mut adv = AdversarySpec::parse("sign_flip:1000")
+            .unwrap()
+            .build(AttackSchedule::from_step(10), &board, 4.0);
+        let honest: Vec<(PeerId, u64)> = vec![(0, 1)];
+        let cx = GradientCtx {
+            step: 5,
+            params: &params,
+            source: &src,
+            own_seed: 999,
+            honest: &honest,
+            shared_r: &[7u8; 32],
+        };
+        assert!(adv.gradient(&cx).is_none(), "inactive schedule must compute honestly");
     }
 
     #[test]
     fn sign_flip_flips_and_amplifies() {
-        let (g, truth) = run_attack(AttackKind::SignFlip { lambda: 1000.0 }, 20);
+        let (g, truth) = run_attack("sign_flip:1000", 20);
         for (a, t) in g.iter().zip(&truth) {
             assert!((a + 1000.0 * t).abs() < 1e-3);
         }
@@ -350,19 +401,21 @@ mod tests {
         let params = src.init_params(0);
         let honest: Vec<(PeerId, u64)> = vec![(0, 1)];
         let board = CollusionBoard::new();
-        let mut a = AttackState::new(
-            AttackKind::RandomDirection { lambda: 100.0 },
-            AttackSchedule::from_step(0),
-            board.clone(),
-        );
-        let mut b = AttackState::new(
-            AttackKind::RandomDirection { lambda: 100.0 },
-            AttackSchedule::from_step(0),
-            board,
-        );
+        let spec = AdversarySpec::parse("random_direction:100").unwrap();
+        let mut a = spec.build(AttackSchedule::from_step(0), &board, 4.0);
+        let mut b = spec.build(AttackSchedule::from_step(0), &board, 4.0);
         let r = [3u8; 32];
-        let ga = a.gradient(0, &params, &src, 5, &honest, &r);
-        let gb = b.gradient(0, &params, &src, 6, &honest, &r);
+        let cx_a = GradientCtx {
+            step: 0,
+            params: &params,
+            source: &src,
+            own_seed: 5,
+            honest: &honest,
+            shared_r: &r,
+        };
+        let cx_b = GradientCtx { own_seed: 6, ..cx_a };
+        let ga = a.gradient(&cx_a).unwrap();
+        let gb = b.gradient(&cx_b).unwrap();
         assert_eq!(ga, gb); // colluders agree without communicating
         let norm: f32 = ga.iter().map(|x| x * x).sum::<f32>().sqrt();
         assert!((norm - 100.0).abs() < 0.1);
@@ -370,7 +423,7 @@ mod tests {
 
     #[test]
     fn ipm_points_against_honest_mean() {
-        let (g, _) = run_attack(AttackKind::Ipm { eps: 0.6 }, 20);
+        let (g, _) = run_attack("ipm:0.6", 20);
         let src = mk_source();
         let params = src.init_params(0);
         let honest: Vec<(PeerId, u64)> = (0..9).map(|p| (p, 100 + p as u64)).collect();
@@ -383,7 +436,7 @@ mod tests {
 
     #[test]
     fn alie_stays_within_variance_envelope() {
-        let (g, _) = run_attack(AttackKind::Alie, 20);
+        let (g, _) = run_attack("alie", 20);
         let src = mk_source();
         let params = src.init_params(0);
         let honest: Vec<(PeerId, u64)> = (0..9).map(|p| (p, 100 + p as u64)).collect();
@@ -397,20 +450,23 @@ mod tests {
     #[test]
     fn delayed_gradient_uses_old_params() {
         let src = mk_source();
-        let board = CollusionBoard::new();
-        let mut st = AttackState::new(
-            AttackKind::DelayedGradient { delay: 2 },
-            AttackSchedule::from_step(0),
-            board,
-        );
+        let mut adv = DelayedGradient::new(2, AttackSchedule::from_step(0));
         let honest = vec![(0usize, 1u64)];
         let p0 = vec![1.0f32; 16];
         let p1 = vec![2.0f32; 16];
         let p2 = vec![3.0f32; 16];
-        st.observe_params(0, &p0);
-        st.observe_params(1, &p1);
-        st.observe_params(2, &p2);
-        let g = st.gradient(2, &p2, &src, 7, &honest, &[0u8; 32]);
+        adv.observe_params(0, &p0);
+        adv.observe_params(1, &p1);
+        adv.observe_params(2, &p2);
+        let cx = GradientCtx {
+            step: 2,
+            params: &p2,
+            source: &src,
+            own_seed: 7,
+            honest: &honest,
+            shared_r: &[0u8; 32],
+        };
+        let g = adv.gradient(&cx).unwrap();
         let (_, want) = src.loss_and_grad(&p0, 7);
         assert_eq!(g, want);
     }
@@ -437,17 +493,5 @@ mod tests {
         assert!((normal_quantile(0.975) - 1.95996).abs() < 1e-3);
         assert!((normal_quantile(0.025) + 1.95996).abs() < 1e-3);
         assert!((normal_quantile(0.8413) - 1.0).abs() < 2e-3);
-    }
-
-    #[test]
-    fn attack_name_roundtrip() {
-        for s in ["sign_flip:1000", "random_direction", "label_flip", "ipm:0.1", "alie"] {
-            assert!(AttackKind::from_name(s).is_some(), "{s}");
-        }
-        assert!(AttackKind::from_name("bogus").is_none());
-        assert_eq!(
-            AttackKind::from_name("ipm:0.1"),
-            Some(AttackKind::Ipm { eps: 0.1 })
-        );
     }
 }

@@ -7,7 +7,10 @@
 //! - `aggregators` — trusted-PS baselines (Fig. 3 comparison arms)
 //! - `messages` — protocol payloads + binary codec
 //! - `accuse` — ACCUSE/ELIMINATE ban ledger with canonical ordering
-//! - `attacks` — the §4.1 attack zoo (omniscient, colluding)
+//! - `adversary` — the pluggable `Adversary` API: one default-honest
+//!   hook per protocol surface, plus the composable spec grammar
+//! - `attacks` — the §4.1 gradient attack zoo (omniscient, colluding),
+//!   as `Adversary` impls behind the registry
 //! - `step` — Algorithm 6: one full BTARD step with Verifications 1–3
 //! - `validator`-logic lives inside `step` (CHECKCOMPUTATIONS)
 //! - `optimizer` — SGD+Nesterov+cosine, LAMB, global-norm clipping
@@ -15,6 +18,7 @@
 //! - `sybil` — Appendix F proof-of-computation join heuristic
 
 pub mod accuse;
+pub mod adversary;
 pub mod aggregators;
 pub mod attacks;
 pub mod centered_clip;
@@ -27,8 +31,9 @@ pub mod sybil;
 pub mod training;
 
 pub use accuse::{BanEvent, BanIntent, BanLedger};
+pub use adversary::{Adversary, AdversarySpec, MprngBehavior, SurfaceSpec};
 pub use aggregators::Aggregator;
-pub use attacks::{AttackKind, AttackSchedule};
+pub use attacks::AttackSchedule;
 pub use centered_clip::{centered_clip, TauPolicy};
 pub use step::{btard_step, Behavior, PeerCtx, ProtocolConfig, StepOutput};
 pub use training::{

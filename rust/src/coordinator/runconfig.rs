@@ -6,7 +6,7 @@
 //! ```json
 //! {
 //!   "peers": 16, "byzantine": 7, "steps": 300, "seed": 0,
-//!   "attack": {"kind": "sign_flip:1000", "start": 100,
+//!   "attack": {"kind": "sign_flip:1000+false_accuse:0.1", "start": 100,
 //!               "stop": null, "period": [5, 5]},
 //!   "aggregation_attack": false,
 //!   "protocol": {"tau": 1.0, "validators": 2, "delta_max": 5.0,
@@ -19,12 +19,25 @@
 //! }
 //! ```
 //!
+//! `attack.kind` is a composable adversary spec
+//! (`AdversarySpec::parse`): one or more `name[:arg]` components joined
+//! by `+`, covering every protocol surface — the gradient zoo
+//! (`sign_flip[:λ]`, `random_direction[:λ]`, `label_flip`,
+//! `delayed_gradient[:d]`, `ipm[:ε]`, `alie`) and the protocol-surface
+//! adversaries (`equivocate`, `bad_scalar[:bias]`, `false_accuse[:p]`,
+//! `aggregation[:shift]`, `withhold:<peer>`, `mprng_abort`,
+//! `mprng_bias`). Malformed arguments are hard errors, never silent
+//! defaults. The legacy `aggregation_attack: true` flag folds an
+//! `aggregation` component into the spec (it requires an `attack` block
+//! to supply the schedule).
+//!
 //! `network` selects the transport's network-condition model: a preset
 //! name (`perfect`, `lossy[:drop]`, `partitioned[:frac]`,
 //! `straggler[:frac]`) or an object with per-field overrides — see
 //! `net::sim::NetworkProfile::from_json` for the full schema.
 
-use super::attacks::{AttackKind, AttackSchedule};
+use super::adversary::AdversarySpec;
+use super::attacks::AttackSchedule;
 use super::centered_clip::TauPolicy;
 use super::optimizer::LrSchedule;
 use super::step::ProtocolConfig;
@@ -52,7 +65,7 @@ pub fn parse_run_config(text: &str) -> Result<RunConfig> {
         .get("verify_signatures")
         .and_then(|v| v.as_bool())
         .unwrap_or(true);
-    cfg.aggregation_attack = j
+    let aggregation_attack = j
         .get("aggregation_attack")
         .and_then(|v| v.as_bool())
         .unwrap_or(false);
@@ -65,15 +78,19 @@ pub fn parse_run_config(text: &str) -> Result<RunConfig> {
         }
     }
 
-    // attack
+    // attack: a composable adversary spec; malformed specs and args are
+    // hard errors (never silent defaults — the BTARD_EXEC precedent).
     if let Some(a) = j.get("attack") {
         if *a != Json::Null {
             let kind_str = a
                 .get("kind")
                 .and_then(|v| v.as_str())
                 .ok_or_else(|| anyhow!("attack.kind missing"))?;
-            let kind = AttackKind::from_name(kind_str)
-                .ok_or_else(|| anyhow!("unknown attack '{kind_str}'"))?;
+            let mut spec =
+                AdversarySpec::parse(kind_str).map_err(|e| anyhow!("attack.kind: {e}"))?;
+            if aggregation_attack {
+                spec = spec.with_aggregation();
+            }
             let mut schedule =
                 AttackSchedule::from_step(a.get("start").and_then(|v| v.as_u64()).unwrap_or(100));
             schedule.stop = a.get("stop").and_then(|v| v.as_u64());
@@ -85,8 +102,14 @@ pub fn parse_run_config(text: &str) -> Result<RunConfig> {
                     ));
                 }
             }
-            cfg.attack = Some((kind, schedule));
+            cfg.attack = Some((spec, schedule));
         }
+    }
+    if aggregation_attack && cfg.attack.is_none() {
+        return Err(anyhow!(
+            "aggregation_attack: true needs an \"attack\" block to supply the schedule \
+             (or put 'aggregation[:shift]' in attack.kind directly)"
+        ));
     }
 
     // protocol
@@ -179,8 +202,8 @@ mod tests {
         let cfg = parse_run_config(text).unwrap();
         assert_eq!(cfg.n_peers, 8);
         assert_eq!(cfg.byzantine, vec![5, 6, 7]);
-        let (kind, sched) = cfg.attack.unwrap();
-        assert_eq!(kind, AttackKind::Ipm { eps: 0.6 });
+        let (spec, sched) = cfg.attack.unwrap();
+        assert_eq!(spec.canonical(), "ipm:0.6");
         assert_eq!(sched.start, 40);
         assert_eq!(sched.period, Some((5, 5)));
         assert_eq!(cfg.protocol.tau, TauPolicy::Fixed(0.5));
@@ -212,6 +235,46 @@ mod tests {
         assert!(parse_run_config(r#"{"optimizer": {"kind": "adamw"}}"#).is_err());
         assert!(parse_run_config(r#"{"network": "bogus"}"#).is_err());
         assert!(parse_run_config(r#"{"network": {"drop": 2.0}}"#).is_err());
+    }
+
+    #[test]
+    fn malformed_attack_args_are_hard_errors() {
+        // The old parser silently ran ipm with eps=0.6 on "ipm:abc".
+        assert!(parse_run_config(r#"{"attack": {"kind": "ipm:abc"}}"#).is_err());
+        assert!(parse_run_config(r#"{"attack": {"kind": "sign_flip:"}}"#).is_err());
+        assert!(parse_run_config(r#"{"attack": {"kind": "alie+"}}"#).is_err());
+        // aggregation_attack without an attack block has no schedule.
+        assert!(parse_run_config(r#"{"aggregation_attack": true}"#).is_err());
+    }
+
+    #[test]
+    fn composed_spec_and_aggregation_flag() {
+        let cfg = parse_run_config(
+            r#"{"byzantine": 3, "attack": {"kind": "alie+equivocate", "start": 5}}"#,
+        )
+        .unwrap();
+        let (spec, sched) = cfg.attack.unwrap();
+        assert_eq!(spec.canonical(), "alie+equivocate");
+        assert_eq!(sched.start, 5);
+
+        let cfg = parse_run_config(
+            r#"{"byzantine": 2, "aggregation_attack": true,
+                "attack": {"kind": "sign_flip:10", "start": 3}}"#,
+        )
+        .unwrap();
+        let (spec, _) = cfg.attack.unwrap();
+        assert_eq!(spec.canonical(), "sign_flip:10+aggregation");
+
+        // The legacy flag must not double-compose with a spec that
+        // already lists the aggregation surface (two corruptors would
+        // double the shift and trip Verification 3).
+        let cfg = parse_run_config(
+            r#"{"byzantine": 2, "aggregation_attack": true,
+                "attack": {"kind": "sign_flip:10+aggregation", "start": 3}}"#,
+        )
+        .unwrap();
+        let (spec, _) = cfg.attack.unwrap();
+        assert_eq!(spec.canonical(), "sign_flip:10+aggregation");
     }
 
     #[test]

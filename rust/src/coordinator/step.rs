@@ -24,7 +24,7 @@
 //! broadcast data, so honest peers never diverge.
 
 use super::accuse::{BanIntent, BanLedger};
-use super::attacks::AttackState;
+use super::adversary::{Adversary, GradientCtx, MprngBehavior};
 use super::centered_clip::{centered_clip_init, clipped_diff, TauPolicy};
 use super::messages::{Accusation, BanReason, GradCommit, VerifyScalars, Writer};
 use super::partition::{OwnerMap, PartitionSpec};
@@ -79,30 +79,16 @@ impl Default for ProtocolConfig {
     }
 }
 
-/// Byzantine behaviour knobs. `attack` drives the submitted gradient;
-/// the remaining flags model the other attack classes of Appendix C.
-pub struct ByzantineConfig {
-    pub attack: AttackState,
-    /// Corrupt owned aggregation parts while the attack is active
-    /// (aggregation attack + single-handed s cover-up).
-    pub aggregation_attack: bool,
-    /// Magnitude of the aggregation shift (kept ≤ Δ_max to dodge V3).
-    pub aggregation_shift: f32,
-    /// As a validator, always report OK (the paper's Byzantine
-    /// validators "never accuse").
-    pub lazy_validator: bool,
-    /// Test hook: broadcast contradicting gradient commitments.
-    pub equivocate: bool,
-    /// Test hook: refuse to send our gradient part to this peer.
-    pub withhold_part_from: Option<PeerId>,
-    /// Test hook: commit to a different gradient than announced norms/s
-    /// (caught only by validators).
-    pub wrong_scalars: bool,
-}
-
+/// How this peer behaves: honest peers run the protocol verbatim; a
+/// Byzantine peer routes every protocol surface through its
+/// [`Adversary`]'s hooks (all of which default to the honest action).
+/// Which surfaces deviate — gradient fabrication, commitment
+/// equivocation, part withholding, aggregation corruption, scalar lies,
+/// false accusations, MPRNG abuse — is entirely the adversary's choice;
+/// the step functions only provide the hook points.
 pub enum Behavior {
     Honest,
-    Byzantine(Box<ByzantineConfig>),
+    Byzantine(Box<dyn Adversary>),
 }
 
 impl Behavior {
@@ -342,6 +328,9 @@ pub struct StepState {
     agg_commits: Vec<Option<Digest>>,
     ghat_parts: Vec<Vec<f32>>,
     ghat: Vec<f32>,
+    /// Owned parts whose aggregate the adversary corrupted this step;
+    /// arms the Σs cover-up in `stage_scalars`.
+    corrupted_parts: Vec<usize>,
     mprng_participants: Vec<PeerId>,
     mprng_attempt: usize,
     mprng_round: Option<MprngRound>,
@@ -392,11 +381,17 @@ pub fn stage_begin(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> StepState {
     // ---- Phase V: validate previous step (validators only) ---------------
     let t0 = Instant::now();
     if let Some((_, target)) = my_validation {
-        let lazy = match &ctx.behavior {
-            Behavior::Byzantine(b) => b.lazy_validator,
-            Behavior::Honest => false,
+        // Honest validators recompute the target's work; a Byzantine
+        // validator's verdict is whatever its accuse-policy hook says
+        // (default: silent OK — the paper's lazy validator).
+        let accusation = if ctx.behavior.is_byzantine() {
+            match &mut ctx.behavior {
+                Behavior::Byzantine(adv) => adv.validation_verdict(step, target),
+                Behavior::Honest => unreachable!(),
+            }
+        } else {
+            validate_target(ctx, target)
         };
-        let accusation = if lazy { None } else { validate_target(ctx, target) };
         match accusation {
             Some(acc) => {
                 ctx.net.broadcast(
@@ -428,16 +423,19 @@ pub fn stage_begin(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> StepState {
     let (loss, grad) = if i_contribute {
         match &mut ctx.behavior {
             Behavior::Honest => ctx.source.loss_and_grad(params, my_seed),
-            Behavior::Byzantine(b) => {
-                b.attack.observe_params(step, params);
-                let g = b.attack.gradient(
+            Behavior::Byzantine(adv) => {
+                adv.observe_params(step, params);
+                let cx = GradientCtx {
                     step,
                     params,
-                    ctx.source.as_ref(),
-                    my_seed,
-                    &honest_seeds,
-                    &ctx.r_prev,
-                );
+                    source: ctx.source.as_ref(),
+                    own_seed: my_seed,
+                    honest: &honest_seeds,
+                    shared_r: &ctx.r_prev,
+                };
+                let g = adv
+                    .gradient(&cx)
+                    .unwrap_or_else(|| cx.source.loss_and_grad(params, my_seed).1);
                 (f32::NAN, g)
             }
         }
@@ -451,7 +449,10 @@ pub fn stage_begin(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> StepState {
         let part_hashes: Vec<Digest> =
             (0..n_parts).map(|j| sha256_f32(ctx.spec.slice(&grad, j))).collect();
         let commit = GradCommit { full: sha256_f32(&grad), parts: part_hashes };
-        let equivocate = matches!(&ctx.behavior, Behavior::Byzantine(b) if b.equivocate);
+        let equivocate = match &mut ctx.behavior {
+            Behavior::Byzantine(adv) => adv.corrupt_commit(step),
+            Behavior::Honest => false,
+        };
         if equivocate {
             // Contradicting commitments to different halves of the
             // cluster — every honest peer eventually sees both variants.
@@ -500,6 +501,7 @@ pub fn stage_begin(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> StepState {
         agg_commits: vec![None; n_parts],
         ghat_parts: vec![Vec::new(); n_parts],
         ghat: Vec::new(),
+        corrupted_parts: Vec::new(),
         mprng_participants: ctx.live.clone(),
         mprng_attempt: 0,
         mprng_round: None,
@@ -539,16 +541,16 @@ pub fn stage_commits(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
 
     // ---- Phase B: butterfly exchange of gradient parts --------------------
     if st.i_contribute {
+        let withhold_from = match &mut ctx.behavior {
+            Behavior::Byzantine(adv) => adv.withhold_part_from(step),
+            Behavior::Honest => None,
+        };
         for j in 0..st.n_parts {
             let owner = ctx.owners.owner(j);
             if owner == me {
                 continue; // local
             }
-            let withhold = matches!(
-                &ctx.behavior,
-                Behavior::Byzantine(b) if b.withhold_part_from == Some(owner)
-            );
-            if withhold {
+            if withhold_from == Some(owner) {
                 continue;
             }
             let mut w = Writer::new();
@@ -631,13 +633,12 @@ pub fn stage_parts(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
             warm.as_deref(),
         )
         .value;
-        // Aggregation attack: shift the result (≤ Δ_max to dodge V3).
-        if let Behavior::Byzantine(b) = &ctx.behavior {
-            if b.aggregation_attack && b.attack.schedule.active(step) {
-                let shift = b.aggregation_shift / (value.len() as f32).sqrt();
-                for v in value.iter_mut() {
-                    *v += shift;
-                }
+        // Aggregation-corruption hook: the adversary may rewrite the
+        // CenteredClip output for parts it owns (classically a shift
+        // ≤ Δ_max to dodge V3). Corrupted parts arm the Σs cover-up.
+        if let Behavior::Byzantine(adv) = &mut ctx.behavior {
+            if adv.corrupt_aggregate(step, j, &mut value) {
+                st.corrupted_parts.push(j);
             }
         }
         st.my_agg.insert(j, value);
@@ -759,7 +760,27 @@ pub fn stage_mprng_reveal(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
     let participants = st.mprng_participants.clone();
     st.mprng_commits_raw = ctx.collect_broadcast(step, slot_c, &participants, &mut st.intents);
     let reveal = st.mprng_round.as_ref().expect("mprng round in flight").reveal();
-    ctx.net.broadcast(step, slot_r, MsgClass::Mprng, reveal);
+    // MPRNG-abuse hook: abort (withhold the reveal after seeing every
+    // commitment — the Cleve bias attempt) or reveal mismatching bytes.
+    // Either way the combine step identifies us as the offender, bans
+    // us, and restarts the round without us (Appendix A.2).
+    let action = match &mut ctx.behavior {
+        Behavior::Byzantine(adv) => adv.mprng_behavior(step, st.mprng_attempt),
+        Behavior::Honest => MprngBehavior::Honest,
+    };
+    match action {
+        MprngBehavior::Honest => {
+            ctx.net.broadcast(step, slot_r, MsgClass::Mprng, reveal);
+        }
+        MprngBehavior::Abort => {}
+        MprngBehavior::Bias => {
+            let mut forged = reveal;
+            if let Some(b) = forged.first_mut() {
+                *b ^= 0xFF;
+            }
+            ctx.net.broadcast(step, slot_r, MsgClass::Mprng, forged);
+        }
+    }
     st.t.mprng_s += t0.elapsed().as_secs_f64();
 }
 
@@ -851,28 +872,24 @@ pub fn stage_scalars(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
             norms[j] = diff_norm;
             over[j] = u8::from(diff_norm > ctx.cfg.delta_max);
         }
-        // Aggregation-attack cover-up: the cheating owner absorbs the
-        // whole discrepancy on its own parts so Σᵢ s_i^j stays ≈ 0.
-        if let Behavior::Byzantine(b) = &ctx.behavior {
-            if b.aggregation_attack && b.attack.schedule.active(step) {
-                for &j in &st.my_parts {
-                    let mut total = 0.0f64;
-                    for (_, row) in &st.rows[&j] {
-                        let delta = clipped_diff(row, &st.my_agg[&j], tau);
-                        total += dot(&st.z[j], &delta);
-                    }
-                    // Own true contribution is already inside `total`;
-                    // replace own report so the sum comes out to zero.
-                    let own_delta = clipped_diff(ctx.spec.slice(&st.grad, j), &st.my_agg[&j], tau);
-                    let own_true = dot(&st.z[j], &own_delta);
-                    s[j] = (own_true - total) as f32;
-                }
+        // Aggregation-corruption cover-up: the cheating owner absorbs
+        // the whole discrepancy on its corrupted parts so Σᵢ s_i^j
+        // stays ≈ 0 (the single-handed s cover-up of Appendix C).
+        for &j in &st.corrupted_parts {
+            let mut total = 0.0f64;
+            for (_, row) in &st.rows[&j] {
+                let delta = clipped_diff(row, &st.my_agg[&j], tau);
+                total += dot(&st.z[j], &delta);
             }
-            if b.wrong_scalars {
-                for v in s.iter_mut() {
-                    *v += 1.0;
-                }
-            }
+            // Own true contribution is already inside `total`;
+            // replace own report so the sum comes out to zero.
+            let own_delta = clipped_diff(ctx.spec.slice(&st.grad, j), &st.my_agg[&j], tau);
+            let own_true = dot(&st.z[j], &own_delta);
+            s[j] = (own_true - total) as f32;
+        }
+        // Scalar-corruption hook: lie about s_i / norms / V3 votes.
+        if let Behavior::Byzantine(adv) = &mut ctx.behavior {
+            adv.corrupt_scalars(step, &mut s, &mut norms, &mut over);
         }
         let payload = VerifyScalars { s, norms, over }.encode();
         ctx.net.broadcast(
@@ -913,9 +930,15 @@ pub fn stage_verify(ctx: &mut PeerCtx, st: &mut StepState, step: u64) {
     // ---- Phase F: verifications -------------------------------------------
     // V1+V2 (owner-side): recompute each contributor's norm and s for our
     // parts; both sides run identical f32 code, so honest values match
-    // bit-for-bit and any discrepancy is an accusation.
+    // bit-for-bit and any discrepancy is an accusation. Byzantine peers
+    // skip the honest checks and broadcast whatever their accuse-policy
+    // hook fabricates (default: nothing) — false accusations are
+    // adjudicated by recomputation and cost the accuser its membership.
     let mut accusations_out: Vec<Accusation> = Vec::new();
     let honest_behavior = !ctx.behavior.is_byzantine();
+    if let Behavior::Byzantine(adv) = &mut ctx.behavior {
+        accusations_out = adv.accuse_policy(step, me, &st.contributors);
+    }
     if honest_behavior {
         for &j in &st.my_parts {
             for (p, row) in &st.rows[&j] {
@@ -1251,7 +1274,14 @@ fn validate_target(ctx: &mut PeerCtx, target: PeerId) -> Option<Accusation> {
             });
         }
     }
-    // Re-derive the verification scalars the target broadcast.
+    // Re-derive the verification scalars the target broadcast. Scalar
+    // accusations from validators carry part = u32::MAX: they concern
+    // the *archived* step, and the whole-step marker is what routes
+    // adjudication to `adjudicate_prev_scalars` (a per-part index would
+    // be adjudicated against the target's *current*-step scalars — an
+    // honest validator with a true accusation would then be convicted
+    // of false accusation whenever the target's current scalars check
+    // out).
     if let Some(sc) = archive.scalars.get(target).and_then(|s| s.as_ref()) {
         let tau = ctx.cfg.tau.tau();
         for j in 0..ctx.spec.n_parts {
@@ -1267,7 +1297,7 @@ fn validate_target(ctx: &mut PeerCtx, target: PeerId) -> Option<Accusation> {
                 return Some(Accusation {
                     target,
                     reason: BanReason::NormMismatch,
-                    part: j as u32,
+                    part: u32::MAX,
                 });
             }
             let zj = z_vector(&archive.z_r, j, ctx.spec.len(j));
@@ -1277,7 +1307,7 @@ fn validate_target(ctx: &mut PeerCtx, target: PeerId) -> Option<Accusation> {
                 return Some(Accusation {
                     target,
                     reason: BanReason::InnerProductMismatch,
-                    part: j as u32,
+                    part: u32::MAX,
                 });
             }
         }
@@ -1320,6 +1350,13 @@ fn adjudicate(
         BanReason::GradientMismatch => {
             // Validator claims the *previous* step's gradient was forged.
             let Some(archive) = ctx.archive.as_ref() else { return Verdict::AccuserGuilty };
+            // A peer that wasn't a contributor had nothing to commit: an
+            // accusation against it is baseless, and the accuser pays
+            // (honest validators check contributorship before accusing —
+            // only a false accuser reaches this).
+            if !archive.contributors.contains(&acc.target) {
+                return Verdict::AccuserGuilty;
+            }
             let Some(commit) = archive.commits.get(acc.target).and_then(|c| c.as_ref()) else {
                 return Verdict::TargetGuilty; // never committed at all
             };
@@ -1341,6 +1378,12 @@ fn adjudicate(
             let j = acc.part as usize;
             if j >= ctx.spec.n_parts {
                 return adjudicate_prev_scalars(ctx, acc);
+            }
+            // Scalar accusations only apply to contributors (validators
+            // broadcast no scalars this step): accusing a non-contributor
+            // is baseless, so the accuser pays.
+            if !contributors.contains(&acc.target) {
+                return Verdict::AccuserGuilty;
             }
             let Some(sc) = scalars.get(acc.target).and_then(|s| s.as_ref()) else {
                 return Verdict::TargetGuilty;
@@ -1385,6 +1428,12 @@ fn adjudicate(
             // re-running CenteredClip.
             let j = acc.part as usize;
             if j >= ctx.spec.n_parts {
+                return Verdict::AccuserGuilty;
+            }
+            // Only the part's owner aggregated it: accusing anyone else
+            // of an aggregation mismatch is baseless (only a false
+            // accuser emits this), and the accuser pays.
+            if acc.target != ctx.owners.owner(j) {
                 return Verdict::AccuserGuilty;
             }
             let Some(expected) = agg_commits.get(j).and_then(|c| *c) else {
@@ -1482,6 +1531,11 @@ fn adjudicate(
 /// (part == u32::MAX or archived data).
 fn adjudicate_prev_scalars(ctx: &mut PeerCtx, acc: &Accusation) -> Verdict {
     let Some(archive) = ctx.archive.as_ref() else { return Verdict::AccuserGuilty };
+    // Non-contributors broadcast no scalars: accusing one is baseless
+    // (reachable only through a false accusation), and the accuser pays.
+    if !archive.contributors.contains(&acc.target) {
+        return Verdict::AccuserGuilty;
+    }
     let Some(sc) = archive.scalars.get(acc.target).and_then(|s| s.as_ref()) else {
         return Verdict::TargetGuilty;
     };

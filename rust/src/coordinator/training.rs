@@ -19,14 +19,14 @@
 //! honest in supported configs) records metrics.
 
 use super::accuse::BanEvent;
+use super::adversary::{Adversary, AdversarySpec, GradientCtx, SurfaceSpec};
 use super::aggregators::Aggregator;
-use super::attacks::{AttackKind, AttackSchedule, AttackState, CollusionBoard};
+use super::attacks::{AttackSchedule, CollusionBoard};
 use super::optimizer::{clip_global_norm, Lamb, LrSchedule, Optimizer, Sgd};
 use super::step::{
     batch_seed, btard_step, stage_agg_commits, stage_agg_parts, stage_begin, stage_commits,
     stage_finish, stage_mprng_combine, stage_mprng_commit, stage_mprng_reveal, stage_parts,
-    stage_scalars, stage_verify, stage_verify_done, Behavior, ByzantineConfig, PeerCtx,
-    ProtocolConfig, StepError,
+    stage_scalars, stage_verify, stage_verify_done, Behavior, PeerCtx, ProtocolConfig, StepError,
     StepOutput, StepState,
 };
 use crate::model::GradientSource;
@@ -63,9 +63,11 @@ pub struct RunConfig {
     pub n_peers: usize,
     /// Byzantine peer ids (peer 0 must stay honest: it records metrics).
     pub byzantine: Vec<PeerId>,
-    pub attack: Option<(AttackKind, AttackSchedule)>,
-    /// Byzantine owners also corrupt their aggregation parts.
-    pub aggregation_attack: bool,
+    /// What the Byzantine peers do and when: a composable adversary spec
+    /// (`AdversarySpec::parse`, e.g. `"sign_flip:1000"` or
+    /// `"alie+equivocate"`) plus its activation schedule. `None` leaves
+    /// the Byzantine peers dormant (lazy validators, honest gradients).
+    pub attack: Option<(AdversarySpec, AttackSchedule)>,
     pub steps: u64,
     pub protocol: ProtocolConfig,
     pub opt: OptSpec,
@@ -90,7 +92,6 @@ impl RunConfig {
             n_peers,
             byzantine: vec![],
             attack: None,
-            aggregation_attack: false,
             steps,
             protocol: ProtocolConfig { n0: n_peers, ..ProtocolConfig::default() },
             opt: OptSpec::Sgd {
@@ -229,6 +230,41 @@ fn exec_mode_from_env() -> ExecMode {
     }
 }
 
+/// Reject adversary specs that cannot mean anything on this cluster: a
+/// `withhold:<peer>` naming a peer outside the run would silently
+/// withhold from nobody — a typo'd attack spec must not silently run a
+/// no-attack experiment (the spec parser can't know `n_peers`; this is
+/// the first place that does).
+fn validate_attack_spec(cfg: &RunConfig) {
+    if let Some((spec, _)) = &cfg.attack {
+        for part in &spec.parts {
+            if let SurfaceSpec::Withhold { from } = part {
+                assert!(
+                    *from < cfg.n_peers,
+                    "withhold:{from} names a peer outside the {}-peer cluster (ids 0..={})",
+                    cfg.n_peers,
+                    cfg.n_peers - 1
+                );
+                // A peer never sends its own part to itself, so a spec
+                // where every attacker IS the victim withholds nothing.
+                assert!(
+                    cfg.byzantine.is_empty() || cfg.byzantine.iter().any(|b| b != from),
+                    "withhold:{from}: the only Byzantine peer is the victim itself, so \
+                     nothing would ever be withheld — pick an honest victim"
+                );
+                // The mutual ELIMINATE trade removes the victim too, and
+                // peer 0 is the metrics recorder: eliminating it ends
+                // the recorded run at the first active step.
+                assert!(
+                    *from != 0,
+                    "withhold:0 would mutually eliminate peer 0, the metrics recorder \
+                     (it must stay live) — pick another honest victim"
+                );
+            }
+        }
+    }
+}
+
 /// BTARD-CLIPPED-SGD wraps the source so validators recompute the same
 /// clipped vectors (Algorithm 9); plain BTARD passes it through.
 fn wrap_source(cfg: &RunConfig, source: Arc<dyn GradientSource>) -> Arc<dyn GradientSource> {
@@ -270,6 +306,7 @@ pub fn run_btard_with(
 pub fn run_btard_threaded(cfg: &RunConfig, source: Arc<dyn GradientSource>) -> RunResult {
     assert!(!cfg.byzantine.contains(&0), "peer 0 must stay honest (metrics)");
     assert!(cfg.n_peers >= 2);
+    validate_attack_spec(cfg);
     let source = wrap_source(cfg, source);
     let init_params = source.init_params(cfg.seed);
     let transports = build_transports(
@@ -580,6 +617,7 @@ pub fn run_btard_pooled(
 ) -> RunResult {
     assert!(!cfg.byzantine.contains(&0), "peer 0 must stay honest (metrics)");
     assert!(cfg.n_peers >= 2);
+    validate_attack_spec(cfg);
     let source = wrap_source(cfg, source);
     let init_params = source.init_params(cfg.seed);
     let transports = build_transports(
@@ -786,18 +824,18 @@ fn build_peer_ctx(
 ) -> PeerCtx {
     let peer = net.id();
     let behavior = if cfg.byzantine.contains(&peer) {
-        let (kind, schedule) = cfg
-            .attack
-            .unwrap_or((AttackKind::SignFlip { lambda: 1.0 }, AttackSchedule::from_step(u64::MAX)));
-        Behavior::Byzantine(Box::new(ByzantineConfig {
-            attack: AttackState::new(kind, schedule, board.clone()),
-            aggregation_attack: cfg.aggregation_attack,
-            aggregation_shift: cfg.protocol.delta_max * 0.5,
-            lazy_validator: true,
-            equivocate: false,
-            withhold_part_from: None,
-            wrong_scalars: false,
-        }))
+        // Byzantine peers instantiate their own adversary state from the
+        // run's spec (dormant if no attack is configured: they validate
+        // lazily but otherwise act honestly until banned).
+        let adv = match &cfg.attack {
+            Some((spec, schedule)) => spec.build(*schedule, board, cfg.protocol.delta_max),
+            None => AdversarySpec::dormant().build(
+                AttackSchedule::from_step(u64::MAX),
+                board,
+                cfg.protocol.delta_max,
+            ),
+        };
+        Behavior::Byzantine(adv)
     } else {
         Behavior::Honest
     };
@@ -875,7 +913,10 @@ fn peer_main(
 pub struct PsConfig {
     pub n_peers: usize,
     pub byzantine: Vec<PeerId>,
-    pub attack: Option<(AttackKind, AttackSchedule)>,
+    /// Adversary spec + schedule. The PS loop only models the gradient
+    /// surface — protocol-surface components (equivocation, scalar lies,
+    /// …) have nothing to attack here and stay inert.
+    pub attack: Option<(AdversarySpec, AttackSchedule)>,
     pub aggregator: Aggregator,
     pub tau: f32,
     pub steps: u64,
@@ -888,18 +929,42 @@ pub struct PsConfig {
 /// robust-aggregation baselines of Fig. 3 (and the no-defense All-Reduce
 /// arm, aggregator = Mean).
 pub fn run_ps(cfg: &PsConfig, source: Arc<dyn GradientSource>) -> RunResult {
+    // The PS loop only models the gradient surface. A spec with any
+    // protocol-surface component (equivocate, bad_scalar, aggregation,
+    // …) would run with that component silently inert — an experiment
+    // labeled with an attack that never happened — so it is rejected at
+    // the one place every caller (CLI, examples, benches) funnels
+    // through. The scenario matrix and fig3 skip such cells before
+    // reaching here.
+    if let Some((spec, _)) = &cfg.attack {
+        assert!(
+            cfg.byzantine.is_empty() || spec.ps_expressible(),
+            "the trusted-PS baseline only models the gradient surface: adversary spec '{}' \
+             contains protocol-surface components that would be silently inert here — use \
+             the btard arm for protocol-surface adversaries",
+            spec.canonical()
+        );
+    }
     let mut params = source.init_params(cfg.seed);
     let mut opt = cfg.opt.build(params.len(), vec![]);
     let board = CollusionBoard::new();
-    let mut attackers: std::collections::HashMap<PeerId, AttackState> = cfg
+    // The PS loop has no Δ_max (build's third argument only resolves the
+    // `aggregation` surface's default shift, and no non-gradient hook is
+    // ever called here): pass a plain 0.0, not some unrelated knob.
+    const PS_DELTA_MAX: f32 = 0.0;
+    let mut attackers: std::collections::HashMap<PeerId, Box<dyn Adversary>> = cfg
         .byzantine
         .iter()
         .map(|&p| {
-            let (kind, schedule) = cfg.attack.unwrap_or((
-                AttackKind::SignFlip { lambda: 1.0 },
-                AttackSchedule::from_step(u64::MAX),
-            ));
-            (p, AttackState::new(kind, schedule, board.clone()))
+            let adv = match &cfg.attack {
+                Some((spec, schedule)) => spec.build(*schedule, &board, PS_DELTA_MAX),
+                None => AdversarySpec::dormant().build(
+                    AttackSchedule::from_step(u64::MAX),
+                    &board,
+                    PS_DELTA_MAX,
+                ),
+            };
+            (p, adv)
         })
         .collect();
     let mut metrics = Vec::new();
@@ -917,14 +982,19 @@ pub fn run_ps(cfg: &PsConfig, source: Arc<dyn GradientSource>) -> RunResult {
         for p in 0..cfg.n_peers {
             if let Some(att) = attackers.get_mut(&p) {
                 att.observe_params(step, &params);
-                grads.push(att.gradient(
+                let own_seed = batch_seed(&r, p);
+                let cx = GradientCtx {
                     step,
-                    &params,
-                    source.as_ref(),
-                    batch_seed(&r, p),
-                    &honest_seeds,
-                    &r,
-                ));
+                    params: &params,
+                    source: source.as_ref(),
+                    own_seed,
+                    honest: &honest_seeds,
+                    shared_r: &r,
+                };
+                grads.push(
+                    att.gradient(&cx)
+                        .unwrap_or_else(|| source.loss_and_grad(&params, own_seed).1),
+                );
             } else {
                 let (l, g) = source.loss_and_grad(&params, batch_seed(&r, p));
                 loss_acc += l;
@@ -1031,7 +1101,7 @@ mod tests {
             n_peers: 8,
             byzantine: vec![5, 6, 7],
             attack: Some((
-                AttackKind::SignFlip { lambda: 1000.0 },
+                AdversarySpec::parse("sign_flip:1000").unwrap(),
                 AttackSchedule::from_step(50),
             )),
             aggregator: Aggregator::Mean,
@@ -1060,7 +1130,7 @@ mod tests {
             n_peers: 8,
             byzantine: vec![6, 7],
             attack: Some((
-                AttackKind::SignFlip { lambda: 1000.0 },
+                AdversarySpec::parse("sign_flip:1000").unwrap(),
                 AttackSchedule::from_step(30),
             )),
             aggregator: Aggregator::CenteredClip,
@@ -1076,6 +1146,63 @@ mod tests {
         };
         let res = run_ps(&cfg, src);
         assert!(res.final_metric < 1.0, "subopt {}", res.final_metric);
+    }
+
+    #[test]
+    #[should_panic(expected = "silently inert")]
+    fn ps_rejects_gradient_free_adversary_specs() {
+        // A fully honest run under an attack label is misleading data:
+        // the PS loop must refuse specs it cannot express.
+        let src = Arc::new(Quadratic::new(16, 0.5, 5.0, 0.5, 1));
+        let cfg = PsConfig {
+            n_peers: 4,
+            byzantine: vec![3],
+            attack: Some((
+                AdversarySpec::parse("equivocate").unwrap(),
+                AttackSchedule::from_step(0),
+            )),
+            aggregator: Aggregator::Mean,
+            tau: 1.0,
+            steps: 2,
+            opt: OptSpec::Sgd {
+                schedule: LrSchedule::Constant(0.1),
+                momentum: 0.0,
+                nesterov: false,
+            },
+            eval_every: 1,
+            seed: 0,
+        };
+        run_ps(&cfg, src);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the 4-peer cluster")]
+    fn btard_rejects_withhold_victim_outside_cluster() {
+        // withhold:<peer> naming a nonexistent peer would silently run a
+        // no-attack experiment; the run entry points reject it instead.
+        let src = Arc::new(Quadratic::new(16, 0.5, 5.0, 0.5, 1));
+        let mut cfg = RunConfig::quick(4, 2);
+        cfg.byzantine = vec![3];
+        cfg.attack = Some((
+            AdversarySpec::parse("withhold:9").unwrap(),
+            AttackSchedule::from_step(0),
+        ));
+        run_btard_pooled(&cfg, src, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "the victim itself")]
+    fn btard_rejects_withhold_self_victim() {
+        // The sole attacker withholding from itself is a silent no-op —
+        // the same typo'd-spec-runs-honest hazard, caught up front.
+        let src = Arc::new(Quadratic::new(16, 0.5, 5.0, 0.5, 1));
+        let mut cfg = RunConfig::quick(4, 2);
+        cfg.byzantine = vec![3];
+        cfg.attack = Some((
+            AdversarySpec::parse("withhold:3").unwrap(),
+            AttackSchedule::from_step(0),
+        ));
+        run_btard_pooled(&cfg, src, 2);
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //! baselines do not model transport at all, so each PS cell runs once
 //! (tagged with the first listed profile) instead of once per profile.
 
-use crate::coordinator::attacks::{AttackKind, AttackSchedule};
+use crate::coordinator::adversary::AdversarySpec;
+use crate::coordinator::attacks::AttackSchedule;
 use crate::coordinator::centered_clip::TauPolicy;
 use crate::coordinator::optimizer::LrSchedule;
 use crate::coordinator::training::{
@@ -61,7 +62,8 @@ pub struct ScenarioSpec {
     /// Fraction of peers that are Byzantine (0 disables attackers even
     /// when an attack kind is listed); clamped below one half.
     pub byzantine_frac: f64,
-    /// Attack names per `AttackKind::from_name`, or "none".
+    /// Adversary specs per `AdversarySpec::parse` (composable:
+    /// `"alie+equivocate"`), or "none".
     pub attacks: Vec<String>,
     pub arms: Vec<Arm>,
     /// Network profiles per `NetworkProfile::from_name`: perfect,
@@ -158,8 +160,8 @@ impl ScenarioSpec {
             let mut parsed = Vec::new();
             for a in attacks {
                 let s = a.as_str().ok_or("attacks must be strings")?;
-                if s != "none" && AttackKind::from_name(s).is_none() {
-                    return Err(format!("unknown attack '{s}'"));
+                if s != "none" {
+                    AdversarySpec::parse(s).map_err(|e| format!("attack '{s}': {e}"))?;
                 }
                 parsed.push(s.to_string());
             }
@@ -292,7 +294,21 @@ pub fn run_matrix(spec: &ScenarioSpec, out_dir: &Path) -> std::io::Result<Matrix
     let mut cells = Vec::new();
     for &n in &spec.cluster_sizes {
         for attack in &spec.attacks {
+            // The trusted-PS baselines only model the gradient surface:
+            // any spec with a protocol-surface component (equivocate,
+            // bad_scalar, a "+aggregation" rider, …) would run with
+            // that component silently inert, and the CSV row would read
+            // as "the PS baseline survives the attack". Skip those
+            // cells instead of emitting mislabeled data (the BTARD arms
+            // sweep every spec).
+            let ps_can_express = attack == "none"
+                || AdversarySpec::parse(attack)
+                    .map(|a| a.ps_expressible())
+                    .unwrap_or(false);
             for arm in &spec.arms {
+                if !ps_can_express && matches!(arm, Arm::Ps(_)) {
+                    continue;
+                }
                 for (ni, network) in spec.networks.iter().enumerate() {
                     // The PS baselines don't model transport at all, so
                     // re-running them per network profile would produce
@@ -365,8 +381,9 @@ fn run_cell(spec: &ScenarioSpec, n: usize, attack: &str, arm: &Arm, network: &st
     let attack_cfg = if attack == "none" {
         None
     } else {
-        AttackKind::from_name(attack)
-            .map(|k| (k, AttackSchedule::from_step(spec.attack_start)))
+        let adv = AdversarySpec::parse(attack)
+            .unwrap_or_else(|e| panic!("attack spec '{attack}' failed to parse: {e}"));
+        Some((adv, AttackSchedule::from_step(spec.attack_start)))
     };
     let dim = spec.dim.max(n);
     let source: Arc<dyn GradientSource> = Arc::new(Quadratic::new(dim, 0.1, 2.0, 1.0, spec.seed));
@@ -382,7 +399,6 @@ fn run_cell(spec: &ScenarioSpec, n: usize, attack: &str, arm: &Arm, network: &st
                 n_peers: n,
                 byzantine: ((n - byz)..n).collect(),
                 attack: attack_cfg,
-                aggregation_attack: false,
                 steps: spec.steps,
                 protocol: ProtocolConfig {
                     n0: n,
@@ -482,9 +498,21 @@ mod tests {
     }
 
     #[test]
+    fn parse_accepts_composed_adversary_specs() {
+        let spec = ScenarioSpec::parse(
+            r#"{"attacks": ["none", "equivocate", "alie+bad_scalar:0.5", "false_accuse:0.2"]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.attacks.len(), 4);
+    }
+
+    #[test]
     fn parse_rejects_bad_specs() {
         assert!(ScenarioSpec::parse("{").is_err());
         assert!(ScenarioSpec::parse(r#"{"attacks": ["bogus"]}"#).is_err());
+        // Malformed adversary arguments are hard errors, not defaults.
+        assert!(ScenarioSpec::parse(r#"{"attacks": ["ipm:abc"]}"#).is_err());
+        assert!(ScenarioSpec::parse(r#"{"attacks": ["alie+"]}"#).is_err());
         assert!(ScenarioSpec::parse(r#"{"arms": ["ps:bogus"]}"#).is_err());
         assert!(ScenarioSpec::parse(r#"{"networks": ["wired"]}"#).is_err());
         assert!(ScenarioSpec::parse(r#"{"byzantine_frac": 0.7}"#).is_err());
@@ -530,6 +558,43 @@ mod tests {
         assert!(csv.lines().count() == 3, "{csv}");
         let json = std::fs::read_to_string(&report.json_path).unwrap();
         assert!(json.contains("\"cells\""));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ps_arms_skip_protocol_surface_only_attacks() {
+        // "equivocate" has no gradient surface: the PS baselines cannot
+        // express it, so they must not emit a row that silently measures
+        // an honest run under an attack label. The BTARD arm still
+        // sweeps it, and "none" keeps both arms.
+        let spec = ScenarioSpec {
+            name: "unit_surface".to_string(),
+            cluster_sizes: vec![4],
+            byzantine_frac: 0.25,
+            attacks: vec!["none".to_string(), "equivocate".to_string()],
+            arms: vec![Arm::Btard, Arm::Ps(Aggregator::Mean)],
+            networks: vec!["perfect".to_string()],
+            steps: 2,
+            dim: 64,
+            attack_start: 1,
+            tau: 2.0,
+            delta_max: 5.0,
+            lr: 0.1,
+            seed: 3,
+            workers: 2,
+            eval_every: 1,
+            verify_signatures: false,
+        };
+        let dir =
+            std::env::temp_dir().join(format!("btard_scenarios_surface_{}", std::process::id()));
+        let report = run_matrix(&spec, &dir).unwrap();
+        // none×{btard, ps} + equivocate×{btard} = 3 cells.
+        assert_eq!(report.cells.len(), 3, "{:?}", report.cells);
+        assert!(report
+            .cells
+            .iter()
+            .all(|c| !(c.attack == "equivocate" && c.arm.starts_with("ps_"))));
+        assert!(report.cells.iter().any(|c| c.attack == "equivocate" && c.arm == "btard"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

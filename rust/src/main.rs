@@ -15,7 +15,8 @@
 //!   btard ps --aggregator coord_median --steps 300
 //!   btard inspect --artifacts artifacts
 
-use btard::coordinator::attacks::{AttackKind, AttackSchedule};
+use btard::coordinator::adversary::AdversarySpec;
+use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{
@@ -48,8 +49,15 @@ fn main() {
                  common flags:\n\
                  \x20 --workload mlp|quadratic    training objective\n\
                  \x20 --peers N --byzantine B     cluster composition\n\
-                 \x20 --attack KIND[:ARG]         sign_flip, random_direction, label_flip,\n\
-                 \x20                             delayed_gradient, ipm, alie\n\
+                 \x20 --attack SPEC               composable adversary spec: NAME[:ARG]\n\
+                 \x20                             joined by '+'. Gradient zoo: sign_flip,\n\
+                 \x20                             random_direction, label_flip,\n\
+                 \x20                             delayed_gradient, ipm, alie. Protocol\n\
+                 \x20                             surfaces: equivocate, bad_scalar,\n\
+                 \x20                             false_accuse, aggregation, withhold:<peer>,\n\
+                 \x20                             mprng_abort, mprng_bias.\n\
+                 \x20                             e.g. 'alie+equivocate',\n\
+                 \x20                             'sign_flip:1000+false_accuse:0.1'\n\
                  \x20 --attack-start S            first attacking step\n\
                  \x20 --tau T | --tau inf         CenteredClip clipping level\n\
                  \x20 --validators M --steps K --lr LR --seed S\n\
@@ -159,11 +167,19 @@ fn parse_network(args: &Args) -> Option<NetworkProfile> {
     })
 }
 
-fn parse_attack(args: &Args) -> Option<(AttackKind, AttackSchedule)> {
-    let name = args.get("attack")?;
-    let kind =
-        AttackKind::from_name(name).unwrap_or_else(|| panic!("unknown attack '{name}'"));
-    Some((kind, AttackSchedule::from_step(args.get_u64("attack-start", 100))))
+fn parse_attack(args: &Args) -> Option<(AdversarySpec, AttackSchedule)> {
+    // --aggregation-attack composes with (or stands in for) --attack,
+    // through the one folding path all entry points share.
+    let aggregation = args.get_bool("aggregation-attack");
+    let mut spec = match args.get("attack") {
+        Some(s) => AdversarySpec::parse(s).unwrap_or_else(|e| panic!("bad --attack spec: {e}")),
+        None if aggregation => AdversarySpec::dormant(),
+        None => return None,
+    };
+    if aggregation {
+        spec = spec.with_aggregation();
+    }
+    Some((spec, AttackSchedule::from_step(args.get_u64("attack-start", 100))))
 }
 
 fn cmd_train(args: &Args) {
@@ -187,7 +203,6 @@ fn cmd_train(args: &Args) {
         n_peers: n,
         byzantine: ((n - b)..n).collect(),
         attack: parse_attack(args),
-        aggregation_attack: args.get_bool("aggregation-attack"),
         steps,
         protocol: ProtocolConfig {
             n0: n,
@@ -224,7 +239,7 @@ fn run_and_report(cfg: RunConfig, source: Arc<dyn GradientSource>, mode: ExecMod
         cfg.n_peers,
         cfg.byzantine.len(),
         cfg.steps,
-        cfg.attack.map(|(k, _)| k.name()),
+        cfg.attack.as_ref().map(|(spec, _)| spec.canonical()),
         mode
     );
     let t0 = std::time::Instant::now();
@@ -319,7 +334,7 @@ fn cmd_selftest() {
     let mut cfg = RunConfig::quick(4, 150);
     cfg.byzantine = vec![3];
     cfg.attack = Some((
-        AttackKind::SignFlip { lambda: 1000.0 },
+        AdversarySpec::parse("sign_flip:1000").unwrap(),
         AttackSchedule::from_step(10),
     ));
     cfg.protocol.tau = TauPolicy::Fixed(2.0);

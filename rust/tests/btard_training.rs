@@ -2,7 +2,8 @@
 //! recovers from attacks after bans, and its communication cost follows
 //! the paper's O(d + n²) claim.
 
-use btard::coordinator::attacks::{AttackKind, AttackSchedule};
+use btard::coordinator::adversary::AdversarySpec;
+use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{
@@ -71,7 +72,7 @@ fn mlp_recovers_accuracy_after_attack_quick() {
     let mut c = RunConfig::quick(8, 250);
     c.byzantine = vec![5, 6, 7];
     c.attack = Some((
-        AttackKind::SignFlip { lambda: 1000.0 },
+        AdversarySpec::parse("sign_flip:1000").unwrap(),
         AttackSchedule::from_step(30),
     ));
     c.protocol.tau = TauPolicy::Fixed(1.0);
@@ -105,7 +106,7 @@ fn mlp_recovers_accuracy_after_attack() {
     let mut c = RunConfig::quick(8, 400);
     c.byzantine = vec![5, 6, 7];
     c.attack = Some((
-        AttackKind::SignFlip { lambda: 1000.0 },
+        AdversarySpec::parse("sign_flip:1000").unwrap(),
         AttackSchedule::from_step(30),
     ));
     c.protocol.tau = TauPolicy::Fixed(1.0);
@@ -177,7 +178,7 @@ fn tau_infinite_still_bans_but_allows_transient_damage() {
     c.protocol.tau = TauPolicy::Infinite;
     c.byzantine = vec![3];
     c.attack = Some((
-        AttackKind::SignFlip { lambda: 10.0 },
+        AdversarySpec::parse("sign_flip:10").unwrap(),
         AttackSchedule::from_step(20),
     ));
     let res = run_btard(&c, src);

@@ -14,7 +14,8 @@
 //! notice; commit the file to pin the behaviour. Every later run must
 //! reproduce it bit-for-bit.
 
-use btard::coordinator::attacks::{AttackKind, AttackSchedule};
+use btard::coordinator::adversary::AdversarySpec;
+use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{run_btard_pooled, OptSpec, RunConfig, RunResult};
@@ -63,8 +64,10 @@ fn perfect_fabric_64_peer_run_matches_golden_digest() {
     let cfg = RunConfig {
         n_peers: 64,
         byzantine: (56..64).collect(),
-        attack: Some((AttackKind::SignFlip { lambda: 1000.0 }, AttackSchedule::from_step(2))),
-        aggregation_attack: false,
+        attack: Some((
+            AdversarySpec::parse("sign_flip:1000").unwrap(),
+            AttackSchedule::from_step(2),
+        )),
         steps: 4,
         protocol: ProtocolConfig {
             n0: 64,

@@ -8,7 +8,8 @@
 //! the per-thread model's comfort zone complete on a handful of
 //! workers.
 
-use btard::coordinator::attacks::{AttackKind, AttackSchedule};
+use btard::coordinator::adversary::AdversarySpec;
+use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{
@@ -26,13 +27,12 @@ fn sweep_cfg(n: usize, byz: usize, steps: u64, attack_start: u64) -> RunConfig {
         byzantine: ((n - byz)..n).collect(),
         attack: if byz > 0 {
             Some((
-                AttackKind::SignFlip { lambda: 1000.0 },
+                AdversarySpec::parse("sign_flip:1000").unwrap(),
                 AttackSchedule::from_step(attack_start),
             ))
         } else {
             None
         },
-        aggregation_attack: false,
         steps,
         protocol: ProtocolConfig {
             n0: n,

@@ -3,18 +3,22 @@
 //! peers must never be banned except through the mutual-elimination
 //! trade (at most one honest per Byzantine).
 //!
-//! The `run_btard` tests use the default execution model (the pooled
-//! scheduler, unless BTARD_EXEC overrides it); the `direct` module
-//! drives `btard_step` on real per-peer threads with blocking receives.
-//! All runs use real signatures, commitments and MPRNG — these are
-//! full-protocol tests, just on small synthetic objectives so they stay
-//! fast on the 1-core testbed.
+//! Every violation is driven through the pluggable `Adversary` API: the
+//! gradient zoo and the protocol-surface adversaries (equivocation,
+//! scalar lies, aggregation corruption, withholding, false accusations,
+//! MPRNG abuse) all run end-to-end via `RunConfig.attack` specs — the
+//! same path the CLI's `--attack` and the scenario matrix use. The
+//! `custom` module additionally proves the trait is open: a bespoke
+//! adversary defined *here*, outside the registry, plugs into the same
+//! protocol loop. All runs use real signatures, commitments and MPRNG —
+//! these are full-protocol tests, just on small synthetic objectives so
+//! they stay fast on the 1-core testbed.
 
-use btard::coordinator::attacks::{AttackKind, AttackSchedule, AttackState, CollusionBoard};
+use btard::coordinator::adversary::AdversarySpec;
+use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
 use btard::coordinator::messages::BanReason;
 use btard::coordinator::optimizer::LrSchedule;
-use btard::coordinator::step::{Behavior, ByzantineConfig};
 use btard::coordinator::training::{run_btard, OptSpec, RunConfig};
 use btard::model::synthetic::Quadratic;
 use btard::model::GradientSource;
@@ -37,6 +41,13 @@ fn base_cfg(n: usize, byz: Vec<usize>, steps: u64) -> RunConfig {
     cfg
 }
 
+fn attack(cfg: &mut RunConfig, spec: &str, start: u64) {
+    cfg.attack = Some((
+        AdversarySpec::parse(spec).expect("test attack spec"),
+        AttackSchedule::from_step(start),
+    ));
+}
+
 #[test]
 fn honest_run_never_bans() {
     let cfg = base_cfg(4, vec![], 30);
@@ -51,10 +62,7 @@ fn honest_run_never_bans() {
 #[test]
 fn gradient_attacker_is_banned_and_training_recovers() {
     let mut cfg = base_cfg(4, vec![3], 120);
-    cfg.attack = Some((
-        AttackKind::SignFlip { lambda: 1000.0 },
-        AttackSchedule::from_step(10),
-    ));
+    attack(&mut cfg, "sign_flip:1000", 10);
     let res = run_btard(&cfg, quad());
     let ban = res
         .ban_events
@@ -71,10 +79,7 @@ fn gradient_attacker_is_banned_and_training_recovers() {
 #[test]
 fn random_direction_attacker_is_banned() {
     let mut cfg = base_cfg(4, vec![2], 100);
-    cfg.attack = Some((
-        AttackKind::RandomDirection { lambda: 1000.0 },
-        AttackSchedule::from_step(8),
-    ));
+    attack(&mut cfg, "random_direction:1000", 8);
     let res = run_btard(&cfg, quad());
     assert!(res.ban_events.iter().any(|b| b.target == 2), "{:?}", res.ban_events);
     assert!(res.ban_events.iter().all(|b| b.target == 2));
@@ -83,10 +88,7 @@ fn random_direction_attacker_is_banned() {
 #[test]
 fn two_colluding_attackers_both_banned() {
     let mut cfg = base_cfg(6, vec![4, 5], 150);
-    cfg.attack = Some((
-        AttackKind::SignFlip { lambda: 500.0 },
-        AttackSchedule::from_step(10),
-    ));
+    attack(&mut cfg, "sign_flip:500", 10);
     let res = run_btard(&cfg, quad());
     for byz in [4usize, 5] {
         assert!(
@@ -104,27 +106,183 @@ fn ipm_attacker_is_banned() {
     // does not match any hash-committed honest computation, so a
     // validator recomputing from the public seed catches it.
     let mut cfg = base_cfg(4, vec![3], 120);
-    cfg.attack = Some((AttackKind::Ipm { eps: 0.6 }, AttackSchedule::from_step(5)));
+    attack(&mut cfg, "ipm:0.6", 5);
     let res = run_btard(&cfg, quad());
     assert!(res.ban_events.iter().any(|b| b.target == 3), "{:?}", res.ban_events);
 }
 
-// --- direct protocol-violation behaviours (test hooks) ----------------------
+// --- protocol-surface adversaries, end-to-end via `--attack` specs ----------
 
-mod direct {
+#[test]
+fn equivocator_is_banned_and_training_recovers() {
+    let mut cfg = base_cfg(4, vec![2], 100);
+    attack(&mut cfg, "equivocate", 2);
+    let res = run_btard(&cfg, quad());
+    let ev = res.ban_events.iter().find(|b| b.target == 2).expect("equivocator banned");
+    assert_eq!(ev.reason, BanReason::Equivocation);
+    assert_eq!(ev.step, 2, "caught in the step it first equivocated");
+    assert!(res.ban_events.iter().all(|b| b.target == 2), "{:?}", res.ban_events);
+    assert!(res.final_metric < 1.0, "honest peers must converge: {}", res.final_metric);
+}
+
+#[test]
+fn bad_scalar_liar_is_banned_and_training_recovers() {
+    // Wrong CenteredClip s_i^j: caught by the owner-side Verification 2
+    // recheck (or the Σs alarm), adjudicated by recomputation from the
+    // public batch seed.
+    let mut cfg = base_cfg(4, vec![2], 100);
+    attack(&mut cfg, "bad_scalar", 2);
+    let res = run_btard(&cfg, quad());
+    let ev = res.ban_events.iter().find(|b| b.target == 2).expect("scalar liar banned");
+    assert!(
+        matches!(
+            ev.reason,
+            BanReason::InnerProductMismatch
+                | BanReason::AggregationMismatch
+                | BanReason::GradientMismatch
+        ),
+        "{ev:?}"
+    );
+    assert!(res.ban_events.iter().all(|b| b.target == 2), "{:?}", res.ban_events);
+    assert!(res.final_metric < 1.0, "honest peers must converge: {}", res.final_metric);
+}
+
+#[test]
+fn false_accuser_is_banned_and_training_recovers() {
+    // Baseless accusations against honest peers: adjudication recomputes
+    // from public seeds, finds the target clean, and the Hammurabi rule
+    // bans the accuser. No honest peer may be harmed.
+    let mut cfg = base_cfg(4, vec![2], 100);
+    attack(&mut cfg, "false_accuse", 2); // prob 1: accuses every active step
+    let res = run_btard(&cfg, quad());
+    let ev = res.ban_events.iter().find(|b| b.target == 2).expect("false accuser banned");
+    assert_eq!(ev.reason, BanReason::FalseAccusation);
+    assert!(ev.step >= 2);
+    assert!(
+        res.ban_events.iter().all(|b| b.target == 2),
+        "honest peer banned by a false accusation: {:?}",
+        res.ban_events
+    );
+    assert!(res.final_metric < 1.0, "honest peers must converge: {}", res.final_metric);
+}
+
+#[test]
+fn mprng_aborter_is_banned_and_training_recovers() {
+    // Withholding the reveal after seeing every commitment (the Cleve
+    // abort-bias attempt): identified by the combine step, banned, and
+    // the round restarts without the offender — no honest casualties.
+    let mut cfg = base_cfg(4, vec![3], 60);
+    attack(&mut cfg, "mprng_abort", 1);
+    let res = run_btard(&cfg, quad());
+    let ev = res.ban_events.iter().find(|b| b.target == 3).expect("aborter banned");
+    assert_eq!(ev.reason, BanReason::MprngViolation);
+    assert_eq!(ev.step, 1);
+    assert!(res.ban_events.iter().all(|b| b.target == 3), "{:?}", res.ban_events);
+    assert_eq!(res.steps_done, 60, "run must survive the aborted round");
+}
+
+#[test]
+fn mprng_biaser_is_banned() {
+    // Revealing bytes that mismatch the commitment (output steering):
+    // commit-before-reveal makes it self-incriminating.
+    let mut cfg = base_cfg(4, vec![1], 30);
+    attack(&mut cfg, "mprng_bias", 2);
+    let res = run_btard(&cfg, quad());
+    let ev = res.ban_events.iter().find(|b| b.target == 1).expect("biaser banned");
+    assert_eq!(ev.reason, BanReason::MprngViolation);
+    assert!(res.ban_events.iter().all(|b| b.target == 1), "{:?}", res.ban_events);
+}
+
+#[test]
+fn withholding_triggers_mutual_elimination() {
+    // Peer 3 refuses peer 1 its gradient part: only peer 1 can see the
+    // gap, so the protocol answers with the mutual ELIMINATE trade —
+    // exactly one honest casualty per Byzantine (§3.2).
+    let mut cfg = base_cfg(4, vec![3], 10);
+    attack(&mut cfg, "withhold:1", 0);
+    let res = run_btard(&cfg, quad());
+    let banned: Vec<usize> = res.ban_events.iter().map(|b| b.target).collect();
+    assert!(banned.contains(&3), "{:?}", res.ban_events);
+    assert!(banned.contains(&1), "{:?}", res.ban_events);
+    assert_eq!(banned.len(), 2, "{:?}", res.ban_events);
+    assert!(res.ban_events.iter().all(|b| b.reason == BanReason::Eliminated));
+}
+
+#[test]
+fn aggregation_corruptor_is_banned() {
+    // Shifted CenteredClip output + single-handed Σs cover-up: dodges
+    // the cheap checks, but a drawn validator re-deriving the cheater's
+    // scalars from the public seed eventually exposes it.
+    let mut cfg = base_cfg(4, vec![1], 40);
+    attack(&mut cfg, "aggregation:2", 1);
+    let res = run_btard(&cfg, quad());
+    assert!(
+        res.ban_events.iter().any(|b| b.target == 1),
+        "aggregation attacker not banned: {:?}",
+        res.ban_events
+    );
+    // Only the attacker is removed.
+    assert!(res.ban_events.iter().all(|b| b.target == 1), "{:?}", res.ban_events);
+}
+
+#[test]
+fn composed_adversary_all_components_answered() {
+    // A composite attacking two surfaces at once: the gradient zoo's
+    // sign-flip plus commitment equivocation. The equivocation evidence
+    // is proven first (same-step broadcast data), and no honest peer is
+    // harmed either way.
+    let mut cfg = base_cfg(4, vec![3], 80);
+    attack(&mut cfg, "sign_flip:1000+equivocate", 3);
+    let res = run_btard(&cfg, quad());
+    let ev = res.ban_events.iter().find(|b| b.target == 3).expect("composite banned");
+    assert!(
+        matches!(ev.reason, BanReason::Equivocation | BanReason::GradientMismatch),
+        "{ev:?}"
+    );
+    assert!(res.ban_events.iter().all(|b| b.target == 3), "{:?}", res.ban_events);
+    assert!(res.final_metric < 1.0, "honest peers must converge: {}", res.final_metric);
+}
+
+// --- a bespoke adversary outside the registry -------------------------------
+
+mod custom {
     use super::*;
-    use btard::coordinator::partition::{OwnerMap, PartitionSpec};
-    use btard::coordinator::step::{btard_step, PeerCtx, ProtocolConfig};
-    use btard::net::local::build_cluster;
-    use btard::util::rng::Rng;
+    use btard::coordinator::adversary::{Adversary, GradientCtx};
 
-    /// Drive a 4-peer cluster manually with one misbehaving peer built
-    /// from `mk_behavior`, for `steps` steps; returns peer 0's ledger.
-    fn run_manual(
-        mk_behavior: impl Fn(usize) -> Behavior + Send + Sync,
-        steps: u64,
-    ) -> btard::coordinator::BanLedger {
+    /// Not in the registry: scales its honest gradient by a constant.
+    /// Looks statistically plausible, but no hash-committed honest
+    /// computation produces it, so validator recomputation catches it —
+    /// proving third-party `Adversary` impls plug into the same loop.
+    struct GradientScaler {
+        factor: f32,
+        start: u64,
+    }
+
+    impl Adversary for GradientScaler {
+        fn spec(&self) -> String {
+            format!("custom_scaler:{}", self.factor)
+        }
+        fn gradient(&mut self, cx: &GradientCtx) -> Option<Vec<f32>> {
+            if cx.step < self.start {
+                return None;
+            }
+            let (_, mut g) = cx.source.loss_and_grad(cx.params, cx.own_seed);
+            for v in g.iter_mut() {
+                *v *= self.factor;
+            }
+            Some(g)
+        }
+    }
+
+    #[test]
+    fn out_of_registry_adversary_is_caught() {
+        use btard::coordinator::partition::{OwnerMap, PartitionSpec};
+        use btard::coordinator::step::{btard_step, Behavior, PeerCtx, ProtocolConfig};
+        use btard::net::local::build_cluster;
+        use btard::util::rng::Rng;
+
         let n = 4;
+        let steps = 30u64;
         let source = quad();
         let params0 = source.init_params(0);
         let cluster = build_cluster(n, 900, 8, true);
@@ -133,7 +291,11 @@ mod direct {
             let peer = net.id;
             let source = source.clone();
             let params0 = params0.clone();
-            let behavior = mk_behavior(peer);
+            let behavior = if peer == 2 {
+                Behavior::Byzantine(Box::new(GradientScaler { factor: 3.0, start: 4 }))
+            } else {
+                Behavior::Honest
+            };
             let h = std::thread::spawn(move || {
                 let cfgp = ProtocolConfig {
                     n0: n,
@@ -183,109 +345,10 @@ mod direct {
                 ledger0 = Some(ledger);
             }
         }
-        ledger0.unwrap()
-    }
-
-    fn byz(cfg_fn: impl Fn(&mut ByzantineConfig)) -> Behavior {
-        let mut b = ByzantineConfig {
-            attack: AttackState::new(
-                AttackKind::SignFlip { lambda: 1.0 },
-                AttackSchedule::from_step(u64::MAX), // gradient attack off
-                CollusionBoard::new(),
-            ),
-            aggregation_attack: false,
-            aggregation_shift: 2.0,
-            lazy_validator: true,
-            equivocate: false,
-            withhold_part_from: None,
-            wrong_scalars: false,
-        };
-        cfg_fn(&mut b);
-        Behavior::Byzantine(Box::new(b))
-    }
-
-    #[test]
-    fn equivocation_is_banned_first_step() {
-        let ledger = run_manual(
-            |p| {
-                if p == 2 {
-                    byz(|b| b.equivocate = true)
-                } else {
-                    Behavior::Honest
-                }
-            },
-            3,
-        );
-        let ev = ledger.events.iter().find(|e| e.target == 2).expect("equivocator banned");
-        assert_eq!(ev.reason, BanReason::Equivocation);
-        assert_eq!(ev.step, 0);
-        assert!(ledger.events.iter().all(|e| e.target == 2));
-    }
-
-    #[test]
-    fn withholding_triggers_mutual_elimination() {
-        let ledger = run_manual(
-            |p| {
-                if p == 3 {
-                    byz(|b| b.withhold_part_from = Some(1))
-                } else {
-                    Behavior::Honest
-                }
-            },
-            3,
-        );
-        // Peer 1 never gets its part from 3 → ELIMINATE(1,3): both out.
-        assert!(ledger.is_banned(3), "{:?}", ledger.events);
-        assert!(ledger.is_banned(1), "{:?}", ledger.events);
-        assert_eq!(ledger.banned_set().len(), 2);
-    }
-
-    #[test]
-    fn aggregation_attack_is_banned() {
-        let ledger = run_manual(
-            |p| {
-                if p == 1 {
-                    byz(|b| {
-                        b.aggregation_attack = true;
-                        b.attack.schedule = AttackSchedule::from_step(1);
-                    })
-                } else {
-                    Behavior::Honest
-                }
-            },
-            40,
-        );
-        assert!(ledger.is_banned(1), "aggregation attacker not banned: {:?}", ledger.events);
-        // Only the attacker is removed.
-        assert_eq!(ledger.banned_set().len(), 1);
-    }
-
-    #[test]
-    fn wrong_scalars_banned_via_owner_check() {
-        let ledger = run_manual(
-            |p| {
-                if p == 2 {
-                    byz(|b| {
-                        b.wrong_scalars = true;
-                        b.attack.schedule = AttackSchedule::from_step(0);
-                    })
-                } else {
-                    Behavior::Honest
-                }
-            },
-            10,
-        );
-        let ev = ledger.events.iter().find(|e| e.target == 2).expect("liar banned");
-        assert!(
-            matches!(
-                ev.reason,
-                BanReason::InnerProductMismatch
-                    | BanReason::AggregationMismatch
-                    | BanReason::GradientMismatch
-            ),
-            "{:?}",
-            ev
-        );
-        assert!(ledger.events.iter().all(|e| e.target == 2));
+        let ledger = ledger0.unwrap();
+        let ev = ledger.events.iter().find(|e| e.target == 2).expect("scaler banned");
+        assert_eq!(ev.reason, BanReason::GradientMismatch);
+        assert!(ev.step >= 4, "banned before deviating?");
+        assert!(ledger.events.iter().all(|e| e.target == 2), "{:?}", ledger.events);
     }
 }
