@@ -1,6 +1,9 @@
 //! JSON run configuration: lets experiments be described declaratively
 //! (`configs/*.json`) and launched via `btard train --config <file>` —
-//! the config-system deliverable a deployable framework needs.
+//! and carried across the process boundary by the multi-process cluster
+//! runner (`btard cluster` writes one config file, every `btard peer`
+//! subprocess loads it, so the whole cluster provably runs the same
+//! experiment).
 //!
 //! Schema (all fields optional; defaults = `RunConfig::quick`):
 //! ```json
@@ -10,12 +13,17 @@
 //!               "stop": null, "period": [5, 5]},
 //!   "aggregation_attack": false,
 //!   "protocol": {"tau": 1.0, "validators": 2, "delta_max": 5.0,
-//!                 "clip_iters": 500, "base_timeout_ms": 4000},
+//!                 "clip_iters": 500, "base_timeout_ms": 4000,
+//!                 "global_seed": 0},
 //!   "optimizer": {"kind": "sgd", "lr": 0.2, "momentum": 0.9,
 //!                  "schedule": "cosine", "floor": 0.01, "warmup": 0},
 //!   "clip_lambda": null,
 //!   "eval_every": 20, "verify_signatures": true,
-//!   "network": "lossy:0.05"
+//!   "gossip_fanout": 8,
+//!   "network": "lossy:0.05",
+//!   "transport": "local",
+//!   "workload": {"kind": "quadratic", "dim": 1024, "mu": 0.1,
+//!                 "L": 2.0, "sigma": 1.0, "seed": 9}
 //! }
 //! ```
 //!
@@ -35,6 +43,22 @@
 //! name (`perfect`, `lossy[:drop]`, `partitioned[:frac]`,
 //! `straggler[:frac]`) or an object with per-field overrides — see
 //! `net::sim::NetworkProfile::from_json` for the full schema.
+//!
+//! `transport` selects the message substrate: `"local"` (the in-process
+//! fabric / network simulation, the default) or `"socket"` (a real TCP
+//! mesh between `btard peer` processes — launched via `btard cluster`,
+//! which requires a perfect `network`: fault injection lives in the
+//! local simulator, real links carry their own faults).
+//!
+//! `workload` names the training objective so every peer process builds
+//! the identical gradient source: `{"kind": "mlp", "hidden", "batch",
+//! "seed"}` or `{"kind": "quadratic", "dim", "mu", "L", "sigma",
+//! "seed"}`. Defaults to the CLI's default MLP when absent.
+//!
+//! `protocol.global_seed` defaults to the run seed (the common case);
+//! set it explicitly to reproduce configurations where they differ —
+//! `write_run_config` always writes it, so a serialized config
+//! round-trips bit-for-bit.
 
 use super::adversary::AdversarySpec;
 use super::attacks::AttackSchedule;
@@ -42,12 +66,122 @@ use super::centered_clip::TauPolicy;
 use super::optimizer::LrSchedule;
 use super::step::ProtocolConfig;
 use super::training::{OptSpec, RunConfig};
+use crate::data::synth_vision::SynthVision;
+use crate::model::mlp::MlpModel;
+use crate::model::synthetic::Quadratic;
+use crate::model::GradientSource;
 use crate::net::NetworkProfile;
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
-/// Parse a full run configuration from JSON text.
-pub fn parse_run_config(text: &str) -> Result<RunConfig> {
+/// Which message substrate a run uses (the `transport` config key).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// In-process fabric (perfect or simulated-fault). The default.
+    #[default]
+    Local,
+    /// Real TCP mesh between `btard peer` processes.
+    Socket,
+}
+
+impl TransportKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Local => "local",
+            TransportKind::Socket => "socket",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TransportKind> {
+        match s {
+            "local" => Some(TransportKind::Local),
+            "socket" => Some(TransportKind::Socket),
+            _ => None,
+        }
+    }
+}
+
+/// Declarative training objective, so independently-launched peer
+/// processes provably construct the identical gradient source (the
+/// `workload` config key).
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkloadSpec {
+    Mlp { hidden: usize, batch: usize, seed: u64 },
+    Quadratic { dim: usize, mu: f32, l: f32, sigma: f32, seed: u64 },
+}
+
+impl WorkloadSpec {
+    /// The CLI's default workload (`--workload mlp` defaults).
+    pub fn default_mlp() -> WorkloadSpec {
+        WorkloadSpec::Mlp { hidden: 64, batch: 8, seed: 0 }
+    }
+
+    pub fn build(&self) -> Arc<dyn GradientSource> {
+        match *self {
+            WorkloadSpec::Mlp { hidden, batch, seed } => {
+                let ds = Arc::new(SynthVision::new(seed, 64, 10));
+                Arc::new(MlpModel::new(ds, hidden, batch))
+            }
+            WorkloadSpec::Quadratic { dim, mu, l, sigma, seed } => {
+                Arc::new(Quadratic::new(dim, mu, l, sigma, seed))
+            }
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match *self {
+            WorkloadSpec::Mlp { hidden, batch, seed } => Json::obj(vec![
+                ("kind", Json::str("mlp")),
+                ("hidden", Json::num(hidden as f64)),
+                ("batch", Json::num(batch as f64)),
+                ("seed", Json::num(seed as f64)),
+            ]),
+            WorkloadSpec::Quadratic { dim, mu, l, sigma, seed } => Json::obj(vec![
+                ("kind", Json::str("quadratic")),
+                ("dim", Json::num(dim as f64)),
+                ("mu", Json::num(mu as f64)),
+                ("L", Json::num(l as f64)),
+                ("sigma", Json::num(sigma as f64)),
+                ("seed", Json::num(seed as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<WorkloadSpec> {
+        let kind = j
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("workload.kind missing (mlp | quadratic)"))?;
+        match kind {
+            "mlp" => Ok(WorkloadSpec::Mlp {
+                hidden: j.get("hidden").and_then(|v| v.as_usize()).unwrap_or(64),
+                batch: j.get("batch").and_then(|v| v.as_usize()).unwrap_or(8),
+                seed: j.get("seed").and_then(|v| v.as_u64()).unwrap_or(0),
+            }),
+            "quadratic" => Ok(WorkloadSpec::Quadratic {
+                dim: j.get("dim").and_then(|v| v.as_usize()).unwrap_or(128),
+                mu: j.get("mu").and_then(|v| v.as_f64()).unwrap_or(0.1) as f32,
+                l: j.get("L").and_then(|v| v.as_f64()).unwrap_or(5.0) as f32,
+                sigma: j.get("sigma").and_then(|v| v.as_f64()).unwrap_or(1.0) as f32,
+                seed: j.get("seed").and_then(|v| v.as_u64()).unwrap_or(0),
+            }),
+            other => Err(anyhow!("unknown workload kind '{other}' (mlp | quadratic)")),
+        }
+    }
+}
+
+/// A fully parsed config file: the run parameters plus the run-level
+/// keys that live outside `RunConfig` (transport choice, workload).
+pub struct LoadedRunConfig {
+    pub cfg: RunConfig,
+    pub transport: TransportKind,
+    pub workload: WorkloadSpec,
+}
+
+/// Parse a full run configuration (run parameters + transport +
+/// workload) from JSON text.
+pub fn parse_run_config_full(text: &str) -> Result<LoadedRunConfig> {
     let j = Json::parse(text).map_err(|e| anyhow!("config parse error: {e}"))?;
     let peers = j.get("peers").and_then(|v| v.as_usize()).unwrap_or(16);
     let byz_count = j.get("byzantine").and_then(|v| v.as_usize()).unwrap_or(0);
@@ -65,6 +199,7 @@ pub fn parse_run_config(text: &str) -> Result<RunConfig> {
         .get("verify_signatures")
         .and_then(|v| v.as_bool())
         .unwrap_or(true);
+    cfg.gossip_fanout = j.get("gossip_fanout").and_then(|v| v.as_u64()).unwrap_or(8);
     let aggregation_attack = j
         .get("aggregation_attack")
         .and_then(|v| v.as_bool())
@@ -114,6 +249,7 @@ pub fn parse_run_config(text: &str) -> Result<RunConfig> {
 
     // protocol
     let mut proto = ProtocolConfig { n0: peers, ..ProtocolConfig::default() };
+    proto.global_seed = seed;
     if let Some(p) = j.get("protocol") {
         if let Some(tau) = p.get("tau") {
             proto.tau = match tau.as_str() {
@@ -133,11 +269,25 @@ pub fn parse_run_config(text: &str) -> Result<RunConfig> {
         if let Some(c) = p.get("clip_iters").and_then(|v| v.as_usize()) {
             proto.clip_iters = c;
         }
+        if let Some(e) = p.get("clip_eps").and_then(|v| v.as_f64()) {
+            proto.clip_eps = e as f32;
+        }
+        if let Some(s) = p.get("sum_rel_tol").and_then(|v| v.as_f64()) {
+            proto.sum_rel_tol = s as f32;
+        }
+        if let Some(a) = p.get("abs_tol").and_then(|v| v.as_f64()) {
+            proto.abs_tol = a as f32;
+        }
         if let Some(t) = p.get("base_timeout_ms").and_then(|v| v.as_u64()) {
             proto.base_timeout_ms = t;
         }
+        // The run seed is the default; configs that need a different
+        // protocol seed (e.g. reproducing a programmatic RunConfig) say
+        // so explicitly.
+        if let Some(g) = p.get("global_seed").and_then(|v| v.as_u64()) {
+            proto.global_seed = g;
+        }
     }
-    proto.global_seed = seed;
     cfg.protocol = proto;
 
     // optimizer
@@ -165,14 +315,248 @@ pub fn parse_run_config(text: &str) -> Result<RunConfig> {
             other => return Err(anyhow!("unknown optimizer '{other}'")),
         };
     }
-    Ok(cfg)
+
+    // transport + workload (the cross-process handoff keys)
+    let transport = match j.get("transport") {
+        Some(t) if *t != Json::Null => {
+            let name = t
+                .as_str()
+                .ok_or_else(|| anyhow!("transport must be a string (local | socket)"))?;
+            TransportKind::from_name(name)
+                .ok_or_else(|| anyhow!("unknown transport '{name}' (local | socket)"))?
+        }
+        _ => TransportKind::Local,
+    };
+    if transport == TransportKind::Socket && !cfg.network.is_perfect() {
+        return Err(anyhow!(
+            "transport 'socket' requires a perfect network profile: fault injection lives in \
+             the local simulator; real links carry their own faults"
+        ));
+    }
+    let workload = match j.get("workload") {
+        Some(w) if *w != Json::Null => WorkloadSpec::from_json(w)?,
+        _ => {
+            // Match the CLI's default workload, seeding the dataset with
+            // the run seed exactly like `--workload mlp` does.
+            let mut w = WorkloadSpec::default_mlp();
+            if let WorkloadSpec::Mlp { seed: s, .. } = &mut w {
+                *s = seed;
+            }
+            w
+        }
+    };
+
+    Ok(LoadedRunConfig { cfg, transport, workload })
+}
+
+/// Parse just the run parameters (back-compat entry point).
+pub fn parse_run_config(text: &str) -> Result<RunConfig> {
+    parse_run_config_full(text).map(|l| l.cfg)
 }
 
 /// Load from a file path.
 pub fn load_run_config(path: &str) -> Result<RunConfig> {
+    load_run_config_full(path).map(|l| l.cfg)
+}
+
+pub fn load_run_config_full(path: &str) -> Result<LoadedRunConfig> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow!("reading config '{path}': {e}"))?;
-    parse_run_config(&text)
+    parse_run_config_full(&text)
+}
+
+fn lr_schedule_json(
+    fields: &mut Vec<(&'static str, Json)>,
+    schedule: &LrSchedule,
+    steps: u64,
+) -> Result<()> {
+    match *schedule {
+        LrSchedule::Constant(lr) => {
+            fields.push(("schedule", Json::str("constant")));
+            fields.push(("lr", Json::num(lr as f64)));
+        }
+        LrSchedule::Cosine { base, floor, total_steps } => {
+            // The parser reconstructs total_steps from the run's step
+            // count; anything else is unrepresentable.
+            if total_steps != steps {
+                return Err(anyhow!(
+                    "cosine schedule over {total_steps} steps cannot be serialized for a \
+                     {steps}-step run (the schema derives the horizon from \"steps\")"
+                ));
+            }
+            fields.push(("schedule", Json::str("cosine")));
+            fields.push(("lr", Json::num(base as f64)));
+            fields.push(("floor", Json::num(floor as f64)));
+        }
+        LrSchedule::Warmup { base, warmup } => {
+            fields.push(("schedule", Json::str("warmup")));
+            fields.push(("lr", Json::num(base as f64)));
+            fields.push(("warmup", Json::num(warmup as f64)));
+        }
+    }
+    Ok(())
+}
+
+/// Serialize a run configuration to the JSON schema `parse_run_config`
+/// reads, such that parsing it back reproduces `cfg` exactly — the
+/// contract the multi-process cluster runner depends on (the parent
+/// writes one file; every peer subprocess must provably run the same
+/// experiment). Returns an error for configurations the schema cannot
+/// express (non-contiguous Byzantine sets, artifact-backed parameter
+/// segments, n0 ≠ peers, a cosine horizon that differs from the run's
+/// step count, seeds above 2^53 that would round through JSON's f64
+/// numbers — a rounded seed would make every child process derive
+/// keypairs that don't match the parent-built roster).
+pub fn write_run_config(
+    cfg: &RunConfig,
+    transport: TransportKind,
+    workload: &WorkloadSpec,
+) -> Result<String> {
+    // JSON numbers are f64: a u64 above 2^53 rounds silently, and a
+    // rounded seed reaches the children as a *different* seed (different
+    // keypairs, different batch draws) with only a confusing
+    // roster-mismatch error to show for it. Reject up front.
+    let exact_u64 = |v: u64, key: &str| -> Result<Json> {
+        if v > (1u64 << 53) {
+            return Err(anyhow!(
+                "{key} = {v} exceeds 2^53 and cannot round-trip through JSON numbers"
+            ));
+        }
+        Ok(Json::num(v as f64))
+    };
+    let workload_seed = match *workload {
+        WorkloadSpec::Mlp { seed, .. } | WorkloadSpec::Quadratic { seed, .. } => seed,
+    };
+    exact_u64(workload_seed, "workload.seed")?;
+    let byz = cfg.byzantine.len();
+    let expected: Vec<usize> = ((cfg.n_peers - byz)..cfg.n_peers).collect();
+    if cfg.byzantine != expected {
+        return Err(anyhow!(
+            "the config schema expresses Byzantine sets as a count (the contiguous tail \
+             {expected:?}); got {:?}",
+            cfg.byzantine
+        ));
+    }
+    if !cfg.segments.is_empty() {
+        return Err(anyhow!("artifact-backed parameter segments cannot be serialized"));
+    }
+    if cfg.protocol.n0 != cfg.n_peers {
+        return Err(anyhow!(
+            "protocol.n0 ({}) != peers ({}) cannot be expressed by the schema",
+            cfg.protocol.n0,
+            cfg.n_peers
+        ));
+    }
+    if transport == TransportKind::Socket && !cfg.network.is_perfect() {
+        return Err(anyhow!("transport 'socket' requires a perfect network profile"));
+    }
+
+    let mut root: Vec<(&'static str, Json)> = vec![
+        ("peers", Json::num(cfg.n_peers as f64)),
+        ("byzantine", Json::num(byz as f64)),
+        ("steps", exact_u64(cfg.steps, "steps")?),
+        ("seed", exact_u64(cfg.seed, "seed")?),
+        ("eval_every", Json::num(cfg.eval_every as f64)),
+        ("verify_signatures", Json::Bool(cfg.verify_signatures)),
+        ("gossip_fanout", Json::num(cfg.gossip_fanout as f64)),
+        ("transport", Json::str(transport.name())),
+        ("workload", workload.to_json()),
+    ];
+    if let Some(lambda) = cfg.clip_lambda {
+        root.push(("clip_lambda", Json::num(lambda as f64)));
+    }
+
+    if let Some((spec, schedule)) = &cfg.attack {
+        let mut a: Vec<(&'static str, Json)> = vec![
+            ("kind", Json::str(&spec.canonical())),
+            ("start", exact_u64(schedule.start, "attack.start")?),
+        ];
+        if let Some(stop) = schedule.stop {
+            a.push(("stop", exact_u64(stop, "attack.stop")?));
+        }
+        if let Some((on, off)) = schedule.period {
+            a.push(("period", Json::Arr(vec![Json::num(on as f64), Json::num(off as f64)])));
+        }
+        root.push(("attack", Json::obj(a)));
+    }
+
+    let p = &cfg.protocol;
+    let tau = match p.tau {
+        TauPolicy::Infinite => Json::str("inf"),
+        TauPolicy::Fixed(v) => Json::num(v as f64),
+    };
+    root.push((
+        "protocol",
+        Json::obj(vec![
+            ("tau", tau),
+            ("validators", Json::num(p.m_validators as f64)),
+            ("delta_max", Json::num(p.delta_max as f64)),
+            ("clip_iters", Json::num(p.clip_iters as f64)),
+            ("clip_eps", Json::num(p.clip_eps as f64)),
+            ("sum_rel_tol", Json::num(p.sum_rel_tol as f64)),
+            ("abs_tol", Json::num(p.abs_tol as f64)),
+            ("base_timeout_ms", Json::num(p.base_timeout_ms as f64)),
+            ("global_seed", exact_u64(p.global_seed, "protocol.global_seed")?),
+        ]),
+    ));
+
+    let mut opt: Vec<(&'static str, Json)> = Vec::new();
+    match &cfg.opt {
+        OptSpec::Sgd { schedule, momentum, nesterov } => {
+            opt.push(("kind", Json::str("sgd")));
+            lr_schedule_json(&mut opt, schedule, cfg.steps)?;
+            opt.push(("momentum", Json::num(*momentum as f64)));
+            opt.push(("nesterov", Json::Bool(*nesterov)));
+        }
+        OptSpec::Lamb { schedule } => {
+            opt.push(("kind", Json::str("lamb")));
+            lr_schedule_json(&mut opt, schedule, cfg.steps)?;
+        }
+    }
+    root.push(("optimizer", Json::obj(opt)));
+
+    if !cfg.network.is_perfect() {
+        let nw = &cfg.network;
+        let mut fields: Vec<(&'static str, Json)> = Vec::new();
+        // Keep the preset label when it is one the parser knows; custom
+        // labels (test-only profiles) fall back to the default name, the
+        // numeric model is preserved either way.
+        if NetworkProfile::from_name(&nw.name).is_some() {
+            fields.push(("name", Json::str(&nw.name)));
+        }
+        fields.push(("drop", Json::num(nw.drop)));
+        fields.push(("max_retries", Json::num(nw.max_retries as f64)));
+        fields.push(("late_p", Json::num(nw.late_p)));
+        fields.push(("late_phases", Json::num(nw.late_phases as f64)));
+        fields.push(("straggler_frac", Json::num(nw.straggler_frac)));
+        fields.push(("straggle_p", Json::num(nw.straggle_p)));
+        fields.push((
+            "straggler_peers",
+            Json::Arr(nw.straggler_peers.iter().map(|&p| Json::num(p as f64)).collect()),
+        ));
+        fields.push(("partition_frac", Json::num(nw.partition_frac)));
+        fields.push(("partition_start", Json::num(nw.partition_start as f64)));
+        fields.push(("partition_end", Json::num(nw.partition_end as f64)));
+        fields.push((
+            "partition_peers",
+            Json::Arr(nw.partition_peers.iter().map(|&p| Json::num(p as f64)).collect()),
+        ));
+        fields.push((
+            "faulty_links",
+            Json::Arr(
+                nw.faulty_links
+                    .iter()
+                    .map(|&(a, b)| {
+                        Json::Arr(vec![Json::num(a as f64), Json::num(b as f64)])
+                    })
+                    .collect(),
+            ),
+        ));
+        fields.push(("seed", Json::num(nw.seed as f64)));
+        root.push(("network", Json::obj(fields)));
+    }
+
+    Ok(Json::obj(root).to_string_pretty())
 }
 
 #[cfg(test)]
@@ -181,12 +565,16 @@ mod tests {
 
     #[test]
     fn defaults_from_empty_object() {
-        let cfg = parse_run_config("{}").unwrap();
+        let loaded = parse_run_config_full("{}").unwrap();
+        let cfg = &loaded.cfg;
         assert_eq!(cfg.n_peers, 16);
         assert!(cfg.byzantine.is_empty());
         assert_eq!(cfg.steps, 300);
         assert!(cfg.attack.is_none());
         assert!(cfg.verify_signatures);
+        assert_eq!(cfg.gossip_fanout, 8);
+        assert_eq!(loaded.transport, TransportKind::Local);
+        assert_eq!(loaded.workload, WorkloadSpec::default_mlp());
     }
 
     #[test]
@@ -208,6 +596,7 @@ mod tests {
         assert_eq!(sched.period, Some((5, 5)));
         assert_eq!(cfg.protocol.tau, TauPolicy::Fixed(0.5));
         assert_eq!(cfg.protocol.m_validators, 2);
+        assert_eq!(cfg.protocol.global_seed, 7, "global_seed defaults to the run seed");
         assert_eq!(cfg.clip_lambda, Some(1.5));
         assert!(!cfg.verify_signatures);
         assert!(matches!(cfg.opt, OptSpec::Sgd { schedule: LrSchedule::Cosine { .. }, .. }));
@@ -235,6 +624,11 @@ mod tests {
         assert!(parse_run_config(r#"{"optimizer": {"kind": "adamw"}}"#).is_err());
         assert!(parse_run_config(r#"{"network": "bogus"}"#).is_err());
         assert!(parse_run_config(r#"{"network": {"drop": 2.0}}"#).is_err());
+        assert!(parse_run_config(r#"{"transport": "carrier-pigeon"}"#).is_err());
+        assert!(parse_run_config(r#"{"workload": {"kind": "resnet"}}"#).is_err());
+        // Sockets are perfect links; simulated faults are a local-only
+        // feature and must not be silently ignored.
+        assert!(parse_run_config(r#"{"transport": "socket", "network": "lossy"}"#).is_err());
     }
 
     #[test]
@@ -294,5 +688,141 @@ mod tests {
     fn null_attack_is_none() {
         let cfg = parse_run_config(r#"{"attack": null}"#).unwrap();
         assert!(cfg.attack.is_none());
+    }
+
+    #[test]
+    fn transport_and_workload_parse() {
+        let loaded = parse_run_config_full(
+            r#"{"transport": "socket",
+                "workload": {"kind": "quadratic", "dim": 256, "mu": 0.2, "L": 3.0,
+                              "sigma": 0.5, "seed": 11}}"#,
+        )
+        .unwrap();
+        assert_eq!(loaded.transport, TransportKind::Socket);
+        assert_eq!(
+            loaded.workload,
+            WorkloadSpec::Quadratic { dim: 256, mu: 0.2, l: 3.0, sigma: 0.5, seed: 11 }
+        );
+        // Default workload seeds the MLP dataset with the run seed, like
+        // the CLI does.
+        let loaded = parse_run_config_full(r#"{"seed": 9}"#).unwrap();
+        assert_eq!(loaded.workload, WorkloadSpec::Mlp { hidden: 64, batch: 8, seed: 9 });
+    }
+
+    /// Field-by-field equality of everything `RunConfig` carries — the
+    /// writer's round-trip contract (RunConfig itself derives no
+    /// PartialEq because of its trait-object members' neighbours).
+    fn assert_cfg_eq(a: &RunConfig, b: &RunConfig) {
+        assert_eq!(a.n_peers, b.n_peers);
+        assert_eq!(a.byzantine, b.byzantine);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.eval_every, b.eval_every);
+        assert_eq!(a.verify_signatures, b.verify_signatures);
+        assert_eq!(a.gossip_fanout, b.gossip_fanout);
+        assert_eq!(a.clip_lambda, b.clip_lambda);
+        assert_eq!(a.network, b.network);
+        assert_eq!(format!("{:?}", a.protocol), format!("{:?}", b.protocol));
+        assert_eq!(format!("{:?}", a.opt), format!("{:?}", b.opt));
+        match (&a.attack, &b.attack) {
+            (None, None) => {}
+            (Some((sa, xa)), Some((sb, xb))) => {
+                assert_eq!(sa.canonical(), sb.canonical());
+                assert_eq!(format!("{xa:?}"), format!("{xb:?}"));
+            }
+            other => panic!("attack mismatch: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn writer_roundtrips_a_cluster_config() {
+        // The exact shape `btard cluster` hands its peer subprocesses.
+        let mut cfg = RunConfig::quick(8, 4);
+        cfg.byzantine = vec![6, 7];
+        cfg.attack = Some((
+            AdversarySpec::parse("sign_flip:1000").unwrap(),
+            AttackSchedule::from_step(2),
+        ));
+        cfg.seed = 7;
+        cfg.eval_every = 2;
+        cfg.protocol.tau = TauPolicy::Fixed(1.0);
+        cfg.protocol.m_validators = 1;
+        cfg.protocol.delta_max = 4.0;
+        cfg.opt = OptSpec::Sgd {
+            schedule: LrSchedule::Constant(0.1),
+            momentum: 0.0,
+            nesterov: false,
+        };
+        let workload =
+            WorkloadSpec::Quadratic { dim: 1024, mu: 0.1, l: 2.0, sigma: 1.0, seed: 9 };
+        let text = write_run_config(&cfg, TransportKind::Socket, &workload).unwrap();
+        let loaded = parse_run_config_full(&text).unwrap();
+        assert_cfg_eq(&cfg, &loaded.cfg);
+        assert_eq!(loaded.transport, TransportKind::Socket);
+        assert_eq!(loaded.workload, workload);
+    }
+
+    #[test]
+    fn writer_roundtrips_schedules_attack_windows_and_networks() {
+        let mut cfg = RunConfig::quick(16, 50);
+        cfg.byzantine = vec![12, 13, 14, 15];
+        let mut sched = AttackSchedule::from_step(5);
+        sched.stop = Some(30);
+        sched.period = Some((3, 2));
+        cfg.attack = Some((AdversarySpec::parse("alie+false_accuse:0.25").unwrap(), sched));
+        cfg.protocol.tau = TauPolicy::Infinite;
+        cfg.opt = OptSpec::Sgd {
+            schedule: LrSchedule::Cosine { base: 0.5, floor: 0.01, total_steps: 50 },
+            momentum: 0.9,
+            nesterov: true,
+        };
+        cfg.clip_lambda = Some(2.0);
+        cfg.network = NetworkProfile::from_name("lossy:0.07").unwrap();
+        let text = write_run_config(&cfg, TransportKind::Local, &WorkloadSpec::default_mlp())
+            .unwrap();
+        let loaded = parse_run_config_full(&text).unwrap();
+        assert_cfg_eq(&cfg, &loaded.cfg);
+
+        // Lamb + warmup too.
+        let mut cfg = RunConfig::quick(4, 10);
+        cfg.opt = OptSpec::Lamb { schedule: LrSchedule::Warmup { base: 0.004, warmup: 3 } };
+        let text = write_run_config(&cfg, TransportKind::Local, &WorkloadSpec::default_mlp())
+            .unwrap();
+        assert_cfg_eq(&cfg, &parse_run_config(&text).unwrap());
+    }
+
+    #[test]
+    fn writer_rejects_unrepresentable_configs() {
+        // Non-contiguous Byzantine set.
+        let mut cfg = RunConfig::quick(8, 4);
+        cfg.byzantine = vec![2, 7];
+        assert!(
+            write_run_config(&cfg, TransportKind::Local, &WorkloadSpec::default_mlp()).is_err()
+        );
+        // Socket transport under a faulty network profile.
+        let mut cfg = RunConfig::quick(8, 4);
+        cfg.network = NetworkProfile::from_name("lossy").unwrap();
+        assert!(
+            write_run_config(&cfg, TransportKind::Socket, &WorkloadSpec::default_mlp()).is_err()
+        );
+        // A cosine horizon detached from the run's step count (the
+        // shortened-smoke pattern) is an Err, not a parent-process panic.
+        let mut cfg = RunConfig::quick(8, 4);
+        cfg.opt = OptSpec::Sgd {
+            schedule: LrSchedule::Cosine { base: 0.5, floor: 0.01, total_steps: 300 },
+            momentum: 0.9,
+            nesterov: true,
+        };
+        assert!(
+            write_run_config(&cfg, TransportKind::Local, &WorkloadSpec::default_mlp()).is_err()
+        );
+        // A seed above 2^53 would round through JSON's f64 numbers and
+        // reach the children as a different seed (keypairs that no
+        // longer match the roster): refused, not rounded.
+        let mut cfg = RunConfig::quick(8, 4);
+        cfg.seed = (1u64 << 53) + 1;
+        assert!(
+            write_run_config(&cfg, TransportKind::Socket, &WorkloadSpec::default_mlp()).is_err()
+        );
     }
 }

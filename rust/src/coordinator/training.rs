@@ -234,8 +234,9 @@ fn exec_mode_from_env() -> ExecMode {
 /// `withhold:<peer>` naming a peer outside the run would silently
 /// withhold from nobody — a typo'd attack spec must not silently run a
 /// no-attack experiment (the spec parser can't know `n_peers`; this is
-/// the first place that does).
-fn validate_attack_spec(cfg: &RunConfig) {
+/// the first place that does). Public because every run entry point —
+/// including a standalone `btard peer` process — must apply it.
+pub fn validate_attack_spec(cfg: &RunConfig) {
     if let Some((spec, _)) = &cfg.attack {
         for part in &spec.parts {
             if let SurfaceSpec::Withhold { from } = part {
@@ -266,8 +267,11 @@ fn validate_attack_spec(cfg: &RunConfig) {
 }
 
 /// BTARD-CLIPPED-SGD wraps the source so validators recompute the same
-/// clipped vectors (Algorithm 9); plain BTARD passes it through.
-fn wrap_source(cfg: &RunConfig, source: Arc<dyn GradientSource>) -> Arc<dyn GradientSource> {
+/// clipped vectors (Algorithm 9); plain BTARD passes it through. Every
+/// run entry point — both in-process loops and a standalone
+/// `btard peer` process — must apply the same wrapping, or clipped runs
+/// would diverge across execution models.
+pub fn prepare_source(cfg: &RunConfig, source: Arc<dyn GradientSource>) -> Arc<dyn GradientSource> {
     match cfg.clip_lambda {
         Some(lambda) => Arc::new(ClippedSource {
             inner: source,
@@ -307,7 +311,7 @@ pub fn run_btard_threaded(cfg: &RunConfig, source: Arc<dyn GradientSource>) -> R
     assert!(!cfg.byzantine.contains(&0), "peer 0 must stay honest (metrics)");
     assert!(cfg.n_peers >= 2);
     validate_attack_spec(cfg);
-    let source = wrap_source(cfg, source);
+    let source = prepare_source(cfg, source);
     let init_params = source.init_params(cfg.seed);
     let transports = build_transports(
         cfg.n_peers,
@@ -618,7 +622,7 @@ pub fn run_btard_pooled(
     assert!(!cfg.byzantine.contains(&0), "peer 0 must stay honest (metrics)");
     assert!(cfg.n_peers >= 2);
     validate_attack_spec(cfg);
-    let source = wrap_source(cfg, source);
+    let source = prepare_source(cfg, source);
     let init_params = source.init_params(cfg.seed);
     let transports = build_transports(
         cfg.n_peers,
@@ -788,17 +792,21 @@ pub fn run_btard_pooled(
     result
 }
 
-struct PeerOutput {
-    metrics: Vec<StepMetric>,
-    ban_events: Vec<BanEvent>,
-    final_params: Vec<f32>,
-    final_metric: f64,
-    recomputes: u64,
-    steps_done: u64,
+/// What one peer's run produces, before cluster-level merging. For the
+/// in-process loops only peer 0's output becomes the `RunResult`; a
+/// multi-process cluster writes each peer's output to disk
+/// (`harness::cluster::PeerReport`) and merges afterwards.
+pub struct PeerOutput {
+    pub metrics: Vec<StepMetric>,
+    pub ban_events: Vec<BanEvent>,
+    pub final_params: Vec<f32>,
+    pub final_metric: f64,
+    pub recomputes: u64,
+    pub steps_done: u64,
 }
 
 impl PeerOutput {
-    fn into_result(self) -> RunResult {
+    pub fn into_result(self) -> RunResult {
         RunResult {
             metrics: self.metrics,
             ban_events: self.ban_events,
@@ -858,7 +866,16 @@ fn build_peer_ctx(
     }
 }
 
-fn peer_main(
+/// One peer's whole training run over an already-built transport
+/// endpoint: the entry point a peer *process* uses. The in-process
+/// threaded model calls it once per peer thread; `btard peer` calls it
+/// exactly once with a `SocketNet` endpoint (blocking receives — there
+/// is no cross-process stage barrier, so drain mode's never-block
+/// contract cannot hold over sockets). `source` must already be
+/// `prepare_source`-wrapped and `cfg` `validate_attack_spec`-checked;
+/// `init_params` must be `source.init_params(cfg.seed)` so every
+/// process provably starts from the same parameters.
+pub fn peer_main(
     net: Box<dyn Transport>,
     cfg: RunConfig,
     source: Arc<dyn GradientSource>,

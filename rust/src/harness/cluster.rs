@@ -1,0 +1,800 @@
+//! Multi-process cluster runner: fork N `btard peer` subprocesses over a
+//! loopback TCP mesh, wait, merge their per-peer metrics, and prove the
+//! whole exercise changed nothing — a perfect-link socket run of a
+//! config produces a metrics digest **bit-identical** to the in-process
+//! pooled run of the same config.
+//!
+//! The moving parts:
+//!
+//! - [`run_digest`] — the canonical digest over every deterministic
+//!   member of a [`RunResult`] (also the golden-metrics gate's digest,
+//!   `rust/tests/golden_metrics.rs`; one implementation, or the two
+//!   proofs would drift apart).
+//! - [`PeerReport`] — what each peer process writes to disk. Floats are
+//!   serialized as hex bit patterns (`f32::to_bits`), not decimal: JSON
+//!   numbers are f64 and the digest is bitwise, so lossy formatting
+//!   anywhere in the pipeline would break the proof.
+//! - [`merge_reports`] — peer 0 carries the metric series, ban events
+//!   and final parameters (it is the designated recorder, as
+//!   in-process); every peer contributes its own traffic row and
+//!   recompute count, exactly like the in-process loops aggregate them.
+//! - [`run_cluster`] — the parent: writes the run config
+//!   (`runconfig::write_run_config`, so every subprocess provably runs
+//!   the same experiment), forks peers in *rendezvous* mode (each child
+//!   binds an ephemeral loopback port and publishes `addr_<id>`; the
+//!   parent assembles and atomically publishes `roster.json`; children
+//!   pick it up and build the mesh — no port-reservation races), waits,
+//!   merges, and writes the combined CSV + summary.
+//! - [`run_peer`] — one peer process's whole life, also reachable with a
+//!   pre-written roster file (`btard peer --roster`) for real LAN runs
+//!   where no parent process exists.
+
+use crate::coordinator::accuse::BanEvent;
+use crate::coordinator::attacks::CollusionBoard;
+use crate::coordinator::messages::BanReason;
+use crate::coordinator::runconfig::{
+    write_run_config, LoadedRunConfig, TransportKind, WorkloadSpec,
+};
+use crate::coordinator::training::{
+    peer_main, prepare_source, run_btard_pooled, validate_attack_spec, RunConfig, RunResult,
+    StepMetric,
+};
+use crate::net::socket::{bind_ephemeral, derive_keypair, SocketConfig, SocketNet};
+use crate::net::{PeerId, Roster, RosterEntry, Transport};
+use crate::util::csv::{format_f64, CsvWriter};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Canonical metrics digest
+// ---------------------------------------------------------------------------
+
+/// Serialize every deterministic member of a [`RunResult`] into a
+/// SHA-256 hex digest: final params, per-step losses/metrics/bans, ban
+/// events, per-peer traffic and recompute counters. Wall-clock timing
+/// fields are deliberately excluded. This is the equality the golden
+/// test pins and the cluster-smoke CI job diffs across the process
+/// boundary.
+pub fn run_digest(res: &RunResult) -> String {
+    let mut bytes: Vec<u8> = Vec::new();
+    bytes.extend_from_slice(&res.steps_done.to_le_bytes());
+    bytes.extend_from_slice(&res.recomputes.to_le_bytes());
+    bytes.extend_from_slice(&res.final_metric.to_bits().to_le_bytes());
+    for p in &res.final_params {
+        bytes.extend_from_slice(&p.to_bits().to_le_bytes());
+    }
+    for m in &res.metrics {
+        bytes.extend_from_slice(&m.step.to_le_bytes());
+        bytes.extend_from_slice(&m.loss.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&m.metric.to_bits().to_le_bytes());
+        for b in &m.banned_now {
+            bytes.extend_from_slice(&(*b as u64).to_le_bytes());
+        }
+    }
+    for ev in &res.ban_events {
+        bytes.extend_from_slice(&ev.step.to_le_bytes());
+        bytes.extend_from_slice(&(ev.target as u64).to_le_bytes());
+        bytes.extend_from_slice(&(ev.by as u64).to_le_bytes());
+        bytes.extend_from_slice(ev.reason.name().as_bytes());
+    }
+    for b in &res.peer_bytes {
+        bytes.extend_from_slice(&b.to_le_bytes());
+    }
+    crate::util::hex(&crate::crypto::sha256(&bytes))
+}
+
+/// The in-process pooled run of the same config, reduced to its digest —
+/// the reference a socket cluster must reproduce bit-for-bit. The worker
+/// count is irrelevant to the result (pinned by
+/// `pooled_worker_count_does_not_change_results`); 4 keeps the check
+/// cheap on small CI runners.
+pub fn inprocess_digest(cfg: &RunConfig, workload: &WorkloadSpec) -> String {
+    run_digest(&run_btard_pooled(cfg, workload.build(), 4))
+}
+
+// ---------------------------------------------------------------------------
+// Per-peer reports (bit-exact JSON)
+// ---------------------------------------------------------------------------
+
+fn f32_slice_hex(vals: &[f32]) -> String {
+    let mut out = String::with_capacity(vals.len() * 8);
+    for v in vals {
+        out.push_str(&format!("{:08x}", v.to_bits()));
+    }
+    out
+}
+
+fn f32_slice_unhex(s: &str) -> Result<Vec<f32>, String> {
+    // Byte-offset slicing below panics on non-char boundaries, so a
+    // corrupted report with a multi-byte character must be rejected as
+    // the Err it is, not a parent-process panic.
+    if !s.is_ascii() || s.len() % 8 != 0 {
+        return Err("malformed f32 bit string (want 8 ASCII hex chars per value)".to_string());
+    }
+    (0..s.len() / 8)
+        .map(|i| {
+            u32::from_str_radix(&s[8 * i..8 * i + 8], 16)
+                .map(f32::from_bits)
+                .map_err(|_| "malformed f32 bit string".to_string())
+        })
+        .collect()
+}
+
+fn f64_hex(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn f64_unhex(s: &str) -> Result<f64, String> {
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|_| format!("malformed f64 bit string '{s}'"))
+}
+
+/// One peer process's contribution to the cluster result. Only peer 0
+/// carries the metric series / ban events / final parameters (it is the
+/// designated recorder); every peer carries its own traffic total and
+/// recompute count.
+#[derive(Debug, Clone)]
+pub struct PeerReport {
+    pub id: PeerId,
+    pub steps_done: u64,
+    pub recomputes: u64,
+    /// Total bytes this peer's transport recorded for its own sends —
+    /// the multi-process equivalent of the shared TrafficStats row.
+    pub own_bytes: u64,
+    pub final_metric: f64,
+    pub final_params: Vec<f32>,
+    pub metrics: Vec<StepMetric>,
+    pub ban_events: Vec<BanEvent>,
+}
+
+impl PeerReport {
+    pub fn from_output(
+        id: PeerId,
+        out: crate::coordinator::training::PeerOutput,
+        own_bytes: u64,
+    ) -> PeerReport {
+        PeerReport {
+            id,
+            steps_done: out.steps_done,
+            recomputes: out.recomputes,
+            own_bytes,
+            final_metric: out.final_metric,
+            final_params: out.final_params,
+            metrics: out.metrics,
+            ban_events: out.ban_events,
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        let metrics: Vec<Json> = self
+            .metrics
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("step", Json::num(m.step as f64)),
+                    ("loss_bits", Json::str(&format!("{:08x}", m.loss.to_bits()))),
+                    ("metric_bits", Json::str(&f64_hex(m.metric))),
+                    (
+                        "banned",
+                        Json::Arr(m.banned_now.iter().map(|&p| Json::num(p as f64)).collect()),
+                    ),
+                    ("wall_s", Json::num(m.step_wall_s)),
+                ])
+            })
+            .collect();
+        let bans: Vec<Json> = self
+            .ban_events
+            .iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("step", Json::num(b.step as f64)),
+                    ("target", Json::num(b.target as f64)),
+                    ("by", Json::num(b.by as f64)),
+                    ("reason", Json::num(b.reason as u8 as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("steps_done", Json::num(self.steps_done as f64)),
+            ("recomputes", Json::num(self.recomputes as f64)),
+            ("own_bytes", Json::num(self.own_bytes as f64)),
+            ("final_metric_bits", Json::str(&f64_hex(self.final_metric))),
+            ("final_params_bits", Json::str(&f32_slice_hex(&self.final_params))),
+            ("metrics", Json::Arr(metrics)),
+            ("bans", Json::Arr(bans)),
+        ])
+        .to_string_pretty()
+    }
+
+    pub fn parse(text: &str) -> Result<PeerReport, String> {
+        let j = Json::parse(text)?;
+        let need_u64 = |key: &str| -> Result<u64, String> {
+            j.get(key)
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| format!("peer report missing integer '{key}'"))
+        };
+        let need_str = |key: &str| -> Result<&str, String> {
+            j.get(key)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| format!("peer report missing string '{key}'"))
+        };
+        let mut metrics = Vec::new();
+        for m in j
+            .get("metrics")
+            .and_then(|v| v.as_arr())
+            .ok_or("peer report missing 'metrics' array")?
+        {
+            let banned = m
+                .get("banned")
+                .and_then(|v| v.as_arr())
+                .ok_or("metric row missing 'banned'")?
+                .iter()
+                .map(|p| p.as_usize().ok_or("banned entries must be integers"))
+                .collect::<Result<Vec<_>, _>>()?;
+            let loss_bits = m
+                .get("loss_bits")
+                .and_then(|v| v.as_str())
+                .ok_or("metric row missing 'loss_bits'")?;
+            let loss = u32::from_str_radix(loss_bits, 16)
+                .map(f32::from_bits)
+                .map_err(|_| "malformed loss_bits".to_string())?;
+            let metric = f64_unhex(
+                m.get("metric_bits")
+                    .and_then(|v| v.as_str())
+                    .ok_or("metric row missing 'metric_bits'")?,
+            )?;
+            metrics.push(StepMetric {
+                step: m
+                    .get("step")
+                    .and_then(|v| v.as_u64())
+                    .ok_or("metric row missing 'step'")?,
+                loss,
+                metric,
+                banned_now: banned,
+                step_wall_s: m.get("wall_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                grad_s: 0.0,
+                clip_s: 0.0,
+                mprng_s: 0.0,
+                verify_s: 0.0,
+                comm_s: 0.0,
+                validate_s: 0.0,
+            });
+        }
+        let mut ban_events = Vec::new();
+        for b in j
+            .get("bans")
+            .and_then(|v| v.as_arr())
+            .ok_or("peer report missing 'bans' array")?
+        {
+            let reason_byte = b
+                .get("reason")
+                .and_then(|v| v.as_u64())
+                .ok_or("ban row missing 'reason'")? as u8;
+            ban_events.push(BanEvent {
+                step: b.get("step").and_then(|v| v.as_u64()).ok_or("ban row missing 'step'")?,
+                target: b
+                    .get("target")
+                    .and_then(|v| v.as_usize())
+                    .ok_or("ban row missing 'target'")?,
+                by: b.get("by").and_then(|v| v.as_usize()).ok_or("ban row missing 'by'")?,
+                reason: BanReason::from_u8(reason_byte)
+                    .ok_or_else(|| format!("unknown ban reason byte {reason_byte}"))?,
+            });
+        }
+        Ok(PeerReport {
+            id: need_u64("id")? as PeerId,
+            steps_done: need_u64("steps_done")?,
+            recomputes: need_u64("recomputes")?,
+            own_bytes: need_u64("own_bytes")?,
+            final_metric: f64_unhex(need_str("final_metric_bits")?)?,
+            final_params: f32_slice_unhex(need_str("final_params_bits")?)?,
+            metrics,
+            ban_events,
+        })
+    }
+
+    /// Atomic save (tmp + rename), like the roster.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        crate::util::atomic_write(path, &self.to_json())
+    }
+
+    pub fn load(path: &Path) -> Result<PeerReport, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading peer report '{}': {e}", path.display()))?;
+        PeerReport::parse(&text)
+    }
+}
+
+/// Merge per-process reports into the `RunResult` the in-process loops
+/// would have produced: peer 0's series and parameters, everyone's
+/// traffic rows, recomputes summed cluster-wide.
+pub fn merge_reports(n_peers: usize, mut reports: Vec<PeerReport>) -> Result<RunResult, String> {
+    if reports.len() != n_peers {
+        return Err(format!("expected {n_peers} peer reports, got {}", reports.len()));
+    }
+    reports.sort_by_key(|r| r.id);
+    for (k, r) in reports.iter().enumerate() {
+        if r.id != k {
+            return Err(format!("peer reports are not the contiguous range 0..{n_peers}"));
+        }
+    }
+    let peer_bytes: Vec<u64> = reports.iter().map(|r| r.own_bytes).collect();
+    let recomputes: u64 = reports.iter().map(|r| r.recomputes).sum();
+    let p0 = &mut reports[0];
+    Ok(RunResult {
+        metrics: std::mem::take(&mut p0.metrics),
+        ban_events: std::mem::take(&mut p0.ban_events),
+        final_params: std::mem::take(&mut p0.final_params),
+        final_metric: p0.final_metric,
+        peer_bytes,
+        recomputes,
+        steps_done: p0.steps_done,
+        net_faults: vec![],
+    })
+}
+
+// ---------------------------------------------------------------------------
+// One peer process
+// ---------------------------------------------------------------------------
+
+/// How a peer process learns the roster.
+pub enum PeerEndpoint<'a> {
+    /// Pre-written roster file (fixed addresses — real LAN deployments).
+    Roster(&'a Path),
+    /// Rendezvous directory: bind an ephemeral loopback port, publish
+    /// `addr_<id>`, and wait for the parent to publish `roster.json`.
+    Rendezvous(&'a Path),
+}
+
+fn atomic_write(path: &Path, content: &str) -> Result<(), String> {
+    crate::util::atomic_write(path, content)
+        .map_err(|e| format!("writing {}: {e}", path.display()))
+}
+
+/// One peer process's whole life: derive this run's keypair, find the
+/// roster, build the socket mesh, run the training loop, and return the
+/// report the parent merges. This is the body of `btard peer`.
+pub fn run_peer(
+    loaded: &LoadedRunConfig,
+    id: PeerId,
+    endpoint: PeerEndpoint<'_>,
+    connect_timeout: Duration,
+) -> Result<PeerReport, String> {
+    let cfg = &loaded.cfg;
+    if loaded.transport != TransportKind::Socket {
+        return Err("btard peer needs a config with \"transport\": \"socket\"".to_string());
+    }
+    if id >= cfg.n_peers {
+        return Err(format!("--id {id} outside the {}-peer config", cfg.n_peers));
+    }
+    let mont = crate::crypto::Mont::new();
+    let secret = derive_keypair(&mont, cfg.seed, id);
+
+    let (listener, roster) = match endpoint {
+        PeerEndpoint::Roster(path) => {
+            let roster = Roster::load(path)?;
+            if roster.n() != cfg.n_peers {
+                return Err(format!(
+                    "roster has {} peers but the config says {}",
+                    roster.n(),
+                    cfg.n_peers
+                ));
+            }
+            let addr = &roster.peers[id].addr;
+            let listener = std::net::TcpListener::bind(addr)
+                .map_err(|e| format!("binding {addr}: {e}"))?;
+            (listener, roster)
+        }
+        PeerEndpoint::Rendezvous(dir) => {
+            let (listener, addr) = bind_ephemeral().map_err(|e| format!("binding: {e}"))?;
+            atomic_write(&dir.join(format!("addr_{id}")), &addr)?;
+            let roster_path = dir.join("roster.json");
+            let deadline = Instant::now() + connect_timeout;
+            let roster = loop {
+                if roster_path.exists() {
+                    break Roster::load(&roster_path)?;
+                }
+                if Instant::now() >= deadline {
+                    return Err(format!(
+                        "rendezvous timed out waiting for {}",
+                        roster_path.display()
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            };
+            if roster.n() != cfg.n_peers {
+                return Err(format!(
+                    "rendezvous roster has {} peers but the config says {}",
+                    roster.n(),
+                    cfg.n_peers
+                ));
+            }
+            if roster.peers[id].addr != addr {
+                return Err(format!(
+                    "rendezvous roster lists a different address for peer {id} \
+                     ({} vs our {addr})",
+                    roster.peers[id].addr
+                ));
+            }
+            (listener, roster)
+        }
+    };
+    if roster.peers[id].pubkey != secret.public {
+        return Err(format!(
+            "roster pubkey for peer {id} does not match the seed-derived keypair \
+             (is the roster from a different run seed?)"
+        ));
+    }
+
+    let scfg = SocketConfig {
+        gossip_fanout: cfg.gossip_fanout,
+        verify_signatures: cfg.verify_signatures,
+        connect_timeout,
+        ..SocketConfig::default()
+    };
+    let net = SocketNet::connect(listener, &roster, id, secret, &scfg)
+        .map_err(|e| format!("building the socket mesh: {e}"))?;
+    let info = net.info().clone();
+
+    validate_attack_spec(cfg);
+    let source = prepare_source(cfg, loaded.workload.build());
+    let init_params = source.init_params(cfg.seed);
+    let board = CollusionBoard::new();
+    let out = peer_main(Box::new(net), cfg.clone(), source, init_params, board);
+    let own_bytes = info.stats.total_bytes(id);
+    Ok(PeerReport::from_output(id, out, own_bytes))
+}
+
+// ---------------------------------------------------------------------------
+// The parent: fork, rendezvous, wait, merge
+// ---------------------------------------------------------------------------
+
+pub struct ClusterOptions {
+    /// Working directory: config, roster, logs, per-peer reports and the
+    /// merged CSVs all land here.
+    pub out_dir: PathBuf,
+    /// The `btard` binary to fork (`std::env::current_exe()` in the CLI).
+    pub bin: PathBuf,
+    /// Budget for rendezvous + mesh build.
+    pub connect_timeout: Duration,
+    /// Budget for the training run itself (children are killed past it —
+    /// a hung peer must fail CI, not hang it).
+    pub run_timeout: Duration,
+}
+
+pub struct ClusterOutcome {
+    pub result: RunResult,
+    pub digest: String,
+    pub csv_path: PathBuf,
+    pub summary_path: PathBuf,
+    pub roster_path: PathBuf,
+}
+
+/// Last portion of a child's log, for error reports.
+fn log_tail(path: &Path) -> String {
+    match std::fs::read_to_string(path) {
+        Ok(text) => {
+            let tail: String = text
+                .lines()
+                .rev()
+                .take(12)
+                .collect::<Vec<_>>()
+                .into_iter()
+                .rev()
+                .collect::<Vec<_>>()
+                .join("\n");
+            tail
+        }
+        Err(_) => String::from("<no log>"),
+    }
+}
+
+/// Fork an N-peer loopback cluster of `btard peer` subprocesses, wait
+/// for completion, merge the reports, and write the combined artifacts.
+pub fn run_cluster(
+    cfg: &RunConfig,
+    workload: &WorkloadSpec,
+    opts: &ClusterOptions,
+) -> Result<ClusterOutcome, String> {
+    let n = cfg.n_peers;
+    std::fs::create_dir_all(&opts.out_dir)
+        .map_err(|e| format!("creating {}: {e}", opts.out_dir.display()))?;
+    // Clear any previous run's rendezvous artifacts: a stale roster.json
+    // would be loaded by the new children the instant they start polling
+    // (their fresh ephemeral addresses won't match and every child exits),
+    // and a stale addr_<k> could hand the parent a dead port.
+    for k in 0..n {
+        let _ = std::fs::remove_file(opts.out_dir.join(format!("addr_{k}")));
+        let _ = std::fs::remove_file(opts.out_dir.join(format!("peer_{k}.json")));
+    }
+    let _ = std::fs::remove_file(opts.out_dir.join("roster.json"));
+    // One config file for every subprocess: the round-trip through
+    // write_run_config/parse_run_config is what makes "every peer runs
+    // the same experiment" a checked property instead of a hope.
+    let config_json = write_run_config(cfg, TransportKind::Socket, workload)
+        .map_err(|e| format!("serializing the run config: {e}"))?;
+    let config_path = opts.out_dir.join("config.json");
+    atomic_write(&config_path, &config_json)?;
+
+    // Spawn the peers in rendezvous mode, logs to per-peer files.
+    let mut children = Vec::with_capacity(n);
+    let mut log_paths = Vec::with_capacity(n);
+    for k in 0..n {
+        let log_path = opts.out_dir.join(format!("peer_{k}.log"));
+        let log = std::fs::File::create(&log_path)
+            .map_err(|e| format!("creating {}: {e}", log_path.display()))?;
+        let log_err = log.try_clone().map_err(|e| format!("cloning log handle: {e}"))?;
+        let child = std::process::Command::new(&opts.bin)
+            .arg("peer")
+            .arg("--id")
+            .arg(k.to_string())
+            .arg("--config")
+            .arg(&config_path)
+            .arg("--rendezvous")
+            .arg(&opts.out_dir)
+            .arg("--out")
+            .arg(opts.out_dir.join(format!("peer_{k}.json")))
+            .arg("--connect-timeout-ms")
+            .arg(opts.connect_timeout.as_millis().to_string())
+            .stdout(std::process::Stdio::from(log))
+            .stderr(std::process::Stdio::from(log_err))
+            .spawn()
+            .map_err(|e| format!("spawning peer {k} ({}): {e}", opts.bin.display()))?;
+        children.push(child);
+        log_paths.push(log_path);
+    }
+    let kill_all = |children: &mut Vec<std::process::Child>| {
+        for c in children.iter_mut() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    };
+
+    // Rendezvous: collect every child's ephemeral address, then publish
+    // the roster (atomically — children poll for the final name only).
+    let deadline = Instant::now() + opts.connect_timeout;
+    let mut addrs: Vec<Option<String>> = vec![None; n];
+    while addrs.iter().any(|a| a.is_none()) {
+        for (k, slot) in addrs.iter_mut().enumerate() {
+            if slot.is_none() {
+                if let Ok(text) = std::fs::read_to_string(opts.out_dir.join(format!("addr_{k}")))
+                {
+                    *slot = Some(text.trim().to_string());
+                }
+            }
+        }
+        // A child that died before publishing its address would stall the
+        // rendezvous until the deadline; surface its log now instead.
+        let mut failed = None;
+        for (k, child) in children.iter_mut().enumerate() {
+            if let Ok(Some(status)) = child.try_wait() {
+                if !status.success() {
+                    failed = Some((k, status));
+                    break;
+                }
+            }
+        }
+        if let Some((k, status)) = failed {
+            let tail = log_tail(&log_paths[k]);
+            kill_all(&mut children);
+            return Err(format!("peer {k} exited with {status} during rendezvous:\n{tail}"));
+        }
+        if addrs.iter().any(|a| a.is_none()) {
+            if Instant::now() >= deadline {
+                kill_all(&mut children);
+                return Err("rendezvous timed out waiting for peer addresses".to_string());
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+    let mont = crate::crypto::Mont::new();
+    let roster = Roster {
+        peers: (0..n)
+            .map(|k| RosterEntry {
+                id: k,
+                addr: addrs[k].clone().unwrap(),
+                pubkey: derive_keypair(&mont, cfg.seed, k).public,
+            })
+            .collect(),
+    };
+    let roster_path = opts.out_dir.join("roster.json");
+    roster
+        .save(&roster_path)
+        .map_err(|e| format!("writing {}: {e}", roster_path.display()))?;
+
+    // Wait for the run, with a hard budget.
+    let run_deadline = Instant::now() + opts.run_timeout;
+    let mut statuses: Vec<Option<std::process::ExitStatus>> = vec![None; n];
+    while statuses.iter().any(|s| s.is_none()) {
+        let mut wait_err = None;
+        for (k, child) in children.iter_mut().enumerate() {
+            if statuses[k].is_none() {
+                match child.try_wait() {
+                    Ok(status) => statuses[k] = status,
+                    Err(e) => {
+                        wait_err = Some(format!("waiting for peer {k}: {e}"));
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(e) = wait_err {
+            // Never leak detached training processes: with no parent
+            // left, nothing would enforce the run budget.
+            kill_all(&mut children);
+            return Err(e);
+        }
+        if statuses.iter().any(|s| s.is_none()) {
+            if Instant::now() >= run_deadline {
+                kill_all(&mut children);
+                return Err(format!(
+                    "cluster run exceeded its {}s budget; killed the remaining peers",
+                    opts.run_timeout.as_secs()
+                ));
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+    for (k, status) in statuses.iter().enumerate() {
+        let status = status.unwrap();
+        if !status.success() {
+            return Err(format!(
+                "peer {k} exited with {status}:\n{}",
+                log_tail(&log_paths[k])
+            ));
+        }
+    }
+
+    // Merge and write the combined artifacts.
+    let reports: Vec<PeerReport> = (0..n)
+        .map(|k| PeerReport::load(&opts.out_dir.join(format!("peer_{k}.json"))))
+        .collect::<Result<_, _>>()?;
+    let per_peer: Vec<(u64, u64, u64)> =
+        reports.iter().map(|r| (r.own_bytes, r.steps_done, r.recomputes)).collect();
+    let result = merge_reports(n, reports)?;
+    let digest = run_digest(&result);
+
+    let csv_path = opts.out_dir.join("cluster_metrics.csv");
+    let mut w = CsvWriter::create(&csv_path, &["step", "loss", "metric", "banned", "wall_s"])
+        .map_err(|e| format!("writing {}: {e}", csv_path.display()))?;
+    for m in &result.metrics {
+        w.row(&[
+            m.step.to_string(),
+            format_f64(m.loss as f64),
+            if m.metric.is_nan() { String::new() } else { format_f64(m.metric) },
+            m.banned_now.iter().map(|p| p.to_string()).collect::<Vec<_>>().join(";"),
+            format_f64(m.step_wall_s),
+        ])
+        .map_err(|e| format!("writing metrics row: {e}"))?;
+    }
+    w.flush().map_err(|e| format!("flushing metrics csv: {e}"))?;
+
+    let peers_csv = opts.out_dir.join("cluster_peers.csv");
+    let mut w = CsvWriter::create(&peers_csv, &["peer", "bytes_sent", "steps_done", "recomputes"])
+        .map_err(|e| format!("writing {}: {e}", peers_csv.display()))?;
+    for (k, (bytes, steps, recomputes)) in per_peer.iter().enumerate() {
+        w.row(&[k.to_string(), bytes.to_string(), steps.to_string(), recomputes.to_string()])
+            .map_err(|e| format!("writing peer row: {e}"))?;
+    }
+    w.flush().map_err(|e| format!("flushing peers csv: {e}"))?;
+
+    let summary_path = opts.out_dir.join("cluster_summary.json");
+    let bans: Vec<Json> = result
+        .ban_events
+        .iter()
+        .map(|b| {
+            Json::obj(vec![
+                ("step", Json::num(b.step as f64)),
+                ("target", Json::num(b.target as f64)),
+                ("reason", Json::str(b.reason.name())),
+            ])
+        })
+        .collect();
+    let summary = Json::obj(vec![
+        ("n_peers", Json::num(n as f64)),
+        ("digest", Json::str(&digest)),
+        ("steps_done", Json::num(result.steps_done as f64)),
+        // NaN (no eval fired) would serialize as a bare `NaN` token and
+        // make the whole summary unparseable; null is the JSON for it.
+        (
+            "final_metric",
+            if result.final_metric.is_nan() {
+                Json::Null
+            } else {
+                Json::num(result.final_metric)
+            },
+        ),
+        ("bans", Json::Arr(bans)),
+    ]);
+    atomic_write(&summary_path, &summary.to_string_pretty())?;
+
+    Ok(ClusterOutcome { result, digest, csv_path, summary_path, roster_path })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::BanReason;
+
+    fn sample_report(id: PeerId) -> PeerReport {
+        PeerReport {
+            id,
+            steps_done: 3,
+            recomputes: id as u64,
+            own_bytes: 1000 + id as u64,
+            final_metric: if id == 0 { 0.125 } else { f64::NAN },
+            final_params: if id == 0 { vec![1.5, -0.25, f32::MIN_POSITIVE] } else { vec![] },
+            metrics: if id == 0 {
+                vec![StepMetric {
+                    step: 0,
+                    loss: 0.75,
+                    metric: f64::NAN,
+                    banned_now: vec![2],
+                    step_wall_s: 0.01,
+                    grad_s: 0.0,
+                    clip_s: 0.0,
+                    mprng_s: 0.0,
+                    verify_s: 0.0,
+                    comm_s: 0.0,
+                    validate_s: 0.0,
+                }]
+            } else {
+                vec![]
+            },
+            ban_events: if id == 0 {
+                vec![BanEvent { step: 0, target: 2, reason: BanReason::GradientMismatch, by: 1 }]
+            } else {
+                vec![]
+            },
+        }
+    }
+
+    #[test]
+    fn peer_report_roundtrips_bit_exactly() {
+        // NaN metrics and subnormal params must survive the JSON hop:
+        // the digest is over bit patterns, not values.
+        let report = sample_report(0);
+        let parsed = PeerReport::parse(&report.to_json()).unwrap();
+        assert_eq!(parsed.id, report.id);
+        assert_eq!(parsed.final_metric.to_bits(), report.final_metric.to_bits());
+        assert_eq!(parsed.final_params.len(), report.final_params.len());
+        for (a, b) in parsed.final_params.iter().zip(&report.final_params) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(parsed.metrics.len(), 1);
+        assert_eq!(parsed.metrics[0].loss.to_bits(), report.metrics[0].loss.to_bits());
+        assert_eq!(parsed.metrics[0].metric.to_bits(), report.metrics[0].metric.to_bits());
+        assert_eq!(parsed.metrics[0].banned_now, vec![2]);
+        assert_eq!(parsed.ban_events, report.ban_events);
+        assert_eq!(parsed.own_bytes, report.own_bytes);
+    }
+
+    #[test]
+    fn merged_reports_reproduce_the_run_result_digest() {
+        let reports: Vec<PeerReport> = (0..3).map(sample_report).collect();
+        let merged = merge_reports(3, reports.clone()).unwrap();
+        assert_eq!(merged.peer_bytes, vec![1000, 1001, 1002]);
+        assert_eq!(merged.recomputes, 3, "recomputes sum cluster-wide");
+        assert_eq!(merged.steps_done, 3);
+        assert_eq!(merged.ban_events.len(), 1);
+        // The digest is stable across the serialize → parse → merge hop.
+        let rehop: Vec<PeerReport> = reports
+            .iter()
+            .map(|r| PeerReport::parse(&r.to_json()).unwrap())
+            .collect();
+        let merged2 = merge_reports(3, rehop).unwrap();
+        assert_eq!(run_digest(&merged), run_digest(&merged2));
+    }
+
+    #[test]
+    fn merge_rejects_gaps_and_wrong_counts() {
+        let reports: Vec<PeerReport> = (0..3).map(sample_report).collect();
+        assert!(merge_reports(4, reports.clone()).is_err());
+        let mut gap = reports;
+        gap[2].id = 7;
+        assert!(merge_reports(3, gap).is_err());
+    }
+}

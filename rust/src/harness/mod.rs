@@ -3,8 +3,13 @@
 //! targets (`benches/*.rs`) drive this module to regenerate each of the
 //! paper's tables and figures.
 
+pub mod cluster;
 pub mod scenarios;
 
+pub use cluster::{
+    inprocess_digest, merge_reports, run_cluster, run_digest, run_peer, ClusterOptions,
+    ClusterOutcome, PeerEndpoint, PeerReport,
+};
 pub use scenarios::{run_matrix, Arm, CellResult, MatrixReport, ScenarioSpec};
 
 use crate::coordinator::training::{RunResult, StepMetric};

@@ -2,6 +2,10 @@
 //! framework. Subcommands:
 //!
 //!   train       run BTARD-SGD on a built-in workload (mlp | quadratic)
+//!   cluster     fork a multi-process loopback socket cluster and merge
+//!               its metrics (bit-identical to the in-process run)
+//!   peer        run ONE peer process of a socket cluster (forked by
+//!               `cluster`, or launched by hand against a roster file)
 //!   ps          run a trusted-PS baseline with a chosen aggregator
 //!   scenarios   run a declarative {size}×{attack}×{arm} matrix sweep
 //!   inspect     list the AOT artifacts in the manifest
@@ -11,6 +15,9 @@
 //!   btard train --workload mlp --peers 16 --byzantine 7 \
 //!         --attack sign_flip:1000 --attack-start 100 --tau 1 --steps 500
 //!   btard train --peers 256 --steps 10 --workers 8     # pooled scheduler
+//!   btard cluster --peers 8 --byzantine 2 --attack sign_flip:1000 \
+//!         --attack-start 2 --steps 4 --verify-inprocess
+//!   btard peer --id 3 --config run.json --roster roster.json
 //!   btard scenarios --spec configs/zoo.json --out results
 //!   btard ps --aggregator coord_median --steps 300
 //!   btard inspect --artifacts artifacts
@@ -19,12 +26,16 @@ use btard::coordinator::adversary::AdversarySpec;
 use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
 use btard::coordinator::optimizer::LrSchedule;
+use btard::coordinator::runconfig::{load_run_config_full, TransportKind, WorkloadSpec};
 use btard::coordinator::training::{
     default_workers, run_btard, run_btard_with, run_ps, ExecMode, OptSpec, PsConfig, RunConfig,
 };
 use btard::coordinator::{Aggregator, ProtocolConfig};
 use btard::data::synth_vision::SynthVision;
-use btard::harness::{run_matrix, Recorder, ScenarioSpec, Table};
+use btard::harness::{
+    inprocess_digest, run_cluster, run_matrix, run_peer, ClusterOptions, PeerEndpoint, Recorder,
+    ScenarioSpec, Table,
+};
 use btard::model::mlp::MlpModel;
 use btard::model::synthetic::Quadratic;
 use btard::model::GradientSource;
@@ -32,12 +43,15 @@ use btard::net::NetworkProfile;
 use btard::util::cli::Args;
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
+        "cluster" => cmd_cluster(&args),
+        "peer" => cmd_peer(&args),
         "ps" => cmd_ps(&args),
         "scenarios" => cmd_scenarios(&args),
         "inspect" => cmd_inspect(&args),
@@ -45,7 +59,7 @@ fn main() {
         _ => {
             println!(
                 "btard — Byzantine-Tolerant All-Reduce (ICML 2022 reproduction)\n\n\
-                 usage: btard <train|ps|scenarios|inspect|selftest> [flags]\n\
+                 usage: btard <train|cluster|peer|ps|scenarios|inspect|selftest> [flags]\n\
                  common flags:\n\
                  \x20 --workload mlp|quadratic    training objective\n\
                  \x20 --peers N --byzantine B     cluster composition\n\
@@ -72,7 +86,23 @@ fn main() {
                  \x20 --spec FILE.json            scenario matrix spec (default: smoke); sweeps\n\
                  \x20                             {peers}x{attack}x{arm}x{network} — the\n\
                  \x20                             'networks' key lists profiles per cell\n\
-                 \x20 --out DIR                   output directory (default: results)"
+                 \x20 --out DIR                   output directory (default: results)\n\
+                 cluster flags (multi-process loopback socket run):\n\
+                 \x20 --peers N --byzantine B --attack SPEC --attack-start S\n\
+                 \x20 --steps K --seed S --no-sigs    run shape (defaults mirror the\n\
+                 \x20                             golden-digest scenario at N=8)\n\
+                 \x20 --workload quadratic|mlp    objective; --dim/--mu/--L/--sigma/\n\
+                 \x20                             --source-seed or --hidden/--batch\n\
+                 \x20 --out DIR                   work dir (default results/cluster)\n\
+                 \x20 --verify-inprocess          also run the in-process pooled run and\n\
+                 \x20                             fail unless the digests are bit-identical\n\
+                 \x20 --config FILE.json          full config (transport must be 'socket')\n\
+                 peer flags (one process of a socket cluster):\n\
+                 \x20 --id K --config FILE.json   which peer, and the shared run config\n\
+                 \x20 --roster FILE.json          fixed roster (id, addr, pubkey rows), or\n\
+                 \x20 --rendezvous DIR            ephemeral-port rendezvous (used by cluster)\n\
+                 \x20 --out FILE.json             per-peer report path\n\
+                 \x20 --connect-timeout-ms T      mesh-build budget (default 30000)"
             );
         }
     }
@@ -185,12 +215,24 @@ fn parse_attack(args: &Args) -> Option<(AdversarySpec, AttackSchedule)> {
 fn cmd_train(args: &Args) {
     // --config <file.json> takes precedence over individual flags.
     if let Some(path) = args.get("config") {
-        let mut cfg = btard::coordinator::runconfig::load_run_config(path)
-            .unwrap_or_else(|e| panic!("{e:#}"));
+        let loaded = load_run_config_full(path).unwrap_or_else(|e| panic!("{e:#}"));
+        // A socket-transport config silently run in-process would be an
+        // experiment labeled with a transport it never used.
+        assert!(
+            loaded.transport == TransportKind::Local,
+            "config '{path}' has transport 'socket' — use `btard cluster --config {path}`"
+        );
+        let mut cfg = loaded.cfg;
         if let Some(profile) = parse_network(args) {
             cfg.network = profile; // flag overrides the config file
         }
-        let source = build_source(args);
+        // The config's workload block names the objective; an explicit
+        // --workload flag overrides it.
+        let source = if args.get("workload").is_some() {
+            build_source(args)
+        } else {
+            loaded.workload.build()
+        };
         let mode = parse_exec(args, cfg.n_peers);
         run_and_report(cfg, source, mode);
         return;
@@ -272,6 +314,182 @@ fn run_and_report(cfg: RunConfig, source: Arc<dyn GradientSource>, mode: ExecMod
         let retx: u64 = res.net_faults.iter().map(|f| f.retransmit_bytes).sum();
         println!("network faults: {dropped} dropped, {late} late, {retx} retransmit bytes");
     }
+}
+
+/// Workload spec from CLI flags. The cluster verb defaults to the
+/// quadratic objective of the golden-digest scenario (dim 1024, µ 0.1,
+/// L 2, σ 1, source seed 9), so
+/// `btard cluster --peers 64 --byzantine 8 --attack sign_flip:1000 \
+///  --attack-start 2 --no-sigs` reproduces that exact run across
+/// processes.
+fn parse_workload(args: &Args) -> WorkloadSpec {
+    match args.get_str("workload", "quadratic") {
+        "quadratic" => WorkloadSpec::Quadratic {
+            dim: args.get_usize("dim", 1024),
+            mu: args.get_f32("mu", 0.1),
+            l: args.get_f32("L", 2.0),
+            sigma: args.get_f32("sigma", 1.0),
+            seed: args.get_u64("source-seed", 9),
+        },
+        "mlp" => WorkloadSpec::Mlp {
+            hidden: args.get_usize("hidden", 64),
+            batch: args.get_usize("batch", 8),
+            // Like `btard train` and the config-file default: the MLP
+            // dataset follows the run seed unless --source-seed says
+            // otherwise, so cluster and train runs of the same flags
+            // train the same objective.
+            seed: args.get_u64("source-seed", args.get_u64("seed", 7)),
+        },
+        other => panic!("--workload expects 'quadratic' or 'mlp', got '{other}'"),
+    }
+}
+
+/// The run shape `btard cluster` uses when no --config is given: the
+/// golden-digest scenario's knobs, parameterized by the CLI flags.
+fn cluster_run_config(args: &Args) -> RunConfig {
+    let n = args.get_usize("peers", 8);
+    let b = args.get_usize("byzantine", 0);
+    assert!(b < n, "--byzantine must be < --peers");
+    RunConfig {
+        n_peers: n,
+        byzantine: ((n - b)..n).collect(),
+        attack: parse_attack(args),
+        steps: args.get_u64("steps", 4),
+        protocol: ProtocolConfig {
+            n0: n,
+            tau: parse_tau(args),
+            m_validators: args.get_usize("validators", (n / 8).max(1)),
+            delta_max: args.get_f32("delta-max", 4.0),
+            global_seed: args.get_u64("global-seed", 0),
+            ..ProtocolConfig::default()
+        },
+        opt: OptSpec::Sgd {
+            schedule: LrSchedule::Constant(args.get_f32("lr", 0.1)),
+            momentum: 0.0,
+            nesterov: false,
+        },
+        clip_lambda: args.get("clip-lambda").map(|s| s.parse().expect("bad --clip-lambda")),
+        eval_every: args.get_u64("eval-every", 2),
+        seed: args.get_u64("seed", 7),
+        verify_signatures: !args.get_bool("no-sigs"),
+        gossip_fanout: 8,
+        network: NetworkProfile::perfect(),
+        segments: vec![],
+    }
+}
+
+fn cmd_cluster(args: &Args) {
+    let (cfg, workload) = match args.get("config") {
+        Some(path) => {
+            let loaded = load_run_config_full(path).unwrap_or_else(|e| panic!("{e:#}"));
+            assert!(
+                loaded.transport == TransportKind::Socket,
+                "config '{path}' has transport '{}': btard cluster runs the socket transport — \
+                 set \"transport\": \"socket\"",
+                loaded.transport.name()
+            );
+            (loaded.cfg, loaded.workload)
+        }
+        None => (cluster_run_config(args), parse_workload(args)),
+    };
+    let out_dir = PathBuf::from(args.get_str("out", "results/cluster"));
+    let opts = ClusterOptions {
+        out_dir,
+        bin: std::env::current_exe().expect("resolving the btard binary path"),
+        connect_timeout: Duration::from_millis(args.get_u64("connect-timeout-ms", 30_000)),
+        run_timeout: Duration::from_secs(args.get_u64("run-timeout-s", 600)),
+    };
+    eprintln!(
+        "btard cluster: forking {} peer processes ({} byzantine, attack={:?}, sigs={}), \
+         {} steps → {}",
+        cfg.n_peers,
+        cfg.byzantine.len(),
+        cfg.attack.as_ref().map(|(spec, _)| spec.canonical()),
+        cfg.verify_signatures,
+        cfg.steps,
+        opts.out_dir.display()
+    );
+    let t0 = std::time::Instant::now();
+    let outcome = run_cluster(&cfg, &workload, &opts).unwrap_or_else(|e| panic!("cluster: {e}"));
+    let wall = t0.elapsed().as_secs_f64();
+    let mut table = Table::new(&["step", "loss", "metric", "bans"]);
+    for m in outcome.result.metrics.iter().filter(|m| !m.metric.is_nan()) {
+        table.row(vec![
+            m.step.to_string(),
+            format!("{:.4}", m.loss),
+            format!("{:.4}", m.metric),
+            m.banned_now.iter().map(|p| p.to_string()).collect::<Vec<_>>().join(";"),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "cluster digest: {}\nfinal metric: {:.4} | bans: {} | steps done: {} | wall: {:.1}s\n\
+         metrics: {} | summary: {} | roster: {}",
+        outcome.digest,
+        outcome.result.final_metric,
+        outcome.result.ban_events.len(),
+        outcome.result.steps_done,
+        wall,
+        outcome.csv_path.display(),
+        outcome.summary_path.display(),
+        outcome.roster_path.display()
+    );
+    if args.get_bool("verify-inprocess") {
+        eprintln!("btard cluster: re-running in-process (pooled) for the digest diff…");
+        let reference = inprocess_digest(&cfg, &workload);
+        if reference == outcome.digest {
+            println!("digest check OK: socket cluster == in-process pooled ({reference})");
+        } else {
+            eprintln!(
+                "DIGEST MISMATCH:\n  socket cluster : {}\n  in-process     : {reference}",
+                outcome.digest
+            );
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_peer(args: &Args) {
+    let id = args
+        .get("id")
+        .unwrap_or_else(|| panic!("btard peer needs --id <peer>"))
+        .parse::<usize>()
+        .expect("--id expects an integer");
+    let config_path = args
+        .get("config")
+        .unwrap_or_else(|| panic!("btard peer needs --config <file.json>"));
+    let loaded = load_run_config_full(config_path).unwrap_or_else(|e| panic!("{e:#}"));
+    let roster = args.get("roster").map(PathBuf::from);
+    let rendezvous = args.get("rendezvous").map(PathBuf::from);
+    let endpoint = match (&roster, &rendezvous) {
+        (Some(path), None) => PeerEndpoint::Roster(path),
+        (None, Some(dir)) => PeerEndpoint::Rendezvous(dir),
+        _ => panic!("btard peer needs exactly one of --roster FILE or --rendezvous DIR"),
+    };
+    let out = args.get("out").map(PathBuf::from).unwrap_or_else(|| {
+        let name = format!("peer_{id}.json");
+        rendezvous.as_ref().map(|d| d.join(&name)).unwrap_or_else(|| PathBuf::from(name))
+    });
+    let connect = Duration::from_millis(args.get_u64("connect-timeout-ms", 30_000));
+    eprintln!(
+        "btard peer {id}/{}: building the socket mesh ({})…",
+        loaded.cfg.n_peers,
+        if roster.is_some() { "roster" } else { "rendezvous" }
+    );
+    let report = match run_peer(&loaded, id, endpoint, connect) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("btard peer {id}: {e}");
+            std::process::exit(1);
+        }
+    };
+    report.save(&out).unwrap_or_else(|e| panic!("writing {}: {e}", out.display()));
+    eprintln!(
+        "btard peer {id}: done — {} steps, {} bytes sent, report at {}",
+        report.steps_done,
+        report.own_bytes,
+        out.display()
+    );
 }
 
 fn cmd_ps(args: &Args) {

@@ -8,6 +8,14 @@
 //! logical clock catches up. On the perfect fabric every envelope is
 //! stamped 0 and the gate is inert.
 //!
+//! The receive side — signature gating, the latency `future` buffer, the
+//! canonical `(step, slot, from)` pending order, and the keyed
+//! binary-search collects — lives in [`Inbox`], shared verbatim with the
+//! socket transport (`net::socket::SocketNet`): a mailbox fed by
+//! per-link reader threads behaves exactly like a mailbox fed by other
+//! peers' in-process senders, so drain-order determinism and the logical
+//! phase clock survive the wire unchanged.
+//!
 //! Honest peers use `broadcast` (same bytes to everyone). Byzantine peers
 //! may use `broadcast_split` to send contradicting payloads; the
 //! transport then mimics GossipSub relay by delivering *every* variant to
@@ -62,13 +70,21 @@ pub enum RecvMode {
     Drain,
 }
 
-/// A peer's endpoint: its mailbox plus senders to every other peer.
-pub struct PeerNet {
-    pub id: PeerId,
-    pub info: Arc<ClusterInfo>,
-    pub secret: SecretKey,
-    pub mont: Mont,
-    senders: Vec<Sender<Envelope>>,
+#[derive(Debug)]
+pub enum RecvError {
+    /// No matching message within the timeout.
+    Timeout,
+    /// All senders disconnected (cluster shut down).
+    Disconnected,
+}
+
+/// The receive half every transport endpoint shares: a mailbox channel
+/// (fed by in-process senders or by socket reader threads — the producer
+/// is irrelevant), the `pending` buffer with its canonical
+/// `(step, slot, from)` drain order, the latency-gated `future` buffer,
+/// and the logical phase clock. Extracting it is what lets `SocketNet`
+/// inherit the perfect fabric's delivery semantics bit-for-bit.
+pub(crate) struct Inbox {
     mailbox: Receiver<Envelope>,
     /// Buffered envelopes that arrived ahead of the phase we're waiting on.
     pending: Vec<Envelope>,
@@ -77,6 +93,200 @@ pub struct PeerNet {
     future: Vec<Envelope>,
     /// Logical phase clock: incremented once per protocol stage entry.
     clock: u64,
+}
+
+impl Inbox {
+    pub(crate) fn new(mailbox: Receiver<Envelope>) -> Inbox {
+        Inbox { mailbox, pending: Vec::new(), future: Vec::new(), clock: 0 }
+    }
+
+    /// Current logical phase-clock value (delivery-gate reference).
+    pub(crate) fn now(&self) -> u64 {
+        self.clock
+    }
+
+    /// Advance the logical phase clock and promote any latency-gated
+    /// envelopes that just became deliverable. Promotion preserves
+    /// arrival order, so equal-key envelopes keep per-sender FIFO order
+    /// through the canonical stable sort.
+    pub(crate) fn advance_clock(&mut self, mode: RecvMode) {
+        self.clock += 1;
+        if self.future.is_empty() {
+            return;
+        }
+        let clock = self.clock;
+        let mut still = Vec::with_capacity(self.future.len());
+        let mut promoted = false;
+        for env in self.future.drain(..) {
+            if env.deliver_at <= clock {
+                self.pending.push(env);
+                promoted = true;
+            } else {
+                still.push(env);
+            }
+        }
+        self.future = still;
+        if promoted && mode == RecvMode::Drain {
+            self.pending.sort_by_key(|e| (e.step, e.slot, e.from));
+        }
+    }
+
+    /// Signature-check and ripeness-gate one incoming envelope: forged
+    /// envelopes are dropped silently (per the paper: a receiver ignores
+    /// unsigned/forged messages), not-yet-deliverable ones are parked in
+    /// `future` until the phase clock reaches their gate.
+    fn gate(&mut self, info: &ClusterInfo, mont: &Mont, env: Envelope) -> Option<Envelope> {
+        if info.verify_signatures && !env.verify_with(mont, &info.public_keys[env.from]) {
+            return None; // forged — drop silently
+        }
+        if env.deliver_at > self.clock {
+            self.future.push(env);
+            return None;
+        }
+        Some(env)
+    }
+
+    /// Drain every deliverable envelope into `pending` (dropping forged
+    /// ones, parking latency-gated ones) and sort it by the canonical
+    /// delivery key. The sort is stable, so multiple envelopes with the
+    /// same key — equivocation variants from one sender — stay in their
+    /// per-sender FIFO order, exactly as a blocking receiver would have
+    /// observed them.
+    fn refill_pending_ordered(&mut self, info: &ClusterInfo, mont: &Mont) {
+        let mut added = false;
+        while let Ok(env) = self.mailbox.try_recv() {
+            if let Some(env) = self.gate(info, mont, env) {
+                self.pending.push(env);
+                added = true;
+            }
+        }
+        if added {
+            // Stable + adaptive: appending to an already-sorted prefix
+            // keeps re-sorting near-linear, so per-collect refills stay
+            // cheap even at hundreds of peers.
+            self.pending.sort_by_key(|e| (e.step, e.slot, e.from));
+        }
+    }
+
+    /// Receive the next envelope matching `pred`, buffering mismatches.
+    /// Envelopes with invalid signatures are dropped (per the paper: a
+    /// receiver ignores unsigned/forged messages).
+    pub(crate) fn recv_match(
+        &mut self,
+        info: &ClusterInfo,
+        mont: &Mont,
+        mode: RecvMode,
+        timeout: Duration,
+        pred: &dyn Fn(&Envelope) -> bool,
+    ) -> Result<Envelope, RecvError> {
+        if mode == RecvMode::Drain {
+            self.refill_pending_ordered(info, mont);
+            return match self.pending.iter().position(|e| pred(e)) {
+                // `remove`, not `swap_remove`: keep the canonical order.
+                Some(pos) => Ok(self.pending.remove(pos)),
+                None => Err(RecvError::Timeout),
+            };
+        }
+        if let Some(pos) = self.pending.iter().position(|e| pred(e)) {
+            return Ok(self.pending.swap_remove(pos));
+        }
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            if remaining.is_zero() {
+                return Err(RecvError::Timeout);
+            }
+            match self.mailbox.recv_timeout(remaining) {
+                Ok(env) => {
+                    let Some(env) = self.gate(info, mont, env) else { continue };
+                    if pred(&env) {
+                        return Ok(env);
+                    }
+                    self.pending.push(env);
+                }
+                Err(RecvTimeoutError::Timeout) => return Err(RecvError::Timeout),
+                Err(RecvTimeoutError::Disconnected) => return Err(RecvError::Disconnected),
+            }
+        }
+    }
+
+    /// Drain any already-buffered or immediately available envelopes
+    /// matching `pred` without blocking.
+    pub(crate) fn drain_match(
+        &mut self,
+        info: &ClusterInfo,
+        mont: &Mont,
+        mode: RecvMode,
+        pred: &dyn Fn(&Envelope) -> bool,
+    ) -> Vec<Envelope> {
+        if mode == RecvMode::Drain {
+            // Pull everything into `pending` first so the result comes out
+            // in canonical order (the loop below then finds the channel
+            // empty and just partitions the buffer).
+            self.refill_pending_ordered(info, mont);
+        }
+        let mut out = Vec::new();
+        let mut keep = Vec::new();
+        for e in self.pending.drain(..) {
+            if pred(&e) {
+                out.push(e);
+            } else {
+                keep.push(e);
+            }
+        }
+        self.pending = keep;
+        while let Ok(env) = self.mailbox.try_recv() {
+            let Some(env) = self.gate(info, mont, env) else { continue };
+            if pred(&env) {
+                out.push(env);
+            } else {
+                self.pending.push(env);
+            }
+        }
+        out
+    }
+
+    /// Keyed receive. In drain mode the pending buffer is sorted by
+    /// `(step, slot, from)`, so the `(step, slot)` range is located by
+    /// `partition_point` binary search — O(log n) per receive instead of
+    /// the linear scan the generic-predicate path pays (the ROADMAP's
+    /// drain-mode hot path: at n ≳ 512 the scan dominated each collect).
+    /// `remove` (not `swap_remove`) keeps the canonical order.
+    pub(crate) fn recv_keyed(
+        &mut self,
+        info: &ClusterInfo,
+        mont: &Mont,
+        mode: RecvMode,
+        timeout: Duration,
+        step: u64,
+        slot: u32,
+        pred: &dyn Fn(&Envelope) -> bool,
+    ) -> Result<Envelope, RecvError> {
+        if mode == RecvMode::Drain {
+            self.refill_pending_ordered(info, mont);
+            let lo = self.pending.partition_point(|e| (e.step, e.slot) < (step, slot));
+            let len = self.pending[lo..].partition_point(|e| (e.step, e.slot) <= (step, slot));
+            for pos in lo..lo + len {
+                if pred(&self.pending[pos]) {
+                    return Ok(self.pending.remove(pos));
+                }
+            }
+            return Err(RecvError::Timeout);
+        }
+        self.recv_match(info, mont, mode, timeout, &|e| {
+            e.step == step && e.slot == slot && pred(e)
+        })
+    }
+}
+
+/// A peer's endpoint: its mailbox plus senders to every other peer.
+pub struct PeerNet {
+    pub id: PeerId,
+    pub info: Arc<ClusterInfo>,
+    pub secret: SecretKey,
+    pub mont: Mont,
+    senders: Vec<Sender<Envelope>>,
+    inbox: Inbox,
     /// Default receive timeout: elapsed ⇒ counterpart considered in
     /// violation of the protocol (triggers ELIMINATE upstream).
     pub timeout: Duration,
@@ -130,22 +340,11 @@ pub fn build_cluster(
             secret,
             mont: mont.clone(),
             senders: senders.clone(),
-            mailbox,
-            pending: Vec::new(),
-            future: Vec::new(),
-            clock: 0,
+            inbox: Inbox::new(mailbox),
             timeout: Duration::from_secs(30),
             recv_mode: RecvMode::Blocking,
         })
         .collect()
-}
-
-#[derive(Debug)]
-pub enum RecvError {
-    /// No matching message within the timeout.
-    Timeout,
-    /// All senders disconnected (cluster shut down).
-    Disconnected,
 }
 
 impl PeerNet {
@@ -224,137 +423,24 @@ impl PeerNet {
 
     /// Current logical phase-clock value (delivery-gate reference).
     pub(crate) fn now(&self) -> u64 {
-        self.clock
+        self.inbox.now()
     }
 
     /// Advance the logical phase clock and promote any latency-gated
-    /// envelopes that just became deliverable. Promotion preserves
-    /// arrival order, so equal-key envelopes keep per-sender FIFO order
-    /// through the canonical stable sort.
+    /// envelopes that just became deliverable.
     pub fn advance_clock(&mut self) {
-        self.clock += 1;
-        if self.future.is_empty() {
-            return;
-        }
-        let clock = self.clock;
-        let mut still = Vec::with_capacity(self.future.len());
-        let mut promoted = false;
-        for env in self.future.drain(..) {
-            if env.deliver_at <= clock {
-                self.pending.push(env);
-                promoted = true;
-            } else {
-                still.push(env);
-            }
-        }
-        self.future = still;
-        if promoted && self.recv_mode == RecvMode::Drain {
-            self.pending.sort_by_key(|e| (e.step, e.slot, e.from));
-        }
-    }
-
-    /// Signature-check and ripeness-gate one incoming envelope: forged
-    /// envelopes are dropped silently (per the paper: a receiver ignores
-    /// unsigned/forged messages), not-yet-deliverable ones are parked in
-    /// `future` until the phase clock reaches their gate.
-    fn gate(&mut self, env: Envelope) -> Option<Envelope> {
-        if self.info.verify_signatures
-            && !env.verify_with(&self.mont, &self.info.public_keys[env.from])
-        {
-            return None; // forged — drop silently
-        }
-        if env.deliver_at > self.clock {
-            self.future.push(env);
-            return None;
-        }
-        Some(env)
-    }
-
-    /// Drain every deliverable envelope into `pending` (dropping forged
-    /// ones, parking latency-gated ones) and sort it by the canonical
-    /// delivery key. The sort is stable, so multiple envelopes with the
-    /// same key — equivocation variants from one sender — stay in their
-    /// per-sender FIFO order, exactly as a blocking receiver would have
-    /// observed them.
-    fn refill_pending_ordered(&mut self) {
-        let mut added = false;
-        while let Ok(env) = self.mailbox.try_recv() {
-            if let Some(env) = self.gate(env) {
-                self.pending.push(env);
-                added = true;
-            }
-        }
-        if added {
-            // Stable + adaptive: appending to an already-sorted prefix
-            // keeps re-sorting near-linear, so per-collect refills stay
-            // cheap even at hundreds of peers.
-            self.pending.sort_by_key(|e| (e.step, e.slot, e.from));
-        }
+        self.inbox.advance_clock(self.recv_mode);
     }
 
     /// Receive the next envelope matching `pred`, buffering mismatches.
-    /// Envelopes with invalid signatures are dropped (per the paper: a
-    /// receiver ignores unsigned/forged messages).
     pub fn recv_match<F: Fn(&Envelope) -> bool>(&mut self, pred: F) -> Result<Envelope, RecvError> {
-        if self.recv_mode == RecvMode::Drain {
-            self.refill_pending_ordered();
-            return match self.pending.iter().position(|e| pred(e)) {
-                // `remove`, not `swap_remove`: keep the canonical order.
-                Some(pos) => Ok(self.pending.remove(pos)),
-                None => Err(RecvError::Timeout),
-            };
-        }
-        if let Some(pos) = self.pending.iter().position(|e| pred(e)) {
-            return Ok(self.pending.swap_remove(pos));
-        }
-        let deadline = std::time::Instant::now() + self.timeout;
-        loop {
-            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
-            if remaining.is_zero() {
-                return Err(RecvError::Timeout);
-            }
-            match self.mailbox.recv_timeout(remaining) {
-                Ok(env) => {
-                    let Some(env) = self.gate(env) else { continue };
-                    if pred(&env) {
-                        return Ok(env);
-                    }
-                    self.pending.push(env);
-                }
-                Err(RecvTimeoutError::Timeout) => return Err(RecvError::Timeout),
-                Err(RecvTimeoutError::Disconnected) => return Err(RecvError::Disconnected),
-            }
-        }
+        self.inbox.recv_match(&self.info, &self.mont, self.recv_mode, self.timeout, &pred)
     }
 
     /// Drain any already-buffered or immediately available envelopes
     /// matching `pred` without blocking.
     pub fn drain_match<F: Fn(&Envelope) -> bool>(&mut self, pred: F) -> Vec<Envelope> {
-        if self.recv_mode == RecvMode::Drain {
-            // Pull everything into `pending` first so the result comes out
-            // in canonical order (the loop below then finds the channel
-            // empty and just partitions the buffer).
-            self.refill_pending_ordered();
-        }
-        let mut out = Vec::new();
-        let mut keep = Vec::new();
-        for e in self.pending.drain(..) {
-            if pred(&e) {
-                out.push(e);
-            } else {
-                keep.push(e);
-            }
-        }
-        self.pending = keep;
-        while let Ok(env) = self.mailbox.try_recv() {
-            let Some(env) = self.gate(env) else { continue };
-            if pred(&env) {
-                out.push(env);
-            } else {
-                self.pending.push(env);
-            }
-        }
-        out
+        self.inbox.drain_match(&self.info, &self.mont, self.recv_mode, &pred)
     }
 }
 
@@ -397,30 +483,21 @@ impl Transport for PeerNet {
         PeerNet::broadcast_split(self, step, slot, class, variants);
     }
 
-    /// Keyed receive. In drain mode the pending buffer is sorted by
-    /// `(step, slot, from)`, so the `(step, slot)` range is located by
-    /// `partition_point` binary search — O(log n) per receive instead of
-    /// the linear scan the generic-predicate path pays (the ROADMAP's
-    /// drain-mode hot path: at n ≳ 512 the scan dominated each collect).
-    /// `remove` (not `swap_remove`) keeps the canonical order.
     fn recv_keyed(
         &mut self,
         step: u64,
         slot: u32,
         pred: &dyn Fn(&Envelope) -> bool,
     ) -> Result<Envelope, RecvError> {
-        if self.recv_mode == RecvMode::Drain {
-            self.refill_pending_ordered();
-            let lo = self.pending.partition_point(|e| (e.step, e.slot) < (step, slot));
-            let len = self.pending[lo..].partition_point(|e| (e.step, e.slot) <= (step, slot));
-            for pos in lo..lo + len {
-                if pred(&self.pending[pos]) {
-                    return Ok(self.pending.remove(pos));
-                }
-            }
-            return Err(RecvError::Timeout);
-        }
-        self.recv_match(|e| e.step == step && e.slot == slot && pred(e))
+        self.inbox.recv_keyed(
+            &self.info,
+            &self.mont,
+            self.recv_mode,
+            self.timeout,
+            step,
+            slot,
+            pred,
+        )
     }
 
     fn drain_match(&mut self, pred: &dyn Fn(&Envelope) -> bool) -> Vec<Envelope> {

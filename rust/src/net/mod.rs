@@ -10,8 +10,15 @@
 //!   transmission loss with retransmits, tail-latency delays measured in
 //!   protocol phases, straggler uplinks, and peer-scoped blackout
 //!   windows — all reproducible bit-for-bit for a given seed.
+//! - [`socket::SocketNet`] — the first backend that leaves the process:
+//!   a loopback/LAN TCP mesh with a length-prefixed signed-envelope
+//!   frame codec and a JSON-roster handshake. Per-link reader threads
+//!   feed the same mailbox/pending machinery (`local::Inbox`) the
+//!   in-process fabric uses, so delivery semantics — and the metrics of
+//!   a perfect-link run — are bit-identical across the wire
+//!   (`harness::cluster` proves it by digest).
 //!
-//! Either backend delivers signed envelopes whether peers run on their
+//! Every backend delivers signed envelopes whether peers run on their
 //! own OS threads (blocking receives) or are multiplexed over a worker
 //! pool (deterministic drain-mode receives). Broadcast uses a logical
 //! broadcast channel with GossipSub-style cost accounting (`stats`) and
@@ -22,6 +29,7 @@
 pub mod gossip;
 pub mod local;
 pub mod sim;
+pub mod socket;
 pub mod stats;
 
 use crate::crypto::{sign, verify, Mont, PublicKey, SecretKey, Signature};
@@ -30,6 +38,9 @@ use std::time::Duration;
 
 pub use local::{build_cluster, ClusterInfo, PeerNet, RecvError, RecvMode};
 pub use sim::{build_transports, FaultStats, NetworkProfile, PeerFaults, SimNet};
+pub use socket::{
+    bind_ephemeral, derive_keypair, Roster, RosterEntry, SocketConfig, SocketNet,
+};
 pub use stats::{MsgClass, TrafficStats};
 
 /// Peer identifier: index into the initial roster (stable across bans).

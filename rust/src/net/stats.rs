@@ -27,6 +27,22 @@ pub enum MsgClass {
     Control = 5,
 }
 
+impl MsgClass {
+    /// Inverse of `class as u8` (wire decoding); `None` for bytes that
+    /// name no class — a malformed frame, rejected by the codec.
+    pub fn from_u8(v: u8) -> Option<MsgClass> {
+        Some(match v {
+            0 => MsgClass::GradientPart,
+            1 => MsgClass::AggregatedPart,
+            2 => MsgClass::Commitment,
+            3 => MsgClass::Verification,
+            4 => MsgClass::Mprng,
+            5 => MsgClass::Control,
+            _ => return None,
+        })
+    }
+}
+
 pub const NUM_CLASSES: usize = 6;
 
 pub const CLASS_NAMES: [&str; NUM_CLASSES] = [

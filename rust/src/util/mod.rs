@@ -20,6 +20,18 @@ pub fn hex(bytes: &[u8]) -> String {
     s
 }
 
+/// Write a file atomically (write to `<path>.tmp`, then rename): a
+/// reader polling for `path` never observes a half-written file. Used
+/// by the multi-process cluster rendezvous (roster, addr files, peer
+/// reports), where partial reads would be misparses, not retries.
+pub fn atomic_write(path: &std::path::Path, content: &str) -> std::io::Result<()> {
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, content)?;
+    std::fs::rename(&tmp, path)
+}
+
 /// Decode a hex string; returns None on bad input.
 pub fn unhex(s: &str) -> Option<Vec<u8>> {
     if s.len() % 2 != 0 {

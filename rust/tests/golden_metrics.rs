@@ -18,43 +18,17 @@ use btard::coordinator::adversary::AdversarySpec;
 use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
 use btard::coordinator::optimizer::LrSchedule;
-use btard::coordinator::training::{run_btard_pooled, OptSpec, RunConfig, RunResult};
+use btard::coordinator::training::{run_btard_pooled, OptSpec, RunConfig};
 use btard::coordinator::ProtocolConfig;
+// The digest implementation lives in the library (one implementation
+// shared with the multi-process cluster runner, or the two proofs would
+// drift): harness::cluster::run_digest.
+use btard::harness::run_digest;
 use btard::model::synthetic::Quadratic;
 use btard::model::GradientSource;
 use btard::net::NetworkProfile;
 use std::path::PathBuf;
 use std::sync::Arc;
-
-/// Serialize every deterministic member of a RunResult into a digest.
-fn run_digest(res: &RunResult) -> String {
-    let mut bytes: Vec<u8> = Vec::new();
-    bytes.extend_from_slice(&res.steps_done.to_le_bytes());
-    bytes.extend_from_slice(&res.recomputes.to_le_bytes());
-    bytes.extend_from_slice(&res.final_metric.to_bits().to_le_bytes());
-    for p in &res.final_params {
-        bytes.extend_from_slice(&p.to_bits().to_le_bytes());
-    }
-    for m in &res.metrics {
-        bytes.extend_from_slice(&m.step.to_le_bytes());
-        bytes.extend_from_slice(&m.loss.to_bits().to_le_bytes());
-        bytes.extend_from_slice(&m.metric.to_bits().to_le_bytes());
-        for b in &m.banned_now {
-            bytes.extend_from_slice(&(*b as u64).to_le_bytes());
-        }
-    }
-    for ev in &res.ban_events {
-        bytes.extend_from_slice(&ev.step.to_le_bytes());
-        bytes.extend_from_slice(&(ev.target as u64).to_le_bytes());
-        bytes.extend_from_slice(&(ev.by as u64).to_le_bytes());
-        bytes.extend_from_slice(ev.reason.name().as_bytes());
-    }
-    for b in &res.peer_bytes {
-        bytes.extend_from_slice(&b.to_le_bytes());
-    }
-    let d = btard::crypto::sha256(&bytes);
-    d.iter().map(|b| format!("{b:02x}")).collect()
-}
 
 #[test]
 fn perfect_fabric_64_peer_run_matches_golden_digest() {
