@@ -16,6 +16,7 @@
 use btard::coordinator::adversary::AdversarySpec;
 use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::membership::MembershipSchedule;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{
     run_btard, run_ps, OptSpec, PsConfig, RunConfig, RunResult,
@@ -143,6 +144,7 @@ fn main() {
                 verify_signatures: false, // crypto correctness covered by tests
                 gossip_fanout: 8,
                 network: NetworkProfile::perfect(),
+                churn: MembershipSchedule::empty(),
                 segments: vec![],
             };
             let res = run_btard(&cfg, model());

@@ -14,6 +14,7 @@
 use btard::coordinator::adversary::AdversarySpec;
 use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::membership::MembershipSchedule;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{run_btard, OptSpec, RunConfig};
 use btard::coordinator::ProtocolConfig;
@@ -98,6 +99,7 @@ fn main() {
                 verify_signatures: false,
                 gossip_fanout: 8,
                 network: NetworkProfile::perfect(),
+                churn: MembershipSchedule::empty(),
                 segments: segments.clone(),
             };
             let res = run_btard(&cfg, model.clone());

@@ -36,6 +36,7 @@ fn main() {
         attacks: vec!["sign_flip:1000".to_string()],
         arms: vec![Arm::Btard],
         networks: vec!["perfect".to_string()],
+        churn: vec!["none".to_string()],
         steps,
         dim: if smoke { 4096 } else { 16384 },
         attack_start: 2,

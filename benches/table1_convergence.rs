@@ -16,6 +16,7 @@
 use btard::coordinator::adversary::AdversarySpec;
 use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::membership::MembershipSchedule;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{run_btard, OptSpec, RunConfig};
 use btard::coordinator::ProtocolConfig;
@@ -83,6 +84,7 @@ fn run(
         verify_signatures: false,
         gossip_fanout: 8,
         network: NetworkProfile::perfect(),
+        churn: MembershipSchedule::empty(),
         segments: vec![],
     };
     run_btard(&cfg, src)

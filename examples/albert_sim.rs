@@ -17,6 +17,7 @@
 use btard::coordinator::adversary::AdversarySpec;
 use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::membership::MembershipSchedule;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{run_btard, OptSpec, RunConfig};
 use btard::coordinator::ProtocolConfig;
@@ -85,6 +86,7 @@ fn main() {
         verify_signatures: !args.get_bool("no-sigs"),
         gossip_fanout: 8,
         network: NetworkProfile::perfect(),
+        churn: MembershipSchedule::empty(),
         segments,
     };
 

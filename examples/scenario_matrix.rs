@@ -30,6 +30,7 @@ fn main() {
             Arm::Ps(Aggregator::Mean),
         ],
         networks: vec!["perfect".to_string()],
+        churn: vec!["none".to_string()],
         steps: 12,
         dim: 4096,
         attack_start: 3,

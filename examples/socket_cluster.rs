@@ -13,6 +13,7 @@
 use btard::coordinator::adversary::AdversarySpec;
 use btard::coordinator::attacks::{AttackSchedule, CollusionBoard};
 use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::membership::MembershipSchedule;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::runconfig::WorkloadSpec;
 use btard::coordinator::training::{peer_main, prepare_source, OptSpec, RunConfig};
@@ -52,6 +53,7 @@ fn main() {
         verify_signatures: true,
         gossip_fanout: 8,
         network: NetworkProfile::perfect(),
+        churn: MembershipSchedule::empty(),
         segments: vec![],
     };
     let workload = WorkloadSpec::Quadratic { dim: 64, mu: 0.1, l: 2.0, sigma: 1.0, seed: 9 };

@@ -59,6 +59,14 @@ impl BanLedger {
         BanLedger::default()
     }
 
+    /// Rebuild a ledger from its event log (JOIN snapshot transfer: the
+    /// ban ledger is consensus data, and events are only ever recorded
+    /// on first insertion, so the banned set is exactly the targets).
+    pub fn from_events(events: Vec<BanEvent>) -> BanLedger {
+        let banned = events.iter().map(|e| e.target).collect();
+        BanLedger { banned, events }
+    }
+
     pub fn is_banned(&self, p: PeerId) -> bool {
         self.banned.contains(&p)
     }

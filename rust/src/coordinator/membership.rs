@@ -1,0 +1,940 @@
+//! Epoch-based dynamic membership: peers join and leave mid-training.
+//!
+//! The fixed-cluster assumption is replaced by a **versioned roster**:
+//! the peer-id universe (`RunConfig::n_peers`) is fixed up front — every
+//! peer that will *ever* exist has an id, a seed-derived keypair and a
+//! slot in the id-indexed tables — but which ids are **live** changes at
+//! *epoch boundaries*. A boundary is the start of any training step
+//! named by the run's churn schedule (`join:<peer>@<step>`,
+//! `leave:<peer>@<step>`); applying its deltas bumps the roster epoch.
+//!
+//! Determinism contract (the property the whole refactor hangs on):
+//! membership transitions are driven by the **schedule** — shared config
+//! data, like the attack schedule — never by message-arrival timing, so
+//! a threaded run, a pooled run at any worker count, and a multi-process
+//! socket cluster all walk through identical rosters and produce
+//! identical metrics digests. The signed JOIN / LEAVE broadcasts exist
+//! as protocol artifacts (auditable, equivocation-tracked), but no
+//! honest peer's state transition waits on them.
+//!
+//! ## The boundary protocol
+//!
+//! At the start of a boundary step `t`, two extra stages run before the
+//! ordinary twelve (both tick the logical phase clock, and the second
+//! only ever collects what the first sent — the invariant that keeps the
+//! pooled scheduler's stage barrier sound):
+//!
+//! 1. [`stage_boundary_apply`] — every incumbent removes the step's
+//!    leavers from `live`, admits its joiners (unless the consensus ban
+//!    ledger already excludes them), bumps the epoch and re-derives the
+//!    part-owner map as a **pure function of (epoch roster, seed)**
+//!    ([`OwnerMap::derive`]). A leaver instead broadcasts its signed
+//!    LEAVE and stops — excised, not ELIMINATEd: no ban event, no
+//!    mutual-removal tax. The **sponsor** (lowest-id surviving
+//!    incumbent) sends each admitted joiner a signed [`Snapshot`].
+//! 2. [`stage_boundary_join`] — a peer whose join step is `t` broadcasts
+//!    its signed JOIN (announcing its pubkey), collects the sponsor's
+//!    snapshot, installs it, and discards every pre-join envelope. From
+//!    this step on it is a full member: per the paper's trust model it
+//!    contributes gradients immediately, and its slots (parts it owns,
+//!    validator draws) come deterministically from the epoch roster.
+//!
+//! Within an epoch, bans keep the incremental
+//! [`OwnerMap::reassign_banned`] path — **bit-identical** to the
+//! pre-membership code, which is what keeps the static-roster golden
+//! digest unchanged: with an empty schedule there are no boundaries, no
+//! extra stages, no extra messages, and no changed draws.
+//!
+//! ## Trust assumptions (vs the paper)
+//!
+//! The snapshot (current step, params, optimizer state, ban ledger,
+//! previous-step archive) is transferred from one sponsor and trusted.
+//! Everything in it is consensus data an honest joiner *could*
+//! cross-check against broadcast history — the paper's deployment would
+//! have it audit the ledger against signed ACCUSE/ELIMINATE records and
+//! the params against the commitment chain — but this reproduction
+//! accepts the sponsor's word, exactly as documented in the README. A
+//! Byzantine *sponsor* could therefore poison a joiner (a
+//! denial-of-service on that joiner, never on the incumbents); supported
+//! configurations keep peer 0 — the lowest id, hence the sponsor —
+//! honest, like the "peer 0 records metrics" rule.
+
+use super::accuse::{BanEvent, BanLedger};
+use super::messages::{BanReason, GradCommit, Reader, VerifyScalars, Writer};
+use super::optimizer::Optimizer;
+use super::partition::OwnerMap;
+use super::step::{draw_validators, PeerCtx, StepArchive};
+use crate::crypto::Digest;
+use crate::net::{slots, Envelope, MsgClass, PeerId};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Schedule
+// ---------------------------------------------------------------------------
+
+/// What a scheduled membership change does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ChurnKind {
+    /// The peer is admitted at the boundary (it was not live before).
+    Join,
+    /// The peer departs gracefully at the boundary (distinct from
+    /// ELIMINATE: no ban event, no mutual-removal tax).
+    Leave,
+}
+
+/// One scheduled membership change: `peer` joins or leaves at the start
+/// of training step `step`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChurnEvent {
+    pub peer: PeerId,
+    pub step: u64,
+    pub kind: ChurnKind,
+}
+
+/// The run's membership schedule: the `churn` config key. Empty means a
+/// static roster (the pre-membership behaviour, bit-for-bit).
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct MembershipSchedule {
+    events: Vec<ChurnEvent>,
+}
+
+impl MembershipSchedule {
+    pub fn empty() -> MembershipSchedule {
+        MembershipSchedule::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[ChurnEvent] {
+        &self.events
+    }
+
+    /// Parse one entry: `join:<peer>@<step>` or `leave:<peer>@<step>`.
+    fn parse_entry(s: &str) -> Result<ChurnEvent, String> {
+        let (kind_str, rest) = s
+            .split_once(':')
+            .ok_or_else(|| format!("churn entry '{s}' is not '<join|leave>:<peer>@<step>'"))?;
+        let kind = match kind_str {
+            "join" => ChurnKind::Join,
+            "leave" => ChurnKind::Leave,
+            other => return Err(format!("churn entry '{s}': unknown kind '{other}'")),
+        };
+        let (peer_str, step_str) = rest
+            .split_once('@')
+            .ok_or_else(|| format!("churn entry '{s}' is missing '@<step>'"))?;
+        let peer: PeerId = peer_str
+            .parse()
+            .map_err(|_| format!("churn entry '{s}': '{peer_str}' is not a peer id"))?;
+        let step: u64 = step_str
+            .parse()
+            .map_err(|_| format!("churn entry '{s}': '{step_str}' is not a step"))?;
+        Ok(ChurnEvent { peer, step, kind })
+    }
+
+    /// Parse a comma-separated schedule (`"join:8@3,leave:2@6"`); empty
+    /// string or `"none"` is the empty schedule. Malformed entries are
+    /// hard errors, never silent defaults.
+    pub fn parse(s: &str) -> Result<MembershipSchedule, String> {
+        let s = s.trim();
+        if s.is_empty() || s == "none" {
+            return Ok(MembershipSchedule::empty());
+        }
+        let mut events = Vec::new();
+        for entry in s.split(',') {
+            events.push(Self::parse_entry(entry.trim())?);
+        }
+        let mut sched = MembershipSchedule { events };
+        sched.canonicalize();
+        Ok(sched)
+    }
+
+    /// Parse from a list of entry strings (the JSON `churn` array form).
+    pub fn parse_list(entries: &[&str]) -> Result<MembershipSchedule, String> {
+        let mut events = Vec::new();
+        for entry in entries {
+            let entry = entry.trim();
+            if entry.is_empty() || *entry == "none" {
+                continue;
+            }
+            events.push(Self::parse_entry(entry)?);
+        }
+        let mut sched = MembershipSchedule { events };
+        sched.canonicalize();
+        Ok(sched)
+    }
+
+    fn canonicalize(&mut self) {
+        self.events.sort_by_key(|e| (e.step, e.kind, e.peer));
+        self.events.dedup();
+    }
+
+    /// Canonical text form (`parse(canonical()) == self`).
+    pub fn canonical(&self) -> String {
+        if self.events.is_empty() {
+            return "none".to_string();
+        }
+        self.events
+            .iter()
+            .map(|e| {
+                let kind = match e.kind {
+                    ChurnKind::Join => "join",
+                    ChurnKind::Leave => "leave",
+                };
+                format!("{kind}:{}@{}", e.peer, e.step)
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Canonical entry list (the JSON array form).
+    pub fn canonical_entries(&self) -> Vec<String> {
+        if self.events.is_empty() {
+            return vec![];
+        }
+        self.canonical().split(',').map(|s| s.to_string()).collect()
+    }
+
+    /// Structural validation against a run shape. Hard errors, matching
+    /// the repo's strict-config precedent: a schedule that cannot mean
+    /// anything (out-of-universe peer, step past the run, peer 0
+    /// churning, double joins, leave before join) must not silently run
+    /// a different experiment.
+    pub fn validate(&self, n_peers: usize, steps: u64) -> Result<(), String> {
+        for e in &self.events {
+            if e.peer == 0 {
+                return Err("churn: peer 0 is the metrics recorder and cannot join or leave"
+                    .to_string());
+            }
+            if e.peer >= n_peers {
+                return Err(format!(
+                    "churn: peer {} outside the {n_peers}-id universe (ids 0..={})",
+                    e.peer,
+                    n_peers - 1
+                ));
+            }
+            if e.step == 0 {
+                return Err(format!(
+                    "churn: peer {} cannot join/leave at step 0 — a step-0 joiner is just an \
+                     initial member, and a step-0 leaver was never in the run",
+                    e.peer
+                ));
+            }
+            if e.step >= steps {
+                return Err(format!(
+                    "churn: peer {} at step {} never fires in a {steps}-step run",
+                    e.peer, e.step
+                ));
+            }
+        }
+        for (i, a) in self.events.iter().enumerate() {
+            for b in &self.events[i + 1..] {
+                if a.peer == b.peer && a.kind == b.kind {
+                    return Err(format!(
+                        "churn: peer {} has two {:?} entries — at most one of each",
+                        a.peer, a.kind
+                    ));
+                }
+            }
+        }
+        for e in &self.events {
+            if e.kind == ChurnKind::Leave {
+                if let Some(join) = self.join_step(e.peer) {
+                    if join >= e.step {
+                        return Err(format!(
+                            "churn: peer {} leaves at step {} but only joins at step {join}",
+                            e.peer, e.step
+                        ));
+                    }
+                }
+            }
+        }
+        // The cluster needs ≥ 2 live ids at every point of the schedule
+        // — at step 0 and after every boundary. Walk the ban-free
+        // join/leave trajectory (a necessary static check; runtime bans
+        // can only shrink it further, and those collapse with the usual
+        // ClusterCollapsed error).
+        let mut live = self.initial_live(n_peers).len();
+        if live < 2 {
+            return Err(format!(
+                "churn: only {live} founding member(s) would be live at step 0 — the \
+                 cluster needs at least 2 before any join boundary can fire"
+            ));
+        }
+        let mut boundaries: Vec<u64> = self.events.iter().map(|e| e.step).collect();
+        boundaries.sort_unstable();
+        boundaries.dedup();
+        for step in boundaries {
+            let (joins, leaves) = self.deltas_at(step);
+            live = live + joins.len() - leaves.len();
+            if live < 2 {
+                return Err(format!(
+                    "churn: the boundary at step {step} leaves only {live} live peer(s) — \
+                     the cluster needs at least 2 throughout the run"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// The ids live at step 0: the full universe minus scheduled joiners.
+    pub fn initial_live(&self, n_peers: usize) -> Vec<PeerId> {
+        (0..n_peers).filter(|p| self.join_step(*p).is_none()).collect()
+    }
+
+    /// The step at which `peer` joins (None = founding member).
+    pub fn join_step(&self, peer: PeerId) -> Option<u64> {
+        self.events
+            .iter()
+            .find(|e| e.peer == peer && e.kind == ChurnKind::Join)
+            .map(|e| e.step)
+    }
+
+    /// Per-peer join steps over the whole universe (0 = founding
+    /// member) — the socket transport's link-epoch table.
+    pub fn join_steps(&self, n_peers: usize) -> Vec<u64> {
+        (0..n_peers).map(|p| self.join_step(p).unwrap_or(0)).collect()
+    }
+
+    /// True when step `step` is an epoch boundary (has any delta).
+    pub fn has_delta_at(&self, step: u64) -> bool {
+        self.events.iter().any(|e| e.step == step)
+    }
+
+    /// The boundary's deltas: (joins, leaves), each sorted by id.
+    pub fn deltas_at(&self, step: u64) -> (Vec<PeerId>, Vec<PeerId>) {
+        let mut joins = Vec::new();
+        let mut leaves = Vec::new();
+        for e in &self.events {
+            if e.step == step {
+                match e.kind {
+                    ChurnKind::Join => joins.push(e.peer),
+                    ChurnKind::Leave => leaves.push(e.peer),
+                }
+            }
+        }
+        joins.sort_unstable();
+        leaves.sort_unstable();
+        (joins, leaves)
+    }
+}
+
+/// A peer's runtime membership state: the shared schedule plus the
+/// current roster epoch (bumped at every applied boundary).
+#[derive(Clone, Debug, Default)]
+pub struct Membership {
+    pub schedule: MembershipSchedule,
+    pub epoch: u64,
+}
+
+impl Membership {
+    pub fn new(schedule: MembershipSchedule) -> Membership {
+        Membership { schedule, epoch: 0 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot (JOIN state transfer)
+// ---------------------------------------------------------------------------
+
+/// Everything a joiner needs to act as a full member from its first
+/// step: the post-boundary roster (live set, owner map, epoch), the
+/// shared randomness chain (r^{t-1}), the validator draw for step t, the
+/// current parameters *and optimizer state* (momentum buffers — without
+/// them the joiner's post-step params would silently diverge from the
+/// cluster's), the consensus ban ledger, and the previous step's archive
+/// (needed so the joiner adjudicates step-t accusations about step t-1
+/// identically to every incumbent, and warm-starts CenteredClip from the
+/// same previous aggregate).
+pub struct Snapshot {
+    pub step: u64,
+    pub epoch: u64,
+    /// The sponsor's logical phase-clock value at gather time: the
+    /// joiner fast-forwards its (held-out, lagging) clock to this, so
+    /// latency-gated deliveries under the network simulation reference
+    /// a cluster-consistent clock.
+    pub clock: u64,
+    pub live: Vec<PeerId>,
+    pub owners: Vec<PeerId>,
+    pub validators: Vec<(PeerId, PeerId)>,
+    pub r_prev: [u8; 32],
+    pub params: Vec<f32>,
+    pub opt_state: Vec<u8>,
+    pub ban_events: Vec<BanEvent>,
+    pub archive: Option<StepArchive>,
+}
+
+fn write_ids(w: &mut Writer, ids: &[PeerId]) {
+    w.u32(ids.len() as u32);
+    for &p in ids {
+        w.u64(p as u64);
+    }
+}
+
+fn read_ids(r: &mut Reader) -> Option<Vec<PeerId>> {
+    let n = r.u32()? as usize;
+    if n > 1_000_000 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(r.u64()? as PeerId);
+    }
+    Some(out)
+}
+
+fn write_opt_bytes(w: &mut Writer, opt: &Option<Vec<u8>>) {
+    match opt {
+        Some(b) => {
+            w.u8(1);
+            w.bytes(b);
+        }
+        None => {
+            w.u8(0);
+        }
+    }
+}
+
+fn read_opt_bytes(r: &mut Reader) -> Option<Option<Vec<u8>>> {
+    match r.u8()? {
+        0 => Some(None),
+        1 => Some(Some(r.bytes()?)),
+        _ => None,
+    }
+}
+
+impl Snapshot {
+    /// Gather the sponsor's post-boundary state (call only after the
+    /// boundary deltas were applied, so live/owners/epoch are current).
+    pub fn gather(ctx: &PeerCtx, step: u64, params: &[f32], opt: &dyn Optimizer) -> Snapshot {
+        Snapshot {
+            step,
+            epoch: ctx.membership.epoch,
+            clock: ctx.net.clock(),
+            live: ctx.live.clone(),
+            owners: ctx.owners.to_vec(),
+            validators: ctx.validators.clone(),
+            r_prev: ctx.r_prev,
+            params: params.to_vec(),
+            opt_state: opt.state_bytes(),
+            ban_events: ctx.ledger.events.clone(),
+            archive: ctx.archive.clone(),
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u64(self.step).u64(self.epoch).u64(self.clock);
+        write_ids(&mut w, &self.live);
+        write_ids(&mut w, &self.owners);
+        w.u32(self.validators.len() as u32);
+        for &(v, t) in &self.validators {
+            w.u64(v as u64).u64(t as u64);
+        }
+        w.digest(&self.r_prev);
+        w.f32s(&self.params);
+        w.bytes(&self.opt_state);
+        w.u32(self.ban_events.len() as u32);
+        for ev in &self.ban_events {
+            w.u64(ev.step).u64(ev.target as u64).u64(ev.by as u64).u8(ev.reason as u8);
+        }
+        match &self.archive {
+            None => {
+                w.u8(0);
+            }
+            Some(a) => {
+                w.u8(1);
+                w.u64(a.step);
+                w.f32s(&a.params);
+                w.digest(&a.seed_r);
+                w.digest(&a.z_r);
+                w.f32s(&a.ghat);
+                write_ids(&mut w, &a.contributors);
+                w.u32(a.commits.len() as u32);
+                for c in &a.commits {
+                    write_opt_bytes(&mut w, &c.as_ref().map(|c| c.encode()));
+                }
+                w.u32(a.scalars.len() as u32);
+                for s in &a.scalars {
+                    write_opt_bytes(&mut w, &s.as_ref().map(|s| s.encode()));
+                }
+            }
+        }
+        w.finish()
+    }
+
+    pub fn decode(b: &[u8]) -> Option<Snapshot> {
+        let mut r = Reader::new(b);
+        let step = r.u64()?;
+        let epoch = r.u64()?;
+        let clock = r.u64()?;
+        let live = read_ids(&mut r)?;
+        let owners = read_ids(&mut r)?;
+        let nv = r.u32()? as usize;
+        if nv > 1_000_000 {
+            return None;
+        }
+        let mut validators = Vec::with_capacity(nv);
+        for _ in 0..nv {
+            validators.push((r.u64()? as PeerId, r.u64()? as PeerId));
+        }
+        let r_prev: Digest = r.digest()?;
+        let params = r.f32s()?;
+        let opt_state = r.bytes()?;
+        let ne = r.u32()? as usize;
+        if ne > 1_000_000 {
+            return None;
+        }
+        let mut ban_events = Vec::with_capacity(ne);
+        for _ in 0..ne {
+            let step = r.u64()?;
+            let target = r.u64()? as PeerId;
+            let by = r.u64()? as PeerId;
+            let reason = BanReason::from_u8(r.u8()?)?;
+            ban_events.push(BanEvent { step, target, reason, by });
+        }
+        let archive = match r.u8()? {
+            0 => None,
+            1 => {
+                let astep = r.u64()?;
+                let aparams = r.f32s()?;
+                let seed_r = r.digest()?;
+                let z_r = r.digest()?;
+                let ghat = r.f32s()?;
+                let contributors = read_ids(&mut r)?;
+                let nc = r.u32()? as usize;
+                if nc > 1_000_000 {
+                    return None;
+                }
+                let mut commits = Vec::with_capacity(nc);
+                for _ in 0..nc {
+                    commits.push(match read_opt_bytes(&mut r)? {
+                        None => None,
+                        Some(bytes) => Some(GradCommit::decode(&bytes)?),
+                    });
+                }
+                let ns = r.u32()? as usize;
+                if ns > 1_000_000 {
+                    return None;
+                }
+                let mut scalars = Vec::with_capacity(ns);
+                for _ in 0..ns {
+                    scalars.push(match read_opt_bytes(&mut r)? {
+                        None => None,
+                        Some(bytes) => Some(VerifyScalars::decode(&bytes)?),
+                    });
+                }
+                Some(StepArchive {
+                    step: astep,
+                    params: aparams,
+                    seed_r,
+                    z_r,
+                    ghat,
+                    contributors,
+                    commits,
+                    scalars,
+                })
+            }
+            _ => return None,
+        };
+        r.done().then_some(Snapshot {
+            step,
+            epoch,
+            clock,
+            live,
+            owners,
+            validators,
+            r_prev,
+            params,
+            opt_state,
+            ban_events,
+            archive,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Boundary stages
+// ---------------------------------------------------------------------------
+
+/// How many base-timeout multiples *per training step before the
+/// boundary* a joiner waits for its snapshot in blocking mode. A
+/// threaded/socket joiner reaches its boundary at wall-clock ~0 (the
+/// pre-join skip loop has no delay) and parks here while incumbents
+/// train steps 0..t, so the wait must scale with the join step — a
+/// fixed budget would let a late joiner give up while the cluster is
+/// still on its way, after which the incumbents (who already admitted
+/// it) would eliminate the silent joiner and the run would diverge from
+/// the drain-mode (pooled) execution. Drain mode never blocks, so
+/// pooled runs are exempt; the wait only elapses in full on genuine
+/// failure paths (joiner banned pre-boundary, cluster collapsed).
+const JOIN_WAIT_MULT_PER_STEP: u64 = 8;
+
+/// Boundary stage 1 — apply the step's membership deltas (see module
+/// docs). Runs on every peer already participating, including the step's
+/// joiners (whose provisional view is then overwritten by the snapshot
+/// in [`stage_boundary_join`]). Returns `true` when this peer is a
+/// scheduled leaver: it has broadcast its signed LEAVE and must stop
+/// participating (the caller records a graceful exit, not a ban).
+pub fn stage_boundary_apply(
+    ctx: &mut PeerCtx,
+    step: u64,
+    params: &[f32],
+    opt: &dyn Optimizer,
+) -> bool {
+    ctx.net.tick();
+    let me = ctx.net.id();
+    let (joins, leaves) = ctx.membership.schedule.deltas_at(step);
+    if joins.is_empty() && leaves.is_empty() {
+        return false; // not a boundary; tick parity only
+    }
+    if leaves.contains(&me) {
+        // Graceful departure: a signed, auditable artifact distinct from
+        // ELIMINATE. Nobody's state transition waits on it (the schedule
+        // drives the excision), so its arrival timing cannot diverge the
+        // cluster.
+        ctx.net.broadcast(step, slots::sub(slots::LEAVE, me), MsgClass::Control, vec![]);
+        return true;
+    }
+    // The sponsor is the lowest-id *surviving incumbent*: live before
+    // the boundary, not leaving now. Deterministic consensus data.
+    let sponsor = ctx.live.iter().copied().filter(|p| !leaves.contains(p)).min();
+    ctx.live.retain(|p| !leaves.contains(p));
+    let mut admitted = Vec::new();
+    for &j in &joins {
+        // The ban ledger is consensus data: a peer the cluster banned
+        // before its join step (e.g. a pre-emptive ELIMINATE trade) is
+        // never admitted — every incumbent skips it identically.
+        if !ctx.ledger.is_banned(j) && !ctx.live.contains(&j) {
+            ctx.live.push(j);
+            admitted.push(j);
+        }
+    }
+    ctx.live.sort_unstable();
+    ctx.membership.epoch += 1;
+    // Epoch-boundary owner assignment is a pure function of the epoch
+    // roster and seed; within the epoch, bans keep the incremental
+    // reassignment (bit-identical to the static-roster path).
+    ctx.owners = OwnerMap::derive(
+        ctx.owners.n_parts(),
+        &ctx.live,
+        ctx.cfg.global_seed,
+        ctx.membership.epoch,
+    );
+    // Re-draw this step's validators from the *post-boundary* roster
+    // (same randomness r^{t-1} and the shared `draw_validators`
+    // derivation `stage_finish` uses): the draw made at the end of step
+    // t-1 sampled the pre-boundary live set, so a departing leaver
+    // could otherwise hold a validator slot for the very step it leaves
+    // — its target would silently escape Phase-V validation. After
+    // this, every validator slot is — like part ownership — a pure
+    // function of (epoch roster, shared randomness). A just-admitted
+    // joiner may be drawn: it can serve (the snapshot carries the
+    // previous step's archive).
+    ctx.validators = draw_validators(&ctx.live, &ctx.r_prev, ctx.cfg.m_validators);
+    if Some(me) == sponsor && !admitted.is_empty() {
+        // One gather+encode serves every joiner of this boundary: the
+        // snapshot is identical for all of them (post-delta state).
+        let bytes = Snapshot::gather(ctx, step, params, opt).encode();
+        for &j in &admitted {
+            ctx.net.send(j, step, slots::sub(slots::JOIN, j), MsgClass::Control, bytes.clone());
+        }
+    }
+    false
+}
+
+/// Boundary stage 2 — the joiner's half (a tick-parity no-op for
+/// everyone else). Broadcasts the signed JOIN announcement (pubkey
+/// payload), collects the sponsor's snapshot, installs it, and discards
+/// every pre-join envelope. Returns `false` when no (valid) snapshot
+/// arrives — the cluster never admitted this peer (banned before its
+/// boundary, or collapsed); the caller stops the peer without recording
+/// any participation.
+pub fn stage_boundary_join(
+    ctx: &mut PeerCtx,
+    step: u64,
+    params: &mut Vec<f32>,
+    opt: &mut dyn Optimizer,
+) -> bool {
+    ctx.net.tick();
+    let me = ctx.net.id();
+    if ctx.membership.schedule.join_step(me) != Some(step) {
+        return true;
+    }
+    // Signed JOIN announcement: the pubkey the roster (and every
+    // envelope signature) binds this id to. Incumbents drain it with the
+    // step's control traffic; admission itself is schedule-driven.
+    let pubkey = ctx.net.info().public_keys[me].0.to_vec();
+    ctx.net.broadcast(step, slots::sub(slots::JOIN, me), MsgClass::Control, pubkey);
+    // Only the *sponsor's* snapshot is accepted: the joiner computes the
+    // same deterministic lowest-surviving-incumbent rule the boundary
+    // uses (its own `stage_boundary_apply` already ran, so its view is
+    // post-delta: strip this boundary's joiners back out). Without the
+    // sender check, ANY Byzantine incumbent could race a forged
+    // snapshot onto the JOIN slot — envelope signatures authenticate
+    // the sender, they do not authorize it. (If low-id peers were
+    // banned before our boundary, our sponsor guess can be stale; the
+    // join then times out and is abandoned — a deterministic refusal,
+    // never a poisoning.)
+    let (joins, _) = ctx.membership.schedule.deltas_at(step);
+    let Some(sponsor) = ctx.live.iter().copied().filter(|p| !joins.contains(p)).min() else {
+        return false;
+    };
+    // The snapshot is p2p; our own JOIN loopback shares the slot, so the
+    // predicate must exclude broadcasts. In drain mode the snapshot was
+    // sent one stage earlier (boundary-apply) and is already pending; in
+    // blocking mode we park until the sponsor reaches the boundary.
+    let wait_ms = ctx
+        .cfg
+        .base_timeout_ms
+        .saturating_mul(JOIN_WAIT_MULT_PER_STEP)
+        .saturating_mul(step + 1);
+    ctx.net.set_timeout(Duration::from_millis(wait_ms));
+    let res = ctx
+        .net
+        .recv_keyed(step, slots::sub(slots::JOIN, me), &|e: &Envelope| {
+            !e.broadcast && e.from == sponsor
+        });
+    let Ok(env) = res else {
+        return false;
+    };
+    let Some(snap) = Snapshot::decode(&env.payload) else {
+        return false;
+    };
+    install_snapshot(ctx, step, snap, params, opt)
+}
+
+/// Install a snapshot into a joiner's context. Strict shape checks: a
+/// malformed snapshot abandons the join (deterministically — every
+/// execution model sees the same bytes) rather than panicking the peer.
+fn install_snapshot(
+    ctx: &mut PeerCtx,
+    step: u64,
+    snap: Snapshot,
+    params: &mut Vec<f32>,
+    opt: &mut dyn Optimizer,
+) -> bool {
+    let me = ctx.net.id();
+    let dim = ctx.spec.dim;
+    let n_parts = ctx.spec.n_parts;
+    let n0 = ctx.cfg.n0;
+    let shape_ok = snap.step == step
+        && snap.params.len() == dim
+        && snap.owners.len() == n_parts
+        && snap.live.contains(&me)
+        && snap.owners.iter().all(|o| snap.live.contains(o))
+        && snap.live.iter().all(|&p| p < n0)
+        && snap.archive.as_ref().map_or(true, |a| {
+            a.params.len() == dim
+                && a.ghat.len() == dim
+                && a.commits.len() == n0
+                && a.scalars.len() == n0
+        });
+    if !shape_ok || !opt.load_state(&snap.opt_state) {
+        return false;
+    }
+    *params = snap.params;
+    ctx.live = snap.live;
+    ctx.owners = OwnerMap::from_vec(snap.owners);
+    ctx.validators = snap.validators;
+    ctx.r_prev = snap.r_prev;
+    ctx.membership.epoch = snap.epoch;
+    ctx.ledger = BanLedger::from_events(snap.ban_events);
+    ctx.archive = snap.archive;
+    // Synchronize the logical phase clock with the cluster: the joiner
+    // never ticked while held out, and latency-gated deliveries
+    // (network simulation) are stamped against the senders' clocks —
+    // without the fast-forward, every late message to the joiner would
+    // be parked ~a-join-step's-worth of phases too long. The sponsor
+    // gathered at its boundary-apply tick; every incumbent has ticked
+    // once more (boundary-join) by the time this stage ends, so the
+    // joiner lands on `snap.clock + 1`.
+    while ctx.net.clock() < snap.clock + 1 {
+        ctx.net.tick();
+    }
+    // Discard everything from before our membership — including
+    // latency-parked envelopes still behind the delivery gate, and
+    // anything that straggles in later: a socket joiner never receives
+    // pre-join traffic (the wire gates sends on the join step), so the
+    // in-process models must drop theirs to match.
+    ctx.net.set_min_step(step);
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::optimizer::{LrSchedule, Sgd};
+
+    #[test]
+    fn schedule_parses_and_canonicalizes() {
+        let s = MembershipSchedule::parse("leave:2@6, join:8@3").unwrap();
+        assert_eq!(s.canonical(), "join:8@3,leave:2@6");
+        assert_eq!(s.join_step(8), Some(3));
+        assert_eq!(s.join_step(2), None);
+        assert!(s.has_delta_at(3));
+        assert!(s.has_delta_at(6));
+        assert!(!s.has_delta_at(4));
+        let (joins, leaves) = s.deltas_at(3);
+        assert_eq!(joins, vec![8]);
+        assert!(leaves.is_empty());
+        assert_eq!(s.initial_live(9), vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(s.join_steps(9), vec![0, 0, 0, 0, 0, 0, 0, 0, 3]);
+        // Round trip through both text forms.
+        assert_eq!(MembershipSchedule::parse(&s.canonical()).unwrap(), s);
+        let entries = s.canonical_entries();
+        let refs: Vec<&str> = entries.iter().map(|e| e.as_str()).collect();
+        assert_eq!(MembershipSchedule::parse_list(&refs).unwrap(), s);
+        // Empty forms.
+        assert!(MembershipSchedule::parse("").unwrap().is_empty());
+        assert!(MembershipSchedule::parse("none").unwrap().is_empty());
+        assert_eq!(MembershipSchedule::empty().canonical(), "none");
+    }
+
+    #[test]
+    fn schedule_rejects_malformed_entries() {
+        assert!(MembershipSchedule::parse("join:8").is_err());
+        assert!(MembershipSchedule::parse("join:@3").is_err());
+        assert!(MembershipSchedule::parse("join:x@3").is_err());
+        assert!(MembershipSchedule::parse("join:8@x").is_err());
+        assert!(MembershipSchedule::parse("evict:8@3").is_err());
+        assert!(MembershipSchedule::parse("join8@3").is_err());
+    }
+
+    #[test]
+    fn schedule_validation_catches_nonsense() {
+        let ok = MembershipSchedule::parse("join:8@3,leave:2@6").unwrap();
+        assert!(ok.validate(9, 8).is_ok());
+        // Peer outside the universe.
+        assert!(ok.validate(8, 8).is_err());
+        // Step past the run.
+        assert!(ok.validate(9, 6).is_err());
+        // Peer 0 may not churn.
+        assert!(MembershipSchedule::parse("leave:0@3").unwrap().validate(4, 8).is_err());
+        // Step 0 is not a boundary.
+        assert!(MembershipSchedule::parse("join:2@0").unwrap().validate(4, 8).is_err());
+        // Leave must follow join.
+        assert!(MembershipSchedule::parse("join:2@5,leave:2@4").unwrap().validate(4, 8).is_err());
+        assert!(MembershipSchedule::parse("join:2@5,leave:2@5").unwrap().validate(4, 8).is_err());
+        // Join then leave is fine.
+        assert!(MembershipSchedule::parse("join:2@3,leave:2@5").unwrap().validate(4, 8).is_ok());
+        // Fewer than 2 founding members can never reach a boundary.
+        assert!(MembershipSchedule::parse("join:1@1").unwrap().validate(2, 4).is_err());
+        assert!(MembershipSchedule::parse("join:1@1,join:2@1").unwrap().validate(3, 4).is_err());
+        assert!(MembershipSchedule::parse("join:2@1").unwrap().validate(3, 4).is_ok());
+        // A later boundary may not shrink the live set below 2 either
+        // (ban-free trajectory; runtime bans only shrink it further).
+        assert!(MembershipSchedule::parse("leave:1@2,leave:2@2")
+            .unwrap()
+            .validate(3, 6)
+            .is_err());
+        assert!(MembershipSchedule::parse("leave:1@2").unwrap().validate(3, 6).is_ok());
+        // A same-boundary join can keep the count afloat.
+        assert!(MembershipSchedule::parse("join:3@2,leave:1@2,leave:2@2")
+            .unwrap()
+            .validate(4, 6)
+            .is_ok());
+    }
+
+    #[test]
+    fn snapshot_roundtrips_bit_exactly() {
+        let mut opt = Sgd::new(4, LrSchedule::Constant(0.1), 0.9, true);
+        let mut p = vec![1.0f32, -2.0, 3.0, 0.5];
+        opt.step(0, &mut p, &[0.1, 0.2, -0.3, 0.4]);
+        let snap = Snapshot {
+            step: 5,
+            epoch: 2,
+            clock: 61,
+            live: vec![0, 1, 3, 4],
+            owners: vec![0, 1, 3, 4, 0],
+            validators: vec![(1, 3)],
+            r_prev: [7u8; 32],
+            params: p.clone(),
+            opt_state: opt.state_bytes(),
+            ban_events: vec![BanEvent {
+                step: 3,
+                target: 2,
+                reason: BanReason::Equivocation,
+                by: 1,
+            }],
+            archive: Some(StepArchive {
+                step: 4,
+                params: vec![0.5, f32::MIN_POSITIVE, -0.25, 9.0],
+                seed_r: [3u8; 32],
+                z_r: [4u8; 32],
+                ghat: vec![0.1, 0.2, 0.3, 0.4],
+                contributors: vec![0, 1, 3],
+                commits: vec![
+                    None,
+                    Some(GradCommit { full: [1u8; 32], parts: vec![[2u8; 32]] }),
+                    None,
+                    None,
+                    None,
+                ],
+                scalars: vec![
+                    Some(VerifyScalars {
+                        s: vec![0.5],
+                        norms: vec![1.5],
+                        over: vec![0],
+                    }),
+                    None,
+                    None,
+                    None,
+                    None,
+                ],
+            }),
+        };
+        let decoded = Snapshot::decode(&snap.encode()).expect("decode");
+        assert_eq!(decoded.step, snap.step);
+        assert_eq!(decoded.epoch, snap.epoch);
+        assert_eq!(decoded.clock, snap.clock);
+        assert_eq!(decoded.live, snap.live);
+        assert_eq!(decoded.owners, snap.owners);
+        assert_eq!(decoded.validators, snap.validators);
+        assert_eq!(decoded.r_prev, snap.r_prev);
+        for (a, b) in decoded.params.iter().zip(&snap.params) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(decoded.opt_state, snap.opt_state);
+        assert_eq!(decoded.ban_events, snap.ban_events);
+        let (da, sa) = (decoded.archive.unwrap(), snap.archive.unwrap());
+        assert_eq!(da.step, sa.step);
+        for (a, b) in da.params.iter().zip(&sa.params) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(da.commits, sa.commits);
+        assert_eq!(da.scalars, sa.scalars);
+        assert_eq!(da.contributors, sa.contributors);
+        // Truncations rejected.
+        let enc = snap.encode();
+        assert!(Snapshot::decode(&enc[..enc.len() - 1]).is_none());
+        assert!(Snapshot::decode(&enc[..10]).is_none());
+        // Trailing garbage rejected.
+        let mut padded = enc;
+        padded.push(0);
+        assert!(Snapshot::decode(&padded).is_none());
+    }
+
+    #[test]
+    fn sgd_optimizer_state_transfers_exactly() {
+        // The joiner's optimizer must continue the sponsor's momentum
+        // trajectory bit-for-bit, or post-join params silently diverge.
+        let mut a = Sgd::new(3, LrSchedule::Constant(0.1), 0.9, true);
+        let mut pa = vec![1.0f32, 2.0, 3.0];
+        for s in 0..5 {
+            a.step(s, &mut pa, &[0.1, -0.2, 0.3]);
+        }
+        let mut b = Sgd::new(3, LrSchedule::Constant(0.1), 0.9, true);
+        assert!(b.load_state(&a.state_bytes()));
+        let mut pb = pa.clone();
+        a.step(5, &mut pa, &[0.05, 0.05, 0.05]);
+        b.step(5, &mut pb, &[0.05, 0.05, 0.05]);
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // Wrong-shaped state is refused, not silently truncated.
+        let mut c = Sgd::new(2, LrSchedule::Constant(0.1), 0.9, true);
+        assert!(!c.load_state(&a.state_bytes()));
+    }
+}

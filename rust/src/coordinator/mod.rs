@@ -11,6 +11,8 @@
 //!   hook per protocol surface, plus the composable spec grammar
 //! - `attacks` — the §4.1 gradient attack zoo (omniscient, colluding),
 //!   as `Adversary` impls behind the registry
+//! - `membership` — epoch-based dynamic membership: the churn schedule,
+//!   roster epochs, boundary stages and the JOIN snapshot transfer
 //! - `step` — Algorithm 6: one full BTARD step with Verifications 1–3
 //! - `validator`-logic lives inside `step` (CHECKCOMPUTATIONS)
 //! - `optimizer` — SGD+Nesterov+cosine, LAMB, global-norm clipping
@@ -22,6 +24,7 @@ pub mod adversary;
 pub mod aggregators;
 pub mod attacks;
 pub mod centered_clip;
+pub mod membership;
 pub mod messages;
 pub mod optimizer;
 pub mod partition;
@@ -35,6 +38,7 @@ pub use adversary::{Adversary, AdversarySpec, MprngBehavior, SurfaceSpec};
 pub use aggregators::Aggregator;
 pub use attacks::AttackSchedule;
 pub use centered_clip::{centered_clip, TauPolicy};
+pub use membership::{ChurnEvent, ChurnKind, Membership, MembershipSchedule, Snapshot};
 pub use step::{btard_step, Behavior, PeerCtx, ProtocolConfig, StepOutput};
 pub use training::{
     default_workers, run_btard, run_btard_pooled, run_btard_threaded, run_btard_with, run_ps,

@@ -53,6 +53,14 @@ pub fn clip_global_norm(grad: &mut [f32], max_norm: f32) -> f32 {
 pub trait Optimizer: Send {
     fn step(&mut self, step: u64, params: &mut [f32], grad: &[f32]);
     fn name(&self) -> &'static str;
+    /// Serialize the mutable state (momentum buffers etc.) for the JOIN
+    /// snapshot transfer: a mid-training joiner must continue the
+    /// cluster's optimizer trajectory bit-for-bit, or its post-step
+    /// parameters silently diverge from every incumbent's.
+    fn state_bytes(&self) -> Vec<u8>;
+    /// Install serialized state from `state_bytes`. Returns false (and
+    /// leaves self unchanged) on a shape/kind mismatch.
+    fn load_state(&mut self, bytes: &[u8]) -> bool;
 }
 
 /// SGD with (Nesterov) momentum.
@@ -84,6 +92,24 @@ impl Optimizer for Sgd {
 
     fn name(&self) -> &'static str {
         "sgd"
+    }
+
+    fn state_bytes(&self) -> Vec<u8> {
+        let mut w = crate::coordinator::messages::Writer::new();
+        w.u8(0); // kind tag: sgd
+        w.f32s(&self.velocity);
+        w.finish()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> bool {
+        let mut r = crate::coordinator::messages::Reader::new(bytes);
+        let ok = r.u8() == Some(0);
+        let Some(velocity) = r.f32s() else { return false };
+        if !ok || !r.done() || velocity.len() != self.velocity.len() {
+            return false;
+        }
+        self.velocity = velocity;
+        true
     }
 }
 
@@ -149,6 +175,27 @@ impl Optimizer for Lamb {
 
     fn name(&self) -> &'static str {
         "lamb"
+    }
+
+    fn state_bytes(&self) -> Vec<u8> {
+        let mut w = crate::coordinator::messages::Writer::new();
+        w.u8(1); // kind tag: lamb
+        w.f32s(&self.m);
+        w.f32s(&self.v);
+        w.finish()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> bool {
+        let mut r = crate::coordinator::messages::Reader::new(bytes);
+        let ok = r.u8() == Some(1);
+        let Some(m) = r.f32s() else { return false };
+        let Some(v) = r.f32s() else { return false };
+        if !ok || !r.done() || m.len() != self.m.len() || v.len() != self.v.len() {
+            return false;
+        }
+        self.m = m;
+        self.v = v;
+        true
     }
 }
 

@@ -7,7 +7,9 @@
 //! surviving peers round-robin, so a survivor may own several parts —
 //! bandwidth stays balanced to within one part.
 
+use crate::crypto::sha256_parts;
 use crate::net::PeerId;
+use crate::util::rng::Rng;
 
 /// SPLIT(v, n): the first (d mod n) parts have ⌈d/n⌉ elements, the rest
 /// ⌊d/n⌋ (paper Appendix D.1).
@@ -76,6 +78,42 @@ impl OwnerMap {
     /// Initial assignment: part j → peer j.
     pub fn initial(n_parts: usize) -> OwnerMap {
         OwnerMap { owners: (0..n_parts).collect() }
+    }
+
+    /// Epoch-boundary assignment: a **pure function of the epoch roster
+    /// and seed** — independent of input order, execution model, worker
+    /// count, or the path by which the roster was reached. Parts are
+    /// dealt round-robin over a seeded permutation of the live set, so
+    /// loads stay balanced to within one part. Used whenever dynamic
+    /// membership changes the roster; the static-roster path keeps
+    /// [`OwnerMap::initial`] + [`OwnerMap::reassign_banned`], whose
+    /// incremental history-dependence is pinned by the golden digest.
+    pub fn derive(n_parts: usize, live: &[PeerId], global_seed: u64, epoch: u64) -> OwnerMap {
+        assert!(!live.is_empty(), "cannot derive an owner map for an empty roster");
+        let mut roster: Vec<PeerId> = live.to_vec();
+        roster.sort_unstable();
+        roster.dedup();
+        let mut seed_input: Vec<u8> = Vec::with_capacity(16 + roster.len() * 8);
+        seed_input.extend_from_slice(&global_seed.to_le_bytes());
+        seed_input.extend_from_slice(&epoch.to_le_bytes());
+        for &p in &roster {
+            seed_input.extend_from_slice(&(p as u64).to_le_bytes());
+        }
+        let digest = sha256_parts(&[b"btard-owner-map", &seed_input]);
+        let mut rng = Rng::from_digest(&digest);
+        rng.shuffle(&mut roster);
+        OwnerMap { owners: (0..n_parts).map(|j| roster[j % roster.len()]).collect() }
+    }
+
+    /// Rebuild from a serialized owner vector (JOIN snapshot transfer).
+    pub fn from_vec(owners: Vec<PeerId>) -> OwnerMap {
+        assert!(!owners.is_empty());
+        OwnerMap { owners }
+    }
+
+    /// The raw owner vector (JOIN snapshot transfer).
+    pub fn to_vec(&self) -> Vec<PeerId> {
+        self.owners.clone()
     }
 
     pub fn owner(&self, part: usize) -> PeerId {
@@ -181,6 +219,39 @@ mod tests {
         b.reassign_banned(&[0, 3, 7]);
         assert_eq!(a.parts_of(0), b.parts_of(0));
         assert_eq!(a.parts_of(3), b.parts_of(3));
+    }
+
+    #[test]
+    fn derive_is_a_pure_function_of_roster_and_seed() {
+        let live = vec![0usize, 2, 3, 5, 7];
+        let a = OwnerMap::derive(9, &live, 42, 3);
+        let b = OwnerMap::derive(9, &live, 42, 3);
+        assert_eq!(a.to_vec(), b.to_vec());
+        // Input order must not matter: the roster is a set.
+        let mut shuffled = live.clone();
+        shuffled.reverse();
+        let c = OwnerMap::derive(9, &shuffled, 42, 3);
+        assert_eq!(a.to_vec(), c.to_vec());
+        // Different epoch or seed ⇒ (generally) a different assignment.
+        let d = OwnerMap::derive(9, &live, 42, 4);
+        let e = OwnerMap::derive(9, &live, 43, 3);
+        assert!(a.to_vec() != d.to_vec() || a.to_vec() != e.to_vec());
+        // Every part owned by a live peer, loads within one part.
+        for j in 0..9 {
+            assert!(live.contains(&a.owner(j)), "part {j}");
+        }
+        let loads: Vec<usize> = live.iter().map(|&p| a.parts_of(p).len()).collect();
+        let (mx, mn) = (*loads.iter().max().unwrap(), *loads.iter().min().unwrap());
+        assert!(mx - mn <= 1, "loads {loads:?}");
+    }
+
+    #[test]
+    fn derive_roundtrips_through_vec() {
+        let m = OwnerMap::derive(6, &[1, 4, 5], 7, 1);
+        let rebuilt = OwnerMap::from_vec(m.to_vec());
+        for j in 0..6 {
+            assert_eq!(m.owner(j), rebuilt.owner(j));
+        }
     }
 
     #[test]

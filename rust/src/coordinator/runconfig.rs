@@ -21,6 +21,7 @@
 //!   "eval_every": 20, "verify_signatures": true,
 //!   "gossip_fanout": 8,
 //!   "network": "lossy:0.05",
+//!   "churn": ["join:8@3", "leave:2@6"],
 //!   "transport": "local",
 //!   "workload": {"kind": "quadratic", "dim": 1024, "mu": 0.1,
 //!                 "L": 2.0, "sigma": 1.0, "seed": 9}
@@ -44,6 +45,14 @@
 //! `straggler[:frac]`) or an object with per-field overrides — see
 //! `net::sim::NetworkProfile::from_json` for the full schema.
 //!
+//! `churn` is the dynamic-membership schedule: an array of
+//! `join:<peer>@<step>` / `leave:<peer>@<step>` entries (or one
+//! comma-separated string). `peers` is the id *universe* — every peer
+//! that will ever exist — and scheduled joiners are simply not live
+//! until their boundary step. Schedules that cannot fire (peer outside
+//! the universe, step past the run, peer 0 churning, leave before join)
+//! are hard errors. See `coordinator::membership` for the protocol.
+//!
 //! `transport` selects the message substrate: `"local"` (the in-process
 //! fabric / network simulation, the default) or `"socket"` (a real TCP
 //! mesh between `btard peer` processes — launched via `btard cluster`,
@@ -63,6 +72,7 @@
 use super::adversary::AdversarySpec;
 use super::attacks::AttackSchedule;
 use super::centered_clip::TauPolicy;
+use super::membership::MembershipSchedule;
 use super::optimizer::LrSchedule;
 use super::step::ProtocolConfig;
 use super::training::{OptSpec, RunConfig};
@@ -210,6 +220,28 @@ pub fn parse_run_config_full(text: &str) -> Result<LoadedRunConfig> {
     if let Some(nv) = j.get("network") {
         if *nv != Json::Null {
             cfg.network = NetworkProfile::from_json(nv).map_err(|e| anyhow!("{e}"))?;
+        }
+    }
+
+    // dynamic-membership schedule (null ⇒ static roster)
+    if let Some(cv) = j.get("churn") {
+        if *cv != Json::Null {
+            let schedule = if let Some(s) = cv.as_str() {
+                MembershipSchedule::parse(s).map_err(|e| anyhow!("churn: {e}"))?
+            } else {
+                let arr = cv
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("churn must be a string or an array of strings"))?;
+                let mut entries = Vec::with_capacity(arr.len());
+                for v in arr {
+                    entries.push(
+                        v.as_str().ok_or_else(|| anyhow!("churn entries must be strings"))?,
+                    );
+                }
+                MembershipSchedule::parse_list(&entries).map_err(|e| anyhow!("churn: {e}"))?
+            };
+            schedule.validate(peers, steps).map_err(|e| anyhow!("{e}"))?;
+            cfg.churn = schedule;
         }
     }
 
@@ -465,6 +497,11 @@ pub fn write_run_config(
     if let Some(lambda) = cfg.clip_lambda {
         root.push(("clip_lambda", Json::num(lambda as f64)));
     }
+    if !cfg.churn.is_empty() {
+        let entries: Vec<Json> =
+            cfg.churn.canonical_entries().iter().map(|e| Json::str(e)).collect();
+        root.push(("churn", Json::Arr(entries)));
+    }
 
     if let Some((spec, schedule)) = &cfg.attack {
         let mut a: Vec<(&'static str, Json)> = vec![
@@ -691,6 +728,48 @@ mod tests {
     }
 
     #[test]
+    fn churn_key_parses_both_forms_and_validates() {
+        // Array form.
+        let cfg = parse_run_config(
+            r#"{"peers": 9, "steps": 8, "churn": ["join:8@3", "leave:2@6"]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.churn.canonical(), "join:8@3,leave:2@6");
+        // String form.
+        let cfg =
+            parse_run_config(r#"{"peers": 9, "steps": 8, "churn": "join:8@3,leave:2@6"}"#)
+                .unwrap();
+        assert_eq!(cfg.churn.canonical(), "join:8@3,leave:2@6");
+        // Null / absent ⇒ static roster.
+        assert!(parse_run_config(r#"{"churn": null}"#).unwrap().churn.is_empty());
+        assert!(parse_run_config("{}").unwrap().churn.is_empty());
+        // A schedule that cannot fire is a hard error, not a silent
+        // static-roster run: out-of-universe peer, step past the run,
+        // peer 0 churning, malformed entries.
+        assert!(parse_run_config(r#"{"peers": 8, "steps": 8, "churn": ["join:8@3"]}"#).is_err());
+        assert!(parse_run_config(r#"{"peers": 9, "steps": 3, "churn": ["join:8@3"]}"#).is_err());
+        assert!(parse_run_config(r#"{"peers": 4, "steps": 8, "churn": ["leave:0@2"]}"#).is_err());
+        assert!(parse_run_config(r#"{"peers": 4, "steps": 8, "churn": ["join:2"]}"#).is_err());
+        assert!(parse_run_config(r#"{"peers": 4, "steps": 8, "churn": [3]}"#).is_err());
+    }
+
+    #[test]
+    fn writer_roundtrips_churn_schedules() {
+        let mut cfg = RunConfig::quick(9, 8);
+        cfg.churn = MembershipSchedule::parse("join:8@3,leave:2@6").unwrap();
+        cfg.opt = OptSpec::Sgd {
+            schedule: LrSchedule::Constant(0.1),
+            momentum: 0.0,
+            nesterov: false,
+        };
+        let text = write_run_config(&cfg, TransportKind::Socket, &WorkloadSpec::default_mlp())
+            .unwrap();
+        assert!(text.contains("join:8@3"), "{text}");
+        let loaded = parse_run_config_full(&text).unwrap();
+        assert_cfg_eq(&cfg, &loaded.cfg);
+    }
+
+    #[test]
     fn transport_and_workload_parse() {
         let loaded = parse_run_config_full(
             r#"{"transport": "socket",
@@ -722,6 +801,7 @@ mod tests {
         assert_eq!(a.gossip_fanout, b.gossip_fanout);
         assert_eq!(a.clip_lambda, b.clip_lambda);
         assert_eq!(a.network, b.network);
+        assert_eq!(a.churn, b.churn);
         assert_eq!(format!("{:?}", a.protocol), format!("{:?}", b.protocol));
         assert_eq!(format!("{:?}", a.opt), format!("{:?}", b.opt));
         match (&a.attack, &b.attack) {

@@ -26,6 +26,7 @@
 use super::accuse::{BanIntent, BanLedger};
 use super::adversary::{Adversary, GradientCtx, MprngBehavior};
 use super::centered_clip::{centered_clip_init, clipped_diff, TauPolicy};
+use super::membership::Membership;
 use super::messages::{Accusation, BanReason, GradCommit, VerifyScalars, Writer};
 use super::partition::{OwnerMap, PartitionSpec};
 use crate::crypto::{sha256_f32, sha256_parts, Digest};
@@ -97,7 +98,10 @@ impl Behavior {
     }
 }
 
-/// Data archived from step t, needed to validate peers during step t+1.
+/// Data archived from step t, needed to validate peers during step t+1
+/// (and carried to mid-run joiners inside the membership snapshot, so
+/// they adjudicate accusations about the previous step identically).
+#[derive(Clone)]
 pub struct StepArchive {
     pub step: u64,
     pub params: Vec<f32>,
@@ -120,7 +124,13 @@ pub struct PeerCtx {
     pub source: Arc<dyn GradientSource>,
     pub spec: PartitionSpec,
     pub owners: OwnerMap,
+    /// Live roster of the current epoch. With a static schedule this is
+    /// the initial universe minus bans; with dynamic membership it is
+    /// epoch-roster-derived (boundary deltas applied in the membership
+    /// stages, bans applied in `stage_finish`).
     pub live: Vec<PeerId>,
+    /// Roster-epoch state: the churn schedule plus the current epoch.
+    pub membership: Membership,
     pub ledger: BanLedger,
     pub equiv: EquivocationTracker,
     pub behavior: Behavior,
@@ -178,6 +188,23 @@ pub fn batch_seed(r_prev: &[u8; 32], peer: PeerId) -> u64 {
 pub fn z_vector(r: &[u8; 32], part: usize, len: usize) -> Vec<f32> {
     let d = sha256_parts(&[b"btard-z", r, &(part as u64).to_le_bytes()]);
     Rng::from_digest(&d).unit_vector(len)
+}
+
+/// The validator draw: m (validator, target) pairs from the live roster
+/// and the shared randomness r. The ONE derivation both `stage_finish`
+/// (end of every step) and the membership boundary (re-draw from the
+/// post-delta epoch roster) use — the sites must agree bit-for-bit or
+/// boundary-step validator slots would silently desynchronize from
+/// ordinary-step ones.
+pub fn draw_validators(
+    live: &[PeerId],
+    r: &[u8; 32],
+    m_validators: usize,
+) -> Vec<(PeerId, PeerId)> {
+    let m = m_validators.min(live.len() / 2);
+    let mut vrng = Rng::from_digest(&sha256_parts(&[b"btard-validators", r]));
+    let picks = vrng.sample_distinct(live.len(), 2 * m);
+    (0..m).map(|k| (live[picks[k]], live[picks[m + k]])).collect()
 }
 
 impl PeerCtx {
@@ -1217,12 +1244,7 @@ pub fn stage_finish(
 
     // Validators for the next step, drawn from r^t (consensus data).
     let r_out = st.r_out.expect("MPRNG must have converged");
-    let m = ctx.cfg.m_validators.min(ctx.live.len() / 2);
-    let mut vrng = Rng::from_digest(&sha256_parts(&[b"btard-validators", &r_out]));
-    let picks = vrng.sample_distinct(ctx.live.len(), 2 * m);
-    ctx.validators = (0..m)
-        .map(|k| (ctx.live[picks[k]], ctx.live[picks[m + k]]))
-        .collect();
+    ctx.validators = draw_validators(&ctx.live, &r_out, ctx.cfg.m_validators);
 
     // Archive this step for next step's validation.
     ctx.archive = Some(StepArchive {

@@ -22,6 +22,9 @@ use super::accuse::BanEvent;
 use super::adversary::{Adversary, AdversarySpec, GradientCtx, SurfaceSpec};
 use super::aggregators::Aggregator;
 use super::attacks::{AttackSchedule, CollusionBoard};
+use super::membership::{
+    stage_boundary_apply, stage_boundary_join, Membership, MembershipSchedule,
+};
 use super::optimizer::{clip_global_norm, Lamb, LrSchedule, Optimizer, Sgd};
 use super::step::{
     batch_seed, btard_step, stage_agg_commits, stage_agg_parts, stage_begin, stage_commits,
@@ -60,6 +63,9 @@ impl OptSpec {
 
 #[derive(Clone)]
 pub struct RunConfig {
+    /// Size of the peer-id *universe*: every peer that will ever exist
+    /// in the run, including scheduled late joiners. The ids live at
+    /// step 0 are this range minus the churn schedule's joiners.
     pub n_peers: usize,
     /// Byzantine peer ids (peer 0 must stay honest: it records metrics).
     pub byzantine: Vec<PeerId>,
@@ -81,6 +87,10 @@ pub struct RunConfig {
     /// default, or a seeded fault profile (loss, latency, stragglers,
     /// partitions) simulated by the `SimNet` transport backend.
     pub network: NetworkProfile,
+    /// Dynamic-membership schedule (`join:<peer>@<step>`,
+    /// `leave:<peer>@<step>`). Empty = static roster, bit-identical to
+    /// the pre-membership behaviour. See `coordinator::membership`.
+    pub churn: MembershipSchedule,
     /// Optimizer parameter segments (from the artifact manifest; empty
     /// for Rust-native models).
     pub segments: Vec<crate::runtime::ParamSegment>,
@@ -105,6 +115,7 @@ impl RunConfig {
             verify_signatures: true,
             gossip_fanout: 8,
             network: NetworkProfile::perfect(),
+            churn: MembershipSchedule::empty(),
             segments: vec![],
         }
     }
@@ -266,6 +277,18 @@ pub fn validate_attack_spec(cfg: &RunConfig) {
     }
 }
 
+/// Reject churn schedules that cannot mean anything on this run (peer
+/// outside the universe, step past the run, peer 0 churning, leave
+/// before join): a typo'd schedule must not silently run a static-roster
+/// experiment. Public for the same reason as `validate_attack_spec` —
+/// every run entry point, including a standalone `btard peer` process,
+/// must apply it.
+pub fn validate_churn(cfg: &RunConfig) {
+    if let Err(e) = cfg.churn.validate(cfg.n_peers, cfg.steps) {
+        panic!("{e}");
+    }
+}
+
 /// BTARD-CLIPPED-SGD wraps the source so validators recompute the same
 /// clipped vectors (Algorithm 9); plain BTARD passes it through. Every
 /// run entry point — both in-process loops and a standalone
@@ -311,6 +334,7 @@ pub fn run_btard_threaded(cfg: &RunConfig, source: Arc<dyn GradientSource>) -> R
     assert!(!cfg.byzantine.contains(&0), "peer 0 must stay honest (metrics)");
     assert!(cfg.n_peers >= 2);
     validate_attack_spec(cfg);
+    validate_churn(cfg);
     let source = prepare_source(cfg, source);
     let init_params = source.init_params(cfg.seed);
     let transports = build_transports(
@@ -373,8 +397,11 @@ struct PeerTask {
     /// In-flight step state between stage dispatches.
     state: Option<StepState>,
     error: Option<StepError>,
-    /// Banned or collapsed: stops participating in further steps.
+    /// Banned, left, or collapsed: stops participating in further steps.
     done: bool,
+    /// Scheduled join step (None = founding member): the task is held
+    /// out of the active set — no stages, no ticks — until this step.
+    join_at: Option<u64>,
     step_t0: Instant,
 }
 
@@ -383,6 +410,12 @@ struct PeerTask {
 /// barrier between dispatches makes the transport's drain mode exact.
 #[derive(Clone, Copy, Debug)]
 enum StageId {
+    /// Epoch-boundary stage 1 (boundary steps only): apply membership
+    /// deltas, sponsor sends JOIN snapshots, leavers broadcast LEAVE.
+    BoundaryApply,
+    /// Epoch-boundary stage 2: the joiner collects + installs its
+    /// snapshot (sent one stage earlier — the barrier invariant holds).
+    BoundaryJoin,
     Begin,
     Commits,
     Parts,
@@ -462,6 +495,20 @@ fn run_peer_stage(task: &mut PeerTask, stage: StageId, step: u64) {
         return;
     }
     match stage {
+        StageId::BoundaryApply => {
+            if stage_boundary_apply(&mut task.ctx, step, &task.params, &*task.opt) {
+                // Graceful leave: excised, not banned — participation
+                // simply ends (steps_done already covers step-1).
+                task.done = true;
+            }
+        }
+        StageId::BoundaryJoin => {
+            if !stage_boundary_join(&mut task.ctx, step, &mut task.params, &mut *task.opt) {
+                // Never admitted (banned pre-join or no snapshot): the
+                // peer ends with zero participation, deterministically.
+                task.done = true;
+            }
+        }
         StageId::Begin => {
             task.step_t0 = Instant::now();
             task.state = Some(stage_begin(&mut task.ctx, step, &task.params));
@@ -622,6 +669,7 @@ pub fn run_btard_pooled(
     assert!(!cfg.byzantine.contains(&0), "peer 0 must stay honest (metrics)");
     assert!(cfg.n_peers >= 2);
     validate_attack_spec(cfg);
+    validate_churn(cfg);
     let source = prepare_source(cfg, source);
     let init_params = source.init_params(cfg.seed);
     let transports = build_transports(
@@ -656,6 +704,7 @@ pub fn run_btard_pooled(
                 state: None,
                 error: None,
                 done: false,
+                join_at: cfg.churn.join_step(peer),
                 step_t0: Instant::now(),
             })
         })
@@ -683,13 +732,16 @@ pub fn run_btard_pooled(
         }
 
         'run: for step in 0..cfg.steps {
+            // Tasks whose join step is still ahead are held out entirely
+            // (no stages, no ticks) — they enter the active set at their
+            // boundary, where the membership stages admit them.
             let active: Vec<usize> = shared
                 .tasks
                 .iter()
                 .enumerate()
                 .filter(|(_, cell)| {
                     let t = lock_task(cell);
-                    !t.done && t.error.is_none()
+                    !t.done && t.error.is_none() && t.join_at.map_or(true, |j| j <= step)
                 })
                 .map(|(i, _)| i)
                 .collect();
@@ -699,6 +751,18 @@ pub fn run_btard_pooled(
             let probe_idx = active[0];
             let active_idx = active.clone();
             *shared.active.lock().unwrap() = active;
+
+            // Epoch boundary: two membership stages ahead of the step's
+            // twelve. Dispatched only when the schedule names this step,
+            // so static-roster runs dispatch exactly what they always
+            // did (the golden-digest guarantee).
+            if cfg.churn.has_delta_at(step) {
+                dispatch(&shared, StageId::BoundaryApply, step);
+                dispatch(&shared, StageId::BoundaryJoin, step);
+                if shared.failed.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
 
             for stage in [
                 StageId::Begin,
@@ -848,13 +912,24 @@ fn build_peer_ctx(
         Behavior::Honest
     };
     let r0 = crate::crypto::sha256_parts(&[b"btard-r0", &cfg.seed.to_le_bytes()]);
+    // Epoch-0 roster: the universe minus scheduled joiners. The static
+    // path keeps the identity owner map (part j → peer j) bit-for-bit;
+    // a dynamic schedule derives epoch 0's owners from the initial
+    // roster the same way every later boundary does.
+    let live = cfg.churn.initial_live(cfg.n_peers);
+    let owners = if cfg.churn.is_empty() {
+        super::partition::OwnerMap::initial(cfg.protocol.n0)
+    } else {
+        super::partition::OwnerMap::derive(cfg.protocol.n0, &live, cfg.protocol.global_seed, 0)
+    };
     PeerCtx {
         net,
         cfg: cfg.protocol.clone(),
         source,
         spec: super::partition::PartitionSpec::new(param_dim, cfg.protocol.n0),
-        owners: super::partition::OwnerMap::initial(cfg.protocol.n0),
-        live: (0..cfg.n_peers).collect(),
+        owners,
+        live,
+        membership: Membership::new(cfg.churn.clone()),
         ledger: super::accuse::BanLedger::new(),
         equiv: crate::net::gossip::EquivocationTracker::new(),
         behavior,
@@ -883,13 +958,31 @@ pub fn peer_main(
     board: Arc<CollusionBoard>,
 ) -> PeerOutput {
     let mut ctx = build_peer_ctx(net, &cfg, source, init_params.len(), &board);
+    let me = ctx.net.id();
+    let my_join = cfg.churn.join_step(me);
     let mut params = init_params;
     let mut opt = cfg.opt.build(params.len(), cfg.segments.clone());
     let mut metrics = Vec::new();
     let mut steps_done = 0u64;
     let mut final_metric = f64::NAN;
 
-    for step in 0..cfg.steps {
+    'steps: for step in 0..cfg.steps {
+        // A scheduled late joiner sits out every step before its
+        // boundary: no stages, no ticks, no traffic.
+        if my_join.map_or(false, |j| step < j) {
+            continue;
+        }
+        if cfg.churn.has_delta_at(step) {
+            // Boundary stages, in the same order the pooled scheduler
+            // dispatches them (blocking receives absorb the wall-clock
+            // skew the stage barrier removes).
+            if stage_boundary_apply(&mut ctx, step, &params, &*opt) {
+                break 'steps; // graceful leave: excised, not banned
+            }
+            if !stage_boundary_join(&mut ctx, step, &mut params, &mut *opt) {
+                break 'steps; // never admitted (banned pre-join / no snapshot)
+            }
+        }
         let t0 = std::time::Instant::now();
         let out = match btard_step(&mut ctx, step, &params) {
             Ok(o) => o,

@@ -36,8 +36,8 @@ use crate::coordinator::runconfig::{
     write_run_config, LoadedRunConfig, TransportKind, WorkloadSpec,
 };
 use crate::coordinator::training::{
-    peer_main, prepare_source, run_btard_pooled, validate_attack_spec, RunConfig, RunResult,
-    StepMetric,
+    peer_main, prepare_source, run_btard_pooled, validate_attack_spec, validate_churn, RunConfig,
+    RunResult, StepMetric,
 };
 use crate::net::socket::{bind_ephemeral, derive_keypair, SocketConfig, SocketNet};
 use crate::net::{PeerId, Roster, RosterEntry, Transport};
@@ -433,6 +433,10 @@ pub fn run_peer(
         gossip_fanout: cfg.gossip_fanout,
         verify_signatures: cfg.verify_signatures,
         connect_timeout,
+        // The churn schedule's join-step table: which links form at
+        // mesh-build time vs lazily at each joiner's epoch boundary,
+        // and the epoch every inbound HELLO must claim.
+        join_steps: cfg.churn.join_steps(cfg.n_peers),
         ..SocketConfig::default()
     };
     let net = SocketNet::connect(listener, &roster, id, secret, &scfg)
@@ -440,6 +444,7 @@ pub fn run_peer(
     let info = net.info().clone();
 
     validate_attack_spec(cfg);
+    validate_churn(cfg);
     let source = prepare_source(cfg, loaded.workload.build());
     let init_params = source.init_params(cfg.seed);
     let board = CollusionBoard::new();
@@ -500,6 +505,11 @@ pub fn run_cluster(
     opts: &ClusterOptions,
 ) -> Result<ClusterOutcome, String> {
     let n = cfg.n_peers;
+    // Reject nonsense schedules in the parent, before forking anything:
+    // leaving this to the children turns an immediate "peer 9 outside
+    // the 9-id universe" into N per-peer log files and a generic
+    // rendezvous failure.
+    cfg.churn.validate(cfg.n_peers, cfg.steps)?;
     std::fs::create_dir_all(&opts.out_dir)
         .map_err(|e| format!("creating {}: {e}", opts.out_dir.display()))?;
     // Clear any previous run's rendezvous artifacts: a stale roster.json

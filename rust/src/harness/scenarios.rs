@@ -13,6 +13,7 @@
 use crate::coordinator::adversary::AdversarySpec;
 use crate::coordinator::attacks::AttackSchedule;
 use crate::coordinator::centered_clip::TauPolicy;
+use crate::coordinator::membership::MembershipSchedule;
 use crate::coordinator::optimizer::LrSchedule;
 use crate::coordinator::training::{
     default_workers, run_btard_pooled, run_ps, OptSpec, PsConfig, RunConfig,
@@ -69,6 +70,11 @@ pub struct ScenarioSpec {
     /// Network profiles per `NetworkProfile::from_name`: perfect,
     /// lossy[:drop], partitioned[:frac], straggler[:frac].
     pub networks: Vec<String>,
+    /// Dynamic-membership schedules per `MembershipSchedule::parse`
+    /// ("none", or comma-joined `join:<peer>@<step>` /
+    /// `leave:<peer>@<step>` entries). Cells whose schedule cannot fire
+    /// at a given cluster size / step count are skipped with a notice.
+    pub churn: Vec<String>,
     pub steps: u64,
     /// Objective dimension (raised to the cluster size when smaller, so
     /// every peer owns at least one coordinate).
@@ -94,6 +100,7 @@ impl ScenarioSpec {
             attacks: vec!["none".to_string(), "sign_flip:1000".to_string()],
             arms: vec![Arm::Btard],
             networks: vec!["perfect".to_string()],
+            churn: vec!["none".to_string()],
             steps: 6,
             dim: 1024,
             attack_start: 2,
@@ -111,13 +118,14 @@ impl ScenarioSpec {
     /// Unknown keys and present-but-wrong-typed values are hard errors: a
     /// typo'd experiment spec must not silently run the wrong experiment.
     pub fn parse(text: &str) -> Result<ScenarioSpec, String> {
-        const KNOWN: [&str; 16] = [
+        const KNOWN: [&str; 17] = [
             "name",
             "cluster_sizes",
             "byzantine_frac",
             "attacks",
             "arms",
             "networks",
+            "churn",
             "steps",
             "dim",
             "attack_start",
@@ -188,6 +196,16 @@ impl ScenarioSpec {
             }
             spec.networks = parsed;
         }
+        if let Some(v) = j.get("churn") {
+            let churn = v.as_arr().ok_or("churn must be an array")?;
+            let mut parsed = Vec::new();
+            for c in churn {
+                let s = c.as_str().ok_or("churn entries must be strings")?;
+                MembershipSchedule::parse(s).map_err(|e| format!("churn '{s}': {e}"))?;
+                parsed.push(s.to_string());
+            }
+            spec.churn = parsed;
+        }
         if let Some(v) = j.get("steps") {
             spec.steps = v.as_u64().ok_or("steps must be an integer")?;
         }
@@ -236,6 +254,9 @@ pub struct CellResult {
     /// Network profile the cell ran under (BTARD arms only; the PS
     /// baselines do not model transport, so the value is inert there).
     pub network: String,
+    /// Membership schedule the cell ran under ("none" = static roster;
+    /// BTARD arms only — the PS baselines have no membership model).
+    pub churn: String,
     pub final_metric: f64,
     pub steps_done: u64,
     pub bans: usize,
@@ -278,6 +299,7 @@ pub fn run_matrix(spec: &ScenarioSpec, out_dir: &Path) -> std::io::Result<Matrix
             "attack",
             "arm",
             "network",
+            "churn",
             "final_metric",
             "steps_done",
             "bans",
@@ -317,27 +339,66 @@ pub fn run_matrix(spec: &ScenarioSpec, out_dir: &Path) -> std::io::Result<Matrix
                     if ni > 0 && matches!(arm, Arm::Ps(_)) {
                         continue;
                     }
-                    let c = run_cell(spec, n, attack, arm, network);
-                    w.row(&[
-                        c.n.to_string(),
-                        c.byz.to_string(),
-                        c.attack.clone(),
-                        c.arm.clone(),
-                        c.network.clone(),
-                        format_f64(c.final_metric),
-                        c.steps_done.to_string(),
-                        c.bans.to_string(),
-                        c.last_ban_step.map(|s| s.to_string()).unwrap_or_default(),
-                        format_f64(c.bytes_per_peer_step),
-                        c.recomputes.to_string(),
-                        format_f64(c.wall_s),
-                        format_f64(c.avg_step_ms),
-                        c.net_dropped_msgs.to_string(),
-                        c.net_late_msgs.to_string(),
-                        c.net_retx_bytes.to_string(),
-                    ])?;
-                    w.flush()?;
-                    cells.push(c);
+                    for (ci, churn) in spec.churn.iter().enumerate() {
+                        // Likewise, the PS baselines have no membership
+                        // model: they run once, on the first *static*
+                        // ("none") entry wherever it sits in the list —
+                        // and if the list has no static entry at all,
+                        // the skip is loud, never silent.
+                        if matches!(arm, Arm::Ps(_)) {
+                            match spec.churn.iter().position(|c| c == "none") {
+                                Some(idx) if idx == ci => {}
+                                Some(_) => continue,
+                                None => {
+                                    if ci == 0 {
+                                        eprintln!(
+                                            "scenario matrix: skipping n={n} attack={attack} \
+                                             arm={}: the PS baselines have no membership model \
+                                             and the churn list has no 'none' entry",
+                                            arm.name()
+                                        );
+                                    }
+                                    continue;
+                                }
+                            }
+                        }
+                        // A schedule is swept across cluster sizes; a
+                        // cell it cannot fire in (peer outside this
+                        // size's universe, step past the run) is skipped
+                        // loudly, never run silently as static.
+                        let schedule = MembershipSchedule::parse(churn)
+                            .unwrap_or_else(|e| panic!("churn '{churn}' failed to parse: {e}"));
+                        if let Err(reason) = schedule.validate(n, spec.steps) {
+                            eprintln!(
+                                "scenario matrix: skipping n={n} attack={attack} arm={} \
+                                 churn='{churn}': {reason}",
+                                arm.name()
+                            );
+                            continue;
+                        }
+                        let c = run_cell(spec, n, attack, arm, network, churn, schedule);
+                        w.row(&[
+                            c.n.to_string(),
+                            c.byz.to_string(),
+                            c.attack.clone(),
+                            c.arm.clone(),
+                            c.network.clone(),
+                            c.churn.clone(),
+                            format_f64(c.final_metric),
+                            c.steps_done.to_string(),
+                            c.bans.to_string(),
+                            c.last_ban_step.map(|s| s.to_string()).unwrap_or_default(),
+                            format_f64(c.bytes_per_peer_step),
+                            c.recomputes.to_string(),
+                            format_f64(c.wall_s),
+                            format_f64(c.avg_step_ms),
+                            c.net_dropped_msgs.to_string(),
+                            c.net_late_msgs.to_string(),
+                            c.net_retx_bytes.to_string(),
+                        ])?;
+                        w.flush()?;
+                        cells.push(c);
+                    }
                 }
             }
         }
@@ -353,6 +414,7 @@ pub fn run_matrix(spec: &ScenarioSpec, out_dir: &Path) -> std::io::Result<Matrix
                 ("attack", Json::str(&c.attack)),
                 ("arm", Json::str(&c.arm)),
                 ("network", Json::str(&c.network)),
+                ("churn", Json::str(&c.churn)),
                 ("final_metric", Json::num(c.final_metric)),
                 ("steps_done", Json::num(c.steps_done as f64)),
                 ("bans", Json::num(c.bans as f64)),
@@ -376,7 +438,15 @@ pub fn run_matrix(spec: &ScenarioSpec, out_dir: &Path) -> std::io::Result<Matrix
     Ok(MatrixReport { cells, csv_path, json_path })
 }
 
-fn run_cell(spec: &ScenarioSpec, n: usize, attack: &str, arm: &Arm, network: &str) -> CellResult {
+fn run_cell(
+    spec: &ScenarioSpec,
+    n: usize,
+    attack: &str,
+    arm: &Arm,
+    network: &str,
+    churn: &str,
+    schedule: MembershipSchedule,
+) -> CellResult {
     let byz = if attack == "none" { 0 } else { spec.byz_count(n) };
     let attack_cfg = if attack == "none" {
         None
@@ -416,6 +486,7 @@ fn run_cell(spec: &ScenarioSpec, n: usize, attack: &str, arm: &Arm, network: &st
                 gossip_fanout: 8,
                 network: NetworkProfile::from_name(network)
                     .unwrap_or_else(|| panic!("unknown network profile '{network}'")),
+                churn: schedule,
                 segments: vec![],
             };
             run_btard_pooled(&cfg, source, spec.workers)
@@ -458,6 +529,7 @@ fn run_cell(spec: &ScenarioSpec, n: usize, attack: &str, arm: &Arm, network: &st
         attack: attack.to_string(),
         arm: arm.name(),
         network: network.to_string(),
+        churn: churn.to_string(),
         final_metric: res.final_metric,
         steps_done: res.steps_done,
         bans: res.ban_events.len(),
@@ -532,6 +604,7 @@ mod tests {
             attacks: vec!["none".to_string()],
             arms: vec![Arm::Btard, Arm::Ps(Aggregator::Mean)],
             networks: vec!["perfect".to_string()],
+            churn: vec!["none".to_string()],
             steps: 2,
             dim: 64,
             attack_start: 1,
@@ -574,6 +647,7 @@ mod tests {
             attacks: vec!["none".to_string(), "equivocate".to_string()],
             arms: vec![Arm::Btard, Arm::Ps(Aggregator::Mean)],
             networks: vec!["perfect".to_string()],
+            churn: vec!["none".to_string()],
             steps: 2,
             dim: 64,
             attack_start: 1,
@@ -599,6 +673,55 @@ mod tests {
     }
 
     #[test]
+    fn churn_axis_sweeps_and_skips_unfittable_cells() {
+        // One static cell plus one churn cell (peer 3 joins at step 1,
+        // fits n=4) and one that cannot fire at n=4 (names peer 7):
+        // the unfittable schedule is skipped, never run as static.
+        let spec = ScenarioSpec {
+            name: "unit_churn".to_string(),
+            cluster_sizes: vec![4],
+            byzantine_frac: 0.0,
+            attacks: vec!["none".to_string()],
+            arms: vec![Arm::Btard, Arm::Ps(Aggregator::Mean)],
+            networks: vec!["perfect".to_string()],
+            churn: vec![
+                "none".to_string(),
+                "join:3@1".to_string(),
+                "join:7@1".to_string(),
+            ],
+            steps: 3,
+            dim: 64,
+            attack_start: 1,
+            tau: 2.0,
+            delta_max: 5.0,
+            lr: 0.1,
+            seed: 3,
+            workers: 2,
+            eval_every: 1,
+            verify_signatures: false,
+        };
+        let dir =
+            std::env::temp_dir().join(format!("btard_scenarios_churn_{}", std::process::id()));
+        let report = run_matrix(&spec, &dir).unwrap();
+        // btard × {none, join:3@1} + ps × {none} = 3 cells.
+        assert_eq!(report.cells.len(), 3, "{:?}", report.cells);
+        let churn_cell = report
+            .cells
+            .iter()
+            .find(|c| c.churn == "join:3@1")
+            .expect("churn cell must run");
+        assert_eq!(churn_cell.arm, "btard");
+        assert_eq!(churn_cell.steps_done, 3, "{churn_cell:?}");
+        assert_eq!(churn_cell.bans, 0, "a graceful join must not record bans");
+        assert!(report.cells.iter().all(|c| c.churn != "join:7@1"), "{:?}", report.cells);
+        assert!(report.cells.iter().all(|c| !(c.arm == "ps_mean" && c.churn != "none")));
+        let csv = std::fs::read_to_string(&report.csv_path).unwrap();
+        assert!(csv.lines().next().unwrap().contains("churn"));
+        assert!(csv.contains("join:3@1"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn network_axis_sweeps_and_reports() {
         // The same cell swept under perfect and lossy fabrics: the lossy
         // cell must record its profile in the CSV and still complete (at
@@ -611,6 +734,7 @@ mod tests {
             attacks: vec!["none".to_string()],
             arms: vec![Arm::Btard],
             networks: vec!["perfect".to_string(), "lossy".to_string()],
+            churn: vec!["none".to_string()],
             steps: 2,
             dim: 64,
             attack_start: 1,

@@ -25,6 +25,7 @@
 use btard::coordinator::adversary::AdversarySpec;
 use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::membership::MembershipSchedule;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::runconfig::{load_run_config_full, TransportKind, WorkloadSpec};
 use btard::coordinator::training::{
@@ -80,6 +81,11 @@ fn main() {
                  \x20 --network PROFILE           network-condition model: perfect (default),\n\
                  \x20                             lossy[:drop], partitioned[:frac],\n\
                  \x20                             straggler[:frac] — seeded fault simulation\n\
+                 \x20 --churn SCHEDULE            dynamic membership: comma-joined\n\
+                 \x20                             join:<peer>@<step> / leave:<peer>@<step>\n\
+                 \x20                             entries (--peers is the id universe; joiners\n\
+                 \x20                             are admitted at their epoch boundary), e.g.\n\
+                 \x20                             --churn join:8@3,leave:2@6\n\
                  \x20 --aggregator NAME           (ps) mean, coord_median, geo_median,\n\
                  \x20                             trimmed_mean, krum, centered_clip\n\
                  scenarios flags:\n\
@@ -197,6 +203,15 @@ fn parse_network(args: &Args) -> Option<NetworkProfile> {
     })
 }
 
+/// Dynamic-membership schedule from --churn (empty = static roster).
+fn parse_churn(args: &Args) -> MembershipSchedule {
+    match args.get("churn") {
+        Some(s) => MembershipSchedule::parse(s)
+            .unwrap_or_else(|e| panic!("bad --churn schedule: {e}")),
+        None => MembershipSchedule::empty(),
+    }
+}
+
 fn parse_attack(args: &Args) -> Option<(AdversarySpec, AttackSchedule)> {
     // --aggregation-attack composes with (or stands in for) --attack,
     // through the one folding path all entry points share.
@@ -269,6 +284,7 @@ fn cmd_train(args: &Args) {
         verify_signatures: !args.get_bool("no-sigs"),
         gossip_fanout: 8,
         network: parse_network(args).unwrap_or_default(),
+        churn: parse_churn(args),
         segments: vec![],
     };
     let mode = parse_exec(args, n);
@@ -360,7 +376,11 @@ fn cluster_run_config(args: &Args) -> RunConfig {
             tau: parse_tau(args),
             m_validators: args.get_usize("validators", (n / 8).max(1)),
             delta_max: args.get_f32("delta-max", 4.0),
-            global_seed: args.get_u64("global-seed", 0),
+            // Default to the run seed, like `btard train` and the config
+            // parser: with dynamic membership the protocol seed drives
+            // epoch owner assignment, so a divergent default would make
+            // the same churn flags digest differently across subcommands.
+            global_seed: args.get_u64("global-seed", args.get_u64("seed", 7)),
             ..ProtocolConfig::default()
         },
         opt: OptSpec::Sgd {
@@ -374,6 +394,7 @@ fn cluster_run_config(args: &Args) -> RunConfig {
         verify_signatures: !args.get_bool("no-sigs"),
         gossip_fanout: 8,
         network: NetworkProfile::perfect(),
+        churn: parse_churn(args),
         segments: vec![],
     }
 }
@@ -400,11 +421,12 @@ fn cmd_cluster(args: &Args) {
         run_timeout: Duration::from_secs(args.get_u64("run-timeout-s", 600)),
     };
     eprintln!(
-        "btard cluster: forking {} peer processes ({} byzantine, attack={:?}, sigs={}), \
-         {} steps → {}",
+        "btard cluster: forking {} peer processes ({} byzantine, attack={:?}, churn={}, \
+         sigs={}), {} steps → {}",
         cfg.n_peers,
         cfg.byzantine.len(),
         cfg.attack.as_ref().map(|(spec, _)| spec.canonical()),
+        cfg.churn.canonical(),
         cfg.verify_signatures,
         cfg.steps,
         opts.out_dir.display()

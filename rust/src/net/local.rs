@@ -93,16 +93,30 @@ pub(crate) struct Inbox {
     future: Vec<Envelope>,
     /// Logical phase clock: incremented once per protocol stage entry.
     clock: u64,
+    /// Envelopes from steps before this are dropped at the gate — a
+    /// mid-run joiner's pre-membership horizon. Covers the already
+    /// buffered (`pending` *and* latency-parked `future`) and everything
+    /// that arrives later, so a late-stamped pre-join envelope can never
+    /// surface after the horizon was set. 0 = no horizon.
+    min_step: u64,
 }
 
 impl Inbox {
     pub(crate) fn new(mailbox: Receiver<Envelope>) -> Inbox {
-        Inbox { mailbox, pending: Vec::new(), future: Vec::new(), clock: 0 }
+        Inbox { mailbox, pending: Vec::new(), future: Vec::new(), clock: 0, min_step: 0 }
     }
 
     /// Current logical phase-clock value (delivery-gate reference).
     pub(crate) fn now(&self) -> u64 {
         self.clock
+    }
+
+    /// Install the pre-membership horizon: drop everything already
+    /// buffered from steps before `step`, and gate future arrivals.
+    pub(crate) fn set_min_step(&mut self, step: u64) {
+        self.min_step = step;
+        self.pending.retain(|e| e.step >= step);
+        self.future.retain(|e| e.step >= step);
     }
 
     /// Advance the logical phase clock and promote any latency-gated
@@ -136,6 +150,9 @@ impl Inbox {
     /// unsigned/forged messages), not-yet-deliverable ones are parked in
     /// `future` until the phase clock reaches their gate.
     fn gate(&mut self, info: &ClusterInfo, mont: &Mont, env: Envelope) -> Option<Envelope> {
+        if env.step < self.min_step {
+            return None; // pre-membership traffic — never deliverable
+        }
         if info.verify_signatures && !env.verify_with(mont, &info.public_keys[env.from]) {
             return None; // forged — drop silently
         }
@@ -463,6 +480,14 @@ impl Transport for PeerNet {
 
     fn tick(&mut self) {
         self.advance_clock();
+    }
+
+    fn clock(&self) -> u64 {
+        self.inbox.now()
+    }
+
+    fn set_min_step(&mut self, step: u64) {
+        self.inbox.set_min_step(step);
     }
 
     fn send(&mut self, to: PeerId, step: u64, slot: u32, class: MsgClass, payload: Vec<u8>) {

@@ -114,6 +114,7 @@ pub mod slots {
     pub const VALIDATION_OK: u32 = 0x0B00_0000;
     pub const JOIN: u32 = 0x0C00_0000;
     pub const VERIFY_DONE: u32 = 0x0D00_0000;
+    pub const LEAVE: u32 = 0x0E00_0000;
 
     /// Compose a slot from a tag and a sub-index (< 2^24).
     pub fn sub(tag: u32, idx: usize) -> u32 {
@@ -155,6 +156,17 @@ pub trait Transport: Send {
     fn set_recv_mode(&mut self, mode: RecvMode);
     /// Advance the logical phase clock (called at every stage entry).
     fn tick(&mut self);
+    /// Current logical phase-clock value. A mid-run joiner fast-forwards
+    /// its clock to the sponsor's snapshot value so latency-gated
+    /// deliveries (network simulation) reference a cluster-consistent
+    /// clock instead of the joiner's held-out one.
+    fn clock(&self) -> u64;
+    /// Install a pre-membership horizon: drop every buffered envelope —
+    /// including latency-parked ones — from steps before `step`, and
+    /// gate future arrivals the same way. A mid-run joiner calls this at
+    /// snapshot install so the in-process fabrics match the wire, which
+    /// never carries pre-join traffic.
+    fn set_min_step(&mut self, step: u64);
     /// Point-to-point send.
     fn send(&mut self, to: PeerId, step: u64, slot: u32, class: MsgClass, payload: Vec<u8>);
     /// Broadcast the same payload to all peers (including self).

@@ -27,6 +27,14 @@
 //!   step.
 //! - **Self loopback is exempt**: a peer always sees its own broadcasts
 //!   (loopback never crosses the network).
+//! - **Membership state transfer is exempt**: the sponsor's JOIN
+//!   snapshot (the one p2p message on a `JOIN` slot) is delivered
+//!   reliably and on time, by the same control-plane assumption that
+//!   keeps broadcasts reliable — admission is schedule-driven, so a
+//!   faulted snapshot would orphan a peer every incumbent has already
+//!   admitted rather than exercise any protocol defense. All of a
+//!   joiner's *ordinary* traffic is faulted normally from its boundary
+//!   on (its phase clock is synchronized to the cluster's at install).
 //! - **Peer 0 is exempt from hash-drawn straggler/partition membership**
 //!   (it is the harness's metrics recorder, like the "peer 0 stays
 //!   honest" rule for attacks). Its links still carry loss and latency,
@@ -41,7 +49,7 @@
 use std::sync::{Arc, Mutex};
 
 use super::local::{build_cluster, PeerNet};
-use super::{ClusterInfo, Envelope, MsgClass, PeerId, RecvError, RecvMode, Transport};
+use super::{slots, ClusterInfo, Envelope, MsgClass, PeerId, RecvError, RecvMode, Transport};
 use crate::util::json::Json;
 use crate::util::rng::splitmix64;
 use std::time::Duration;
@@ -509,11 +517,34 @@ impl Transport for SimNet {
         self.inner.advance_clock();
     }
 
+    fn clock(&self) -> u64 {
+        self.inner.now()
+    }
+
+    fn set_min_step(&mut self, step: u64) {
+        Transport::set_min_step(&mut self.inner, step);
+    }
+
     fn send(&mut self, to: PeerId, step: u64, slot: u32, class: MsgClass, payload: Vec<u8>) {
         let me = self.inner.id;
         if to == me {
             // Loopback never crosses the network.
             PeerNet::send(&self.inner, to, step, slot, class, payload);
+            return;
+        }
+        if slots::tag(slot) == slots::JOIN {
+            // Membership state transfer (the sponsor's JOIN snapshot) is
+            // control-plane traffic: reliable and on time by the same
+            // eventual-consistency assumption that keeps broadcasts
+            // reliable (module docs). Faulting it would not test the
+            // protocol's robustness — it would desynchronize admission
+            // itself (incumbents admit by schedule; a dropped snapshot
+            // would orphan an already-admitted joiner).
+            let bytes = payload.len();
+            self.inner.info.stats.record_p2p(me, class, bytes);
+            self.model.faults.record(me, |f| f.sent_msgs += 1);
+            let env = self.inner.make_envelope(step, slot, class, payload, false);
+            self.inner.push_to(to, env);
             return;
         }
         let bytes = payload.len();

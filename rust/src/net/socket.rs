@@ -78,8 +78,9 @@ const KIND_HELLO: u8 = 1;
 const KIND_ENVELOPE: u8 = 2;
 /// kind + from + step + slot + class + broadcast + sig flag.
 const ENVELOPE_FIXED: usize = 1 + 8 + 8 + 4 + 1 + 1 + 1;
-/// kind + id + pubkey + sig flag (+ 64-byte signature when flagged).
-const HELLO_FIXED: usize = 1 + 8 + 32 + 1;
+/// kind + id + epoch + nonce + pubkey + sig flag (+ 64-byte signature
+/// when flagged).
+const HELLO_FIXED: usize = 1 + 8 + 8 + 32 + 32 + 1;
 
 /// Why a frame (and with it, the connection) was rejected.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -126,28 +127,53 @@ pub enum Frame {
     Envelope(Envelope),
 }
 
-/// Handshake payload: who is on the other end of this link. The
-/// signature (present whenever the cluster verifies signatures) covers
-/// the domain-tagged id, so only the holder of the roster key can claim
-/// a peer's link.
+/// Handshake payload: who is on the other end of this link, at which
+/// roster epoch it was admitted, and a link-bound nonce. The signature
+/// (present whenever the cluster verifies signatures) covers the
+/// domain-tagged (id, epoch, nonce) triple, so only the holder of the
+/// roster key can claim a peer's link — and because the nonce is a hash
+/// of the *entire roster document* plus the claimed (id, epoch) plus
+/// the intended *receiver*, a HELLO captured from a different run,
+/// roster, epoch — or from the same run's link to a different peer —
+/// replays as garbage: the receiver recomputes the expected nonce and
+/// rejects the stale claim before any envelope is read.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Hello {
     pub id: PeerId,
+    /// Roster epoch at which this peer is admitted: the training step of
+    /// its scheduled join, 0 for founding members. Acceptors reject a
+    /// HELLO whose epoch differs from the peer's scheduled one.
+    pub epoch: u64,
+    /// Link-bound nonce: `H("btard-hello-nonce" ‖ roster digest ‖ id ‖
+    /// epoch ‖ receiver)` — see [`Roster::hello_nonce`].
+    pub nonce: [u8; 32],
     pub pubkey: PublicKey,
     pub signature: Option<Signature>,
 }
 
 /// The byte string a HELLO's signature covers.
-fn hello_signing_bytes(id: PeerId) -> Vec<u8> {
-    let mut msg = Vec::with_capacity(19);
+fn hello_signing_bytes(id: PeerId, epoch: u64, nonce: &[u8; 32]) -> Vec<u8> {
+    let mut msg = Vec::with_capacity(11 + 8 + 8 + 32);
     msg.extend_from_slice(b"btard-hello");
     msg.extend_from_slice(&(id as u64).to_le_bytes());
+    msg.extend_from_slice(&epoch.to_le_bytes());
+    msg.extend_from_slice(nonce);
     msg
 }
 
-/// Encode a HELLO frame (header + body), signed with the sender's
-/// roster key when `sign_hello` (i.e. the cluster verifies signatures).
-pub fn encode_hello(id: PeerId, secret: &SecretKey, mont: &Mont, sign_hello: bool) -> Vec<u8> {
+/// Encode a HELLO frame (header + body) for the link `id → to` of this
+/// roster, signed with the sender's roster key when `sign_hello` (i.e.
+/// the cluster verifies signatures).
+pub fn encode_hello(
+    id: PeerId,
+    epoch: u64,
+    to: PeerId,
+    roster_digest: &[u8; 32],
+    secret: &SecretKey,
+    mont: &Mont,
+    sign_hello: bool,
+) -> Vec<u8> {
+    let nonce = Roster::hello_nonce_from(roster_digest, id, epoch, to);
     let sig_len = if sign_hello { 64 } else { 0 };
     let body_len = HELLO_FIXED + sig_len;
     let mut out = Vec::with_capacity(8 + body_len);
@@ -155,10 +181,14 @@ pub fn encode_hello(id: PeerId, secret: &SecretKey, mont: &Mont, sign_hello: boo
     out.extend_from_slice(&(body_len as u32).to_le_bytes());
     out.push(KIND_HELLO);
     out.extend_from_slice(&(id as u64).to_le_bytes());
+    out.extend_from_slice(&epoch.to_le_bytes());
+    out.extend_from_slice(&nonce);
     out.extend_from_slice(&secret.public.0);
     if sign_hello {
         out.push(1);
-        out.extend_from_slice(&sign(mont, secret, &hello_signing_bytes(id)).to_bytes());
+        out.extend_from_slice(
+            &sign(mont, secret, &hello_signing_bytes(id, epoch, &nonce)).to_bytes(),
+        );
     } else {
         out.push(0);
     }
@@ -204,22 +234,25 @@ fn decode_body(body: &[u8]) -> Result<Frame, FrameError> {
             }
             let id = le_u64(&body[1..9]);
             let id: PeerId = usize::try_from(id).map_err(|_| FrameError::BadPeer(id))?;
+            let epoch = le_u64(&body[9..17]);
+            let mut nonce = [0u8; 32];
+            nonce.copy_from_slice(&body[17..49]);
             let mut pk = [0u8; 32];
-            pk.copy_from_slice(&body[9..41]);
-            let signature = match body[41] {
+            pk.copy_from_slice(&body[49..81]);
+            let signature = match body[81] {
                 0 if body.len() == HELLO_FIXED => None,
                 1 if body.len() == HELLO_FIXED + 64 => {
                     Signature::from_bytes(&body[HELLO_FIXED..HELLO_FIXED + 64])
                 }
                 0 | 1 => {
                     return Err(FrameError::Truncated {
-                        need: HELLO_FIXED + 64 * body[41] as usize,
+                        need: HELLO_FIXED + 64 * body[81] as usize,
                         have: body.len(),
                     })
                 }
                 b => return Err(FrameError::BadFlag(b)),
             };
-            Ok(Frame::Hello(Hello { id, pubkey: PublicKey(pk), signature }))
+            Ok(Frame::Hello(Hello { id, epoch, nonce, pubkey: PublicKey(pk), signature }))
         }
         KIND_ENVELOPE => {
             if body.len() < ENVELOPE_FIXED {
@@ -402,6 +435,48 @@ impl Roster {
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         crate::util::atomic_write(path, &self.to_json())
     }
+
+    /// Digest over every roster row (id, addr, pubkey) — the identity of
+    /// this roster document. Binding HELLOs to it is what makes a
+    /// captured handshake from another run or roster unreplayable here.
+    pub fn digest(&self) -> [u8; 32] {
+        let mut bytes = Vec::new();
+        for p in &self.peers {
+            bytes.extend_from_slice(&(p.id as u64).to_le_bytes());
+            bytes.extend_from_slice(&(p.addr.len() as u64).to_le_bytes());
+            bytes.extend_from_slice(p.addr.as_bytes());
+            bytes.extend_from_slice(&p.pubkey.0);
+        }
+        crate::crypto::sha256_parts(&[b"btard-roster", &bytes])
+    }
+
+    /// The roster-bound HELLO nonce for a (sender, epoch, receiver)
+    /// link: a pure function both ends compute independently from the
+    /// shared roster document. Binding the *receiver* is what stops a
+    /// HELLO captured on one link of the same run from being replayed
+    /// against any other peer's acceptor (a first-claim-wins inbound
+    /// slot would otherwise be burnable by replay).
+    pub fn hello_nonce(&self, id: PeerId, epoch: u64, to: PeerId) -> [u8; 32] {
+        Roster::hello_nonce_from(&self.digest(), id, epoch, to)
+    }
+
+    /// Same, from a pre-computed roster digest — the roster is immutable
+    /// for a run, so endpoints hash it once instead of once per HELLO
+    /// encode and once per inbound handshake.
+    pub fn hello_nonce_from(
+        roster_digest: &[u8; 32],
+        id: PeerId,
+        epoch: u64,
+        to: PeerId,
+    ) -> [u8; 32] {
+        crate::crypto::sha256_parts(&[
+            b"btard-hello-nonce",
+            roster_digest,
+            &(id as u64).to_le_bytes(),
+            &epoch.to_le_bytes(),
+            &(to as u64).to_le_bytes(),
+        ])
+    }
 }
 
 /// Deterministic per-peer keypair of a run: the exact derivation the
@@ -436,6 +511,13 @@ pub struct SocketConfig {
     /// HELLO exchanges must finish within it.
     pub connect_timeout: Duration,
     pub max_frame: usize,
+    /// Per-peer join step over the whole universe (0 = founding member;
+    /// empty = all founding). This is the churn schedule's
+    /// `join_steps(n)` table: it decides which links form at mesh-build
+    /// time vs lazily at the peer's epoch boundary, gates wire sends to
+    /// not-yet-admitted peers, and is the epoch an inbound HELLO must
+    /// claim to be accepted.
+    pub join_steps: Vec<u64>,
 }
 
 impl Default for SocketConfig {
@@ -445,6 +527,7 @@ impl Default for SocketConfig {
             verify_signatures: true,
             connect_timeout: Duration::from_secs(30),
             max_frame: DEFAULT_MAX_FRAME,
+            join_steps: vec![],
         }
     }
 }
@@ -539,16 +622,24 @@ const HELLO_SLICE: Duration = Duration::from_secs(5);
 /// here condemn the *connection*, not the accept loop: the module
 /// contract is that a hostile peer can kill its own link, never the
 /// receiver — aborting the whole mesh build on a stray probe would hand
-/// any port-scanner a denial of service. When the cluster verifies
-/// signatures, the HELLO must carry a valid signature under the claimed
-/// peer's roster key — an unsigned (or mis-signed) identity claim is
-/// exactly the spoof this check exists to stop.
+/// any port-scanner a denial of service. Checks, in order: the claimed
+/// id is a valid remote; the claimed epoch is exactly the peer's
+/// scheduled join epoch (`join_steps`) — a *stale* HELLO (wrong epoch,
+/// e.g. a replay from before a roster change) is rejected outright; the
+/// nonce matches the roster-bound derivation for (id, epoch) — a HELLO
+/// captured from a different run or roster document replays as garbage;
+/// the pubkey matches the roster row; and (when the cluster verifies
+/// signatures) the signature over the domain-tagged (id, epoch, nonce)
+/// verifies under the roster key — an unsigned or mis-signed identity
+/// claim is exactly the spoof this check exists to stop.
 fn accept_handshake(
     stream: &mut TcpStream,
     fr: &mut FrameReader,
     deadline: Instant,
     me: PeerId,
     roster: &Roster,
+    roster_digest: &[u8; 32],
+    join_steps: &[u64],
     mont: &Mont,
     verify_signatures: bool,
 ) -> Result<Hello, String> {
@@ -560,6 +651,21 @@ fn accept_handshake(
     if h.id == me || h.id >= roster.n() {
         return Err(format!("HELLO claims peer {} (not a valid remote of peer {me})", h.id));
     }
+    let expected_epoch = join_steps.get(h.id).copied().unwrap_or(0);
+    if h.epoch != expected_epoch {
+        return Err(format!(
+            "stale HELLO: peer {} claims roster epoch {} but is scheduled at epoch \
+             {expected_epoch}",
+            h.id, h.epoch
+        ));
+    }
+    if h.nonce != Roster::hello_nonce_from(roster_digest, h.id, h.epoch, me) {
+        return Err(format!(
+            "HELLO nonce for peer {} is not bound to this roster+link (replayed from another \
+             run, roster, or link?)",
+            h.id
+        ));
+    }
     if h.pubkey != roster.peers[h.id].pubkey {
         return Err(format!("HELLO pubkey for peer {} does not match the roster", h.id));
     }
@@ -567,7 +673,8 @@ fn accept_handshake(
         let Some(sig) = &h.signature else {
             return Err(format!("unsigned HELLO claiming peer {}", h.id));
         };
-        if !verify(mont, &roster.peers[h.id].pubkey, &hello_signing_bytes(h.id), sig) {
+        let msg = hello_signing_bytes(h.id, h.epoch, &h.nonce);
+        if !verify(mont, &roster.peers[h.id].pubkey, &msg, sig) {
             return Err(format!("HELLO signature for peer {} does not verify", h.id));
         }
     }
@@ -632,34 +739,206 @@ fn reader_loop(
     }
 }
 
+/// Mutable inbound-link state shared between the mesh build, the
+/// background acceptor (dynamic-membership runs keep accepting after the
+/// build — a roster-epoch addition's link arrives mid-run) and `Drop`.
+struct InboundState {
+    /// Which peer slots have an installed inbound link (first claim
+    /// wins; duplicates — replayed HELLOs, bugs — are dropped).
+    seen: Vec<bool>,
+    /// Shutdown handles for the inbound (receive-only) links, so `Drop`
+    /// can unblock the reader threads before joining them.
+    inbound: Vec<TcpStream>,
+    readers: Vec<thread::JoinHandle<()>>,
+}
+
+struct InboundTable {
+    state: Mutex<InboundState>,
+    shutdown: std::sync::atomic::AtomicBool,
+}
+
+/// Everything a handshake thread needs to validate and install one
+/// inbound connection on its own (the build loop and the background
+/// acceptor spawn identical threads).
+struct HandshakeCtx {
+    me: PeerId,
+    roster: Roster,
+    /// Cached — the roster is immutable for the run, so handshakes must
+    /// not re-hash the whole document per inbound connection.
+    roster_digest: [u8; 32],
+    join_steps: Vec<u64>,
+    verify_signatures: bool,
+    max_frame: usize,
+    table: Arc<InboundTable>,
+    mailbox: Sender<Envelope>,
+}
+
+/// Validate an inbound connection's HELLO on a short-lived thread and,
+/// on success, install its reader into the shared table. A silent,
+/// garbage or stale connection burns only its own HELLO_SLICE — never
+/// the accept loop (stray probes must not be able to deny service).
+fn spawn_handshake(ctx: Arc<HandshakeCtx>, stream: TcpStream, hard_deadline: Instant) {
+    let hello_deadline = (Instant::now() + HELLO_SLICE).min(hard_deadline);
+    let name = format!("sock-handshake-{}", ctx.me);
+    let spawned = thread::Builder::new().name(name).spawn(move || {
+        let mut stream = stream;
+        let result = stream.set_nonblocking(false).map_err(|e| e.to_string()).and_then(|()| {
+            let _ = stream.set_nodelay(true);
+            let mont = Mont::new();
+            let mut fr = FrameReader::new(ctx.max_frame);
+            accept_handshake(
+                &mut stream,
+                &mut fr,
+                hello_deadline,
+                ctx.me,
+                &ctx.roster,
+                &ctx.roster_digest,
+                &ctx.join_steps,
+                &mont,
+                ctx.verify_signatures,
+            )
+            .map(|h| (h, fr))
+        });
+        match result {
+            Ok((h, fr)) => {
+                let mut state = ctx.table.state.lock().unwrap_or_else(|p| p.into_inner());
+                if ctx.table.shutdown.load(std::sync::atomic::Ordering::SeqCst) {
+                    // The endpoint is tearing down: installing a reader
+                    // now would leak an unjoinable thread.
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return;
+                }
+                if state.seen[h.id] {
+                    eprintln!(
+                        "socket mesh (peer {}): dropping duplicate connection claiming peer {}",
+                        ctx.me, h.id
+                    );
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return;
+                }
+                if let Err(e) = stream.set_read_timeout(None) {
+                    eprintln!(
+                        "socket mesh (peer {}): dropping peer {}'s link (read-timeout \
+                         reset failed): {e}",
+                        ctx.me, h.id
+                    );
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return;
+                }
+                let read_half = match stream.try_clone() {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!(
+                            "socket mesh (peer {}): dropping peer {}'s link (fd clone \
+                             failed): {e}",
+                            ctx.me, h.id
+                        );
+                        let _ = stream.shutdown(Shutdown::Both);
+                        return;
+                    }
+                };
+                let link_tx = ctx.mailbox.clone();
+                let peer = h.id;
+                let reader_name = format!("sock-reader-{}-from-{peer}", ctx.me);
+                match thread::Builder::new()
+                    .name(reader_name)
+                    .spawn(move || reader_loop(read_half, fr, peer, link_tx))
+                {
+                    Ok(handle) => {
+                        state.seen[h.id] = true;
+                        state.inbound.push(stream);
+                        state.readers.push(handle);
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "socket mesh (peer {}): spawning reader thread: {e}",
+                            ctx.me
+                        );
+                        let _ = stream.shutdown(Shutdown::Both);
+                    }
+                }
+            }
+            Err(reason) => {
+                // Doomed connection; keep accepting. A legitimate peer
+                // lost here surfaces as a build/collect timeout.
+                eprintln!("socket mesh (peer {}): dropping inbound connection: {reason}", ctx.me);
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+        }
+    });
+    if let Err(e) = spawned {
+        eprintln!("socket mesh: spawning handshake thread: {e}");
+    }
+}
+
+/// Wall-clock budget for a *late* (post-build) dial — a **single**
+/// connect attempt, no retry loop: the target's listener has been up
+/// since its process start, so a healthy link connects instantly, and a
+/// dead peer (an exited leaver or banned attacker) must fail fast — on
+/// loopback a refused connect returns in microseconds; retrying it for
+/// seconds inside the send path would stall a joiner's boundary
+/// broadcast long enough for incumbents to time it out. One failed dial
+/// marks the link dead for good (the protocol's timeout/ELIMINATE
+/// machinery handles a peer that never comes up).
+const LATE_DIAL_BUDGET: Duration = Duration::from_secs(2);
+
+/// One connect attempt with a bounded timeout (late dials only — the
+/// mesh build keeps `dial_with_retry`, where the target may legitimately
+/// not have bound its listener yet).
+fn dial_once(addr: &str, timeout: Duration) -> std::io::Result<TcpStream> {
+    let sa = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| io_err(format!("'{addr}' resolves to no address")))?;
+    TcpStream::connect_timeout(&sa, timeout)
+}
+
 /// A real-socket transport endpoint: one send-direction TCP connection
 /// per ordered peer pair, a reader thread per inbound link, and the
-/// shared [`Inbox`] delivery semantics.
+/// shared [`Inbox`] delivery semantics. With a dynamic-membership
+/// schedule (`SocketConfig::join_steps`), links involving late joiners
+/// form lazily at the joiner's epoch boundary: the background acceptor
+/// admits their epoch-stamped HELLOs, and `write_link` dials missing
+/// links on first send.
 pub struct SocketNet {
     id: PeerId,
     info: Arc<ClusterInfo>,
     secret: SecretKey,
     mont: Mont,
     /// Outbound (send-only) links, indexed by peer id (`None` at our own
-    /// slot). Nothing is ever read from these.
-    links: Vec<Option<Arc<Mutex<TcpStream>>>>,
-    /// Shutdown handles for the inbound (receive-only) links, so `Drop`
-    /// can unblock the reader threads before joining them.
-    inbound: Vec<TcpStream>,
+    /// slot, and at not-yet-dialed late links). Nothing is ever read
+    /// from these.
+    links: Vec<Option<TcpStream>>,
+    /// One failed late dial marks the link dead for good.
+    dial_failed: Vec<bool>,
+    /// Roster addresses (late dials need them after `connect` returns).
+    addrs: Vec<String>,
+    /// Per-peer join step (all zeros for a static roster).
+    join_steps: Vec<u64>,
+    /// Pre-encoded per-recipient HELLO frames (the nonce binds the
+    /// link, so each recipient gets its own; empty at our own slot).
+    hellos: Vec<Vec<u8>>,
+    /// Inbound links + reader threads, shared with the acceptor.
+    table: Arc<InboundTable>,
+    /// Background acceptor (dynamic-membership runs only).
+    acceptor: Option<thread::JoinHandle<()>>,
     /// Self-delivery: loopback never crosses the network.
     loopback: Sender<Envelope>,
     inbox: Inbox,
     timeout: Duration,
     recv_mode: RecvMode,
-    readers: Vec<thread::JoinHandle<()>>,
 }
 
 impl SocketNet {
-    /// Build this peer's endpoint of the mesh: dial every other peer's
-    /// listener once (opening our send-direction link, prefixed by our
-    /// HELLO), then accept every other peer's send-direction link
-    /// (validating its HELLO against the roster) and spawn its reader
-    /// thread. `listener` must already be bound to
+    /// Build this peer's endpoint of the mesh: a founding member dials
+    /// every other founding member's listener once (opening our
+    /// send-direction link, prefixed by our HELLO), then accepts every
+    /// founding peer's send-direction link (validating its HELLO
+    /// against the roster) and spawns its reader thread. Links
+    /// involving scheduled late joiners form lazily instead: a joiner's
+    /// endpoint comes up with zero links, the background acceptor
+    /// admits epoch-stamped HELLOs mid-run, and `write_link` dials
+    /// missing links on first send. `listener` must already be bound to
     /// `roster.peers[id].addr` (bind-before-publish is what the
     /// rendezvous flow guarantees).
     ///
@@ -685,6 +964,17 @@ impl SocketNet {
                 "peer {id}: secret key does not match the roster's pubkey"
             )));
         }
+        let join_steps = if cfg.join_steps.is_empty() {
+            vec![0u64; n]
+        } else if cfg.join_steps.len() == n {
+            cfg.join_steps.clone()
+        } else {
+            return Err(io_err(format!(
+                "join_steps has {} entries for a {n}-peer roster",
+                cfg.join_steps.len()
+            )));
+        };
+        let dynamic = join_steps.iter().any(|&s| s > 0);
         let mont = Mont::new();
         let info = Arc::new(ClusterInfo {
             n_peers: n,
@@ -694,126 +984,134 @@ impl SocketNet {
         });
         let (tx, rx) = channel();
         let deadline = Instant::now() + cfg.connect_timeout;
-        let hello = encode_hello(id, &secret, &mont, cfg.verify_signatures);
+        // One HELLO per recipient: the nonce binds the link (sender,
+        // epoch, receiver), so a frame for peer j is garbage to peer k.
+        // The roster digest is hashed once and reused everywhere.
+        let roster_digest = roster.digest();
+        let sign_hello = cfg.verify_signatures;
+        let hellos: Vec<Vec<u8>> = (0..n)
+            .map(|j| {
+                if j == id {
+                    Vec::new()
+                } else {
+                    encode_hello(id, join_steps[id], j, &roster_digest, &secret, &mont, sign_hello)
+                }
+            })
+            .collect();
 
-        // Outbound links: dial every other peer and announce ourselves.
-        // TCP completes the connect via the listener's backlog whether or
+        // Outbound links: a founding member dials every other founding
+        // member now and announces itself; links involving late joiners
+        // form lazily at the joiner's epoch boundary (`write_link`). TCP
+        // completes the connect via the listener's backlog whether or
         // not the remote has reached its accept loop yet, so the
         // all-dials-then-all-accepts order cannot deadlock.
-        let mut links: Vec<Option<Arc<Mutex<TcpStream>>>> = (0..n).map(|_| None).collect();
-        for (j, link) in links.iter_mut().enumerate() {
-            if j == id {
-                continue;
+        let mut links: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+        if join_steps[id] == 0 {
+            for (j, link) in links.iter_mut().enumerate() {
+                if j == id || join_steps[j] > 0 {
+                    continue;
+                }
+                let mut stream = dial_with_retry(&roster.peers[j].addr, deadline)?;
+                let _ = stream.set_nodelay(true);
+                stream.write_all(&hellos[j])?;
+                *link = Some(stream);
             }
-            let mut stream = dial_with_retry(&roster.peers[j].addr, deadline)?;
-            let _ = stream.set_nodelay(true);
-            stream.write_all(&hello)?;
-            *link = Some(Arc::new(Mutex::new(stream)));
         }
 
-        // Inbound links: accept one send-direction connection from every
-        // other peer, validate its HELLO, and hand it (plus any bytes
-        // the sender pipelined right behind the HELLO) to a reader.
-        // Handshakes run on their own short-lived threads so a silent or
-        // hostile connection stalls only itself for its HELLO_SLICE —
-        // probes must not be able to serialize away the accept budget.
+        // Inbound links: accept the send-direction connection of every
+        // *founding* peer expected now, validating its HELLO (epoch +
+        // roster-bound nonce + signature) and handing it — plus any
+        // bytes the sender pipelined right behind the HELLO — to a
+        // reader thread. Handshakes run on their own short-lived
+        // threads so a silent or hostile connection stalls only itself
+        // for its HELLO_SLICE — probes must not be able to serialize
+        // away the accept budget. A late joiner's connection may already
+        // arrive during the build (its process starts whenever it
+        // likes): it is installed the same way, just never counted
+        // toward the founding total.
         listener.set_nonblocking(true)?;
-        let (hs_tx, hs_rx) = channel::<Result<(Hello, TcpStream, FrameReader), String>>();
-        let mut inbound = Vec::with_capacity(n - 1);
-        let mut readers = Vec::with_capacity(n - 1);
-        let mut seen = vec![false; n];
-        while inbound.len() < n - 1 {
-            // Take new connections without blocking.
+        let table = Arc::new(InboundTable {
+            state: Mutex::new(InboundState {
+                seen: vec![false; n],
+                inbound: Vec::with_capacity(n.saturating_sub(1)),
+                readers: Vec::with_capacity(n.saturating_sub(1)),
+            }),
+            shutdown: std::sync::atomic::AtomicBool::new(false),
+        });
+        let hs_ctx = Arc::new(HandshakeCtx {
+            me: id,
+            roster: roster.clone(),
+            roster_digest,
+            join_steps: join_steps.clone(),
+            verify_signatures: cfg.verify_signatures,
+            max_frame: cfg.max_frame,
+            table: table.clone(),
+            mailbox: tx.clone(),
+        });
+        let expected_now: Vec<PeerId> = (0..n)
+            .filter(|&j| j != id && join_steps[j] == 0 && join_steps[id] == 0)
+            .collect();
+        loop {
+            let missing: usize = {
+                let state = table.state.lock().unwrap_or_else(|p| p.into_inner());
+                expected_now.iter().filter(|&&j| !state.seen[j]).count()
+            };
+            if missing == 0 {
+                break;
+            }
             match listener.accept() {
-                Ok((stream, _)) => {
-                    let hello_deadline = (Instant::now() + HELLO_SLICE).min(deadline);
-                    let hs_tx = hs_tx.clone();
-                    let roster = roster.clone();
-                    let max_frame = cfg.max_frame;
-                    let verify_sigs = cfg.verify_signatures;
-                    thread::Builder::new()
-                        .name(format!("sock-handshake-{id}"))
-                        .spawn(move || {
-                            let mut stream = stream;
-                            let result = stream
-                                .set_nonblocking(false)
-                                .map_err(|e| e.to_string())
-                                .and_then(|()| {
-                                    let _ = stream.set_nodelay(true);
-                                    let mont = Mont::new();
-                                    let mut fr = FrameReader::new(max_frame);
-                                    accept_handshake(
-                                        &mut stream,
-                                        &mut fr,
-                                        hello_deadline,
-                                        id,
-                                        &roster,
-                                        &mont,
-                                        verify_sigs,
-                                    )
-                                    .map(|h| (h, fr))
-                                });
-                            let _ = match result {
-                                Ok((h, fr)) => hs_tx.send(Ok((h, stream, fr))),
-                                Err(reason) => {
-                                    let _ = stream.shutdown(Shutdown::Both);
-                                    hs_tx.send(Err(reason))
-                                }
-                            };
-                        })
-                        .map_err(|e| io_err(format!("spawning handshake thread: {e}")))?;
-                }
+                Ok((stream, _)) => spawn_handshake(hs_ctx.clone(), stream, deadline),
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {}
                 Err(e) if e.kind() == ErrorKind::Interrupted => {}
                 Err(e) => return Err(e),
             }
-            // Install every handshake that completed meanwhile.
-            while let Ok(result) = hs_rx.try_recv() {
-                match result {
-                    Ok((h, stream, fr)) if !seen[h.id] => {
-                        seen[h.id] = true;
-                        stream.set_read_timeout(None)?;
-                        let read_half = stream.try_clone()?;
-                        let link_tx = tx.clone();
-                        let peer = h.id;
-                        let handle = thread::Builder::new()
-                            .name(format!("sock-reader-{id}-from-{peer}"))
-                            .spawn(move || reader_loop(read_half, fr, peer, link_tx))
-                            .map_err(|e| io_err(format!("spawning reader thread: {e}")))?;
-                        readers.push(handle);
-                        inbound.push(stream);
-                    }
-                    Ok((h, stream, _)) => {
-                        // Duplicate claim (a replayed HELLO, or a bug):
-                        // the first connection won; drop this one.
-                        eprintln!(
-                            "socket mesh (peer {id}): dropping duplicate connection claiming \
-                             peer {}",
-                            h.id
-                        );
-                        let _ = stream.shutdown(Shutdown::Both);
-                    }
-                    Err(reason) => {
-                        // Doomed connection, already shut down by its
-                        // handshake thread; keep accepting. A legitimate
-                        // peer lost here surfaces as the overall accept
-                        // timeout below.
-                        eprintln!(
-                            "socket mesh (peer {id}): dropping inbound connection: {reason}"
-                        );
-                    }
-                }
+            if Instant::now() >= deadline {
+                return Err(timeout_err(&format!(
+                    "waiting for {missing} inbound connection(s)"
+                )));
             }
-            if inbound.len() < n - 1 {
-                if Instant::now() >= deadline {
-                    return Err(timeout_err(&format!(
-                        "waiting for {} inbound connection(s)",
-                        n - 1 - inbound.len()
-                    )));
-                }
-                thread::sleep(Duration::from_millis(5));
-            }
+            thread::sleep(Duration::from_millis(5));
         }
+
+        // Dynamic membership: keep accepting after the build, so a
+        // roster-epoch addition's link (or, for a late joiner, every
+        // incumbent's lazily-dialed link) can arrive mid-run.
+        let acceptor = if dynamic {
+            let table_ref = table.clone();
+            let hs_ctx = hs_ctx.clone();
+            let handle = thread::Builder::new()
+                .name(format!("sock-acceptor-{id}"))
+                .spawn(move || {
+                    while !table_ref.shutdown.load(std::sync::atomic::Ordering::SeqCst) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                // Post-build handshakes get the slice,
+                                // not the build deadline (long gone).
+                                let hard = Instant::now() + HELLO_SLICE;
+                                spawn_handshake(hs_ctx.clone(), stream, hard);
+                            }
+                            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                                thread::sleep(Duration::from_millis(10));
+                            }
+                            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                            Err(e) => {
+                                // accept(2) errors like ECONNABORTED /
+                                // EMFILE are transient; a silently dead
+                                // acceptor would strand every future
+                                // joiner link with nothing in the logs.
+                                eprintln!(
+                                    "socket mesh (peer {id}): acceptor error (retrying): {e}"
+                                );
+                                thread::sleep(Duration::from_millis(100));
+                            }
+                        }
+                    }
+                })
+                .map_err(|e| io_err(format!("spawning acceptor thread: {e}")))?;
+            Some(handle)
+        } else {
+            None
+        };
 
         Ok(SocketNet {
             id,
@@ -821,12 +1119,16 @@ impl SocketNet {
             secret,
             mont,
             links,
-            inbound,
+            dial_failed: vec![false; n],
+            addrs: roster.peers.iter().map(|p| p.addr.clone()).collect(),
+            join_steps,
+            hellos,
+            table,
+            acceptor,
             loopback: tx,
             inbox: Inbox::new(rx),
             timeout: Duration::from_secs(30),
             recv_mode: RecvMode::Blocking,
-            readers,
         })
     }
 
@@ -854,37 +1156,66 @@ impl SocketNet {
         env
     }
 
-    /// Write a pre-encoded frame to a link, ignoring errors: the remote
-    /// may have been banned or finished early, exactly like the perfect
-    /// fabric's ignored channel-send errors.
-    fn write_link(&self, to: PeerId, frame: &[u8]) {
-        if let Some(link) = &self.links[to] {
-            if let Ok(mut stream) = link.lock() {
-                let _ = stream.write_all(frame);
+    /// Write a pre-encoded frame to a link, ignoring write errors: the
+    /// remote may have been banned or finished early, exactly like the
+    /// perfect fabric's ignored channel-send errors. A missing link —
+    /// this endpoint or the target is a roster-epoch addition whose
+    /// boundary has arrived — is dialed lazily, HELLO first; one failed
+    /// dial marks the link dead for good (the protocol's timeout and
+    /// ELIMINATE machinery handles a peer that never comes up).
+    fn write_link(&mut self, to: PeerId, frame: &[u8]) {
+        if self.links[to].is_none() && !self.dial_failed[to] {
+            match dial_once(&self.addrs[to], LATE_DIAL_BUDGET) {
+                Ok(mut stream) => {
+                    let _ = stream.set_nodelay(true);
+                    if stream.write_all(&self.hellos[to]).is_ok() {
+                        self.links[to] = Some(stream);
+                    } else {
+                        self.dial_failed[to] = true;
+                    }
+                }
+                Err(e) => {
+                    eprintln!(
+                        "socket mesh (peer {}): late dial to peer {to} failed: {e}",
+                        self.id
+                    );
+                    self.dial_failed[to] = true;
+                }
             }
+        }
+        if let Some(stream) = &mut self.links[to] {
+            let _ = stream.write_all(frame);
         }
     }
 }
 
 impl Drop for SocketNet {
     fn drop(&mut self) {
+        // Stop the background acceptor first (dynamic-membership runs):
+        // it must not install new readers while we tear down.
+        self.table.shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
+        if let Some(handle) = self.acceptor.take() {
+            let _ = handle.join();
+        }
         // Outbound links carry no inbound data, so closing them reaches
         // the remote as a clean FIN after everything we sent — an
         // early-exiting (banned) peer can never RST away envelopes an
         // honest receiver has not yet drained.
         for link in self.links.iter().flatten() {
-            if let Ok(stream) = link.lock() {
-                let _ = stream.shutdown(Shutdown::Both);
-            }
+            let _ = link.shutdown(Shutdown::Both);
         }
         // Shutting down the inbound links unblocks every reader thread
         // parked in read(), so the joins below cannot hang. Any RST this
         // provokes lands on the remote's send-only socket, where there
         // is nothing to lose.
-        for stream in &self.inbound {
+        let (inbound, readers) = {
+            let mut state = self.table.state.lock().unwrap_or_else(|p| p.into_inner());
+            (std::mem::take(&mut state.inbound), std::mem::take(&mut state.readers))
+        };
+        for stream in &inbound {
             let _ = stream.shutdown(Shutdown::Both);
         }
-        for handle in self.readers.drain(..) {
+        for handle in readers {
             let _ = handle.join();
         }
     }
@@ -911,13 +1242,25 @@ impl Transport for SocketNet {
         self.inbox.advance_clock(self.recv_mode);
     }
 
+    fn clock(&self) -> u64 {
+        self.inbox.now()
+    }
+
+    fn set_min_step(&mut self, step: u64) {
+        self.inbox.set_min_step(step);
+    }
+
     fn send(&mut self, to: PeerId, step: u64, slot: u32, class: MsgClass, payload: Vec<u8>) {
         let bytes = payload.len();
         let env = self.make_envelope(step, slot, class, payload, false);
         self.info.stats.record_p2p(self.id, class, bytes);
         if to == self.id {
             let _ = self.loopback.send(env);
-        } else {
+        } else if step >= self.join_steps[to] {
+            // A not-yet-admitted joiner gets nothing on the wire; the
+            // in-process fabrics deliver-and-discard instead, which is
+            // observably identical (the joiner drops pre-join traffic
+            // at snapshot install).
             self.write_link(to, &encode_envelope(&env));
         }
     }
@@ -929,7 +1272,7 @@ impl Transport for SocketNet {
         let frame = encode_envelope(&env);
         let _ = self.loopback.send(env);
         for to in 0..self.info.n_peers {
-            if to != self.id {
+            if to != self.id && step >= self.join_steps[to] {
                 self.write_link(to, &frame);
             }
         }
@@ -1020,29 +1363,67 @@ mod tests {
         }
     }
 
+    /// A small roster whose keys come from `derive_keypair(seed, k)`.
+    fn test_roster(seed: u64, n: usize) -> Roster {
+        let mont = Mont::new();
+        Roster {
+            peers: (0..n)
+                .map(|k| RosterEntry {
+                    id: k,
+                    addr: format!("127.0.0.1:{}", 9000 + k),
+                    pubkey: derive_keypair(&mont, seed, k).public,
+                })
+                .collect(),
+        }
+    }
+
     #[test]
     fn hello_frame_roundtrip_signed_and_unsigned() {
         let mont = Mont::new();
-        let sk = keygen(&mont, 7);
+        let roster = test_roster(7, 14);
+        let sk = derive_keypair(&mont, 7, 12);
         for signed in [false, true] {
             let mut fr = FrameReader::new(DEFAULT_MAX_FRAME);
-            fr.feed(&encode_hello(12, &sk, &mont, signed));
+            fr.feed(&encode_hello(12, 3, 5, &roster.digest(), &sk, &mont, signed));
             match fr.next_frame().unwrap() {
                 Some(Frame::Hello(h)) => {
                     assert_eq!(h.id, 12);
+                    assert_eq!(h.epoch, 3);
+                    assert_eq!(h.nonce, roster.hello_nonce(12, 3, 5));
                     assert_eq!(h.pubkey, sk.public);
                     assert_eq!(h.signature.is_some(), signed);
                     if let Some(sig) = &h.signature {
-                        // The signature binds the claimed id to the
-                        // roster key — the anti-spoof check of
-                        // accept_handshake.
-                        assert!(verify(&mont, &sk.public, &hello_signing_bytes(12), sig));
-                        assert!(!verify(&mont, &sk.public, &hello_signing_bytes(13), sig));
+                        // The signature binds the claimed (id, epoch,
+                        // nonce) to the roster key — the anti-spoof and
+                        // anti-replay check of accept_handshake.
+                        let msg = hello_signing_bytes(12, 3, &h.nonce);
+                        assert!(verify(&mont, &sk.public, &msg, sig));
+                        let other_id = hello_signing_bytes(13, 3, &h.nonce);
+                        assert!(!verify(&mont, &sk.public, &other_id, sig));
+                        let other_epoch = hello_signing_bytes(12, 4, &h.nonce);
+                        assert!(!verify(&mont, &sk.public, &other_epoch, sig));
                     }
                 }
                 other => panic!("expected hello, got {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn hello_nonce_is_roster_epoch_and_link_bound() {
+        let a = test_roster(7, 4);
+        let mut b = test_roster(7, 4);
+        b.peers[2].addr = "10.0.0.9:4444".to_string();
+        // Same (id, epoch, receiver), different roster document ⇒
+        // different nonce: a HELLO captured against one roster replays
+        // as garbage against any other.
+        assert_ne!(a.hello_nonce(1, 0, 0), b.hello_nonce(1, 0, 0));
+        assert_ne!(a.hello_nonce(1, 0, 0), a.hello_nonce(1, 1, 0));
+        assert_ne!(a.hello_nonce(1, 0, 0), a.hello_nonce(2, 0, 0));
+        // Different receiver ⇒ different nonce: a capture of the 1→0
+        // link cannot claim peer 1's inbound slot at peer 2.
+        assert_ne!(a.hello_nonce(1, 0, 0), a.hello_nonce(1, 0, 2));
+        assert_eq!(a.hello_nonce(1, 0, 0), test_roster(7, 4).hello_nonce(1, 0, 0));
     }
 
     #[test]
@@ -1144,8 +1525,127 @@ mod tests {
         // HELLO after the handshake is a protocol violation.
         let mont = Mont::new();
         let sk = keygen(&mont, 1);
-        let hello = Hello { id: 3, pubkey: sk.public, signature: None };
+        let hello =
+            Hello { id: 3, epoch: 0, nonce: [0u8; 32], pubkey: sk.public, signature: None };
         assert!(admit_frame(Frame::Hello(hello), 3).is_none());
+    }
+
+    #[test]
+    fn handshake_rejects_stale_epochs_and_foreign_nonces() {
+        // Drive accept_handshake directly over a loopback socket pair.
+        let roster = test_roster(21, 3);
+        let mont = Mont::new();
+        let sk1 = derive_keypair(&mont, 21, 1);
+        let join_steps = vec![0u64, 0, 4]; // peer 2 is scheduled at epoch 4
+        let run = |hello_bytes: Vec<u8>| -> Result<Hello, String> {
+            let (listener, addr) = bind_ephemeral().unwrap();
+            let writer = std::thread::spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                let _ = s.write_all(&hello_bytes);
+                s // keep alive until the acceptor is done
+            });
+            let (mut stream, _) = listener.accept().unwrap();
+            let mut fr = FrameReader::new(DEFAULT_MAX_FRAME);
+            let res = accept_handshake(
+                &mut stream,
+                &mut fr,
+                Instant::now() + Duration::from_secs(5),
+                0,
+                &roster,
+                &roster.digest(),
+                &join_steps,
+                &Mont::new(),
+                true,
+            );
+            drop(writer.join().unwrap());
+            res
+        };
+        // Correct epoch-0 HELLO from peer 1 to peer 0: accepted.
+        let ok = run(encode_hello(1, 0, 0, &roster.digest(), &sk1, &mont, true)).unwrap();
+        assert_eq!(ok.id, 1);
+        // Stale epoch: peer 2 is scheduled at epoch 4, claims 0.
+        let sk2 = derive_keypair(&mont, 21, 2);
+        let err = run(encode_hello(2, 0, 0, &roster.digest(), &sk2, &mont, true)).unwrap_err();
+        assert!(err.contains("stale HELLO"), "{err}");
+        // Correct epoch for peer 2: accepted.
+        let ok = run(encode_hello(2, 4, 0, &roster.digest(), &sk2, &mont, true)).unwrap();
+        assert_eq!(ok.epoch, 4);
+        // A HELLO minted against a different roster document (same ids
+        // and keys, different addr rows): the nonce no longer matches.
+        let mut foreign = roster.clone();
+        foreign.peers[0].addr = "10.1.2.3:9".to_string();
+        let err = run(encode_hello(1, 0, 0, &foreign.digest(), &sk1, &mont, true)).unwrap_err();
+        assert!(err.contains("nonce"), "{err}");
+        // A genuine same-run HELLO captured from the 1→2 link and
+        // replayed at peer 0: the link-bound nonce no longer matches,
+        // so the replay cannot burn peer 1's inbound slot here.
+        let err = run(encode_hello(1, 0, 2, &roster.digest(), &sk1, &mont, true)).unwrap_err();
+        assert!(err.contains("nonce"), "{err}");
+        // Unsigned HELLO while signatures are on: rejected.
+        let err = run(encode_hello(1, 0, 0, &roster.digest(), &sk1, &mont, false)).unwrap_err();
+        assert!(err.contains("unsigned"), "{err}");
+    }
+
+    #[test]
+    fn late_joiner_links_form_after_the_founding_mesh() {
+        // Universe {0, 1, 2}; peer 2 joins at step 3. The founding mesh
+        // builds between 0 and 1 alone; peer 2's endpoint comes up with
+        // zero links and everything forms lazily: incumbents dial it on
+        // first send, it dials them on its first send, and the
+        // epoch-stamped HELLOs pass the acceptors.
+        let mont = Mont::new();
+        let (l0, a0) = bind_ephemeral().unwrap();
+        let (l1, a1) = bind_ephemeral().unwrap();
+        let (l2, a2) = bind_ephemeral().unwrap();
+        let roster = Roster {
+            peers: vec![
+                RosterEntry { id: 0, addr: a0, pubkey: derive_keypair(&mont, 31, 0).public },
+                RosterEntry { id: 1, addr: a1, pubkey: derive_keypair(&mont, 31, 1).public },
+                RosterEntry { id: 2, addr: a2, pubkey: derive_keypair(&mont, 31, 2).public },
+            ],
+        };
+        let cfg = SocketConfig {
+            connect_timeout: Duration::from_secs(20),
+            join_steps: vec![0, 0, 3],
+            ..Default::default()
+        };
+        let (rr, cc) = (roster.clone(), cfg.clone());
+        let t1 = std::thread::spawn(move || {
+            let mont = Mont::new();
+            let mut net =
+                SocketNet::connect(l1, &rr, 1, derive_keypair(&mont, 31, 1), &cc).unwrap();
+            net.set_timeout(Duration::from_secs(20));
+            // Wait for the joiner's step-3 broadcast, then answer it.
+            let env = net.recv_keyed(3, slots::GRAD_COMMIT, &|e| e.from == 2).unwrap();
+            assert_eq!(env.payload.to_vec(), vec![22]);
+            net.send(2, 3, slots::GRAD_PART, MsgClass::GradientPart, vec![12]);
+        });
+        let (rr, cc) = (roster.clone(), cfg.clone());
+        let t2 = std::thread::spawn(move || {
+            let mont = Mont::new();
+            // The joiner's connect returns immediately: no founding
+            // links to build.
+            let mut net =
+                SocketNet::connect(l2, &rr, 2, derive_keypair(&mont, 31, 2), &cc).unwrap();
+            net.set_timeout(Duration::from_secs(20));
+            // First send at its boundary step lazily dials everyone.
+            net.broadcast(3, slots::GRAD_COMMIT, MsgClass::Commitment, vec![22]);
+            let env = net.recv_keyed(3, slots::GRAD_PART, &|e| e.from == 1).unwrap();
+            assert_eq!(env.payload.to_vec(), vec![12]);
+            let env = net.recv_keyed(3, slots::AGG_PART, &|e| e.from == 0).unwrap();
+            assert_eq!(env.payload.to_vec(), vec![13]);
+        });
+        let mut net0 =
+            SocketNet::connect(l0, &roster, 0, derive_keypair(&mont, 31, 0), &cfg).unwrap();
+        net0.set_timeout(Duration::from_secs(20));
+        // Pre-boundary sends to the joiner stay off the wire (gated).
+        net0.send(2, 1, slots::GRAD_PART, MsgClass::GradientPart, vec![99]);
+        // Incumbent 0 sees the joiner's broadcast, then dials it lazily.
+        let env = net0.recv_keyed(3, slots::GRAD_COMMIT, &|e| e.from == 2).unwrap();
+        assert_eq!(env.payload.to_vec(), vec![22]);
+        net0.send(2, 3, slots::AGG_PART, MsgClass::AggregatedPart, vec![13]);
+        t1.join().unwrap();
+        t2.join().unwrap();
     }
 
     #[test]

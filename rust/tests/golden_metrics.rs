@@ -17,6 +17,7 @@
 use btard::coordinator::adversary::AdversarySpec;
 use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::membership::MembershipSchedule;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{run_btard_pooled, OptSpec, RunConfig};
 use btard::coordinator::ProtocolConfig;
@@ -61,6 +62,7 @@ fn perfect_fabric_64_peer_run_matches_golden_digest() {
         verify_signatures: false,
         gossip_fanout: 8,
         network: NetworkProfile::perfect(),
+        churn: MembershipSchedule::empty(),
         segments: vec![],
     };
     let src: Arc<dyn GradientSource> = Arc::new(Quadratic::new(1024, 0.1, 2.0, 1.0, 9));

@@ -1,0 +1,367 @@
+//! Dynamic-membership integration tests: the acceptance proof that
+//! epoch-based churn (mid-run joins, graceful leaves, concurrent
+//! attacks) is deterministic across every execution model, and that the
+//! membership machinery never hurts honest peers.
+//!
+//! - A churn schedule (join mid-run + graceful leave) with a concurrent
+//!   sign-flip attacker produces **identical metrics digests** across
+//!   the threaded model, the pooled scheduler at several worker counts,
+//!   and a loopback socket cluster (late links + epoch-stamped HELLOs).
+//! - The attacker is banned while honest peers — including the joiner
+//!   and the leaver — are never banned, and training converges.
+//! - Owner/validator assignment invariants hold under arbitrary
+//!   ban/join/leave sequences: every part and validator slot has exactly
+//!   one live owner, and epoch-boundary assignment is a pure function of
+//!   (epoch roster, seed).
+//!
+//! The *static*-roster guarantee (empty schedule ⇒ bit-identical to the
+//! pre-membership code) is pinned by `rust/tests/golden_metrics.rs`.
+
+use btard::coordinator::adversary::AdversarySpec;
+use btard::coordinator::attacks::{AttackSchedule, CollusionBoard};
+use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::membership::MembershipSchedule;
+use btard::coordinator::messages::BanReason;
+use btard::coordinator::optimizer::LrSchedule;
+use btard::coordinator::partition::OwnerMap;
+use btard::coordinator::runconfig::WorkloadSpec;
+use btard::coordinator::training::{
+    peer_main, prepare_source, run_btard_pooled, run_btard_threaded, OptSpec, RunConfig,
+};
+use btard::coordinator::ProtocolConfig;
+use btard::crypto::Mont;
+use btard::harness::{merge_reports, run_digest, PeerReport};
+use btard::net::socket::SocketNet;
+use btard::net::{
+    bind_ephemeral, derive_keypair, NetworkProfile, Roster, RosterEntry, SocketConfig, Transport,
+};
+use btard::util::prop::prop_check;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The cross-model churn scenario: a 6-id universe where peer 5 joins at
+/// step 2 and peer 2 leaves gracefully at step 4, while peer 4 sign-flips
+/// from step 3. Nesterov momentum is ON so the digest equality also
+/// proves the JOIN snapshot's optimizer-state transfer is bit-exact (a
+/// fresh momentum buffer on the joiner would diverge its params).
+fn churn_cfg() -> RunConfig {
+    RunConfig {
+        n_peers: 6,
+        byzantine: vec![4],
+        attack: Some((
+            AdversarySpec::parse("sign_flip:1000").unwrap(),
+            AttackSchedule::from_step(3),
+        )),
+        steps: 6,
+        protocol: ProtocolConfig {
+            n0: 6,
+            tau: TauPolicy::Fixed(1.0),
+            m_validators: 2,
+            delta_max: 4.0,
+            ..ProtocolConfig::default()
+        },
+        opt: OptSpec::Sgd {
+            schedule: LrSchedule::Constant(0.1),
+            momentum: 0.9,
+            nesterov: true,
+        },
+        clip_lambda: None,
+        eval_every: 2,
+        seed: 7,
+        verify_signatures: false,
+        gossip_fanout: 8,
+        network: NetworkProfile::perfect(),
+        churn: MembershipSchedule::parse("join:5@2,leave:2@4").unwrap(),
+        segments: vec![],
+    }
+}
+
+fn quad_workload() -> WorkloadSpec {
+    WorkloadSpec::Quadratic { dim: 64, mu: 0.1, l: 2.0, sigma: 1.0, seed: 9 }
+}
+
+#[test]
+fn churn_run_is_identical_across_exec_models_and_worker_counts() {
+    let cfg = churn_cfg();
+    let threaded = run_digest(&run_btard_threaded(&cfg, quad_workload().build()));
+    let pooled2 = run_digest(&run_btard_pooled(&cfg, quad_workload().build(), 2));
+    let pooled5 = run_digest(&run_btard_pooled(&cfg, quad_workload().build(), 5));
+    assert_eq!(threaded, pooled2, "threaded vs pooled(2) under churn");
+    assert_eq!(pooled2, pooled5, "pooled worker count must not matter under churn");
+}
+
+#[test]
+fn churn_with_attacker_converges_and_honest_peers_are_unharmed() {
+    // The acceptance scenario at full length: a joiner (9@2), a graceful
+    // leaver (4@6), and a sign-flip attacker (8, from step 3) who is
+    // caught by validator recomputation and banned; honest peers —
+    // including the joiner and the leaver — are never banned, and the
+    // quadratic converges.
+    let mut cfg = RunConfig::quick(10, 24);
+    cfg.byzantine = vec![8];
+    cfg.attack = Some((
+        AdversarySpec::parse("sign_flip:1000").unwrap(),
+        AttackSchedule::from_step(3),
+    ));
+    cfg.churn = MembershipSchedule::parse("join:9@2,leave:4@6").unwrap();
+    cfg.protocol.tau = TauPolicy::Fixed(2.0);
+    cfg.protocol.m_validators = 4;
+    cfg.protocol.delta_max = 10.0;
+    cfg.opt = OptSpec::Sgd {
+        schedule: LrSchedule::Constant(0.1),
+        momentum: 0.0,
+        nesterov: false,
+    };
+    cfg.eval_every = 4;
+    cfg.verify_signatures = false;
+    let src = Arc::new(btard::model::synthetic::Quadratic::new(64, 0.2, 4.0, 0.5, 7));
+    let res = run_btard_pooled(&cfg, src, 4);
+    assert_eq!(res.steps_done, 24, "churn must not end the run early");
+    // The attacker is banned by gradient-recomputation evidence.
+    let attacker_ban = res
+        .ban_events
+        .iter()
+        .find(|b| b.target == 8)
+        .unwrap_or_else(|| panic!("attacker 8 never banned: {:?}", res.ban_events));
+    assert_eq!(attacker_ban.reason, BanReason::GradientMismatch, "{attacker_ban:?}");
+    assert!(attacker_ban.step >= 3, "cannot be banned before attacking: {attacker_ban:?}");
+    // No honest peer is ever banned — in particular neither the joiner
+    // (9) nor the graceful leaver (4): leaving is not a ban.
+    for b in &res.ban_events {
+        assert_eq!(b.target, 8, "honest casualty: {b:?}");
+    }
+    assert!(
+        res.final_metric < 1.0,
+        "convergence under churn + attack, got {}",
+        res.final_metric
+    );
+    // The joiner paid traffic only after its boundary; the leaver's row
+    // is frozen at its departure. Both are real members of the digest.
+    assert_eq!(res.peer_bytes.len(), 10);
+    assert!(res.peer_bytes[9] > 0, "the joiner participated");
+}
+
+#[test]
+fn joiner_momentum_state_is_load_bearing() {
+    // Same scenario as the cross-model test but compared against a run
+    // without churn: with Nesterov momentum on, the joiner's params only
+    // stay consistent because the snapshot carries the optimizer state —
+    // this test pins that the churn run actually *trains* (finite
+    // metric, full length), i.e. the joiner never diverged and got
+    // eliminated.
+    let cfg = churn_cfg();
+    let res = run_btard_pooled(&cfg, quad_workload().build(), 3);
+    assert_eq!(res.steps_done, cfg.steps);
+    assert!(res.final_metric.is_finite());
+    // The joiner (5) must not appear in any ban event: a momentum
+    // mismatch would desynchronize its params and surface as a
+    // GradientMismatch / scalar ban against it.
+    assert!(
+        res.ban_events.iter().all(|b| b.target != 5),
+        "joiner banned: {:?}",
+        res.ban_events
+    );
+    // The graceful leaver (2) is likewise never a ban target.
+    assert!(
+        res.ban_events.iter().all(|b| b.target != 2),
+        "leaver banned: {:?}",
+        res.ban_events
+    );
+}
+
+#[test]
+fn owner_and_validator_assignment_invariants_under_arbitrary_churn() {
+    // Satellite property: for any ban/join/leave sequence, every part
+    // and validator slot has exactly one live owner, and epoch-boundary
+    // assignment is a pure function of (epoch roster, step seed) —
+    // independent of roster input order and of the path that produced
+    // the roster.
+    prop_check("membership owner invariants", |rng, _| {
+        let n = 4 + rng.below_usize(20);
+        let n_parts = n;
+        let seed = rng.next_u64();
+        let joiners: Vec<usize> = (1..n).filter(|_| rng.below(4) == 0).collect();
+        let mut live: Vec<usize> = (0..n).filter(|p| !joiners.contains(p)).collect();
+        if live.len() < 3 {
+            return;
+        }
+        let mut pending = joiners;
+        let mut epoch = 0u64;
+        let mut owners = OwnerMap::derive(n_parts, &live, seed, epoch);
+        let mut at_boundary = true;
+        for _ in 0..12 {
+            match rng.below(3) {
+                0 => {
+                    // Ban a random non-0 live peer (incremental path).
+                    if live.len() > 2 {
+                        let idx = 1 + rng.below_usize(live.len() - 1);
+                        live.remove(idx);
+                        owners.reassign_banned(&live);
+                        at_boundary = false;
+                    }
+                }
+                1 => {
+                    // Epoch boundary: a join.
+                    if let Some(j) = pending.pop() {
+                        live.push(j);
+                        live.sort_unstable();
+                        epoch += 1;
+                        owners = OwnerMap::derive(n_parts, &live, seed, epoch);
+                        at_boundary = true;
+                    }
+                }
+                _ => {
+                    // Epoch boundary: a graceful leave.
+                    if live.len() > 2 {
+                        let idx = 1 + rng.below_usize(live.len() - 1);
+                        live.remove(idx);
+                        epoch += 1;
+                        owners = OwnerMap::derive(n_parts, &live, seed, epoch);
+                        at_boundary = true;
+                    }
+                }
+            }
+            // Every part has exactly one owner, and that owner is live.
+            for j in 0..n_parts {
+                assert!(live.contains(&owners.owner(j)), "part {j} owner not live");
+            }
+            // Epoch-boundary assignment is a pure function of the
+            // (roster, seed, epoch) triple: recomputing from a shuffled
+            // copy of the roster reproduces it exactly.
+            if at_boundary {
+                let mut shuffled = live.clone();
+                rng.shuffle(&mut shuffled);
+                let again = OwnerMap::derive(n_parts, &shuffled, seed, epoch);
+                assert_eq!(owners.to_vec(), again.to_vec(), "derive must be pure");
+            }
+            // Validator slots: the REAL shared derivation (the one both
+            // stage_finish and the membership boundary call) lands every
+            // (validator, target) pair on live peers, and identical
+            // inputs give identical draws.
+            let r = btard::crypto::sha256_parts(&[b"prop-churn-r", &epoch.to_le_bytes()]);
+            let validators = btard::coordinator::step::draw_validators(&live, &r, 2);
+            for &(v, t) in &validators {
+                assert!(live.contains(&v) && live.contains(&t));
+            }
+            assert_eq!(validators, btard::coordinator::step::draw_validators(&live, &r, 2));
+        }
+    });
+}
+
+#[test]
+fn churn_composes_with_network_fault_simulation_deterministically() {
+    // Churn over a lossy fabric: the joiner's ordinary traffic is
+    // faulted normally from its boundary on (clock synchronized at
+    // install), the JOIN snapshot rides the reliable control plane, and
+    // the whole run stays a pure function of the seed — identical
+    // digests at different worker counts.
+    let mut cfg = churn_cfg();
+    cfg.network = NetworkProfile::from_name("lossy:0.05").unwrap();
+    let a = run_digest(&run_btard_pooled(&cfg, quad_workload().build(), 2));
+    let b = run_digest(&run_btard_pooled(&cfg, quad_workload().build(), 5));
+    assert_eq!(a, b, "lossy-fabric churn must be worker-count invariant");
+    // The joiner is never orphaned by a faulted snapshot: it completes
+    // the run as a live member (its traffic row is non-empty).
+    let res = run_btard_pooled(&cfg, quad_workload().build(), 3);
+    assert!(res.peer_bytes[5] > 0, "joiner must be admitted under faults: {res:?}");
+}
+
+/// Loopback socket cluster with a churn schedule: one endpoint per
+/// thread, each with its own per-"process" state, sharing only the
+/// roster — the in-test stand-in for true `btard peer` processes.
+fn run_socket_churn_cluster(cfg: &RunConfig, workload: &WorkloadSpec) -> Vec<PeerReport> {
+    let n = cfg.n_peers;
+    let mont = Mont::new();
+    let mut listeners = Vec::with_capacity(n);
+    let mut entries = Vec::with_capacity(n);
+    for k in 0..n {
+        let (listener, addr) = bind_ephemeral().unwrap();
+        entries.push(RosterEntry {
+            id: k,
+            addr,
+            pubkey: derive_keypair(&mont, cfg.seed, k).public,
+        });
+        listeners.push(listener);
+    }
+    let roster = Roster { peers: entries };
+    let mut handles = Vec::with_capacity(n);
+    for (k, listener) in listeners.into_iter().enumerate() {
+        let roster = roster.clone();
+        let cfg = cfg.clone();
+        let workload = workload.clone();
+        handles.push(std::thread::spawn(move || {
+            let mont = Mont::new();
+            let secret = derive_keypair(&mont, cfg.seed, k);
+            let scfg = SocketConfig {
+                gossip_fanout: cfg.gossip_fanout,
+                verify_signatures: cfg.verify_signatures,
+                connect_timeout: Duration::from_secs(30),
+                join_steps: cfg.churn.join_steps(cfg.n_peers),
+                ..SocketConfig::default()
+            };
+            let net = SocketNet::connect(listener, &roster, k, secret, &scfg).unwrap();
+            let info = net.info().clone();
+            let source = prepare_source(&cfg, workload.build());
+            let init_params = source.init_params(cfg.seed);
+            let board = CollusionBoard::new();
+            let out = peer_main(Box::new(net), cfg.clone(), source, init_params, board);
+            PeerReport::from_output(k, out, info.stats.total_bytes(k))
+        }));
+    }
+    handles.into_iter().map(|h| h.join().expect("peer thread panicked")).collect()
+}
+
+#[test]
+fn socket_churn_cluster_is_bit_identical_to_in_process_runs() {
+    // 5-id universe over real loopback TCP, signatures ON: peer 4 joins
+    // at step 2 (its links form lazily, via epoch-stamped HELLOs through
+    // the background acceptors), peer 1 leaves gracefully at step 3, and
+    // peer 3 sign-flips from step 2. The merged socket digest must equal
+    // both in-process models' digests bit-for-bit.
+    let cfg = RunConfig {
+        n_peers: 5,
+        byzantine: vec![3],
+        attack: Some((
+            AdversarySpec::parse("sign_flip:1000").unwrap(),
+            AttackSchedule::from_step(2),
+        )),
+        steps: 4,
+        protocol: ProtocolConfig {
+            n0: 5,
+            tau: TauPolicy::Fixed(1.0),
+            m_validators: 1,
+            delta_max: 4.0,
+            ..ProtocolConfig::default()
+        },
+        opt: OptSpec::Sgd {
+            schedule: LrSchedule::Constant(0.1),
+            momentum: 0.0,
+            nesterov: false,
+        },
+        clip_lambda: None,
+        eval_every: 2,
+        seed: 7,
+        verify_signatures: true,
+        gossip_fanout: 8,
+        network: NetworkProfile::perfect(),
+        churn: MembershipSchedule::parse("join:4@2,leave:1@3").unwrap(),
+        segments: vec![],
+    };
+    let workload = quad_workload();
+
+    let threaded = run_digest(&run_btard_threaded(&cfg, workload.build()));
+    let pooled = run_digest(&run_btard_pooled(&cfg, workload.build(), 2));
+    assert_eq!(threaded, pooled, "in-process execution models must agree first");
+
+    let reports = run_socket_churn_cluster(&cfg, &workload);
+    // The joiner paid traffic (it participated from step 2); the leaver
+    // stopped at its boundary.
+    assert!(reports[4].own_bytes > 0, "{reports:?}");
+    assert_eq!(reports[1].steps_done, 3, "{reports:?}");
+    let merged = merge_reports(cfg.n_peers, reports).unwrap();
+    assert_eq!(
+        run_digest(&merged),
+        threaded,
+        "a perfect-link socket cluster with churn must reproduce the in-process digest"
+    );
+}

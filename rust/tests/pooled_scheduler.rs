@@ -11,6 +11,7 @@
 use btard::coordinator::adversary::AdversarySpec;
 use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::membership::MembershipSchedule;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{
     run_btard_pooled, run_btard_threaded, OptSpec, RunConfig, RunResult,
@@ -52,6 +53,7 @@ fn sweep_cfg(n: usize, byz: usize, steps: u64, attack_start: u64) -> RunConfig {
         verify_signatures: false,
         gossip_fanout: 8,
         network: NetworkProfile::perfect(),
+        churn: MembershipSchedule::empty(),
         segments: vec![],
     }
 }

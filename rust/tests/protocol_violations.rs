@@ -311,6 +311,7 @@ mod custom {
                     spec: PartitionSpec::new(params0.len(), n),
                     owners: OwnerMap::initial(n),
                     live: (0..n).collect(),
+                    membership: btard::coordinator::Membership::default(),
                     ledger: btard::coordinator::BanLedger::new(),
                     equiv: btard::net::gossip::EquivocationTracker::new(),
                     behavior,

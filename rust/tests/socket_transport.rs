@@ -19,6 +19,7 @@
 use btard::coordinator::adversary::AdversarySpec;
 use btard::coordinator::attacks::{AttackSchedule, CollusionBoard};
 use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::membership::MembershipSchedule;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::runconfig::WorkloadSpec;
 use btard::coordinator::training::{
@@ -62,6 +63,7 @@ fn socket_cfg() -> RunConfig {
         verify_signatures: true,
         gossip_fanout: 8,
         network: NetworkProfile::perfect(),
+        churn: MembershipSchedule::empty(),
         segments: vec![],
     }
 }
