@@ -10,6 +10,11 @@
 //! which defenses survive which attacks, how fast attackers are banned,
 //! and whether post-ban accuracy recovers to the no-attack trajectory.
 //!
+//! Outcomes are recorded through the canonical [`BenchReport`] builder
+//! (written to `results/BENCH_fig3.json`, schema `btard-bench-v1`)
+//! alongside the per-step CSV series from [`Recorder`]; accuracy and
+//! ban records use informational units, so this figure never gates CI.
+//!
 //! Run: cargo bench --bench fig3_attacks
 //! Env: BTARD_FIG3_STEPS=600 for a longer run.
 
@@ -23,10 +28,13 @@ use btard::coordinator::training::{
 };
 use btard::coordinator::{Aggregator, ProtocolConfig};
 use btard::data::synth_vision::SynthVision;
-use btard::harness::{Recorder, Table};
+use btard::harness::Recorder;
 use btard::model::mlp::MlpModel;
 use btard::model::GradientSource;
 use btard::net::NetworkProfile;
+use btard::util::bench::BenchReport;
+use btard::util::json::Json;
+use std::path::Path;
 use std::sync::Arc;
 
 const N: usize = 16;
@@ -111,9 +119,11 @@ fn main() {
     ];
 
     let mut rec = Recorder::new("fig3");
-    let mut table = Table::new(&[
-        "attack", "defense", "final_acc", "min_acc_after", "bans", "ban_latency",
-    ]);
+    let mut rep = BenchReport::new("fig3");
+    rep.config("n", Json::num(N as f64))
+        .config("b", Json::num(B as f64))
+        .config("steps", Json::num(steps as f64))
+        .config("attack_start", Json::num(attack_start as f64));
     let t_start = std::time::Instant::now();
 
     for (attack_name, attack) in &attacks {
@@ -151,14 +161,7 @@ fn main() {
             let o = summarize(&res, attack_start);
             let label = format!("{attack_name}_{tag}");
             rec.record_run(&label, &res);
-            table.row(vec![
-                attack_name.to_string(),
-                tag.to_string(),
-                format!("{:.3}", o.final_acc),
-                format!("{:.3}", o.min_acc_after),
-                o.bans.to_string(),
-                o.ban_latency.map(|l| l.to_string()).unwrap_or_default(),
-            ]);
+            record_outcome(&mut rep, &label, &o);
             eprintln!(
                 "[{:>5.0}s] {label}: final {:.3}, bans {}",
                 t_start.elapsed().as_secs_f64(),
@@ -191,19 +194,36 @@ fn main() {
             let o = summarize(&res, attack_start);
             let label = format!("{attack_name}_{tag}");
             rec.record_run(&label, &res);
-            table.row(vec![
-                attack_name.to_string(),
-                tag.to_string(),
-                format!("{:.3}", o.final_acc),
-                format!("{:.3}", o.min_acc_after),
-                "0".to_string(),
-                String::new(),
-            ]);
+            record_outcome(&mut rep, &label, &o);
         }
     }
 
     println!("\n=== Fig. 3: accuracy under attacks (n={N}, b={B}, {steps} steps) ===\n");
-    println!("{}", table.render());
+    println!("{}", rep.table());
     let path = rec.finish().expect("write results");
     println!("series + summary: {}", path.display());
+    match rep.write(Path::new("results")) {
+        Ok(p) => println!("bench json: {}", p.display()),
+        Err(e) => {
+            eprintln!("FAILED to write BENCH_fig3.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// One run's summary as canonical records. All units here are
+/// informational: Fig. 3 measures defense *shape*, not speed, so none
+/// of these can regress a perf gate.
+fn record_outcome(rep: &mut BenchReport, label: &str, o: &Outcome) {
+    rep.add_value(&format!("{label}/final_acc"), "acc", o.final_acc);
+    // NaN (no eval after the attack started) is not representable in
+    // JSON; -1 is unambiguous for an accuracy.
+    let min_after = if o.min_acc_after.is_finite() { o.min_acc_after } else { -1.0 };
+    rep.add_value(&format!("{label}/min_acc_after"), "acc", min_after);
+    rep.add_value(&format!("{label}/bans"), "count", o.bans as f64);
+    rep.add_value(
+        &format!("{label}/ban_latency"),
+        "steps",
+        o.ban_latency.map(|l| l as f64).unwrap_or(-1.0),
+    );
 }

@@ -8,6 +8,11 @@
 //! scratch; (iii) stronger clipping (smaller λ_part budget) recovers
 //! faster.
 //!
+//! Outcomes go through the canonical [`BenchReport`] builder (written
+//! to `results/BENCH_fig4.json`, schema `btard-bench-v1`) alongside the
+//! per-step CSV series from [`Recorder`]; loss and ban records use
+//! informational units, so this figure never gates CI.
+//!
 //! Requires `make artifacts`. Run: cargo bench --bench fig4_clipped
 //! Env: BTARD_FIG4_STEPS=200 for a longer run.
 
@@ -19,11 +24,14 @@ use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{run_btard, OptSpec, RunConfig};
 use btard::coordinator::ProtocolConfig;
 use btard::data::synth_text::SynthText;
-use btard::harness::{Recorder, Table};
+use btard::harness::Recorder;
 use btard::model::pjrt_model::{PjrtData, PjrtModel};
 use btard::model::GradientSource;
 use btard::net::NetworkProfile;
 use btard::runtime::PjrtRuntime;
+use btard::util::bench::BenchReport;
+use btard::util::json::Json;
+use std::path::Path;
 use std::sync::Arc;
 
 const N: usize = 16;
@@ -70,9 +78,11 @@ fn main() {
     ];
 
     let mut rec = Recorder::new("fig4");
-    let mut table = Table::new(&[
-        "attack", "clip", "loss@attack", "peak_loss", "final_loss", "bans",
-    ]);
+    let mut rep = BenchReport::new("fig4");
+    rep.config("n", Json::num(N as f64))
+        .config("b", Json::num(B as f64))
+        .config("steps", Json::num(steps as f64))
+        .config("attack_start", Json::num(attack_start as f64));
     let t0 = std::time::Instant::now();
 
     for (attack_name, attack) in &attacks {
@@ -122,14 +132,14 @@ fn main() {
                 .fold(f64::NEG_INFINITY, f64::max);
             let label = format!("{attack_name}_{clip_name}");
             rec.record_run(&label, &res);
-            table.row(vec![
-                attack_name.to_string(),
-                clip_name.to_string(),
-                format!("{:.3}", loss_at_attack),
-                format!("{:.3}", peak_after),
-                format!("{:.3}", res.final_metric),
-                res.ban_events.len().to_string(),
-            ]);
+            // Losses use the informational `loss` unit (higher is worse
+            // but this figure checks shape, not speed); NaN / -inf fall
+            // back to -1, which no real loss can reach.
+            let finite = |v: f64| if v.is_finite() { v } else { -1.0 };
+            rep.add_value(&format!("{label}/loss_at_attack"), "loss", finite(loss_at_attack));
+            rep.add_value(&format!("{label}/peak_loss_after"), "loss", finite(peak_after));
+            rep.add_value(&format!("{label}/final_loss"), "loss", finite(res.final_metric));
+            rep.add_value(&format!("{label}/bans"), "count", res.ban_events.len() as f64);
             eprintln!(
                 "[{:>5.0}s] {label}: final {:.3}, bans {}",
                 t0.elapsed().as_secs_f64(),
@@ -142,7 +152,14 @@ fn main() {
     println!(
         "\n=== Fig. 4: LM loss, BTARD-CLIPPED-SGD (n={N}, b={B}, {steps} steps, lm_small) ===\n"
     );
-    println!("{}", table.render());
+    println!("{}", rep.table());
     let path = rec.finish().expect("write results");
     println!("series + summary: {}", path.display());
+    match rep.write(Path::new("results")) {
+        Ok(p) => println!("bench json: {}", p.display()),
+        Err(e) => {
+            eprintln!("FAILED to write BENCH_fig4.json: {e}");
+            std::process::exit(1);
+        }
+    }
 }

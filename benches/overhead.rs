@@ -2,7 +2,8 @@
 //! overhead, plus the Fig. 9 CenteredClip-iteration ablation and the
 //! Rust-vs-Pallas/XLA aggregation cross-check.
 //!
-//! Reports:
+//! Reports (all routed through one [`BenchReport`] and written to the
+//! canonical `results/BENCH_overhead.json`, schema `btard-bench-v1`):
 //!   1. per-step wall-time split (gradients / clip / MPRNG / verify /
 //!      comm / validate) for BTARD vs the plain-averaging configuration;
 //!   2. per-peer bytes by message class for several (d, n) — the
@@ -10,24 +11,74 @@
 //!   3. Fig. 9: final accuracy vs CenteredClip iteration budget;
 //!   4. CenteredClip hot path: Rust loop vs the AOT Pallas/XLA artifact.
 //!
-//! Run: cargo bench --bench overhead
+//! Gating: per-config `step_ms` totals, traffic byte counters, and the
+//! nanosecond hot-path timings are lower-is-better and diffed by the CI
+//! regression gate; the phase *split* columns and accuracy records are
+//! informational (unit `split_ms` / `acc`), so scheduler jitter in a
+//! sub-millisecond phase can't fail a build on its own.
+//!
+//! Run: cargo bench --bench overhead                      (full shapes)
+//!      BTARD_OVERHEAD_SMOKE=1 cargo bench --bench overhead  (CI, seconds)
 
 use btard::coordinator::adversary::AdversarySpec;
 use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::{centered_clip, TauPolicy};
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{run_btard, run_ps, OptSpec, PsConfig, RunConfig};
-use btard::coordinator::{Aggregator, ProtocolConfig};
+use btard::coordinator::Aggregator;
 use btard::data::synth_vision::SynthVision;
-use btard::harness::Table;
 use btard::model::mlp::MlpModel;
 use btard::model::synthetic::Quadratic;
 use btard::model::GradientSource;
 use btard::runtime::PjrtRuntime;
-use btard::util::bench::{bench, black_box, fmt_ns};
+use btard::util::bench::{bench, black_box, BenchReport};
+use btard::util::json::Json;
 use btard::util::rng::Rng;
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
+
+/// Bench shapes, full vs CI smoke. Everything that changes between the
+/// two modes lives here and is stamped into the report config, so the
+/// fingerprint distinguishes the regimes.
+struct Shape {
+    smoke: bool,
+    timing_dim: usize,
+    timing_steps: u64,
+    traffic_cells: Vec<(usize, usize)>,
+    fig9_iters: Vec<usize>,
+    fig9_steps: u64,
+    clip_budget: Duration,
+    agg_budget: Duration,
+}
+
+impl Shape {
+    fn detect() -> Shape {
+        if std::env::var("BTARD_OVERHEAD_SMOKE").is_ok() {
+            Shape {
+                smoke: true,
+                timing_dim: 8_192,
+                timing_steps: 4,
+                traffic_cells: vec![(16_384, 4), (16_384, 8)],
+                fig9_iters: vec![1, 5, 20],
+                fig9_steps: 40,
+                clip_budget: Duration::from_millis(250),
+                agg_budget: Duration::from_millis(120),
+            }
+        } else {
+            Shape {
+                smoke: false,
+                timing_dim: 65_536,
+                timing_steps: 12,
+                traffic_cells: vec![(16_384, 4), (16_384, 8), (16_384, 16), (262_144, 16)],
+                fig9_iters: vec![1, 2, 5, 20, 100, 500],
+                fig9_steps: 150,
+                clip_budget: Duration::from_secs(2),
+                agg_budget: Duration::from_millis(800),
+            }
+        }
+    }
+}
 
 fn main() {
     // Pin the legacy execution model: this bench reproduces the paper's
@@ -36,34 +87,54 @@ fn main() {
     // block and fold worker contention into stage wall times, which
     // measures something different.
     std::env::set_var("BTARD_EXEC", "threaded");
-    timing_split();
-    traffic_table();
-    fig9_clip_iters();
-    clip_rust_vs_artifact();
+    let shape = Shape::detect();
+    let mut rep = BenchReport::new("overhead");
+    rep.config("smoke", Json::Bool(shape.smoke))
+        .config("timing_dim", Json::num(shape.timing_dim as f64))
+        .config("timing_steps", Json::num(shape.timing_steps as f64))
+        .config("fig9_steps", Json::num(shape.fig9_steps as f64))
+        .config(
+            "traffic_cells",
+            Json::Arr(
+                shape
+                    .traffic_cells
+                    .iter()
+                    .map(|(d, n)| Json::str(&format!("d{d}_n{n}")))
+                    .collect(),
+            ),
+        );
+    timing_split(&mut rep, &shape);
+    traffic_table(&mut rep, &shape);
+    fig9_clip_iters(&mut rep, &shape);
+    clip_rust_vs_artifact(&mut rep, &shape);
+
+    println!("=== canonical report (btard-bench-v1) ===\n");
+    println!("{}", rep.table());
+    match rep.write(Path::new("results")) {
+        Ok(path) => println!("bench json: {}", path.display()),
+        Err(e) => {
+            eprintln!("FAILED to write BENCH_overhead.json: {e}");
+            std::process::exit(1);
+        }
+    }
 }
 
 // --- 1. per-step wall time split ------------------------------------------
 
-fn timing_split() {
-    println!("=== App. I.2: per-step wall-time split (quadratic d=65536, n=16) ===\n");
-    let src: Arc<dyn GradientSource> = Arc::new(Quadratic::new(65_536, 0.1, 2.0, 1.0, 5));
-    let mut table = Table::new(&[
-        "config",
-        "step_ms",
-        "grad_ms",
-        "clip_ms",
-        "mprng_ms",
-        "verify_ms",
-        "comm_ms",
-        "validate_ms",
-    ]);
+fn timing_split(rep: &mut BenchReport, shape: &Shape) {
+    println!(
+        "=== App. I.2: per-step wall-time split (quadratic d={}, n=16) ===\n",
+        shape.timing_dim
+    );
+    let src: Arc<dyn GradientSource> =
+        Arc::new(Quadratic::new(shape.timing_dim, 0.1, 2.0, 1.0, 5));
     for (name, tau, m, sigs) in [
         ("btard_tau1_sigs", TauPolicy::Fixed(1.0), 1usize, true),
         ("btard_tau1", TauPolicy::Fixed(1.0), 1, false),
         ("btard_2validators", TauPolicy::Fixed(1.0), 2, false),
         ("plain_allreduce", TauPolicy::Infinite, 0, false),
     ] {
-        let mut cfg = RunConfig::quick(16, 12);
+        let mut cfg = RunConfig::quick(16, shape.timing_steps);
         cfg.protocol.tau = tau;
         cfg.protocol.m_validators = m;
         cfg.verify_signatures = sigs;
@@ -78,28 +149,29 @@ fn timing_split() {
         let avg = |f: &dyn Fn(&btard::coordinator::training::StepMetric) -> f64| {
             res.metrics.iter().map(|m| f(m)).sum::<f64>() / n * 1e3
         };
-        table.row(vec![
-            name.to_string(),
-            format!("{:.1}", avg(&|m| m.step_wall_s)),
-            format!("{:.1}", avg(&|m| m.grad_s)),
-            format!("{:.1}", avg(&|m| m.clip_s)),
-            format!("{:.1}", avg(&|m| m.mprng_s)),
-            format!("{:.1}", avg(&|m| m.verify_s)),
-            format!("{:.1}", avg(&|m| m.comm_s)),
-            format!("{:.1}", avg(&|m| m.validate_s)),
-        ]);
+        // The total is gated; the phase split is informational — a CI
+        // runner hiccup in a 0.3 ms phase must not fail the build alone.
+        type Get = fn(&btard::coordinator::training::StepMetric) -> f64;
+        rep.add_value(&format!("timing/{name}/step_ms"), "ms", avg(&|m| m.step_wall_s));
+        let phases: [(&str, Get); 6] = [
+            ("grad", |m| m.grad_s),
+            ("clip", |m| m.clip_s),
+            ("mprng", |m| m.mprng_s),
+            ("verify", |m| m.verify_s),
+            ("comm", |m| m.comm_s),
+            ("validate", |m| m.validate_s),
+        ];
+        for (phase, get) in phases {
+            rep.add_value(&format!("timing/{name}/{phase}_ms"), "split_ms", avg(&get));
+        }
     }
-    println!("{}", table.render());
 }
 
 // --- 2. communication accounting -------------------------------------------
 
-fn traffic_table() {
+fn traffic_table(rep: &mut BenchReport, shape: &Shape) {
     println!("=== §B / Table: per-peer bytes per step — O(d + n²) vs PS O(n·d) ===\n");
-    let mut table = Table::new(&[
-        "d", "n", "btard_bytes/peer/step", "ps_server_bytes/step(≈n·d·4)", "ratio",
-    ]);
-    for (d, n) in [(16_384usize, 4usize), (16_384, 8), (16_384, 16), (262_144, 16)] {
+    for &(d, n) in &shape.traffic_cells {
         let src: Arc<dyn GradientSource> = Arc::new(Quadratic::new(d, 0.1, 2.0, 0.5, 1));
         let mut cfg = RunConfig::quick(n, 4);
         cfg.protocol.n0 = n;
@@ -108,30 +180,23 @@ fn traffic_table() {
         let res = run_btard(&cfg, src);
         let per_step = *res.peer_bytes.iter().max().unwrap() as f64 / 4.0;
         let ps_bytes = (n * d * 4 * 2) as f64; // server receives nd, sends nd
-        table.row(vec![
-            d.to_string(),
-            n.to_string(),
-            format!("{:.0}", per_step),
-            format!("{:.0}", ps_bytes),
-            format!("{:.1}x", ps_bytes / per_step),
-        ]);
+        rep.add_value(&format!("traffic/d{d}_n{n}/bytes_per_peer_step"), "bytes", per_step);
+        rep.add_value(&format!("traffic/d{d}_n{n}/ps_vs_btard"), "ratio", ps_bytes / per_step);
     }
-    println!("{}", table.render());
     println!("(BTARD per-peer cost stays ~2·d·4 bytes as n grows; robust PS moves n× more.)\n");
 }
 
 // --- 3. Fig. 9: CenteredClip iteration budget --------------------------------
 
-fn fig9_clip_iters() {
+fn fig9_clip_iters(rep: &mut BenchReport, shape: &Shape) {
     println!("=== Fig. 9: accuracy vs CenteredClip iteration budget (PS, sign-flip b=7/16) ===\n");
     let ds = Arc::new(SynthVision::new(0, 64, 10));
     let model: Arc<dyn GradientSource> = Arc::new(MlpModel::new(ds, 64, 8));
-    let mut table = Table::new(&["clip_iters", "final_acc"]);
     // PS CenteredClip with a *limited* iteration budget: emulated by the
     // BTARD path with clip_iters override (the PS baseline runs to
     // convergence by design, so we use the protocol path with τ=1).
-    for iters in [1usize, 2, 5, 20, 100, 500] {
-        let mut cfg = RunConfig::quick(16, 150);
+    for &iters in &shape.fig9_iters {
+        let mut cfg = RunConfig::quick(16, shape.fig9_steps);
         cfg.byzantine = (9..16).collect();
         cfg.attack = Some((
             AdversarySpec::parse("sign_flip:1000").unwrap(),
@@ -152,15 +217,14 @@ fn fig9_clip_iters() {
         };
         cfg.eval_every = 25;
         let res = run_btard(&cfg, model.clone());
-        table.row(vec![iters.to_string(), format!("{:.3}", res.final_metric)]);
+        rep.add_value(&format!("fig9/iters{iters}/final_acc"), "acc", res.final_metric);
     }
-    println!("{}", table.render());
     println!("(Few iterations leave the aggregate off the fixed point → lower final quality.)\n");
 }
 
 // --- 4. Rust vs Pallas/XLA CenteredClip --------------------------------------
 
-fn clip_rust_vs_artifact() {
+fn clip_rust_vs_artifact(rep: &mut BenchReport, shape: &Shape) {
     println!("=== Perf: CenteredClip Rust hot path vs AOT Pallas/XLA (16×4096, 8 iters) ===\n");
     let (n, p, iters) = (16usize, 4096usize, 8usize);
     let mut rng = Rng::new(1);
@@ -174,10 +238,40 @@ fn clip_rust_vs_artifact() {
     let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
     let tau = 2.0f32;
 
-    let rust = bench("rust centered_clip", Duration::from_secs(2), || {
+    // Below the parallel fan-out threshold (16×1024 < PAR_MIN_ELEMS):
+    // the pure scalar loop, the baseline the pooled records beat.
+    let small_refs: Vec<&[f32]> = rows.iter().map(|r| &r[..1024]).collect();
+    let scalar = bench("clip/rust_scalar_16x1024", shape.clip_budget / 2, || {
+        black_box(centered_clip(&small_refs, tau, iters, 0.0));
+    });
+    println!("{}", scalar.report());
+    rep.add_stats(&scalar);
+
+    // 16×4096 crosses the threshold: the chunked parallel reduction on
+    // the process-wide WorkerPool (bit-identical to scalar by property
+    // test), at the shape the XLA artifact also runs.
+    let rust = bench("clip/rust_16x4096", shape.clip_budget, || {
         black_box(centered_clip(&refs, tau, iters, 0.0));
     });
     println!("{}", rust.report());
+    rep.add_stats(&rust);
+
+    // Large-d shape: the gradient-sized vectors production steps
+    // actually reduce, where the pool's speedup is the whole story.
+    let big_p = if shape.smoke { 65_536 } else { 262_144 };
+    let big_rows: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; big_p];
+            rng.fill_gaussian(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let big_refs: Vec<&[f32]> = big_rows.iter().map(|r| r.as_slice()).collect();
+    let pooled = bench(&format!("clip/rust_pooled_16x{big_p}"), shape.clip_budget, || {
+        black_box(centered_clip(&big_refs, tau, iters, 0.0));
+    });
+    println!("{}", pooled.report());
+    rep.add_stats(&pooled);
 
     match PjrtRuntime::load_subset("artifacts", &["centered_clip_16x4096"]) {
         Ok(rt) => {
@@ -187,7 +281,7 @@ fn clip_rust_vs_artifact() {
             }
             let mask = vec![1.0f32; n];
             let handle = rt.handle.clone();
-            let xla = bench("pallas/xla artifact", Duration::from_secs(2), || {
+            let xla = bench("clip/xla_artifact_16x4096", shape.clip_budget, || {
                 let out = handle
                     .run(
                         "centered_clip_16x4096",
@@ -206,6 +300,7 @@ fn clip_rust_vs_artifact() {
                  the Pallas path exists for the TPU target, see DESIGN.md §Hardware-Adaptation)",
                 xla.median_ns / rust.median_ns
             );
+            rep.add_stats(&xla);
         }
         Err(_) => println!("artifact not built; run `make artifacts` for the XLA column"),
     }
@@ -221,10 +316,11 @@ fn clip_rust_vs_artifact() {
         ("centered_clip", Aggregator::CenteredClip),
         ("krum", Aggregator::Krum),
     ] {
-        let s = bench(name, Duration::from_millis(800), || {
+        let s = bench(&format!("agg/{name}"), shape.agg_budget, || {
             black_box(agg.aggregate(&refs, tau, 3));
         });
-        println!("  {:<14} {}", name, fmt_ns(s.median_ns));
+        println!("  {}", s.report());
+        rep.add_stats(&s);
     }
     let _ = run_ps(
         &PsConfig {

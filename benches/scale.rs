@@ -7,13 +7,23 @@
 //! n while d dominates); wall time grows with the total work n·d on a
 //! single machine.
 //!
+//! Results land in the canonical `results/BENCH_scale.json`
+//! (schema `btard-bench-v1`): per-cluster-size step wall time (gated,
+//! unit `ms`) and bytes/peer/step (gated, unit `bytes` — deterministic
+//! for a fixed shape), plus informational suboptimality / ban / fault
+//! counters. CI runs the smoke shape and diffs the JSON against the
+//! committed baseline.
+//!
 //! Run: cargo bench --bench scale                    (n = 16..=256)
 //!      BTARD_SCALE_SMOKE=1 cargo bench --bench scale  (CI smoke, seconds)
 //!      BTARD_SCALE_FULL=1  cargo bench --bench scale  (adds n = 512)
 //!      BTARD_SCALE_STEPS=K overrides the step count.
 
 use btard::coordinator::training::default_workers;
-use btard::harness::{run_matrix, Arm, ScenarioSpec, Table};
+use btard::harness::{run_matrix, Arm, ScenarioSpec};
+use btard::util::bench::BenchReport;
+use btard::util::json::Json;
+use std::path::Path;
 
 fn main() {
     let smoke = std::env::var("BTARD_SCALE_SMOKE").is_ok();
@@ -29,16 +39,17 @@ fn main() {
     } else {
         vec![16, 32, 64, 128, 256]
     };
+    let dim = if smoke { 4096 } else { 16384 };
     let spec = ScenarioSpec {
         name: if smoke { "scale_smoke".to_string() } else { "scale".to_string() },
-        cluster_sizes,
+        cluster_sizes: cluster_sizes.clone(),
         byzantine_frac: 0.125,
         attacks: vec!["sign_flip:1000".to_string()],
         arms: vec![Arm::Btard],
         networks: vec!["perfect".to_string()],
         churn: vec!["none".to_string()],
         steps,
-        dim: if smoke { 4096 } else { 16384 },
+        dim,
         attack_start: 2,
         tau: 1.0,
         delta_max: 4.0,
@@ -49,27 +60,35 @@ fn main() {
         verify_signatures: false,
     };
 
-    let t0 = std::time::Instant::now();
-    let report = run_matrix(&spec, std::path::Path::new("results")).expect("write results");
+    let mut rep = BenchReport::new("scale");
+    rep.config("mode", Json::str(if smoke { "smoke" } else if full { "full" } else { "default" }))
+        .config("steps", Json::num(steps as f64))
+        .config("dim", Json::num(dim as f64))
+        .config(
+            "cluster_sizes",
+            Json::Arr(cluster_sizes.iter().map(|&n| Json::num(n as f64)).collect()),
+        );
+    // Worker count is machine-dependent, so it is a record (visible in
+    // diffs) rather than config (which would flip the fingerprint and
+    // silently downgrade every cross-machine comparison).
+    rep.add_value("workers", "count", spec.workers as f64);
 
-    let mut table = Table::new(&[
-        "n", "byz", "ms/step", "bytes/peer/step", "last_ban", "final_subopt",
-    ]);
+    let t0 = std::time::Instant::now();
+    let report = run_matrix(&spec, Path::new("results")).expect("write results");
     for c in &report.cells {
-        table.row(vec![
-            c.n.to_string(),
-            c.byz.to_string(),
-            format!("{:.0}", c.avg_step_ms),
-            format!("{:.0}", c.bytes_per_peer_step),
-            c.last_ban_step.map(|s| s.to_string()).unwrap_or_default(),
-            format!("{:.3}", c.final_metric),
-        ]);
+        rep.add_value(&format!("n{}/step_ms", c.n), "ms", c.avg_step_ms);
+        rep.add_value(&format!("n{}/bytes_per_peer_step", c.n), "bytes", c.bytes_per_peer_step);
+        rep.add_value(&format!("n{}/final_subopt", c.n), "subopt", c.final_metric);
+        rep.add_value(
+            &format!("n{}/last_ban_step", c.n),
+            "step",
+            c.last_ban_step.map(|s| s as f64).unwrap_or(-1.0),
+        );
     }
     println!(
         "\n=== BTARD at scale: pooled scheduler, {} workers, sign-flip from step 2 ===\n",
         spec.workers
     );
-    println!("{}", table.render());
     println!(
         "(bytes/peer/step ≈ 2·d·4 + O(n²): near-flat in n while the gradient term\n \
          dominates — the butterfly's communication-efficiency claim at sizes the\n \
@@ -92,24 +111,19 @@ fn main() {
             ..spec.clone()
         };
         let lossy =
-            run_matrix(&lossy_spec, std::path::Path::new("results")).expect("write lossy results");
-        let mut table = Table::new(&[
-            "n", "network", "ms/step", "dropped", "late", "retx_bytes", "bans", "final_subopt",
-        ]);
+            run_matrix(&lossy_spec, Path::new("results")).expect("write lossy results");
         for c in &lossy.cells {
-            table.row(vec![
-                c.n.to_string(),
-                c.network.clone(),
-                format!("{:.0}", c.avg_step_ms),
-                c.net_dropped_msgs.to_string(),
-                c.net_late_msgs.to_string(),
-                c.net_retx_bytes.to_string(),
-                c.bans.to_string(),
-                format!("{:.3}", c.final_metric),
-            ]);
+            rep.add_value("lossy_n64/step_ms", "ms", c.avg_step_ms);
+            // Retransmit volume is seeded-deterministic for a fixed
+            // shape, so it gates: a protocol change that silently
+            // inflates recovery traffic shows up as a byte regression.
+            rep.add_value("lossy_n64/retx_bytes", "bytes", c.net_retx_bytes as f64);
+            rep.add_value("lossy_n64/dropped_msgs", "count", c.net_dropped_msgs as f64);
+            rep.add_value("lossy_n64/late_msgs", "count", c.net_late_msgs as f64);
+            rep.add_value("lossy_n64/bans", "count", c.bans as f64);
+            rep.add_value("lossy_n64/final_subopt", "subopt", c.final_metric);
         }
-        println!("\n=== lossy-fabric smoke cell (drop 5% w/ retransmits, tail latency) ===\n");
-        println!("{}", table.render());
+        println!("\n=== lossy-fabric smoke cell (drop 5% w/ retransmits, tail latency) ===");
         println!("lossy csv: {}", lossy.csv_path.display());
 
         // Protocol-surface adversary smoke cell: 64 peers with 8
@@ -125,23 +139,29 @@ fn main() {
             networks: vec!["perfect".to_string()],
             ..spec.clone()
         };
-        let adversary = run_matrix(&adversary_spec, std::path::Path::new("results"))
+        let adversary = run_matrix(&adversary_spec, Path::new("results"))
             .expect("write adversary results");
-        let mut table = Table::new(&[
-            "n", "attack", "ms/step", "bans", "last_ban", "final_subopt",
-        ]);
         for c in &adversary.cells {
-            table.row(vec![
-                c.n.to_string(),
-                c.attack.clone(),
-                format!("{:.0}", c.avg_step_ms),
-                c.bans.to_string(),
-                c.last_ban_step.map(|s| s.to_string()).unwrap_or_default(),
-                format!("{:.3}", c.final_metric),
-            ]);
+            rep.add_value("adversary_n64/step_ms", "ms", c.avg_step_ms);
+            rep.add_value("adversary_n64/bans", "count", c.bans as f64);
+            rep.add_value(
+                "adversary_n64/last_ban_step",
+                "step",
+                c.last_ban_step.map(|s| s as f64).unwrap_or(-1.0),
+            );
+            rep.add_value("adversary_n64/final_subopt", "subopt", c.final_metric);
         }
-        println!("\n=== protocol-surface adversary smoke cell (64 peers, equivocate) ===\n");
-        println!("{}", table.render());
+        println!("\n=== protocol-surface adversary smoke cell (64 peers, equivocate) ===");
         println!("adversary csv: {}", adversary.csv_path.display());
+    }
+
+    println!("\n=== canonical report (btard-bench-v1) ===\n");
+    println!("{}", rep.table());
+    match rep.write(Path::new("results")) {
+        Ok(path) => println!("bench json: {}", path.display()),
+        Err(e) => {
+            eprintln!("FAILED to write BENCH_scale.json: {e}");
+            std::process::exit(1);
+        }
     }
 }

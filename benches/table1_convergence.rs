@@ -11,6 +11,13 @@
 //!       so for small ε the δ-term washes out — the paper's headline
 //!       "same complexity as attack-free parallel SGD for small ε".
 //!
+//! Records go through the canonical [`BenchReport`] builder (written to
+//! `results/BENCH_table1.json`, schema `btard-bench-v1`). The
+//! steps-to-ε columns use the informational `steps` unit (convergence
+//! shape, not wall time), so this table never gates CI; a run that
+//! never reaches ε simply omits the record, which the comparison
+//! surfaces as membership drift rather than a failure.
+//!
 //! Run: cargo bench --bench table1_convergence
 
 use btard::coordinator::adversary::AdversarySpec;
@@ -20,11 +27,13 @@ use btard::coordinator::membership::MembershipSchedule;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::training::{run_btard, OptSpec, RunConfig};
 use btard::coordinator::ProtocolConfig;
-use btard::harness::{Recorder, Table};
+use btard::harness::Recorder;
 use btard::model::synthetic::Quadratic;
 use btard::model::GradientSource;
 use btard::net::NetworkProfile;
+use btard::util::bench::BenchReport;
 use btard::util::json::Json;
+use std::path::Path;
 use std::sync::Arc;
 
 const N: usize = 8;
@@ -96,66 +105,56 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(600);
     let mut rec = Recorder::new("table1");
+    let mut rep = BenchReport::new("table1");
+    rep.config("n", Json::num(N as f64))
+        .config("dim", Json::num(DIM as f64))
+        .config("steps", Json::num(steps as f64));
     let t0 = std::time::Instant::now();
 
     // (a) δ = 0 vs parallel SGD: BTARD adds no iteration overhead.
     println!("=== Table 1(a): δ=0 — BTARD vs attack-free complexity ===");
     let clean = run(0, 1, steps, false);
-    let mut table = Table::new(&["eps", "steps_to_eps (BTARD δ=0)"]);
     for eps in [10.0, 1.0, 0.3, 0.1] {
-        table.row(vec![
-            format!("{eps}"),
-            steps_to_eps(&clean.metrics, eps)
-                .map(|s| s.to_string())
-                .unwrap_or_else(|| ">steps".into()),
-        ]);
+        if let Some(s) = steps_to_eps(&clean.metrics, eps) {
+            rep.add_value(&format!("delta0/steps_to_eps{eps}"), "steps", s as f64);
+        }
     }
-    println!("{}", table.render());
     rec.record_run("delta0", &clean);
 
     // (b) δ sweep at m=1: more Byzantines → more damage before bans →
     // more iterations to reach ε.
     println!("=== Table 1(b): iterations-to-ε vs δ (m=1) ===");
-    let mut table = Table::new(&["b (of 8)", "steps_to_eps(1.0)", "steps_to_eps(0.3)", "bans"]);
     let mut delta_rows = Vec::new();
     for b in [0usize, 1, 2, 3] {
         let res = run(b, 1, steps, true);
         let s1 = steps_to_eps(&res.metrics, 1.0);
         let s2 = steps_to_eps(&res.metrics, 0.3);
-        table.row(vec![
-            b.to_string(),
-            s1.map(|s| s.to_string()).unwrap_or_else(|| ">steps".into()),
-            s2.map(|s| s.to_string()).unwrap_or_else(|| ">steps".into()),
-            res.ban_events.len().to_string(),
-        ]);
+        if let Some(s) = s1 {
+            rep.add_value(&format!("delta_b{b}/steps_to_eps1.0"), "steps", s as f64);
+        }
+        if let Some(s) = s2 {
+            rep.add_value(&format!("delta_b{b}/steps_to_eps0.3"), "steps", s as f64);
+        }
+        rep.add_value(&format!("delta_b{b}/bans"), "count", res.ban_events.len() as f64);
         delta_rows.push((b, s1, s2));
         rec.record_run(&format!("delta_b{b}"), &res);
         eprintln!("[{:>4.0}s] δ-sweep b={b} done", t0.elapsed().as_secs_f64());
     }
-    println!("{}", table.render());
 
     // (c) m sweep at b=3: more validators → attackers caught sooner →
     // fewer wasted iterations (the 1/m in the third term).
     println!("=== Table 1(c): iterations-to-ε vs validators m (b=3) ===");
-    let mut table = Table::new(&["m", "steps_to_eps(1.0)", "last_ban_step"]);
     for m in [1usize, 2, 3] {
         let res = run(3, m, steps, true);
-        table.row(vec![
-            m.to_string(),
-            steps_to_eps(&res.metrics, 1.0)
-                .map(|s| s.to_string())
-                .unwrap_or_else(|| ">steps".into()),
-            res.ban_events
-                .iter()
-                .map(|b| b.step)
-                .max()
-                .map(|s| s.to_string())
-                .unwrap_or_default(),
-        ]);
+        if let Some(s) = steps_to_eps(&res.metrics, 1.0) {
+            rep.add_value(&format!("m{m}/steps_to_eps1.0"), "steps", s as f64);
+        }
+        if let Some(s) = res.ban_events.iter().map(|b| b.step).max() {
+            rep.add_value(&format!("m{m}/last_ban_step"), "steps", s as f64);
+        }
         rec.record_run(&format!("m{m}"), &res);
         eprintln!("[{:>4.0}s] m-sweep m={m} done", t0.elapsed().as_secs_f64());
     }
-    println!("{}", table.render());
 
     // Shape assertions logged into the summary (soft — printed, not
     // panicking: stochastic runs on 1 seed).
@@ -174,6 +173,17 @@ fn main() {
         "shape_checks",
         vec![("monotone_in_delta", Json::Bool(monotone_delta))],
     );
+    rep.add_value("shape/monotone_in_delta", "bool", monotone_delta as u8 as f64);
+
+    println!("\n=== canonical report (btard-bench-v1) ===\n");
+    println!("{}", rep.table());
     let path = rec.finish().expect("write results");
     println!("summary: {}", path.display());
+    match rep.write(Path::new("results")) {
+        Ok(p) => println!("bench json: {}", p.display()),
+        Err(e) => {
+            eprintln!("FAILED to write BENCH_table1.json: {e}");
+            std::process::exit(1);
+        }
+    }
 }

@@ -8,5 +8,7 @@ pub mod sha256;
 pub mod u256;
 
 pub use commit::{commit, verify_opening, Digest, Opening};
-pub use schnorr::{keygen, sign, verify, Mont, PublicKey, SecretKey, Signature};
-pub use sha256::{sha256, sha256_f32, sha256_parts, Sha256};
+pub use schnorr::{
+    batch_verify, keygen, shared_secret, sign, verify, Mont, PublicKey, SecretKey, Signature,
+};
+pub use sha256::{hmac_sha256, sha256, sha256_f32, sha256_parts, Sha256};

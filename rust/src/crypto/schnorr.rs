@@ -250,6 +250,89 @@ pub fn verify(mont: &Mont, pk: &PublicKey, msg: &[u8], sig: &Signature) -> bool 
     lhs == rhs
 }
 
+/// Batch verification via a random linear combination:
+///
+///     g^(Σᵢ cᵢ·sᵢ)  ?=  Πᵢ Rᵢ^cᵢ · yᵢ^(eᵢ·cᵢ)      (mod p)
+///
+/// with independent 128-bit coefficients cᵢ. If every signature is
+/// individually valid both sides agree for *any* cᵢ; if some signature
+/// is invalid, equality requires the cᵢ to hit one specific relation —
+/// probability ~2⁻¹²⁸ over the coefficient draw. Coefficients are drawn
+/// Fiat–Shamir-style from a transcript hash of the whole batch, so the
+/// check is deterministic per batch yet not predictable by a signer
+/// when it commits to a signature (the coefficient of item i depends on
+/// every other item's bytes).
+///
+/// Returns `true` iff the whole batch is accepted. `false` says *some*
+/// signature is bad without naming it — callers that need attribution
+/// fall back to per-item [`verify`]. The k g^(·) exponentiations of the
+/// individual path collapse into one, and each Rᵢ is raised only to a
+/// 128-bit exponent, which is what makes deferred verification of
+/// queued envelopes cheaper than verifying them one by one.
+pub fn batch_verify(mont: &Mont, items: &[(&PublicKey, &[u8], &Signature)]) -> bool {
+    let p = modulus_p();
+    let pm1 = modulus_pm1();
+    if items.is_empty() {
+        return true;
+    }
+    if items.len() == 1 {
+        let (pk, msg, sig) = items[0];
+        return verify(mont, pk, msg, sig);
+    }
+    // Transcript digest binding every item (messages enter hashed, so
+    // huge payloads are absorbed once).
+    let mut t = Sha256::new();
+    t.update(b"btard-batch");
+    t.update(&(items.len() as u64).to_le_bytes());
+    for (pk, msg, sig) in items {
+        t.update(&sig.r);
+        t.update(&sig.s);
+        t.update(&pk.0);
+        t.update(&sha256_parts(&[msg]));
+    }
+    let transcript = t.finalize();
+
+    let mut lhs_exp = U256::ZERO; // Σ cᵢ·sᵢ mod p-1
+    let mut rhs = U256::ONE;
+    for (i, (pk, msg, sig)) in items.iter().enumerate() {
+        let y = U256::from_be_bytes(&pk.0);
+        let r = U256::from_be_bytes(&sig.r);
+        if y.is_zero() || r.is_zero() || !y.lt(&p) || !r.lt(&p) {
+            return false; // malformed group element — batch rejected
+        }
+        // cᵢ: 128 bits from the transcript, never zero.
+        let ci_bytes = sha256_parts(&[b"btard-batch-coef", &transcript, &(i as u64).to_le_bytes()]);
+        let mut ci = U256::from_be_bytes(&ci_bytes[..16]);
+        if ci.is_zero() {
+            ci = U256::ONE;
+        }
+        let s = U256::from_be_bytes(&sig.s).rem256(&pm1);
+        let e = challenge(&sig.r, &pk.0, msg);
+        lhs_exp = lhs_exp.add_mod(&s.widening_mul(&ci).rem(&pm1), &pm1);
+        let ec = e.widening_mul(&ci).rem(&pm1);
+        rhs = mont.mul_norm(&rhs, &mont.pow(&r, &ci));
+        rhs = mont.mul_norm(&rhs, &mont.pow(&y, &ec));
+    }
+    mont.pow(&U256::from_u64(GENERATOR), &lhs_exp) == rhs
+}
+
+/// Static–static Diffie–Hellman session secret: both endpoints of a
+/// link derive `H(tag ‖ min(y_a,y_b) ‖ max(y_a,y_b) ‖ g^(x_a·x_b))` and
+/// get the same 32 bytes; nobody else can compute g^(x_a·x_b). This is
+/// the key material behind the socket transport's session-MAC mode
+/// (signatures establish the session, MACs authenticate the stream).
+/// Same simulation-grade caveat as the group itself.
+pub fn shared_secret(mont: &Mont, sk: &SecretKey, peer: &PublicKey) -> [u8; 32] {
+    let y = U256::from_be_bytes(&peer.0);
+    let dh = mont.pow(&y, &sk.x);
+    let (lo, hi) = if sk.public.0 <= peer.0 {
+        (&sk.public.0, &peer.0)
+    } else {
+        (&peer.0, &sk.public.0)
+    };
+    sha256_parts(&[b"btard-dh", lo, hi, &dh.to_be_bytes()])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,5 +439,63 @@ mod tests {
             let sig = sign(&mont, &sk, &msg);
             assert!(verify(&mont, &sk.public, &msg, &sig));
         });
+    }
+
+    #[test]
+    fn batch_verify_accepts_valid_batches() {
+        let mont = Mont::new();
+        let keys: Vec<_> = (0..5).map(|i| keygen(&mont, 100 + i)).collect();
+        let msgs: Vec<Vec<u8>> =
+            (0..5).map(|i| format!("envelope payload {i}").into_bytes()).collect();
+        let sigs: Vec<_> =
+            keys.iter().zip(&msgs).map(|(sk, m)| sign(&mont, sk, m)).collect();
+        for k in [0usize, 1, 2, 5] {
+            let items: Vec<(&PublicKey, &[u8], &Signature)> = (0..k)
+                .map(|i| (&keys[i].public, msgs[i].as_slice(), &sigs[i]))
+                .collect();
+            assert!(batch_verify(&mont, &items), "batch of {k} valid sigs rejected");
+        }
+    }
+
+    #[test]
+    fn batch_verify_rejects_any_bad_signature() {
+        let mont = Mont::new();
+        let keys: Vec<_> = (0..4).map(|i| keygen(&mont, 200 + i)).collect();
+        let msgs: Vec<Vec<u8>> = (0..4).map(|i| vec![i as u8; 20]).collect();
+        let mut sigs: Vec<_> =
+            keys.iter().zip(&msgs).map(|(sk, m)| sign(&mont, sk, m)).collect();
+        for bad in 0..4 {
+            let orig = sigs[bad];
+            sigs[bad].s[31] ^= 1;
+            let items: Vec<(&PublicKey, &[u8], &Signature)> = (0..4)
+                .map(|i| (&keys[i].public, msgs[i].as_slice(), &sigs[i]))
+                .collect();
+            assert!(!batch_verify(&mont, &items), "forged sig {bad} slipped through");
+            sigs[bad] = orig;
+        }
+        // Wrong-message and wrong-key corruptions are also caught.
+        let items: Vec<(&PublicKey, &[u8], &Signature)> = vec![
+            (&keys[0].public, msgs[1].as_slice(), &sigs[0]),
+            (&keys[1].public, msgs[1].as_slice(), &sigs[1]),
+        ];
+        assert!(!batch_verify(&mont, &items));
+        let items: Vec<(&PublicKey, &[u8], &Signature)> = vec![
+            (&keys[2].public, msgs[0].as_slice(), &sigs[0]),
+            (&keys[1].public, msgs[1].as_slice(), &sigs[1]),
+        ];
+        assert!(!batch_verify(&mont, &items));
+    }
+
+    #[test]
+    fn shared_secret_symmetric_and_pairwise_distinct() {
+        let mont = Mont::new();
+        let a = keygen(&mont, 11);
+        let b = keygen(&mont, 12);
+        let c = keygen(&mont, 13);
+        let ab = shared_secret(&mont, &a, &b.public);
+        let ba = shared_secret(&mont, &b, &a.public);
+        assert_eq!(ab, ba, "both link endpoints must derive the same key");
+        assert_ne!(ab, shared_secret(&mont, &a, &c.public));
+        assert_ne!(ab, shared_secret(&mont, &b, &c.public));
     }
 }

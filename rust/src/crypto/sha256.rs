@@ -173,6 +173,35 @@ pub fn sha256_f32(v: &[f32]) -> [u8; 32] {
     s.finalize()
 }
 
+/// HMAC-SHA256 (RFC 2104) over several concatenated parts. Keys longer
+/// than the 64-byte block are hashed first, exactly per the RFC. This is
+/// the session-MAC primitive of the socket transport's negotiated
+/// per-link stream authentication (`net::socket`).
+pub fn hmac_sha256(key: &[u8], parts: &[&[u8]]) -> [u8; 32] {
+    let mut k = [0u8; 64];
+    if key.len() > 64 {
+        k[..32].copy_from_slice(&sha256(key));
+    } else {
+        k[..key.len()].copy_from_slice(key);
+    }
+    let mut ipad = [0u8; 64];
+    let mut opad = [0u8; 64];
+    for i in 0..64 {
+        ipad[i] = k[i] ^ 0x36;
+        opad[i] = k[i] ^ 0x5c;
+    }
+    let mut inner = Sha256::new();
+    inner.update(&ipad);
+    for p in parts {
+        inner.update(p);
+    }
+    let inner_digest = inner.finalize();
+    let mut outer = Sha256::new();
+    outer.update(&opad);
+    outer.update(&inner_digest);
+    outer.finalize()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,6 +255,29 @@ mod tests {
     #[test]
     fn parts_matches_concat() {
         assert_eq!(sha256_parts(&[b"ab", b"c"]), sha256(b"abc"));
+    }
+
+    // RFC 4231 HMAC-SHA256 known-answer tests.
+    #[test]
+    fn hmac_kat_rfc4231() {
+        // Test case 1: 20-byte 0x0b key, "Hi There".
+        assert_eq!(
+            hex(&hmac_sha256(&[0x0b; 20], &[b"Hi There"])),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+        // Test case 2: key "Jefe", split message parts.
+        assert_eq!(
+            hex(&hmac_sha256(b"Jefe", &[b"what do ya want ", b"for nothing?"])),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+        // Test case 6: key longer than one block is hashed first.
+        assert_eq!(
+            hex(&hmac_sha256(
+                &[0xaa; 131],
+                &[b"Test Using Larger Than Block-Size Key - Hash Key First"]
+            )),
+            "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
+        );
     }
 
     #[test]

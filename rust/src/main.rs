@@ -41,7 +41,9 @@ use btard::model::mlp::MlpModel;
 use btard::model::synthetic::Quadratic;
 use btard::model::GradientSource;
 use btard::net::NetworkProfile;
+use btard::util::bench::{compare_reports, fmt_value};
 use btard::util::cli::Args;
+use btard::util::json::Json;
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
@@ -57,10 +59,11 @@ fn main() {
         "scenarios" => cmd_scenarios(&args),
         "inspect" => cmd_inspect(&args),
         "selftest" => cmd_selftest(),
+        "bench-compare" => cmd_bench_compare(&args),
         _ => {
             println!(
                 "btard — Byzantine-Tolerant All-Reduce (ICML 2022 reproduction)\n\n\
-                 usage: btard <train|cluster|peer|ps|scenarios|inspect|selftest> [flags]\n\
+                 usage: btard <train|cluster|peer|ps|scenarios|inspect|selftest|bench-compare> [flags]\n\
                  common flags:\n\
                  \x20 --workload mlp|quadratic    training objective\n\
                  \x20 --peers N --byzantine B     cluster composition\n\
@@ -108,7 +111,13 @@ fn main() {
                  \x20 --roster FILE.json          fixed roster (id, addr, pubkey rows), or\n\
                  \x20 --rendezvous DIR            ephemeral-port rendezvous (used by cluster)\n\
                  \x20 --out FILE.json             per-peer report path\n\
-                 \x20 --connect-timeout-ms T      mesh-build budget (default 30000)"
+                 \x20 --connect-timeout-ms T      mesh-build budget (default 30000)\n\
+                 bench-compare (the CI perf-regression gate):\n\
+                 \x20 btard bench-compare BASELINE.json CURRENT.json [--tolerance 0.25]\n\
+                 \x20                             diff two btard-bench-v1 reports; exits\n\
+                 \x20                             nonzero when a gated-unit median regressed\n\
+                 \x20                             past the band (advisory when the baseline\n\
+                 \x20                             is provisional or the shapes differ)"
             );
         }
     }
@@ -599,4 +608,77 @@ fn cmd_selftest() {
         println!("selftest FAILED");
         std::process::exit(1);
     }
+}
+
+/// The CI perf-regression gate: diff a current `BENCH_*.json` against a
+/// committed baseline and exit nonzero on a blocking regression. A
+/// provisional (hand-seeded) baseline or a config-fingerprint mismatch
+/// downgrades the comparison to advisory — the deltas are printed either
+/// way, so the trajectory is visible in the job log.
+fn cmd_bench_compare(args: &Args) {
+    let (Some(base_path), Some(cur_path)) =
+        (args.positional.get(1), args.positional.get(2))
+    else {
+        eprintln!("usage: btard bench-compare BASELINE.json CURRENT.json [--tolerance 0.25]");
+        std::process::exit(2);
+    };
+    let tolerance = args.get_f32("tolerance", 0.25) as f64;
+    let load = |path: &str| -> Json {
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("bench-compare: cannot read '{path}': {e}");
+            std::process::exit(2);
+        });
+        Json::parse(&text).unwrap_or_else(|e| {
+            eprintln!("bench-compare: '{path}' is not valid JSON: {e}");
+            std::process::exit(2);
+        })
+    };
+    let base = load(base_path);
+    let current = load(cur_path);
+    let cmp = compare_reports(&base, &current, tolerance).unwrap_or_else(|e| {
+        eprintln!("bench-compare: {e}");
+        std::process::exit(2);
+    });
+    println!(
+        "bench-compare: {} vs {} (tolerance {:.0}%)",
+        base_path,
+        cur_path,
+        tolerance * 100.0
+    );
+    if cmp.provisional {
+        println!("  NOTE: baseline is provisional (hand-seeded) — comparison is advisory");
+    }
+    if cmp.fingerprint_mismatch {
+        println!("  NOTE: config fingerprints differ — shapes not comparable, advisory only");
+    }
+    let show = |label: &str, deltas: &[btard::util::bench::BenchDelta]| {
+        for d in deltas {
+            println!(
+                "  {label}: {:<44} {} -> {} ({:+.1}%)",
+                d.name,
+                fmt_value(&d.unit, d.base),
+                fmt_value(&d.unit, d.current),
+                (d.ratio - 1.0) * 100.0
+            );
+        }
+    };
+    show("REGRESSION", &cmp.regressions);
+    show("improved", &cmp.improvements);
+    for name in &cmp.only_base {
+        println!("  only in baseline: {name}");
+    }
+    for name in &cmp.only_current {
+        println!("  only in current:  {name}");
+    }
+    println!(
+        "  {} unchanged, {} regressed, {} improved",
+        cmp.unchanged,
+        cmp.regressions.len(),
+        cmp.improvements.len()
+    );
+    if cmp.blocking_failure() {
+        eprintln!("bench-compare: FAIL — median regression past the tolerance band");
+        std::process::exit(1);
+    }
+    println!("bench-compare: OK");
 }

@@ -1,0 +1,317 @@
+//! The message-authentication seam: how an endpoint credentials its
+//! outgoing envelopes and authenticates incoming ones.
+//!
+//! Mirrors the [`Transport`](super::Transport) pattern: the delivery
+//! machinery ([`local::Inbox`](super::local::Inbox)) is written against
+//! [`MessageAuth`] only, so an authentication-policy swap — sign
+//! everything, sign nothing, or the socket transport's session-MAC mode
+//! where only adjudication-bound slots carry signatures — never touches
+//! receive-path code, and raw `sign()`/`verify()` calls stop being
+//! scattered across the transports.
+//!
+//! Three policies:
+//!
+//! - [`SchnorrAuth`] — every envelope is signed by its sender and
+//!   verified against the roster key (the paper's default model). Batch
+//!   authentication uses the random-linear-combination Schnorr batch
+//!   check ([`crypto::batch_verify`]): one combined exponentiation
+//!   replaces per-envelope ones, and on failure the batch falls back to
+//!   per-envelope verification so the forged envelope — and only it — is
+//!   attributed and dropped.
+//! - [`SessionAuth`] — the socket transport's negotiated session-MAC
+//!   mode: the per-link frame MAC authenticates the *stream*, so bulk
+//!   payloads (gradient and aggregate parts) travel unsigned; envelopes
+//!   whose slot can end up in an adjudication transcript (commitments,
+//!   votes, accusations, membership) still carry real signatures,
+//!   because a MAC only convinces the link endpoint, never a third peer.
+//! - [`NoAuth`] — the `verify_signatures = false` benchmarking mode:
+//!   nothing is credentialed, everything is accepted.
+
+use super::{slots, Envelope};
+use crate::crypto::{batch_verify, Mont, PublicKey, SecretKey, Signature};
+
+/// Slots whose envelopes may be forwarded to third parties as evidence
+/// (commitments, votes, accusations, membership changes) and therefore
+/// must carry a transferable credential — a signature — even on links
+/// whose stream is already MAC-authenticated. The O(d) bulk payloads
+/// (`GRAD_PART`, `AGG_PART`) are exempt: their bytes are bound by the
+/// signed commitments, so a tampered part is caught by the hash check
+/// and attributed through the commitment, never through the part itself.
+pub fn requires_signature(slot: u32) -> bool {
+    !matches!(slots::tag(slot), slots::GRAD_PART | slots::AGG_PART)
+}
+
+/// How an endpoint credentials outgoing envelopes and authenticates
+/// incoming ones. Implementations are per-endpoint, not per-link: the
+/// link-level stream MAC of the socket transport lives in the frame
+/// codec; this seam decides what the *envelope* must carry on top.
+pub trait MessageAuth: Send + Sync {
+    /// Attach whatever credential this policy requires (called once by
+    /// the sender, before the envelope is cloned per recipient).
+    fn seal(&self, env: &mut Envelope);
+
+    /// Authenticate one envelope (blocking receive path).
+    fn verify(&self, env: &Envelope) -> bool;
+
+    /// Authenticate a batch of queued envelopes (drain-mode refills,
+    /// where the stage barrier has already queued everything a collect
+    /// will ask for). Returns one verdict per envelope, in order.
+    fn verify_batch(&self, envs: &[Envelope]) -> Vec<bool> {
+        envs.iter().map(|e| self.verify(e)).collect()
+    }
+}
+
+/// Sign-everything / verify-everything (the paper's default model).
+pub struct SchnorrAuth {
+    mont: Mont,
+    /// The endpoint's signing key; `None` for verify-only endpoints.
+    secret: Option<SecretKey>,
+    public_keys: Vec<PublicKey>,
+}
+
+impl SchnorrAuth {
+    pub fn new(mont: Mont, secret: Option<SecretKey>, public_keys: Vec<PublicKey>) -> SchnorrAuth {
+        SchnorrAuth { mont, secret, public_keys }
+    }
+
+    fn key_of(&self, env: &Envelope) -> Option<&PublicKey> {
+        self.public_keys.get(env.from)
+    }
+}
+
+impl MessageAuth for SchnorrAuth {
+    fn seal(&self, env: &mut Envelope) {
+        if let Some(sk) = &self.secret {
+            env.sign_with(&self.mont, sk);
+        }
+    }
+
+    fn verify(&self, env: &Envelope) -> bool {
+        match self.key_of(env) {
+            Some(pk) => env.verify_with(&self.mont, pk),
+            None => false,
+        }
+    }
+
+    fn verify_batch(&self, envs: &[Envelope]) -> Vec<bool> {
+        let mut ok = vec![false; envs.len()];
+        // Envelopes lacking a signature or naming an unknown sender are
+        // rejected outright; the rest enter the combined check.
+        let msgs: Vec<Vec<u8>> = envs.iter().map(|e| e.signing_bytes()).collect();
+        let mut items: Vec<(&PublicKey, &[u8], &Signature)> = Vec::with_capacity(envs.len());
+        let mut idx: Vec<usize> = Vec::with_capacity(envs.len());
+        for (i, env) in envs.iter().enumerate() {
+            if let (Some(sig), Some(pk)) = (env.signature.as_ref(), self.key_of(env)) {
+                items.push((pk, msgs[i].as_slice(), sig));
+                idx.push(i);
+            }
+        }
+        if batch_verify(&self.mont, &items) {
+            for &i in &idx {
+                ok[i] = true;
+            }
+        } else {
+            // At least one forgery: fall back to per-envelope checks so
+            // the bad envelope is attributed exactly — honest senders'
+            // messages in the same batch must not be collateral.
+            for (k, &i) in idx.iter().enumerate() {
+                let (pk, msg, sig) = items[k];
+                ok[i] = crate::crypto::verify(&self.mont, pk, msg, sig);
+            }
+        }
+        ok
+    }
+}
+
+/// The socket transport's session-MAC policy: the per-link stream MAC
+/// (checked in the frame codec, before an envelope ever reaches the
+/// mailbox) authenticates bulk traffic; adjudication-bound slots keep
+/// real signatures. `verify` therefore demands a valid signature exactly
+/// when [`requires_signature`] says the slot needs one, and trusts the
+/// already-MAC-checked stream for the rest.
+pub struct SessionAuth {
+    inner: SchnorrAuth,
+}
+
+impl SessionAuth {
+    pub fn new(mont: Mont, secret: Option<SecretKey>, public_keys: Vec<PublicKey>) -> SessionAuth {
+        SessionAuth { inner: SchnorrAuth::new(mont, secret, public_keys) }
+    }
+}
+
+impl MessageAuth for SessionAuth {
+    fn seal(&self, env: &mut Envelope) {
+        if requires_signature(env.slot) {
+            self.inner.seal(env);
+        }
+    }
+
+    fn verify(&self, env: &Envelope) -> bool {
+        !requires_signature(env.slot) || self.inner.verify(env)
+    }
+
+    fn verify_batch(&self, envs: &[Envelope]) -> Vec<bool> {
+        let mut ok = vec![true; envs.len()];
+        let signed_idx: Vec<usize> = (0..envs.len())
+            .filter(|&i| requires_signature(envs[i].slot))
+            .collect();
+        if signed_idx.is_empty() {
+            return ok;
+        }
+        // Payloads are Arc-backed, so cloning the signed subset copies
+        // pointers, not gradient buffers.
+        let subset: Vec<Envelope> = signed_idx.iter().map(|&i| envs[i].clone()).collect();
+        for (&i, verdict) in signed_idx.iter().zip(self.inner.verify_batch(&subset)) {
+            ok[i] = verdict;
+        }
+        ok
+    }
+}
+
+/// The `verify_signatures = false` benchmarking mode: no credentials,
+/// everything accepted (by construction, not oversight — see the CLI's
+/// `--no-sigs`).
+pub struct NoAuth;
+
+impl MessageAuth for NoAuth {
+    fn seal(&self, _env: &mut Envelope) {}
+
+    fn verify(&self, _env: &Envelope) -> bool {
+        true
+    }
+
+    fn verify_batch(&self, envs: &[Envelope]) -> Vec<bool> {
+        vec![true; envs.len()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::keygen;
+    use crate::net::MsgClass;
+
+    fn test_auth(n: usize) -> (Vec<SecretKey>, Vec<PublicKey>, Mont) {
+        let mont = Mont::new();
+        let secrets: Vec<SecretKey> = (0..n).map(|i| keygen(&mont, 4000 + i as u64)).collect();
+        let publics = secrets.iter().map(|s| s.public).collect();
+        (secrets, publics, mont)
+    }
+
+    fn envelope(from: usize, slot: u32, payload: Vec<u8>) -> Envelope {
+        Envelope {
+            from,
+            step: 3,
+            slot,
+            class: MsgClass::Commitment,
+            payload: payload.into(),
+            broadcast: true,
+            deliver_at: 0,
+            signature: None,
+        }
+    }
+
+    #[test]
+    fn adjudication_slots_require_signatures() {
+        for tag in [
+            slots::GRAD_COMMIT,
+            slots::AGG_COMMIT,
+            slots::MPRNG_COMMIT,
+            slots::MPRNG_REVEAL,
+            slots::VERIFY_SCALARS,
+            slots::CHECK_VOTE,
+            slots::ACCUSE,
+            slots::ELIMINATE,
+            slots::VALIDATION_OK,
+            slots::JOIN,
+            slots::VERIFY_DONE,
+            slots::LEAVE,
+        ] {
+            assert!(requires_signature(slots::sub(tag, 7)), "tag {tag:#x}");
+        }
+        // The O(d) bulk payloads ride on the stream MAC alone.
+        assert!(!requires_signature(slots::sub(slots::GRAD_PART, 7)));
+        assert!(!requires_signature(slots::sub(slots::AGG_PART, 7)));
+    }
+
+    #[test]
+    fn schnorr_auth_seals_and_batch_verifies() {
+        let (secrets, publics, mont) = test_auth(4);
+        let envs: Vec<Envelope> = (0..4)
+            .map(|i| {
+                let auth = SchnorrAuth::new(mont.clone(), Some(secrets[i].clone()), publics.clone());
+                let mut env = envelope(i, slots::sub(slots::GRAD_COMMIT, i), vec![i as u8; 8]);
+                auth.seal(&mut env);
+                env
+            })
+            .collect();
+        let verifier = SchnorrAuth::new(mont.clone(), None, publics.clone());
+        assert!(envs.iter().all(|e| e.signature.is_some()));
+        assert!(envs.iter().all(|e| verifier.verify(e)));
+        assert_eq!(verifier.verify_batch(&envs), vec![true; 4]);
+        assert_eq!(verifier.verify_batch(&[]), Vec::<bool>::new());
+    }
+
+    #[test]
+    fn one_forgery_in_a_batch_is_attributed_to_the_right_envelope() {
+        let (secrets, publics, mont) = test_auth(5);
+        let mut envs: Vec<Envelope> = (0..5)
+            .map(|i| {
+                let auth = SchnorrAuth::new(mont.clone(), Some(secrets[i].clone()), publics.clone());
+                let mut env = envelope(i, slots::sub(slots::ACCUSE, i), vec![7; 16]);
+                auth.seal(&mut env);
+                env
+            })
+            .collect();
+        let verifier = SchnorrAuth::new(mont, None, publics);
+        for bad in 0..envs.len() {
+            // Tamper one envelope's payload after sealing: the combined
+            // check fails, the fallback isolates exactly that index.
+            let original = envs[bad].clone();
+            envs[bad].payload = vec![0xEE; 16].into();
+            let verdicts = verifier.verify_batch(&envs);
+            for (i, &v) in verdicts.iter().enumerate() {
+                assert_eq!(v, i != bad, "bad={bad} i={i}");
+            }
+            envs[bad] = original;
+        }
+        // An unsigned envelope is rejected without poisoning the batch.
+        envs[2].signature = None;
+        let verdicts = verifier.verify_batch(&envs);
+        assert_eq!(verdicts, vec![true, true, false, true, true]);
+    }
+
+    #[test]
+    fn session_auth_signs_only_adjudication_slots() {
+        let (secrets, publics, mont) = test_auth(2);
+        let auth = SessionAuth::new(mont.clone(), Some(secrets[0].clone()), publics.clone());
+        let mut part = envelope(0, slots::sub(slots::GRAD_PART, 1), vec![1; 32]);
+        auth.seal(&mut part);
+        assert!(part.signature.is_none(), "bulk parts ride the stream MAC");
+        let mut commit = envelope(0, slots::sub(slots::GRAD_COMMIT, 1), vec![2; 32]);
+        auth.seal(&mut commit);
+        assert!(commit.signature.is_some(), "commitments stay signed");
+
+        let verifier = SessionAuth::new(mont, None, publics);
+        assert!(verifier.verify(&part));
+        assert!(verifier.verify(&commit));
+        // An adjudication envelope stripped of its signature is rejected,
+        // even though the (hypothetical) stream MAC admitted the frame.
+        let mut stripped = commit.clone();
+        stripped.signature = None;
+        assert!(!verifier.verify(&stripped));
+        assert_eq!(
+            verifier.verify_batch(&[part, commit, stripped]),
+            vec![true, true, false]
+        );
+    }
+
+    #[test]
+    fn noauth_accepts_everything() {
+        let mut env = envelope(9, slots::sub(slots::GRAD_PART, 0), vec![1]);
+        NoAuth.seal(&mut env);
+        assert!(env.signature.is_none());
+        assert!(NoAuth.verify(&env));
+        assert_eq!(NoAuth.verify_batch(std::slice::from_ref(&env)), vec![true]);
+    }
+}

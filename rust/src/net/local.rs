@@ -45,6 +45,7 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::Duration;
 
+use super::auth::{MessageAuth, NoAuth, SchnorrAuth};
 use super::{Envelope, MsgClass, PeerId, TrafficStats, Transport};
 use crate::crypto::{Mont, PublicKey, SecretKey};
 
@@ -145,15 +146,15 @@ impl Inbox {
         }
     }
 
-    /// Signature-check and ripeness-gate one incoming envelope: forged
+    /// Authenticate and ripeness-gate one incoming envelope: forged
     /// envelopes are dropped silently (per the paper: a receiver ignores
     /// unsigned/forged messages), not-yet-deliverable ones are parked in
     /// `future` until the phase clock reaches their gate.
-    fn gate(&mut self, info: &ClusterInfo, mont: &Mont, env: Envelope) -> Option<Envelope> {
+    fn gate(&mut self, auth: &dyn MessageAuth, env: Envelope) -> Option<Envelope> {
         if env.step < self.min_step {
             return None; // pre-membership traffic — never deliverable
         }
-        if info.verify_signatures && !env.verify_with(mont, &info.public_keys[env.from]) {
+        if !auth.verify(&env) {
             return None; // forged — drop silently
         }
         if env.deliver_at > self.clock {
@@ -169,13 +170,37 @@ impl Inbox {
     /// same key — equivocation variants from one sender — stay in their
     /// per-sender FIFO order, exactly as a blocking receiver would have
     /// observed them.
-    fn refill_pending_ordered(&mut self, info: &ClusterInfo, mont: &Mont) {
-        let mut added = false;
+    ///
+    /// Authentication is *deferred and batched* here: drain mode is the
+    /// pooled scheduler's path, where the stage barrier has already
+    /// queued every envelope a collect will ask for, so whole phase
+    /// batches arrive at once. One combined Schnorr batch check replaces
+    /// per-envelope verification (`MessageAuth::verify_batch`); when it
+    /// fails, the policy falls back to per-envelope checks so only the
+    /// forged envelope is dropped — its honest batch-mates survive.
+    fn refill_pending_ordered(&mut self, auth: &dyn MessageAuth) {
+        let mut fresh: Vec<Envelope> = Vec::new();
         while let Ok(env) = self.mailbox.try_recv() {
-            if let Some(env) = self.gate(info, mont, env) {
-                self.pending.push(env);
-                added = true;
+            if env.step < self.min_step {
+                continue; // pre-membership traffic — never deliverable
             }
+            fresh.push(env);
+        }
+        if fresh.is_empty() {
+            return;
+        }
+        let verdicts = auth.verify_batch(&fresh);
+        let mut added = false;
+        for (env, ok) in fresh.into_iter().zip(verdicts) {
+            if !ok {
+                continue; // forged — drop silently, attributed by the fallback
+            }
+            if env.deliver_at > self.clock {
+                self.future.push(env);
+                continue;
+            }
+            self.pending.push(env);
+            added = true;
         }
         if added {
             // Stable + adaptive: appending to an already-sorted prefix
@@ -190,14 +215,13 @@ impl Inbox {
     /// receiver ignores unsigned/forged messages).
     pub(crate) fn recv_match(
         &mut self,
-        info: &ClusterInfo,
-        mont: &Mont,
+        auth: &dyn MessageAuth,
         mode: RecvMode,
         timeout: Duration,
         pred: &dyn Fn(&Envelope) -> bool,
     ) -> Result<Envelope, RecvError> {
         if mode == RecvMode::Drain {
-            self.refill_pending_ordered(info, mont);
+            self.refill_pending_ordered(auth);
             return match self.pending.iter().position(|e| pred(e)) {
                 // `remove`, not `swap_remove`: keep the canonical order.
                 Some(pos) => Ok(self.pending.remove(pos)),
@@ -215,7 +239,7 @@ impl Inbox {
             }
             match self.mailbox.recv_timeout(remaining) {
                 Ok(env) => {
-                    let Some(env) = self.gate(info, mont, env) else { continue };
+                    let Some(env) = self.gate(auth, env) else { continue };
                     if pred(&env) {
                         return Ok(env);
                     }
@@ -231,8 +255,7 @@ impl Inbox {
     /// matching `pred` without blocking.
     pub(crate) fn drain_match(
         &mut self,
-        info: &ClusterInfo,
-        mont: &Mont,
+        auth: &dyn MessageAuth,
         mode: RecvMode,
         pred: &dyn Fn(&Envelope) -> bool,
     ) -> Vec<Envelope> {
@@ -240,7 +263,7 @@ impl Inbox {
             // Pull everything into `pending` first so the result comes out
             // in canonical order (the loop below then finds the channel
             // empty and just partitions the buffer).
-            self.refill_pending_ordered(info, mont);
+            self.refill_pending_ordered(auth);
         }
         let mut out = Vec::new();
         let mut keep = Vec::new();
@@ -253,7 +276,7 @@ impl Inbox {
         }
         self.pending = keep;
         while let Ok(env) = self.mailbox.try_recv() {
-            let Some(env) = self.gate(info, mont, env) else { continue };
+            let Some(env) = self.gate(auth, env) else { continue };
             if pred(&env) {
                 out.push(env);
             } else {
@@ -271,8 +294,7 @@ impl Inbox {
     /// `remove` (not `swap_remove`) keeps the canonical order.
     pub(crate) fn recv_keyed(
         &mut self,
-        info: &ClusterInfo,
-        mont: &Mont,
+        auth: &dyn MessageAuth,
         mode: RecvMode,
         timeout: Duration,
         step: u64,
@@ -280,7 +302,7 @@ impl Inbox {
         pred: &dyn Fn(&Envelope) -> bool,
     ) -> Result<Envelope, RecvError> {
         if mode == RecvMode::Drain {
-            self.refill_pending_ordered(info, mont);
+            self.refill_pending_ordered(auth);
             let lo = self.pending.partition_point(|e| (e.step, e.slot) < (step, slot));
             let len = self.pending[lo..].partition_point(|e| (e.step, e.slot) <= (step, slot));
             for pos in lo..lo + len {
@@ -290,7 +312,7 @@ impl Inbox {
             }
             return Err(RecvError::Timeout);
         }
-        self.recv_match(info, mont, mode, timeout, &|e| {
+        self.recv_match(auth, mode, timeout, &|e| {
             e.step == step && e.slot == slot && pred(e)
         })
     }
@@ -302,6 +324,10 @@ pub struct PeerNet {
     pub info: Arc<ClusterInfo>,
     pub secret: SecretKey,
     pub mont: Mont,
+    /// How outgoing envelopes are credentialed and incoming ones
+    /// authenticated (the `MessageAuth` seam; `SchnorrAuth` when the
+    /// cluster verifies signatures, `NoAuth` otherwise).
+    auth: Arc<dyn MessageAuth>,
     senders: Vec<Sender<Envelope>>,
     inbox: Inbox,
     /// Default receive timeout: elapsed ⇒ counterpart considered in
@@ -351,15 +377,28 @@ pub fn build_cluster(
         .into_iter()
         .zip(secrets)
         .enumerate()
-        .map(|(id, (mailbox, secret))| PeerNet {
-            id,
-            info: info.clone(),
-            secret,
-            mont: mont.clone(),
-            senders: senders.clone(),
-            inbox: Inbox::new(mailbox),
-            timeout: Duration::from_secs(30),
-            recv_mode: RecvMode::Blocking,
+        .map(|(id, (mailbox, secret))| {
+            let auth: Arc<dyn MessageAuth> = if verify_signatures {
+                Arc::new(SchnorrAuth::new(
+                    mont.clone(),
+                    Some(secret.clone()),
+                    info.public_keys.clone(),
+                ))
+            } else {
+                // Signing would be pure waste: nobody ever checks the bytes.
+                Arc::new(NoAuth)
+            };
+            PeerNet {
+                id,
+                info: info.clone(),
+                secret,
+                mont: mont.clone(),
+                auth,
+                senders: senders.clone(),
+                inbox: Inbox::new(mailbox),
+                timeout: Duration::from_secs(30),
+                recv_mode: RecvMode::Blocking,
+            }
         })
         .collect()
 }
@@ -383,11 +422,7 @@ impl PeerNet {
             deliver_at: 0,
             signature: None,
         };
-        // When the cluster runs with verification off (numerics benches),
-        // signing would be pure waste: nobody ever checks the bytes.
-        if self.info.verify_signatures {
-            env.sign_with(&self.mont, &self.secret);
-        }
+        self.auth.seal(&mut env);
         env
     }
 
@@ -451,13 +486,13 @@ impl PeerNet {
 
     /// Receive the next envelope matching `pred`, buffering mismatches.
     pub fn recv_match<F: Fn(&Envelope) -> bool>(&mut self, pred: F) -> Result<Envelope, RecvError> {
-        self.inbox.recv_match(&self.info, &self.mont, self.recv_mode, self.timeout, &pred)
+        self.inbox.recv_match(self.auth.as_ref(), self.recv_mode, self.timeout, &pred)
     }
 
     /// Drain any already-buffered or immediately available envelopes
     /// matching `pred` without blocking.
     pub fn drain_match<F: Fn(&Envelope) -> bool>(&mut self, pred: F) -> Vec<Envelope> {
-        self.inbox.drain_match(&self.info, &self.mont, self.recv_mode, &pred)
+        self.inbox.drain_match(self.auth.as_ref(), self.recv_mode, &pred)
     }
 }
 
@@ -514,15 +549,7 @@ impl Transport for PeerNet {
         slot: u32,
         pred: &dyn Fn(&Envelope) -> bool,
     ) -> Result<Envelope, RecvError> {
-        self.inbox.recv_keyed(
-            &self.info,
-            &self.mont,
-            self.recv_mode,
-            self.timeout,
-            step,
-            slot,
-            pred,
-        )
+        self.inbox.recv_keyed(self.auth.as_ref(), self.recv_mode, self.timeout, step, slot, pred)
     }
 
     fn drain_match(&mut self, pred: &dyn Fn(&Envelope) -> bool) -> Vec<Envelope> {
@@ -625,6 +652,29 @@ mod tests {
         let env = p0.recv_match(|e| e.from == 1).unwrap();
         assert!(env.signature.is_none());
         assert_eq!(env.payload.to_vec(), vec![5]);
+    }
+
+    #[test]
+    fn drain_batch_verify_drops_only_the_forged_envelope() {
+        // Drain-mode refills authenticate whole batches at once; a
+        // forged envelope must be attributed exactly — honest envelopes
+        // queued in the same batch (even from the same sender) survive.
+        let mut cluster = build_cluster(3, 850, 8, true);
+        let p2 = cluster.pop().unwrap();
+        let p1 = cluster.pop().unwrap();
+        let mut p0 = cluster.pop().unwrap();
+        p0.recv_mode = RecvMode::Drain;
+        p1.send(0, 1, slots::GRAD_COMMIT, MsgClass::Commitment, vec![1]);
+        // A forgery claiming peer 2: sealed, then payload tampered.
+        let mut forged =
+            p2.make_envelope(1, slots::GRAD_COMMIT, MsgClass::Commitment, vec![2], false);
+        forged.payload = vec![99].into();
+        p2.push_to(0, forged);
+        // An honest envelope from the same sender, behind the forgery.
+        p2.send(0, 1, slots::GRAD_COMMIT, MsgClass::Commitment, vec![3]);
+        let got = p0.drain_match(|e| e.slot == slots::GRAD_COMMIT);
+        let seen: Vec<(usize, u8)> = got.iter().map(|e| (e.from, e.payload[0])).collect();
+        assert_eq!(seen, vec![(1, 1), (2, 3)], "only the forged envelope is dropped");
     }
 
     #[test]

@@ -26,6 +26,7 @@
 //! contradicting messages for the same protocol slot is banned by every
 //! honest receiver, matching footnote 4 of the paper.
 
+pub mod auth;
 pub mod gossip;
 pub mod local;
 pub mod sim;
@@ -36,6 +37,7 @@ use crate::crypto::{sign, verify, Mont, PublicKey, SecretKey, Signature};
 use std::sync::Arc;
 use std::time::Duration;
 
+pub use auth::{requires_signature, MessageAuth, NoAuth, SchnorrAuth, SessionAuth};
 pub use local::{build_cluster, ClusterInfo, PeerNet, RecvError, RecvMode};
 pub use sim::{build_transports, FaultStats, NetworkProfile, PeerFaults, SimNet};
 pub use socket::{

@@ -62,9 +62,12 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
+use super::auth::{MessageAuth, NoAuth, SchnorrAuth, SessionAuth};
 use super::local::{distinct_variants, ClusterInfo, Inbox};
 use super::{Envelope, MsgClass, PeerId, RecvError, RecvMode, TrafficStats, Transport};
-use crate::crypto::{keygen, sign, verify, Mont, PublicKey, SecretKey, Signature};
+use crate::crypto::{
+    hmac_sha256, keygen, shared_secret, sign, verify, Mont, PublicKey, SecretKey, Signature,
+};
 use crate::util::json::Json;
 use crate::util::{hex, unhex};
 
@@ -76,11 +79,16 @@ pub const DEFAULT_MAX_FRAME: usize = 64 << 20;
 
 const KIND_HELLO: u8 = 1;
 const KIND_ENVELOPE: u8 = 2;
+/// A session-MAC envelope frame: `kind ‖ seq ‖ mac ‖ envelope fields`.
+/// Only valid on a link whose handshake negotiated session-MAC mode.
+const KIND_MAC_ENVELOPE: u8 = 3;
 /// kind + from + step + slot + class + broadcast + sig flag.
 const ENVELOPE_FIXED: usize = 1 + 8 + 8 + 4 + 1 + 1 + 1;
-/// kind + id + epoch + nonce + pubkey + sig flag (+ 64-byte signature
-/// when flagged).
-const HELLO_FIXED: usize = 1 + 8 + 8 + 32 + 32 + 1;
+/// kind + seq + 32-byte HMAC, ahead of the ordinary envelope fields.
+const MAC_FIXED: usize = 1 + 8 + 32;
+/// kind + id + epoch + nonce + pubkey + mac flag + sig flag (+ 64-byte
+/// signature when flagged).
+const HELLO_FIXED: usize = 1 + 8 + 8 + 32 + 32 + 1 + 1;
 
 /// Why a frame (and with it, the connection) was rejected.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -100,6 +108,19 @@ pub enum FrameError {
     BadFlag(u8),
     /// Sender id does not fit this platform's `usize`.
     BadPeer(u64),
+    /// A session-MAC frame on a link that never negotiated MAC mode —
+    /// there is no key to check it with.
+    MacUnexpected,
+    /// A plain envelope frame on a session-MAC link: every post-HELLO
+    /// frame must be stream-authenticated, so an unMAC'd frame can only
+    /// be injected bytes.
+    MacMissing,
+    /// The frame's HMAC does not verify under the link key.
+    BadMac,
+    /// The frame's sequence number is not the expected next one —
+    /// a replayed, dropped or reordered frame on what TCP promises is an
+    /// ordered stream.
+    BadSeq { got: u64, want: u64 },
 }
 
 impl std::fmt::Display for FrameError {
@@ -116,6 +137,16 @@ impl std::fmt::Display for FrameError {
             FrameError::BadClass(c) => write!(f, "byte {c} names no message class"),
             FrameError::BadFlag(b) => write!(f, "flag byte {b} outside {{0, 1}}"),
             FrameError::BadPeer(p) => write!(f, "peer id {p} does not fit usize"),
+            FrameError::MacUnexpected => {
+                write!(f, "session-MAC frame on a link that did not negotiate MAC mode")
+            }
+            FrameError::MacMissing => {
+                write!(f, "plain envelope frame on a session-MAC link")
+            }
+            FrameError::BadMac => write!(f, "frame MAC does not verify under the link key"),
+            FrameError::BadSeq { got, want } => {
+                write!(f, "frame sequence {got} where {want} was expected")
+            }
         }
     }
 }
@@ -148,16 +179,23 @@ pub struct Hello {
     /// epoch ‖ receiver)` — see [`Roster::hello_nonce`].
     pub nonce: [u8; 32],
     pub pubkey: PublicKey,
+    /// Whether the sender will stream-authenticate this link with the
+    /// negotiated session MAC instead of signing every envelope. The
+    /// flag is covered by the HELLO signature, so a man-in-the-middle
+    /// cannot strip it to downgrade the link to unauthenticated frames.
+    pub mac: bool,
     pub signature: Option<Signature>,
 }
 
-/// The byte string a HELLO's signature covers.
-fn hello_signing_bytes(id: PeerId, epoch: u64, nonce: &[u8; 32]) -> Vec<u8> {
-    let mut msg = Vec::with_capacity(11 + 8 + 8 + 32);
+/// The byte string a HELLO's signature covers. Includes the session-MAC
+/// negotiation flag: the mode must not be downgradable in flight.
+fn hello_signing_bytes(id: PeerId, epoch: u64, nonce: &[u8; 32], mac: bool) -> Vec<u8> {
+    let mut msg = Vec::with_capacity(11 + 8 + 8 + 32 + 1);
     msg.extend_from_slice(b"btard-hello");
     msg.extend_from_slice(&(id as u64).to_le_bytes());
     msg.extend_from_slice(&epoch.to_le_bytes());
     msg.extend_from_slice(nonce);
+    msg.push(mac as u8);
     msg
 }
 
@@ -171,6 +209,7 @@ pub fn encode_hello(
     roster_digest: &[u8; 32],
     secret: &SecretKey,
     mont: &Mont,
+    mac: bool,
     sign_hello: bool,
 ) -> Vec<u8> {
     let nonce = Roster::hello_nonce_from(roster_digest, id, epoch, to);
@@ -184,10 +223,11 @@ pub fn encode_hello(
     out.extend_from_slice(&epoch.to_le_bytes());
     out.extend_from_slice(&nonce);
     out.extend_from_slice(&secret.public.0);
+    out.push(mac as u8);
     if sign_hello {
         out.push(1);
         out.extend_from_slice(
-            &sign(mont, secret, &hello_signing_bytes(id, epoch, &nonce)).to_bytes(),
+            &sign(mont, secret, &hello_signing_bytes(id, epoch, &nonce, mac)).to_bytes(),
         );
     } else {
         out.push(0);
@@ -195,16 +235,14 @@ pub fn encode_hello(
     out
 }
 
-/// Encode an envelope frame (header + body). `deliver_at` is routing
-/// metadata stamped by the *receiving* transport, never serialized.
-pub fn encode_envelope(env: &Envelope) -> Vec<u8> {
+/// The wire fields of an envelope — everything after the frame's kind
+/// byte: `from ‖ step ‖ slot ‖ class ‖ broadcast ‖ sig flag [‖ sig] ‖
+/// payload`. Shared by plain and session-MAC envelope frames, so a
+/// broadcast encodes its O(d) payload once and only the tiny per-link
+/// prefix differs.
+fn envelope_fields(env: &Envelope) -> Vec<u8> {
     let sig_len = if env.signature.is_some() { 64 } else { 0 };
-    let body_len = ENVELOPE_FIXED + sig_len + env.payload.len();
-    assert!(body_len <= u32::MAX as usize, "envelope payload too large for the frame codec");
-    let mut out = Vec::with_capacity(8 + body_len);
-    out.extend_from_slice(&MAGIC);
-    out.extend_from_slice(&(body_len as u32).to_le_bytes());
-    out.push(KIND_ENVELOPE);
+    let mut out = Vec::with_capacity(ENVELOPE_FIXED - 1 + sig_len + env.payload.len());
     out.extend_from_slice(&(env.from as u64).to_le_bytes());
     out.extend_from_slice(&env.step.to_le_bytes());
     out.extend_from_slice(&env.slot.to_le_bytes());
@@ -221,8 +259,111 @@ pub fn encode_envelope(env: &Envelope) -> Vec<u8> {
     out
 }
 
+/// Encode an envelope frame (header + body). `deliver_at` is routing
+/// metadata stamped by the *receiving* transport, never serialized.
+pub fn encode_envelope(env: &Envelope) -> Vec<u8> {
+    let fields = envelope_fields(env);
+    let body_len = 1 + fields.len();
+    assert!(body_len <= u32::MAX as usize, "envelope payload too large for the frame codec");
+    let mut out = Vec::with_capacity(8 + body_len);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.push(KIND_ENVELOPE);
+    out.extend_from_slice(&fields);
+    out
+}
+
+/// The stream MAC of a session-MAC frame: HMAC over the link's
+/// per-direction counter and the envelope fields, under the link key.
+/// The counter makes every frame's MAC unique, so a captured frame
+/// cannot be replayed later in the same stream.
+fn frame_mac(key: &[u8; 32], seq: u64, fields: &[u8]) -> [u8; 32] {
+    hmac_sha256(key, &[b"btard-mac-frame", &seq.to_le_bytes(), fields])
+}
+
+/// Frame header + `kind ‖ seq ‖ mac` prefix for a session-MAC envelope
+/// frame whose fields follow (written separately, so broadcasts share
+/// one fields buffer across recipients).
+fn mac_frame_prefix(fields: &[u8], seq: u64, key: &[u8; 32]) -> Vec<u8> {
+    let body_len = MAC_FIXED + fields.len();
+    assert!(body_len <= u32::MAX as usize, "envelope payload too large for the frame codec");
+    let mut out = Vec::with_capacity(8 + MAC_FIXED);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.push(KIND_MAC_ENVELOPE);
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.extend_from_slice(&frame_mac(key, seq, fields));
+    out
+}
+
+/// Encode a complete session-MAC envelope frame (tests and single-frame
+/// paths; the send path writes prefix and fields separately).
+pub(crate) fn encode_mac_envelope(env: &Envelope, seq: u64, key: &[u8; 32]) -> Vec<u8> {
+    let fields = envelope_fields(env);
+    let mut out = mac_frame_prefix(&fields, seq, key);
+    out.extend_from_slice(&fields);
+    out
+}
+
+/// Directional link key for a session-MAC link: derived from the pair's
+/// static-static DH shared secret, the (sender, receiver) direction and
+/// the roster digest, so the two directions of a link never share a key
+/// and a key from one run's roster is garbage under another's.
+fn link_mac_key(shared: &[u8; 32], from: PeerId, to: PeerId, roster_digest: &[u8; 32]) -> [u8; 32] {
+    hmac_sha256(
+        shared,
+        &[
+            b"btard-mac-key",
+            &(from as u64).to_le_bytes(),
+            &(to as u64).to_le_bytes(),
+            roster_digest,
+        ],
+    )
+}
+
 fn le_u64(b: &[u8]) -> u64 {
     u64::from_le_bytes(b[..8].try_into().unwrap())
+}
+
+/// Decode the envelope fields of a frame body — the bytes after the
+/// kind byte of a `KIND_ENVELOPE` frame, or after the `kind ‖ seq ‖ mac`
+/// prefix of a `KIND_MAC_ENVELOPE` frame.
+fn decode_envelope_fields(b: &[u8]) -> Result<Envelope, FrameError> {
+    const FIELDS_FIXED: usize = ENVELOPE_FIXED - 1;
+    if b.len() < FIELDS_FIXED {
+        return Err(FrameError::Truncated { need: FIELDS_FIXED, have: b.len() });
+    }
+    let from = le_u64(&b[0..8]);
+    let from: PeerId = usize::try_from(from).map_err(|_| FrameError::BadPeer(from))?;
+    let step = le_u64(&b[8..16]);
+    let slot = u32::from_le_bytes(b[16..20].try_into().unwrap());
+    let class = MsgClass::from_u8(b[20]).ok_or(FrameError::BadClass(b[20]))?;
+    let broadcast = match b[21] {
+        0 => false,
+        1 => true,
+        f => return Err(FrameError::BadFlag(f)),
+    };
+    let (signature, payload_at) = match b[22] {
+        0 => (None, FIELDS_FIXED),
+        1 => {
+            let end = FIELDS_FIXED + 64;
+            if b.len() < end {
+                return Err(FrameError::Truncated { need: end, have: b.len() });
+            }
+            (Signature::from_bytes(&b[FIELDS_FIXED..end]), end)
+        }
+        f => return Err(FrameError::BadFlag(f)),
+    };
+    Ok(Envelope {
+        from,
+        step,
+        slot,
+        class,
+        payload: b[payload_at..].to_vec().into(),
+        broadcast,
+        deliver_at: 0,
+        signature,
+    })
 }
 
 fn decode_body(body: &[u8]) -> Result<Frame, FrameError> {
@@ -239,57 +380,30 @@ fn decode_body(body: &[u8]) -> Result<Frame, FrameError> {
             nonce.copy_from_slice(&body[17..49]);
             let mut pk = [0u8; 32];
             pk.copy_from_slice(&body[49..81]);
-            let signature = match body[81] {
+            let mac = match body[81] {
+                0 => false,
+                1 => true,
+                b => return Err(FrameError::BadFlag(b)),
+            };
+            let signature = match body[82] {
                 0 if body.len() == HELLO_FIXED => None,
                 1 if body.len() == HELLO_FIXED + 64 => {
                     Signature::from_bytes(&body[HELLO_FIXED..HELLO_FIXED + 64])
                 }
                 0 | 1 => {
                     return Err(FrameError::Truncated {
-                        need: HELLO_FIXED + 64 * body[81] as usize,
+                        need: HELLO_FIXED + 64 * body[82] as usize,
                         have: body.len(),
                     })
                 }
                 b => return Err(FrameError::BadFlag(b)),
             };
-            Ok(Frame::Hello(Hello { id, epoch, nonce, pubkey: PublicKey(pk), signature }))
+            Ok(Frame::Hello(Hello { id, epoch, nonce, pubkey: PublicKey(pk), mac, signature }))
         }
-        KIND_ENVELOPE => {
-            if body.len() < ENVELOPE_FIXED {
-                return Err(FrameError::Truncated { need: ENVELOPE_FIXED, have: body.len() });
-            }
-            let from = le_u64(&body[1..9]);
-            let from: PeerId = usize::try_from(from).map_err(|_| FrameError::BadPeer(from))?;
-            let step = le_u64(&body[9..17]);
-            let slot = u32::from_le_bytes(body[17..21].try_into().unwrap());
-            let class = MsgClass::from_u8(body[21]).ok_or(FrameError::BadClass(body[21]))?;
-            let broadcast = match body[22] {
-                0 => false,
-                1 => true,
-                b => return Err(FrameError::BadFlag(b)),
-            };
-            let (signature, payload_at) = match body[23] {
-                0 => (None, ENVELOPE_FIXED),
-                1 => {
-                    let end = ENVELOPE_FIXED + 64;
-                    if body.len() < end {
-                        return Err(FrameError::Truncated { need: end, have: body.len() });
-                    }
-                    (Signature::from_bytes(&body[ENVELOPE_FIXED..end]), end)
-                }
-                b => return Err(FrameError::BadFlag(b)),
-            };
-            Ok(Frame::Envelope(Envelope {
-                from,
-                step,
-                slot,
-                class,
-                payload: body[payload_at..].to_vec().into(),
-                broadcast,
-                deliver_at: 0,
-                signature,
-            }))
-        }
+        KIND_ENVELOPE => Ok(Frame::Envelope(decode_envelope_fields(&body[1..])?)),
+        // Session-MAC frames need the link key and counter — they are
+        // handled by `FrameReader::next_frame` before this fallback.
+        KIND_MAC_ENVELOPE => Err(FrameError::MacUnexpected),
         k => Err(FrameError::BadKind(k)),
     }
 }
@@ -302,11 +416,38 @@ fn decode_body(body: &[u8]) -> Result<Frame, FrameError> {
 pub struct FrameReader {
     buf: Vec<u8>,
     max_frame: usize,
+    /// Session-MAC receive state, installed after a handshake that
+    /// negotiated MAC mode. Once set, every envelope frame must be a
+    /// MAC frame with the expected next sequence number — a plain frame
+    /// can only be injected bytes and kills the link.
+    mac: Option<MacRecv>,
+}
+
+/// Per-link session-MAC receive state: the directional link key and the
+/// strictly-incrementing expected frame counter (TCP delivers in order,
+/// so any gap or repeat is tampering, not reordering).
+struct MacRecv {
+    key: [u8; 32],
+    next_seq: u64,
+}
+
+/// Per-link session-MAC send state (the mirror of [`MacRecv`]).
+struct MacSend {
+    key: [u8; 32],
+    next_seq: u64,
 }
 
 impl FrameReader {
     pub fn new(max_frame: usize) -> FrameReader {
-        FrameReader { buf: Vec::new(), max_frame }
+        FrameReader { buf: Vec::new(), max_frame, mac: None }
+    }
+
+    /// Install the link's session-MAC key (called once, right after a
+    /// handshake that negotiated MAC mode). Frames already buffered —
+    /// the sender may pipeline envelopes behind its HELLO — are decoded
+    /// under the MAC from the stream's first envelope frame onward.
+    pub(crate) fn enable_mac(&mut self, key: [u8; 32]) {
+        self.mac = Some(MacRecv { key, next_seq: 0 });
     }
 
     pub fn feed(&mut self, bytes: &[u8]) {
@@ -328,7 +469,27 @@ impl FrameReader {
         if self.buf.len() < 8 + len {
             return Ok(None);
         }
-        let frame = decode_body(&self.buf[8..8 + len])?;
+        let body = &self.buf[8..8 + len];
+        let frame = match body.first() {
+            Some(&KIND_MAC_ENVELOPE) => {
+                let mac = self.mac.as_mut().ok_or(FrameError::MacUnexpected)?;
+                if body.len() < MAC_FIXED {
+                    return Err(FrameError::Truncated { need: MAC_FIXED, have: body.len() });
+                }
+                let seq = le_u64(&body[1..9]);
+                if seq != mac.next_seq {
+                    return Err(FrameError::BadSeq { got: seq, want: mac.next_seq });
+                }
+                let fields = &body[MAC_FIXED..];
+                if body[9..41] != frame_mac(&mac.key, seq, fields) {
+                    return Err(FrameError::BadMac);
+                }
+                mac.next_seq += 1;
+                Frame::Envelope(decode_envelope_fields(fields)?)
+            }
+            Some(&KIND_ENVELOPE) if self.mac.is_some() => return Err(FrameError::MacMissing),
+            _ => decode_body(body)?,
+        };
         self.buf.drain(..8 + len);
         Ok(Some(frame))
     }
@@ -507,6 +668,14 @@ pub fn bind_ephemeral() -> std::io::Result<(TcpListener, String)> {
 pub struct SocketConfig {
     pub gossip_fanout: u64,
     pub verify_signatures: bool,
+    /// Negotiate per-link session MACs after the signed HELLO: bulk
+    /// payload frames (`GRAD_PART` / `AGG_PART`) ride an HMAC-SHA256
+    /// stream MAC keyed from a static-static DH shared secret, while
+    /// every slot that can appear in an adjudication transcript keeps
+    /// its transferable Schnorr signature (see [`super::auth`]).
+    /// Requires `verify_signatures` — the signed HELLO is what makes
+    /// the MAC negotiation downgrade-proof.
+    pub session_mac: bool,
     /// Budget for the whole mesh build: dial retries, accepts and both
     /// HELLO exchanges must finish within it.
     pub connect_timeout: Duration,
@@ -525,6 +694,7 @@ impl Default for SocketConfig {
         SocketConfig {
             gossip_fanout: 8,
             verify_signatures: true,
+            session_mac: false,
             connect_timeout: Duration::from_secs(30),
             max_frame: DEFAULT_MAX_FRAME,
             join_steps: vec![],
@@ -642,6 +812,7 @@ fn accept_handshake(
     join_steps: &[u64],
     mont: &Mont,
     verify_signatures: bool,
+    session_mac: bool,
 ) -> Result<Hello, String> {
     let frame = read_frame_deadline(stream, fr, deadline).map_err(|e| e.to_string())?;
     let h = match frame {
@@ -673,10 +844,21 @@ fn accept_handshake(
         let Some(sig) = &h.signature else {
             return Err(format!("unsigned HELLO claiming peer {}", h.id));
         };
-        let msg = hello_signing_bytes(h.id, h.epoch, &h.nonce);
+        let msg = hello_signing_bytes(h.id, h.epoch, &h.nonce, h.mac);
         if !verify(mont, &roster.peers[h.id].pubkey, &msg, sig) {
             return Err(format!("HELLO signature for peer {} does not verify", h.id));
         }
+    }
+    // Both ends must agree on the link's authentication mode. The mac
+    // flag is covered by the HELLO signature (verified above), so a
+    // man-in-the-middle cannot strip the flag to downgrade a MAC link
+    // to unauthenticated plain frames.
+    if h.mac != session_mac {
+        return Err(format!(
+            "HELLO from peer {} negotiates session_mac={} but this endpoint runs \
+             session_mac={session_mac}",
+            h.id, h.mac
+        ));
     }
     Ok(h)
 }
@@ -768,6 +950,13 @@ struct HandshakeCtx {
     roster_digest: [u8; 32],
     join_steps: Vec<u64>,
     verify_signatures: bool,
+    /// Negotiated link-auth mode: every inbound HELLO must claim the
+    /// same mode, and accepted links get their directional MAC key
+    /// installed before the reader starts.
+    session_mac: bool,
+    /// Our long-term secret — session-MAC links derive their key from
+    /// the static-static DH shared secret with the link peer.
+    secret: SecretKey,
     max_frame: usize,
     table: Arc<InboundTable>,
     mailbox: Sender<Envelope>,
@@ -796,8 +985,21 @@ fn spawn_handshake(ctx: Arc<HandshakeCtx>, stream: TcpStream, hard_deadline: Ins
                 &ctx.join_steps,
                 &mont,
                 ctx.verify_signatures,
+                ctx.session_mac,
             )
-            .map(|h| (h, fr))
+            .map(|h| {
+                if ctx.session_mac {
+                    // The link is now authenticated by the signed HELLO;
+                    // derive the sender→us directional key and require a
+                    // valid stream MAC on every envelope frame from here
+                    // on (including any the sender pipelined behind its
+                    // HELLO — they are still buffered inside `fr`).
+                    let shared =
+                        shared_secret(&mont, &ctx.secret, &ctx.roster.peers[h.id].pubkey);
+                    fr.enable_mac(link_mac_key(&shared, h.id, ctx.me, &ctx.roster_digest));
+                }
+                (h, fr)
+            })
         });
         match result {
             Ok((h, fr)) => {
@@ -903,8 +1105,15 @@ fn dial_once(addr: &str, timeout: Duration) -> std::io::Result<TcpStream> {
 pub struct SocketNet {
     id: PeerId,
     info: Arc<ClusterInfo>,
-    secret: SecretKey,
-    mont: Mont,
+    /// Message-authentication policy for everything sent and received:
+    /// [`NoAuth`] when signatures are off, [`SessionAuth`] on a
+    /// session-MAC mesh (adjudication slots signed, bulk parts ride the
+    /// stream MAC), [`SchnorrAuth`] otherwise (every envelope signed).
+    auth: Arc<dyn MessageAuth>,
+    /// Per-recipient session-MAC send state: the us→peer directional
+    /// key and next frame counter. `None` at our own slot and, when MAC
+    /// mode is off, everywhere.
+    mac_send: Vec<Option<MacSend>>,
     /// Outbound (send-only) links, indexed by peer id (`None` at our own
     /// slot, and at not-yet-dialed late links). Nothing is ever read
     /// from these.
@@ -975,6 +1184,13 @@ impl SocketNet {
             )));
         };
         let dynamic = join_steps.iter().any(|&s| s > 0);
+        if cfg.session_mac && !cfg.verify_signatures {
+            return Err(io_err(
+                "session-MAC mode requires signature verification: the signed HELLO is \
+                 what makes the MAC negotiation downgrade-proof"
+                    .to_string(),
+            ));
+        }
         let mont = Mont::new();
         let info = Arc::new(ClusterInfo {
             n_peers: n,
@@ -994,7 +1210,16 @@ impl SocketNet {
                 if j == id {
                     Vec::new()
                 } else {
-                    encode_hello(id, join_steps[id], j, &roster_digest, &secret, &mont, sign_hello)
+                    encode_hello(
+                        id,
+                        join_steps[id],
+                        j,
+                        &roster_digest,
+                        &secret,
+                        &mont,
+                        cfg.session_mac,
+                        sign_hello,
+                    )
                 }
             })
             .collect();
@@ -1044,6 +1269,8 @@ impl SocketNet {
             roster_digest,
             join_steps: join_steps.clone(),
             verify_signatures: cfg.verify_signatures,
+            session_mac: cfg.session_mac,
+            secret: secret.clone(),
             max_frame: cfg.max_frame,
             table: table.clone(),
             mailbox: tx.clone(),
@@ -1113,11 +1340,38 @@ impl SocketNet {
             None
         };
 
+        let auth: Arc<dyn MessageAuth> = if !cfg.verify_signatures {
+            Arc::new(NoAuth)
+        } else if cfg.session_mac {
+            Arc::new(SessionAuth::new(
+                mont.clone(),
+                Some(secret.clone()),
+                info.public_keys.clone(),
+            ))
+        } else {
+            Arc::new(SchnorrAuth::new(
+                mont.clone(),
+                Some(secret.clone()),
+                info.public_keys.clone(),
+            ))
+        };
+        let mac_send: Vec<Option<MacSend>> = (0..n)
+            .map(|j| {
+                if !cfg.session_mac || j == id {
+                    return None;
+                }
+                let shared = shared_secret(&mont, &secret, &roster.peers[j].pubkey);
+                Some(MacSend {
+                    key: link_mac_key(&shared, id, j, &roster_digest),
+                    next_seq: 0,
+                })
+            })
+            .collect();
         Ok(SocketNet {
             id,
             info,
-            secret,
-            mont,
+            auth,
+            mac_send,
             links,
             dial_failed: vec![false; n],
             addrs: roster.peers.iter().map(|p| p.addr.clone()).collect(),
@@ -1150,10 +1404,35 @@ impl SocketNet {
             deliver_at: 0,
             signature: None,
         };
-        if self.info.verify_signatures {
-            env.sign_with(&self.mont, &self.secret);
-        }
+        self.auth.seal(&mut env);
         env
+    }
+
+    /// Per-link frame prefix for pre-encoded envelope fields: on a
+    /// session-MAC link the `header ‖ kind ‖ seq ‖ mac` prefix (counter
+    /// advanced), otherwise the plain `header ‖ kind` prefix. The
+    /// counter advances even when the subsequent write fails — a broken
+    /// link never delivers later frames, so a gap there is unobservable.
+    fn frame_prefix(&mut self, to: PeerId, fields: &[u8]) -> Vec<u8> {
+        match &mut self.mac_send[to] {
+            Some(mac) => {
+                let prefix = mac_frame_prefix(fields, mac.next_seq, &mac.key);
+                mac.next_seq += 1;
+                prefix
+            }
+            None => {
+                let body_len = 1 + fields.len();
+                assert!(
+                    body_len <= u32::MAX as usize,
+                    "envelope payload too large for the frame codec"
+                );
+                let mut out = Vec::with_capacity(9);
+                out.extend_from_slice(&MAGIC);
+                out.extend_from_slice(&(body_len as u32).to_le_bytes());
+                out.push(KIND_ENVELOPE);
+                out
+            }
+        }
     }
 
     /// Write a pre-encoded frame to a link, ignoring write errors: the
@@ -1163,7 +1442,7 @@ impl SocketNet {
     /// boundary has arrived — is dialed lazily, HELLO first; one failed
     /// dial marks the link dead for good (the protocol's timeout and
     /// ELIMINATE machinery handles a peer that never comes up).
-    fn write_link(&mut self, to: PeerId, frame: &[u8]) {
+    fn write_link(&mut self, to: PeerId, parts: &[&[u8]]) {
         if self.links[to].is_none() && !self.dial_failed[to] {
             match dial_once(&self.addrs[to], LATE_DIAL_BUDGET) {
                 Ok(mut stream) => {
@@ -1184,7 +1463,11 @@ impl SocketNet {
             }
         }
         if let Some(stream) = &mut self.links[to] {
-            let _ = stream.write_all(frame);
+            for part in parts {
+                if stream.write_all(part).is_err() {
+                    break;
+                }
+            }
         }
     }
 }
@@ -1261,7 +1544,9 @@ impl Transport for SocketNet {
             // in-process fabrics deliver-and-discard instead, which is
             // observably identical (the joiner drops pre-join traffic
             // at snapshot install).
-            self.write_link(to, &encode_envelope(&env));
+            let fields = envelope_fields(&env);
+            let prefix = self.frame_prefix(to, &fields);
+            self.write_link(to, &[&prefix, &fields]);
         }
     }
 
@@ -1269,11 +1554,14 @@ impl Transport for SocketNet {
         let bytes = payload.len();
         let env = self.make_envelope(step, slot, class, payload, true);
         self.info.stats.record_broadcast(self.id, class, bytes);
-        let frame = encode_envelope(&env);
+        // The O(d) fields buffer is encoded once; per recipient only the
+        // small prefix (plain, or `seq ‖ mac` on a MAC link) differs.
+        let fields = envelope_fields(&env);
         let _ = self.loopback.send(env);
         for to in 0..self.info.n_peers {
             if to != self.id && step >= self.join_steps[to] {
-                self.write_link(to, &frame);
+                let prefix = self.frame_prefix(to, &fields);
+                self.write_link(to, &[&prefix, &fields]);
             }
         }
     }
@@ -1299,8 +1587,7 @@ impl Transport for SocketNet {
         pred: &dyn Fn(&Envelope) -> bool,
     ) -> Result<Envelope, RecvError> {
         self.inbox.recv_keyed(
-            &self.info,
-            &self.mont,
+            self.auth.as_ref(),
             self.recv_mode,
             self.timeout,
             step,
@@ -1310,7 +1597,7 @@ impl Transport for SocketNet {
     }
 
     fn drain_match(&mut self, pred: &dyn Fn(&Envelope) -> bool) -> Vec<Envelope> {
-        self.inbox.drain_match(&self.info, &self.mont, self.recv_mode, pred)
+        self.inbox.drain_match(self.auth.as_ref(), self.recv_mode, pred)
     }
 }
 
@@ -1363,6 +1650,64 @@ mod tests {
         }
     }
 
+    #[test]
+    fn mac_frames_roundtrip_and_reject_tamper_replay_and_plain() {
+        let key = [7u8; 32];
+        let a = sample_envelope(false);
+        let b = sample_envelope(true);
+        // In-order MAC frames decode; the counter advances per frame.
+        let mut fr = FrameReader::new(DEFAULT_MAX_FRAME);
+        fr.enable_mac(key);
+        fr.feed(&encode_mac_envelope(&a, 0, &key));
+        fr.feed(&encode_mac_envelope(&b, 1, &key));
+        for want in [&a, &b] {
+            match fr.next_frame().unwrap() {
+                Some(Frame::Envelope(got)) => assert_envelope_eq(want, &got),
+                other => panic!("expected envelope, got {other:?}"),
+            }
+        }
+        // A replayed frame (stale counter) is rejected…
+        let mut fr = FrameReader::new(DEFAULT_MAX_FRAME);
+        fr.enable_mac(key);
+        fr.feed(&encode_mac_envelope(&a, 0, &key));
+        assert!(matches!(fr.next_frame(), Ok(Some(_))));
+        fr.feed(&encode_mac_envelope(&a, 0, &key));
+        assert_eq!(fr.next_frame().unwrap_err(), FrameError::BadSeq { got: 0, want: 1 });
+        // …and so is a payload flip (the MAC no longer verifies).
+        let mut fr = FrameReader::new(DEFAULT_MAX_FRAME);
+        fr.enable_mac(key);
+        let mut frame = encode_mac_envelope(&a, 0, &key);
+        let last = frame.len() - 1;
+        frame[last] ^= 1;
+        fr.feed(&frame);
+        assert_eq!(fr.next_frame().unwrap_err(), FrameError::BadMac);
+        // A MAC frame under the wrong link key fails the same way.
+        let mut fr = FrameReader::new(DEFAULT_MAX_FRAME);
+        fr.enable_mac([8u8; 32]);
+        fr.feed(&encode_mac_envelope(&a, 0, &key));
+        assert_eq!(fr.next_frame().unwrap_err(), FrameError::BadMac);
+        // A plain envelope frame on a MAC link can only be injected
+        // bytes — the sender's endpoint always MACs.
+        let mut fr = FrameReader::new(DEFAULT_MAX_FRAME);
+        fr.enable_mac(key);
+        fr.feed(&encode_envelope(&a));
+        assert_eq!(fr.next_frame().unwrap_err(), FrameError::MacMissing);
+        // And a MAC frame on a plain link has no key to check against.
+        let mut fr = FrameReader::new(DEFAULT_MAX_FRAME);
+        fr.feed(&encode_mac_envelope(&a, 0, &key));
+        assert_eq!(fr.next_frame().unwrap_err(), FrameError::MacUnexpected);
+    }
+
+    #[test]
+    fn link_mac_keys_are_directional_and_roster_bound() {
+        let shared = [3u8; 32];
+        let digest = [5u8; 32];
+        let k01 = link_mac_key(&shared, 0, 1, &digest);
+        assert_ne!(k01, link_mac_key(&shared, 1, 0, &digest), "directions share no key");
+        assert_ne!(k01, link_mac_key(&shared, 0, 1, &[6u8; 32]), "rosters share no key");
+        assert_eq!(k01, link_mac_key(&shared, 0, 1, &digest));
+    }
+
     /// A small roster whose keys come from `derive_keypair(seed, k)`.
     fn test_roster(seed: u64, n: usize) -> Roster {
         let mont = Mont::new();
@@ -1383,28 +1728,34 @@ mod tests {
         let roster = test_roster(7, 14);
         let sk = derive_keypair(&mont, 7, 12);
         for signed in [false, true] {
-            let mut fr = FrameReader::new(DEFAULT_MAX_FRAME);
-            fr.feed(&encode_hello(12, 3, 5, &roster.digest(), &sk, &mont, signed));
-            match fr.next_frame().unwrap() {
-                Some(Frame::Hello(h)) => {
-                    assert_eq!(h.id, 12);
-                    assert_eq!(h.epoch, 3);
-                    assert_eq!(h.nonce, roster.hello_nonce(12, 3, 5));
-                    assert_eq!(h.pubkey, sk.public);
-                    assert_eq!(h.signature.is_some(), signed);
-                    if let Some(sig) = &h.signature {
-                        // The signature binds the claimed (id, epoch,
-                        // nonce) to the roster key — the anti-spoof and
-                        // anti-replay check of accept_handshake.
-                        let msg = hello_signing_bytes(12, 3, &h.nonce);
-                        assert!(verify(&mont, &sk.public, &msg, sig));
-                        let other_id = hello_signing_bytes(13, 3, &h.nonce);
-                        assert!(!verify(&mont, &sk.public, &other_id, sig));
-                        let other_epoch = hello_signing_bytes(12, 4, &h.nonce);
-                        assert!(!verify(&mont, &sk.public, &other_epoch, sig));
+            for mac in [false, true] {
+                let mut fr = FrameReader::new(DEFAULT_MAX_FRAME);
+                fr.feed(&encode_hello(12, 3, 5, &roster.digest(), &sk, &mont, mac, signed));
+                match fr.next_frame().unwrap() {
+                    Some(Frame::Hello(h)) => {
+                        assert_eq!(h.id, 12);
+                        assert_eq!(h.epoch, 3);
+                        assert_eq!(h.nonce, roster.hello_nonce(12, 3, 5));
+                        assert_eq!(h.pubkey, sk.public);
+                        assert_eq!(h.mac, mac);
+                        assert_eq!(h.signature.is_some(), signed);
+                        if let Some(sig) = &h.signature {
+                            // The signature binds the claimed (id, epoch,
+                            // nonce, mac flag) to the roster key — the
+                            // anti-spoof, anti-replay and anti-downgrade
+                            // check of accept_handshake.
+                            let msg = hello_signing_bytes(12, 3, &h.nonce, mac);
+                            assert!(verify(&mont, &sk.public, &msg, sig));
+                            let other_id = hello_signing_bytes(13, 3, &h.nonce, mac);
+                            assert!(!verify(&mont, &sk.public, &other_id, sig));
+                            let other_epoch = hello_signing_bytes(12, 4, &h.nonce, mac);
+                            assert!(!verify(&mont, &sk.public, &other_epoch, sig));
+                            let other_mac = hello_signing_bytes(12, 3, &h.nonce, !mac);
+                            assert!(!verify(&mont, &sk.public, &other_mac, sig));
+                        }
                     }
+                    other => panic!("expected hello, got {other:?}"),
                 }
-                other => panic!("expected hello, got {other:?}"),
             }
         }
     }
@@ -1525,8 +1876,14 @@ mod tests {
         // HELLO after the handshake is a protocol violation.
         let mont = Mont::new();
         let sk = keygen(&mont, 1);
-        let hello =
-            Hello { id: 3, epoch: 0, nonce: [0u8; 32], pubkey: sk.public, signature: None };
+        let hello = Hello {
+            id: 3,
+            epoch: 0,
+            nonce: [0u8; 32],
+            pubkey: sk.public,
+            mac: false,
+            signature: None,
+        };
         assert!(admit_frame(Frame::Hello(hello), 3).is_none());
     }
 
@@ -1556,34 +1913,47 @@ mod tests {
                 &join_steps,
                 &Mont::new(),
                 true,
+                false,
             );
             drop(writer.join().unwrap());
             res
         };
         // Correct epoch-0 HELLO from peer 1 to peer 0: accepted.
-        let ok = run(encode_hello(1, 0, 0, &roster.digest(), &sk1, &mont, true)).unwrap();
+        let ok =
+            run(encode_hello(1, 0, 0, &roster.digest(), &sk1, &mont, false, true)).unwrap();
         assert_eq!(ok.id, 1);
         // Stale epoch: peer 2 is scheduled at epoch 4, claims 0.
         let sk2 = derive_keypair(&mont, 21, 2);
-        let err = run(encode_hello(2, 0, 0, &roster.digest(), &sk2, &mont, true)).unwrap_err();
+        let err =
+            run(encode_hello(2, 0, 0, &roster.digest(), &sk2, &mont, false, true)).unwrap_err();
         assert!(err.contains("stale HELLO"), "{err}");
         // Correct epoch for peer 2: accepted.
-        let ok = run(encode_hello(2, 4, 0, &roster.digest(), &sk2, &mont, true)).unwrap();
+        let ok =
+            run(encode_hello(2, 4, 0, &roster.digest(), &sk2, &mont, false, true)).unwrap();
         assert_eq!(ok.epoch, 4);
         // A HELLO minted against a different roster document (same ids
         // and keys, different addr rows): the nonce no longer matches.
         let mut foreign = roster.clone();
         foreign.peers[0].addr = "10.1.2.3:9".to_string();
-        let err = run(encode_hello(1, 0, 0, &foreign.digest(), &sk1, &mont, true)).unwrap_err();
+        let err =
+            run(encode_hello(1, 0, 0, &foreign.digest(), &sk1, &mont, false, true)).unwrap_err();
         assert!(err.contains("nonce"), "{err}");
         // A genuine same-run HELLO captured from the 1→2 link and
         // replayed at peer 0: the link-bound nonce no longer matches,
         // so the replay cannot burn peer 1's inbound slot here.
-        let err = run(encode_hello(1, 0, 2, &roster.digest(), &sk1, &mont, true)).unwrap_err();
+        let err =
+            run(encode_hello(1, 0, 2, &roster.digest(), &sk1, &mont, false, true)).unwrap_err();
         assert!(err.contains("nonce"), "{err}");
         // Unsigned HELLO while signatures are on: rejected.
-        let err = run(encode_hello(1, 0, 0, &roster.digest(), &sk1, &mont, false)).unwrap_err();
+        let err =
+            run(encode_hello(1, 0, 0, &roster.digest(), &sk1, &mont, false, false)).unwrap_err();
         assert!(err.contains("unsigned"), "{err}");
+        // Session-MAC mismatch: a signed HELLO honestly claiming MAC
+        // mode is rejected by a plain-signature endpoint (and a forged
+        // flag flip would already have failed the signature check).
+        let err =
+            run(encode_hello(1, 0, 0, &roster.digest(), &sk1, &mont, true, true)).unwrap_err();
+        assert!(err.contains("session_mac"), "{err}");
     }
 
     #[test]
@@ -1726,5 +2096,63 @@ mod tests {
         // Sender-side traffic accounting matches the perfect fabric's
         // (payload bytes, not frame bytes; broadcasts pay the fanout).
         assert_eq!(net0.info().stats.total_bytes(0), 1);
+    }
+
+    #[test]
+    fn session_mac_mesh_signs_adjudication_slots_only() {
+        let mont = Mont::new();
+        let (l0, a0) = bind_ephemeral().unwrap();
+        let (l1, a1) = bind_ephemeral().unwrap();
+        let roster = Roster {
+            peers: vec![
+                RosterEntry { id: 0, addr: a0, pubkey: derive_keypair(&mont, 11, 0).public },
+                RosterEntry { id: 1, addr: a1, pubkey: derive_keypair(&mont, 11, 1).public },
+            ],
+        };
+        let cfg = SocketConfig {
+            session_mac: true,
+            connect_timeout: Duration::from_secs(10),
+            ..Default::default()
+        };
+        let r1 = roster.clone();
+        let c1 = cfg.clone();
+        let t1 = std::thread::spawn(move || {
+            let mont = Mont::new();
+            let mut net =
+                SocketNet::connect(l1, &r1, 1, derive_keypair(&mont, 11, 1), &c1).unwrap();
+            net.set_timeout(Duration::from_secs(10));
+            net.send(0, 2, slots::GRAD_PART, MsgClass::GradientPart, vec![42]);
+            net.broadcast(2, slots::GRAD_COMMIT, MsgClass::Commitment, vec![7, 8]);
+            let env = net.recv_keyed(2, slots::VERIFY_SCALARS, &|_| true).unwrap();
+            assert_eq!(env.payload.to_vec(), vec![9]);
+        });
+        let mut net0 =
+            SocketNet::connect(l0, &roster, 0, derive_keypair(&mont, 11, 0), &cfg).unwrap();
+        net0.set_timeout(Duration::from_secs(10));
+        // Bulk parts ride the stream MAC: unsigned on the wire, still
+        // delivered only if every frame on the link authenticates.
+        let p2p = net0.recv_keyed(2, slots::GRAD_PART, &|e| e.from == 1).unwrap();
+        assert_eq!(p2p.payload.to_vec(), vec![42]);
+        assert!(p2p.signature.is_none(), "bulk parts ride the stream MAC unsigned");
+        // Adjudication-bound slots keep their transferable signature,
+        // and it verifies under the sender's roster key.
+        let bc = net0.recv_keyed(2, slots::GRAD_COMMIT, &|e| e.from == 1).unwrap();
+        assert_eq!(bc.payload.to_vec(), vec![7, 8]);
+        assert!(bc.signature.is_some(), "commitments stay Schnorr-signed in MAC mode");
+        assert!(bc.verify_with(&mont, &roster.peers[1].pubkey));
+        net0.send(1, 2, slots::VERIFY_SCALARS, MsgClass::Verification, vec![9]);
+        t1.join().unwrap();
+    }
+
+    #[test]
+    fn session_mac_requires_signature_verification() {
+        let mont = Mont::new();
+        let (l0, _a0) = bind_ephemeral().unwrap();
+        let roster = test_roster(3, 2);
+        let cfg =
+            SocketConfig { session_mac: true, verify_signatures: false, ..Default::default() };
+        let err =
+            SocketNet::connect(l0, &roster, 0, derive_keypair(&mont, 3, 0), &cfg).unwrap_err();
+        assert!(err.to_string().contains("session-MAC"), "{err}");
     }
 }

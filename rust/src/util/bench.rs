@@ -3,7 +3,16 @@
 //! `cargo bench` targets use `harness = false` and drive this module:
 //! warmup, fixed-time measurement, and robust summary statistics
 //! (median / p10 / p90 over per-iteration times).
+//!
+//! On top of the raw measurement loop sits [`BenchReport`] — the one
+//! typed builder every bench target routes its results through. A
+//! report renders the familiar human-readable table *and* serializes to
+//! the canonical machine-readable `BENCH_<name>.json` schema
+//! (`btard-bench-v1`) that CI uploads and diffs against the committed
+//! baseline ([`compare_reports`]).
 
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug)]
@@ -118,6 +127,345 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+// ---------------------------------------------------------------------------
+// Canonical bench report schema (btard-bench-v1)
+// ---------------------------------------------------------------------------
+
+/// Schema tag written into every `BENCH_*.json`.
+pub const BENCH_SCHEMA: &str = "btard-bench-v1";
+
+/// Units whose records are *lower-is-better* and therefore gated by the
+/// CI regression comparison. Anything else ("acc", "iters", "count",
+/// "ratio", …) is informational: recorded and diffed for visibility but
+/// never a regression by itself.
+const GATED_UNITS: &[&str] = &["ns", "us", "ms", "s", "bytes"];
+
+/// One measured quantity. Timing records carry real quantile spreads;
+/// single-shot measurements (a wall-clock total, a byte counter, an
+/// accuracy) use `iters = 1` with all quantiles equal to the value.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub name: String,
+    pub unit: String,
+    pub iters: u64,
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub mean: f64,
+}
+
+/// Typed builder for a bench target's output: accumulate records plus
+/// config metadata, then render the human table and/or write the
+/// canonical JSON.
+pub struct BenchReport {
+    name: String,
+    config: Vec<(String, Json)>,
+    records: Vec<BenchRecord>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport { name: name.to_string(), config: vec![], records: vec![] }
+    }
+
+    /// Attach a config-fingerprint field (bench shape: dims, peer
+    /// counts, step counts, smoke mode…). Key order does not matter —
+    /// serialization and the fingerprint both go through the sorted
+    /// object form.
+    pub fn config(&mut self, key: &str, value: Json) -> &mut Self {
+        self.config.push((key.to_string(), value));
+        self
+    }
+
+    /// Record a timing measured by [`bench`] / [`bench_with_setup`].
+    pub fn add_stats(&mut self, stats: &BenchStats) -> &mut Self {
+        self.records.push(BenchRecord {
+            name: stats.name.clone(),
+            unit: "ns".into(),
+            iters: stats.iters,
+            median: stats.median_ns,
+            p10: stats.p10_ns,
+            p90: stats.p90_ns,
+            mean: stats.mean_ns,
+        });
+        self
+    }
+
+    /// Record a single-shot value (wall-clock total, byte count,
+    /// accuracy, ban count…).
+    pub fn add_value(&mut self, name: &str, unit: &str, value: f64) -> &mut Self {
+        self.records.push(BenchRecord {
+            name: name.to_string(),
+            unit: unit.to_string(),
+            iters: 1,
+            median: value,
+            p10: value,
+            p90: value,
+            mean: value,
+        });
+        self
+    }
+
+    pub fn records(&self) -> &[BenchRecord] {
+        &self.records
+    }
+
+    fn config_obj(&self) -> Json {
+        Json::Obj(self.config.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
+    }
+
+    /// SHA-256 over the canonical (sorted-key) config serialization —
+    /// two reports are comparable iff their fingerprints match.
+    pub fn fingerprint(&self) -> String {
+        crate::util::hex(&crate::crypto::sha256(self.config_obj().to_string().as_bytes()))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let records: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(&r.name)),
+                    ("unit", Json::str(&r.unit)),
+                    ("iters", Json::num(r.iters as f64)),
+                    ("median", Json::num(r.median)),
+                    ("p10", Json::num(r.p10)),
+                    ("p90", Json::num(r.p90)),
+                    ("mean", Json::num(r.mean)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str(BENCH_SCHEMA)),
+            ("bench", Json::str(&self.name)),
+            ("git_rev", Json::str(&git_rev())),
+            ("config", self.config_obj()),
+            ("fingerprint", Json::str(&self.fingerprint())),
+            ("records", Json::Arr(records)),
+        ])
+    }
+
+    /// The human-readable table every bench previously hand-rolled.
+    pub fn table(&self) -> String {
+        let mut widths = [4usize, 4, 10, 10, 10, 5];
+        let rows: Vec<[String; 6]> = self
+            .records
+            .iter()
+            .map(|r| {
+                [
+                    r.name.clone(),
+                    r.unit.clone(),
+                    fmt_value(&r.unit, r.median),
+                    fmt_value(&r.unit, r.p10),
+                    fmt_value(&r.unit, r.p90),
+                    r.iters.to_string(),
+                ]
+            })
+            .collect();
+        for row in &rows {
+            for (w, cell) in widths.iter_mut().zip(row.iter()) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let headers = ["name", "unit", "median", "p10", "p90", "iters"];
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .zip(widths.iter())
+                .map(|(c, w)| format!("{:<width$}", c, width = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&headers.map(String::from));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in rows {
+            out.push_str(&fmt_row(&row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write `BENCH_<name>.json` under `dir` and return its path.
+    pub fn write(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        crate::util::atomic_write(&path, &self.to_json().to_string_pretty())?;
+        Ok(path)
+    }
+}
+
+/// Format a value of a known unit for the table (timings get scaled
+/// ns/µs/ms rendering, everything else a plain decimal).
+pub fn fmt_value(unit: &str, v: f64) -> String {
+    match unit {
+        "ns" => fmt_ns(v),
+        "us" => fmt_ns(v * 1e3),
+        "ms" => fmt_ns(v * 1e6),
+        "s" => fmt_ns(v * 1e9),
+        "bytes" => format!("{}", v as u64),
+        _ => format!("{:.4}", v),
+    }
+}
+
+/// Commit the report is measuring: `BTARD_GIT_REV` / `GITHUB_SHA` env
+/// when CI provides one, else the repo's `.git/HEAD` (deref'd through
+/// refs and packed-refs), else "unknown".
+pub fn git_rev() -> String {
+    for var in ["BTARD_GIT_REV", "GITHUB_SHA"] {
+        if let Ok(v) = std::env::var(var) {
+            if !v.trim().is_empty() {
+                return v.trim().to_string();
+            }
+        }
+    }
+    let git = Path::new(env!("CARGO_MANIFEST_DIR")).join(".git");
+    if let Ok(head) = std::fs::read_to_string(git.join("HEAD")) {
+        let head = head.trim();
+        match head.strip_prefix("ref: ") {
+            None if !head.is_empty() => return head.to_string(),
+            Some(r) => {
+                if let Ok(rev) = std::fs::read_to_string(git.join(r.trim())) {
+                    return rev.trim().to_string();
+                }
+                if let Ok(packed) = std::fs::read_to_string(git.join("packed-refs")) {
+                    for line in packed.lines() {
+                        if let Some((sha, name)) = line.split_once(' ') {
+                            if name.trim() == r.trim() {
+                                return sha.to_string();
+                            }
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    "unknown".into()
+}
+
+// ---------------------------------------------------------------------------
+// Baseline comparison (the CI regression gate)
+// ---------------------------------------------------------------------------
+
+/// One record's baseline-vs-current delta.
+#[derive(Clone, Debug)]
+pub struct BenchDelta {
+    pub name: String,
+    pub unit: String,
+    pub base: f64,
+    pub current: f64,
+    /// current / base (f64::INFINITY when base is 0 and current isn't).
+    pub ratio: f64,
+}
+
+/// Outcome of diffing a current report against a committed baseline.
+#[derive(Debug, Default)]
+pub struct BenchComparison {
+    /// Gated-unit records whose median grew past the tolerance band.
+    pub regressions: Vec<BenchDelta>,
+    /// Gated-unit records whose median shrank past the band.
+    pub improvements: Vec<BenchDelta>,
+    /// Records inside the band (or with non-gated units).
+    pub unchanged: usize,
+    /// Record names present only in the baseline.
+    pub only_base: Vec<String>,
+    /// Record names present only in the current report.
+    pub only_current: Vec<String>,
+    /// Baseline carried `"provisional": true` — it was hand-seeded, not
+    /// measured on CI hardware, so the comparison is advisory.
+    pub provisional: bool,
+    /// Config fingerprints differ — the bench shapes are not
+    /// comparable, so the comparison is advisory.
+    pub fingerprint_mismatch: bool,
+}
+
+impl BenchComparison {
+    /// True when the comparison should fail a blocking CI gate.
+    pub fn blocking_failure(&self) -> bool {
+        !self.regressions.is_empty() && !self.provisional && !self.fingerprint_mismatch
+    }
+}
+
+/// Diff `current` against `base` (both `btard-bench-v1` documents).
+/// A gated-unit record regresses when `median > base * (1 + tolerance)`.
+pub fn compare_reports(
+    base: &Json,
+    current: &Json,
+    tolerance: f64,
+) -> Result<BenchComparison, String> {
+    for (doc, which) in [(base, "baseline"), (current, "current")] {
+        match doc.get("schema").and_then(Json::as_str) {
+            Some(BENCH_SCHEMA) => {}
+            other => return Err(format!("{which}: schema {other:?}, want {BENCH_SCHEMA:?}")),
+        }
+    }
+    let index = |doc: &Json, which: &str| -> Result<Vec<(String, String, f64)>, String> {
+        doc.get("records")
+            .and_then(Json::as_arr)
+            .ok_or(format!("{which}: missing records array"))?
+            .iter()
+            .map(|r| {
+                Ok((
+                    r.get("name").and_then(Json::as_str).ok_or("record without name")?.to_string(),
+                    r.get("unit").and_then(Json::as_str).unwrap_or("").to_string(),
+                    r.get("median").and_then(Json::as_f64).ok_or("record without median")?,
+                ))
+            })
+            .collect()
+    };
+    let base_recs = index(base, "baseline")?;
+    let cur_recs = index(current, "current")?;
+    let mut cmp = BenchComparison {
+        provisional: base.get("provisional").and_then(Json::as_bool).unwrap_or(false),
+        fingerprint_mismatch: base.get("fingerprint").and_then(Json::as_str)
+            != current.get("fingerprint").and_then(Json::as_str),
+        ..BenchComparison::default()
+    };
+    let base_map: std::collections::BTreeMap<&str, (&str, f64)> =
+        base_recs.iter().map(|(n, u, m)| (n.as_str(), (u.as_str(), *m))).collect();
+    let cur_names: std::collections::BTreeSet<&str> =
+        cur_recs.iter().map(|(n, _, _)| n.as_str()).collect();
+    for (name, _, _) in &base_recs {
+        if !cur_names.contains(name.as_str()) {
+            cmp.only_base.push(name.clone());
+        }
+    }
+    for (name, unit, median) in &cur_recs {
+        let Some(&(base_unit, base_median)) = base_map.get(name.as_str()) else {
+            cmp.only_current.push(name.clone());
+            continue;
+        };
+        let gated = GATED_UNITS.contains(&unit.as_str()) && base_unit == unit;
+        let ratio = if base_median == 0.0 {
+            if *median == 0.0 {
+                1.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            median / base_median
+        };
+        let delta = BenchDelta {
+            name: name.clone(),
+            unit: unit.clone(),
+            base: base_median,
+            current: *median,
+            ratio,
+        };
+        if gated && ratio > 1.0 + tolerance {
+            cmp.regressions.push(delta);
+        } else if gated && ratio < 1.0 - tolerance {
+            cmp.improvements.push(delta);
+        } else {
+            cmp.unchanged += 1;
+        }
+    }
+    Ok(cmp)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,5 +490,101 @@ mod tests {
         assert!(fmt_ns(5_000.0).ends_with("µs"));
         assert!(fmt_ns(5_000_000.0).ends_with("ms"));
         assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+
+    fn sample_report(clip_ms: f64) -> BenchReport {
+        let mut rep = BenchReport::new("unit");
+        rep.config("dim", Json::num(4096.0)).config("peers", Json::num(16.0));
+        rep.add_value("step/clip", "ms", clip_ms);
+        rep.add_value("step/verify", "ms", 2.0);
+        rep.add_value("final_acc", "acc", 0.93);
+        rep
+    }
+
+    #[test]
+    fn report_schema_roundtrip() {
+        let rep = sample_report(10.0);
+        let j = Json::parse(&rep.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(BENCH_SCHEMA));
+        assert_eq!(j.get("bench").and_then(Json::as_str), Some("unit"));
+        assert_eq!(j.path(&["config", "dim"]).and_then(Json::as_usize), Some(4096));
+        let recs = j.get("records").and_then(Json::as_arr).unwrap();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].get("name").and_then(Json::as_str), Some("step/clip"));
+        assert_eq!(recs[0].get("median").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(recs[0].get("iters").and_then(Json::as_u64), Some(1));
+        assert!(j.get("git_rev").and_then(Json::as_str).is_some());
+        // Fingerprint is a function of config alone, not record values.
+        assert_eq!(rep.fingerprint(), sample_report(99.0).fingerprint());
+        let table = rep.table();
+        assert!(table.contains("step/clip"));
+        assert!(table.contains("median"));
+    }
+
+    #[test]
+    fn fingerprint_ignores_config_insertion_order() {
+        let mut a = BenchReport::new("x");
+        a.config("b", Json::num(1.0)).config("a", Json::num(2.0));
+        let mut b = BenchReport::new("x");
+        b.config("a", Json::num(2.0)).config("b", Json::num(1.0));
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn compare_flags_regressions_within_tolerance_band() {
+        let base = sample_report(10.0).to_json();
+        // 20% growth sits inside a 25% band…
+        let cmp = compare_reports(&base, &sample_report(12.0).to_json(), 0.25).unwrap();
+        assert!(cmp.regressions.is_empty(), "{:?}", cmp.regressions);
+        assert!(!cmp.blocking_failure());
+        // …40% growth does not.
+        let cmp = compare_reports(&base, &sample_report(14.0).to_json(), 0.25).unwrap();
+        assert_eq!(cmp.regressions.len(), 1);
+        assert_eq!(cmp.regressions[0].name, "step/clip");
+        assert!(cmp.blocking_failure());
+        // A 2x improvement is reported but never blocks.
+        let cmp = compare_reports(&base, &sample_report(5.0).to_json(), 0.25).unwrap();
+        assert_eq!(cmp.improvements.len(), 1);
+        assert!(!cmp.blocking_failure());
+    }
+
+    #[test]
+    fn compare_ignores_non_gated_units_and_respects_provisional() {
+        let base_json = sample_report(10.0).to_json();
+        // The "acc" record moving is not a regression (non-gated unit).
+        let mut cur = sample_report(10.0);
+        cur.records.iter_mut().find(|r| r.unit == "acc").unwrap().median = 0.1;
+        let cmp = compare_reports(&base_json, &cur.to_json(), 0.25).unwrap();
+        assert!(cmp.regressions.is_empty());
+        // A provisional baseline downgrades real regressions to advisory.
+        let Json::Obj(mut m) = base_json else { unreachable!() };
+        m.insert("provisional".into(), Json::Bool(true));
+        let cmp = compare_reports(&Json::Obj(m), &sample_report(50.0).to_json(), 0.25).unwrap();
+        assert_eq!(cmp.regressions.len(), 1);
+        assert!(cmp.provisional && !cmp.blocking_failure());
+    }
+
+    #[test]
+    fn compare_reports_fingerprint_and_membership_drift() {
+        let base = sample_report(10.0).to_json();
+        let mut cur = BenchReport::new("unit");
+        cur.config("dim", Json::num(8192.0)); // different shape
+        cur.add_value("step/clip", "ms", 100.0);
+        cur.add_value("brand_new", "ms", 1.0);
+        let cmp = compare_reports(&base, &cur.to_json(), 0.25).unwrap();
+        assert!(cmp.fingerprint_mismatch);
+        assert!(!cmp.blocking_failure(), "mismatched shapes must not hard-fail");
+        assert_eq!(cmp.only_current, vec!["brand_new".to_string()]);
+        assert!(cmp.only_base.contains(&"step/verify".to_string()));
+    }
+
+    #[test]
+    fn report_writes_bench_json_file() {
+        let dir = std::env::temp_dir().join("btard_bench_report_test");
+        let path = sample_report(10.0).write(&dir).unwrap();
+        assert!(path.ends_with("BENCH_unit.json"));
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("bench").and_then(Json::as_str), Some("unit"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,201 @@
+//! A small persistent worker pool for data-parallel kernels (rayon is
+//! not available offline).
+//!
+//! The pooled *scheduler* in `coordinator/training.rs` multiplexes
+//! logical peers over workers at protocol-stage granularity; its
+//! workers are barrier-bound inside a stage and cannot be borrowed for
+//! intra-stage parallelism. This pool is the complementary layer: a
+//! process-wide set of helper threads that fan out *within* a single
+//! hot kernel call (CenteredClip's chunked reduction) and return before
+//! the call does.
+//!
+//! `scope_run` executes a batch of borrowing closures and blocks until
+//! every one has finished — the blocking is what makes handing
+//! non-`'static` borrows to long-lived threads sound. Jobs must never
+//! submit to the pool themselves (a nested `scope_run` from a worker
+//! can deadlock once every worker is blocked on an inner batch).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion latch for one `scope_run` batch.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panic_msg: Mutex<Option<String>>,
+}
+
+pub struct WorkerPool {
+    tx: Sender<Job>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `workers` helper threads (at least 1). Threads
+    /// exit when the pool is dropped.
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..workers {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("btard-pool-{i}"))
+                .spawn(move || loop {
+                    // Hold the receiver lock only while dequeueing.
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(job) => job,
+                        Err(_) => break, // pool dropped
+                    };
+                    job();
+                })
+                .expect("spawn pool worker");
+        }
+        WorkerPool { tx, workers }
+    }
+
+    /// The process-wide pool used by the hot kernels. Sized by
+    /// `BTARD_CLIP_WORKERS` when set, else available parallelism,
+    /// clamped to [1, 16].
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| WorkerPool::new(global_workers()))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run every job to completion before returning. Jobs may borrow
+    /// from the caller's stack: the latch wait below guarantees no job
+    /// outlives this call, which is what justifies the lifetime
+    /// transmute. A panicking job does not poison the pool — the panic
+    /// is captured and re-raised here, after the whole batch finished.
+    pub fn scope_run<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let latch = Arc::new(Latch {
+            remaining: Mutex::new(jobs.len()),
+            done: Condvar::new(),
+            panic_msg: Mutex::new(None),
+        });
+        for job in jobs {
+            // SAFETY: `job` only borrows data that outlives the
+            // `scope_run` call, and we block on the latch until every
+            // job has run — the borrow can never dangle.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
+            };
+            let latch = Arc::clone(&latch);
+            let wrapped: Job = Box::new(move || {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                if let Err(e) = result {
+                    let msg = if let Some(s) = e.downcast_ref::<&str>() {
+                        (*s).to_string()
+                    } else if let Some(s) = e.downcast_ref::<String>() {
+                        s.clone()
+                    } else {
+                        "pool job panicked".to_string()
+                    };
+                    latch.panic_msg.lock().unwrap().get_or_insert(msg);
+                }
+                let mut rem = latch.remaining.lock().unwrap();
+                *rem -= 1;
+                if *rem == 0 {
+                    latch.done.notify_all();
+                }
+            });
+            self.tx.send(wrapped).expect("worker pool channel closed");
+        }
+        let mut rem = latch.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = latch.done.wait(rem).unwrap();
+        }
+        drop(rem);
+        if let Some(msg) = latch.panic_msg.lock().unwrap().take() {
+            panic!("worker pool job panicked: {msg}");
+        }
+    }
+}
+
+fn global_workers() -> usize {
+    std::env::var("BTARD_CLIP_WORKERS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        })
+        .clamp(1, 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_borrowing_jobs_to_completion() {
+        let pool = WorkerPool::new(3);
+        let mut out = vec![0usize; 17];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .chunks_mut(4)
+            .enumerate()
+            .map(|(c, chunk)| {
+                Box::new(move || {
+                    for (k, slot) in chunk.iter_mut().enumerate() {
+                        *slot = c * 4 + k + 1;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope_run(jobs);
+        assert_eq!(out, (1..=17).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batches_reuse_the_same_pool() {
+        let pool = WorkerPool::new(2);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..10 {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..5)
+                .map(|_| {
+                    Box::new(|| {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scope_run(jobs);
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn job_panic_propagates_without_poisoning_the_pool() {
+        let pool = WorkerPool::new(2);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| {}),
+                Box::new(|| panic!("boom in job")),
+                Box::new(|| {}),
+            ];
+            pool.scope_run(jobs);
+        }));
+        let msg = format!("{:?}", err.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("boom in job"), "{msg}");
+        // The pool still works after a panicked batch.
+        let ok = AtomicUsize::new(0);
+        pool.scope_run(vec![Box::new(|| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        })]);
+        assert_eq!(ok.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop_and_global_pool_exists() {
+        WorkerPool::global().scope_run(vec![]);
+        assert!(WorkerPool::global().workers() >= 1);
+    }
+}
