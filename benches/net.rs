@@ -1,0 +1,294 @@
+//! Socket-engine topology bench: full-mesh vs gossip overlay.
+//!
+//! The event-loop engine holds every link of a peer on one poll(2)
+//! thread, so the quantity that used to explode — reader threads — is
+//! gone by construction. What remains measurable is the *link* and
+//! *byte* geometry this PR changes:
+//!
+//! - **full mesh**: every peer keeps n-1 open links and an origin pays
+//!   n-1 frames per broadcast. O(n²) TCP connections cluster-wide.
+//! - **gossip**: every peer keeps min(fanout, ⌈log₂ n⌉) outbound links
+//!   (doubling strides over a seeded ring; in-degree equals out-degree
+//!   by stride symmetry) and an origin pays only its fanout; relays
+//!   carry the rest. O(fanout·n) connections cluster-wide.
+//!
+//! Each cell builds a real loopback cluster — one `SocketNet` endpoint
+//! per thread, nothing shared but the roster — times the mesh build,
+//! asserts the exact open-link counts, then runs a broadcast storm and
+//! reports the wire-plane bytes it cost. Full mesh is measured at
+//! {8, 64}; 512 full-mesh (~262k TCP connections) is pointless to
+//! build and is exactly the regime the overlay exists to avoid, so the
+//! 512-peer cell runs gossip-only — the acceptance shape for the
+//! O(fanout) claim.
+//!
+//! Results land in the canonical `results/BENCH_net.json`
+//! (schema `btard-bench-v1`): mesh-build wall time (gated, `ms`) and
+//! broadcast wire bytes/peer (gated, `bytes` — deterministic for a
+//! fixed shape: relay-once means every non-origin peer forwards each
+//! digest exactly once), plus informational link counts and relay
+//! volumes.
+//!
+//! Run: cargo bench --bench net                     (full {8,64} + gossip {8,64,512})
+//!      BTARD_NET_SMOKE=1 cargo bench --bench net   (CI smoke: drops the 512 cell)
+//!
+//! Cells whose file-descriptor appetite exceeds the process limit are
+//! skipped with a logged reason (512-peer gossip wants ~10k fds; run
+//! `ulimit -n 65536` first, as the CI job does).
+
+use btard::crypto::Mont;
+use btard::net::slots;
+use btard::net::{
+    bind_ephemeral, derive_keypair, MsgClass, Roster, RosterEntry, SocketConfig, SocketNet,
+    Transport,
+};
+use btard::util::bench::BenchReport;
+use btard::util::json::Json;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+const PAYLOAD_BYTES: usize = 256;
+const SEED: u64 = 17;
+const FANOUT: usize = 8;
+
+/// Exact per-peer overlay degree: doubling strides +1,+2,+4,… below n,
+/// capped at fanout (mirrors `Overlay::derive`).
+fn overlay_degree(n: usize, fanout: usize) -> usize {
+    let mut stride = 1usize;
+    let mut d = 0usize;
+    while stride < n && d < fanout {
+        d += 1;
+        stride *= 2;
+    }
+    d
+}
+
+/// Soft file-descriptor limit from /proc/self/limits (u64::MAX when
+/// unreadable — optimistic, the cell will fail loudly instead).
+fn fd_limit() -> u64 {
+    let Ok(text) = std::fs::read_to_string("/proc/self/limits") else {
+        return u64::MAX;
+    };
+    for line in text.lines() {
+        if line.starts_with("Max open files") {
+            let mut fields = line.split_whitespace().skip(3);
+            if let Some(soft) = fields.next() {
+                if soft == "unlimited" {
+                    return u64::MAX;
+                }
+                return soft.parse().unwrap_or(u64::MAX);
+            }
+        }
+    }
+    u64::MAX
+}
+
+/// Conservative fd appetite of a cell: 2 fds per TCP connection, plus
+/// per-peer listener + waker pair + slack for stdio/epoll internals.
+fn fds_needed(n: usize, gossip: bool) -> u64 {
+    let links = if gossip { n * overlay_degree(n, FANOUT) } else { n * (n - 1) / 2 };
+    (2 * links + 3 * n + 64) as u64
+}
+
+struct CellResult {
+    mesh_build_ms: f64,
+    open_in_max: usize,
+    open_out_max: usize,
+    bcast_bytes_total: u64,
+    bcast_msgs_total: u64,
+    relay_msgs_total: u64,
+}
+
+/// Build an n-peer loopback cluster, broadcast once from each of the
+/// first `origins` peers, wait until every peer holds every origin's
+/// envelope, and account the wire bytes the storm cost (handshake
+/// traffic is snapshotted out).
+fn run_cell(n: usize, gossip: bool, origins: usize) -> CellResult {
+    let mont = Mont::new();
+    let (listeners, addrs): (Vec<_>, Vec<_>) = (0..n).map(|_| bind_ephemeral().unwrap()).unzip();
+    let roster = Roster {
+        peers: addrs
+            .into_iter()
+            .enumerate()
+            .map(|(k, addr)| RosterEntry {
+                id: k,
+                addr,
+                pubkey: derive_keypair(&mont, SEED, k).public,
+            })
+            .collect(),
+    };
+    let cfg = SocketConfig {
+        gossip,
+        gossip_fanout: FANOUT as u64,
+        overlay_seed: SEED,
+        verify_signatures: false,
+        connect_timeout: Duration::from_secs(120),
+        ..SocketConfig::default()
+    };
+    let expected = if gossip { overlay_degree(n, FANOUT) } else { n - 1 };
+
+    let handles: Vec<_> = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(k, listener)| {
+            let roster = roster.clone();
+            let cfg = cfg.clone();
+            std::thread::spawn(move || {
+                let mont = Mont::new();
+                let t0 = Instant::now();
+                let mut net =
+                    SocketNet::connect(listener, &roster, k, derive_keypair(&mont, SEED, k), &cfg)
+                        .unwrap_or_else(|e| panic!("peer {k} mesh build: {e}"));
+                let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let (open_in, open_out) = net.open_links();
+                assert_eq!(
+                    (open_in, open_out),
+                    (expected, expected),
+                    "peer {k}: open links must be exactly the topology degree"
+                );
+                net.set_timeout(Duration::from_secs(120));
+                // Handshake traffic is not the broadcast storm's cost.
+                let hs = net.info().stats.wire_snapshot()[k].clone();
+                if k < origins {
+                    let payload = vec![k as u8; PAYLOAD_BYTES];
+                    net.broadcast(2, slots::GRAD_COMMIT, MsgClass::Commitment, payload);
+                }
+                for from in 0..origins {
+                    let env =
+                        net.recv_keyed(2, slots::GRAD_COMMIT, &|e| e.from == from).unwrap_or_else(
+                            |e| panic!("peer {k} missing broadcast from {from}: {e:?}"),
+                        );
+                    assert_eq!(env.payload.len(), PAYLOAD_BYTES);
+                }
+                let wire = net.info().stats.wire_snapshot()[k].clone();
+                (
+                    net,
+                    build_ms,
+                    open_in,
+                    open_out,
+                    wire.bytes - hs.bytes,
+                    wire.msgs - hs.msgs,
+                    wire.relay_msgs - hs.relay_msgs,
+                )
+            })
+        })
+        .collect();
+    // Endpoints stay alive until every peer finished collecting, then
+    // drop together (mirrors the cluster harness teardown).
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().expect("peer thread")).collect();
+    let mut out = CellResult {
+        mesh_build_ms: 0.0,
+        open_in_max: 0,
+        open_out_max: 0,
+        bcast_bytes_total: 0,
+        bcast_msgs_total: 0,
+        relay_msgs_total: 0,
+    };
+    let mut nets = Vec::new();
+    for (net, build_ms, open_in, open_out, bytes, msgs, relays) in results {
+        nets.push(net);
+        out.mesh_build_ms = out.mesh_build_ms.max(build_ms);
+        out.open_in_max = out.open_in_max.max(open_in);
+        out.open_out_max = out.open_out_max.max(open_out);
+        out.bcast_bytes_total += bytes;
+        out.bcast_msgs_total += msgs;
+        out.relay_msgs_total += relays;
+    }
+    drop(nets);
+    out
+}
+
+fn main() {
+    let smoke = std::env::var("BTARD_NET_SMOKE").is_ok();
+    // (n, gossip, origins): everyone broadcasts at small n; the 512-peer
+    // cell caps origins so the storm stays O(origins·n·fanout) frames.
+    let mut cells: Vec<(usize, bool, usize)> =
+        vec![(8, false, 8), (64, false, 64), (8, true, 8), (64, true, 64)];
+    if !smoke {
+        cells.push((512, true, 64));
+    }
+
+    let mut rep = BenchReport::new("net");
+    rep.config("mode", Json::str(if smoke { "smoke" } else { "default" }))
+        .config("fanout", Json::num(FANOUT as f64))
+        .config("payload_bytes", Json::num(PAYLOAD_BYTES as f64))
+        .config(
+            "cells",
+            Json::Arr(
+                cells
+                    .iter()
+                    .map(|&(n, gossip, origins)| {
+                        Json::obj(vec![
+                            ("n", Json::num(n as f64)),
+                            ("gossip", Json::Bool(gossip)),
+                            ("origins", Json::num(origins as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+    // Machine-dependent, so a record (visible in diffs) rather than
+    // config (which would flip the fingerprint).
+    let limit = fd_limit();
+    rep.add_value("fd_limit", "count", if limit == u64::MAX { -1.0 } else { limit as f64 });
+
+    println!("=== socket topology bench: fanout {FANOUT}, {PAYLOAD_BYTES}-byte payloads ===\n");
+    let mut per_peer_bytes: std::collections::BTreeMap<String, f64> = Default::default();
+    for &(n, gossip, origins) in &cells {
+        let cell = format!("{}_n{}", if gossip { "gossip" } else { "full" }, n);
+        let need = fds_needed(n, gossip);
+        if need > limit {
+            println!("SKIP {cell}: needs ~{need} fds, soft limit {limit} (raise with ulimit -n)");
+            continue;
+        }
+        let t0 = Instant::now();
+        let r = run_cell(n, gossip, origins);
+        println!(
+            "{cell:<12} build {:>8.1} ms | links/peer in={} out={} | \
+             storm {} frames ({} relayed), {} bytes | {:.1}s total",
+            r.mesh_build_ms,
+            r.open_in_max,
+            r.open_out_max,
+            r.bcast_msgs_total,
+            r.relay_msgs_total,
+            r.bcast_bytes_total,
+            t0.elapsed().as_secs_f64()
+        );
+        rep.add_value(&format!("{cell}/mesh_build_ms"), "ms", r.mesh_build_ms);
+        rep.add_value(&format!("{cell}/open_links_in"), "count", r.open_in_max as f64);
+        rep.add_value(&format!("{cell}/open_links_out"), "count", r.open_out_max as f64);
+        let bpp = r.bcast_bytes_total as f64 / n as f64;
+        rep.add_value(&format!("{cell}/bcast_wire_bytes_per_peer"), "bytes", bpp);
+        rep.add_value(&format!("{cell}/bcast_wire_msgs"), "count", r.bcast_msgs_total as f64);
+        rep.add_value(&format!("{cell}/relay_msgs"), "count", r.relay_msgs_total as f64);
+        // Per-origin egress at the origin itself is the fan-out the
+        // overlay bounds: degree frames instead of n-1.
+        rep.add_value(
+            &format!("{cell}/origin_direct_frames"),
+            "count",
+            if gossip { overlay_degree(n, FANOUT) as f64 } else { (n - 1) as f64 },
+        );
+        per_peer_bytes.insert(cell, bpp);
+    }
+
+    // Headline ratio: open links per peer, full mesh over gossip at 64.
+    let d64 = overlay_degree(64, FANOUT) as f64;
+    rep.add_value("n64/link_ratio_full_over_gossip", "ratio", 63.0 / d64);
+    if let (Some(full), Some(gossip)) =
+        (per_peer_bytes.get("full_n64"), per_peer_bytes.get("gossip_n64"))
+    {
+        // Gossip spends ~degree× total bytes (relay redundancy) to buy
+        // O(fanout) links and origin egress; record the factor so a
+        // protocol change that silently inflates it is visible.
+        rep.add_value("n64/bytes_ratio_gossip_over_full", "ratio", gossip / full);
+    }
+
+    println!("\n=== canonical report (btard-bench-v1) ===\n");
+    println!("{}", rep.table());
+    match rep.write(Path::new("results")) {
+        Ok(path) => println!("bench json: {}", path.display()),
+        Err(e) => {
+            eprintln!("FAILED to write BENCH_net.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -52,6 +52,7 @@ fn main() {
         seed: 7,
         verify_signatures: true,
         gossip_fanout: 8,
+        session_mac: false,
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::empty(),
         segments: vec![],

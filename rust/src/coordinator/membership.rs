@@ -297,6 +297,30 @@ impl MembershipSchedule {
         (0..n_peers).map(|p| self.join_step(p).unwrap_or(0)).collect()
     }
 
+    /// The full roster trajectory as an epoch table: `(first_step,
+    /// live ids)` for step 0 and after every join/leave boundary —
+    /// exactly the shape the socket transport's gossip overlay derives
+    /// its per-epoch relay graphs from. A pure function of the schedule,
+    /// so every peer (and the parent process) computes the identical
+    /// table. Runtime bans are deliberately absent: they are
+    /// timing-dependent, and overlay robustness to banned relays comes
+    /// from the redundant strides instead.
+    pub fn roster_timeline(&self, n_peers: usize) -> Vec<(u64, Vec<PeerId>)> {
+        let mut live = self.initial_live(n_peers);
+        let mut timeline = vec![(0u64, live.clone())];
+        let mut boundaries: Vec<u64> = self.events.iter().map(|e| e.step).collect();
+        boundaries.sort_unstable();
+        boundaries.dedup();
+        for step in boundaries {
+            let (joins, leaves) = self.deltas_at(step);
+            live.retain(|p| !leaves.contains(p));
+            live.extend(joins);
+            live.sort_unstable();
+            timeline.push((step, live.clone()));
+        }
+        timeline
+    }
+
     /// True when step `step` is an epoch boundary (has any delta).
     pub fn has_delta_at(&self, step: u64) -> bool {
         self.events.iter().any(|e| e.step == step)
@@ -936,5 +960,27 @@ mod tests {
         // Wrong-shaped state is refused, not silently truncated.
         let mut c = Sgd::new(2, LrSchedule::Constant(0.1), 0.9, true);
         assert!(!c.load_state(&a.state_bytes()));
+    }
+
+    #[test]
+    fn roster_timeline_walks_every_boundary() {
+        // Universe {0..5}: 4 joins at step 3, 2 leaves at step 6, 5
+        // joins at step 6 — the overlay epoch table the gossip
+        // transport derives its relay graphs from.
+        let sched = MembershipSchedule::parse("join:4@3,leave:2@6,join:5@6").unwrap();
+        sched.validate(6, 10).unwrap();
+        assert_eq!(
+            sched.roster_timeline(6),
+            vec![
+                (0, vec![0, 1, 2, 3]),
+                (3, vec![0, 1, 2, 3, 4]),
+                (6, vec![0, 1, 3, 4, 5]),
+            ]
+        );
+        // A static roster is a single epoch at step 0.
+        assert_eq!(
+            MembershipSchedule::empty().roster_timeline(3),
+            vec![(0, vec![0, 1, 2])]
+        );
     }
 }

@@ -19,7 +19,7 @@
 //!                  "schedule": "cosine", "floor": 0.01, "warmup": 0},
 //!   "clip_lambda": null,
 //!   "eval_every": 20, "verify_signatures": true,
-//!   "gossip_fanout": 8,
+//!   "gossip_fanout": 8, "session_mac": false,
 //!   "network": "lossy:0.05",
 //!   "churn": ["join:8@3", "leave:2@6"],
 //!   "transport": "local",
@@ -54,10 +54,18 @@
 //! are hard errors. See `coordinator::membership` for the protocol.
 //!
 //! `transport` selects the message substrate: `"local"` (the in-process
-//! fabric / network simulation, the default) or `"socket"` (a real TCP
-//! mesh between `btard peer` processes — launched via `btard cluster`,
-//! which requires a perfect `network`: fault injection lives in the
-//! local simulator, real links carry their own faults).
+//! fabric / network simulation, the default), `"socket"` (a real TCP
+//! full mesh between `btard peer` processes), or `"gossip"` (real TCP
+//! sockets with broadcasts routed over the deterministic gossip overlay
+//! — `gossip_fanout` caps each peer's overlay out-degree, and the
+//! per-epoch relay graph is derived from the run seed and the churn
+//! schedule, so every peer computes the identical overlay). Both socket
+//! transports are launched via `btard cluster` and require a perfect
+//! `network`: fault injection lives in the local simulator, real links
+//! carry their own faults. `session_mac` (socket transports only)
+//! authenticates bulk traffic with per-link HMAC streams instead of
+//! per-envelope signatures; adjudication-bound slots stay
+//! Schnorr-signed, and the flag requires `verify_signatures`.
 //!
 //! `workload` names the training objective so every peer process builds
 //! the identical gradient source: `{"kind": "mlp", "hidden", "batch",
@@ -91,8 +99,13 @@ pub enum TransportKind {
     /// In-process fabric (perfect or simulated-fault). The default.
     #[default]
     Local,
-    /// Real TCP mesh between `btard peer` processes.
+    /// Real TCP mesh between `btard peer` processes: every pair of live
+    /// peers keeps a direct link, broadcasts fan out to everyone.
     Socket,
+    /// Real TCP sockets with broadcasts routed over the deterministic
+    /// gossip overlay (O(fanout·log n) links per peer instead of O(n));
+    /// point-to-point traffic still dials direct links lazily.
+    Gossip,
 }
 
 impl TransportKind {
@@ -100,6 +113,7 @@ impl TransportKind {
         match self {
             TransportKind::Local => "local",
             TransportKind::Socket => "socket",
+            TransportKind::Gossip => "gossip",
         }
     }
 
@@ -107,8 +121,15 @@ impl TransportKind {
         match s {
             "local" => Some(TransportKind::Local),
             "socket" => Some(TransportKind::Socket),
+            "gossip" => Some(TransportKind::Gossip),
             _ => None,
         }
+    }
+
+    /// True for the transports that run over real TCP sockets (the
+    /// `btard cluster` / `btard peer` pair).
+    pub fn is_socket(&self) -> bool {
+        matches!(self, TransportKind::Socket | TransportKind::Gossip)
     }
 }
 
@@ -210,6 +231,13 @@ pub fn parse_run_config_full(text: &str) -> Result<LoadedRunConfig> {
         .and_then(|v| v.as_bool())
         .unwrap_or(true);
     cfg.gossip_fanout = j.get("gossip_fanout").and_then(|v| v.as_u64()).unwrap_or(8);
+    cfg.session_mac = j.get("session_mac").and_then(|v| v.as_bool()).unwrap_or(false);
+    if cfg.session_mac && !cfg.verify_signatures {
+        return Err(anyhow!(
+            "session_mac: true requires verify_signatures: true (the signed HELLO is what \
+             makes the MAC negotiation downgrade-proof)"
+        ));
+    }
     let aggregation_attack = j
         .get("aggregation_attack")
         .and_then(|v| v.as_bool())
@@ -353,17 +381,21 @@ pub fn parse_run_config_full(text: &str) -> Result<LoadedRunConfig> {
         Some(t) if *t != Json::Null => {
             let name = t
                 .as_str()
-                .ok_or_else(|| anyhow!("transport must be a string (local | socket)"))?;
+                .ok_or_else(|| anyhow!("transport must be a string (local | socket | gossip)"))?;
             TransportKind::from_name(name)
-                .ok_or_else(|| anyhow!("unknown transport '{name}' (local | socket)"))?
+                .ok_or_else(|| anyhow!("unknown transport '{name}' (local | socket | gossip)"))?
         }
         _ => TransportKind::Local,
     };
-    if transport == TransportKind::Socket && !cfg.network.is_perfect() {
+    if transport.is_socket() && !cfg.network.is_perfect() {
         return Err(anyhow!(
-            "transport 'socket' requires a perfect network profile: fault injection lives in \
-             the local simulator; real links carry their own faults"
+            "transport '{}' requires a perfect network profile: fault injection lives in \
+             the local simulator; real links carry their own faults",
+            transport.name()
         ));
+    }
+    if transport == TransportKind::Gossip && cfg.gossip_fanout == 0 {
+        return Err(anyhow!("transport 'gossip' needs gossip_fanout >= 1"));
     }
     let workload = match j.get("workload") {
         Some(w) if *w != Json::Null => WorkloadSpec::from_json(w)?,
@@ -479,8 +511,11 @@ pub fn write_run_config(
             cfg.n_peers
         ));
     }
-    if transport == TransportKind::Socket && !cfg.network.is_perfect() {
-        return Err(anyhow!("transport 'socket' requires a perfect network profile"));
+    if transport.is_socket() && !cfg.network.is_perfect() {
+        return Err(anyhow!(
+            "transport '{}' requires a perfect network profile",
+            transport.name()
+        ));
     }
 
     let mut root: Vec<(&'static str, Json)> = vec![
@@ -491,6 +526,7 @@ pub fn write_run_config(
         ("eval_every", Json::num(cfg.eval_every as f64)),
         ("verify_signatures", Json::Bool(cfg.verify_signatures)),
         ("gossip_fanout", Json::num(cfg.gossip_fanout as f64)),
+        ("session_mac", Json::Bool(cfg.session_mac)),
         ("transport", Json::str(transport.name())),
         ("workload", workload.to_json()),
     ];
@@ -610,6 +646,7 @@ mod tests {
         assert!(cfg.attack.is_none());
         assert!(cfg.verify_signatures);
         assert_eq!(cfg.gossip_fanout, 8);
+        assert!(!cfg.session_mac);
         assert_eq!(loaded.transport, TransportKind::Local);
         assert_eq!(loaded.workload, WorkloadSpec::default_mlp());
     }
@@ -666,6 +703,32 @@ mod tests {
         // Sockets are perfect links; simulated faults are a local-only
         // feature and must not be silently ignored.
         assert!(parse_run_config(r#"{"transport": "socket", "network": "lossy"}"#).is_err());
+        assert!(parse_run_config(r#"{"transport": "gossip", "network": "lossy"}"#).is_err());
+        // A zero-fanout overlay cannot disseminate anything.
+        assert!(parse_run_config(r#"{"transport": "gossip", "gossip_fanout": 0}"#).is_err());
+        // The stream MAC is anchored by the signed HELLO; without
+        // signatures the negotiation would be downgradeable.
+        assert!(
+            parse_run_config(r#"{"session_mac": true, "verify_signatures": false}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn gossip_transport_and_session_mac_roundtrip() {
+        let loaded = parse_run_config_full(
+            r#"{"transport": "gossip", "gossip_fanout": 3, "session_mac": true}"#,
+        )
+        .unwrap();
+        assert_eq!(loaded.transport, TransportKind::Gossip);
+        assert!(loaded.transport.is_socket());
+        assert_eq!(loaded.cfg.gossip_fanout, 3);
+        assert!(loaded.cfg.session_mac);
+        let text =
+            write_run_config(&loaded.cfg, TransportKind::Gossip, &WorkloadSpec::default_mlp())
+                .unwrap();
+        let rehop = parse_run_config_full(&text).unwrap();
+        assert_eq!(rehop.transport, TransportKind::Gossip);
+        assert_cfg_eq(&loaded.cfg, &rehop.cfg);
     }
 
     #[test]
@@ -799,6 +862,7 @@ mod tests {
         assert_eq!(a.eval_every, b.eval_every);
         assert_eq!(a.verify_signatures, b.verify_signatures);
         assert_eq!(a.gossip_fanout, b.gossip_fanout);
+        assert_eq!(a.session_mac, b.session_mac);
         assert_eq!(a.clip_lambda, b.clip_lambda);
         assert_eq!(a.network, b.network);
         assert_eq!(a.churn, b.churn);

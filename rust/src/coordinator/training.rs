@@ -82,7 +82,14 @@ pub struct RunConfig {
     pub eval_every: u64,
     pub seed: u64,
     pub verify_signatures: bool,
+    /// Overlay out-degree cap for the socket transport's gossip mode
+    /// (effective degree is min(fanout, ⌈log₂ n⌉) per peer).
     pub gossip_fanout: u64,
+    /// Socket-transport session-MAC mode: per-link HMAC streams for bulk
+    /// parts, Schnorr signatures only on adjudication-bound slots.
+    /// Requires `verify_signatures` (the signed HELLO anchors the MAC
+    /// negotiation). No effect on the in-process fabrics.
+    pub session_mac: bool,
     /// Network-condition model for the run: the perfect fabric by
     /// default, or a seeded fault profile (loss, latency, stragglers,
     /// partitions) simulated by the `SimNet` transport backend.
@@ -114,6 +121,7 @@ impl RunConfig {
             seed: 0,
             verify_signatures: true,
             gossip_fanout: 8,
+            session_mac: false,
             network: NetworkProfile::perfect(),
             churn: MembershipSchedule::empty(),
             segments: vec![],
@@ -340,7 +348,6 @@ pub fn run_btard_threaded(cfg: &RunConfig, source: Arc<dyn GradientSource>) -> R
     let transports = build_transports(
         cfg.n_peers,
         cfg.seed ^ 0xC1A5,
-        cfg.gossip_fanout,
         cfg.verify_signatures,
         &cfg.network,
         cfg.seed,
@@ -675,7 +682,6 @@ pub fn run_btard_pooled(
     let transports = build_transports(
         cfg.n_peers,
         cfg.seed ^ 0xC1A5,
-        cfg.gossip_fanout,
         cfg.verify_signatures,
         &cfg.network,
         cfg.seed,

@@ -364,8 +364,10 @@ pub fn run_peer(
     connect_timeout: Duration,
 ) -> Result<PeerReport, String> {
     let cfg = &loaded.cfg;
-    if loaded.transport != TransportKind::Socket {
-        return Err("btard peer needs a config with \"transport\": \"socket\"".to_string());
+    if !loaded.transport.is_socket() {
+        return Err(
+            "btard peer needs a config with \"transport\": \"socket\" or \"gossip\"".to_string()
+        );
     }
     if id >= cfg.n_peers {
         return Err(format!("--id {id} outside the {}-peer config", cfg.n_peers));
@@ -431,6 +433,19 @@ pub fn run_peer(
 
     let scfg = SocketConfig {
         gossip_fanout: cfg.gossip_fanout,
+        // Gossip transport: broadcasts ride the deterministic overlay.
+        // The per-epoch relay graph is a pure function of the churn
+        // schedule's roster timeline and the run seed, so every
+        // independently-launched peer derives the identical overlay —
+        // the property the digest-identity CI cell checks end to end.
+        gossip: loaded.transport == TransportKind::Gossip,
+        overlay_epochs: if loaded.transport == TransportKind::Gossip {
+            cfg.churn.roster_timeline(cfg.n_peers)
+        } else {
+            vec![]
+        },
+        overlay_seed: cfg.seed,
+        session_mac: cfg.session_mac,
         verify_signatures: cfg.verify_signatures,
         connect_timeout,
         // The churn schedule's join-step table: which links form at
@@ -499,12 +514,23 @@ fn log_tail(path: &Path) -> String {
 
 /// Fork an N-peer loopback cluster of `btard peer` subprocesses, wait
 /// for completion, merge the reports, and write the combined artifacts.
+/// `transport` picks the socket flavour — full mesh
+/// ([`TransportKind::Socket`]) or gossip overlay
+/// ([`TransportKind::Gossip`]); both must reproduce the in-process
+/// digest bit-for-bit.
 pub fn run_cluster(
     cfg: &RunConfig,
     workload: &WorkloadSpec,
+    transport: TransportKind,
     opts: &ClusterOptions,
 ) -> Result<ClusterOutcome, String> {
     let n = cfg.n_peers;
+    if !transport.is_socket() {
+        return Err(format!(
+            "run_cluster drives the socket transports, not '{}'",
+            transport.name()
+        ));
+    }
     // Reject nonsense schedules in the parent, before forking anything:
     // leaving this to the children turns an immediate "peer 9 outside
     // the 9-id universe" into N per-peer log files and a generic
@@ -524,7 +550,7 @@ pub fn run_cluster(
     // One config file for every subprocess: the round-trip through
     // write_run_config/parse_run_config is what makes "every peer runs
     // the same experiment" a checked property instead of a hope.
-    let config_json = write_run_config(cfg, TransportKind::Socket, workload)
+    let config_json = write_run_config(cfg, transport, workload)
         .map_err(|e| format!("serializing the run config: {e}"))?;
     let config_path = opts.out_dir.join("config.json");
     atomic_write(&config_path, &config_json)?;

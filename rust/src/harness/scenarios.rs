@@ -484,6 +484,7 @@ fn run_cell(
                 seed: spec.seed,
                 verify_signatures: spec.verify_signatures,
                 gossip_fanout: 8,
+                session_mac: false,
                 network: NetworkProfile::from_name(network)
                     .unwrap_or_else(|| panic!("unknown network profile '{network}'")),
                 churn: schedule,

@@ -103,9 +103,15 @@ fn main() {
                  \x20 --workload quadratic|mlp    objective; --dim/--mu/--L/--sigma/\n\
                  \x20                             --source-seed or --hidden/--batch\n\
                  \x20 --out DIR                   work dir (default results/cluster)\n\
+                 \x20 --transport socket|gossip   full TCP mesh (default), or broadcasts over\n\
+                 \x20                             the deterministic gossip overlay —\n\
+                 \x20                             O(fanout·log n) links per peer\n\
+                 \x20 --gossip-fanout F           overlay out-degree cap (default 8)\n\
+                 \x20 --session-mac               per-link HMAC streams for bulk traffic\n\
+                 \x20                             (adjudication slots stay Schnorr-signed)\n\
                  \x20 --verify-inprocess          also run the in-process pooled run and\n\
                  \x20                             fail unless the digests are bit-identical\n\
-                 \x20 --config FILE.json          full config (transport must be 'socket')\n\
+                 \x20 --config FILE.json          full config (transport 'socket' or 'gossip')\n\
                  peer flags (one process of a socket cluster):\n\
                  \x20 --id K --config FILE.json   which peer, and the shared run config\n\
                  \x20 --roster FILE.json          fixed roster (id, addr, pubkey rows), or\n\
@@ -244,7 +250,8 @@ fn cmd_train(args: &Args) {
         // experiment labeled with a transport it never used.
         assert!(
             loaded.transport == TransportKind::Local,
-            "config '{path}' has transport 'socket' — use `btard cluster --config {path}`"
+            "config '{path}' has transport '{}' — use `btard cluster --config {path}`",
+            loaded.transport.name()
         );
         let mut cfg = loaded.cfg;
         if let Some(profile) = parse_network(args) {
@@ -292,6 +299,7 @@ fn cmd_train(args: &Args) {
         seed: args.get_u64("seed", 0),
         verify_signatures: !args.get_bool("no-sigs"),
         gossip_fanout: 8,
+        session_mac: false,
         network: parse_network(args).unwrap_or_default(),
         churn: parse_churn(args),
         segments: vec![],
@@ -401,7 +409,8 @@ fn cluster_run_config(args: &Args) -> RunConfig {
         eval_every: args.get_u64("eval-every", 2),
         seed: args.get_u64("seed", 7),
         verify_signatures: !args.get_bool("no-sigs"),
-        gossip_fanout: 8,
+        gossip_fanout: args.get_u64("gossip-fanout", 8),
+        session_mac: args.get_bool("session-mac"),
         network: NetworkProfile::perfect(),
         churn: parse_churn(args),
         segments: vec![],
@@ -409,18 +418,25 @@ fn cluster_run_config(args: &Args) -> RunConfig {
 }
 
 fn cmd_cluster(args: &Args) {
-    let (cfg, workload) = match args.get("config") {
+    let (cfg, workload, transport) = match args.get("config") {
         Some(path) => {
             let loaded = load_run_config_full(path).unwrap_or_else(|e| panic!("{e:#}"));
             assert!(
-                loaded.transport == TransportKind::Socket,
-                "config '{path}' has transport '{}': btard cluster runs the socket transport — \
-                 set \"transport\": \"socket\"",
+                loaded.transport.is_socket(),
+                "config '{path}' has transport '{}': btard cluster runs the socket transports — \
+                 set \"transport\": \"socket\" or \"gossip\"",
                 loaded.transport.name()
             );
-            (loaded.cfg, loaded.workload)
+            (loaded.cfg, loaded.workload, loaded.transport)
         }
-        None => (cluster_run_config(args), parse_workload(args)),
+        None => {
+            let transport = match args.get_str("transport", "socket") {
+                "socket" => TransportKind::Socket,
+                "gossip" => TransportKind::Gossip,
+                other => panic!("--transport expects socket|gossip, got '{other}'"),
+            };
+            (cluster_run_config(args), parse_workload(args), transport)
+        }
     };
     let out_dir = PathBuf::from(args.get_str("out", "results/cluster"));
     let opts = ClusterOptions {
@@ -431,17 +447,20 @@ fn cmd_cluster(args: &Args) {
     };
     eprintln!(
         "btard cluster: forking {} peer processes ({} byzantine, attack={:?}, churn={}, \
-         sigs={}), {} steps → {}",
+         sigs={}, mac={}, transport={}), {} steps → {}",
         cfg.n_peers,
         cfg.byzantine.len(),
         cfg.attack.as_ref().map(|(spec, _)| spec.canonical()),
         cfg.churn.canonical(),
         cfg.verify_signatures,
+        cfg.session_mac,
+        transport.name(),
         cfg.steps,
         opts.out_dir.display()
     );
     let t0 = std::time::Instant::now();
-    let outcome = run_cluster(&cfg, &workload, &opts).unwrap_or_else(|e| panic!("cluster: {e}"));
+    let outcome =
+        run_cluster(&cfg, &workload, transport, &opts).unwrap_or_else(|e| panic!("cluster: {e}"));
     let wall = t0.elapsed().as_secs_f64();
     let mut table = Table::new(&["step", "loss", "metric", "bans"]);
     for m in outcome.result.metrics.iter().filter(|m| !m.metric.is_nan()) {

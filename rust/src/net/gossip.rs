@@ -1,20 +1,284 @@
-//! Broadcast-channel consistency: equivocation detection.
+//! Gossip dissemination: the deterministic broadcast overlay and
+//! broadcast-channel consistency (equivocation detection).
 //!
-//! The paper (footnote 4) requires that a peer broadcasting two
-//! contradicting messages for the same protocol slot be banned, because
-//! different honest peers might otherwise act on different values. The
-//! transport guarantees every variant is eventually relayed to everyone;
-//! this tracker records the first digest seen per (peer, step, slot) and
-//! flags any signed contradiction as ban evidence.
+//! Two layers live here:
+//!
+//! - [`Overlay`] — the relay graph a gossip-mode socket cluster uses for
+//!   broadcast traffic. It is a **pure function of (epoch roster, seed,
+//!   fanout)**, derived exactly like [`OwnerMap::derive`]: the sorted
+//!   roster is shuffled by a seeded permutation into a ring, and each
+//!   peer's out-neighbours are the ring positions at doubling strides
+//!   (+1, +2, +4, …) capped at `fanout`. Out-degree is therefore
+//!   ≤ min(fanout, ⌈log₂ n⌉), in-degree equals out-degree by stride
+//!   symmetry, and the {+1, +2} strides alone keep the graph strongly
+//!   connected through any single crashed relay. Every peer derives the
+//!   identical graph from config data — no timing, no negotiation.
+//!
+//! - [`RelayTracker`] / [`EquivocationTracker`] — the relay-once rule and
+//!   its protocol-level sibling. The paper (footnote 4) requires that a
+//!   peer broadcasting two contradicting messages for the same protocol
+//!   slot be banned, because different honest peers might otherwise act
+//!   on different values. The transport relays each *distinct payload*
+//!   for a (origin, step, slot) key exactly once — duplicates are
+//!   dropped, but a contradicting second variant is still delivered and
+//!   relayed, because every honest peer must see both signed variants to
+//!   reproduce the same ban evidence the full mesh would have produced.
+//!   [`EquivocationTracker`] records first-seen digests per slot at the
+//!   protocol layer and flags any signed contradiction as ban evidence.
+//!
+//! [`OwnerMap::derive`]: crate::coordinator::partition::OwnerMap::derive
 
 use std::collections::HashMap;
 
 use super::{Envelope, PeerId};
-use crate::crypto::sha256;
+use crate::crypto::{sha256, sha256_parts};
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Deterministic broadcast overlay
+// ---------------------------------------------------------------------------
+
+/// The gossip relay graph for one membership epoch: who dials whom for
+/// broadcast traffic. Derived identically by every peer from pure config
+/// data; see the module docs for the construction.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Overlay {
+    /// Epoch roster, sorted and deduplicated.
+    members: Vec<PeerId>,
+    /// `out[i]` = out-neighbours of `members[i]`, in relay order.
+    out: Vec<Vec<PeerId>>,
+}
+
+impl Overlay {
+    /// Derive the epoch's relay graph: a **pure function of the epoch
+    /// roster, seed, epoch index, and fanout** — independent of input
+    /// order, execution model, worker count, or the path by which the
+    /// roster was reached (property-pinned like `OwnerMap::derive`).
+    pub fn derive(live: &[PeerId], global_seed: u64, epoch: u64, fanout: usize) -> Overlay {
+        assert!(!live.is_empty(), "cannot derive an overlay for an empty roster");
+        let mut roster: Vec<PeerId> = live.to_vec();
+        roster.sort_unstable();
+        roster.dedup();
+        let n = roster.len();
+
+        let mut seed_input: Vec<u8> = Vec::with_capacity(24 + n * 8);
+        seed_input.extend_from_slice(&global_seed.to_le_bytes());
+        seed_input.extend_from_slice(&epoch.to_le_bytes());
+        seed_input.extend_from_slice(&(fanout as u64).to_le_bytes());
+        for &p in &roster {
+            seed_input.extend_from_slice(&(p as u64).to_le_bytes());
+        }
+        let digest = sha256_parts(&[b"btard-overlay", &seed_input]);
+        let mut rng = Rng::from_digest(&digest);
+        let mut ring = roster.clone();
+        rng.shuffle(&mut ring);
+
+        // ring position of each member (indexed like `roster`).
+        let mut pos = vec![0usize; n];
+        for (i, &p) in ring.iter().enumerate() {
+            if let Ok(k) = roster.binary_search(&p) {
+                pos[k] = i;
+            }
+        }
+
+        let mut out = Vec::with_capacity(n);
+        for member in 0..n {
+            let i = pos[member];
+            let mut nbrs: Vec<PeerId> = Vec::new();
+            let mut stride = 1usize;
+            while stride < n && nbrs.len() < fanout {
+                let cand = ring[(i + stride) % n];
+                if cand != roster[member] && !nbrs.contains(&cand) {
+                    nbrs.push(cand);
+                }
+                stride *= 2;
+            }
+            out.push(nbrs);
+        }
+        Overlay { members: roster, out }
+    }
+
+    /// The epoch roster (sorted).
+    pub fn members(&self) -> &[PeerId] {
+        &self.members
+    }
+
+    pub fn contains(&self, id: PeerId) -> bool {
+        self.members.binary_search(&id).is_ok()
+    }
+
+    /// Peers `id` dials and relays broadcasts to. Empty for non-members.
+    pub fn out_neighbors(&self, id: PeerId) -> &[PeerId] {
+        match self.members.binary_search(&id) {
+            Ok(k) => &self.out[k],
+            Err(_) => &[],
+        }
+    }
+
+    /// Peers expected to dial `id` (the inverse edge set) — what the
+    /// accept side of a gossip mesh build waits for.
+    pub fn in_neighbors(&self, id: PeerId) -> Vec<PeerId> {
+        let mut v: Vec<PeerId> = self
+            .members
+            .iter()
+            .zip(self.out.iter())
+            .filter(|(_, nbrs)| nbrs.contains(&id))
+            .map(|(&m, _)| m)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Max out-degree across the roster (the bench's link-count claim).
+    pub fn max_out_degree(&self) -> usize {
+        self.out.iter().map(Vec::len).max().unwrap_or(0)
+    }
+}
+
+/// The overlays of every membership epoch, precomputed from config data
+/// so relays at step `s` use the epoch that contains `s` — overlays are
+/// **not** re-derived on bans, which are timing-dependent; robustness to
+/// dead relays comes from the redundant strides instead.
+#[derive(Clone, Debug)]
+pub struct OverlaySchedule {
+    /// `(first_step, overlay)`, sorted by `first_step`; entry 0 is step 0.
+    epochs: Vec<(u64, Overlay)>,
+}
+
+impl OverlaySchedule {
+    /// Build from the epoch table: `(first_step, live roster)` per epoch.
+    /// The first entry must start at step 0.
+    pub fn derive(
+        epochs: &[(u64, Vec<PeerId>)],
+        global_seed: u64,
+        fanout: usize,
+    ) -> OverlaySchedule {
+        assert!(!epochs.is_empty(), "overlay schedule needs at least one epoch");
+        assert_eq!(epochs[0].0, 0, "overlay epoch table must start at step 0");
+        let built = epochs
+            .iter()
+            .enumerate()
+            .map(|(e, (start, live))| (*start, Overlay::derive(live, global_seed, e as u64, fanout)))
+            .collect();
+        OverlaySchedule { epochs: built }
+    }
+
+    /// The overlay governing broadcasts at `step`.
+    pub fn overlay_at(&self, step: u64) -> &Overlay {
+        let i = match self.epochs.binary_search_by_key(&step, |&(s, _)| s) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        &self.epochs[i].1
+    }
+
+    /// Union of out-neighbours across all epochs — the links a peer may
+    /// ever need to dial for relaying (the mesh build dials epoch 0's;
+    /// later epochs' form lazily at the boundary).
+    pub fn all_out_neighbors(&self, id: PeerId) -> Vec<PeerId> {
+        let mut v: Vec<PeerId> = self
+            .epochs
+            .iter()
+            .flat_map(|(_, o)| o.out_neighbors(id).iter().copied())
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Relay-once dedup (transport layer)
+// ---------------------------------------------------------------------------
+
+/// What a relay should do with an observed broadcast.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Seen {
+    /// First sighting of this payload for its (origin, step, slot):
+    /// deliver locally and relay to the overlay out-neighbours.
+    First,
+    /// Byte-identical to a payload already seen for this key: drop.
+    Duplicate,
+    /// A *different* payload for a key that already has one — signed
+    /// equivocation. Deliver **and relay** anyway: every honest peer
+    /// must observe both variants to produce the same ban evidence the
+    /// full mesh would have (`distinct_variants` semantics).
+    Contradiction(Equivocation),
+}
+
+/// Payload variants remembered per (origin, step, slot). Two is enough
+/// to convict; the cap bounds memory against a Byzantine origin flooding
+/// unlimited variants (it is banned long before the cap matters).
+const MAX_VARIANTS: usize = 4;
+
+/// The transport-side relay-once filter: tracks every payload digest per
+/// (origin, step, slot) so each distinct variant crosses each overlay
+/// edge at most once. Lives inside the socket engine; the protocol-level
+/// [`EquivocationTracker`] in the step machine stays the adjudication
+/// source of truth.
+#[derive(Default)]
+pub struct RelayTracker {
+    seen: HashMap<(PeerId, u64, u32), Vec<[u8; 32]>>,
+}
+
+impl RelayTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Classify a broadcast envelope. Non-broadcast envelopes are never
+    /// relayed and are not tracked; they classify as [`Seen::First`].
+    pub fn observe(&mut self, env: &Envelope) -> Seen {
+        if !env.broadcast {
+            return Seen::First;
+        }
+        self.observe_digest(env.from, env.step, env.slot, sha256(&env.payload))
+    }
+
+    /// Digest-level entry point: the origin calls this at broadcast time
+    /// to mark its own payloads seen, so copies echoed back through the
+    /// overlay are dropped instead of re-relayed.
+    pub fn observe_digest(&mut self, from: PeerId, step: u64, slot: u32, digest: [u8; 32]) -> Seen {
+        let variants = self.seen.entry((from, step, slot)).or_default();
+        if variants.contains(&digest) {
+            return Seen::Duplicate;
+        }
+        if variants.len() >= MAX_VARIANTS {
+            // Flooding origin: stop relaying new variants; evidence for a
+            // ban has long been on every honest peer's wire.
+            return Seen::Duplicate;
+        }
+        let first = variants.is_empty();
+        variants.push(digest);
+        if first {
+            Seen::First
+        } else {
+            Seen::Contradiction(Equivocation { peer: from, step, slot })
+        }
+    }
+
+    /// Drop state from steps older than `horizon` (bounded memory).
+    pub fn gc(&mut self, current_step: u64, horizon: u64) {
+        self.seen
+            .retain(|&(_, step, _), _| step + horizon >= current_step);
+    }
+
+    pub fn len(&self) -> usize {
+        self.seen.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seen.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Protocol-level equivocation evidence
+// ---------------------------------------------------------------------------
 
 /// Evidence that a peer equivocated: two distinct signed payloads for the
 /// same broadcast slot.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Equivocation {
     pub peer: PeerId,
     pub step: u64,
@@ -127,5 +391,187 @@ mod tests {
         }
         t.gc(100, 10);
         assert!(t.len() <= 11);
+    }
+
+    // -- RelayTracker -------------------------------------------------------
+
+    #[test]
+    fn relay_first_then_duplicate() {
+        let mut t = RelayTracker::new();
+        let e = env(1, 0, slots::GRAD_COMMIT, vec![1, 2]);
+        assert_eq!(t.observe(&e), Seen::First);
+        assert_eq!(t.observe(&e), Seen::Duplicate);
+        assert_eq!(t.observe(&e), Seen::Duplicate);
+    }
+
+    #[test]
+    fn relay_contradiction_still_relayed_once_per_variant() {
+        let mut t = RelayTracker::new();
+        assert_eq!(t.observe(&env(1, 0, slots::GRAD_COMMIT, vec![1])), Seen::First);
+        match t.observe(&env(1, 0, slots::GRAD_COMMIT, vec![2])) {
+            Seen::Contradiction(ev) => {
+                assert_eq!(ev.peer, 1);
+                assert_eq!(ev.step, 0);
+            }
+            other => panic!("expected contradiction, got {other:?}"),
+        }
+        // Each variant relays at most once: re-observing either is a dup.
+        assert_eq!(t.observe(&env(1, 0, slots::GRAD_COMMIT, vec![1])), Seen::Duplicate);
+        assert_eq!(t.observe(&env(1, 0, slots::GRAD_COMMIT, vec![2])), Seen::Duplicate);
+    }
+
+    #[test]
+    fn relay_variant_cap_bounds_flooding() {
+        let mut t = RelayTracker::new();
+        let mut relayed = 0;
+        for v in 0u8..50 {
+            match t.observe(&env(1, 0, slots::GRAD_COMMIT, vec![v])) {
+                Seen::Duplicate => {}
+                _ => relayed += 1,
+            }
+        }
+        assert_eq!(relayed, MAX_VARIANTS);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn relay_p2p_not_tracked() {
+        let mut t = RelayTracker::new();
+        let mut e = env(1, 0, slots::GRAD_PART, vec![1]);
+        e.broadcast = false;
+        assert_eq!(t.observe(&e), Seen::First);
+        assert_eq!(t.observe(&e), Seen::First);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn relay_origin_premark_drops_echo() {
+        let mut t = RelayTracker::new();
+        let e = env(3, 5, slots::GRAD_COMMIT, vec![9, 9]);
+        let d = sha256(&e.payload);
+        assert_eq!(t.observe_digest(3, 5, slots::GRAD_COMMIT, d), Seen::First);
+        // The same broadcast echoed back through the overlay: dropped.
+        assert_eq!(t.observe(&e), Seen::Duplicate);
+    }
+
+    #[test]
+    fn relay_gc_bounds_memory() {
+        let mut t = RelayTracker::new();
+        for step in 0..100 {
+            t.observe(&env(1, step, slots::GRAD_COMMIT, vec![1]));
+        }
+        t.gc(100, 10);
+        assert!(t.len() <= 11);
+    }
+
+    // -- Overlay ------------------------------------------------------------
+
+    #[test]
+    fn overlay_derive_is_a_pure_function_of_roster_and_seed() {
+        let live = vec![0usize, 2, 3, 5, 7, 8, 11];
+        let a = Overlay::derive(&live, 42, 3, 8);
+        let b = Overlay::derive(&live, 42, 3, 8);
+        assert_eq!(a, b);
+        // Input order must not matter: the roster is a set.
+        let mut shuffled = live.clone();
+        shuffled.reverse();
+        let c = Overlay::derive(&shuffled, 42, 3, 8);
+        assert_eq!(a, c);
+        // Duplicates must not matter either.
+        let mut dup = live.clone();
+        dup.extend_from_slice(&live);
+        let d = Overlay::derive(&dup, 42, 3, 8);
+        assert_eq!(a, d);
+        // Different epoch or seed ⇒ (generally) a different graph.
+        let e = Overlay::derive(&live, 42, 4, 8);
+        let f = Overlay::derive(&live, 43, 3, 8);
+        assert!(a != e || a != f);
+    }
+
+    #[test]
+    fn overlay_degrees_are_logarithmic_and_symmetric() {
+        for n in [2usize, 3, 5, 8, 64, 512] {
+            let live: Vec<PeerId> = (0..n).collect();
+            let fanout = 8;
+            let o = Overlay::derive(&live, 7, 0, fanout);
+            let log2 = usize::BITS as usize - (n - 1).leading_zeros() as usize;
+            for &p in &live {
+                let out = o.out_neighbors(p);
+                assert!(!out.is_empty(), "n={n} peer {p} has no out-neighbours");
+                assert!(out.len() <= fanout.min(log2.max(1)), "n={n} out-degree {}", out.len());
+                assert!(!out.contains(&p), "self-loop at {p}");
+            }
+            // Stride symmetry: total in-degree == total out-degree, and
+            // every peer has at least one in-neighbour (someone reaches it).
+            let total_out: usize = live.iter().map(|&p| o.out_neighbors(p).len()).sum();
+            let total_in: usize = live.iter().map(|&p| o.in_neighbors(p).len()).sum();
+            assert_eq!(total_out, total_in);
+            for &p in &live {
+                assert!(!o.in_neighbors(p).is_empty(), "n={n} peer {p} unreachable");
+            }
+        }
+    }
+
+    /// Flood from every origin over the overlay with one crashed relay:
+    /// every live peer must still receive the broadcast (the +1/+2
+    /// strides route around any single dead node).
+    #[test]
+    fn overlay_floods_reach_everyone_with_a_crashed_relay() {
+        for n in [3usize, 4, 8, 17, 64] {
+            let live: Vec<PeerId> = (0..n).collect();
+            let o = Overlay::derive(&live, 13, 1, 8);
+            for crashed in 0..n {
+                for origin in 0..n {
+                    if origin == crashed {
+                        continue;
+                    }
+                    let mut reached = vec![false; n];
+                    reached[origin] = true;
+                    let mut frontier = vec![origin];
+                    while let Some(p) = frontier.pop() {
+                        for &q in o.out_neighbors(p) {
+                            if q != crashed && !reached[q] {
+                                reached[q] = true;
+                                frontier.push(q);
+                            }
+                        }
+                    }
+                    for p in 0..n {
+                        assert!(
+                            p == crashed || reached[p],
+                            "n={n}: {origin} cannot reach {p} around crashed {crashed}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlay_two_peers_link_each_other() {
+        let o = Overlay::derive(&[4, 9], 1, 0, 8);
+        assert_eq!(o.out_neighbors(4), &[9]);
+        assert_eq!(o.out_neighbors(9), &[4]);
+    }
+
+    #[test]
+    fn overlay_schedule_selects_epoch_by_step() {
+        let epochs = vec![
+            (0u64, vec![0usize, 1, 2]),
+            (3u64, vec![0usize, 1, 2, 3]),
+            (6u64, vec![0usize, 1, 3]),
+        ];
+        let s = OverlaySchedule::derive(&epochs, 7, 8);
+        assert_eq!(s.overlay_at(0).members(), &[0, 1, 2]);
+        assert_eq!(s.overlay_at(2).members(), &[0, 1, 2]);
+        assert_eq!(s.overlay_at(3).members(), &[0, 1, 2, 3]);
+        assert_eq!(s.overlay_at(5).members(), &[0, 1, 2, 3]);
+        assert_eq!(s.overlay_at(6).members(), &[0, 1, 3]);
+        assert_eq!(s.overlay_at(1000).members(), &[0, 1, 3]);
+        // Union of dialable relay links across the run.
+        let all = s.all_out_neighbors(0);
+        for &p in &all {
+            assert!(p != 0);
+        }
     }
 }

@@ -647,12 +647,11 @@ impl Transport for SimNet {
 pub fn build_transports(
     n: usize,
     key_seed: u64,
-    gossip_fanout: u64,
     verify_signatures: bool,
     profile: &NetworkProfile,
     run_seed: u64,
 ) -> Vec<Box<dyn Transport>> {
-    let cluster = build_cluster(n, key_seed, gossip_fanout, verify_signatures);
+    let cluster = build_cluster(n, key_seed, verify_signatures);
     if profile.is_perfect() {
         return cluster.into_iter().map(|p| Box::new(p) as Box<dyn Transport>).collect();
     }
@@ -762,7 +761,7 @@ mod tests {
         let mut profile = NetworkProfile::perfect();
         profile.name = "deadlink".to_string();
         profile.faulty_links = vec![(1, 0)];
-        let mut cluster = build_transports(2, 700, 8, true, &profile, 5);
+        let mut cluster = build_transports(2, 700, true, &profile, 5);
         let mut p1 = cluster.pop().unwrap();
         let mut p0 = cluster.pop().unwrap();
         p0.set_recv_mode(RecvMode::Drain);
@@ -783,7 +782,7 @@ mod tests {
         profile.partition_peers = vec![1];
         profile.partition_start = 0;
         profile.partition_end = 2;
-        let mut cluster = build_transports(2, 800, 8, true, &profile, 5);
+        let mut cluster = build_transports(2, 800, true, &profile, 5);
         let mut p1 = cluster.pop().unwrap();
         let mut p0 = cluster.pop().unwrap();
         p0.set_recv_mode(RecvMode::Drain);
@@ -810,7 +809,7 @@ mod tests {
         profile.straggler_peers = vec![1];
         profile.straggle_p = 1.0 - 1e-9;
         profile.late_phases = 2;
-        let mut cluster = build_transports(2, 900, 8, true, &profile, 5);
+        let mut cluster = build_transports(2, 900, true, &profile, 5);
         let mut p1 = cluster.pop().unwrap();
         let mut p0 = cluster.pop().unwrap();
         p0.set_recv_mode(RecvMode::Drain);

@@ -31,20 +31,47 @@
 //!   a socket the victim never reads from, so nothing can be lost.
 //!   When signature verification is on, the HELLO itself is signed with
 //!   the sender's roster key (so an impostor cannot claim another
-//!   peer's link), and a reader thread additionally drops any frame
-//!   whose `from` does not match the link's authenticated peer. With
-//!   verification off (`--no-sigs`, a benchmarking mode) nothing on the
-//!   wire is authenticated — by construction, not oversight.
-//! - **Shared delivery semantics.** Each link gets a reader thread that
-//!   decodes frames into the same mpsc mailbox the in-process fabric
-//!   uses, behind the same [`Inbox`]: signature gating, the canonical
-//!   `(step, slot, from)` pending order, keyed binary-search collects and
-//!   the logical phase clock all survive the wire unchanged. A socket
-//!   peer therefore runs the *blocking* receive mode of the threaded
-//!   execution model (there is no cross-process stage barrier to make
-//!   drain mode's never-block contract sound), and the threaded path is
-//!   bit-identical to the pooled one — which is how a multi-process
-//!   cluster reproduces the in-process golden digest bit-for-bit
+//!   peer's link), and the event loop additionally drops any
+//!   point-to-point frame whose `from` does not match the link's
+//!   authenticated peer. With verification off (`--no-sigs`, a
+//!   benchmarking mode) nothing on the wire is authenticated — by
+//!   construction, not oversight.
+//! - **Event-loop engine.** One I/O thread per endpoint owns every
+//!   socket: the listener, all inbound links (each with its
+//!   [`FrameReader`] as per-link decode state), all outbound links
+//!   (non-blocking, buffered, POLLOUT-driven) and every session-MAC
+//!   send counter, multiplexed with poll(2). The driver thread signs
+//!   envelopes and queues commands; handshakes and lazy dials run on
+//!   short-lived bounded helper threads. Threads and fds stay O(1) per
+//!   endpoint plus O(open links) — not O(n) threads — which is what
+//!   lets a 512-peer loopback cluster fit in an ordinary process
+//!   budget.
+//! - **Gossip broadcast overlay** (`SocketConfig::gossip`). Broadcasts
+//!   ride a deterministic relay graph derived per membership epoch as a
+//!   pure function of (roster, seed, fanout) — see
+//!   [`super::gossip::Overlay`]. Each endpoint writes a broadcast to
+//!   its O(min(fanout, log n)) overlay out-neighbours; receivers relay
+//!   the first copy of each distinct (origin, step, slot, digest) once,
+//!   never back to the origin, so per-peer broadcast bytes drop from
+//!   O(n) to O(fanout·log n). Contradictory variants (equivocation
+//!   attempts) are relayed too — capped per key — so ban evidence
+//!   reaches every honest peer exactly as the full mesh would have
+//!   delivered it. Adjudication-bound slots keep their transferable
+//!   Schnorr envelope signatures through relays: the link authenticates
+//!   the relayer, the envelope signature authenticates the origin, and
+//!   a forged relay dies at the Inbox's signature gate. Point-to-point
+//!   slots (gradient parts, snapshots) dial direct links lazily as
+//!   before.
+//! - **Shared delivery semantics.** The loop decodes frames into the
+//!   same mpsc mailbox the in-process fabric uses, behind the same
+//!   [`Inbox`]: signature gating, the canonical `(step, slot, from)`
+//!   pending order, keyed binary-search collects and the logical phase
+//!   clock all survive the wire unchanged. A socket peer therefore runs
+//!   the *blocking* receive mode of the threaded execution model (there
+//!   is no cross-process stage barrier to make drain mode's never-block
+//!   contract sound), and the threaded path is bit-identical to the
+//!   pooled one — which is how a multi-process cluster (full-mesh *or*
+//!   gossip) reproduces the in-process golden digest bit-for-bit
 //!   (`harness::cluster`, `rust/tests/socket_transport.rs`).
 //!
 //! Simulation-grade caveats, deliberate and documented: per-peer keys are
@@ -57,16 +84,20 @@
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use super::auth::{MessageAuth, NoAuth, SchnorrAuth, SessionAuth};
+use super::gossip::{OverlaySchedule, RelayTracker, Seen};
 use super::local::{distinct_variants, ClusterInfo, Inbox};
 use super::{Envelope, MsgClass, PeerId, RecvError, RecvMode, TrafficStats, Transport};
 use crate::crypto::{
-    hmac_sha256, keygen, shared_secret, sign, verify, Mont, PublicKey, SecretKey, Signature,
+    hmac_sha256, keygen, sha256, shared_secret, sign, verify, Mont, PublicKey, SecretKey,
+    Signature,
 };
 use crate::util::json::Json;
 use crate::util::{hex, unhex};
@@ -666,7 +697,24 @@ pub fn bind_ephemeral() -> std::io::Result<(TcpListener, String)> {
 /// Socket-level knobs (the protocol-level ones stay in `RunConfig`).
 #[derive(Clone, Debug)]
 pub struct SocketConfig {
+    /// Overlay out-degree cap in gossip mode (effective out-degree is
+    /// `min(fanout, ⌈log₂ n⌉)` — see [`Overlay::derive`]). Ignored by
+    /// the full-mesh dissemination mode.
     pub gossip_fanout: u64,
+    /// Route broadcast traffic through the deterministic gossip overlay
+    /// instead of writing every broadcast to every peer: per-peer link
+    /// count and broadcast wire bytes drop from O(n) to
+    /// O(fanout·log n). Point-to-point slots dial direct links lazily
+    /// either way.
+    pub gossip: bool,
+    /// Roster timeline for the overlay, one entry per membership epoch:
+    /// `(first step, live peer set)`, first entry at step 0. Empty means
+    /// a single static epoch of all founding members. Pure config data —
+    /// every peer derives the identical overlay schedule from it.
+    pub overlay_epochs: Vec<(u64, Vec<PeerId>)>,
+    /// Seed the overlay derivation mixes in (the run seed, so different
+    /// runs relay along different graphs).
+    pub overlay_seed: u64,
     pub verify_signatures: bool,
     /// Negotiate per-link session MACs after the signed HELLO: bulk
     /// payload frames (`GRAD_PART` / `AGG_PART`) ride an HMAC-SHA256
@@ -693,6 +741,9 @@ impl Default for SocketConfig {
     fn default() -> Self {
         SocketConfig {
             gossip_fanout: 8,
+            gossip: false,
+            overlay_epochs: vec![],
+            overlay_seed: 0,
             verify_signatures: true,
             session_mac: false,
             connect_timeout: Duration::from_secs(30),
@@ -874,74 +925,161 @@ pub(crate) fn admit_frame(frame: Frame, link_peer: PeerId) -> Option<Envelope> {
     }
 }
 
-/// Per-link reader: decode frames into the shared mailbox until the
-/// connection closes or misbehaves. Runs with no read timeout — the
-/// protocol's own receive timeouts decide when silence becomes a
-/// violation.
-fn reader_loop(
-    mut stream: TcpStream,
-    mut fr: FrameReader,
-    link_peer: PeerId,
-    tx: Sender<Envelope>,
-) {
-    let _ = stream.set_read_timeout(None);
-    let mut buf = [0u8; 65536];
+// ---------------------------------------------------------------------------
+// The event-loop engine
+// ---------------------------------------------------------------------------
+//
+// One I/O thread per endpoint owns every link: the listener, all inbound
+// (receive-only) connections, all outbound (send-only) connections, the
+// gossip relay state and every session-MAC send counter. The driver
+// thread signs envelopes and queues `IoCmd`s; the loop multiplexes the
+// sockets with poll(2). Replacing the per-link reader threads, this is
+// what keeps a 512-peer loopback cluster inside the thread budget:
+// threads are O(1) per endpoint, not O(n).
+
+// poll(2), declared directly — the crate is std-only (no libc). `nfds_t`
+// is C `unsigned long`, i.e. u64 on every 64-bit Unix this targets.
+#[repr(C)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: u64, timeout_ms: i32) -> i32;
+}
+
+/// EINTR-retrying poll(2). HUP/ERR conditions surface through `revents`
+/// of the fd they hit; the loop handles them by attempting the I/O and
+/// observing the failure.
+fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> usize {
     loop {
-        // Drain every complete frame already buffered (the handshake may
-        // have left some) before touching the socket again.
-        loop {
-            match fr.next_frame() {
-                Ok(Some(frame)) => match admit_frame(frame, link_peer) {
-                    Some(env) => {
-                        if tx.send(env).is_err() {
-                            return; // endpoint dropped — we're shutting down
-                        }
-                    }
-                    None => {
-                        // Spoofed sender or post-handshake HELLO: the link
-                        // is hostile or corrupt; close it. The protocol
-                        // sees the peer as silent and ELIMINATEs it.
-                        let _ = stream.shutdown(Shutdown::Both);
-                        return;
-                    }
-                },
-                Ok(None) => break,
-                Err(_) => {
-                    let _ = stream.shutdown(Shutdown::Both);
-                    return;
-                }
-            }
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, timeout_ms) };
+        if rc >= 0 {
+            return rc as usize;
         }
-        match stream.read(&mut buf) {
-            Ok(0) => return, // EOF: peer exited (banned / finished)
-            Ok(k) => fr.feed(&buf[..k]),
-            Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            Err(_) => return,
+        let err = std::io::Error::last_os_error();
+        if err.kind() != ErrorKind::Interrupted {
+            // EFAULT/EINVAL would be a bug; degrade to a timed sleep
+            // rather than spinning hot on the error.
+            thread::sleep(Duration::from_millis(10));
+            return 0;
         }
     }
 }
 
-/// Mutable inbound-link state shared between the mesh build, the
-/// background acceptor (dynamic-membership runs keep accepting after the
-/// build — a roster-epoch addition's link arrives mid-run) and `Drop`.
-struct InboundState {
-    /// Which peer slots have an installed inbound link (first claim
-    /// wins; duplicates — replayed HELLOs, bugs — are dropped).
-    seen: Vec<bool>,
-    /// Shutdown handles for the inbound (receive-only) links, so `Drop`
-    /// can unblock the reader threads before joining them.
-    inbound: Vec<TcpStream>,
-    readers: Vec<thread::JoinHandle<()>>,
+/// Wakes the event loop out of poll(2): one byte down a socketpair the
+/// loop always polls. Both ends are non-blocking — a full pipe means a
+/// wake is already pending, which is all a waker must guarantee.
+struct LoopWaker {
+    tx: UnixStream,
 }
 
-struct InboundTable {
-    state: Mutex<InboundState>,
-    shutdown: std::sync::atomic::AtomicBool,
+impl LoopWaker {
+    fn wake(&self) {
+        let _ = (&self.tx).write(&[1u8]);
+    }
 }
 
-/// Everything a handshake thread needs to validate and install one
-/// inbound connection on its own (the build loop and the background
-/// acceptor spawn identical threads).
+/// Commands the driver half (and its short-lived helper threads) queue
+/// for the I/O loop, each paired with a `LoopWaker` poke.
+enum IoCmd {
+    /// Write one point-to-point envelope frame (lazy-dialing the link).
+    Send { to: PeerId, fields: Vec<u8> },
+    /// Disseminate a broadcast this endpoint originated: full mesh
+    /// writes it to every admitted peer, gossip mode to the overlay
+    /// out-neighbours (pre-marking `digest` so echoes are not re-relayed).
+    Broadcast { step: u64, slot: u32, digest: [u8; 32], fields: Vec<u8> },
+    /// A handshake thread validated an inbound connection.
+    Inbound { peer: PeerId, stream: TcpStream, fr: FrameReader },
+    /// A dial thread finished a lazy outbound connect.
+    DialDone { to: PeerId, result: Result<TcpStream, String> },
+    /// Begin teardown: flush what a bounded budget allows, FIN every
+    /// outbound link, close every inbound link, exit.
+    Shutdown,
+}
+
+/// Link bookkeeping shared between the loop and the driver: the mesh
+/// build blocks on expected inbound links, and benches read open-link
+/// counts (the overlay's point is that they stay O(fanout), not O(n)).
+struct LinkGauge {
+    state: Mutex<GaugeState>,
+    cond: Condvar,
+}
+
+struct GaugeState {
+    /// Peers that have (ever) had an inbound link installed — first
+    /// claim wins, so this never un-sets.
+    seen_in: Vec<bool>,
+    open_in: usize,
+    open_out: usize,
+}
+
+impl LinkGauge {
+    fn new(n: usize) -> LinkGauge {
+        LinkGauge {
+            state: Mutex::new(GaugeState { seen_in: vec![false; n], open_in: 0, open_out: 0 }),
+            cond: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, GaugeState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// Outbound (send-only) link lifecycle. Nothing is ever read from these
+/// sockets — the unidirectional-link rationale in the module docs.
+enum OutLink {
+    /// Never dialed: a lazy point-to-point link, or an overlay
+    /// non-neighbour.
+    Absent,
+    /// A dial thread is in flight; frames queue behind the HELLO.
+    Dialing { queued: Vec<u8> },
+    /// Connected (non-blocking); unflushed bytes wait for POLLOUT.
+    Open { stream: TcpStream, pending: Vec<u8>, sent: usize },
+    /// One failed dial or write marks the link dead for good (the
+    /// protocol's timeout/ELIMINATE machinery owns unreachable peers).
+    Dead,
+}
+
+struct InLink {
+    stream: TcpStream,
+    fr: FrameReader,
+}
+
+/// Gossip-mode state: the per-epoch overlays (a pure function of
+/// config, identical at every peer) and the relay-once tracker.
+struct RelayState {
+    schedule: OverlaySchedule,
+    tracker: RelayTracker,
+    /// High-water step, for GC'ing the tracker.
+    max_step: u64,
+}
+
+/// What each pollfd the loop registered refers to.
+enum FdTag {
+    Waker,
+    Listener,
+    In(PeerId),
+    Out(PeerId),
+}
+
+/// How many steps relay-tracker entries outlive their step (matches the
+/// inbox's tolerance for stragglers; bounds tracker memory).
+const RELAY_GC_HORIZON: u64 = 8;
+
+/// Teardown grace: how long the loop keeps flushing queued outbound
+/// bytes after `Shutdown` before closing the links anyway.
+const SHUTDOWN_FLUSH_BUDGET: Duration = Duration::from_secs(5);
+
+/// Everything a handshake thread needs to validate one inbound
+/// connection on its own and hand the authenticated link to the event
+/// loop.
 struct HandshakeCtx {
     me: PeerId,
     roster: Roster,
@@ -958,14 +1096,15 @@ struct HandshakeCtx {
     /// the static-static DH shared secret with the link peer.
     secret: SecretKey,
     max_frame: usize,
-    table: Arc<InboundTable>,
-    mailbox: Sender<Envelope>,
+    cmd_tx: Sender<IoCmd>,
+    waker: Arc<LoopWaker>,
 }
 
 /// Validate an inbound connection's HELLO on a short-lived thread and,
-/// on success, install its reader into the shared table. A silent,
-/// garbage or stale connection burns only its own HELLO_SLICE — never
-/// the accept loop (stray probes must not be able to deny service).
+/// on success, hand the authenticated link to the event loop
+/// (`IoCmd::Inbound`). A silent, garbage or stale connection burns only
+/// its own HELLO_SLICE — never the accept path (stray probes must not
+/// be able to deny service).
 fn spawn_handshake(ctx: Arc<HandshakeCtx>, stream: TcpStream, hard_deadline: Instant) {
     let hello_deadline = (Instant::now() + HELLO_SLICE).min(hard_deadline);
     let name = format!("sock-handshake-{}", ctx.me);
@@ -1003,60 +1142,14 @@ fn spawn_handshake(ctx: Arc<HandshakeCtx>, stream: TcpStream, hard_deadline: Ins
         });
         match result {
             Ok((h, fr)) => {
-                let mut state = ctx.table.state.lock().unwrap_or_else(|p| p.into_inner());
-                if ctx.table.shutdown.load(std::sync::atomic::Ordering::SeqCst) {
-                    // The endpoint is tearing down: installing a reader
-                    // now would leak an unjoinable thread.
-                    let _ = stream.shutdown(Shutdown::Both);
-                    return;
-                }
-                if state.seen[h.id] {
-                    eprintln!(
-                        "socket mesh (peer {}): dropping duplicate connection claiming peer {}",
-                        ctx.me, h.id
-                    );
-                    let _ = stream.shutdown(Shutdown::Both);
-                    return;
-                }
-                if let Err(e) = stream.set_read_timeout(None) {
-                    eprintln!(
-                        "socket mesh (peer {}): dropping peer {}'s link (read-timeout \
-                         reset failed): {e}",
-                        ctx.me, h.id
-                    );
-                    let _ = stream.shutdown(Shutdown::Both);
-                    return;
-                }
-                let read_half = match stream.try_clone() {
-                    Ok(s) => s,
-                    Err(e) => {
-                        eprintln!(
-                            "socket mesh (peer {}): dropping peer {}'s link (fd clone \
-                             failed): {e}",
-                            ctx.me, h.id
-                        );
-                        let _ = stream.shutdown(Shutdown::Both);
-                        return;
-                    }
-                };
-                let link_tx = ctx.mailbox.clone();
-                let peer = h.id;
-                let reader_name = format!("sock-reader-{}-from-{peer}", ctx.me);
-                match thread::Builder::new()
-                    .name(reader_name)
-                    .spawn(move || reader_loop(read_half, fr, peer, link_tx))
-                {
-                    Ok(handle) => {
-                        state.seen[h.id] = true;
-                        state.inbound.push(stream);
-                        state.readers.push(handle);
-                    }
-                    Err(e) => {
-                        eprintln!(
-                            "socket mesh (peer {}): spawning reader thread: {e}",
-                            ctx.me
-                        );
-                        let _ = stream.shutdown(Shutdown::Both);
+                match ctx.cmd_tx.send(IoCmd::Inbound { peer: h.id, stream, fr }) {
+                    Ok(()) => ctx.waker.wake(),
+                    Err(send_err) => {
+                        // The loop is gone (endpoint tore down while we
+                        // shook hands); close the orphaned socket.
+                        if let IoCmd::Inbound { stream, .. } = send_err.0 {
+                            let _ = stream.shutdown(Shutdown::Both);
+                        }
                     }
                 }
             }
@@ -1095,13 +1188,517 @@ fn dial_once(addr: &str, timeout: Duration) -> std::io::Result<TcpStream> {
     TcpStream::connect_timeout(&sa, timeout)
 }
 
+/// The endpoint's single I/O thread: owns every socket, every MAC send
+/// counter, and (in gossip mode) the relay state. Commands arrive from
+/// the driver over `cmd_rx`; everything else is poll(2)-driven.
+struct IoLoop {
+    me: PeerId,
+    info: Arc<ClusterInfo>,
+    listener: TcpListener,
+    hs_ctx: Arc<HandshakeCtx>,
+    cmd_rx: Receiver<IoCmd>,
+    /// Cloned into dial threads so their completions re-enter the loop.
+    cmd_tx: Sender<IoCmd>,
+    waker: Arc<LoopWaker>,
+    waker_rx: UnixStream,
+    /// Delivery into the shared [`Inbox`].
+    mailbox: Sender<Envelope>,
+    /// Roster addresses (lazy dials need them mid-run).
+    addrs: Vec<String>,
+    /// Pre-encoded per-recipient HELLO frames (the nonce binds the
+    /// link, so each recipient gets its own; empty at our own slot).
+    hellos: Vec<Vec<u8>>,
+    /// Per-peer join step (all zeros for a static roster).
+    join_steps: Vec<u64>,
+    /// Per-recipient session-MAC send state (us→peer key + counter).
+    /// Owned by the loop so relayed frames share the same per-link
+    /// counters as our own sends — no counter races, no gaps.
+    mac_send: Vec<Option<MacSend>>,
+    out: Vec<OutLink>,
+    inbound: Vec<Option<InLink>>,
+    relay: Option<RelayState>,
+    gauge: Arc<LinkGauge>,
+}
+
+impl IoLoop {
+    fn run(mut self) {
+        let mut running = true;
+        let mut flush_deadline = Instant::now(); // set when Shutdown arrives
+        let mut fds: Vec<PollFd> = Vec::new();
+        let mut tags: Vec<FdTag> = Vec::new();
+        loop {
+            // Commands first: they may have queued while we were busy,
+            // and handling them can arm new pollfds.
+            loop {
+                match self.cmd_rx.try_recv() {
+                    Ok(cmd) => {
+                        if matches!(cmd, IoCmd::Shutdown) && running {
+                            running = false;
+                            flush_deadline = Instant::now() + SHUTDOWN_FLUSH_BUDGET;
+                        }
+                        self.handle_cmd(cmd, running);
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        // Driver gone without a Shutdown (panic path):
+                        // tear down as if one had arrived.
+                        if running {
+                            running = false;
+                            flush_deadline = Instant::now() + SHUTDOWN_FLUSH_BUDGET;
+                        }
+                        break;
+                    }
+                }
+            }
+            if !running && (!self.flush_pending() || Instant::now() >= flush_deadline) {
+                break;
+            }
+            fds.clear();
+            tags.clear();
+            fds.push(PollFd { fd: self.waker_rx.as_raw_fd(), events: POLLIN, revents: 0 });
+            tags.push(FdTag::Waker);
+            if running {
+                fds.push(PollFd { fd: self.listener.as_raw_fd(), events: POLLIN, revents: 0 });
+                tags.push(FdTag::Listener);
+                for (p, link) in self.inbound.iter().enumerate() {
+                    if let Some(l) = link {
+                        fds.push(PollFd {
+                            fd: l.stream.as_raw_fd(),
+                            events: POLLIN,
+                            revents: 0,
+                        });
+                        tags.push(FdTag::In(p));
+                    }
+                }
+            }
+            for (p, o) in self.out.iter().enumerate() {
+                if let OutLink::Open { stream, pending, sent } = o {
+                    if pending.len() > *sent {
+                        fds.push(PollFd { fd: stream.as_raw_fd(), events: POLLOUT, revents: 0 });
+                        tags.push(FdTag::Out(p));
+                    }
+                }
+            }
+            // The 500ms ceiling is a safety net: a lost wake could only
+            // cost latency, never liveness. The drain phase polls fast
+            // against its flush deadline.
+            let timeout_ms = if running { 500 } else { 20 };
+            let _ = poll_fds(&mut fds, timeout_ms);
+            for (i, fd) in fds.iter().enumerate() {
+                if fd.revents == 0 {
+                    continue;
+                }
+                match tags[i] {
+                    FdTag::Waker => self.drain_waker(),
+                    FdTag::Listener => self.accept_ready(),
+                    FdTag::In(p) => self.service_inbound(p),
+                    FdTag::Out(p) => self.try_flush(p),
+                }
+            }
+        }
+        self.teardown();
+    }
+
+    fn handle_cmd(&mut self, cmd: IoCmd, running: bool) {
+        match cmd {
+            IoCmd::Send { to, fields } => {
+                if running {
+                    self.queue_frame(to, &fields, false);
+                }
+            }
+            IoCmd::Broadcast { step, slot, digest, fields } => {
+                if !running {
+                    return;
+                }
+                let targets: Vec<PeerId> = match &mut self.relay {
+                    Some(relay) => {
+                        // Pre-mark our own digest: an echo of this
+                        // broadcast arriving back over the overlay is a
+                        // Duplicate, not a fresh variant to relay.
+                        let _ = relay.tracker.observe_digest(self.me, step, slot, digest);
+                        if step > relay.max_step {
+                            relay.max_step = step;
+                            relay.tracker.gc(step, RELAY_GC_HORIZON);
+                        }
+                        relay.schedule.overlay_at(step).out_neighbors(self.me).to_vec()
+                    }
+                    None => (0..self.info.n_peers)
+                        .filter(|&to| to != self.me && step >= self.join_steps[to])
+                        .collect(),
+                };
+                for to in targets {
+                    self.queue_frame(to, &fields, false);
+                }
+            }
+            IoCmd::Inbound { peer, stream, fr } => self.install_inbound(peer, stream, fr, running),
+            IoCmd::DialDone { to, result } => self.dial_done(to, result),
+            IoCmd::Shutdown => {} // the state flip happened in the caller
+        }
+    }
+
+    fn install_inbound(&mut self, peer: PeerId, stream: TcpStream, fr: FrameReader, running: bool) {
+        if !running || self.inbound[peer].is_some() || stream.set_nonblocking(true).is_err() {
+            if self.inbound[peer].is_some() {
+                eprintln!(
+                    "socket mesh (peer {}): dropping duplicate connection claiming peer {peer}",
+                    self.me
+                );
+            }
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+        self.inbound[peer] = Some(InLink { stream, fr });
+        {
+            let mut g = self.gauge.lock();
+            g.seen_in[peer] = true;
+            g.open_in += 1;
+        }
+        self.gauge.cond.notify_all();
+        // The sender may have pipelined envelopes right behind its HELLO
+        // — they are already buffered inside `fr`; drain them now.
+        self.service_inbound(peer);
+    }
+
+    fn dial_done(&mut self, to: PeerId, result: Result<TcpStream, String>) {
+        let queued = match std::mem::replace(&mut self.out[to], OutLink::Dead) {
+            OutLink::Dialing { queued } => queued,
+            other => {
+                // Not dialing — a completion raced something else
+                // (should not happen); restore whatever was there.
+                self.out[to] = other;
+                return;
+            }
+        };
+        match result {
+            Ok(stream) => {
+                let _ = stream.set_nodelay(true);
+                if stream.set_nonblocking(true).is_err() {
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return; // slot is already Dead
+                }
+                self.out[to] = OutLink::Open { stream, pending: queued, sent: 0 };
+                self.gauge.lock().open_out += 1;
+                self.try_flush(to);
+            }
+            Err(e) => {
+                eprintln!("socket mesh (peer {}): late dial to peer {to} failed: {e}", self.me);
+                // The slot stays Dead and the queued frames are dropped,
+                // exactly like the old path's ignored write errors: the
+                // protocol's timeout/ELIMINATE machinery owns a peer
+                // that never comes up.
+            }
+        }
+    }
+
+    /// Queue one frame for `to`, dialing the link lazily on first use.
+    /// The MAC counter advances even when the link is dead or the write
+    /// later fails — a broken link never delivers later frames, so a
+    /// gap there is unobservable.
+    fn queue_frame(&mut self, to: PeerId, fields: &[u8], is_relay: bool) {
+        if to == self.me {
+            return;
+        }
+        let prefix = match &mut self.mac_send[to] {
+            Some(mac) => {
+                let prefix = mac_frame_prefix(fields, mac.next_seq, &mac.key);
+                mac.next_seq += 1;
+                prefix
+            }
+            None => {
+                let body_len = 1 + fields.len();
+                assert!(
+                    body_len <= u32::MAX as usize,
+                    "envelope payload too large for the frame codec"
+                );
+                let mut out = Vec::with_capacity(9);
+                out.extend_from_slice(&MAGIC);
+                out.extend_from_slice(&(body_len as u32).to_le_bytes());
+                out.push(KIND_ENVELOPE);
+                out
+            }
+        };
+        let frame_len = prefix.len() + fields.len();
+        if matches!(self.out[to], OutLink::Absent) {
+            // First frame to this peer: start the HELLO-prefixed dial.
+            let mut queued = Vec::with_capacity(self.hellos[to].len() + frame_len);
+            queued.extend_from_slice(&self.hellos[to]);
+            self.out[to] = OutLink::Dialing { queued };
+            self.spawn_dial(to);
+        }
+        let flush = match &mut self.out[to] {
+            // Dropped, like an ignored write error on the old path. The
+            // frame never reaches a wire, so the wire plane skips it.
+            OutLink::Dead | OutLink::Absent => return,
+            OutLink::Dialing { queued } => {
+                queued.extend_from_slice(&prefix);
+                queued.extend_from_slice(fields);
+                false
+            }
+            OutLink::Open { pending, .. } => {
+                pending.extend_from_slice(&prefix);
+                pending.extend_from_slice(fields);
+                true
+            }
+        };
+        if flush {
+            self.try_flush(to);
+        }
+        if is_relay {
+            self.info.stats.record_relay(self.me, frame_len);
+        } else {
+            self.info.stats.record_wire(self.me, frame_len);
+        }
+    }
+
+    /// One connect attempt on a short-lived thread: a healthy target
+    /// accepts instantly (its listener has been up since process start)
+    /// and a dead one must fail fast without stalling the loop — see
+    /// `LATE_DIAL_BUDGET`.
+    fn spawn_dial(&mut self, to: PeerId) {
+        let addr = self.addrs[to].clone();
+        let cmd_tx = self.cmd_tx.clone();
+        let waker = self.waker.clone();
+        let name = format!("sock-dial-{}-to-{to}", self.me);
+        let spawned = thread::Builder::new().name(name).spawn(move || {
+            let result = dial_once(&addr, LATE_DIAL_BUDGET).map_err(|e| e.to_string());
+            if cmd_tx.send(IoCmd::DialDone { to, result }).is_ok() {
+                waker.wake();
+            }
+        });
+        if let Err(e) = spawned {
+            eprintln!("socket mesh (peer {}): spawning dial thread: {e}", self.me);
+            self.out[to] = OutLink::Dead;
+        }
+    }
+
+    fn try_flush(&mut self, to: PeerId) {
+        let mut dead = false;
+        if let OutLink::Open { stream, pending, sent } = &mut self.out[to] {
+            while *sent < pending.len() {
+                match stream.write(&pending[*sent..]) {
+                    Ok(0) => {
+                        dead = true;
+                        break;
+                    }
+                    Ok(k) => *sent += k,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        // The remote was banned or finished early —
+                        // exactly like the perfect fabric's ignored
+                        // channel-send errors.
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+            if *sent == pending.len() {
+                pending.clear();
+                *sent = 0;
+            }
+        }
+        if dead {
+            self.out[to] = OutLink::Dead;
+            let mut g = self.gauge.lock();
+            g.open_out = g.open_out.saturating_sub(1);
+        }
+    }
+
+    /// Read and decode everything a link has ready. The link is taken
+    /// out of its slot while frames are handled (relaying borrows the
+    /// rest of `self`) and put back unless it died.
+    fn service_inbound(&mut self, peer: PeerId) {
+        let Some(mut link) = self.inbound[peer].take() else { return };
+        let mut alive = true;
+        let mut buf = [0u8; 65536];
+        'link: loop {
+            // Drain every complete frame already buffered before
+            // touching the socket again.
+            loop {
+                match link.fr.next_frame() {
+                    Ok(Some(frame)) => {
+                        if !self.handle_frame(peer, frame) {
+                            // Hostile or corrupt link: close it. The
+                            // protocol sees the peer as silent and
+                            // ELIMINATEs it.
+                            alive = false;
+                            break 'link;
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(_) => {
+                        // Malformed frame: connection-fatal, per the
+                        // codec contract.
+                        alive = false;
+                        break 'link;
+                    }
+                }
+            }
+            match link.stream.read(&mut buf) {
+                Ok(0) => {
+                    alive = false; // EOF: peer exited (banned / finished)
+                    break;
+                }
+                Ok(k) => link.fr.feed(&buf[..k]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    alive = false;
+                    break;
+                }
+            }
+        }
+        if alive {
+            self.inbound[peer] = Some(link);
+        } else {
+            let _ = link.stream.shutdown(Shutdown::Both);
+            let mut g = self.gauge.lock();
+            g.open_in = g.open_in.saturating_sub(1);
+        }
+    }
+
+    /// Returns false when the frame condemns its link.
+    fn handle_frame(&mut self, link_peer: PeerId, frame: Frame) -> bool {
+        match frame {
+            // Gossip mode admits *broadcast* envelopes from any
+            // authenticated link: the frame may be a relay of another
+            // origin's broadcast. The link MAC (session-MAC mode)
+            // authenticates the relayer; the envelope's Schnorr
+            // signature authenticates the *origin* — a forged relay is
+            // dropped by the Inbox's signature gate at delivery,
+            // attributed to nobody.
+            Frame::Envelope(env) if self.relay.is_some() && env.broadcast => {
+                self.handle_relayed(env)
+            }
+            // Point-to-point frames (and every frame on a full-mesh
+            // link) must come from the link's authenticated peer.
+            frame => match admit_frame(frame, link_peer) {
+                Some(env) => {
+                    let _ = self.mailbox.send(env);
+                    true
+                }
+                None => false,
+            },
+        }
+    }
+
+    /// Relay-once dissemination: the first copy of each distinct
+    /// (origin, step, slot, payload digest) is delivered locally and
+    /// forwarded to our overlay out-neighbours; later copies are
+    /// dropped. A *contradictory* variant (same key, different digest —
+    /// an equivocation attempt) is also delivered and forwarded, bounded
+    /// by a small per-key cap, so every honest peer obtains the same
+    /// ban evidence the full mesh would have handed it.
+    fn handle_relayed(&mut self, env: Envelope) -> bool {
+        if env.from >= self.info.n_peers {
+            return false; // spoofed origin id: condemn the link
+        }
+        if env.from == self.me {
+            // An echo of our own broadcast; loopback already delivered
+            // it, and the origination pre-marked its digest.
+            return true;
+        }
+        let (seen, targets) = {
+            let relay = self.relay.as_mut().expect("handle_relayed is gossip-only");
+            let seen = relay.tracker.observe(&env);
+            if env.step > relay.max_step {
+                relay.max_step = env.step;
+                relay.tracker.gc(env.step, RELAY_GC_HORIZON);
+            }
+            let targets: Vec<PeerId> =
+                relay.schedule.overlay_at(env.step).out_neighbors(self.me).to_vec();
+            (seen, targets)
+        };
+        match seen {
+            Seen::Duplicate => true,
+            Seen::First | Seen::Contradiction(_) => {
+                let fields = envelope_fields(&env);
+                let origin = env.from;
+                let _ = self.mailbox.send(env);
+                for to in targets {
+                    // Deterministic exclusion: never relay back to the
+                    // origin (it has the message by definition). The
+                    // arrival link is *not* excluded — that would make
+                    // the relay graph timing-dependent.
+                    if to != origin {
+                        self.queue_frame(to, &fields, true);
+                    }
+                }
+                true
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    // Post-build handshakes get the slice budget (the
+                    // build's hard deadline is long gone).
+                    let hard = Instant::now() + HELLO_SLICE;
+                    spawn_handshake(self.hs_ctx.clone(), stream, hard);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    // accept(2) errors like ECONNABORTED / EMFILE are
+                    // transient; a silently dead accept path would
+                    // strand every future link with nothing in the logs.
+                    eprintln!("socket mesh (peer {}): acceptor error (retrying): {e}", self.me);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn drain_waker(&mut self) {
+        let mut buf = [0u8; 256];
+        loop {
+            match (&self.waker_rx).read(&mut buf) {
+                Ok(0) => return,
+                Ok(_) => {}
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => return, // WouldBlock: drained
+            }
+        }
+    }
+
+    fn flush_pending(&self) -> bool {
+        self.out
+            .iter()
+            .any(|o| matches!(o, OutLink::Open { pending, sent, .. } if pending.len() > *sent))
+    }
+
+    fn teardown(self) {
+        // Outbound links carry no inbound data, so closing them reaches
+        // the remote as a clean FIN after everything we flushed — an
+        // early-exiting (banned) peer can never RST away envelopes an
+        // honest receiver has not yet drained (the unidirectional-link
+        // rationale in the module docs, preserved by the event loop).
+        for link in &self.out {
+            if let OutLink::Open { stream, .. } = link {
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+        }
+        // Any RST that closing the inbound halves provokes lands on the
+        // remote's send-only socket, where there is nothing to lose.
+        for link in self.inbound.iter().flatten() {
+            let _ = link.stream.shutdown(Shutdown::Both);
+        }
+        // Handshake and dial threads are bounded by construction
+        // (HELLO_SLICE / LATE_DIAL_BUDGET), self-terminate, and notice
+        // the dropped command channel — nothing here is unjoinable.
+    }
+}
+
 /// A real-socket transport endpoint: one send-direction TCP connection
-/// per ordered peer pair, a reader thread per inbound link, and the
-/// shared [`Inbox`] delivery semantics. With a dynamic-membership
-/// schedule (`SocketConfig::join_steps`), links involving late joiners
-/// form lazily at the joiner's epoch boundary: the background acceptor
-/// admits their epoch-stamped HELLOs, and `write_link` dials missing
-/// links on first send.
+/// per ordered peer pair in use, a single poll(2)-driven I/O thread
+/// owning every link, and the shared [`Inbox`] delivery semantics. With
+/// a dynamic-membership schedule (`SocketConfig::join_steps`), links
+/// involving late joiners form lazily at the joiner's epoch boundary.
+/// In gossip mode (`SocketConfig::gossip`) broadcasts ride the overlay,
+/// so the endpoint keeps O(fanout·log n) broadcast links instead of
+/// O(n).
 pub struct SocketNet {
     id: PeerId,
     info: Arc<ClusterInfo>,
@@ -1110,27 +1707,13 @@ pub struct SocketNet {
     /// session-MAC mesh (adjudication slots signed, bulk parts ride the
     /// stream MAC), [`SchnorrAuth`] otherwise (every envelope signed).
     auth: Arc<dyn MessageAuth>,
-    /// Per-recipient session-MAC send state: the us→peer directional
-    /// key and next frame counter. `None` at our own slot and, when MAC
-    /// mode is off, everywhere.
-    mac_send: Vec<Option<MacSend>>,
-    /// Outbound (send-only) links, indexed by peer id (`None` at our own
-    /// slot, and at not-yet-dialed late links). Nothing is ever read
-    /// from these.
-    links: Vec<Option<TcpStream>>,
-    /// One failed late dial marks the link dead for good.
-    dial_failed: Vec<bool>,
-    /// Roster addresses (late dials need them after `connect` returns).
-    addrs: Vec<String>,
     /// Per-peer join step (all zeros for a static roster).
     join_steps: Vec<u64>,
-    /// Pre-encoded per-recipient HELLO frames (the nonce binds the
-    /// link, so each recipient gets its own; empty at our own slot).
-    hellos: Vec<Vec<u8>>,
-    /// Inbound links + reader threads, shared with the acceptor.
-    table: Arc<InboundTable>,
-    /// Background acceptor (dynamic-membership runs only).
-    acceptor: Option<thread::JoinHandle<()>>,
+    /// Driver → event-loop command queue, paired with `waker`.
+    cmd_tx: Sender<IoCmd>,
+    waker: Arc<LoopWaker>,
+    io_thread: Option<thread::JoinHandle<()>>,
+    gauge: Arc<LinkGauge>,
     /// Self-delivery: loopback never crosses the network.
     loopback: Sender<Envelope>,
     inbox: Inbox,
@@ -1140,14 +1723,15 @@ pub struct SocketNet {
 
 impl SocketNet {
     /// Build this peer's endpoint of the mesh: a founding member dials
-    /// every other founding member's listener once (opening our
-    /// send-direction link, prefixed by our HELLO), then accepts every
-    /// founding peer's send-direction link (validating its HELLO
-    /// against the roster) and spawns its reader thread. Links
-    /// involving scheduled late joiners form lazily instead: a joiner's
-    /// endpoint comes up with zero links, the background acceptor
-    /// admits epoch-stamped HELLOs mid-run, and `write_link` dials
-    /// missing links on first send. `listener` must already be bound to
+    /// the founding peers it will write to — every other founding
+    /// member in full-mesh mode, just its epoch-0 overlay
+    /// out-neighbours in gossip mode — announcing itself with a HELLO,
+    /// then hands every socket to the event loop and waits until the
+    /// loop has accepted and validated the inbound links expected now.
+    /// Links involving scheduled late joiners (and gossip
+    /// point-to-point links) form lazily instead: the loop keeps
+    /// accepting epoch-stamped HELLOs mid-run and dials missing links
+    /// on first send. `listener` must already be bound to
     /// `roster.peers[id].addr` (bind-before-publish is what the
     /// rendezvous flow guarantees).
     ///
@@ -1183,7 +1767,6 @@ impl SocketNet {
                 cfg.join_steps.len()
             )));
         };
-        let dynamic = join_steps.iter().any(|&s| s > 0);
         if cfg.session_mac && !cfg.verify_signatures {
             return Err(io_err(
                 "session-MAC mode requires signature verification: the signed HELLO is \
@@ -1191,11 +1774,45 @@ impl SocketNet {
                     .to_string(),
             ));
         }
+        // Gossip mode: derive the full per-epoch overlay schedule up
+        // front. It is a pure function of (epoch table, seed, fanout) —
+        // every peer computes the identical relay graph, which is what
+        // keeps dissemination deterministic enough to digest-compare
+        // against the full mesh.
+        let relay = if cfg.gossip {
+            if cfg.gossip_fanout == 0 {
+                return Err(io_err("gossip mode needs gossip_fanout >= 1".to_string()));
+            }
+            let epochs: Vec<(u64, Vec<PeerId>)> = if cfg.overlay_epochs.is_empty() {
+                vec![(0, (0..n).filter(|&j| join_steps[j] == 0).collect())]
+            } else {
+                cfg.overlay_epochs.clone()
+            };
+            if epochs.first().map(|(s, _)| *s) != Some(0) {
+                return Err(io_err("overlay_epochs must start at step 0".to_string()));
+            }
+            if let Some(&bad) = epochs.iter().flat_map(|(_, m)| m.iter()).find(|&&p| p >= n) {
+                return Err(io_err(format!(
+                    "overlay_epochs names peer {bad}, outside the {n}-peer roster"
+                )));
+            }
+            Some(RelayState {
+                schedule: OverlaySchedule::derive(
+                    &epochs,
+                    cfg.overlay_seed,
+                    cfg.gossip_fanout as usize,
+                ),
+                tracker: RelayTracker::new(),
+                max_step: 0,
+            })
+        } else {
+            None
+        };
         let mont = Mont::new();
         let info = Arc::new(ClusterInfo {
             n_peers: n,
             public_keys: roster.peers.iter().map(|p| p.pubkey).collect(),
-            stats: TrafficStats::new(n, cfg.gossip_fanout),
+            stats: TrafficStats::new(n),
             verify_signatures: cfg.verify_signatures,
         });
         let (tx, rx) = channel();
@@ -1224,45 +1841,75 @@ impl SocketNet {
             })
             .collect();
 
-        // Outbound links: a founding member dials every other founding
-        // member now and announces itself; links involving late joiners
-        // form lazily at the joiner's epoch boundary (`write_link`). TCP
-        // completes the connect via the listener's backlog whether or
-        // not the remote has reached its accept loop yet, so the
-        // all-dials-then-all-accepts order cannot deadlock.
-        let mut links: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+        // Outbound links a founding member opens during the build: the
+        // whole founding mesh in full-mesh mode, just our epoch-0
+        // overlay out-neighbours in gossip mode (point-to-point links
+        // dial lazily on first use). TCP completes the connect via the
+        // listener's backlog whether or not the remote has reached its
+        // accept path yet, so the all-dials-then-all-accepts order
+        // cannot deadlock. Dials run synchronously here with retry (the
+        // target may legitimately not have bound its listener yet); the
+        // streams then go non-blocking and hand over to the event loop.
+        let mut out: Vec<OutLink> = (0..n).map(|_| OutLink::Absent).collect();
+        let mut open_out = 0usize;
         if join_steps[id] == 0 {
-            for (j, link) in links.iter_mut().enumerate() {
-                if j == id || join_steps[j] > 0 {
-                    continue;
-                }
+            let dial_targets: Vec<PeerId> = match &relay {
+                Some(r) => r
+                    .schedule
+                    .overlay_at(0)
+                    .out_neighbors(id)
+                    .iter()
+                    .copied()
+                    .filter(|&j| join_steps[j] == 0)
+                    .collect(),
+                None => (0..n).filter(|&j| j != id && join_steps[j] == 0).collect(),
+            };
+            for j in dial_targets {
                 let mut stream = dial_with_retry(&roster.peers[j].addr, deadline)?;
                 let _ = stream.set_nodelay(true);
                 stream.write_all(&hellos[j])?;
-                *link = Some(stream);
+                stream.set_nonblocking(true)?;
+                out[j] = OutLink::Open { stream, pending: Vec::new(), sent: 0 };
+                open_out += 1;
             }
         }
 
-        // Inbound links: accept the send-direction connection of every
-        // *founding* peer expected now, validating its HELLO (epoch +
-        // roster-bound nonce + signature) and handing it — plus any
-        // bytes the sender pipelined right behind the HELLO — to a
-        // reader thread. Handshakes run on their own short-lived
+        // Inbound links the build must wait for: the send-direction
+        // connection of every founding peer that dials us now — all of
+        // them in full-mesh mode, our epoch-0 overlay in-neighbours in
+        // gossip mode. A late joiner waits for nobody (its links form
+        // mid-run), and connections beyond the expected set (a joiner
+        // starting early, a gossip peer's lazy p2p link) are installed
+        // the same way, just never counted toward the build.
+        let expected_now: Vec<PeerId> = if join_steps[id] == 0 {
+            match &relay {
+                Some(r) => r
+                    .schedule
+                    .overlay_at(0)
+                    .in_neighbors(id)
+                    .into_iter()
+                    .filter(|&j| join_steps[j] == 0)
+                    .collect(),
+                None => (0..n).filter(|&j| j != id && join_steps[j] == 0).collect(),
+            }
+        } else {
+            Vec::new()
+        };
+
+        // Everything is in place: start the event loop, which owns the
+        // listener, every link and (in gossip mode) the relay state
+        // from here on. Handshakes still run on short-lived helper
         // threads so a silent or hostile connection stalls only itself
         // for its HELLO_SLICE — probes must not be able to serialize
-        // away the accept budget. A late joiner's connection may already
-        // arrive during the build (its process starts whenever it
-        // likes): it is installed the same way, just never counted
-        // toward the founding total.
+        // away the accept budget.
         listener.set_nonblocking(true)?;
-        let table = Arc::new(InboundTable {
-            state: Mutex::new(InboundState {
-                seen: vec![false; n],
-                inbound: Vec::with_capacity(n.saturating_sub(1)),
-                readers: Vec::with_capacity(n.saturating_sub(1)),
-            }),
-            shutdown: std::sync::atomic::AtomicBool::new(false),
-        });
+        let (waker_tx, waker_rx) = UnixStream::pair()?;
+        waker_tx.set_nonblocking(true)?;
+        waker_rx.set_nonblocking(true)?;
+        let waker = Arc::new(LoopWaker { tx: waker_tx });
+        let (cmd_tx, cmd_rx) = channel();
+        let gauge = Arc::new(LinkGauge::new(n));
+        gauge.lock().open_out = open_out;
         let hs_ctx = Arc::new(HandshakeCtx {
             me: id,
             roster: roster.clone(),
@@ -1272,73 +1919,73 @@ impl SocketNet {
             session_mac: cfg.session_mac,
             secret: secret.clone(),
             max_frame: cfg.max_frame,
-            table: table.clone(),
-            mailbox: tx.clone(),
+            cmd_tx: cmd_tx.clone(),
+            waker: waker.clone(),
         });
-        let expected_now: Vec<PeerId> = (0..n)
-            .filter(|&j| j != id && join_steps[j] == 0 && join_steps[id] == 0)
+        let mac_send: Vec<Option<MacSend>> = (0..n)
+            .map(|j| {
+                if !cfg.session_mac || j == id {
+                    return None;
+                }
+                let shared = shared_secret(&mont, &secret, &roster.peers[j].pubkey);
+                Some(MacSend {
+                    key: link_mac_key(&shared, id, j, &roster_digest),
+                    next_seq: 0,
+                })
+            })
             .collect();
+        let io_loop = IoLoop {
+            me: id,
+            info: info.clone(),
+            listener,
+            hs_ctx,
+            cmd_rx,
+            cmd_tx: cmd_tx.clone(),
+            waker: waker.clone(),
+            waker_rx,
+            mailbox: tx.clone(),
+            addrs: roster.peers.iter().map(|p| p.addr.clone()).collect(),
+            hellos,
+            join_steps: join_steps.clone(),
+            mac_send,
+            out,
+            inbound: (0..n).map(|_| None).collect(),
+            relay,
+            gauge: gauge.clone(),
+        };
+        let io_thread = thread::Builder::new()
+            .name(format!("sock-io-{id}"))
+            .spawn(move || io_loop.run())
+            .map_err(|e| io_err(format!("spawning I/O event-loop thread: {e}")))?;
+
+        // Block until the loop has installed every expected inbound
+        // link (it notifies the gauge per install), or tear the
+        // half-built endpoint down on timeout — the loop thread must
+        // not outlive the error.
+        let mut state = gauge.lock();
         loop {
-            let missing: usize = {
-                let state = table.state.lock().unwrap_or_else(|p| p.into_inner());
-                expected_now.iter().filter(|&&j| !state.seen[j]).count()
-            };
+            let missing =
+                expected_now.iter().filter(|&&j| !state.seen_in[j]).count();
             if missing == 0 {
                 break;
             }
-            match listener.accept() {
-                Ok((stream, _)) => spawn_handshake(hs_ctx.clone(), stream, deadline),
-                Err(e) if e.kind() == ErrorKind::WouldBlock => {}
-                Err(e) if e.kind() == ErrorKind::Interrupted => {}
-                Err(e) => return Err(e),
-            }
-            if Instant::now() >= deadline {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                drop(state);
+                let _ = cmd_tx.send(IoCmd::Shutdown);
+                waker.wake();
+                let _ = io_thread.join();
                 return Err(timeout_err(&format!(
                     "waiting for {missing} inbound connection(s)"
                 )));
             }
-            thread::sleep(Duration::from_millis(5));
+            let (next, _) = gauge
+                .cond
+                .wait_timeout(state, remaining.min(Duration::from_millis(100)))
+                .unwrap_or_else(|p| p.into_inner());
+            state = next;
         }
-
-        // Dynamic membership: keep accepting after the build, so a
-        // roster-epoch addition's link (or, for a late joiner, every
-        // incumbent's lazily-dialed link) can arrive mid-run.
-        let acceptor = if dynamic {
-            let table_ref = table.clone();
-            let hs_ctx = hs_ctx.clone();
-            let handle = thread::Builder::new()
-                .name(format!("sock-acceptor-{id}"))
-                .spawn(move || {
-                    while !table_ref.shutdown.load(std::sync::atomic::Ordering::SeqCst) {
-                        match listener.accept() {
-                            Ok((stream, _)) => {
-                                // Post-build handshakes get the slice,
-                                // not the build deadline (long gone).
-                                let hard = Instant::now() + HELLO_SLICE;
-                                spawn_handshake(hs_ctx.clone(), stream, hard);
-                            }
-                            Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                                thread::sleep(Duration::from_millis(10));
-                            }
-                            Err(e) if e.kind() == ErrorKind::Interrupted => {}
-                            Err(e) => {
-                                // accept(2) errors like ECONNABORTED /
-                                // EMFILE are transient; a silently dead
-                                // acceptor would strand every future
-                                // joiner link with nothing in the logs.
-                                eprintln!(
-                                    "socket mesh (peer {id}): acceptor error (retrying): {e}"
-                                );
-                                thread::sleep(Duration::from_millis(100));
-                            }
-                        }
-                    }
-                })
-                .map_err(|e| io_err(format!("spawning acceptor thread: {e}")))?;
-            Some(handle)
-        } else {
-            None
-        };
+        drop(state);
 
         let auth: Arc<dyn MessageAuth> = if !cfg.verify_signatures {
             Arc::new(NoAuth)
@@ -1355,35 +2002,28 @@ impl SocketNet {
                 info.public_keys.clone(),
             ))
         };
-        let mac_send: Vec<Option<MacSend>> = (0..n)
-            .map(|j| {
-                if !cfg.session_mac || j == id {
-                    return None;
-                }
-                let shared = shared_secret(&mont, &secret, &roster.peers[j].pubkey);
-                Some(MacSend {
-                    key: link_mac_key(&shared, id, j, &roster_digest),
-                    next_seq: 0,
-                })
-            })
-            .collect();
         Ok(SocketNet {
             id,
             info,
             auth,
-            mac_send,
-            links,
-            dial_failed: vec![false; n],
-            addrs: roster.peers.iter().map(|p| p.addr.clone()).collect(),
             join_steps,
-            hellos,
-            table,
-            acceptor,
+            cmd_tx,
+            waker,
+            io_thread: Some(io_thread),
+            gauge,
             loopback: tx,
             inbox: Inbox::new(rx),
             timeout: Duration::from_secs(30),
             recv_mode: RecvMode::Blocking,
         })
+    }
+
+    /// Currently open (inbound, outbound) link counts — what the net
+    /// bench asserts stays O(fanout), not O(n), per peer in gossip
+    /// mode.
+    pub fn open_links(&self) -> (usize, usize) {
+        let g = self.gauge.lock();
+        (g.open_in, g.open_out)
     }
 
     fn make_envelope(
@@ -1407,98 +2047,18 @@ impl SocketNet {
         self.auth.seal(&mut env);
         env
     }
-
-    /// Per-link frame prefix for pre-encoded envelope fields: on a
-    /// session-MAC link the `header ‖ kind ‖ seq ‖ mac` prefix (counter
-    /// advanced), otherwise the plain `header ‖ kind` prefix. The
-    /// counter advances even when the subsequent write fails — a broken
-    /// link never delivers later frames, so a gap there is unobservable.
-    fn frame_prefix(&mut self, to: PeerId, fields: &[u8]) -> Vec<u8> {
-        match &mut self.mac_send[to] {
-            Some(mac) => {
-                let prefix = mac_frame_prefix(fields, mac.next_seq, &mac.key);
-                mac.next_seq += 1;
-                prefix
-            }
-            None => {
-                let body_len = 1 + fields.len();
-                assert!(
-                    body_len <= u32::MAX as usize,
-                    "envelope payload too large for the frame codec"
-                );
-                let mut out = Vec::with_capacity(9);
-                out.extend_from_slice(&MAGIC);
-                out.extend_from_slice(&(body_len as u32).to_le_bytes());
-                out.push(KIND_ENVELOPE);
-                out
-            }
-        }
-    }
-
-    /// Write a pre-encoded frame to a link, ignoring write errors: the
-    /// remote may have been banned or finished early, exactly like the
-    /// perfect fabric's ignored channel-send errors. A missing link —
-    /// this endpoint or the target is a roster-epoch addition whose
-    /// boundary has arrived — is dialed lazily, HELLO first; one failed
-    /// dial marks the link dead for good (the protocol's timeout and
-    /// ELIMINATE machinery handles a peer that never comes up).
-    fn write_link(&mut self, to: PeerId, parts: &[&[u8]]) {
-        if self.links[to].is_none() && !self.dial_failed[to] {
-            match dial_once(&self.addrs[to], LATE_DIAL_BUDGET) {
-                Ok(mut stream) => {
-                    let _ = stream.set_nodelay(true);
-                    if stream.write_all(&self.hellos[to]).is_ok() {
-                        self.links[to] = Some(stream);
-                    } else {
-                        self.dial_failed[to] = true;
-                    }
-                }
-                Err(e) => {
-                    eprintln!(
-                        "socket mesh (peer {}): late dial to peer {to} failed: {e}",
-                        self.id
-                    );
-                    self.dial_failed[to] = true;
-                }
-            }
-        }
-        if let Some(stream) = &mut self.links[to] {
-            for part in parts {
-                if stream.write_all(part).is_err() {
-                    break;
-                }
-            }
-        }
-    }
 }
 
 impl Drop for SocketNet {
     fn drop(&mut self) {
-        // Stop the background acceptor first (dynamic-membership runs):
-        // it must not install new readers while we tear down.
-        self.table.shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
-        if let Some(handle) = self.acceptor.take() {
-            let _ = handle.join();
-        }
-        // Outbound links carry no inbound data, so closing them reaches
-        // the remote as a clean FIN after everything we sent — an
-        // early-exiting (banned) peer can never RST away envelopes an
-        // honest receiver has not yet drained.
-        for link in self.links.iter().flatten() {
-            let _ = link.shutdown(Shutdown::Both);
-        }
-        // Shutting down the inbound links unblocks every reader thread
-        // parked in read(), so the joins below cannot hang. Any RST this
-        // provokes lands on the remote's send-only socket, where there
-        // is nothing to lose.
-        let (inbound, readers) = {
-            let mut state = self.table.state.lock().unwrap_or_else(|p| p.into_inner());
-            (std::mem::take(&mut state.inbound), std::mem::take(&mut state.readers))
-        };
-        for stream in &inbound {
-            let _ = stream.shutdown(Shutdown::Both);
-        }
-        for handle in readers {
+        // One command tears the whole endpoint down: the loop stops
+        // accepting and reading, flushes queued outbound bytes inside a
+        // bounded budget, FINs the outbound links and closes the
+        // inbound ones (see `IoLoop::teardown` for why that ordering
+        // can never RST away an honest peer's undrained envelopes).
+        let _ = self.cmd_tx.send(IoCmd::Shutdown);
+        self.waker.wake();
+        if let Some(handle) = self.io_thread.take() {
             let _ = handle.join();
         }
     }
@@ -1545,8 +2105,9 @@ impl Transport for SocketNet {
             // observably identical (the joiner drops pre-join traffic
             // at snapshot install).
             let fields = envelope_fields(&env);
-            let prefix = self.frame_prefix(to, &fields);
-            self.write_link(to, &[&prefix, &fields]);
+            if self.cmd_tx.send(IoCmd::Send { to, fields }).is_ok() {
+                self.waker.wake();
+            }
         }
     }
 
@@ -1554,15 +2115,15 @@ impl Transport for SocketNet {
         let bytes = payload.len();
         let env = self.make_envelope(step, slot, class, payload, true);
         self.info.stats.record_broadcast(self.id, class, bytes);
-        // The O(d) fields buffer is encoded once; per recipient only the
-        // small prefix (plain, or `seq ‖ mac` on a MAC link) differs.
+        // The O(d) fields buffer is encoded once; the loop adds only
+        // the small per-link prefix (plain, or `seq ‖ mac` on a MAC
+        // link). The payload digest rides along so gossip mode can
+        // pre-mark its relay tracker against echoes.
         let fields = envelope_fields(&env);
+        let digest = sha256(&env.payload);
         let _ = self.loopback.send(env);
-        for to in 0..self.info.n_peers {
-            if to != self.id && step >= self.join_steps[to] {
-                let prefix = self.frame_prefix(to, &fields);
-                self.write_link(to, &[&prefix, &fields]);
-            }
+        if self.cmd_tx.send(IoCmd::Broadcast { step, slot, digest, fields }).is_ok() {
+            self.waker.wake();
         }
     }
 
@@ -2052,7 +2613,7 @@ mod tests {
         // path must agree or signatures (and digests) diverge.
         let mont = Mont::new();
         let run_seed = 7u64;
-        let cluster = crate::net::build_cluster(3, run_seed ^ 0xC1A5, 8, true);
+        let cluster = crate::net::build_cluster(3, run_seed ^ 0xC1A5, true);
         for (k, peer) in cluster.iter().enumerate() {
             assert_eq!(derive_keypair(&mont, run_seed, k).public, peer.info.public_keys[k]);
         }
@@ -2093,9 +2654,11 @@ mod tests {
         assert!(bc.broadcast);
         net0.send(1, 2, slots::VERIFY_SCALARS, MsgClass::Verification, vec![9]);
         t1.join().unwrap();
-        // Sender-side traffic accounting matches the perfect fabric's
-        // (payload bytes, not frame bytes; broadcasts pay the fanout).
+        // Sender-side protocol-plane accounting matches the perfect
+        // fabric's (payload bytes, charged once per logical message —
+        // frame bytes and dissemination fan-out live on the wire plane).
         assert_eq!(net0.info().stats.total_bytes(0), 1);
+        assert!(net0.info().stats.wire_bytes(0) > 0, "the reply frame hit a real wire");
     }
 
     #[test]
@@ -2154,5 +2717,89 @@ mod tests {
         let err =
             SocketNet::connect(l0, &roster, 0, derive_keypair(&mont, 3, 0), &cfg).unwrap_err();
         assert!(err.to_string().contains("session-MAC"), "{err}");
+    }
+
+    #[test]
+    fn gossip_requires_nonzero_fanout() {
+        let mont = Mont::new();
+        let (l0, _a0) = bind_ephemeral().unwrap();
+        let roster = test_roster(3, 2);
+        let cfg = SocketConfig { gossip: true, gossip_fanout: 0, ..Default::default() };
+        let err =
+            SocketNet::connect(l0, &roster, 0, derive_keypair(&mont, 3, 0), &cfg).unwrap_err();
+        assert!(err.to_string().contains("gossip_fanout"), "{err}");
+    }
+
+    /// Fanout 1 degenerates the overlay to a single directed ring, so a
+    /// broadcast reaches three of the four peers only by being relayed
+    /// peer-to-peer-to-peer — the strongest possible exercise of the
+    /// relay path (with fanout ≥ ⌈log₂ n⌉ some links are direct).
+    #[test]
+    fn gossip_ring_relays_broadcasts_to_everyone() {
+        let mont = Mont::new();
+        let n = 4;
+        let seed = 13;
+        let (listeners, addrs): (Vec<_>, Vec<_>) =
+            (0..n).map(|_| bind_ephemeral().unwrap()).unzip();
+        let roster = Roster {
+            peers: addrs
+                .into_iter()
+                .enumerate()
+                .map(|(k, addr)| RosterEntry {
+                    id: k,
+                    addr,
+                    pubkey: derive_keypair(&mont, seed, k).public,
+                })
+                .collect(),
+        };
+        let cfg = SocketConfig {
+            gossip: true,
+            gossip_fanout: 1,
+            overlay_seed: 99,
+            connect_timeout: Duration::from_secs(10),
+            ..Default::default()
+        };
+        let handles: Vec<_> = listeners
+            .into_iter()
+            .enumerate()
+            .map(|(k, listener)| {
+                let roster = roster.clone();
+                let cfg = cfg.clone();
+                std::thread::spawn(move || {
+                    let mont = Mont::new();
+                    let mut net = SocketNet::connect(
+                        listener,
+                        &roster,
+                        k,
+                        derive_keypair(&mont, seed, k),
+                        &cfg,
+                    )
+                    .unwrap();
+                    net.set_timeout(Duration::from_secs(10));
+                    // A ring endpoint keeps exactly one link each way —
+                    // the O(fanout) claim at its smallest.
+                    assert_eq!(net.open_links(), (1, 1));
+                    net.broadcast(2, slots::GRAD_COMMIT, MsgClass::Commitment, vec![k as u8; 3]);
+                    // Every peer's broadcast arrives (self included via
+                    // loopback), signed by its true origin.
+                    for from in 0..n {
+                        let env = net
+                            .recv_keyed(2, slots::GRAD_COMMIT, &|e| e.from == from)
+                            .unwrap_or_else(|e| panic!("peer {k} missing broadcast from {from}: {e:?}"));
+                        assert_eq!(env.payload.to_vec(), vec![from as u8; 3]);
+                        assert!(env.verify_with(&Mont::new(), &roster.peers[from].pubkey));
+                    }
+                    // Three relays each (everyone forwards everyone
+                    // else's broadcast once, minus the origin exclusion).
+                    let wire = net.info().stats.wire_snapshot();
+                    assert!(wire[k].relay_msgs >= 2, "ring peers must relay: {:?}", wire[k]);
+                    net
+                })
+            })
+            .collect();
+        // Keep every endpoint alive until all peers finished collecting,
+        // then drop them together (mirrors the cluster harness).
+        let nets: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        drop(nets);
     }
 }

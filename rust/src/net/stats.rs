@@ -2,11 +2,22 @@
 //!
 //! The paper's headline communication claim is that one BTARD step costs
 //! each peer O(d + n²) bytes (vs O(d) for plain Butterfly All-Reduce and
-//! O(n·d) for a robust parameter server). These counters reproduce that
-//! accounting: every send is attributed to its message class, and
-//! broadcast messages are charged with the GossipSub relay factor D
-//! (each peer relays a previously unseen message to D neighbours, so an
-//! n-peer broadcast of b bytes costs O(n·b) total, O(b·D) per peer).
+//! O(n·d) for a robust parameter server). Accounting runs on two planes:
+//!
+//! - The **protocol plane** (`record_p2p` / `record_broadcast`) charges
+//!   each *logical* send once, attributed to its message class. It is a
+//!   pure function of the protocol transcript — identical across the
+//!   in-process, simulated, and socket transports — which is what lets
+//!   per-peer byte totals flow into the run's metrics digest.
+//! - The **wire plane** (`record_wire` / `record_relay`) counts frames a
+//!   transport *actually put on a wire*, including gossip relays of
+//!   other peers' broadcasts. Only transports with a real wire record
+//!   here; it is informational (benches, summaries), never digested.
+//!
+//! Earlier revisions charged broadcasts with a static `gossip_fanout`
+//! multiplier on the protocol plane; now that the socket transport has a
+//! real relay overlay, modelled costs live with the model and measured
+//! costs with the wire.
 
 use std::sync::Mutex;
 
@@ -62,23 +73,35 @@ pub struct PeerTraffic {
     pub msgs: [u64; NUM_CLASSES],
 }
 
+/// Wire-plane counters for one peer: frames actually written to sockets.
+#[derive(Clone, Debug, Default)]
+pub struct PeerWire {
+    /// Bytes written to sockets (own sends + relays).
+    pub bytes: u64,
+    /// Frames written to sockets (own sends + relays).
+    pub msgs: u64,
+    /// The subset of `bytes` spent relaying other peers' broadcasts.
+    pub relay_bytes: u64,
+    /// The subset of `msgs` spent relaying other peers' broadcasts.
+    pub relay_msgs: u64,
+}
+
 /// Shared traffic accumulator for a simulated cluster.
 #[derive(Debug)]
 pub struct TrafficStats {
     peers: Mutex<Vec<PeerTraffic>>,
-    /// GossipSub fanout: relay cost multiplier applied to broadcasts.
-    pub gossip_fanout: u64,
+    wire: Mutex<Vec<PeerWire>>,
 }
 
 impl TrafficStats {
-    pub fn new(n_peers: usize, gossip_fanout: u64) -> TrafficStats {
+    pub fn new(n_peers: usize) -> TrafficStats {
         TrafficStats {
             peers: Mutex::new(vec![PeerTraffic::default(); n_peers]),
-            gossip_fanout,
+            wire: Mutex::new(vec![PeerWire::default(); n_peers]),
         }
     }
 
-    /// Record a point-to-point send.
+    /// Record a point-to-point send (protocol plane).
     pub fn record_p2p(&self, from: usize, class: MsgClass, bytes: usize) {
         let mut g = self.peers.lock().unwrap();
         let t = &mut g[from];
@@ -86,23 +109,53 @@ impl TrafficStats {
         t.msgs[class as usize] += 1;
     }
 
-    /// Record a broadcast: the originator pays D relays' worth, modelling
-    /// GossipSub's O(b·D) per-peer cost for an all-to-all broadcast.
+    /// Record one logical broadcast (protocol plane): charged once,
+    /// whatever fan-out the transport uses to disseminate it. Identical
+    /// across transports by construction, so digests stay comparable.
     pub fn record_broadcast(&self, from: usize, class: MsgClass, bytes: usize) {
         let mut g = self.peers.lock().unwrap();
         let t = &mut g[from];
-        t.bytes[class as usize] += bytes as u64 * self.gossip_fanout;
-        t.msgs[class as usize] += self.gossip_fanout;
+        t.bytes[class as usize] += bytes as u64;
+        t.msgs[class as usize] += 1;
+    }
+
+    /// Record a frame actually written to a socket (wire plane).
+    pub fn record_wire(&self, from: usize, bytes: usize) {
+        let mut g = self.wire.lock().unwrap();
+        let t = &mut g[from];
+        t.bytes += bytes as u64;
+        t.msgs += 1;
+    }
+
+    /// Record a relayed frame (wire plane): a broadcast originated by
+    /// someone else, forwarded over this peer's overlay links.
+    pub fn record_relay(&self, from: usize, bytes: usize) {
+        let mut g = self.wire.lock().unwrap();
+        let t = &mut g[from];
+        t.bytes += bytes as u64;
+        t.msgs += 1;
+        t.relay_bytes += bytes as u64;
+        t.relay_msgs += 1;
     }
 
     pub fn snapshot(&self) -> Vec<PeerTraffic> {
         self.peers.lock().unwrap().clone()
     }
 
-    /// Total bytes sent by a peer across all classes.
+    pub fn wire_snapshot(&self) -> Vec<PeerWire> {
+        self.wire.lock().unwrap().clone()
+    }
+
+    /// Total protocol-plane bytes sent by a peer across all classes.
     pub fn total_bytes(&self, peer: usize) -> u64 {
         let g = self.peers.lock().unwrap();
         g[peer].bytes.iter().sum()
+    }
+
+    /// Total wire-plane bytes a peer wrote to sockets (0 on wireless
+    /// transports).
+    pub fn wire_bytes(&self, peer: usize) -> u64 {
+        self.wire.lock().unwrap()[peer].bytes
     }
 
     /// Max over peers of total bytes (the per-peer cost the paper bounds).
@@ -111,10 +164,19 @@ impl TrafficStats {
         g.iter().map(|t| t.bytes.iter().sum::<u64>()).max().unwrap_or(0)
     }
 
+    pub fn max_peer_wire_bytes(&self) -> u64 {
+        let g = self.wire.lock().unwrap();
+        g.iter().map(|t| t.bytes).max().unwrap_or(0)
+    }
+
     pub fn reset(&self) {
         let mut g = self.peers.lock().unwrap();
         for t in g.iter_mut() {
             *t = PeerTraffic::default();
+        }
+        let mut w = self.wire.lock().unwrap();
+        for t in w.iter_mut() {
+            *t = PeerWire::default();
         }
     }
 
@@ -138,6 +200,18 @@ impl TrafficStats {
                 totals[i] / n
             ));
         }
+        drop(g);
+        let w = self.wire.lock().unwrap();
+        let (wb, rb): (u64, u64) = w.iter().fold((0, 0), |(b, r), t| (b + t.bytes, r + t.relay_bytes));
+        if wb > 0 {
+            out.push_str(&format!(
+                "{:<20} {:>12} {:>14}\n",
+                "wire (incl. relays)",
+                wb,
+                wb / n
+            ));
+            out.push_str(&format!("{:<20} {:>12} {:>14}\n", "  of which relays", rb, rb / n));
+        }
         out
     }
 }
@@ -148,16 +222,41 @@ mod tests {
 
     #[test]
     fn accounting() {
-        let s = TrafficStats::new(2, 8);
+        let s = TrafficStats::new(2);
         s.record_p2p(0, MsgClass::GradientPart, 100);
         s.record_broadcast(0, MsgClass::Commitment, 32);
         s.record_p2p(1, MsgClass::AggregatedPart, 50);
-        assert_eq!(s.total_bytes(0), 100 + 32 * 8);
+        // A broadcast is one logical message on the protocol plane,
+        // whatever the transport's fan-out.
+        assert_eq!(s.total_bytes(0), 100 + 32);
         assert_eq!(s.total_bytes(1), 50);
-        assert_eq!(s.max_peer_bytes(), 100 + 256);
+        assert_eq!(s.max_peer_bytes(), 132);
         let snap = s.snapshot();
-        assert_eq!(snap[0].msgs[MsgClass::Commitment as usize], 8);
+        assert_eq!(snap[0].msgs[MsgClass::Commitment as usize], 1);
         s.reset();
         assert_eq!(s.max_peer_bytes(), 0);
+    }
+
+    #[test]
+    fn wire_plane_is_separate() {
+        let s = TrafficStats::new(2);
+        s.record_broadcast(0, MsgClass::Commitment, 32);
+        // The transport wrote the frame to 3 overlay links...
+        for _ in 0..3 {
+            s.record_wire(0, 40);
+        }
+        // ...and peer 1 relayed it onward twice.
+        s.record_relay(1, 40);
+        s.record_relay(1, 40);
+        assert_eq!(s.total_bytes(0), 32);
+        assert_eq!(s.total_bytes(1), 0); // relays never hit the protocol plane
+        assert_eq!(s.wire_bytes(0), 120);
+        assert_eq!(s.wire_bytes(1), 80);
+        assert_eq!(s.max_peer_wire_bytes(), 120);
+        let w = s.wire_snapshot();
+        assert_eq!(w[1].relay_msgs, 2);
+        assert_eq!(w[0].relay_bytes, 0);
+        s.reset();
+        assert_eq!(s.max_peer_wire_bytes(), 0);
     }
 }

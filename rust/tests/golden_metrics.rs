@@ -61,6 +61,7 @@ fn perfect_fabric_64_peer_run_matches_golden_digest() {
         seed: 7,
         verify_signatures: false,
         gossip_fanout: 8,
+        session_mac: false,
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::empty(),
         segments: vec![],

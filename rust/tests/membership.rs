@@ -70,6 +70,7 @@ fn churn_cfg() -> RunConfig {
         seed: 7,
         verify_signatures: false,
         gossip_fanout: 8,
+        session_mac: false,
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::parse("join:5@2,leave:2@4").unwrap(),
         segments: vec![],
@@ -343,6 +344,7 @@ fn socket_churn_cluster_is_bit_identical_to_in_process_runs() {
         seed: 7,
         verify_signatures: true,
         gossip_fanout: 8,
+        session_mac: false,
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::parse("join:4@2,leave:1@3").unwrap(),
         segments: vec![],

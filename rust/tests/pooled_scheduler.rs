@@ -52,6 +52,7 @@ fn sweep_cfg(n: usize, byz: usize, steps: u64, attack_start: u64) -> RunConfig {
         seed: 7,
         verify_signatures: false,
         gossip_fanout: 8,
+        session_mac: false,
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::empty(),
         segments: vec![],

@@ -285,7 +285,7 @@ mod custom {
         let steps = 30u64;
         let source = quad();
         let params0 = source.init_params(0);
-        let cluster = build_cluster(n, 900, 8, true);
+        let cluster = build_cluster(n, 900, true);
         let mut handles = Vec::new();
         for net in cluster {
             let peer = net.id;

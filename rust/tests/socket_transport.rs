@@ -12,9 +12,15 @@
 //!   `cluster-smoke` CI job runs at 8 peers).
 //! - Mesh-build failure behaviour: a missing peer times the build out
 //!   instead of hanging it.
+//! - Gossip-overlay acceptance: the same cluster over sparse overlay
+//!   links (broadcasts crossing honest relays) reproduces the digest,
+//!   delivers equivocation evidence to every honest peer, and survives
+//!   a crashed relay on stride redundancy alone.
 //!
 //! Frame-codec edge cases (split reads, oversized/garbage rejection)
-//! live next to the codec in `rust/src/net/socket.rs`.
+//! live next to the codec in `rust/src/net/socket.rs`; overlay-purity
+//! property tests live next to `Overlay::derive` in
+//! `rust/src/net/gossip.rs`.
 
 use btard::coordinator::adversary::AdversarySpec;
 use btard::coordinator::attacks::{AttackSchedule, CollusionBoard};
@@ -30,7 +36,8 @@ use btard::crypto::Mont;
 use btard::harness::{merge_reports, run_digest, PeerReport};
 use btard::net::socket::SocketNet;
 use btard::net::{
-    bind_ephemeral, derive_keypair, NetworkProfile, Roster, RosterEntry, SocketConfig, Transport,
+    bind_ephemeral, derive_keypair, slots, MsgClass, NetworkProfile, Roster, RosterEntry,
+    SocketConfig, Transport,
 };
 use std::time::Duration;
 
@@ -62,6 +69,7 @@ fn socket_cfg() -> RunConfig {
         seed: 7,
         verify_signatures: true,
         gossip_fanout: 8,
+        session_mac: false,
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::empty(),
         segments: vec![],
@@ -70,8 +78,11 @@ fn socket_cfg() -> RunConfig {
 
 /// Run the config over a loopback TCP mesh, one endpoint per thread,
 /// mirroring separate processes: every peer builds its own source,
-/// board and traffic stats, and shares nothing but the roster.
-fn run_socket_cluster(cfg: &RunConfig, workload: &WorkloadSpec) -> Vec<PeerReport> {
+/// board and traffic stats, and shares nothing but the roster. With
+/// `gossip` set the endpoints keep only their overlay links and every
+/// broadcast crosses relays (the same wiring `harness::cluster` uses
+/// for `TransportKind::Gossip`).
+fn run_socket_cluster(cfg: &RunConfig, workload: &WorkloadSpec, gossip: bool) -> Vec<PeerReport> {
     let n = cfg.n_peers;
     let mont = Mont::new();
     let mut listeners = Vec::with_capacity(n);
@@ -95,8 +106,11 @@ fn run_socket_cluster(cfg: &RunConfig, workload: &WorkloadSpec) -> Vec<PeerRepor
             let mont = Mont::new();
             let secret = derive_keypair(&mont, cfg.seed, k);
             let scfg = SocketConfig {
+                gossip,
                 gossip_fanout: cfg.gossip_fanout,
+                overlay_seed: cfg.seed,
                 verify_signatures: cfg.verify_signatures,
+                session_mac: cfg.session_mac,
                 connect_timeout: Duration::from_secs(30),
                 ..SocketConfig::default()
             };
@@ -121,7 +135,7 @@ fn four_peer_socket_cluster_is_bit_identical_to_in_process_runs() {
     let pooled = run_digest(&run_btard_pooled(&cfg, workload.build(), 2));
     assert_eq!(threaded, pooled, "in-process execution models must agree first");
 
-    let reports = run_socket_cluster(&cfg, &workload);
+    let reports = run_socket_cluster(&cfg, &workload, false);
     // Per-peer traffic totals are recorded independently per endpoint;
     // every live peer paid something.
     assert!(reports.iter().all(|r| r.own_bytes > 0), "{reports:?}");
@@ -130,6 +144,69 @@ fn four_peer_socket_cluster_is_bit_identical_to_in_process_runs() {
         run_digest(&merged),
         threaded,
         "a perfect-link socket cluster must reproduce the in-process digest bit-for-bit"
+    );
+}
+
+#[test]
+fn four_peer_gossip_cluster_is_bit_identical_to_in_process_runs() {
+    // The same scenario, but every endpoint keeps only its overlay
+    // links: broadcasts reach most peers through relays, yet the
+    // protocol plane — and therefore the digest — must not move. This
+    // is the transport-independence contract extended to a sparse
+    // topology: protocol-plane accounting charges one logical broadcast
+    // whatever the dissemination fan-out, and relays carry the origin's
+    // signature so delivered envelopes are indistinguishable from
+    // direct ones.
+    let cfg = socket_cfg();
+    let workload = WorkloadSpec::Quadratic { dim: 64, mu: 0.1, l: 2.0, sigma: 1.0, seed: 9 };
+    let reference = run_digest(&run_btard_threaded(&cfg, workload.build()));
+    let reports = run_socket_cluster(&cfg, &workload, true);
+    let merged = merge_reports(cfg.n_peers, reports).unwrap();
+    assert_eq!(
+        run_digest(&merged),
+        reference,
+        "a gossip-overlay socket cluster must reproduce the in-process digest bit-for-bit"
+    );
+}
+
+#[test]
+fn gossip_relays_deliver_equivocation_evidence_to_every_honest_peer() {
+    // An equivocator broadcasts per-recipient contradictory payloads.
+    // Over the overlay those variants travel through honest relays
+    // (relay-once per *variant*: the tracker forwards a contradicting
+    // digest instead of deduplicating it), so every honest peer must
+    // end up holding two signed envelopes for one (step, slot, from)
+    // key — transferable ban evidence — and ban the equivocator at the
+    // same step the in-process run does.
+    let mut cfg = socket_cfg();
+    cfg.byzantine = vec![3];
+    cfg.attack =
+        Some((AdversarySpec::parse("equivocate").unwrap(), AttackSchedule::from_step(1)));
+    let workload = WorkloadSpec::Quadratic { dim: 64, mu: 0.1, l: 2.0, sigma: 1.0, seed: 9 };
+    let reference = run_btard_threaded(&cfg, workload.build());
+    assert!(
+        reference.ban_events.iter().any(|b| b.target == 3),
+        "scenario must actually ban the equivocator in-process: {:?}",
+        reference.ban_events
+    );
+    let reports = run_socket_cluster(&cfg, &workload, true);
+    // Every honest peer independently recorded the identical ban
+    // evidence before any merging.
+    for r in &reports {
+        if r.id != 3 {
+            assert_eq!(
+                r.ban_events,
+                reference.ban_events,
+                "peer {} must hold the same ban evidence as the in-process run",
+                r.id
+            );
+        }
+    }
+    let merged = merge_reports(cfg.n_peers, reports).unwrap();
+    assert_eq!(
+        run_digest(&merged),
+        run_digest(&reference),
+        "equivocation through relays must converge to the in-process digest"
     );
 }
 
@@ -171,6 +248,79 @@ fn cluster_cli_forks_processes_and_matches_the_in_process_digest() {
     let roster = std::fs::read_to_string(out.join("roster.json")).unwrap();
     assert!(roster.contains("\"pubkey\""), "{roster}");
     std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn gossip_broadcasts_survive_a_crashed_relay() {
+    // Crash-robustness of the overlay comes from stride redundancy, not
+    // re-derivation: with fanout 2 the 4-peer overlay is the seeded
+    // ring with +1 and +2 stride edges, and removing any single node
+    // leaves the survivors strongly connected. Peer 3 connects, then
+    // drops its endpoint before anyone broadcasts; the three live peers
+    // must still deliver every live origin's broadcast to every live
+    // peer purely over the remaining relay edges.
+    let mont = Mont::new();
+    let n = 4;
+    let seed = 23;
+    let (listeners, addrs): (Vec<_>, Vec<_>) = (0..n).map(|_| bind_ephemeral().unwrap()).unzip();
+    let roster = Roster {
+        peers: addrs
+            .into_iter()
+            .enumerate()
+            .map(|(k, addr)| RosterEntry {
+                id: k,
+                addr,
+                pubkey: derive_keypair(&mont, seed, k).public,
+            })
+            .collect(),
+    };
+    let scfg = SocketConfig {
+        gossip: true,
+        gossip_fanout: 2,
+        overlay_seed: seed,
+        connect_timeout: Duration::from_secs(20),
+        ..SocketConfig::default()
+    };
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(n));
+    let handles: Vec<_> = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(k, listener)| {
+            let roster = roster.clone();
+            let scfg = scfg.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let mont = Mont::new();
+                let mut net =
+                    SocketNet::connect(listener, &roster, k, derive_keypair(&mont, seed, k), &scfg)
+                        .unwrap();
+                barrier.wait(); // everyone fully meshed
+                if k == 3 {
+                    drop(net); // the crash: links FIN, relays stop
+                    barrier.wait();
+                    return None;
+                }
+                barrier.wait(); // peer 3 is gone before any broadcast
+                net.set_timeout(Duration::from_secs(20));
+                net.broadcast(2, slots::GRAD_COMMIT, MsgClass::Commitment, vec![k as u8; 5]);
+                for from in 0..3 {
+                    let env = net
+                        .recv_keyed(2, slots::GRAD_COMMIT, &|e| e.from == from)
+                        .unwrap_or_else(|e| {
+                            panic!("peer {k} missing broadcast from {from} after crash: {e:?}")
+                        });
+                    assert_eq!(env.payload.to_vec(), vec![from as u8; 5]);
+                    assert!(
+                        env.verify_with(&Mont::new(), &roster.peers[from].pubkey),
+                        "relayed envelopes keep the origin's transferable signature"
+                    );
+                }
+                Some(net)
+            })
+        })
+        .collect();
+    let nets: Vec<_> = handles.into_iter().map(|h| h.join().expect("peer thread")).collect();
+    drop(nets);
 }
 
 #[test]
