@@ -6,7 +6,21 @@
 //! slot in the id-indexed tables — but which ids are **live** changes at
 //! *epoch boundaries*. A boundary is the start of any training step
 //! named by the run's churn schedule (`join:<peer>@<step>`,
-//! `leave:<peer>@<step>`); applying its deltas bumps the roster epoch.
+//! `leave:<peer>@<step>`, `crash:<peer>@<step>`,
+//! `rejoin:<peer>@<step>`); applying its deltas bumps the roster epoch.
+//!
+//! ## Crash and rejoin
+//!
+//! `crash:<p>@<s>` models an abrupt death: at boundary `s` the peer is
+//! excised exactly like a leaver — **not** ELIMINATEd-by-timeout into a
+//! ban — but silently (no LEAVE broadcast; a dead process has no
+//! farewell). Every crash must pair with a later `rejoin:<p>@<s'>`,
+//! where the peer re-enters through the same sponsor-snapshot path a
+//! fresh joiner uses. At snapshot install the rejoiner re-derives its
+//! purely-local accumulators (RNG cursor, equivocation memory) from
+//! consensus data, so an in-process run that simulates the crash window
+//! by holding the peer out and a multi-process run whose subprocess is
+//! genuinely SIGKILLed and restarted produce bit-identical digests.
 //!
 //! Determinism contract (the property the whole refactor hangs on):
 //! membership transitions are driven by the **schedule** — shared config
@@ -64,8 +78,10 @@ use super::messages::{BanReason, GradCommit, Reader, VerifyScalars, Writer};
 use super::optimizer::Optimizer;
 use super::partition::OwnerMap;
 use super::step::{draw_validators, PeerCtx, StepArchive};
-use crate::crypto::Digest;
+use crate::crypto::{sha256_parts, Digest};
+use crate::net::gossip::EquivocationTracker;
 use crate::net::{slots, Envelope, MsgClass, PeerId};
+use crate::util::rng::Rng;
 use std::time::Duration;
 
 // ---------------------------------------------------------------------------
@@ -80,6 +96,19 @@ pub enum ChurnKind {
     /// The peer departs gracefully at the boundary (distinct from
     /// ELIMINATE: no ban event, no mutual-removal tax).
     Leave,
+    /// The peer dies abruptly at the boundary: excised like a leaver —
+    /// NOT ELIMINATEd-by-timeout into a ban — but silently (a dead
+    /// process broadcasts nothing, so unlike `Leave` there is no signed
+    /// departure artifact). Every `crash` must be paired with a later
+    /// `rejoin` for the same peer; a permanent abrupt departure is what
+    /// `leave` models.
+    Crash,
+    /// The crashed peer re-enters at this boundary via the same
+    /// sponsor-snapshot path a fresh joiner uses. Its local
+    /// accumulators (RNG cursor, equivocation memory) are re-derived
+    /// from consensus data at install, so a restarted process and an
+    /// in-process simulation of the crash window stay bit-identical.
+    Rejoin,
 }
 
 /// One scheduled membership change: `peer` joins or leaves at the start
@@ -111,14 +140,17 @@ impl MembershipSchedule {
         &self.events
     }
 
-    /// Parse one entry: `join:<peer>@<step>` or `leave:<peer>@<step>`.
+    /// Parse one entry: `join:<peer>@<step>`, `leave:<peer>@<step>`,
+    /// `crash:<peer>@<step>` or `rejoin:<peer>@<step>`.
     fn parse_entry(s: &str) -> Result<ChurnEvent, String> {
-        let (kind_str, rest) = s
-            .split_once(':')
-            .ok_or_else(|| format!("churn entry '{s}' is not '<join|leave>:<peer>@<step>'"))?;
+        let (kind_str, rest) = s.split_once(':').ok_or_else(|| {
+            format!("churn entry '{s}' is not '<join|leave|crash|rejoin>:<peer>@<step>'")
+        })?;
         let kind = match kind_str {
             "join" => ChurnKind::Join,
             "leave" => ChurnKind::Leave,
+            "crash" => ChurnKind::Crash,
+            "rejoin" => ChurnKind::Rejoin,
             other => return Err(format!("churn entry '{s}': unknown kind '{other}'")),
         };
         let (peer_str, step_str) = rest
@@ -181,6 +213,8 @@ impl MembershipSchedule {
                 let kind = match e.kind {
                     ChurnKind::Join => "join",
                     ChurnKind::Leave => "leave",
+                    ChurnKind::Crash => "crash",
+                    ChurnKind::Rejoin => "rejoin",
                 };
                 format!("{kind}:{}@{}", e.peer, e.step)
             })
@@ -250,6 +284,58 @@ impl MembershipSchedule {
                 }
             }
         }
+        // Crash/rejoin come in ordered pairs: a crash with no rejoin is
+        // what `leave` models, and a rejoin with no crash re-admits a
+        // peer that never left. The ordering chain per peer is
+        // join < crash < rejoin < leave (each link only when both ends
+        // exist).
+        for e in &self.events {
+            match e.kind {
+                ChurnKind::Crash => {
+                    let Some(rejoin) = self.rejoin_step(e.peer) else {
+                        return Err(format!(
+                            "churn: peer {} crashes at step {} with no scheduled rejoin — \
+                             use leave:{}@{} for a permanent departure",
+                            e.peer, e.step, e.peer, e.step
+                        ));
+                    };
+                    if rejoin <= e.step {
+                        return Err(format!(
+                            "churn: peer {} rejoins at step {rejoin} but only crashes at \
+                             step {}",
+                            e.peer, e.step
+                        ));
+                    }
+                    if let Some(join) = self.join_step(e.peer) {
+                        if join >= e.step {
+                            return Err(format!(
+                                "churn: peer {} crashes at step {} but only joins at \
+                                 step {join}",
+                                e.peer, e.step
+                            ));
+                        }
+                    }
+                }
+                ChurnKind::Rejoin => {
+                    if self.crash_step(e.peer).is_none() {
+                        return Err(format!(
+                            "churn: peer {} rejoins at step {} but never crashes",
+                            e.peer, e.step
+                        ));
+                    }
+                    if let Some(leave) = self.leave_step(e.peer) {
+                        if leave <= e.step {
+                            return Err(format!(
+                                "churn: peer {} leaves at step {leave} but is still down \
+                                 until its rejoin at step {}",
+                                e.peer, e.step
+                            ));
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
         // The cluster needs ≥ 2 live ids at every point of the schedule
         // — at step 0 and after every boundary. Walk the ban-free
         // join/leave trajectory (a necessary static check; runtime bans
@@ -285,16 +371,84 @@ impl MembershipSchedule {
 
     /// The step at which `peer` joins (None = founding member).
     pub fn join_step(&self, peer: PeerId) -> Option<u64> {
-        self.events
+        self.step_of(peer, ChurnKind::Join)
+    }
+
+    /// The step at which `peer` leaves gracefully (None = stays).
+    pub fn leave_step(&self, peer: PeerId) -> Option<u64> {
+        self.step_of(peer, ChurnKind::Leave)
+    }
+
+    /// The step at which `peer` crashes (None = never crashes).
+    pub fn crash_step(&self, peer: PeerId) -> Option<u64> {
+        self.step_of(peer, ChurnKind::Crash)
+    }
+
+    /// The step at which `peer` rejoins after its crash.
+    pub fn rejoin_step(&self, peer: PeerId) -> Option<u64> {
+        self.step_of(peer, ChurnKind::Rejoin)
+    }
+
+    fn step_of(&self, peer: PeerId, kind: ChurnKind) -> Option<u64> {
+        self.events.iter().find(|e| e.peer == peer && e.kind == kind).map(|e| e.step)
+    }
+
+    /// True when `peer` enters the roster at this boundary — either its
+    /// scheduled join or its post-crash rejoin. Drives
+    /// [`stage_boundary_join`]'s am-I-the-entrant test.
+    pub fn enters_at(&self, peer: PeerId, step: u64) -> bool {
+        self.join_step(peer) == Some(step) || self.rejoin_step(peer) == Some(step)
+    }
+
+    /// True when `peer` sits out training step `step` entirely: before
+    /// its scheduled join, or inside its crash window `[crash, rejoin)`.
+    /// The execution models hold such a peer out of the step — no
+    /// stages, no ticks, no traffic — which is exactly what a dead (or
+    /// not-yet-started) process does across a real process boundary.
+    pub fn held_out(&self, peer: PeerId, step: u64) -> bool {
+        if self.join_step(peer).is_some_and(|j| step < j) {
+            return true;
+        }
+        match (self.crash_step(peer), self.rejoin_step(peer)) {
+            (Some(c), Some(r)) => step >= c && step < r,
+            _ => false,
+        }
+    }
+
+    /// The boundary's *graceful* leavers only (`leave`, never `crash`):
+    /// the peers that broadcast a signed LEAVE before stopping. A
+    /// crasher is excised at the same point in the boundary but sends
+    /// nothing — a dead process has no farewell.
+    pub fn graceful_leavers_at(&self, step: u64) -> Vec<PeerId> {
+        let mut out: Vec<PeerId> = self
+            .events
             .iter()
-            .find(|e| e.peer == peer && e.kind == ChurnKind::Join)
-            .map(|e| e.step)
+            .filter(|e| e.step == step && e.kind == ChurnKind::Leave)
+            .map(|e| e.peer)
+            .collect();
+        out.sort_unstable();
+        out
     }
 
     /// Per-peer join steps over the whole universe (0 = founding
     /// member) — the socket transport's link-epoch table.
     pub fn join_steps(&self, n_peers: usize) -> Vec<u64> {
         (0..n_peers).map(|p| self.join_step(p).unwrap_or(0)).collect()
+    }
+
+    /// Per-peer crash steps over the whole universe — the socket
+    /// transport's wire-gate table (sends into a peer's crash window
+    /// are suppressed, matching what a dead process receives).
+    pub fn crash_steps(&self, n_peers: usize) -> Vec<Option<u64>> {
+        (0..n_peers).map(|p| self.crash_step(p)).collect()
+    }
+
+    /// Per-peer rejoin steps over the whole universe — the socket
+    /// transport's link-revival table (dead out-links to a crashed peer
+    /// become dialable again from its rejoin step, and a restarted
+    /// process HELLOs at this epoch).
+    pub fn rejoin_steps(&self, n_peers: usize) -> Vec<Option<u64>> {
+        (0..n_peers).map(|p| self.rejoin_step(p)).collect()
     }
 
     /// The full roster trajectory as an epoch table: `(first_step,
@@ -326,15 +480,20 @@ impl MembershipSchedule {
         self.events.iter().any(|e| e.step == step)
     }
 
-    /// The boundary's deltas: (joins, leaves), each sorted by id.
+    /// The boundary's roster deltas: (entrants, departures), each
+    /// sorted by id. A crash folds into the departures and a rejoin
+    /// into the entrants: the roster arithmetic (excision, admission,
+    /// owner re-derivation) is identical — only the protocol artifacts
+    /// differ (no LEAVE broadcast from a crasher, see
+    /// [`MembershipSchedule::graceful_leavers_at`]).
     pub fn deltas_at(&self, step: u64) -> (Vec<PeerId>, Vec<PeerId>) {
         let mut joins = Vec::new();
         let mut leaves = Vec::new();
         for e in &self.events {
             if e.step == step {
                 match e.kind {
-                    ChurnKind::Join => joins.push(e.peer),
-                    ChurnKind::Leave => leaves.push(e.peer),
+                    ChurnKind::Join | ChurnKind::Rejoin => joins.push(e.peer),
+                    ChurnKind::Leave | ChurnKind::Crash => leaves.push(e.peer),
                 }
             }
         }
@@ -613,11 +772,13 @@ pub fn stage_boundary_apply(
     if joins.is_empty() && leaves.is_empty() {
         return false; // not a boundary; tick parity only
     }
-    if leaves.contains(&me) {
+    if ctx.membership.schedule.graceful_leavers_at(step).contains(&me) {
         // Graceful departure: a signed, auditable artifact distinct from
         // ELIMINATE. Nobody's state transition waits on it (the schedule
         // drives the excision), so its arrival timing cannot diverge the
-        // cluster.
+        // cluster. A *crasher* never reaches this stage at its crash
+        // step (the execution models hold it out), and sends nothing —
+        // the silent excision is the point.
         ctx.net.broadcast(step, slots::sub(slots::LEAVE, me), MsgClass::Control, vec![]);
         return true;
     }
@@ -683,7 +844,7 @@ pub fn stage_boundary_join(
 ) -> bool {
     ctx.net.tick();
     let me = ctx.net.id();
-    if ctx.membership.schedule.join_step(me) != Some(step) {
+    if !ctx.membership.schedule.enters_at(me, step) {
         return true;
     }
     // Signed JOIN announcement: the pubkey the roster (and every
@@ -766,6 +927,25 @@ fn install_snapshot(
     ctx.membership.epoch = snap.epoch;
     ctx.ledger = BanLedger::from_events(snap.ban_events);
     ctx.archive = snap.archive;
+    if ctx.membership.schedule.rejoin_step(me) == Some(step) {
+        // A rejoiner's local accumulators must be a pure function of
+        // consensus data, or the two ways of living through a crash
+        // window — an in-process peer that merely skips the steps (its
+        // RNG cursor and equivocation memory frozen where the crash
+        // left them) and a genuinely restarted process (both reset by
+        // construction) — would diverge bit-for-bit after the rejoin.
+        // Re-derive the RNG from (global seed, id, rejoin step) and
+        // drop the equivocation memory on both paths. The snapshot
+        // already carries every piece of *consensus* state; these are
+        // the only purely-local survivors.
+        ctx.local_rng = Rng::from_digest(&sha256_parts(&[
+            b"btard-rejoin-rng",
+            &ctx.cfg.global_seed.to_le_bytes(),
+            &(me as u64).to_le_bytes(),
+            &step.to_le_bytes(),
+        ]));
+        ctx.equiv = EquivocationTracker::new();
+    }
     // Synchronize the logical phase clock with the cluster: the joiner
     // never ticked while held out, and latency-gated deliveries
     // (network simulation) are stamped against the senders' clocks —
@@ -858,6 +1038,91 @@ mod tests {
         assert!(MembershipSchedule::parse("join:3@2,leave:1@2,leave:2@2")
             .unwrap()
             .validate(4, 6)
+            .is_ok());
+    }
+
+    #[test]
+    fn crash_rejoin_schedules_parse_and_fold() {
+        let s = MembershipSchedule::parse("rejoin:3@6,crash:3@4").unwrap();
+        assert_eq!(s.canonical(), "crash:3@4,rejoin:3@6");
+        assert_eq!(s.crash_step(3), Some(4));
+        assert_eq!(s.rejoin_step(3), Some(6));
+        assert_eq!(s.crash_steps(4), vec![None, None, None, Some(4)]);
+        assert_eq!(s.rejoin_steps(4), vec![None, None, None, Some(6)]);
+        // Crashers are founding members: join_steps ignores the crash.
+        assert_eq!(s.join_steps(4), vec![0, 0, 0, 0]);
+        assert_eq!(s.initial_live(4), vec![0, 1, 2, 3]);
+        // The crash folds into the departures, the rejoin into the
+        // entrants — but only `leave` produces a graceful leaver.
+        assert_eq!(s.deltas_at(4), (vec![], vec![3]));
+        assert_eq!(s.deltas_at(6), (vec![3], vec![]));
+        assert!(s.graceful_leavers_at(4).is_empty());
+        assert!(s.enters_at(3, 6));
+        assert!(!s.enters_at(3, 4));
+        // The crash window [4, 6) holds the peer out; everyone else
+        // never is.
+        assert!(!s.held_out(3, 3));
+        assert!(s.held_out(3, 4));
+        assert!(s.held_out(3, 5));
+        assert!(!s.held_out(3, 6));
+        assert!(!s.held_out(1, 4));
+        // Round trip, and the roster timeline walks both boundaries.
+        assert_eq!(MembershipSchedule::parse(&s.canonical()).unwrap(), s);
+        assert_eq!(
+            s.roster_timeline(4),
+            vec![(0, vec![0, 1, 2, 3]), (4, vec![0, 1, 2]), (6, vec![0, 1, 2, 3])]
+        );
+        assert!(s.validate(4, 8).is_ok());
+    }
+
+    #[test]
+    fn crash_rejoin_validation_catches_nonsense() {
+        // A crash with no rejoin is what `leave` models.
+        assert!(MembershipSchedule::parse("crash:3@4").unwrap().validate(4, 8).is_err());
+        // A rejoin with no crash re-admits a peer that never left.
+        assert!(MembershipSchedule::parse("rejoin:3@6").unwrap().validate(4, 8).is_err());
+        // Rejoin must come strictly after the crash.
+        assert!(MembershipSchedule::parse("crash:3@4,rejoin:3@4")
+            .unwrap()
+            .validate(4, 8)
+            .is_err());
+        assert!(MembershipSchedule::parse("crash:3@5,rejoin:3@4")
+            .unwrap()
+            .validate(4, 8)
+            .is_err());
+        // A late joiner must be in before it can crash.
+        assert!(MembershipSchedule::parse("join:3@4,crash:3@4,rejoin:3@6")
+            .unwrap()
+            .validate(4, 8)
+            .is_err());
+        assert!(MembershipSchedule::parse("join:3@2,crash:3@4,rejoin:3@6")
+            .unwrap()
+            .validate(4, 8)
+            .is_ok());
+        // A graceful leave must come after the rejoin, not during the
+        // crash window.
+        assert!(MembershipSchedule::parse("crash:3@2,rejoin:3@4,leave:3@3")
+            .unwrap()
+            .validate(4, 8)
+            .is_err());
+        assert!(MembershipSchedule::parse("crash:3@2,rejoin:3@4,leave:3@6")
+            .unwrap()
+            .validate(4, 8)
+            .is_ok());
+        // Peer 0 cannot crash (it records metrics).
+        assert!(MembershipSchedule::parse("crash:0@2,rejoin:0@4")
+            .unwrap()
+            .validate(4, 8)
+            .is_err());
+        // The live-count walk folds the crash in: a 2-peer universe
+        // cannot afford to lose one even temporarily.
+        assert!(MembershipSchedule::parse("crash:1@2,rejoin:1@4")
+            .unwrap()
+            .validate(2, 8)
+            .is_err());
+        assert!(MembershipSchedule::parse("crash:1@2,rejoin:1@4")
+            .unwrap()
+            .validate(3, 8)
             .is_ok());
     }
 

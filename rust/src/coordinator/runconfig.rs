@@ -21,7 +21,8 @@
 //!   "eval_every": 20, "verify_signatures": true,
 //!   "gossip_fanout": 8, "session_mac": false,
 //!   "network": "lossy:0.05",
-//!   "churn": ["join:8@3", "leave:2@6"],
+//!   "churn": ["join:8@3", "leave:2@6", "crash:4@4", "rejoin:4@6"],
+//!   "checkpoint": {"interval": 2, "dir": "results/ckpt", "keep": 2},
 //!   "transport": "local",
 //!   "workload": {"kind": "quadratic", "dim": 1024, "mu": 0.1,
 //!                 "L": 2.0, "sigma": 1.0, "seed": 9}
@@ -46,12 +47,26 @@
 //! `net::sim::NetworkProfile::from_json` for the full schema.
 //!
 //! `churn` is the dynamic-membership schedule: an array of
-//! `join:<peer>@<step>` / `leave:<peer>@<step>` entries (or one
+//! `join:<peer>@<step>` / `leave:<peer>@<step>` /
+//! `crash:<peer>@<step>` / `rejoin:<peer>@<step>` entries (or one
 //! comma-separated string). `peers` is the id *universe* — every peer
 //! that will ever exist — and scheduled joiners are simply not live
-//! until their boundary step. Schedules that cannot fire (peer outside
-//! the universe, step past the run, peer 0 churning, leave before join)
-//! are hard errors. See `coordinator::membership` for the protocol.
+//! until their boundary step. A `crash` excises the peer abruptly (no
+//! LEAVE broadcast — the cluster runner really SIGKILLs the process)
+//! and its `rejoin` re-enters through the sponsor-snapshot JOIN path at
+//! the next epoch boundary. Schedules that cannot fire (peer outside
+//! the universe, step past the run, peer 0 churning, leave before join,
+//! a Byzantine peer crashing) are hard errors. See
+//! `coordinator::membership` for the protocol.
+//!
+//! `checkpoint` enables periodic crash-recovery checkpoints: every
+//! `interval` completed steps each peer atomically writes
+//! `ckpt_<peer>_<steps>.bin` (params, optimizer state, ban ledger, step
+//! archive, roster, RNG cursor — see `runtime::checkpoint`) under
+//! `dir`, keeping the newest `keep` per peer. Checkpointing is
+//! digest-neutral: a restarted peer may warm-start from its latest
+//! checkpoint, but the sponsor snapshot at the rejoin boundary remains
+//! authoritative for every consensus-visible bit.
 //!
 //! `transport` selects the message substrate: `"local"` (the in-process
 //! fabric / network simulation, the default), `"socket"` (a real TCP
@@ -89,8 +104,10 @@ use crate::model::mlp::MlpModel;
 use crate::model::synthetic::Quadratic;
 use crate::model::GradientSource;
 use crate::net::NetworkProfile;
+use crate::runtime::checkpoint::CheckpointConfig;
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
+use std::path::PathBuf;
 use std::sync::Arc;
 
 /// Which message substrate a run uses (the `transport` config key).
@@ -270,6 +287,24 @@ pub fn parse_run_config_full(text: &str) -> Result<LoadedRunConfig> {
             };
             schedule.validate(peers, steps).map_err(|e| anyhow!("{e}"))?;
             cfg.churn = schedule;
+        }
+    }
+
+    // crash-recovery checkpointing (null ⇒ disabled)
+    if let Some(ck) = j.get("checkpoint") {
+        if *ck != Json::Null {
+            let interval = ck
+                .get("interval")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("checkpoint.interval must be a positive integer"))?;
+            let dir = ck
+                .get("dir")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("checkpoint.dir must be a string path"))?;
+            let keep = ck.get("keep").and_then(|v| v.as_usize()).unwrap_or(2);
+            let c = CheckpointConfig { interval, dir: PathBuf::from(dir), keep };
+            c.validate().map_err(|e| anyhow!("{e}"))?;
+            cfg.checkpoint = Some(c);
         }
     }
 
@@ -537,6 +572,23 @@ pub fn write_run_config(
         let entries: Vec<Json> =
             cfg.churn.canonical_entries().iter().map(|e| Json::str(e)).collect();
         root.push(("churn", Json::Arr(entries)));
+    }
+    if let Some(ck) = &cfg.checkpoint {
+        // The cluster runner round-trips the config to its children
+        // through this writer, so the checkpoint block must survive it —
+        // a restarted peer can only warm-start if its first life was
+        // actually writing checkpoints.
+        let dir = ck.dir.to_str().ok_or_else(|| {
+            anyhow!("checkpoint.dir is not valid UTF-8 and cannot be serialized to JSON")
+        })?;
+        root.push((
+            "checkpoint",
+            Json::obj(vec![
+                ("interval", exact_u64(ck.interval, "checkpoint.interval")?),
+                ("dir", Json::str(dir)),
+                ("keep", Json::num(ck.keep as f64)),
+            ]),
+        ));
     }
 
     if let Some((spec, schedule)) = &cfg.attack {
@@ -866,6 +918,7 @@ mod tests {
         assert_eq!(a.clip_lambda, b.clip_lambda);
         assert_eq!(a.network, b.network);
         assert_eq!(a.churn, b.churn);
+        assert_eq!(a.checkpoint, b.checkpoint);
         assert_eq!(format!("{:?}", a.protocol), format!("{:?}", b.protocol));
         assert_eq!(format!("{:?}", a.opt), format!("{:?}", b.opt));
         match (&a.attack, &b.attack) {
@@ -904,6 +957,42 @@ mod tests {
         assert_cfg_eq(&cfg, &loaded.cfg);
         assert_eq!(loaded.transport, TransportKind::Socket);
         assert_eq!(loaded.workload, workload);
+    }
+
+    #[test]
+    fn checkpoint_block_parses_validates_and_roundtrips() {
+        let cfg = parse_run_config(
+            r#"{"peers": 4, "steps": 8,
+                "checkpoint": {"interval": 2, "dir": "results/ckpt"}}"#,
+        )
+        .unwrap();
+        let ck = cfg.checkpoint.expect("checkpoint block");
+        assert_eq!(ck.interval, 2);
+        assert_eq!(ck.dir, PathBuf::from("results/ckpt"));
+        assert_eq!(ck.keep, 2, "keep defaults to 2");
+        // Absent and null both mean disabled.
+        assert!(parse_run_config("{}").unwrap().checkpoint.is_none());
+        assert!(parse_run_config(r#"{"checkpoint": null}"#).unwrap().checkpoint.is_none());
+        // A block that can never fire is a hard error, not a silent no-op.
+        assert!(parse_run_config(r#"{"checkpoint": {"interval": 0, "dir": "x"}}"#).is_err());
+        assert!(parse_run_config(r#"{"checkpoint": {"dir": "x"}}"#).is_err());
+        assert!(parse_run_config(r#"{"checkpoint": {"interval": 2}}"#).is_err());
+        assert!(parse_run_config(r#"{"checkpoint": {"interval": 2, "dir": "x", "keep": 0}}"#)
+            .is_err());
+
+        // Round-trip through the writer, alongside a crash/rejoin
+        // schedule — the exact shape the cluster runner hands a
+        // crash-recovery cell's subprocesses.
+        let mut cfg = RunConfig::quick(6, 8);
+        cfg.churn = MembershipSchedule::parse("crash:2@3,rejoin:2@5").unwrap();
+        cfg.checkpoint =
+            Some(CheckpointConfig { interval: 2, dir: PathBuf::from("results/ckpt"), keep: 3 });
+        let text =
+            write_run_config(&cfg, TransportKind::Socket, &WorkloadSpec::default_mlp()).unwrap();
+        assert!(text.contains("crash:2@3"), "{text}");
+        assert!(text.contains("checkpoint"), "{text}");
+        let loaded = parse_run_config_full(&text).unwrap();
+        assert_cfg_eq(&cfg, &loaded.cfg);
     }
 
     #[test]

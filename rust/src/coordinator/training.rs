@@ -23,7 +23,7 @@ use super::adversary::{Adversary, AdversarySpec, GradientCtx, SurfaceSpec};
 use super::aggregators::Aggregator;
 use super::attacks::{AttackSchedule, CollusionBoard};
 use super::membership::{
-    stage_boundary_apply, stage_boundary_join, Membership, MembershipSchedule,
+    stage_boundary_apply, stage_boundary_join, ChurnKind, Membership, MembershipSchedule,
 };
 use super::optimizer::{clip_global_norm, Lamb, LrSchedule, Optimizer, Sgd};
 use super::step::{
@@ -34,6 +34,7 @@ use super::step::{
 };
 use crate::model::GradientSource;
 use crate::net::{build_transports, NetworkProfile, PeerFaults, PeerId, RecvMode, Transport};
+use crate::runtime::checkpoint::{CheckpointConfig, CheckpointWriter};
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
@@ -95,9 +96,15 @@ pub struct RunConfig {
     /// partitions) simulated by the `SimNet` transport backend.
     pub network: NetworkProfile,
     /// Dynamic-membership schedule (`join:<peer>@<step>`,
-    /// `leave:<peer>@<step>`). Empty = static roster, bit-identical to
+    /// `leave:<peer>@<step>`, `crash:<peer>@<step>`,
+    /// `rejoin:<peer>@<step>`). Empty = static roster, bit-identical to
     /// the pre-membership behaviour. See `coordinator::membership`.
     pub churn: MembershipSchedule,
+    /// Periodic crash-recovery checkpoints (None = off). Writes are
+    /// pure side effects — no RNG draws, no messages — so enabling
+    /// them never moves a run's metrics digest. See
+    /// `runtime::checkpoint`.
+    pub checkpoint: Option<CheckpointConfig>,
     /// Optimizer parameter segments (from the artifact manifest; empty
     /// for Rust-native models).
     pub segments: Vec<crate::runtime::ParamSegment>,
@@ -124,6 +131,7 @@ impl RunConfig {
             session_mac: false,
             network: NetworkProfile::perfect(),
             churn: MembershipSchedule::empty(),
+            checkpoint: None,
             segments: vec![],
         }
     }
@@ -295,6 +303,27 @@ pub fn validate_churn(cfg: &RunConfig) {
     if let Err(e) = cfg.churn.validate(cfg.n_peers, cfg.steps) {
         panic!("{e}");
     }
+    // A Byzantine peer cannot crash/rejoin: its adversary state
+    // (collusion memory, observed params) is purely local and
+    // unreconstructible from consensus data, so a genuinely restarted
+    // attacker process could not be made bit-identical to the
+    // in-process simulation of its crash window. The crash-recovery
+    // story models honest volunteers dying, which is also the paper's
+    // open-collaboration regime.
+    for e in cfg.churn.events() {
+        if e.kind == ChurnKind::Crash && cfg.byzantine.contains(&e.peer) {
+            panic!(
+                "churn: peer {} is Byzantine and cannot crash/rejoin — adversary state \
+                 does not survive a restart deterministically (use leave:{}@{} instead)",
+                e.peer, e.peer, e.step
+            );
+        }
+    }
+    if let Some(ck) = &cfg.checkpoint {
+        if let Err(e) = ck.validate() {
+            panic!("{e}");
+        }
+    }
 }
 
 /// BTARD-CLIPPED-SGD wraps the source so validators recompute the same
@@ -365,7 +394,7 @@ pub fn run_btard_threaded(cfg: &RunConfig, source: Arc<dyn GradientSource>) -> R
         let board = board.clone();
         let handle = std::thread::Builder::new()
             .name(format!("peer-{peer}"))
-            .spawn(move || peer_main(net, cfg, source, init_params, board))
+            .spawn(move || peer_main(net, cfg, source, init_params, board, LifeSpan::Whole))
             .expect("spawn peer thread");
         handles.push(handle);
     }
@@ -406,9 +435,8 @@ struct PeerTask {
     error: Option<StepError>,
     /// Banned, left, or collapsed: stops participating in further steps.
     done: bool,
-    /// Scheduled join step (None = founding member): the task is held
-    /// out of the active set — no stages, no ticks — until this step.
-    join_at: Option<u64>,
+    /// Periodic crash-recovery checkpoint writer (None = off).
+    ckpt: Option<CheckpointWriter>,
     step_t0: Instant,
 }
 
@@ -654,6 +682,15 @@ fn apply_step_output(task: &mut PeerTask, step: u64, out: StepOutput) {
     if banned {
         task.done = true;
     }
+    if let Some(w) = task.ckpt.as_mut() {
+        // A failed write degrades durability, never the run: training
+        // state is untouched either way (the write is a pure side
+        // effect), so a full disk must not kill an otherwise-healthy
+        // peer.
+        if let Err(e) = w.after_step(step, &task.ctx, &task.params, &*task.opt) {
+            eprintln!("peer {}: checkpoint write failed at step {step}: {e}", task.peer);
+        }
+    }
 }
 
 fn dispatch(shared: &PoolShared, stage: StageId, step: u64) {
@@ -710,7 +747,10 @@ pub fn run_btard_pooled(
                 state: None,
                 error: None,
                 done: false,
-                join_at: cfg.churn.join_step(peer),
+                ckpt: cfg
+                    .checkpoint
+                    .clone()
+                    .map(|ck| CheckpointWriter::new(ck, cfg.seed, peer)),
                 step_t0: Instant::now(),
             })
         })
@@ -738,8 +778,11 @@ pub fn run_btard_pooled(
         }
 
         'run: for step in 0..cfg.steps {
-            // Tasks whose join step is still ahead are held out entirely
-            // (no stages, no ticks) — they enter the active set at their
+            // Tasks whose join step is still ahead — or that sit inside
+            // their scheduled crash window [crash, rejoin) — are held
+            // out entirely (no stages, no ticks): exactly what a
+            // not-yet-started or dead process does across a real
+            // process boundary. They (re-)enter the active set at their
             // boundary, where the membership stages admit them.
             let active: Vec<usize> = shared
                 .tasks
@@ -747,7 +790,7 @@ pub fn run_btard_pooled(
                 .enumerate()
                 .filter(|(_, cell)| {
                     let t = lock_task(cell);
-                    !t.done && t.error.is_none() && t.join_at.map_or(true, |j| j <= step)
+                    !t.done && t.error.is_none() && !cfg.churn.held_out(t.peer, step)
                 })
                 .map(|(i, _)| i)
                 .collect();
@@ -947,12 +990,34 @@ fn build_peer_ctx(
     }
 }
 
-/// One peer's whole training run over an already-built transport
-/// endpoint: the entry point a peer *process* uses. The in-process
-/// threaded model calls it once per peer thread; `btard peer` calls it
-/// exactly once with a `SocketNet` endpoint (blocking receives — there
-/// is no cross-process stage barrier, so drain mode's never-block
-/// contract cannot hold over sockets). `source` must already be
+/// Which slice of its scheduled lifetime this `peer_main` invocation
+/// covers. The in-process models simulate a peer's whole life in one
+/// call — a scheduled crash window is just steps it skips — but across
+/// a real process boundary the life splits into two invocations in two
+/// different OS processes, and each must know where its half ends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LifeSpan {
+    /// Simulate the peer's whole scheduled life, skipping any crash
+    /// window in place (both in-process models, and socket peers with
+    /// no crash scheduled).
+    Whole,
+    /// First life of a crash-scheduled socket peer: return at the crash
+    /// step (the process is then actually killed by the cluster
+    /// runner).
+    UntilCrash,
+    /// Second life, in the restarted process: skip every step before
+    /// the scheduled rejoin, then re-enter through the sponsor-snapshot
+    /// boundary like a fresh joiner.
+    FromRejoin,
+}
+
+/// One peer's training run over an already-built transport endpoint:
+/// the entry point a peer *process* uses. The in-process threaded model
+/// calls it once per peer thread with [`LifeSpan::Whole`]; `btard peer`
+/// calls it exactly once with a `SocketNet` endpoint (blocking receives
+/// — there is no cross-process stage barrier, so drain mode's
+/// never-block contract cannot hold over sockets) and the life slice
+/// its process covers. `source` must already be
 /// `prepare_source`-wrapped and `cfg` `validate_attack_spec`-checked;
 /// `init_params` must be `source.init_params(cfg.seed)` so every
 /// process provably starts from the same parameters.
@@ -962,21 +1027,42 @@ pub fn peer_main(
     source: Arc<dyn GradientSource>,
     init_params: Vec<f32>,
     board: Arc<CollusionBoard>,
+    life: LifeSpan,
 ) -> PeerOutput {
     let mut ctx = build_peer_ctx(net, &cfg, source, init_params.len(), &board);
     let me = ctx.net.id();
-    let my_join = cfg.churn.join_step(me);
     let mut params = init_params;
     let mut opt = cfg.opt.build(params.len(), cfg.segments.clone());
+    let mut ckpt =
+        cfg.checkpoint.clone().map(|ck| CheckpointWriter::new(ck, cfg.seed, me));
     let mut metrics = Vec::new();
     let mut steps_done = 0u64;
     let mut final_metric = f64::NAN;
 
     'steps: for step in 0..cfg.steps {
-        // A scheduled late joiner sits out every step before its
-        // boundary: no stages, no ticks, no traffic.
-        if my_join.map_or(false, |j| step < j) {
-            continue;
+        match life {
+            // Held-out steps — before a scheduled join, or inside the
+            // crash window — are sat out entirely: no stages, no
+            // ticks, no traffic, matching what a not-yet-started or
+            // dead process does.
+            LifeSpan::Whole => {
+                if cfg.churn.held_out(me, step) {
+                    continue;
+                }
+            }
+            LifeSpan::UntilCrash => {
+                if cfg.churn.crash_step(me) == Some(step) {
+                    break 'steps; // the runner SIGKILLs this process
+                }
+                if cfg.churn.held_out(me, step) {
+                    continue;
+                }
+            }
+            LifeSpan::FromRejoin => {
+                if cfg.churn.rejoin_step(me).is_some_and(|r| step < r) {
+                    continue;
+                }
+            }
         }
         if cfg.churn.has_delta_at(step) {
             // Boundary stages, in the same order the pooled scheduler
@@ -1007,6 +1093,12 @@ pub fn peer_main(
             t0.elapsed().as_secs_f64(),
         );
         steps_done = step + 1;
+        if let Some(w) = ckpt.as_mut() {
+            // Degrades durability, never the run (see the pooled hook).
+            if let Err(e) = w.after_step(step, &ctx, &params, &*opt) {
+                eprintln!("peer {me}: checkpoint write failed at step {step}: {e}");
+            }
+        }
         if banned {
             break; // we were banned (Byzantine caught, or eliminated)
         }

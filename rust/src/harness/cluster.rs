@@ -24,7 +24,10 @@
 //!   binds an ephemeral loopback port and publishes `addr_<id>`; the
 //!   parent assembles and atomically publishes `roster.json`; children
 //!   pick it up and build the mesh — no port-reservation races), waits,
-//!   merges, and writes the combined CSV + summary.
+//!   merges, and writes the combined CSV + summary. Crash-scheduled
+//!   peers (`crash:<p>@<s>` churn) are genuinely SIGKILLed when they
+//!   park at their crash step and forked again with `--restart`; the
+//!   summary records every child's exit code/signal per life.
 //! - [`run_peer`] — one peer process's whole life, also reachable with a
 //!   pre-written roster file (`btard peer --roster`) for real LAN runs
 //!   where no parent process exists.
@@ -36,10 +39,11 @@ use crate::coordinator::runconfig::{
     write_run_config, LoadedRunConfig, TransportKind, WorkloadSpec,
 };
 use crate::coordinator::training::{
-    peer_main, prepare_source, run_btard_pooled, validate_attack_spec, validate_churn, RunConfig,
-    RunResult, StepMetric,
+    peer_main, prepare_source, run_btard_pooled, validate_attack_spec, validate_churn, LifeSpan,
+    RunConfig, RunResult, StepMetric,
 };
 use crate::net::socket::{bind_ephemeral, derive_keypair, SocketConfig, SocketNet};
+use crate::runtime::checkpoint::{latest_checkpoint, Checkpoint};
 use crate::net::{PeerId, Roster, RosterEntry, Transport};
 use crate::util::csv::{format_f64, CsvWriter};
 use crate::util::json::Json;
@@ -357,11 +361,21 @@ fn atomic_write(path: &Path, content: &str) -> Result<(), String> {
 /// One peer process's whole life: derive this run's keypair, find the
 /// roster, build the socket mesh, run the training loop, and return the
 /// report the parent merges. This is the body of `btard peer`.
+///
+/// `restarted` marks the *second* life of a crash-scheduled peer: the
+/// process publishes a fresh address as `addr_<id>.rejoin`, warm-starts
+/// from its latest checkpoint when one is configured (the sponsor
+/// snapshot at the rejoin boundary remains authoritative — the warm
+/// start only shrinks the recovery gap), runs [`LifeSpan::FromRejoin`],
+/// and folds the first life's traffic/recompute counters (persisted in
+/// the `crash_<id>.json` marker) back into its report so the merged
+/// digest matches the in-process run bit-for-bit.
 pub fn run_peer(
     loaded: &LoadedRunConfig,
     id: PeerId,
     endpoint: PeerEndpoint<'_>,
     connect_timeout: Duration,
+    restarted: bool,
 ) -> Result<PeerReport, String> {
     let cfg = &loaded.cfg;
     if !loaded.transport.is_socket() {
@@ -372,10 +386,25 @@ pub fn run_peer(
     if id >= cfg.n_peers {
         return Err(format!("--id {id} outside the {}-peer config", cfg.n_peers));
     }
+    let crash_steps = cfg.churn.crash_steps(cfg.n_peers);
+    let rejoin_steps = cfg.churn.rejoin_steps(cfg.n_peers);
+    let my_crash = crash_steps[id];
+    let my_rejoin = rejoin_steps[id];
+    if restarted && my_rejoin.is_none() {
+        return Err(format!(
+            "--restart given but the churn schedule has no rejoin step for peer {id}"
+        ));
+    }
+    if (my_crash.is_some() || restarted) && matches!(endpoint, PeerEndpoint::Roster(_)) {
+        return Err(format!(
+            "peer {id} has a crash/rejoin schedule; that needs the rendezvous runner \
+             (the restarted process must publish a fresh ephemeral address)"
+        ));
+    }
     let mont = crate::crypto::Mont::new();
     let secret = derive_keypair(&mont, cfg.seed, id);
 
-    let (listener, roster) = match endpoint {
+    let (listener, roster, rendezvous_dir) = match endpoint {
         PeerEndpoint::Roster(path) => {
             let roster = Roster::load(path)?;
             if roster.n() != cfg.n_peers {
@@ -388,11 +417,19 @@ pub fn run_peer(
             let addr = &roster.peers[id].addr;
             let listener = std::net::TcpListener::bind(addr)
                 .map_err(|e| format!("binding {addr}: {e}"))?;
-            (listener, roster)
+            (listener, roster, None)
         }
         PeerEndpoint::Rendezvous(dir) => {
             let (listener, addr) = bind_ephemeral().map_err(|e| format!("binding: {e}"))?;
-            atomic_write(&dir.join(format!("addr_{id}")), &addr)?;
+            // A restarted process must not clobber the founding roster's
+            // address file: incumbents resolve the second life's address
+            // from the `.rejoin` name at the rejoin boundary.
+            let addr_file = if restarted {
+                dir.join(format!("addr_{id}.rejoin"))
+            } else {
+                dir.join(format!("addr_{id}"))
+            };
+            atomic_write(&addr_file, &addr)?;
             let roster_path = dir.join("roster.json");
             let deadline = Instant::now() + connect_timeout;
             let roster = loop {
@@ -414,14 +451,17 @@ pub fn run_peer(
                     cfg.n_peers
                 ));
             }
-            if roster.peers[id].addr != addr {
+            // The roster necessarily lists the first life's (now dead)
+            // address for a restarted peer, so the self-consistency check
+            // only applies to founding lives.
+            if !restarted && roster.peers[id].addr != addr {
                 return Err(format!(
                     "rendezvous roster lists a different address for peer {id} \
                      ({} vs our {addr})",
                     roster.peers[id].addr
                 ));
             }
-            (listener, roster)
+            (listener, roster, Some(dir.to_path_buf()))
         }
     };
     if roster.peers[id].pubkey != secret.public {
@@ -452,6 +492,14 @@ pub fn run_peer(
         // mesh-build time vs lazily at each joiner's epoch boundary,
         // and the epoch every inbound HELLO must claim.
         join_steps: cfg.churn.join_steps(cfg.n_peers),
+        // Crash/rejoin schedule: incumbents let a crashed peer's links
+        // die without ELIMINATE and redial at the rejoin boundary; a
+        // restarted process builds no founding links and HELLOs at its
+        // rejoin epoch.
+        crash_steps: crash_steps.clone(),
+        rejoin_steps: rejoin_steps.clone(),
+        restarted,
+        rejoin_addr_dir: rendezvous_dir.clone(),
         ..SocketConfig::default()
     };
     let net = SocketNet::connect(listener, &roster, id, secret, &scfg)
@@ -461,11 +509,103 @@ pub fn run_peer(
     validate_attack_spec(cfg);
     validate_churn(cfg);
     let source = prepare_source(cfg, loaded.workload.build());
-    let init_params = source.init_params(cfg.seed);
+    let mut init_params = source.init_params(cfg.seed);
+    if restarted {
+        if let Some(ck) = &cfg.checkpoint {
+            // Warm start: the snapshot's params give the rejoiner a head
+            // start, but every digest-relevant bit still comes from the
+            // sponsor snapshot at the rejoin boundary, so a missing or
+            // stale checkpoint downgrades to a cold start, never an error.
+            match latest_checkpoint(&ck.dir, id) {
+                Some((steps, path)) => match Checkpoint::load(&path) {
+                    Ok(ckpt)
+                        if ckpt.run_seed == cfg.seed
+                            && ckpt.peer == id
+                            && ckpt.snapshot.params.len() == init_params.len() =>
+                    {
+                        let rejoin = my_rejoin.unwrap();
+                        eprintln!(
+                            "peer {id}: warm restart from checkpoint at step {steps} \
+                             (recovery gap {} steps to the rejoin boundary at {rejoin}; \
+                             the sponsor snapshot remains authoritative)",
+                            rejoin.saturating_sub(steps)
+                        );
+                        init_params = ckpt.snapshot.params.clone();
+                    }
+                    Ok(_) => eprintln!(
+                        "peer {id}: checkpoint {} is from a different run; cold start",
+                        path.display()
+                    ),
+                    Err(e) => eprintln!(
+                        "peer {id}: unreadable checkpoint {}: {e}; cold start",
+                        path.display()
+                    ),
+                },
+                None => eprintln!(
+                    "peer {id}: no checkpoint under {}; cold start",
+                    ck.dir.display()
+                ),
+            }
+        }
+    }
     let board = CollusionBoard::new();
-    let out = peer_main(Box::new(net), cfg.clone(), source, init_params, board);
+    let life = if restarted {
+        LifeSpan::FromRejoin
+    } else if my_crash.is_some() {
+        LifeSpan::UntilCrash
+    } else {
+        LifeSpan::Whole
+    };
+    let out = peer_main(Box::new(net), cfg.clone(), source, init_params, board, life);
     let own_bytes = info.stats.total_bytes(id);
-    Ok(PeerReport::from_output(id, out, own_bytes))
+
+    if life == LifeSpan::UntilCrash {
+        // First life of a scheduled crash: persist the accounting the
+        // restarted process folds back in, then park for the parent's
+        // SIGKILL — a scheduled crash must look like a real one to every
+        // other peer (no LEAVE, no clean socket shutdown, no exit code).
+        let dir = rendezvous_dir.as_ref().expect("crash schedules require rendezvous");
+        let marker = Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("steps_done", Json::num(out.steps_done as f64)),
+            ("own_bytes", Json::num(own_bytes as f64)),
+            ("recomputes", Json::num(out.recomputes as f64)),
+        ]);
+        atomic_write(&dir.join(format!("crash_{id}.json")), &marker.to_string_pretty())?;
+        eprintln!(
+            "peer {id}: crashed on schedule at step {} — awaiting SIGKILL",
+            my_crash.unwrap()
+        );
+        // Orphan cap: if no parent ever delivers the kill, don't linger
+        // as a detached process forever.
+        for _ in 0..600 {
+            std::thread::sleep(Duration::from_secs(1));
+        }
+        std::process::exit(0);
+    }
+
+    let mut report = PeerReport::from_output(id, out, own_bytes);
+    if restarted {
+        // The in-process models count a crash/rejoin peer's traffic and
+        // recomputes cumulatively across both lives; the process-split
+        // report must sum to the same totals or the digest proof breaks.
+        let dir = rendezvous_dir.as_ref().expect("restart requires rendezvous");
+        let marker_path = dir.join(format!("crash_{id}.json"));
+        let text = std::fs::read_to_string(&marker_path)
+            .map_err(|e| format!("reading crash marker '{}': {e}", marker_path.display()))?;
+        let j = Json::parse(&text)?;
+        let first_bytes = j
+            .get("own_bytes")
+            .and_then(|v| v.as_u64())
+            .ok_or("crash marker missing 'own_bytes'")?;
+        let first_recomputes = j
+            .get("recomputes")
+            .and_then(|v| v.as_u64())
+            .ok_or("crash marker missing 'recomputes'")?;
+        report.own_bytes += first_bytes;
+        report.recomputes += first_recomputes;
+    }
+    Ok(report)
 }
 
 // ---------------------------------------------------------------------------
@@ -512,6 +652,37 @@ fn log_tail(path: &Path) -> String {
     }
 }
 
+/// One row of the cluster summary's per-child exit accounting. `life`
+/// names which slice of the peer's schedule the process covered:
+/// `"whole"` (no crash scheduled), `"crash"` (first life, SIGKILLed at
+/// the crash step) or `"rejoin"` (the restarted process). A
+/// signal-killed child has no exit code; on non-Unix hosts the signal
+/// field is always null.
+fn exit_row(peer: usize, life: &str, status: &std::process::ExitStatus) -> Json {
+    #[cfg(unix)]
+    let signal = {
+        use std::os::unix::process::ExitStatusExt;
+        match status.signal() {
+            Some(sig) => Json::num(sig as f64),
+            None => Json::Null,
+        }
+    };
+    #[cfg(not(unix))]
+    let signal = Json::Null;
+    Json::obj(vec![
+        ("peer", Json::num(peer as f64)),
+        ("life", Json::str(life)),
+        (
+            "exit_code",
+            match status.code() {
+                Some(code) => Json::num(code as f64),
+                None => Json::Null,
+            },
+        ),
+        ("signal", signal),
+    ])
+}
+
 /// Fork an N-peer loopback cluster of `btard peer` subprocesses, wait
 /// for completion, merge the reports, and write the combined artifacts.
 /// `transport` picks the socket flavour — full mesh
@@ -544,6 +715,8 @@ pub fn run_cluster(
     // and a stale addr_<k> could hand the parent a dead port.
     for k in 0..n {
         let _ = std::fs::remove_file(opts.out_dir.join(format!("addr_{k}")));
+        let _ = std::fs::remove_file(opts.out_dir.join(format!("addr_{k}.rejoin")));
+        let _ = std::fs::remove_file(opts.out_dir.join(format!("crash_{k}.json")));
         let _ = std::fs::remove_file(opts.out_dir.join(format!("peer_{k}.json")));
     }
     let _ = std::fs::remove_file(opts.out_dir.join("roster.json"));
@@ -555,16 +728,21 @@ pub fn run_cluster(
     let config_path = opts.out_dir.join("config.json");
     atomic_write(&config_path, &config_json)?;
 
-    // Spawn the peers in rendezvous mode, logs to per-peer files.
-    let mut children = Vec::with_capacity(n);
-    let mut log_paths = Vec::with_capacity(n);
-    for k in 0..n {
-        let log_path = opts.out_dir.join(format!("peer_{k}.log"));
+    // Spawn the peers in rendezvous mode, logs to per-peer files. The
+    // same closure forks a crash-scheduled peer's second life with
+    // `--restart` (logs to `peer_<k>.restart.log` so the first life's
+    // record survives).
+    let spawn_peer = |k: usize, restart: bool| -> Result<(std::process::Child, PathBuf), String> {
+        let log_path = if restart {
+            opts.out_dir.join(format!("peer_{k}.restart.log"))
+        } else {
+            opts.out_dir.join(format!("peer_{k}.log"))
+        };
         let log = std::fs::File::create(&log_path)
             .map_err(|e| format!("creating {}: {e}", log_path.display()))?;
         let log_err = log.try_clone().map_err(|e| format!("cloning log handle: {e}"))?;
-        let child = std::process::Command::new(&opts.bin)
-            .arg("peer")
+        let mut cmd = std::process::Command::new(&opts.bin);
+        cmd.arg("peer")
             .arg("--id")
             .arg(k.to_string())
             .arg("--config")
@@ -574,11 +752,21 @@ pub fn run_cluster(
             .arg("--out")
             .arg(opts.out_dir.join(format!("peer_{k}.json")))
             .arg("--connect-timeout-ms")
-            .arg(opts.connect_timeout.as_millis().to_string())
+            .arg(opts.connect_timeout.as_millis().to_string());
+        if restart {
+            cmd.arg("--restart");
+        }
+        let child = cmd
             .stdout(std::process::Stdio::from(log))
             .stderr(std::process::Stdio::from(log_err))
             .spawn()
             .map_err(|e| format!("spawning peer {k} ({}): {e}", opts.bin.display()))?;
+        Ok((child, log_path))
+    };
+    let mut children = Vec::with_capacity(n);
+    let mut log_paths = Vec::with_capacity(n);
+    for k in 0..n {
+        let (child, log_path) = spawn_peer(k, false)?;
         children.push(child);
         log_paths.push(log_path);
     }
@@ -641,19 +829,65 @@ pub fn run_cluster(
         .save(&roster_path)
         .map_err(|e| format!("writing {}: {e}", roster_path.display()))?;
 
-    // Wait for the run, with a hard budget.
+    // Wait for the run, with a hard budget. Crash-scheduled peers get
+    // the real treatment: the child reaches its crash step, persists the
+    // `crash_<k>.json` marker and parks; the parent delivers a SIGKILL
+    // (so every other peer sees an abrupt socket death, exactly like a
+    // real crash) and forks the second life with `--restart`.
+    let crash_schedule = cfg.churn.crash_steps(n);
+    let mut awaiting_crash: Vec<bool> = crash_schedule.iter().map(|c| c.is_some()).collect();
+    let mut exits: Vec<(usize, Json)> = Vec::new();
     let run_deadline = Instant::now() + opts.run_timeout;
     let mut statuses: Vec<Option<std::process::ExitStatus>> = vec![None; n];
-    while statuses.iter().any(|s| s.is_none()) {
+    while statuses.iter().any(|s| s.is_none()) || awaiting_crash.iter().any(|&a| a) {
+        // Scheduled crashes first: the marker is the child's signal that
+        // it has parked at its crash step and is safe to kill.
+        for k in 0..n {
+            if awaiting_crash[k] && opts.out_dir.join(format!("crash_{k}.json")).exists() {
+                let _ = children[k].kill();
+                let status = match children[k].wait() {
+                    Ok(s) => s,
+                    Err(e) => {
+                        kill_all(&mut children);
+                        return Err(format!("waiting for killed peer {k}: {e}"));
+                    }
+                };
+                exits.push((k, exit_row(k, "crash", &status)));
+                match spawn_peer(k, true) {
+                    Ok((child, log_path)) => {
+                        children[k] = child;
+                        log_paths[k] = log_path;
+                    }
+                    Err(e) => {
+                        kill_all(&mut children);
+                        return Err(e);
+                    }
+                }
+                awaiting_crash[k] = false;
+            }
+        }
         let mut wait_err = None;
         for (k, child) in children.iter_mut().enumerate() {
-            if statuses[k].is_none() {
+            if statuses[k].is_none() && !awaiting_crash[k] {
                 match child.try_wait() {
                     Ok(status) => statuses[k] = status,
                     Err(e) => {
                         wait_err = Some(format!("waiting for peer {k}: {e}"));
                         break;
                     }
+                }
+            } else if awaiting_crash[k] {
+                // A crash-scheduled child that exits before writing its
+                // marker died for real (panic, rendezvous failure) —
+                // surface its log instead of waiting for a marker that
+                // will never come.
+                if let Ok(Some(status)) = child.try_wait() {
+                    let tail = log_tail(&log_paths[k]);
+                    kill_all(&mut children);
+                    return Err(format!(
+                        "crash-scheduled peer {k} exited with {status} before its \
+                         crash step:\n{tail}"
+                    ));
                 }
             }
         }
@@ -663,7 +897,7 @@ pub fn run_cluster(
             kill_all(&mut children);
             return Err(e);
         }
-        if statuses.iter().any(|s| s.is_none()) {
+        if statuses.iter().any(|s| s.is_none()) || awaiting_crash.iter().any(|&a| a) {
             if Instant::now() >= run_deadline {
                 kill_all(&mut children);
                 return Err(format!(
@@ -676,6 +910,8 @@ pub fn run_cluster(
     }
     for (k, status) in statuses.iter().enumerate() {
         let status = status.unwrap();
+        let life = if crash_schedule[k].is_some() { "rejoin" } else { "whole" };
+        exits.push((k, exit_row(k, life, &status)));
         if !status.success() {
             return Err(format!(
                 "peer {k} exited with {status}:\n{}",
@@ -683,6 +919,7 @@ pub fn run_cluster(
             ));
         }
     }
+    exits.sort_by_key(|(k, _)| *k);
 
     // Merge and write the combined artifacts.
     let reports: Vec<PeerReport> = (0..n)
@@ -744,6 +981,11 @@ pub fn run_cluster(
             },
         ),
         ("bans", Json::Arr(bans)),
+        // Per-child exit accounting: one row per OS process, so a
+        // crash-scheduled peer contributes a SIGKILLed "crash" row and a
+        // clean "rejoin" row (satellite evidence that the subprocess was
+        // really killed and restarted, not simulated).
+        ("peers", Json::Arr(exits.into_iter().map(|(_, row)| row).collect())),
     ]);
     atomic_write(&summary_path, &summary.to_string_pretty())?;
 

@@ -5,12 +5,14 @@
 
 pub mod cluster;
 pub mod scenarios;
+pub mod soak;
 
 pub use cluster::{
     inprocess_digest, merge_reports, run_cluster, run_digest, run_peer, ClusterOptions,
     ClusterOutcome, PeerEndpoint, PeerReport,
 };
 pub use scenarios::{run_matrix, Arm, CellResult, MatrixReport, ScenarioSpec};
+pub use soak::{run_soak, SoakCellResult, SoakOptions, SoakSummary};
 
 use crate::coordinator::training::{RunResult, StepMetric};
 use crate::util::csv::{format_f64, CsvWriter};

@@ -489,6 +489,7 @@ fn run_cell(
                     .unwrap_or_else(|| panic!("unknown network profile '{network}'")),
                 churn: schedule,
                 segments: vec![],
+                checkpoint: None,
             };
             run_btard_pooled(&cfg, source, spec.workers)
         }

@@ -1,0 +1,370 @@
+//! Seeded soak campaigns: long-running robustness sweeps over the
+//! (attack × network × churn × crash/rejoin) cell space.
+//!
+//! Every cell is derived *purely* from the campaign seed and the cell
+//! index — `Rng::from_digest(sha256("btard-soak-cell" ‖ seed ‖ idx))`
+//! picks the cluster size, step count and one value per axis — so a
+//! failing cell is reproducible from two integers: rerun
+//! `btard soak --seed S --cells N` and cell `i` is the same experiment,
+//! bit for bit.
+//!
+//! Each cell runs in-process on the pooled scheduler at two worker
+//! counts and is judged against the standing invariants of this
+//! codebase:
+//!
+//! - **worker invariance** — the digests of the 2-worker and 4-worker
+//!   runs are bit-identical (every cell, the core determinism
+//!   contract);
+//! - **completed** — the run finishes its scheduled steps;
+//! - **finite metric** — the final eval metric is a real number;
+//! - **honest peers unharmed** — no honest peer is ever banned
+//!   (perfect-network cells only: lossy links can legitimately
+//!   ELIMINATE an honest straggler, so the check is recorded as skipped
+//!   there);
+//! - **attacker banned** — enforced on perfect-network `equivocate`
+//!   cells, where detection is deterministic in the first attacking
+//!   step; for the gradient-space attacks a ban inside a short horizon
+//!   depends on validator sampling, so the check is recorded as skipped
+//!   rather than graded on luck;
+//! - **checkpoint neutrality** — crash/rejoin cells run once with
+//!   periodic checkpointing and once without; the digests must match
+//!   (checkpoints are recovery state, never consensus state).
+//!
+//! Outputs: one `btard-bench-v1` report per cell (wall time, steps,
+//! bans, recomputes — the same schema the perf gate consumes) and a
+//! campaign-level `soak_summary.json` with per-cell pass/fail and the
+//! failure strings. `run_soak` is the body of `btard soak`; CI runs a
+//! small `--quick` slice and archives the artifacts.
+
+use crate::coordinator::adversary::AdversarySpec;
+use crate::coordinator::attacks::AttackSchedule;
+use crate::coordinator::centered_clip::TauPolicy;
+use crate::coordinator::membership::MembershipSchedule;
+use crate::coordinator::optimizer::LrSchedule;
+use crate::coordinator::training::{run_btard_pooled, OptSpec, RunConfig};
+use crate::crypto::sha256_parts;
+use crate::harness::cluster::run_digest;
+use crate::model::synthetic::Quadratic;
+use crate::model::GradientSource;
+use crate::net::NetworkProfile;
+use crate::runtime::checkpoint::CheckpointConfig;
+use crate::util::bench::BenchReport;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+pub struct SoakOptions {
+    /// How many cells to derive and run.
+    pub cells: usize,
+    /// Campaign seed: the sole source of every cell's shape.
+    pub seed: u64,
+    /// Where the per-cell reports, checkpoints and the summary land.
+    pub out_dir: PathBuf,
+    /// Smaller workloads and step counts (the CI smoke slice).
+    pub quick: bool,
+}
+
+/// One cell's verdict, as recorded in `soak_summary.json`.
+pub struct SoakCellResult {
+    pub name: String,
+    /// Canonical digest of the (2-worker) run.
+    pub digest: String,
+    pub pass: bool,
+    /// Human-readable invariant violations (empty when `pass`).
+    pub failures: Vec<String>,
+    /// Invariants not applicable to this cell, with the reason.
+    pub skipped: Vec<String>,
+    pub wall_s: f64,
+}
+
+pub struct SoakSummary {
+    pub cells: Vec<SoakCellResult>,
+    /// Number of failed cells (the campaign's exit status).
+    pub failed: usize,
+    pub summary_path: PathBuf,
+}
+
+/// The four attack-axis values a cell can draw.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum AttackAxis {
+    None,
+    SignFlip,
+    Alie,
+    Equivocate,
+}
+
+impl AttackAxis {
+    fn key(self) -> &'static str {
+        match self {
+            AttackAxis::None => "calm",
+            AttackAxis::SignFlip => "signflip",
+            AttackAxis::Alie => "alie",
+            AttackAxis::Equivocate => "equiv",
+        }
+    }
+
+    fn spec(self) -> Option<&'static str> {
+        match self {
+            AttackAxis::None => None,
+            AttackAxis::SignFlip => Some("sign_flip:1000"),
+            AttackAxis::Alie => Some("alie"),
+            AttackAxis::Equivocate => Some("equivocate"),
+        }
+    }
+}
+
+/// One derived cell: everything `run_soak` needs to build the RunConfig
+/// and judge the outcome.
+struct Cell {
+    name: String,
+    cfg: RunConfig,
+    attack: AttackAxis,
+    perfect_net: bool,
+    /// Set on crash/rejoin cells: rerun without checkpointing and
+    /// compare digests.
+    crash_cell: bool,
+}
+
+/// Derive cell `idx` of campaign `seed` — a pure function of the two.
+fn derive_cell(seed: u64, idx: usize, quick: bool, out_dir: &Path) -> Result<Cell, String> {
+    let digest = sha256_parts(&[
+        b"btard-soak-cell",
+        &seed.to_le_bytes(),
+        &(idx as u64).to_le_bytes(),
+    ]);
+    let mut rng = Rng::from_digest(&digest);
+    let n = 5 + rng.below(3) as usize; // 5..=7 peers
+    let steps = if quick { 6 } else { 8 + rng.below(5) }; // 8..=12
+    let attack = match rng.below(4) {
+        0 => AttackAxis::None,
+        1 => AttackAxis::SignFlip,
+        2 => AttackAxis::Alie,
+        _ => AttackAxis::Equivocate,
+    };
+    let (net_key, network) = match rng.below(3) {
+        0 => ("perfect", NetworkProfile::perfect()),
+        1 => ("lossy", NetworkProfile::from_name("lossy:0.05").unwrap()),
+        _ => ("straggler", NetworkProfile::from_name("straggler:0.25").unwrap()),
+    };
+    // The churn axis never touches peer n-1 (the attacker when one is
+    // drawn) or peer 0 (the recorder/sponsor — schedules naming it are
+    // rejected anyway).
+    let (churn_key, churn) = match rng.below(4) {
+        0 => ("static", MembershipSchedule::empty()),
+        1 => ("join", MembershipSchedule::parse(&format!("join:{}@2", n - 2))?),
+        2 => ("leave", MembershipSchedule::parse(&format!("leave:1@{}", steps - 2))?),
+        _ => ("crash", MembershipSchedule::parse("crash:1@3,rejoin:1@5")?),
+    };
+    let crash_cell = churn_key == "crash";
+    // A schedule the derivation produced but the validator rejects is a
+    // harness bug, not a cell failure.
+    churn
+        .validate(n, steps)
+        .map_err(|e| format!("cell {idx}: derived an invalid churn schedule: {e}"))?;
+
+    let name = format!("cell{idx:02}_{}_{}_{}", attack.key(), net_key, churn_key);
+    let mut cfg = RunConfig::quick(n, steps);
+    cfg.seed = seed ^ (idx as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    cfg.protocol.global_seed = cfg.seed;
+    cfg.protocol.tau = TauPolicy::Fixed(1.0);
+    // Half the cluster validates: small cells need dense coverage for
+    // bans to be reachable inside the short horizon at all.
+    cfg.protocol.m_validators = (n / 2).max(2);
+    cfg.protocol.delta_max = 4.0;
+    cfg.opt = OptSpec::Sgd {
+        schedule: LrSchedule::Constant(0.1),
+        momentum: 0.0,
+        nesterov: false,
+    };
+    cfg.eval_every = 2;
+    cfg.verify_signatures = false;
+    cfg.network = network;
+    cfg.churn = churn;
+    if let Some(spec) = attack.spec() {
+        cfg.byzantine = vec![n - 1];
+        cfg.attack = Some((
+            AdversarySpec::parse(spec).map_err(|e| format!("cell {idx}: {e}"))?,
+            AttackSchedule::from_step(2),
+        ));
+    }
+    if crash_cell {
+        // Crash cells exercise the checkpoint writer too; neutrality is
+        // checked against a checkpoint-free rerun.
+        cfg.checkpoint = Some(CheckpointConfig {
+            interval: 2,
+            dir: out_dir.join(&name).join("ckpt"),
+            keep: 2,
+        });
+    }
+    Ok(Cell { name, cfg, attack, perfect_net: net_key == "perfect", crash_cell })
+}
+
+fn cell_source(cfg: &RunConfig, quick: bool) -> Arc<dyn GradientSource> {
+    let dim = if quick { 32 } else { 64 };
+    Arc::new(Quadratic::new(dim, 0.1, 2.0, 1.0, cfg.seed ^ 9))
+}
+
+/// Run the campaign: derive and execute every cell, judge the
+/// invariants, write the per-cell reports and the summary.
+pub fn run_soak(opts: &SoakOptions) -> Result<SoakSummary, String> {
+    std::fs::create_dir_all(&opts.out_dir)
+        .map_err(|e| format!("creating {}: {e}", opts.out_dir.display()))?;
+    let mut cells = Vec::with_capacity(opts.cells);
+    for idx in 0..opts.cells {
+        let cell = derive_cell(opts.seed, idx, opts.quick, &opts.out_dir)?;
+        let src = cell_source(&cell.cfg, opts.quick);
+        let t0 = Instant::now();
+        let r2 = run_btard_pooled(&cell.cfg, src.clone(), 2);
+        let r4 = run_btard_pooled(&cell.cfg, src.clone(), 4);
+        let mut failures = Vec::new();
+        let mut skipped = Vec::new();
+        let d2 = run_digest(&r2);
+        let d4 = run_digest(&r4);
+        if d2 != d4 {
+            failures.push(format!("worker_invariance: 2-worker {d2} != 4-worker {d4}"));
+        }
+        if r2.steps_done != cell.cfg.steps {
+            failures.push(format!(
+                "completed: {} of {} steps",
+                r2.steps_done, cell.cfg.steps
+            ));
+        }
+        if !r2.final_metric.is_finite() {
+            failures.push(format!("finite_metric: final metric is {}", r2.final_metric));
+        }
+        if cell.perfect_net {
+            let harmed: Vec<usize> = r2
+                .ban_events
+                .iter()
+                .map(|b| b.target)
+                .filter(|t| !cell.cfg.byzantine.contains(t))
+                .collect();
+            if !harmed.is_empty() {
+                failures.push(format!("honest_unharmed: honest peers banned: {harmed:?}"));
+            }
+        } else {
+            skipped
+                .push("honest_unharmed (lossy links may eliminate honest stragglers)".to_string());
+        }
+        match (cell.attack, cell.perfect_net) {
+            (AttackAxis::None, _) => {}
+            (AttackAxis::Equivocate, true) => {
+                let attacker = cell.cfg.n_peers - 1;
+                if !r2.ban_events.iter().any(|b| b.target == attacker) {
+                    failures.push(format!(
+                        "attacker_banned: equivocating peer {attacker} was never banned"
+                    ));
+                }
+            }
+            _ => skipped.push(
+                "attacker_banned (only graded on perfect-network equivocate cells)".to_string(),
+            ),
+        }
+        if cell.crash_cell {
+            let mut plain = cell.cfg.clone();
+            plain.checkpoint = None;
+            let d_plain = run_digest(&run_btard_pooled(&plain, src.clone(), 2));
+            if d_plain != d2 {
+                failures.push(format!(
+                    "checkpoint_neutral: with checkpoints {d2} != without {d_plain}"
+                ));
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+
+        let mut report = BenchReport::new(&cell.name);
+        report
+            .config("campaign_seed", Json::num(opts.seed as f64))
+            .config("cell", Json::num(idx as f64))
+            .config("attack", Json::str(cell.attack.key()))
+            .config("churn", Json::str(&cell.cfg.churn.canonical()))
+            .config("network", Json::str(if cell.perfect_net { "perfect" } else { "faulty" }))
+            .config("peers", Json::num(cell.cfg.n_peers as f64))
+            .config("steps", Json::num(cell.cfg.steps as f64))
+            .add_value("wall_s", "s", wall_s)
+            .add_value("steps_done", "count", r2.steps_done as f64)
+            .add_value("bans", "count", r2.ban_events.len() as f64)
+            .add_value("recomputes", "count", r2.recomputes as f64);
+        report
+            .write(&opts.out_dir)
+            .map_err(|e| format!("writing report for {}: {e}", cell.name))?;
+
+        cells.push(SoakCellResult {
+            name: cell.name,
+            digest: d2,
+            pass: failures.is_empty(),
+            failures,
+            skipped,
+            wall_s,
+        });
+    }
+
+    let failed = cells.iter().filter(|c| !c.pass).count();
+    let rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("name", Json::str(&c.name)),
+                ("digest", Json::str(&c.digest)),
+                ("pass", Json::Bool(c.pass)),
+                (
+                    "failures",
+                    Json::Arr(c.failures.iter().map(|f| Json::str(f)).collect()),
+                ),
+                (
+                    "skipped",
+                    Json::Arr(c.skipped.iter().map(|s| Json::str(s)).collect()),
+                ),
+                ("wall_s", Json::num(c.wall_s)),
+            ])
+        })
+        .collect();
+    let summary = Json::obj(vec![
+        ("campaign_seed", Json::num(opts.seed as f64)),
+        ("cells", Json::Arr(rows)),
+        ("failed", Json::num(failed as f64)),
+    ]);
+    let summary_path = opts.out_dir.join("soak_summary.json");
+    crate::util::atomic_write(&summary_path, &summary.to_string_pretty())
+        .map_err(|e| format!("writing {}: {e}", summary_path.display()))?;
+    Ok(SoakSummary { cells, failed, summary_path })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_derivation_is_a_pure_function_of_seed_and_index() {
+        let out = PathBuf::from("results/soak-test");
+        let a = derive_cell(7, 3, true, &out).unwrap();
+        let b = derive_cell(7, 3, true, &out).unwrap();
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.cfg.n_peers, b.cfg.n_peers);
+        assert_eq!(a.cfg.steps, b.cfg.steps);
+        assert_eq!(a.cfg.seed, b.cfg.seed);
+        assert_eq!(a.cfg.churn, b.cfg.churn);
+        // Different indices draw different cells (with overwhelming
+        // probability for this fixed seed — pinned here, so a derivation
+        // change is visible).
+        let c = derive_cell(7, 4, true, &out).unwrap();
+        assert!(a.name != c.name || a.cfg.seed != c.cfg.seed);
+    }
+
+    #[test]
+    fn every_derived_cell_validates_its_schedule() {
+        let out = PathBuf::from("results/soak-test");
+        for idx in 0..32 {
+            let cell = derive_cell(11, idx, false, &out).unwrap();
+            cell.cfg
+                .churn
+                .validate(cell.cfg.n_peers, cell.cfg.steps)
+                .expect("derived schedule must validate");
+            if let Some(ck) = &cell.cfg.checkpoint {
+                ck.validate().expect("derived checkpoint config must validate");
+            }
+        }
+    }
+}

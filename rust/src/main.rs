@@ -8,6 +8,8 @@
 //!               `cluster`, or launched by hand against a roster file)
 //!   ps          run a trusted-PS baseline with a chosen aggregator
 //!   scenarios   run a declarative {size}×{attack}×{arm} matrix sweep
+//!   soak        run a seeded (attack × network × churn × crash) soak
+//!               campaign with per-cell invariant checks
 //!   inspect     list the AOT artifacts in the manifest
 //!   selftest    quick end-to-end smoke test (no artifacts needed)
 //!
@@ -34,13 +36,14 @@ use btard::coordinator::training::{
 use btard::coordinator::{Aggregator, ProtocolConfig};
 use btard::data::synth_vision::SynthVision;
 use btard::harness::{
-    inprocess_digest, run_cluster, run_matrix, run_peer, ClusterOptions, PeerEndpoint, Recorder,
-    ScenarioSpec, Table,
+    inprocess_digest, run_cluster, run_matrix, run_peer, run_soak, ClusterOptions, PeerEndpoint,
+    Recorder, ScenarioSpec, SoakOptions, Table,
 };
 use btard::model::mlp::MlpModel;
 use btard::model::synthetic::Quadratic;
 use btard::model::GradientSource;
 use btard::net::NetworkProfile;
+use btard::runtime::checkpoint::CheckpointConfig;
 use btard::util::bench::{compare_reports, fmt_value};
 use btard::util::cli::Args;
 use btard::util::json::Json;
@@ -57,13 +60,14 @@ fn main() {
         "peer" => cmd_peer(&args),
         "ps" => cmd_ps(&args),
         "scenarios" => cmd_scenarios(&args),
+        "soak" => cmd_soak(&args),
         "inspect" => cmd_inspect(&args),
         "selftest" => cmd_selftest(),
         "bench-compare" => cmd_bench_compare(&args),
         _ => {
             println!(
                 "btard — Byzantine-Tolerant All-Reduce (ICML 2022 reproduction)\n\n\
-                 usage: btard <train|cluster|peer|ps|scenarios|inspect|selftest|bench-compare> [flags]\n\
+                 usage: btard <train|cluster|peer|ps|scenarios|soak|inspect|selftest|bench-compare> [flags]\n\
                  common flags:\n\
                  \x20 --workload mlp|quadratic    training objective\n\
                  \x20 --peers N --byzantine B     cluster composition\n\
@@ -85,10 +89,18 @@ fn main() {
                  \x20                             lossy[:drop], partitioned[:frac],\n\
                  \x20                             straggler[:frac] — seeded fault simulation\n\
                  \x20 --churn SCHEDULE            dynamic membership: comma-joined\n\
-                 \x20                             join:<peer>@<step> / leave:<peer>@<step>\n\
+                 \x20                             join:<peer>@<step> / leave:<peer>@<step> /\n\
+                 \x20                             crash:<peer>@<step> / rejoin:<peer>@<step>\n\
                  \x20                             entries (--peers is the id universe; joiners\n\
-                 \x20                             are admitted at their epoch boundary), e.g.\n\
+                 \x20                             are admitted at their epoch boundary; a crash\n\
+                 \x20                             excises the peer abruptly and its rejoin\n\
+                 \x20                             re-enters via a sponsor snapshot), e.g.\n\
                  \x20                             --churn join:8@3,leave:2@6\n\
+                 \x20 --checkpoint-interval K     crash-recovery checkpoints every K steps\n\
+                 \x20                             (0 = off, the default)\n\
+                 \x20 --checkpoint-dir DIR        checkpoint directory (default\n\
+                 \x20                             results/checkpoints)\n\
+                 \x20 --checkpoint-keep N         newest checkpoints kept per peer (default 2)\n\
                  \x20 --aggregator NAME           (ps) mean, coord_median, geo_median,\n\
                  \x20                             trimmed_mean, krum, centered_clip\n\
                  scenarios flags:\n\
@@ -118,6 +130,14 @@ fn main() {
                  \x20 --rendezvous DIR            ephemeral-port rendezvous (used by cluster)\n\
                  \x20 --out FILE.json             per-peer report path\n\
                  \x20 --connect-timeout-ms T      mesh-build budget (default 30000)\n\
+                 \x20 --restart                   this is the SECOND life of a crash-scheduled\n\
+                 \x20                             peer: publish addr_<id>.rejoin, warm-start\n\
+                 \x20                             from the latest checkpoint, rejoin at the\n\
+                 \x20                             scheduled epoch boundary\n\
+                 soak flags (seeded crash/attack/churn campaign):\n\
+                 \x20 --cells N --seed S          campaign size and derivation seed\n\
+                 \x20 --out DIR                   output directory (default results/soak)\n\
+                 \x20 --quick                     smaller workloads/steps for CI smoke\n\
                  bench-compare (the CI perf-regression gate):\n\
                  \x20 btard bench-compare BASELINE.json CURRENT.json [--tolerance 0.25]\n\
                  \x20                             diff two btard-bench-v1 reports; exits\n\
@@ -227,6 +247,23 @@ fn parse_churn(args: &Args) -> MembershipSchedule {
     }
 }
 
+/// Crash-recovery checkpointing from --checkpoint-interval /
+/// --checkpoint-dir / --checkpoint-keep (interval 0 = disabled, the
+/// default).
+fn parse_checkpoint(args: &Args) -> Option<CheckpointConfig> {
+    let interval = args.get_u64("checkpoint-interval", 0);
+    if interval == 0 {
+        return None;
+    }
+    let cfg = CheckpointConfig {
+        interval,
+        dir: PathBuf::from(args.get_str("checkpoint-dir", "results/checkpoints")),
+        keep: args.get_usize("checkpoint-keep", 2),
+    };
+    cfg.validate().unwrap_or_else(|e| panic!("{e}"));
+    Some(cfg)
+}
+
 fn parse_attack(args: &Args) -> Option<(AdversarySpec, AttackSchedule)> {
     // --aggregation-attack composes with (or stands in for) --attack,
     // through the one folding path all entry points share.
@@ -303,6 +340,7 @@ fn cmd_train(args: &Args) {
         network: parse_network(args).unwrap_or_default(),
         churn: parse_churn(args),
         segments: vec![],
+        checkpoint: parse_checkpoint(args),
     };
     let mode = parse_exec(args, n);
     run_and_report(cfg, source, mode);
@@ -414,6 +452,7 @@ fn cluster_run_config(args: &Args) -> RunConfig {
         network: NetworkProfile::perfect(),
         churn: parse_churn(args),
         segments: vec![],
+        checkpoint: parse_checkpoint(args),
     }
 }
 
@@ -521,12 +560,14 @@ fn cmd_peer(args: &Args) {
         rendezvous.as_ref().map(|d| d.join(&name)).unwrap_or_else(|| PathBuf::from(name))
     });
     let connect = Duration::from_millis(args.get_u64("connect-timeout-ms", 30_000));
+    let restarted = args.get_bool("restart");
     eprintln!(
-        "btard peer {id}/{}: building the socket mesh ({})…",
+        "btard peer {id}/{}: building the socket mesh ({}{})…",
         loaded.cfg.n_peers,
-        if roster.is_some() { "roster" } else { "rendezvous" }
+        if roster.is_some() { "roster" } else { "rendezvous" },
+        if restarted { ", restarted" } else { "" }
     );
-    let report = match run_peer(&loaded, id, endpoint, connect) {
+    let report = match run_peer(&loaded, id, endpoint, connect, restarted) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("btard peer {id}: {e}");
@@ -540,6 +581,48 @@ fn cmd_peer(args: &Args) {
         report.own_bytes,
         out.display()
     );
+}
+
+/// Seeded soak campaign: compose (attack × network × churn ×
+/// crash/rejoin) cells from one campaign seed, run each in-process at
+/// two worker counts, check the standing invariants, and write one
+/// btard-bench-v1 report per cell plus a campaign summary. Exits
+/// nonzero when any cell fails an invariant.
+fn cmd_soak(args: &Args) {
+    let opts = SoakOptions {
+        cells: args.get_usize("cells", 6),
+        seed: args.get_u64("seed", 7),
+        out_dir: PathBuf::from(args.get_str("out", "results/soak")),
+        quick: args.get_bool("quick"),
+    };
+    eprintln!(
+        "btard soak: {} cells from seed {} → {}{}",
+        opts.cells,
+        opts.seed,
+        opts.out_dir.display(),
+        if opts.quick { " (quick)" } else { "" }
+    );
+    let summary = run_soak(&opts).unwrap_or_else(|e| panic!("soak: {e}"));
+    let mut table = Table::new(&["cell", "pass", "wall_s", "failures"]);
+    for c in &summary.cells {
+        table.row(vec![
+            c.name.clone(),
+            if c.pass { "ok".to_string() } else { "FAIL".to_string() },
+            format!("{:.1}", c.wall_s),
+            c.failures.join("; "),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "soak: {}/{} cells passed | summary: {}",
+        summary.cells.iter().filter(|c| c.pass).count(),
+        summary.cells.len(),
+        summary.summary_path.display()
+    );
+    if summary.failed > 0 {
+        eprintln!("soak: {} cell(s) FAILED", summary.failed);
+        std::process::exit(1);
+    }
 }
 
 fn cmd_ps(args: &Args) {

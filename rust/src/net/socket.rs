@@ -107,6 +107,11 @@ pub const MAGIC: [u8; 4] = *b"BTRD";
 /// Default cap on a frame body (64 MiB ≈ a 16M-parameter f32 gradient
 /// part) — a hostile length prefix must not become an allocation bomb.
 pub const DEFAULT_MAX_FRAME: usize = 64 << 20;
+/// Default cap on one outbound link's unflushed backlog. A slow or dead
+/// peer must cost its own link, never its neighbours' memory: once this
+/// many bytes sit unflushed the link is condemned (see
+/// `IoLoop::enforce_backlog`). One max-size frame still fits.
+pub const DEFAULT_MAX_LINK_BACKLOG: usize = 64 << 20;
 
 const KIND_HELLO: u8 = 1;
 const KIND_ENVELOPE: u8 = 2;
@@ -735,6 +740,33 @@ pub struct SocketConfig {
     /// not-yet-admitted peers, and is the epoch an inbound HELLO must
     /// claim to be accepted.
     pub join_steps: Vec<u64>,
+    /// Per-peer scheduled crash step (`None` = never crashes; empty =
+    /// nobody does). During a peer's `[crash, rejoin)` window wire
+    /// sends to it are suppressed exactly like pre-join traffic — the
+    /// in-process fabrics deliver-and-discard instead, which is
+    /// observably identical (the peer drops the window's traffic at
+    /// snapshot install either way).
+    pub crash_steps: Vec<Option<u64>>,
+    /// Per-peer scheduled rejoin step. A peer with a rejoin step may
+    /// legitimately come back from the dead: its inbound HELLO may
+    /// claim the rejoin epoch, a condemned outbound link to it revives
+    /// on the first post-rejoin send, and its fresh address is looked
+    /// up through `rejoin_addr_dir`.
+    pub rejoin_steps: Vec<Option<u64>>,
+    /// This endpoint is the restarted second life of a crashed peer: it
+    /// announces itself with its *rejoin* epoch in every HELLO and
+    /// builds no founding links (everything forms lazily, like a late
+    /// joiner).
+    pub restarted: bool,
+    /// Where restarted peers publish their fresh listen address as
+    /// `addr_<id>.rejoin` (the roster row still holds the first life's
+    /// port, which the OS may hold in TIME_WAIT). Incumbents re-resolve
+    /// a rejoin-scheduled peer's address from this directory when they
+    /// revive its link.
+    pub rejoin_addr_dir: Option<std::path::PathBuf>,
+    /// Cap on one outbound link's unflushed byte backlog before the
+    /// link is condemned (see [`DEFAULT_MAX_LINK_BACKLOG`]).
+    pub max_link_backlog: usize,
 }
 
 impl Default for SocketConfig {
@@ -749,7 +781,34 @@ impl Default for SocketConfig {
             connect_timeout: Duration::from_secs(30),
             max_frame: DEFAULT_MAX_FRAME,
             join_steps: vec![],
+            crash_steps: vec![],
+            rejoin_steps: vec![],
+            restarted: false,
+            rejoin_addr_dir: None,
+            max_link_backlog: DEFAULT_MAX_LINK_BACKLOG,
         }
+    }
+}
+
+/// Whether frames for `to` at `step` belong on the wire: not before the
+/// peer's scheduled join, and not during its scheduled crash window.
+/// The in-process fabrics deliver-and-discard instead, which is
+/// observably identical — the peer drops the window's traffic at
+/// snapshot install either way.
+fn wire_admitted(
+    join_steps: &[u64],
+    crash_steps: &[Option<u64>],
+    rejoin_steps: &[Option<u64>],
+    to: PeerId,
+    step: u64,
+) -> bool {
+    if step < join_steps[to] {
+        return false;
+    }
+    match (crash_steps[to], rejoin_steps[to]) {
+        (Some(c), Some(r)) => step < c || step >= r,
+        (Some(c), None) => step < c,
+        _ => true,
     }
 }
 
@@ -861,6 +920,7 @@ fn accept_handshake(
     roster: &Roster,
     roster_digest: &[u8; 32],
     join_steps: &[u64],
+    rejoin_steps: &[Option<u64>],
     mont: &Mont,
     verify_signatures: bool,
     session_mac: bool,
@@ -874,11 +934,18 @@ fn accept_handshake(
         return Err(format!("HELLO claims peer {} (not a valid remote of peer {me})", h.id));
     }
     let expected_epoch = join_steps.get(h.id).copied().unwrap_or(0);
-    if h.epoch != expected_epoch {
+    // A crash-scheduled peer's restarted second life legitimately
+    // announces itself at its *rejoin* epoch — both admissions are
+    // schedule data, so both are acceptable claims; anything else is a
+    // stale replay.
+    let rejoin_epoch = rejoin_steps.get(h.id).copied().flatten();
+    if h.epoch != expected_epoch && Some(h.epoch) != rejoin_epoch {
         return Err(format!(
             "stale HELLO: peer {} claims roster epoch {} but is scheduled at epoch \
-             {expected_epoch}",
-            h.id, h.epoch
+             {expected_epoch}{}",
+            h.id,
+            h.epoch,
+            rejoin_epoch.map(|r| format!(" (rejoin epoch {r})")).unwrap_or_default()
         ));
     }
     if h.nonce != Roster::hello_nonce_from(roster_digest, h.id, h.epoch, me) {
@@ -989,7 +1056,9 @@ impl LoopWaker {
 /// for the I/O loop, each paired with a `LoopWaker` poke.
 enum IoCmd {
     /// Write one point-to-point envelope frame (lazy-dialing the link).
-    Send { to: PeerId, fields: Vec<u8> },
+    /// `step` is the envelope's protocol step — what decides whether a
+    /// condemned link to a rejoin-scheduled peer gets a fresh start.
+    Send { to: PeerId, step: u64, fields: Vec<u8> },
     /// Disseminate a broadcast this endpoint originated: full mesh
     /// writes it to every admitted peer, gossip mode to the overlay
     /// out-neighbours (pre-marking `digest` so echoes are not re-relayed).
@@ -1087,6 +1156,7 @@ struct HandshakeCtx {
     /// not re-hash the whole document per inbound connection.
     roster_digest: [u8; 32],
     join_steps: Vec<u64>,
+    rejoin_steps: Vec<Option<u64>>,
     verify_signatures: bool,
     /// Negotiated link-auth mode: every inbound HELLO must claim the
     /// same mode, and accepted links get their directional MAC key
@@ -1122,6 +1192,7 @@ fn spawn_handshake(ctx: Arc<HandshakeCtx>, stream: TcpStream, hard_deadline: Ins
                 &ctx.roster,
                 &ctx.roster_digest,
                 &ctx.join_steps,
+                &ctx.rejoin_steps,
                 &mont,
                 ctx.verify_signatures,
                 ctx.session_mac,
@@ -1177,6 +1248,13 @@ fn spawn_handshake(ctx: Arc<HandshakeCtx>, stream: TcpStream, hard_deadline: Ins
 /// machinery handles a peer that never comes up).
 const LATE_DIAL_BUDGET: Duration = Duration::from_secs(2);
 
+/// Wall-clock budget for dialing a rejoin-scheduled peer: its restarted
+/// process may still be binding its fresh listener and publishing the
+/// `addr_<id>.rejoin` file when the first post-rejoin send fires, so
+/// these dials retry instead of failing fast. Bounded well below the
+/// rejoiner's own boundary-join snapshot wait.
+const REJOIN_DIAL_BUDGET: Duration = Duration::from_secs(10);
+
 /// One connect attempt with a bounded timeout (late dials only — the
 /// mesh build keeps `dial_with_retry`, where the target may legitimately
 /// not have bound its listener yet).
@@ -1210,6 +1288,13 @@ struct IoLoop {
     hellos: Vec<Vec<u8>>,
     /// Per-peer join step (all zeros for a static roster).
     join_steps: Vec<u64>,
+    /// Per-peer scheduled crash / rejoin steps (see [`SocketConfig`]).
+    crash_steps: Vec<Option<u64>>,
+    rejoin_steps: Vec<Option<u64>>,
+    /// Where a restarted peer publishes its fresh listen address.
+    rejoin_addr_dir: Option<std::path::PathBuf>,
+    /// Backlog cap per outbound link (see `enforce_backlog`).
+    max_link_backlog: usize,
     /// Per-recipient session-MAC send state (us→peer key + counter).
     /// Owned by the loop so relayed frames share the same per-link
     /// counters as our own sends — no counter races, no gaps.
@@ -1301,9 +1386,9 @@ impl IoLoop {
 
     fn handle_cmd(&mut self, cmd: IoCmd, running: bool) {
         match cmd {
-            IoCmd::Send { to, fields } => {
+            IoCmd::Send { to, step, fields } => {
                 if running {
-                    self.queue_frame(to, &fields, false);
+                    self.queue_frame(to, step, &fields, false);
                 }
             }
             IoCmd::Broadcast { step, slot, digest, fields } => {
@@ -1323,11 +1408,20 @@ impl IoLoop {
                         relay.schedule.overlay_at(step).out_neighbors(self.me).to_vec()
                     }
                     None => (0..self.info.n_peers)
-                        .filter(|&to| to != self.me && step >= self.join_steps[to])
+                        .filter(|&to| {
+                            to != self.me
+                                && wire_admitted(
+                                    &self.join_steps,
+                                    &self.crash_steps,
+                                    &self.rejoin_steps,
+                                    to,
+                                    step,
+                                )
+                        })
                         .collect(),
                 };
                 for to in targets {
-                    self.queue_frame(to, &fields, false);
+                    self.queue_frame(to, step, &fields, false);
                 }
             }
             IoCmd::Inbound { peer, stream, fr } => self.install_inbound(peer, stream, fr, running),
@@ -1337,6 +1431,19 @@ impl IoLoop {
     }
 
     fn install_inbound(&mut self, peer: PeerId, stream: TcpStream, fr: FrameReader, running: bool) {
+        if running && self.inbound[peer].is_some() && self.rejoin_steps[peer].is_some() {
+            // A rejoin-scheduled peer's restarted process may re-HELLO
+            // before this loop noticed the first life's socket die.
+            // The new link passed the full handshake, so it supersedes
+            // the old one. (With signatures off this widens the
+            // existing replay-DoS surface from burn-the-slot to
+            // displace-the-slot — the module-docs caveat, same class.)
+            if let Some(old) = self.inbound[peer].take() {
+                let _ = old.stream.shutdown(Shutdown::Both);
+                let mut g = self.gauge.lock();
+                g.open_in = g.open_in.saturating_sub(1);
+            }
+        }
         if !running || self.inbound[peer].is_some() || stream.set_nonblocking(true).is_err() {
             if self.inbound[peer].is_some() {
                 eprintln!(
@@ -1394,9 +1501,21 @@ impl IoLoop {
     /// The MAC counter advances even when the link is dead or the write
     /// later fails — a broken link never delivers later frames, so a
     /// gap there is unobservable.
-    fn queue_frame(&mut self, to: PeerId, fields: &[u8], is_relay: bool) {
+    fn queue_frame(&mut self, to: PeerId, step: u64, fields: &[u8], is_relay: bool) {
         if to == self.me {
             return;
+        }
+        if matches!(self.out[to], OutLink::Dead)
+            && self.rejoin_steps[to].map_or(false, |r| step >= r)
+        {
+            // The link died with the peer's first life; its scheduled
+            // rejoin is a fresh process (fresh address, fresh reader),
+            // so the link state machine gets a fresh start — and the
+            // new stream's MAC counter restarts from zero.
+            self.out[to] = OutLink::Absent;
+            if let Some(mac) = &mut self.mac_send[to] {
+                mac.next_seq = 0;
+            }
         }
         let prefix = match &mut self.mac_send[to] {
             Some(mac) => {
@@ -1443,6 +1562,7 @@ impl IoLoop {
         if flush {
             self.try_flush(to);
         }
+        self.enforce_backlog(to);
         if is_relay {
             self.info.stats.record_relay(self.me, frame_len);
         } else {
@@ -1450,17 +1570,81 @@ impl IoLoop {
         }
     }
 
+    /// Kill a link whose unflushed backlog exceeded the cap: a slow or
+    /// dead peer must cost its own link, never its neighbours' memory
+    /// (a crashed peer's neighbours would otherwise buffer without
+    /// bound until its rejoin). The protocol's timeout/ELIMINATE
+    /// machinery — or the peer's scheduled rejoin revival — owns the
+    /// link from here.
+    fn enforce_backlog(&mut self, to: PeerId) {
+        let backlog = match &self.out[to] {
+            OutLink::Dialing { queued } => queued.len(),
+            OutLink::Open { pending, sent, .. } => pending.len() - sent,
+            _ => return,
+        };
+        if backlog <= self.max_link_backlog {
+            return;
+        }
+        let was_open = matches!(self.out[to], OutLink::Open { .. });
+        if let OutLink::Open { stream, .. } = &self.out[to] {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        eprintln!(
+            "socket mesh (peer {}): outbound link to peer {to} exceeded the {}-byte backlog \
+             cap ({backlog} bytes unflushed) — marking the link dead",
+            self.me, self.max_link_backlog
+        );
+        self.out[to] = OutLink::Dead;
+        if was_open {
+            let mut g = self.gauge.lock();
+            g.open_out = g.open_out.saturating_sub(1);
+        }
+    }
+
     /// One connect attempt on a short-lived thread: a healthy target
     /// accepts instantly (its listener has been up since process start)
     /// and a dead one must fail fast without stalling the loop — see
-    /// `LATE_DIAL_BUDGET`.
+    /// `LATE_DIAL_BUDGET`. A rejoin-scheduled peer is the exception:
+    /// its restarted process publishes a fresh address out of band and
+    /// may still be starting, so those dials poll the address file with
+    /// retry under `REJOIN_DIAL_BUDGET`.
     fn spawn_dial(&mut self, to: PeerId) {
         let addr = self.addrs[to].clone();
+        let rejoin_addr = if self.rejoin_steps[to].is_some() {
+            self.rejoin_addr_dir.as_ref().map(|d| d.join(format!("addr_{to}.rejoin")))
+        } else {
+            None
+        };
         let cmd_tx = self.cmd_tx.clone();
         let waker = self.waker.clone();
         let name = format!("sock-dial-{}-to-{to}", self.me);
         let spawned = thread::Builder::new().name(name).spawn(move || {
-            let result = dial_once(&addr, LATE_DIAL_BUDGET).map_err(|e| e.to_string());
+            let result = match &rejoin_addr {
+                None => dial_once(&addr, LATE_DIAL_BUDGET).map_err(|e| e.to_string()),
+                Some(path) => {
+                    let deadline = Instant::now() + REJOIN_DIAL_BUDGET;
+                    loop {
+                        // Prefer the republished address once it exists
+                        // (the roster row's port belongs to the dead
+                        // first life); fall back to the roster address
+                        // while the restart is still in flight.
+                        let fresh = std::fs::read_to_string(path)
+                            .ok()
+                            .map(|s| s.trim().to_string())
+                            .filter(|s| !s.is_empty());
+                        let target = fresh.as_deref().unwrap_or(&addr);
+                        match dial_once(target, LATE_DIAL_BUDGET) {
+                            Ok(s) => break Ok(s),
+                            Err(e) => {
+                                if Instant::now() >= deadline {
+                                    break Err(e.to_string());
+                                }
+                                thread::sleep(Duration::from_millis(30));
+                            }
+                        }
+                    }
+                }
+            };
             if cmd_tx.send(IoCmd::DialDone { to, result }).is_ok() {
                 waker.wake();
             }
@@ -1614,6 +1798,7 @@ impl IoLoop {
             Seen::First | Seen::Contradiction(_) => {
                 let fields = envelope_fields(&env);
                 let origin = env.from;
+                let step = env.step;
                 let _ = self.mailbox.send(env);
                 for to in targets {
                     // Deterministic exclusion: never relay back to the
@@ -1621,7 +1806,7 @@ impl IoLoop {
                     // arrival link is *not* excluded — that would make
                     // the relay graph timing-dependent.
                     if to != origin {
-                        self.queue_frame(to, &fields, true);
+                        self.queue_frame(to, step, &fields, true);
                     }
                 }
                 true
@@ -1709,6 +1894,9 @@ pub struct SocketNet {
     auth: Arc<dyn MessageAuth>,
     /// Per-peer join step (all zeros for a static roster).
     join_steps: Vec<u64>,
+    /// Per-peer scheduled crash / rejoin steps (see [`SocketConfig`]).
+    crash_steps: Vec<Option<u64>>,
+    rejoin_steps: Vec<Option<u64>>,
     /// Driver → event-loop command queue, paired with `waker`.
     cmd_tx: Sender<IoCmd>,
     waker: Arc<LoopWaker>,
@@ -1766,6 +1954,27 @@ impl SocketNet {
                 "join_steps has {} entries for a {n}-peer roster",
                 cfg.join_steps.len()
             )));
+        };
+        let norm_opt = |v: &[Option<u64>], what: &str| -> std::io::Result<Vec<Option<u64>>> {
+            if v.is_empty() {
+                Ok(vec![None; n])
+            } else if v.len() == n {
+                Ok(v.to_vec())
+            } else {
+                Err(io_err(format!("{what} has {} entries for a {n}-peer roster", v.len())))
+            }
+        };
+        let crash_steps = norm_opt(&cfg.crash_steps, "crash_steps")?;
+        let rejoin_steps = norm_opt(&cfg.rejoin_steps, "rejoin_steps")?;
+        // A restarted second life announces itself at its rejoin epoch:
+        // that is the admission the schedule grants it, and the epoch
+        // acceptors will verify its HELLOs against.
+        let my_epoch = if cfg.restarted {
+            rejoin_steps[id].ok_or_else(|| {
+                io_err(format!("peer {id} marked restarted but has no scheduled rejoin step"))
+            })?
+        } else {
+            join_steps[id]
         };
         if cfg.session_mac && !cfg.verify_signatures {
             return Err(io_err(
@@ -1829,7 +2038,7 @@ impl SocketNet {
                 } else {
                     encode_hello(
                         id,
-                        join_steps[id],
+                        my_epoch,
                         j,
                         &roster_digest,
                         &secret,
@@ -1852,7 +2061,10 @@ impl SocketNet {
         // streams then go non-blocking and hand over to the event loop.
         let mut out: Vec<OutLink> = (0..n).map(|_| OutLink::Absent).collect();
         let mut open_out = 0usize;
-        if join_steps[id] == 0 {
+        // A restarted second life builds no founding links: like a late
+        // joiner, everything forms lazily at its rejoin boundary (and
+        // the roster addresses of its founding-mesh era may be stale).
+        if join_steps[id] == 0 && !cfg.restarted {
             let dial_targets: Vec<PeerId> = match &relay {
                 Some(r) => r
                     .schedule
@@ -1881,7 +2093,7 @@ impl SocketNet {
         // mid-run), and connections beyond the expected set (a joiner
         // starting early, a gossip peer's lazy p2p link) are installed
         // the same way, just never counted toward the build.
-        let expected_now: Vec<PeerId> = if join_steps[id] == 0 {
+        let expected_now: Vec<PeerId> = if join_steps[id] == 0 && !cfg.restarted {
             match &relay {
                 Some(r) => r
                     .schedule
@@ -1915,6 +2127,7 @@ impl SocketNet {
             roster: roster.clone(),
             roster_digest,
             join_steps: join_steps.clone(),
+            rejoin_steps: rejoin_steps.clone(),
             verify_signatures: cfg.verify_signatures,
             session_mac: cfg.session_mac,
             secret: secret.clone(),
@@ -1947,6 +2160,10 @@ impl SocketNet {
             addrs: roster.peers.iter().map(|p| p.addr.clone()).collect(),
             hellos,
             join_steps: join_steps.clone(),
+            crash_steps: crash_steps.clone(),
+            rejoin_steps: rejoin_steps.clone(),
+            rejoin_addr_dir: cfg.rejoin_addr_dir.clone(),
+            max_link_backlog: cfg.max_link_backlog,
             mac_send,
             out,
             inbound: (0..n).map(|_| None).collect(),
@@ -2007,6 +2224,8 @@ impl SocketNet {
             info,
             auth,
             join_steps,
+            crash_steps,
+            rejoin_steps,
             cmd_tx,
             waker,
             io_thread: Some(io_thread),
@@ -2099,13 +2318,14 @@ impl Transport for SocketNet {
         self.info.stats.record_p2p(self.id, class, bytes);
         if to == self.id {
             let _ = self.loopback.send(env);
-        } else if step >= self.join_steps[to] {
-            // A not-yet-admitted joiner gets nothing on the wire; the
-            // in-process fabrics deliver-and-discard instead, which is
-            // observably identical (the joiner drops pre-join traffic
-            // at snapshot install).
+        } else if wire_admitted(&self.join_steps, &self.crash_steps, &self.rejoin_steps, to, step) {
+            // A not-yet-admitted joiner (or a peer inside its scheduled
+            // crash window) gets nothing on the wire; the in-process
+            // fabrics deliver-and-discard instead, which is observably
+            // identical (the peer drops the traffic at snapshot
+            // install).
             let fields = envelope_fields(&env);
-            if self.cmd_tx.send(IoCmd::Send { to, fields }).is_ok() {
+            if self.cmd_tx.send(IoCmd::Send { to, step, fields }).is_ok() {
                 self.waker.wake();
             }
         }
@@ -2455,6 +2675,7 @@ mod tests {
         let mont = Mont::new();
         let sk1 = derive_keypair(&mont, 21, 1);
         let join_steps = vec![0u64, 0, 4]; // peer 2 is scheduled at epoch 4
+        let rejoin_steps = vec![None, None, Some(6u64)]; // ...and rejoins at epoch 6 after a crash
         let run = |hello_bytes: Vec<u8>| -> Result<Hello, String> {
             let (listener, addr) = bind_ephemeral().unwrap();
             let writer = std::thread::spawn(move || {
@@ -2472,6 +2693,7 @@ mod tests {
                 &roster,
                 &roster.digest(),
                 &join_steps,
+                &rejoin_steps,
                 &Mont::new(),
                 true,
                 false,
@@ -2492,6 +2714,16 @@ mod tests {
         let ok =
             run(encode_hello(2, 4, 0, &roster.digest(), &sk2, &mont, false, true)).unwrap();
         assert_eq!(ok.epoch, 4);
+        // Post-crash rejoin epoch for peer 2: also accepted — a
+        // restarted process re-HELLOs at its scheduled rejoin step.
+        let ok =
+            run(encode_hello(2, 6, 0, &roster.digest(), &sk2, &mont, false, true)).unwrap();
+        assert_eq!(ok.epoch, 6);
+        // But an epoch that is neither the schedule's nor the rejoin's
+        // stays rejected.
+        let err =
+            run(encode_hello(2, 5, 0, &roster.digest(), &sk2, &mont, false, true)).unwrap_err();
+        assert!(err.contains("stale HELLO"), "{err}");
         // A HELLO minted against a different roster document (same ids
         // and keys, different addr rows): the nonce no longer matches.
         let mut foreign = roster.clone();

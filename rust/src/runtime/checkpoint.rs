@@ -1,0 +1,318 @@
+//! Crash-recovery checkpoints: periodic atomic snapshots of one peer's
+//! full training state, written to disk so a killed process can come
+//! back.
+//!
+//! A checkpoint is the membership [`Snapshot`] (params, optimizer state
+//! via `Optimizer::state_bytes`, ban ledger, step archive, epoch/roster,
+//! shared-randomness chain — everything PR 5 already serializes
+//! bit-exactly for sponsor transfers) plus the peer's local RNG cursor,
+//! wrapped in a versioned header and sealed with a SHA-256 content
+//! digest. Files are written with the same tmp+rename discipline as the
+//! cluster rendezvous (`atomic_write_bytes`), so a reader — including a
+//! restarted process scanning for its latest checkpoint mid-kill —
+//! never observes a torn file.
+//!
+//! ## Trust and authority
+//!
+//! A restarted peer loads its freshest checkpoint for a warm start and
+//! recovery-latency accounting, but the **sponsor snapshot delivered at
+//! the rejoin boundary remains authoritative**: whatever the checkpoint
+//! said, `install_snapshot` overwrites params, optimizer state, roster
+//! and ledger with the cluster's consensus view, and re-derives the
+//! local accumulators from consensus data. This is what keeps a
+//! restarted process bit-identical to an in-process run that merely
+//! held the peer out — the checkpoint can be stale (or missing
+//! entirely) without moving the digest. The checkpoint's role is to
+//! bound how much state a *future* delta-transfer rejoin would need,
+//! and to make single-process restart-from-disk possible at all.
+//!
+//! Checkpoint writes are pure side effects: no RNG draws, no messages,
+//! no clock ticks — enabling checkpointing on a static golden scenario
+//! leaves its metrics digest untouched (pinned by
+//! `tests/crash_rejoin.rs`).
+
+use crate::coordinator::membership::Snapshot;
+use crate::coordinator::messages::{Reader, Writer};
+use crate::coordinator::optimizer::Optimizer;
+use crate::coordinator::step::PeerCtx;
+use crate::crypto::sha256_parts;
+use crate::net::PeerId;
+use crate::util::atomic_write_bytes;
+use crate::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+/// File magic: the first four bytes of every checkpoint.
+pub const CHECKPOINT_MAGIC: &[u8; 4] = b"BTCK";
+/// Format version, bumped on any layout change.
+pub const CHECKPOINT_VERSION: u32 = 1;
+
+/// The `checkpoint` runconfig block: how often, where, and how many.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CheckpointConfig {
+    /// Write a checkpoint every `interval` completed steps (> 0).
+    pub interval: u64,
+    /// Directory for `ckpt_<peer>_<steps_done>.bin` files (created on
+    /// first write; shared by every peer of the run).
+    pub dir: PathBuf,
+    /// Most-recent checkpoints retained per peer (>= 1); older files
+    /// are deleted as new ones land.
+    pub keep: usize,
+}
+
+impl CheckpointConfig {
+    /// Structural validation, mirroring the strict-config precedent: a
+    /// checkpoint block that can never fire must not silently run an
+    /// uncheckpointed experiment.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.interval == 0 {
+            return Err("checkpoint: interval must be > 0".to_string());
+        }
+        if self.keep == 0 {
+            return Err("checkpoint: keep must be >= 1".to_string());
+        }
+        if self.dir.as_os_str().is_empty() {
+            return Err("checkpoint: dir must be non-empty".to_string());
+        }
+        Ok(())
+    }
+}
+
+/// One decoded checkpoint: the run/peer identity line, progress, the
+/// full consensus snapshot, and the local RNG cursor.
+pub struct Checkpoint {
+    pub run_seed: u64,
+    pub peer: PeerId,
+    /// Steps completed when this checkpoint was taken (the snapshot's
+    /// `step` field equals this: the next step to run).
+    pub steps_done: u64,
+    pub snapshot: Snapshot,
+    pub rng_state: Vec<u8>,
+}
+
+impl Checkpoint {
+    /// Versioned header + body + SHA-256 seal over everything before it.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u32(CHECKPOINT_VERSION)
+            .u64(self.run_seed)
+            .u64(self.peer as u64)
+            .u64(self.steps_done)
+            .bytes(&self.snapshot.encode())
+            .bytes(&self.rng_state);
+        let body = w.finish();
+        let digest = sha256_parts(&[CHECKPOINT_MAGIC, &body]);
+        let mut out = Vec::with_capacity(4 + body.len() + 32);
+        out.extend_from_slice(CHECKPOINT_MAGIC);
+        out.extend_from_slice(&body);
+        out.extend_from_slice(&digest);
+        out
+    }
+
+    /// Strict decode: magic, version, content digest and exact framing
+    /// all verified — a corrupt or truncated checkpoint is refused with
+    /// a reason, never half-loaded.
+    pub fn decode(b: &[u8]) -> Result<Checkpoint, String> {
+        if b.len() < 4 + 32 {
+            return Err(format!("checkpoint too short ({} bytes)", b.len()));
+        }
+        if &b[..4] != CHECKPOINT_MAGIC {
+            return Err("bad checkpoint magic (not a BTCK file)".to_string());
+        }
+        let (sealed, digest) = b.split_at(b.len() - 32);
+        if sha256_parts(&[sealed])[..] != *digest {
+            return Err("checkpoint content digest mismatch (corrupt or torn file)".to_string());
+        }
+        let mut r = Reader::new(&sealed[4..]);
+        let version = r.u32().ok_or("checkpoint truncated at version")?;
+        if version != CHECKPOINT_VERSION {
+            return Err(format!(
+                "checkpoint version {version} unsupported (this build reads \
+                 {CHECKPOINT_VERSION})"
+            ));
+        }
+        let run_seed = r.u64().ok_or("checkpoint truncated at run_seed")?;
+        let peer = r.u64().ok_or("checkpoint truncated at peer")? as PeerId;
+        let steps_done = r.u64().ok_or("checkpoint truncated at steps_done")?;
+        let snap_bytes = r.bytes().ok_or("checkpoint truncated at snapshot")?;
+        let snapshot =
+            Snapshot::decode(&snap_bytes).ok_or("checkpoint snapshot failed to decode")?;
+        let rng_state = r.bytes().ok_or("checkpoint truncated at rng state")?;
+        if !r.done() {
+            return Err("checkpoint has trailing bytes".to_string());
+        }
+        Ok(Checkpoint { run_seed, peer, steps_done, snapshot, rng_state })
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        atomic_write_bytes(path, &self.encode())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint, String> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| format!("read checkpoint {}: {e}", path.display()))?;
+        Self::decode(&bytes).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Warm-restart a peer's parameters + optimizer from this
+    /// checkpoint. Refuses shape mismatches; see the module docs for
+    /// why the sponsor snapshot still overrides this at the rejoin
+    /// boundary.
+    pub fn resume_into(
+        &self,
+        params: &mut Vec<f32>,
+        opt: &mut dyn Optimizer,
+    ) -> Result<(), String> {
+        if self.snapshot.params.len() != params.len() {
+            return Err(format!(
+                "checkpoint params dim {} != run dim {}",
+                self.snapshot.params.len(),
+                params.len()
+            ));
+        }
+        if !opt.load_state(&self.snapshot.opt_state) {
+            return Err("checkpoint optimizer state refused by this run's optimizer".to_string());
+        }
+        *params = self.snapshot.params.clone();
+        Ok(())
+    }
+
+    /// Restore the local RNG cursor recorded at save time.
+    pub fn rng(&self) -> Option<Rng> {
+        Rng::from_state_bytes(&self.rng_state)
+    }
+}
+
+/// The checkpoint file for (peer, steps_done) under `dir`.
+pub fn checkpoint_path(dir: &Path, peer: PeerId, steps_done: u64) -> PathBuf {
+    dir.join(format!("ckpt_{peer}_{steps_done}.bin"))
+}
+
+/// The freshest checkpoint for `peer` under `dir`:
+/// `(steps_done, path)` with the largest steps_done, scanning the
+/// canonical file names. Tmp files and foreign names are ignored.
+pub fn latest_checkpoint(dir: &Path, peer: PeerId) -> Option<(u64, PathBuf)> {
+    let prefix = format!("ckpt_{peer}_");
+    let mut best: Option<(u64, PathBuf)> = None;
+    for entry in std::fs::read_dir(dir).ok()? {
+        let entry = entry.ok()?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let Some(steps) = name
+            .strip_prefix(&prefix)
+            .and_then(|rest| rest.strip_suffix(".bin"))
+            .and_then(|s| s.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        if best.as_ref().is_none_or(|(b, _)| steps > *b) {
+            best = Some((steps, entry.path()));
+        }
+    }
+    best
+}
+
+/// Per-peer periodic writer, hooked in after each completed step by
+/// both execution models. Owns the rotation window.
+pub struct CheckpointWriter {
+    cfg: CheckpointConfig,
+    run_seed: u64,
+    peer: PeerId,
+    /// Paths written this run, oldest first (the rotation window).
+    written: Vec<PathBuf>,
+}
+
+impl CheckpointWriter {
+    pub fn new(cfg: CheckpointConfig, run_seed: u64, peer: PeerId) -> CheckpointWriter {
+        CheckpointWriter { cfg, run_seed, peer, written: Vec::new() }
+    }
+
+    /// Call after step `step` completed (so `steps_done = step + 1`).
+    /// Writes when the interval divides steps_done; rotates out the
+    /// oldest file beyond `keep`. Returns the path written, if any.
+    /// Pure side effect: no RNG draws, no messages, no clock ticks.
+    pub fn after_step(
+        &mut self,
+        step: u64,
+        ctx: &PeerCtx,
+        params: &[f32],
+        opt: &dyn Optimizer,
+    ) -> std::io::Result<Option<PathBuf>> {
+        let steps_done = step + 1;
+        if steps_done % self.cfg.interval != 0 {
+            return Ok(None);
+        }
+        let ck = Checkpoint {
+            run_seed: self.run_seed,
+            peer: self.peer,
+            steps_done,
+            snapshot: Snapshot::gather(ctx, steps_done, params, opt),
+            rng_state: ctx.local_rng.state_bytes(),
+        };
+        let path = checkpoint_path(&self.cfg.dir, self.peer, steps_done);
+        ck.save(&path)?;
+        self.written.push(path.clone());
+        while self.written.len() > self.cfg.keep {
+            let old = self.written.remove(0);
+            // Rotation best-effort: a missing old file is not an error.
+            let _ = std::fs::remove_file(old);
+        }
+        Ok(Some(path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation_catches_nonsense() {
+        let ok = CheckpointConfig { interval: 2, dir: PathBuf::from("ck"), keep: 3 };
+        assert!(ok.validate().is_ok());
+        assert!(CheckpointConfig { interval: 0, ..ok.clone() }.validate().is_err());
+        assert!(CheckpointConfig { keep: 0, ..ok.clone() }.validate().is_err());
+        assert!(CheckpointConfig { dir: PathBuf::new(), ..ok }.validate().is_err());
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        // Build a minimal checkpoint by hand (no PeerCtx needed).
+        let snapshot = Snapshot {
+            step: 4,
+            epoch: 1,
+            clock: 9,
+            live: vec![0, 1],
+            owners: vec![0, 1],
+            validators: vec![],
+            r_prev: [5u8; 32],
+            params: vec![1.0, -2.0],
+            opt_state: vec![0, 1, 2],
+            ban_events: vec![],
+            archive: None,
+        };
+        let ck = Checkpoint {
+            run_seed: 7,
+            peer: 1,
+            steps_done: 4,
+            snapshot,
+            rng_state: Rng::new(3).state_bytes(),
+        };
+        let enc = ck.encode();
+        let back = Checkpoint::decode(&enc).expect("decode");
+        assert_eq!(back.run_seed, 7);
+        assert_eq!(back.peer, 1);
+        assert_eq!(back.steps_done, 4);
+        assert_eq!(back.snapshot.live, vec![0, 1]);
+        // Truncation, bit flips, bad magic: all refused with a reason.
+        assert!(Checkpoint::decode(&enc[..enc.len() - 1]).is_err());
+        assert!(Checkpoint::decode(&enc[..10]).is_err());
+        let mut flipped = enc.clone();
+        flipped[20] ^= 1;
+        assert!(Checkpoint::decode(&flipped).is_err());
+        let mut bad_magic = enc;
+        bad_magic[0] = b'X';
+        assert!(Checkpoint::decode(&bad_magic).is_err());
+    }
+}

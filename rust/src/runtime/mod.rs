@@ -10,6 +10,7 @@
 //! This sidesteps any question of client thread-safety and matches the
 //! 1-core testbed (XLA CPU already owns the compute).
 
+pub mod checkpoint;
 pub mod manifest;
 
 pub use manifest::{ArtifactMeta, Manifest, ParamSegment};

@@ -26,6 +26,12 @@ pub fn hex(bytes: &[u8]) -> String {
 /// by the multi-process cluster rendezvous (roster, addr files, peer
 /// reports), where partial reads would be misparses, not retries.
 pub fn atomic_write(path: &std::path::Path, content: &str) -> std::io::Result<()> {
+    atomic_write_bytes(path, content.as_bytes())
+}
+
+/// Binary variant of [`atomic_write`]: same tmp+rename discipline, for
+/// payloads that are not UTF-8 (crash-recovery checkpoints).
+pub fn atomic_write_bytes(path: &std::path::Path, content: &[u8]) -> std::io::Result<()> {
     let mut tmp = path.as_os_str().to_owned();
     tmp.push(".tmp");
     let tmp = std::path::PathBuf::from(tmp);

@@ -1,0 +1,419 @@
+//! Crash-recovery integration tests: the acceptance proof for the
+//! crash/rejoin subsystem.
+//!
+//! - A schedule with a mid-run crash and rejoin produces **identical
+//!   metrics digests** across the threaded model, the pooled scheduler
+//!   at several worker counts, and a loopback socket cluster whose
+//!   crashed peer's first life actually ends (its transport is torn
+//!   down) before a second, `restarted` life re-enters through the
+//!   sponsor-snapshot path. The real-SIGKILL variant (separate OS
+//!   processes, `kill(9)` delivered by the cluster runner) is covered
+//!   by `cluster_cli_survives_a_scheduled_crash_and_restart` below and
+//!   by the crash-recovery CI cell.
+//! - Periodic checkpointing is **digest-neutral**: enabling it on the
+//!   golden-digest scenario changes nothing (checkpoints are recovery
+//!   state, never consensus state).
+//! - Checkpoints round-trip bit-exactly for both optimizers, and
+//!   `resume_into` restores params/optimizer/RNG from the file.
+
+use btard::coordinator::adversary::AdversarySpec;
+use btard::coordinator::attacks::{AttackSchedule, CollusionBoard};
+use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::membership::MembershipSchedule;
+use btard::coordinator::optimizer::LrSchedule;
+use btard::coordinator::runconfig::WorkloadSpec;
+use btard::coordinator::training::{
+    peer_main, prepare_source, run_btard_pooled, run_btard_threaded, LifeSpan, OptSpec, RunConfig,
+};
+use btard::coordinator::ProtocolConfig;
+use btard::crypto::Mont;
+use btard::harness::{merge_reports, run_digest, PeerReport};
+use btard::net::socket::SocketNet;
+use btard::net::{
+    bind_ephemeral, derive_keypair, NetworkProfile, Roster, RosterEntry, SocketConfig, Transport,
+};
+use btard::runtime::checkpoint::{latest_checkpoint, Checkpoint, CheckpointConfig};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The cross-model crash scenario: a 6-peer cluster where peer 2
+/// crashes at step 3 and rejoins at step 5, while peer 4 sign-flips
+/// from step 3. Nesterov momentum is ON so the digest equality also
+/// proves the rejoin snapshot's optimizer-state transfer is bit-exact.
+fn crash_cfg() -> RunConfig {
+    RunConfig {
+        n_peers: 6,
+        byzantine: vec![4],
+        attack: Some((
+            AdversarySpec::parse("sign_flip:1000").unwrap(),
+            AttackSchedule::from_step(3),
+        )),
+        steps: 8,
+        protocol: ProtocolConfig {
+            n0: 6,
+            tau: TauPolicy::Fixed(1.0),
+            m_validators: 2,
+            delta_max: 4.0,
+            ..ProtocolConfig::default()
+        },
+        opt: OptSpec::Sgd {
+            schedule: LrSchedule::Constant(0.1),
+            momentum: 0.9,
+            nesterov: true,
+        },
+        clip_lambda: None,
+        eval_every: 2,
+        seed: 7,
+        verify_signatures: false,
+        gossip_fanout: 8,
+        session_mac: false,
+        network: NetworkProfile::perfect(),
+        churn: MembershipSchedule::parse("crash:2@3,rejoin:2@5").unwrap(),
+        segments: vec![],
+        checkpoint: None,
+    }
+}
+
+fn quad_workload() -> WorkloadSpec {
+    WorkloadSpec::Quadratic { dim: 64, mu: 0.1, l: 2.0, sigma: 1.0, seed: 9 }
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("btard_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn crash_rejoin_is_identical_across_exec_models_and_worker_counts() {
+    let cfg = crash_cfg();
+    let threaded = run_digest(&run_btard_threaded(&cfg, quad_workload().build()));
+    let pooled2 = run_digest(&run_btard_pooled(&cfg, quad_workload().build(), 2));
+    let pooled4 = run_digest(&run_btard_pooled(&cfg, quad_workload().build(), 4));
+    assert_eq!(threaded, pooled2, "threaded vs pooled(2) under crash/rejoin");
+    assert_eq!(pooled2, pooled4, "pooled worker count must not matter under crash/rejoin");
+    // The rejoiner actually came back: the run completes, and peer 2 is
+    // never a ban target (a crash is an excision, not an offence).
+    let res = run_btard_pooled(&cfg, quad_workload().build(), 3);
+    assert_eq!(res.steps_done, cfg.steps);
+    assert!(
+        res.ban_events.iter().all(|b| b.target != 2),
+        "crashed peer banned: {:?}",
+        res.ban_events
+    );
+}
+
+#[test]
+fn checkpointing_is_digest_neutral_on_the_golden_scenario() {
+    // The golden-digest scenario (64 peers, 8 sign-flippers, 4 steps),
+    // run with and without periodic checkpointing: every deterministic
+    // output bit must be identical — the property that lets the golden
+    // file stay untouched while checkpointing ships.
+    let mut cfg = RunConfig {
+        n_peers: 64,
+        byzantine: (56..64).collect(),
+        attack: Some((
+            AdversarySpec::parse("sign_flip:1000").unwrap(),
+            AttackSchedule::from_step(2),
+        )),
+        steps: 4,
+        protocol: ProtocolConfig {
+            n0: 64,
+            tau: TauPolicy::Fixed(1.0),
+            m_validators: 8,
+            delta_max: 4.0,
+            ..ProtocolConfig::default()
+        },
+        opt: OptSpec::Sgd {
+            schedule: LrSchedule::Constant(0.1),
+            momentum: 0.0,
+            nesterov: false,
+        },
+        clip_lambda: None,
+        eval_every: 2,
+        seed: 7,
+        verify_signatures: false,
+        gossip_fanout: 8,
+        session_mac: false,
+        network: NetworkProfile::perfect(),
+        churn: MembershipSchedule::empty(),
+        segments: vec![],
+        checkpoint: None,
+    };
+    let src: Arc<dyn btard::model::GradientSource> =
+        Arc::new(btard::model::synthetic::Quadratic::new(1024, 0.1, 2.0, 1.0, 9));
+    let plain = run_digest(&run_btard_pooled(&cfg, src.clone(), 4));
+
+    let dir = temp_dir("ckpt_neutral");
+    cfg.checkpoint = Some(CheckpointConfig { interval: 2, dir: dir.clone(), keep: 1 });
+    let checkpointed = run_digest(&run_btard_pooled(&cfg, src, 4));
+    assert_eq!(plain, checkpointed, "checkpointing must never move the digest");
+    // ... and the neutrality claim is not vacuous: checkpoints were
+    // really written.
+    assert!(
+        latest_checkpoint(&dir, 0).is_some(),
+        "no checkpoint written for peer 0 under {}",
+        dir.display()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoints_round_trip_bit_exactly_for_both_optimizers() {
+    for (tag, opt) in [
+        (
+            "sgd",
+            OptSpec::Sgd {
+                schedule: LrSchedule::Constant(0.1),
+                momentum: 0.9,
+                nesterov: true,
+            },
+        ),
+        ("lamb", OptSpec::Lamb { schedule: LrSchedule::Constant(0.01) }),
+    ] {
+        let dir = temp_dir(&format!("ckpt_rt_{tag}"));
+        let mut cfg = RunConfig::quick(4, 4);
+        cfg.opt = opt;
+        cfg.eval_every = 2;
+        cfg.seed = 11;
+        cfg.verify_signatures = false;
+        cfg.checkpoint = Some(CheckpointConfig { interval: 2, dir: dir.clone(), keep: 2 });
+        let src: Arc<dyn btard::model::GradientSource> =
+            Arc::new(btard::model::synthetic::Quadratic::new(64, 0.1, 2.0, 1.0, 9));
+        let res = run_btard_pooled(&cfg, src, 2);
+        assert_eq!(res.steps_done, 4);
+
+        let (steps, path) =
+            latest_checkpoint(&dir, 0).unwrap_or_else(|| panic!("{tag}: no checkpoint for 0"));
+        assert_eq!(steps, 4, "{tag}: latest checkpoint is the final one");
+        let ck = Checkpoint::load(&path).unwrap_or_else(|e| panic!("{tag}: load: {e}"));
+        assert_eq!(ck.run_seed, cfg.seed);
+        assert_eq!(ck.peer, 0);
+        assert_eq!(ck.steps_done, 4);
+        // encode() reproduces the on-disk bytes exactly (versioned
+        // header + body + digest seal).
+        let on_disk = std::fs::read(&path).unwrap();
+        assert_eq!(ck.encode(), on_disk, "{tag}: encode/decode must be bit-exact");
+        // resume_into restores params and optimizer state; the RNG
+        // cursor decodes too.
+        let mut params = vec![0.0f32; ck.snapshot.params.len()];
+        let mut opt = cfg.opt.build(params.len(), vec![]);
+        ck.resume_into(&mut params, opt.as_mut())
+            .unwrap_or_else(|e| panic!("{tag}: resume: {e}"));
+        assert_eq!(params.len(), ck.snapshot.params.len());
+        for (a, b) in params.iter().zip(&ck.snapshot.params) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{tag}: params restored bit-exactly");
+        }
+        assert!(ck.rng().is_some(), "{tag}: RNG cursor must decode");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Loopback socket cluster where peer 2's first life really ends at its
+/// crash step (transport torn down) and a second, `restarted` life —
+/// fresh listener, fresh address published as `addr_2.rejoin`, no
+/// founding links — re-enters at the rejoin boundary. The merged digest
+/// must equal the in-process runs bit-for-bit.
+#[test]
+fn socket_cluster_with_a_crashed_and_restarted_peer_matches_in_process() {
+    let cfg = RunConfig {
+        n_peers: 5,
+        byzantine: vec![3],
+        attack: Some((
+            AdversarySpec::parse("sign_flip:1000").unwrap(),
+            AttackSchedule::from_step(2),
+        )),
+        steps: 6,
+        protocol: ProtocolConfig {
+            n0: 5,
+            tau: TauPolicy::Fixed(1.0),
+            m_validators: 1,
+            delta_max: 4.0,
+            ..ProtocolConfig::default()
+        },
+        opt: OptSpec::Sgd {
+            schedule: LrSchedule::Constant(0.1),
+            momentum: 0.0,
+            nesterov: false,
+        },
+        clip_lambda: None,
+        eval_every: 2,
+        seed: 7,
+        verify_signatures: true,
+        gossip_fanout: 8,
+        session_mac: false,
+        network: NetworkProfile::perfect(),
+        churn: MembershipSchedule::parse("crash:2@3,rejoin:2@5").unwrap(),
+        segments: vec![],
+        checkpoint: None,
+    };
+    let workload = quad_workload();
+
+    let threaded = run_digest(&run_btard_threaded(&cfg, workload.build()));
+    let pooled = run_digest(&run_btard_pooled(&cfg, workload.build(), 2));
+    assert_eq!(threaded, pooled, "in-process execution models must agree first");
+
+    let rejoin_dir = temp_dir("rejoin_addrs");
+    let n = cfg.n_peers;
+    let mont = Mont::new();
+    let mut listeners = Vec::with_capacity(n);
+    let mut entries = Vec::with_capacity(n);
+    for k in 0..n {
+        let (listener, addr) = bind_ephemeral().unwrap();
+        entries.push(RosterEntry {
+            id: k,
+            addr,
+            pubkey: derive_keypair(&mont, cfg.seed, k).public,
+        });
+        listeners.push(listener);
+    }
+    let roster = Roster { peers: entries };
+    let base_scfg = |restarted: bool| SocketConfig {
+        gossip_fanout: cfg.gossip_fanout,
+        verify_signatures: cfg.verify_signatures,
+        connect_timeout: Duration::from_secs(30),
+        join_steps: cfg.churn.join_steps(n),
+        crash_steps: cfg.churn.crash_steps(n),
+        rejoin_steps: cfg.churn.rejoin_steps(n),
+        restarted,
+        rejoin_addr_dir: Some(rejoin_dir.clone()),
+        ..SocketConfig::default()
+    };
+    let mut handles = Vec::with_capacity(n);
+    for (k, listener) in listeners.into_iter().enumerate() {
+        let roster = roster.clone();
+        let cfg = cfg.clone();
+        let workload = workload.clone();
+        let scfg = base_scfg(false);
+        let scfg_restarted = base_scfg(true);
+        let rejoin_dir = rejoin_dir.clone();
+        handles.push(std::thread::spawn(move || {
+            let mont = Mont::new();
+            let secret = derive_keypair(&mont, cfg.seed, k);
+            let source = prepare_source(&cfg, workload.build());
+            let init_params = source.init_params(cfg.seed);
+            if k != 2 {
+                let net = SocketNet::connect(listener, &roster, k, secret, &scfg).unwrap();
+                let info = net.info().clone();
+                let out = peer_main(
+                    Box::new(net),
+                    cfg.clone(),
+                    source,
+                    init_params,
+                    CollusionBoard::new(),
+                    LifeSpan::Whole,
+                );
+                return PeerReport::from_output(k, out, info.stats.total_bytes(k));
+            }
+            // Peer 2, first life: run to the crash step, then tear the
+            // transport down — to every other peer this is an abrupt
+            // link death, not a LEAVE.
+            let net = SocketNet::connect(listener, &roster, k, secret, &scfg).unwrap();
+            let info1 = net.info().clone();
+            let out1 = peer_main(
+                Box::new(net),
+                cfg.clone(),
+                source.clone(),
+                init_params.clone(),
+                CollusionBoard::new(),
+                LifeSpan::UntilCrash,
+            );
+            let bytes1 = info1.stats.total_bytes(k);
+            // Second life: a fresh listener on a fresh port, published
+            // where the incumbents will look for it at the rejoin
+            // boundary, then the restarted connect path (no founding
+            // links — the mesh revives lazily at the boundary).
+            let (listener2, addr2) = bind_ephemeral().unwrap();
+            btard::util::atomic_write(&rejoin_dir.join("addr_2.rejoin"), &addr2).unwrap();
+            let mont = Mont::new();
+            let secret = derive_keypair(&mont, cfg.seed, k);
+            let net = SocketNet::connect(listener2, &roster, k, secret, &scfg_restarted).unwrap();
+            let info2 = net.info().clone();
+            let out2 = peer_main(
+                Box::new(net),
+                cfg.clone(),
+                source,
+                init_params,
+                CollusionBoard::new(),
+                LifeSpan::FromRejoin,
+            );
+            // The two lives' counters sum to what the in-process models
+            // (which count the peer cumulatively) record.
+            let mut report =
+                PeerReport::from_output(k, out2, bytes1 + info2.stats.total_bytes(k));
+            report.recomputes += out1.recomputes;
+            report
+        }));
+    }
+    let reports: Vec<PeerReport> =
+        handles.into_iter().map(|h| h.join().expect("peer thread panicked")).collect();
+    let merged = merge_reports(n, reports).unwrap();
+    assert_eq!(
+        run_digest(&merged),
+        threaded,
+        "a socket cluster with a crashed-and-restarted peer must reproduce the \
+         in-process digest"
+    );
+    std::fs::remove_dir_all(&rejoin_dir).ok();
+}
+
+#[test]
+fn cluster_cli_survives_a_scheduled_crash_and_restart() {
+    // The real thing, process boundary included: the cluster runner
+    // forks 6 peers, peer 2 parks at its crash step and is SIGKILLed,
+    // a fresh process rejoins with --restart (warm-starting from its
+    // checkpoint), and --verify-inprocess makes the binary fail unless
+    // the digest matches the in-process pooled run bit-for-bit. This is
+    // the crash-recovery CI cell in miniature.
+    let bin = env!("CARGO_BIN_EXE_btard");
+    let out = std::env::temp_dir().join(format!("btard_cluster_crash_{}", std::process::id()));
+    std::fs::remove_dir_all(&out).ok();
+    let ckpt_dir = out.join("ckpt");
+    let status = std::process::Command::new(bin)
+        .args([
+            "cluster",
+            "--peers",
+            "6",
+            "--byzantine",
+            "1",
+            "--attack",
+            "sign_flip:1000",
+            "--attack-start",
+            "2",
+            "--steps",
+            "8",
+            "--dim",
+            "64",
+            "--churn",
+            "crash:2@4,rejoin:2@6",
+            "--checkpoint-interval",
+            "2",
+            "--checkpoint-dir",
+        ])
+        .arg(&ckpt_dir)
+        .args(["--verify-inprocess", "--out"])
+        .arg(&out)
+        .status()
+        .expect("launching btard cluster");
+    assert!(status.success(), "btard cluster with a crash schedule failed");
+    let summary = std::fs::read_to_string(out.join("cluster_summary.json")).unwrap();
+    // The exit accounting proves the process was really killed and
+    // restarted: a "crash" life and a "rejoin" life both appear.
+    assert!(summary.contains("\"crash\""), "{summary}");
+    assert!(summary.contains("\"rejoin\""), "{summary}");
+    assert!(summary.contains("\"whole\""), "{summary}");
+    assert!(
+        out.join("peer_2.restart.log").exists(),
+        "the second life must have its own log"
+    );
+    // The first life wrote checkpoints the second life could warm-start
+    // from.
+    assert!(
+        latest_checkpoint(&ckpt_dir, 2).is_some(),
+        "no checkpoint for the crashed peer under {}",
+        ckpt_dir.display()
+    );
+    std::fs::remove_dir_all(&out).ok();
+}

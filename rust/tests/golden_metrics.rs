@@ -65,6 +65,7 @@ fn perfect_fabric_64_peer_run_matches_golden_digest() {
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::empty(),
         segments: vec![],
+        checkpoint: None,
     };
     let src: Arc<dyn GradientSource> = Arc::new(Quadratic::new(1024, 0.1, 2.0, 1.0, 9));
     let digest = run_digest(&run_btard_pooled(&cfg, src, 4));

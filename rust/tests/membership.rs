@@ -26,7 +26,7 @@ use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::partition::OwnerMap;
 use btard::coordinator::runconfig::WorkloadSpec;
 use btard::coordinator::training::{
-    peer_main, prepare_source, run_btard_pooled, run_btard_threaded, OptSpec, RunConfig,
+    peer_main, prepare_source, run_btard_pooled, run_btard_threaded, LifeSpan, OptSpec, RunConfig,
 };
 use btard::coordinator::ProtocolConfig;
 use btard::crypto::Mont;
@@ -74,6 +74,7 @@ fn churn_cfg() -> RunConfig {
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::parse("join:5@2,leave:2@4").unwrap(),
         segments: vec![],
+        checkpoint: None,
     }
 }
 
@@ -305,7 +306,8 @@ fn run_socket_churn_cluster(cfg: &RunConfig, workload: &WorkloadSpec) -> Vec<Pee
             let source = prepare_source(&cfg, workload.build());
             let init_params = source.init_params(cfg.seed);
             let board = CollusionBoard::new();
-            let out = peer_main(Box::new(net), cfg.clone(), source, init_params, board);
+            let out =
+                peer_main(Box::new(net), cfg.clone(), source, init_params, board, LifeSpan::Whole);
             PeerReport::from_output(k, out, info.stats.total_bytes(k))
         }));
     }
@@ -348,6 +350,7 @@ fn socket_churn_cluster_is_bit_identical_to_in_process_runs() {
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::parse("join:4@2,leave:1@3").unwrap(),
         segments: vec![],
+        checkpoint: None,
     };
     let workload = quad_workload();
 

@@ -29,7 +29,7 @@ use btard::coordinator::membership::MembershipSchedule;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::runconfig::WorkloadSpec;
 use btard::coordinator::training::{
-    peer_main, prepare_source, run_btard_pooled, run_btard_threaded, OptSpec, RunConfig,
+    peer_main, prepare_source, run_btard_pooled, run_btard_threaded, LifeSpan, OptSpec, RunConfig,
 };
 use btard::coordinator::ProtocolConfig;
 use btard::crypto::Mont;
@@ -73,6 +73,7 @@ fn socket_cfg() -> RunConfig {
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::empty(),
         segments: vec![],
+        checkpoint: None,
     }
 }
 
@@ -119,7 +120,8 @@ fn run_socket_cluster(cfg: &RunConfig, workload: &WorkloadSpec, gossip: bool) ->
             let source = prepare_source(&cfg, workload.build());
             let init_params = source.init_params(cfg.seed);
             let board = CollusionBoard::new();
-            let out = peer_main(Box::new(net), cfg.clone(), source, init_params, board);
+            let out =
+                peer_main(Box::new(net), cfg.clone(), source, init_params, board, LifeSpan::Whole);
             PeerReport::from_output(k, out, info.stats.total_bytes(k))
         }));
     }
