@@ -17,6 +17,7 @@
 //! | `validation_verdict`  | Phase V: lazy or false validator accusations   |
 //! | `accuse_policy`       | Phase F: false/withheld ACCUSE broadcasts      |
 //! | `mprng_behavior`      | Phase E: MPRNG abort / bias attempts           |
+//! | `reject_admission`    | Boundary: vote down the roster document        |
 //!
 //! Adversaries compose: the spec grammar `"name[:arg][+name[:arg]…]"`
 //! (e.g. `"alie+equivocate"`, `"sign_flip:1000+false_accuse:0.1"`) builds
@@ -136,6 +137,15 @@ pub trait Adversary: Send {
     fn mprng_behavior(&mut self, _step: u64, _attempt: usize) -> MprngBehavior {
         MprngBehavior::Honest
     }
+
+    /// Admission round (consensus membership mode): vote against the
+    /// majority roster proposal, answering every rank-R document with
+    /// an empty-roster vote. Below f+1 colluders the 2f+1 certificate
+    /// still forms over the honest votes — the surface exists so tests
+    /// can pin exactly that bound.
+    fn reject_admission(&mut self, _step: u64) -> bool {
+        false
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -170,10 +180,13 @@ pub enum SurfaceSpec {
     MprngAbort,
     /// Reveal MPRNG bytes that mismatch our commitment.
     MprngBias,
+    /// Vote to reject every roster document in the consensus admission
+    /// round (an empty-roster vote instead of the majority proposal).
+    RejectAdmission,
 }
 
 /// Every name the registry knows, for help text and error messages.
-pub const ADVERSARY_NAMES: [&str; 13] = [
+pub const ADVERSARY_NAMES: [&str; 14] = [
     "sign_flip",
     "random_direction",
     "label_flip",
@@ -187,6 +200,7 @@ pub const ADVERSARY_NAMES: [&str; 13] = [
     "withhold",
     "mprng_abort",
     "mprng_bias",
+    "reject_admission",
 ];
 
 impl SurfaceSpec {
@@ -207,6 +221,7 @@ impl SurfaceSpec {
             SurfaceSpec::Withhold { from } => format!("withhold:{from}"),
             SurfaceSpec::MprngAbort => "mprng_abort".to_string(),
             SurfaceSpec::MprngBias => "mprng_bias".to_string(),
+            SurfaceSpec::RejectAdmission => "reject_admission".to_string(),
         }
     }
 
@@ -307,6 +322,10 @@ fn parse_part(tok: &str) -> Result<SurfaceSpec, String> {
         "mprng_bias" => {
             no_arg()?;
             SurfaceSpec::MprngBias
+        }
+        "reject_admission" => {
+            no_arg()?;
+            SurfaceSpec::RejectAdmission
         }
         _ => {
             return Err(format!(
@@ -434,6 +453,7 @@ impl AdversarySpec {
                     }
                     SurfaceSpec::MprngAbort => Box::new(MprngAborter { schedule }),
                     SurfaceSpec::MprngBias => Box::new(MprngBiaser { schedule }),
+                    SurfaceSpec::RejectAdmission => Box::new(AdmissionRejector { schedule }),
                 }
             })
             .collect();
@@ -505,6 +525,9 @@ impl Adversary for Composed {
             .map(|p| p.mprng_behavior(step, attempt))
             .find(|b| *b != MprngBehavior::Honest)
             .unwrap_or(MprngBehavior::Honest)
+    }
+    fn reject_admission(&mut self, step: u64) -> bool {
+        self.parts.iter_mut().any(|p| p.reject_admission(step))
     }
 }
 
@@ -686,6 +709,25 @@ impl Adversary for MprngBiaser {
         } else {
             MprngBehavior::Honest
         }
+    }
+}
+
+/// Votes against every roster document in the consensus admission round:
+/// where honest incumbents vote the majority rank-R proposal, this peer
+/// votes the empty-roster digest. Liveness-only attack — with fewer than
+/// f+1 colluders the honest 2f+1 certificate still forms, so the
+/// committed document (and the run digest) is unchanged; that invariance
+/// is exactly what the admission test suite pins.
+pub struct AdmissionRejector {
+    pub schedule: AttackSchedule,
+}
+
+impl Adversary for AdmissionRejector {
+    fn spec(&self) -> String {
+        "reject_admission".to_string()
+    }
+    fn reject_admission(&mut self, step: u64) -> bool {
+        self.schedule.active(step)
     }
 }
 

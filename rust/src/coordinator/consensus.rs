@@ -1,0 +1,890 @@
+//! In-protocol admission: a leaderless BFT agreement round that commits
+//! each epoch boundary's **roster document** over the signed-broadcast
+//! fabric, replacing the `churn` schedule's join entries as the admission
+//! authority (ROADMAP direction 1 — the open-collaboration story of
+//! *Distributed Deep Learning in Open Collaborations*, without the
+//! trusted membership server of *Secure Byzantine-Robust Machine
+//! Learning*).
+//!
+//! ## The round (BFT-Archipelago shape)
+//!
+//! At a boundary step with pending candidates or evictions, the live
+//! incumbents run a ranked three-message agreement — n incumbents,
+//! f = ⌊(n−1)/3⌋ tolerated faults, 2f+1 certificates — staged exactly
+//! like every other protocol phase (each stage only *collects* what an
+//! earlier stage *sent*, so the pooled barrier model and the blocking
+//! models execute it identically):
+//!
+//! 1. **JOIN_REQUEST** (candidate): the candidate broadcasts its signed
+//!    petition, pubkey payload, *before* it holds any roster slot — the
+//!    candidate-initiated handshake.
+//! 2. **Rank R — propose** ([`stage_admission_propose`]): every
+//!    incumbent collects the petitions, derives the next epoch's
+//!    [`RosterDocument`] (admitted joiners with pubkeys, timeout-evicted
+//!    crashed peers, reclaimed ids) and broadcasts it.
+//! 3. **Rank A — vote** ([`stage_admission_vote`]): every incumbent
+//!    tallies the rank-R proposals, votes the majority document's digest
+//!    (ties break toward the lowest digest). A Byzantine incumbent may
+//!    instead vote the empty-roster digest (`reject_admission` surface).
+//! 4. **Rank B — certify** ([`stage_admission_commit`]): an incumbent
+//!    that observes ≥ 2f+1 matching votes broadcasts a [`RosterCert`]
+//!    quoting the voter set; the signed rank-A envelopes it references
+//!    are the transferable evidence (every vote is Schnorr-signed, see
+//!    [`crate::net::auth::requires_signature`]).
+//! 5. **Apply** ([`stage_boundary_apply_consensus`]): a document backed
+//!    by ≥ 2f+1 certificates is committed and fed to the PR 5 boundary
+//!    machinery unchanged — `OwnerMap::derive`, validator re-draw,
+//!    sponsor snapshot.
+//!
+//! Safety: two conflicting certificates would need 2·(2f+1) − n ≥ f+1
+//! common voters with n ≥ 3f+1, so at least one *honest* incumbent voted
+//! both ways — impossible (one vote per round). Liveness: n − f ≥ 2f+1
+//! honest votes always form a certificate, which is why a minority of
+//! rejecting Byzantine incumbents (≤ f) cannot block an admission.
+//!
+//! ## Determinism contract
+//!
+//! Consensus mode keeps the membership determinism contract
+//! (`membership.rs` module docs): candidate submission steps and the
+//! eviction timeout are config data, so under an honest majority the
+//! committed document is a pure function of the config — which is what
+//! lets every execution model (threaded / pooled / socket / gossip)
+//! derive the same expected roster timeline for *scheduling* (who is
+//! held out when, which links form at which epoch) while the *protocol
+//! plane* exchanges real signed petitions, proposals, votes and
+//! certificates. The derived timeline is [`AdmissionConfig::
+//! derived_schedule`]; a run where consensus fails (> f faults) refuses
+//! the admission deterministically — the candidate times out in
+//! `stage_boundary_join` and is never admitted, on every model.
+//!
+//! Evictions: a `crash` entry needs no paired `rejoin` in consensus
+//! mode. The dead peer is excised at its crash boundary (same silent
+//! excision as schedule mode — a dead process sends nothing), and after
+//! [`AdmissionConfig::evict_after`] further steps of silence the
+//! incumbents vote a formal eviction into the roster document, which
+//! returns the id to the reclaimable pool. A later `JOIN_REQUEST` from
+//! that id is proposed as a *reclamation* (`reclaimed` list) and re-uses
+//! the crash/rejoin state-reset path at install.
+
+use super::membership::{ChurnEvent, ChurnKind, MembershipSchedule, Snapshot};
+use super::messages::{Reader, Writer};
+use super::optimizer::Optimizer;
+use super::partition::OwnerMap;
+use super::step::{draw_validators, Behavior, PeerCtx};
+use crate::crypto::{sha256_parts, Digest};
+use crate::net::{slots, Envelope, MsgClass, PeerId};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Receive-timeout multiple (of `base_timeout_ms`) for the round's
+/// collect phases. The round runs at a single step on peers that are
+/// already synchronized by the boundary barrier, so one generous phase
+/// budget suffices (the candidate-side snapshot wait keeps its own
+/// join-scaled budget in `stage_boundary_join`).
+const ROUND_TIMEOUT_MULT: u64 = 4;
+
+// ---------------------------------------------------------------------------
+// Config
+// ---------------------------------------------------------------------------
+
+/// Who decides admission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AdmissionMode {
+    /// PR 5 behaviour: the `churn` schedule is the admission authority.
+    /// The default — static-roster and schedule-churn runs are
+    /// bit-identical to before this module existed.
+    #[default]
+    Schedule,
+    /// The live roster is the admission authority: joins come from
+    /// `JOIN_REQUEST` petitions committed by the BFT round; crashed
+    /// peers are timeout-evicted by vote. A `churn` schedule may still
+    /// carry `leave`/`crash` events, but `join`/`rejoin` entries are a
+    /// hard config error.
+    Consensus,
+}
+
+/// The `admission` config block. `Default` is schedule mode with no
+/// candidates — exactly the legacy behaviour.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AdmissionConfig {
+    pub mode: AdmissionMode,
+    /// Candidate petitions, `(peer, step)`: the step at which the
+    /// candidate broadcasts its `JOIN_REQUEST` and — under an honest
+    /// quorum — enters the roster. Config data, not an admission grant:
+    /// the grant is the committed document.
+    pub candidates: Vec<(PeerId, u64)>,
+    /// Steps of post-crash silence before the incumbents vote a formal
+    /// eviction (the "timeout" of timeout-eviction, measured in
+    /// protocol steps — the only clock the determinism contract
+    /// allows).
+    pub evict_after: u64,
+    /// Certificate-size override. `None` derives 2f+1 with
+    /// f = ⌊(n−1)/3⌋ from the live incumbent count n.
+    pub quorum: Option<usize>,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> AdmissionConfig {
+        AdmissionConfig {
+            mode: AdmissionMode::Schedule,
+            candidates: vec![],
+            evict_after: 2,
+            quorum: None,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    pub fn is_consensus(&self) -> bool {
+        self.mode == AdmissionMode::Consensus
+    }
+
+    /// Parse one candidate entry `"<peer>@<step>"`.
+    pub fn parse_candidate(s: &str) -> Result<(PeerId, u64), String> {
+        let (peer_str, step_str) = s
+            .split_once('@')
+            .ok_or_else(|| format!("admission candidate '{s}' is not '<peer>@<step>'"))?;
+        let peer: PeerId = peer_str
+            .trim()
+            .parse()
+            .map_err(|_| format!("admission candidate '{s}': '{peer_str}' is not a peer id"))?;
+        let step: u64 = step_str
+            .trim()
+            .parse()
+            .map_err(|_| format!("admission candidate '{s}': '{step_str}' is not a step"))?;
+        Ok((peer, step))
+    }
+
+    /// Canonical candidate entries (`"<peer>@<step>"`, sorted by step
+    /// then id) — the JSON array form.
+    pub fn canonical_candidates(&self) -> Vec<String> {
+        let mut cs = self.candidates.clone();
+        cs.sort_by_key(|&(p, s)| (s, p));
+        cs.iter().map(|(p, s)| format!("{p}@{s}")).collect()
+    }
+
+    /// The candidates petitioning at `step`, sorted by id.
+    pub fn candidates_at(&self, step: u64) -> Vec<PeerId> {
+        let mut out: Vec<PeerId> =
+            self.candidates.iter().filter(|&&(_, s)| s == step).map(|&(p, _)| p).collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// The peers whose post-crash silence times out at `step`
+    /// (crash step + `evict_after` == step), sorted by id.
+    pub fn evictions_at(&self, step: u64, sched: &MembershipSchedule) -> Vec<PeerId> {
+        if !self.is_consensus() {
+            return vec![];
+        }
+        let mut out: Vec<PeerId> = sched
+            .events()
+            .iter()
+            .filter(|e| {
+                e.kind == ChurnKind::Crash && e.step.saturating_add(self.evict_after) == step
+            })
+            .map(|e| e.peer)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// True when step `step` runs an agreement round: pending candidate
+    /// petitions or a timed-out eviction. Drives the execution models'
+    /// stage dispatch, exactly like `has_delta_at` drives the boundary
+    /// stages.
+    pub fn round_at(&self, step: u64, sched: &MembershipSchedule) -> bool {
+        self.is_consensus()
+            && (!self.candidates_at(step).is_empty() || !self.evictions_at(step, sched).is_empty())
+    }
+
+    /// The expected roster timeline as a schedule: the raw `churn`
+    /// events (leaves, crashes) plus one derived entry per candidate —
+    /// `join` for a fresh id, `rejoin` for a previously-crashed one
+    /// (readmission re-uses the crash/rejoin state-reset machinery).
+    /// This is what the execution models *schedule* by (held-out steps,
+    /// socket link epochs, overlay rosters); the protocol plane still
+    /// has to commit the document for anyone to be admitted.
+    pub fn derived_schedule(&self, churn: &MembershipSchedule) -> MembershipSchedule {
+        if !self.is_consensus() {
+            return churn.clone();
+        }
+        let mut events: Vec<ChurnEvent> = churn.events().to_vec();
+        for &(peer, step) in &self.candidates {
+            let kind = if churn.crash_step(peer).is_some() {
+                ChurnKind::Rejoin
+            } else {
+                ChurnKind::Join
+            };
+            events.push(ChurnEvent { peer, step, kind });
+        }
+        MembershipSchedule::from_events(events)
+    }
+
+    /// Certificate size for an `n`-incumbent round: the explicit
+    /// override, else 2f+1 with f = ⌊(n−1)/3⌋.
+    pub fn quorum_for(&self, n: usize) -> usize {
+        self.quorum.unwrap_or(2 * (n.saturating_sub(1) / 3) + 1)
+    }
+
+    /// Structural validation (hard errors, strict-config precedent).
+    /// Checks the mode/schedule exclusivity rules, candidate sanity, and
+    /// that the derived timeline itself validates.
+    pub fn validate(
+        &self,
+        n_peers: usize,
+        steps: u64,
+        churn: &MembershipSchedule,
+    ) -> Result<(), String> {
+        if !self.is_consensus() {
+            if !self.candidates.is_empty() {
+                return Err(
+                    "admission: candidates given but mode is 'schedule' — candidate \
+                     petitions only exist in consensus mode"
+                        .to_string(),
+                );
+            }
+            return Ok(());
+        }
+        if self.evict_after == 0 {
+            return Err("admission: evict_after must be ≥ 1 step".to_string());
+        }
+        if self.quorum == Some(0) {
+            return Err("admission: quorum override must be ≥ 1".to_string());
+        }
+        // Consensus mode and a scheduled join are mutually exclusive:
+        // the schedule would pre-decide exactly the question the round
+        // exists to answer.
+        for e in churn.events() {
+            match e.kind {
+                ChurnKind::Join => {
+                    return Err(format!(
+                        "admission: consensus mode forbids churn join entries — peer {} \
+                         joining at step {} must petition via an admission candidate \
+                         ('{}@{}') instead",
+                        e.peer, e.step, e.peer, e.step
+                    ));
+                }
+                ChurnKind::Rejoin => {
+                    return Err(format!(
+                        "admission: consensus mode forbids churn rejoin entries — peer {} \
+                         re-enters by petitioning after its eviction ('{}@<step>')",
+                        e.peer, e.peer
+                    ));
+                }
+                ChurnKind::Crash => {
+                    if e.step.saturating_add(self.evict_after) >= steps {
+                        return Err(format!(
+                            "admission: peer {} crashes at step {} but its eviction round \
+                             (step {}) never fires in a {steps}-step run",
+                            e.peer,
+                            e.step,
+                            e.step + self.evict_after
+                        ));
+                    }
+                }
+                ChurnKind::Leave => {}
+            }
+        }
+        for (i, &(peer, step)) in self.candidates.iter().enumerate() {
+            if peer == 0 {
+                return Err(
+                    "admission: peer 0 is the metrics recorder and cannot petition".to_string()
+                );
+            }
+            if peer >= n_peers {
+                return Err(format!(
+                    "admission: candidate {peer} outside the {n_peers}-id universe"
+                ));
+            }
+            if step == 0 || step >= steps {
+                return Err(format!(
+                    "admission: candidate {peer} petitions at step {step}, outside \
+                     1..{steps}"
+                ));
+            }
+            if self.candidates[i + 1..].iter().any(|&(p, _)| p == peer) {
+                return Err(format!(
+                    "admission: peer {peer} has two candidate entries — at most one petition"
+                ));
+            }
+            if let Some(crash) = churn.crash_step(peer) {
+                if step <= crash.saturating_add(self.evict_after) {
+                    return Err(format!(
+                        "admission: peer {peer} petitions at step {step} but is only \
+                         evicted at step {} — readmission must follow the eviction",
+                        crash + self.evict_after
+                    ));
+                }
+            }
+        }
+        // The derived timeline must be a valid roster trajectory
+        // (crash-without-rejoin is legal here: the eviction round, not a
+        // scheduled rejoin, closes a consensus-mode crash).
+        self.derived_schedule(churn).validate_ext(n_peers, steps, true)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Roster document + certificate
+// ---------------------------------------------------------------------------
+
+fn write_ids(w: &mut Writer, ids: &[PeerId]) {
+    w.u32(ids.len() as u32);
+    for &p in ids {
+        w.u64(p as u64);
+    }
+}
+
+fn read_ids(r: &mut Reader) -> Option<Vec<PeerId>> {
+    let n = r.u32()? as usize;
+    if n > 1_000_000 {
+        return None;
+    }
+    (0..n).map(|_| r.u64().map(|v| v as PeerId)).collect()
+}
+
+/// The value the round agrees on: the next epoch's roster changes.
+/// Proposed at rank R, referenced by digest in ranks A/B, applied once
+/// certified.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RosterDocument {
+    /// The boundary step this document belongs to.
+    pub step: u64,
+    /// The epoch the document creates (current epoch + 1).
+    pub epoch: u64,
+    /// Admitted joiners with the pubkey their petition carried (the key
+    /// every later envelope signature is checked against).
+    pub admitted: Vec<(PeerId, Vec<u8>)>,
+    /// Crashed peers whose silence timed out: formally removed, their
+    /// ids returned to the reclaimable pool.
+    pub evicted: Vec<PeerId>,
+    /// Previously-evicted ids re-entering via a fresh petition (the
+    /// ban/eviction reclamation path).
+    pub reclaimed: Vec<PeerId>,
+}
+
+impl RosterDocument {
+    /// The "admit nothing" document — what a rejecting vote endorses.
+    pub fn empty(step: u64, epoch: u64) -> RosterDocument {
+        RosterDocument { step, epoch, admitted: vec![], evicted: vec![], reclaimed: vec![] }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u64(self.step).u64(self.epoch).u32(self.admitted.len() as u32);
+        for (p, pk) in &self.admitted {
+            w.u64(*p as u64).bytes(pk);
+        }
+        write_ids(&mut w, &self.evicted);
+        write_ids(&mut w, &self.reclaimed);
+        w.finish()
+    }
+
+    pub fn decode(b: &[u8]) -> Option<RosterDocument> {
+        let mut r = Reader::new(b);
+        let step = r.u64()?;
+        let epoch = r.u64()?;
+        let n = r.u32()? as usize;
+        if n > 1_000_000 {
+            return None;
+        }
+        let mut admitted = Vec::with_capacity(n);
+        for _ in 0..n {
+            let p = r.u64()? as PeerId;
+            let pk = r.bytes()?;
+            admitted.push((p, pk));
+        }
+        let evicted = read_ids(&mut r)?;
+        let reclaimed = read_ids(&mut r)?;
+        r.done().then_some(RosterDocument { step, epoch, admitted, evicted, reclaimed })
+    }
+
+    /// Canonical digest — the value ranks A and B quote. Domain-tagged
+    /// so a document can never collide with another protocol hash.
+    pub fn digest(&self) -> Digest {
+        sha256_parts(&[b"btard-roster-doc", &self.encode()])
+    }
+}
+
+/// The rank-B message: a commit certificate for `doc`. `voters` lists
+/// the ≥ 2f+1 incumbents whose matching rank-A votes the sender
+/// observed; the votes themselves are signed broadcast envelopes, so the
+/// certificate is checkable by any third party holding them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RosterCert {
+    pub doc: Digest,
+    pub voters: Vec<PeerId>,
+}
+
+impl RosterCert {
+    /// The explicit "no quorum observed" certificate.
+    pub fn abstain() -> RosterCert {
+        RosterCert { doc: [0u8; 32], voters: vec![] }
+    }
+
+    pub fn is_abstain(&self) -> bool {
+        self.doc == [0u8; 32]
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.digest(&self.doc);
+        write_ids(&mut w, &self.voters);
+        w.finish()
+    }
+
+    pub fn decode(b: &[u8]) -> Option<RosterCert> {
+        let mut r = Reader::new(b);
+        let doc = r.digest()?;
+        let voters = read_ids(&mut r)?;
+        r.done().then_some(RosterCert { doc, voters })
+    }
+}
+
+/// Per-round transient state, carried across the round's stages in
+/// `PeerCtx` (the round runs before `stage_begin`, so `StepState` does
+/// not exist yet). Reset at the submit stage of every round.
+#[derive(Default)]
+pub struct RoundState {
+    /// Decoded rank-R proposals, keyed by digest (one entry per distinct
+    /// document observed).
+    pub proposals: Vec<(Digest, RosterDocument)>,
+    /// The digest this peer voted at rank A.
+    pub vote: Option<Digest>,
+    /// The committed document and one backing certificate, set by the
+    /// apply stage when ≥ 2f+1 certificates agree.
+    pub committed: Option<(RosterDocument, RosterCert)>,
+}
+
+// ---------------------------------------------------------------------------
+// Collect helper
+// ---------------------------------------------------------------------------
+
+/// Collect one broadcast payload per peer in `from` without the
+/// ELIMINATE-on-timeout escalation of the training phases: consensus
+/// silence is absorbed by the quorum arithmetic (that is the point of
+/// 2f+1 certificates), and a candidate that never petitions is simply
+/// not proposed — it holds no roster slot to be eliminated from.
+/// Persistent incumbent silence is still punished, by the ordinary
+/// per-step machinery of the training phases that follow.
+fn collect_soft(
+    ctx: &mut PeerCtx,
+    step: u64,
+    slot: u32,
+    from: &[PeerId],
+) -> HashMap<PeerId, Arc<[u8]>> {
+    let mut out: HashMap<PeerId, Arc<[u8]>> = HashMap::new();
+    let mut missing: Vec<PeerId> = from.to_vec();
+    while !missing.is_empty() {
+        let want = missing.clone();
+        // `e.broadcast` is load-bearing, as in `collect_broadcast`: a
+        // per-recipient p2p payload must not satisfy a broadcast collect
+        // (it would bypass the one-value-per-sender property the vote
+        // tally assumes).
+        let res = ctx
+            .net
+            .recv_keyed(step, slot, &|e: &Envelope| e.broadcast && want.contains(&e.from));
+        match res {
+            Ok(env) => {
+                out.entry(env.from).or_insert(env.payload);
+                missing.retain(|&p| p != env.from);
+            }
+            Err(_) => break,
+        }
+    }
+    out
+}
+
+fn round_timeout(ctx: &mut PeerCtx) {
+    ctx.net
+        .set_timeout(Duration::from_millis(ctx.cfg.base_timeout_ms * ROUND_TIMEOUT_MULT));
+}
+
+/// This boundary's incumbents: the pre-boundary live roster (consensus
+/// data — identical on every honest peer). The candidate is not among
+/// them; it submits, then waits.
+fn incumbents(ctx: &PeerCtx) -> Vec<PeerId> {
+    ctx.live.clone()
+}
+
+// ---------------------------------------------------------------------------
+// Round stages
+// ---------------------------------------------------------------------------
+
+/// Round stage 1 — the candidate's petition. A candidate broadcasts its
+/// signed `JOIN_REQUEST` (pubkey payload) before holding any roster
+/// slot; everyone else ticks for clock parity. Also resets the round
+/// state on every peer.
+pub fn stage_admission_submit(ctx: &mut PeerCtx, step: u64) {
+    ctx.net.tick();
+    ctx.round = RoundState::default();
+    let me = ctx.net.id();
+    if ctx.membership.schedule.enters_at(me, step) {
+        let pubkey = ctx.net.info().public_keys[me].0.to_vec();
+        ctx.net.broadcast(step, slots::sub(slots::JOIN_REQUEST, me), MsgClass::Control, pubkey);
+    }
+}
+
+/// Round stage 2 (rank R) — every incumbent collects the petitions,
+/// derives its roster document and broadcasts it. Honest incumbents
+/// derive identical documents (the inputs — petitions, ban ledger,
+/// schedule, epoch — are all consensus data), so the rank-A tally is
+/// unanimous minus faults.
+pub fn stage_admission_propose(ctx: &mut PeerCtx, step: u64) {
+    ctx.net.tick();
+    let me = ctx.net.id();
+    if ctx.membership.schedule.enters_at(me, step) {
+        return; // candidates do not propose
+    }
+    let admission = ctx.membership.admission.clone();
+    let candidates = admission.candidates_at(step);
+    round_timeout(ctx);
+    let mut admitted: Vec<(PeerId, Vec<u8>)> = Vec::new();
+    let mut reclaimed: Vec<PeerId> = Vec::new();
+    for c in candidates {
+        // One petition per candidate, on its own sub-slot. A missing or
+        // forged petition (payload must match the roster pubkey the
+        // envelope signature was already checked against) drops the
+        // candidate from the proposal — a refusal, not a ban.
+        let reqs = collect_soft(ctx, step, slots::sub(slots::JOIN_REQUEST, c), &[c]);
+        let Some(payload) = reqs.get(&c) else { continue };
+        if payload.as_ref() != &ctx.net.info().public_keys[c].0[..] {
+            continue;
+        }
+        if ctx.ledger.is_banned(c) {
+            continue;
+        }
+        admitted.push((c, payload.to_vec()));
+        if ctx.membership.schedule.crash_step(c).is_some() {
+            // A previously-evicted id re-entering: its slot leaves the
+            // reclaimable pool with this document.
+            reclaimed.push(c);
+        }
+    }
+    let doc = RosterDocument {
+        step,
+        epoch: ctx.membership.epoch + 1,
+        admitted,
+        evicted: admission.evictions_at(step, &ctx.membership.schedule),
+        reclaimed,
+    };
+    ctx.net.broadcast(step, slots::ROSTER_PROPOSE, MsgClass::Control, doc.encode());
+}
+
+/// Round stage 3 (rank A) — tally the rank-R proposals and vote the
+/// majority document's digest (ties toward the lowest digest, so the
+/// choice is deterministic on every peer). The Byzantine
+/// `reject_admission` surface votes the empty-roster digest instead.
+pub fn stage_admission_vote(ctx: &mut PeerCtx, step: u64) {
+    ctx.net.tick();
+    let me = ctx.net.id();
+    if ctx.membership.schedule.enters_at(me, step) {
+        return;
+    }
+    let inc = incumbents(ctx);
+    round_timeout(ctx);
+    let props = collect_soft(ctx, step, slots::ROSTER_PROPOSE, &inc);
+    let mut tally: Vec<(Digest, usize)> = Vec::new();
+    for (_, payload) in props.iter() {
+        let Some(doc) = RosterDocument::decode(payload) else { continue };
+        if doc.step != step {
+            continue;
+        }
+        let d = doc.digest();
+        match tally.iter_mut().find(|(td, _)| *td == d) {
+            Some((_, c)) => *c += 1,
+            None => {
+                tally.push((d, 1));
+                ctx.round.proposals.push((d, doc));
+            }
+        }
+    }
+    tally.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    let Some(&(majority, _)) = tally.first() else {
+        return; // no decodable proposal — abstain from rank A entirely
+    };
+    let mut vote = majority;
+    if let Behavior::Byzantine(adv) = &mut ctx.behavior {
+        if adv.reject_admission(step) {
+            vote = RosterDocument::empty(step, ctx.membership.epoch + 1).digest();
+        }
+    }
+    ctx.round.vote = Some(vote);
+    ctx.net.broadcast(step, slots::ROSTER_VOTE, MsgClass::Control, vote.to_vec());
+}
+
+/// Round stage 4 (rank B) — collect the rank-A votes; with ≥ 2f+1
+/// matching a digest, broadcast the commit certificate quoting the voter
+/// set; otherwise broadcast an explicit abstain (uniform traffic shape:
+/// every incumbent sends exactly one rank-B message per round).
+pub fn stage_admission_commit(ctx: &mut PeerCtx, step: u64) {
+    ctx.net.tick();
+    let me = ctx.net.id();
+    if ctx.membership.schedule.enters_at(me, step) {
+        return;
+    }
+    let inc = incumbents(ctx);
+    let quorum = ctx.membership.admission.quorum_for(inc.len());
+    round_timeout(ctx);
+    let votes = collect_soft(ctx, step, slots::ROSTER_VOTE, &inc);
+    let mut tally: Vec<(Digest, Vec<PeerId>)> = Vec::new();
+    for &p in &inc {
+        let Some(payload) = votes.get(&p) else { continue };
+        if payload.len() != 32 {
+            continue;
+        }
+        let mut d = [0u8; 32];
+        d.copy_from_slice(payload);
+        match tally.iter_mut().find(|(td, _)| *td == d) {
+            Some((_, vs)) => vs.push(p),
+            None => tally.push((d, vec![p])),
+        }
+    }
+    tally.sort_by(|a, b| b.1.len().cmp(&a.1.len()).then(a.0.cmp(&b.0)));
+    let cert = match tally.first() {
+        Some((d, voters)) if voters.len() >= quorum => {
+            RosterCert { doc: *d, voters: voters.clone() }
+        }
+        _ => RosterCert::abstain(),
+    };
+    ctx.net.broadcast(step, slots::ROSTER_CERT, MsgClass::Control, cert.encode());
+}
+
+/// The consensus-mode boundary apply: collect the rank-B certificates,
+/// commit the document they agree on, and run the PR 5 boundary
+/// machinery (excision, admission, epoch bump, `OwnerMap::derive`,
+/// validator re-draw, sponsor snapshot) from the *committed* deltas
+/// instead of the schedule's. Returns `true` for a graceful leaver,
+/// exactly like the scheduled apply.
+///
+/// The entering candidate runs the scheduled apply instead — its
+/// provisional view (overwritten wholesale by the sponsor snapshot in
+/// `stage_boundary_join`) only needs the same sponsor arithmetic the
+/// schedule path uses.
+pub fn stage_boundary_apply_consensus(
+    ctx: &mut PeerCtx,
+    step: u64,
+    params: &[f32],
+    opt: &dyn Optimizer,
+) -> bool {
+    let me = ctx.net.id();
+    if ctx.membership.schedule.enters_at(me, step) {
+        return super::membership::stage_boundary_apply_scheduled(ctx, step, params, opt);
+    }
+    ctx.net.tick();
+    if ctx.membership.schedule.graceful_leavers_at(step).contains(&me) {
+        ctx.net.broadcast(step, slots::sub(slots::LEAVE, me), MsgClass::Control, vec![]);
+        return true;
+    }
+    let inc = incumbents(ctx);
+    let quorum = ctx.membership.admission.quorum_for(inc.len());
+    round_timeout(ctx);
+    let cert_payloads = collect_soft(ctx, step, slots::ROSTER_CERT, &inc);
+    // Tally certificates by document digest; a certificate only counts
+    // if it itself quotes a full quorum of voters.
+    let mut certs: Vec<(PeerId, RosterCert)> = Vec::new();
+    for &p in &inc {
+        let Some(payload) = cert_payloads.get(&p) else { continue };
+        let Some(cert) = RosterCert::decode(payload) else { continue };
+        if cert.is_abstain() || cert.voters.len() < quorum {
+            continue;
+        }
+        certs.push((p, cert));
+    }
+    let mut tally: Vec<(Digest, usize)> = Vec::new();
+    for (_, cert) in &certs {
+        match tally.iter_mut().find(|(td, _)| *td == cert.doc) {
+            Some((_, c)) => *c += 1,
+            None => tally.push((cert.doc, 1)),
+        }
+    }
+    tally.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    let committed: Option<RosterDocument> = tally
+        .first()
+        .filter(|(_, c)| *c >= quorum)
+        .and_then(|(d, _)| {
+            ctx.round.proposals.iter().find(|(pd, _)| pd == d).map(|(_, doc)| doc.clone())
+        });
+    // Scheduled departures (leave/crash at this same step) excise
+    // whether or not the round committed: departure was never the
+    // round's question.
+    let (_, leaves) = ctx.membership.schedule.deltas_at(step);
+    let Some(doc) = committed else {
+        // No certificate (> f faults, or a collapsed quorum): admission
+        // is refused — deterministically, on every peer; the candidate
+        // times out in `stage_boundary_join`. Departures still apply.
+        if !leaves.is_empty() {
+            ctx.live.retain(|p| !leaves.contains(p));
+            ctx.membership.epoch += 1;
+            ctx.owners = OwnerMap::derive(
+                ctx.owners.n_parts(),
+                &ctx.live,
+                ctx.cfg.global_seed,
+                ctx.membership.epoch,
+            );
+            ctx.validators = draw_validators(&ctx.live, &ctx.r_prev, ctx.cfg.m_validators);
+        }
+        return false;
+    };
+    // Keep one backing certificate (lowest sender id — deterministic)
+    // alongside the document for auditing and the test suite.
+    let backing = certs
+        .iter()
+        .filter(|(_, c)| c.doc == doc.digest())
+        .min_by_key(|(p, _)| *p)
+        .map(|(_, c)| c.clone())
+        .unwrap_or_else(RosterCert::abstain);
+    let sponsor = ctx.live.iter().copied().filter(|p| !leaves.contains(p)).min();
+    ctx.live.retain(|p| !leaves.contains(p));
+    let mut admitted = Vec::new();
+    for (j, _pk) in &doc.admitted {
+        // Same guard as the scheduled path: the ban ledger outranks the
+        // document (honest proposers never list a banned id, but the
+        // committed value is applied defensively).
+        if !ctx.ledger.is_banned(*j) && !ctx.live.contains(j) {
+            ctx.live.push(*j);
+            admitted.push(*j);
+        }
+    }
+    ctx.live.sort_unstable();
+    // Every committed document bumps the epoch — including an
+    // eviction-only document that changes no live id: the roster
+    // *version* changed, and owner assignment / validator slots are
+    // functions of (roster, epoch).
+    ctx.membership.epoch += 1;
+    ctx.owners = OwnerMap::derive(
+        ctx.owners.n_parts(),
+        &ctx.live,
+        ctx.cfg.global_seed,
+        ctx.membership.epoch,
+    );
+    ctx.validators = draw_validators(&ctx.live, &ctx.r_prev, ctx.cfg.m_validators);
+    ctx.round.committed = Some((doc, backing));
+    if Some(me) == sponsor && !admitted.is_empty() {
+        let bytes = Snapshot::gather(ctx, step, params, opt).encode();
+        for &j in &admitted {
+            ctx.net.send(j, step, slots::sub(slots::JOIN, j), MsgClass::Control, bytes.clone());
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(candidates: &[(PeerId, u64)]) -> AdmissionConfig {
+        AdmissionConfig {
+            mode: AdmissionMode::Consensus,
+            candidates: candidates.to_vec(),
+            evict_after: 2,
+            quorum: None,
+        }
+    }
+
+    #[test]
+    fn document_codec_round_trips() {
+        let doc = RosterDocument {
+            step: 7,
+            epoch: 3,
+            admitted: vec![(8, vec![1, 2, 3]), (9, vec![4, 5])],
+            evicted: vec![2],
+            reclaimed: vec![8],
+        };
+        let back = RosterDocument::decode(&doc.encode()).unwrap();
+        assert_eq!(doc, back);
+        assert_eq!(doc.digest(), back.digest());
+        // Digest is content-sensitive.
+        let mut other = doc.clone();
+        other.evicted = vec![3];
+        assert_ne!(doc.digest(), other.digest());
+        // Trailing bytes are a decode error, not silently ignored.
+        let mut long = doc.encode();
+        long.push(0);
+        assert!(RosterDocument::decode(&long).is_none());
+    }
+
+    #[test]
+    fn cert_codec_round_trips() {
+        let cert = RosterCert { doc: [7u8; 32], voters: vec![0, 1, 3, 5, 6] };
+        assert_eq!(RosterCert::decode(&cert.encode()).unwrap(), cert);
+        assert!(RosterCert::abstain().is_abstain());
+        assert!(!cert.is_abstain());
+    }
+
+    #[test]
+    fn quorum_is_two_thirds_plus_one() {
+        let a = cfg(&[]);
+        // n = 3f+1 → 2f+1.
+        assert_eq!(a.quorum_for(4), 3);
+        assert_eq!(a.quorum_for(7), 5);
+        assert_eq!(a.quorum_for(8), 5);
+        assert_eq!(a.quorum_for(10), 7);
+        assert_eq!(a.quorum_for(2), 1);
+        let o = AdmissionConfig { quorum: Some(6), ..cfg(&[]) };
+        assert_eq!(o.quorum_for(8), 6);
+    }
+
+    #[test]
+    fn derived_schedule_maps_candidates_to_joins_and_rejoins() {
+        let churn = MembershipSchedule::parse("crash:3@2").unwrap();
+        let a = cfg(&[(8, 5), (3, 6)]);
+        let derived = a.derived_schedule(&churn);
+        assert_eq!(derived.join_step(8), Some(5));
+        assert_eq!(derived.rejoin_step(3), Some(6));
+        assert_eq!(derived.crash_step(3), Some(2));
+        // Schedule mode passes the churn through untouched.
+        let s = AdmissionConfig::default();
+        assert_eq!(s.derived_schedule(&churn), churn);
+    }
+
+    #[test]
+    fn round_steps_cover_candidates_and_evictions() {
+        let churn = MembershipSchedule::parse("crash:3@2").unwrap();
+        let a = cfg(&[(8, 5)]);
+        let derived = a.derived_schedule(&churn);
+        assert!(a.round_at(5, &derived)); // candidate petition
+        assert!(a.round_at(4, &derived)); // eviction: crash@2 + evict_after 2
+        assert!(!a.round_at(2, &derived)); // the crash itself is not a round
+        assert!(!a.round_at(3, &derived));
+        assert_eq!(a.evictions_at(4, &derived), vec![3]);
+        assert_eq!(a.candidates_at(5), vec![8]);
+    }
+
+    #[test]
+    fn validation_rejects_scheduled_joins_and_early_readmission() {
+        let joins = MembershipSchedule::parse("join:8@3").unwrap();
+        assert!(cfg(&[]).validate(9, 10, &joins).is_err());
+        let rejoins = MembershipSchedule::parse("crash:3@2,rejoin:3@5").unwrap();
+        assert!(cfg(&[]).validate(9, 10, &rejoins).is_err());
+        // Readmission before the eviction round fires.
+        let crash = MembershipSchedule::parse("crash:3@2").unwrap();
+        assert!(cfg(&[(3, 3)]).validate(9, 10, &crash).is_err());
+        assert!(cfg(&[(3, 6)]).validate(9, 10, &crash).is_ok());
+        // A crash whose eviction never fires.
+        assert!(cfg(&[]).validate(9, 4, &crash).is_err());
+        // Candidates in schedule mode are meaningless.
+        let mut sched_mode = cfg(&[(8, 3)]);
+        sched_mode.mode = AdmissionMode::Schedule;
+        assert!(sched_mode.validate(9, 10, &MembershipSchedule::empty()).is_err());
+        // Duplicate petitions.
+        assert!(cfg(&[(8, 3), (8, 5)]).validate(9, 10, &MembershipSchedule::empty()).is_err());
+        // Peer 0 and out-of-universe ids.
+        assert!(cfg(&[(0, 3)]).validate(9, 10, &MembershipSchedule::empty()).is_err());
+        assert!(cfg(&[(9, 3)]).validate(9, 10, &MembershipSchedule::empty()).is_err());
+        // The happy path.
+        assert!(cfg(&[(8, 3)]).validate(9, 10, &MembershipSchedule::empty()).is_ok());
+    }
+
+    #[test]
+    fn candidate_entries_parse_and_canonicalize() {
+        assert_eq!(AdmissionConfig::parse_candidate("8@3").unwrap(), (8, 3));
+        assert!(AdmissionConfig::parse_candidate("8").is_err());
+        assert!(AdmissionConfig::parse_candidate("x@3").is_err());
+        assert!(AdmissionConfig::parse_candidate("8@y").is_err());
+        let a = cfg(&[(9, 5), (8, 3)]);
+        assert_eq!(a.canonical_candidates(), vec!["8@3".to_string(), "9@5".to_string()]);
+    }
+}

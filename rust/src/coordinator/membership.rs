@@ -74,6 +74,7 @@
 //! honest, like the "peer 0 records metrics" rule.
 
 use super::accuse::{BanEvent, BanLedger};
+use super::consensus::AdmissionConfig;
 use super::messages::{BanReason, GradCommit, Reader, VerifyScalars, Writer};
 use super::optimizer::Optimizer;
 use super::partition::OwnerMap;
@@ -138,6 +139,15 @@ impl MembershipSchedule {
 
     pub fn events(&self) -> &[ChurnEvent] {
         &self.events
+    }
+
+    /// Build a schedule from raw events (canonicalized: sorted, deduped).
+    /// This is how `consensus::AdmissionConfig::derived_schedule` merges
+    /// candidate petitions into the churn timeline.
+    pub fn from_events(events: Vec<ChurnEvent>) -> MembershipSchedule {
+        let mut sched = MembershipSchedule { events };
+        sched.canonicalize();
+        sched
     }
 
     /// Parse one entry: `join:<peer>@<step>`, `leave:<peer>@<step>`,
@@ -236,6 +246,20 @@ impl MembershipSchedule {
     /// churning, double joins, leave before join) must not silently run
     /// a different experiment.
     pub fn validate(&self, n_peers: usize, steps: u64) -> Result<(), String> {
+        self.validate_ext(n_peers, steps, false)
+    }
+
+    /// [`validate`](Self::validate) with the crash-pairing rule made
+    /// optional: `allow_unpaired_crash` is how a consensus-mode derived
+    /// schedule validates — there, a crash with no rejoin is closed by a
+    /// voted eviction (`consensus::AdmissionConfig::evict_after`), not by
+    /// a scheduled rejoin. Schedule mode keeps the strict pairing.
+    pub fn validate_ext(
+        &self,
+        n_peers: usize,
+        steps: u64,
+        allow_unpaired_crash: bool,
+    ) -> Result<(), String> {
         for e in &self.events {
             if e.peer == 0 {
                 return Err("churn: peer 0 is the metrics recorder and cannot join or leave"
@@ -292,19 +316,22 @@ impl MembershipSchedule {
         for e in &self.events {
             match e.kind {
                 ChurnKind::Crash => {
-                    let Some(rejoin) = self.rejoin_step(e.peer) else {
-                        return Err(format!(
-                            "churn: peer {} crashes at step {} with no scheduled rejoin — \
-                             use leave:{}@{} for a permanent departure",
-                            e.peer, e.step, e.peer, e.step
-                        ));
-                    };
-                    if rejoin <= e.step {
-                        return Err(format!(
-                            "churn: peer {} rejoins at step {rejoin} but only crashes at \
-                             step {}",
-                            e.peer, e.step
-                        ));
+                    match self.rejoin_step(e.peer) {
+                        None if !allow_unpaired_crash => {
+                            return Err(format!(
+                                "churn: peer {} crashes at step {} with no scheduled rejoin — \
+                                 use leave:{}@{} for a permanent departure",
+                                e.peer, e.step, e.peer, e.step
+                            ));
+                        }
+                        Some(rejoin) if rejoin <= e.step => {
+                            return Err(format!(
+                                "churn: peer {} rejoins at step {rejoin} but only crashes at \
+                                 step {}",
+                                e.peer, e.step
+                            ));
+                        }
+                        _ => {}
                     }
                     if let Some(join) = self.join_step(e.peer) {
                         if join >= e.step {
@@ -411,6 +438,11 @@ impl MembershipSchedule {
         }
         match (self.crash_step(peer), self.rejoin_step(peer)) {
             (Some(c), Some(r)) => step >= c && step < r,
+            // An unpaired crash (consensus-mode derived schedules only —
+            // schedule mode validates the pair) is a permanent hold-out:
+            // the dead process never comes back unless a later candidate
+            // petition re-derives a rejoin entry for it.
+            (Some(c), None) => step >= c,
             _ => false,
         }
     }
@@ -504,16 +536,29 @@ impl MembershipSchedule {
 }
 
 /// A peer's runtime membership state: the shared schedule plus the
-/// current roster epoch (bumped at every applied boundary).
+/// current roster epoch (bumped at every applied boundary) and the
+/// admission policy. In consensus mode `schedule` is the *derived*
+/// timeline ([`super::consensus::AdmissionConfig::derived_schedule`]):
+/// churn departures plus one join/rejoin entry per candidate petition —
+/// the expected trajectory the models schedule by, while the actual
+/// admission grant is the committed roster document.
 #[derive(Clone, Debug, Default)]
 pub struct Membership {
     pub schedule: MembershipSchedule,
     pub epoch: u64,
+    pub admission: AdmissionConfig,
 }
 
 impl Membership {
     pub fn new(schedule: MembershipSchedule) -> Membership {
-        Membership { schedule, epoch: 0 }
+        Membership { schedule, epoch: 0, admission: AdmissionConfig::default() }
+    }
+
+    pub fn with_admission(
+        schedule: MembershipSchedule,
+        admission: AdmissionConfig,
+    ) -> Membership {
+        Membership { schedule, epoch: 0, admission }
     }
 }
 
@@ -760,7 +805,31 @@ const JOIN_WAIT_MULT_PER_STEP: u64 = 8;
 /// in [`stage_boundary_join`]). Returns `true` when this peer is a
 /// scheduled leaver: it has broadcast its signed LEAVE and must stop
 /// participating (the caller records a graceful exit, not a ban).
+///
+/// Dispatcher: under consensus admission, a boundary with a pending
+/// petition or eviction applies the *committed roster document*
+/// ([`super::consensus::stage_boundary_apply_consensus`]) instead of the
+/// schedule's deltas. Everything else — schedule mode, and
+/// consensus-mode boundaries that are pure scheduled departures — runs
+/// the legacy schedule-driven apply.
 pub fn stage_boundary_apply(
+    ctx: &mut PeerCtx,
+    step: u64,
+    params: &[f32],
+    opt: &dyn Optimizer,
+) -> bool {
+    let admission = &ctx.membership.admission;
+    if admission.is_consensus() && admission.round_at(step, &ctx.membership.schedule) {
+        return super::consensus::stage_boundary_apply_consensus(ctx, step, params, opt);
+    }
+    stage_boundary_apply_scheduled(ctx, step, params, opt)
+}
+
+/// The schedule-driven apply body (see [`stage_boundary_apply`]). Also
+/// runs on a consensus-mode *entrant* at its own boundary: its
+/// provisional roster view only needs the sponsor arithmetic, and is
+/// overwritten wholesale by the snapshot in [`stage_boundary_join`].
+pub fn stage_boundary_apply_scheduled(
     ctx: &mut PeerCtx,
     step: u64,
     params: &[f32],

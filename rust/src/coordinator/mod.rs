@@ -13,6 +13,9 @@
 //!   as `Adversary` impls behind the registry
 //! - `membership` — epoch-based dynamic membership: the churn schedule,
 //!   roster epochs, boundary stages and the JOIN snapshot transfer
+//! - `consensus` — in-protocol admission: the leaderless BFT round that
+//!   commits each boundary's roster document (candidate petitions,
+//!   ranked propose/vote/certify, timeout eviction)
 //! - `step` — Algorithm 6: one full BTARD step with Verifications 1–3
 //! - `validator`-logic lives inside `step` (CHECKCOMPUTATIONS)
 //! - `optimizer` — SGD+Nesterov+cosine, LAMB, global-norm clipping
@@ -24,6 +27,7 @@ pub mod adversary;
 pub mod aggregators;
 pub mod attacks;
 pub mod centered_clip;
+pub mod consensus;
 pub mod membership;
 pub mod messages;
 pub mod optimizer;
@@ -38,6 +42,7 @@ pub use adversary::{Adversary, AdversarySpec, MprngBehavior, SurfaceSpec};
 pub use aggregators::Aggregator;
 pub use attacks::AttackSchedule;
 pub use centered_clip::{centered_clip, TauPolicy};
+pub use consensus::{AdmissionConfig, AdmissionMode, RosterCert, RosterDocument};
 pub use membership::{ChurnEvent, ChurnKind, Membership, MembershipSchedule, Snapshot};
 pub use step::{btard_step, Behavior, PeerCtx, ProtocolConfig, StepOutput};
 pub use training::{

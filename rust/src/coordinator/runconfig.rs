@@ -22,6 +22,8 @@
 //!   "gossip_fanout": 8, "session_mac": false,
 //!   "network": "lossy:0.05",
 //!   "churn": ["join:8@3", "leave:2@6", "crash:4@4", "rejoin:4@6"],
+//!   "admission": {"mode": "consensus", "candidates": ["8@3"],
+//!                  "evict_after": 2, "quorum": null},
 //!   "checkpoint": {"interval": 2, "dir": "results/ckpt", "keep": 2},
 //!   "transport": "local",
 //!   "workload": {"kind": "quadratic", "dim": 1024, "mu": 0.1,
@@ -59,6 +61,23 @@
 //! a Byzantine peer crashing) are hard errors. See
 //! `coordinator::membership` for the protocol.
 //!
+//! `admission` selects who decides roster changes. The default
+//! (`"schedule"`, or the block absent) is the legacy behaviour: the
+//! `churn` schedule is the admission authority. `"consensus"` switches
+//! joins to the in-protocol BFT round (`coordinator::consensus`): each
+//! `candidates` entry `"<peer>@<step>"` broadcasts a signed
+//! `JOIN_REQUEST` petition at its step and is admitted only by a
+//! 2f+1-certified roster document; a `churn` `crash` needs no paired
+//! `rejoin` — after `evict_after` further steps the incumbents vote a
+//! formal eviction, and a later petition by the same id re-enters as a
+//! reclamation. `quorum` (default null = derive 2f+1 from the live
+//! count) overrides the certificate size. **Consensus mode and `churn`
+//! `join`/`rejoin` entries are mutually exclusive — a hard error**: the
+//! schedule would pre-decide exactly the question the round exists to
+//! answer. Candidate entries without `"mode": "consensus"` are likewise
+//! rejected. `write_run_config` serializes the block only in consensus
+//! mode, so legacy configs round-trip byte-identically.
+//!
 //! `checkpoint` enables periodic crash-recovery checkpoints: every
 //! `interval` completed steps each peer atomically writes
 //! `ckpt_<peer>_<steps>.bin` (params, optimizer state, ban ledger, step
@@ -95,6 +114,7 @@
 use super::adversary::AdversarySpec;
 use super::attacks::AttackSchedule;
 use super::centered_clip::TauPolicy;
+use super::consensus::{AdmissionConfig, AdmissionMode};
 use super::membership::MembershipSchedule;
 use super::optimizer::LrSchedule;
 use super::step::ProtocolConfig;
@@ -285,9 +305,65 @@ pub fn parse_run_config_full(text: &str) -> Result<LoadedRunConfig> {
                 }
                 MembershipSchedule::parse_list(&entries).map_err(|e| anyhow!("churn: {e}"))?
             };
-            schedule.validate(peers, steps).map_err(|e| anyhow!("{e}"))?;
+            // Validated below, jointly with the admission block: in
+            // consensus mode the churn rules change (scheduled joins are
+            // forbidden, an unpaired crash is closed by a voted
+            // eviction).
             cfg.churn = schedule;
         }
+    }
+
+    // admission policy (null / absent ⇒ legacy schedule mode)
+    if let Some(ab) = j.get("admission") {
+        if *ab != Json::Null {
+            let mode = ab
+                .get("mode")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("admission.mode must be 'schedule' or 'consensus'"))?;
+            let mut adm = AdmissionConfig {
+                mode: match mode {
+                    "schedule" => AdmissionMode::Schedule,
+                    "consensus" => AdmissionMode::Consensus,
+                    other => {
+                        return Err(anyhow!(
+                            "admission.mode '{other}' unknown (schedule | consensus)"
+                        ))
+                    }
+                },
+                ..AdmissionConfig::default()
+            };
+            if let Some(cv) = ab.get("candidates") {
+                if *cv != Json::Null {
+                    let arr = cv.as_arr().ok_or_else(|| {
+                        anyhow!("admission.candidates must be an array of '<peer>@<step>'")
+                    })?;
+                    for v in arr {
+                        let s = v.as_str().ok_or_else(|| {
+                            anyhow!("admission.candidates entries must be strings")
+                        })?;
+                        adm.candidates.push(
+                            AdmissionConfig::parse_candidate(s).map_err(|e| anyhow!("{e}"))?,
+                        );
+                    }
+                }
+            }
+            if let Some(ev) = ab.get("evict_after").and_then(|v| v.as_u64()) {
+                adm.evict_after = ev;
+            }
+            if let Some(q) = ab.get("quorum").and_then(|v| v.as_usize()) {
+                adm.quorum = Some(q);
+            }
+            cfg.admission = adm;
+        }
+    }
+    // Joint churn/admission validation: consensus mode owns the rules
+    // when active (and also checks the derived timeline); schedule mode
+    // keeps the legacy strict churn validation.
+    cfg.admission
+        .validate(peers, steps, &cfg.churn)
+        .map_err(|e| anyhow!("{e}"))?;
+    if !cfg.admission.is_consensus() {
+        cfg.churn.validate(peers, steps).map_err(|e| anyhow!("{e}"))?;
     }
 
     // crash-recovery checkpointing (null ⇒ disabled)
@@ -572,6 +648,25 @@ pub fn write_run_config(
         let entries: Vec<Json> =
             cfg.churn.canonical_entries().iter().map(|e| Json::str(e)).collect();
         root.push(("churn", Json::Arr(entries)));
+    }
+    if cfg.admission.is_consensus() {
+        // Written only in consensus mode: schedule mode is the absent
+        // default, so legacy configs keep byte-identical serializations.
+        let mut adm: Vec<(&'static str, Json)> = vec![("mode", Json::str("consensus"))];
+        if !cfg.admission.candidates.is_empty() {
+            let entries: Vec<Json> = cfg
+                .admission
+                .canonical_candidates()
+                .iter()
+                .map(|e| Json::str(e))
+                .collect();
+            adm.push(("candidates", Json::Arr(entries)));
+        }
+        adm.push(("evict_after", exact_u64(cfg.admission.evict_after, "admission.evict_after")?));
+        if let Some(q) = cfg.admission.quorum {
+            adm.push(("quorum", Json::num(q as f64)));
+        }
+        root.push(("admission", Json::obj(adm)));
     }
     if let Some(ck) = &cfg.checkpoint {
         // The cluster runner round-trips the config to its children
@@ -885,6 +980,84 @@ mod tests {
     }
 
     #[test]
+    fn admission_block_parses_validates_and_roundtrips() {
+        let cfg = parse_run_config(
+            r#"{"peers": 9, "steps": 8,
+                "admission": {"mode": "consensus", "candidates": ["8@3"],
+                               "evict_after": 2, "quorum": 5}}"#,
+        )
+        .unwrap();
+        assert!(cfg.admission.is_consensus());
+        assert_eq!(cfg.admission.candidates, vec![(8, 3)]);
+        assert_eq!(cfg.admission.evict_after, 2);
+        assert_eq!(cfg.admission.quorum, Some(5));
+        // The derived timeline treats the candidate as a joiner.
+        assert_eq!(cfg.effective_churn().join_step(8), Some(3));
+        // Null / absent ⇒ legacy schedule mode.
+        assert!(!parse_run_config("{}").unwrap().admission.is_consensus());
+        assert!(!parse_run_config(r#"{"admission": null}"#).unwrap().admission.is_consensus());
+        // Consensus mode and a churn *join* schedule are mutually
+        // exclusive — hard error, never a silently ignored schedule.
+        assert!(parse_run_config(
+            r#"{"peers": 9, "steps": 8, "churn": ["join:8@3"],
+                "admission": {"mode": "consensus"}}"#
+        )
+        .is_err());
+        // Departures still belong to the schedule: crash-only churn is
+        // legal in consensus mode (the voted eviction closes it)…
+        let cfg = parse_run_config(
+            r#"{"peers": 9, "steps": 8, "churn": ["crash:3@2"],
+                "admission": {"mode": "consensus", "evict_after": 2}}"#,
+        )
+        .unwrap();
+        assert!(cfg.admission.is_consensus());
+        // …but is still an error in schedule mode (unpaired crash).
+        assert!(parse_run_config(r#"{"peers": 9, "steps": 8, "churn": ["crash:3@2"]}"#).is_err());
+        // Unknown mode and malformed candidates are hard errors.
+        assert!(parse_run_config(r#"{"admission": {"mode": "magic"}}"#).is_err());
+        assert!(parse_run_config(
+            r#"{"peers": 9, "steps": 8,
+                "admission": {"mode": "consensus", "candidates": ["8"]}}"#
+        )
+        .is_err());
+        // Candidates without consensus mode are meaningless — hard error.
+        assert!(parse_run_config(
+            r#"{"peers": 9, "steps": 8,
+                "admission": {"mode": "schedule", "candidates": ["8@3"]}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn writer_roundtrips_admission_configs() {
+        let mut cfg = RunConfig::quick(9, 8);
+        cfg.admission = AdmissionConfig {
+            mode: AdmissionMode::Consensus,
+            candidates: vec![(8, 3)],
+            evict_after: 2,
+            quorum: None,
+        };
+        cfg.churn = MembershipSchedule::parse("crash:3@2").unwrap();
+        cfg.opt = OptSpec::Sgd {
+            schedule: LrSchedule::Constant(0.1),
+            momentum: 0.0,
+            nesterov: false,
+        };
+        let text = write_run_config(&cfg, TransportKind::Socket, &WorkloadSpec::default_mlp())
+            .unwrap();
+        assert!(text.contains("consensus"), "{text}");
+        assert!(text.contains("8@3"), "{text}");
+        let loaded = parse_run_config_full(&text).unwrap();
+        assert_cfg_eq(&cfg, &loaded.cfg);
+        // Schedule mode writes no admission block at all: legacy configs
+        // keep byte-identical serializations.
+        let legacy = RunConfig::quick(4, 4);
+        let text = write_run_config(&legacy, TransportKind::Local, &WorkloadSpec::default_mlp())
+            .unwrap();
+        assert!(!text.contains("admission"), "{text}");
+    }
+
+    #[test]
     fn transport_and_workload_parse() {
         let loaded = parse_run_config_full(
             r#"{"transport": "socket",
@@ -918,6 +1091,7 @@ mod tests {
         assert_eq!(a.clip_lambda, b.clip_lambda);
         assert_eq!(a.network, b.network);
         assert_eq!(a.churn, b.churn);
+        assert_eq!(a.admission, b.admission);
         assert_eq!(a.checkpoint, b.checkpoint);
         assert_eq!(format!("{:?}", a.protocol), format!("{:?}", b.protocol));
         assert_eq!(format!("{:?}", a.opt), format!("{:?}", b.opt));

@@ -142,6 +142,10 @@ pub struct PeerCtx {
     pub archive: Option<StepArchive>,
     /// Count of "global recompute" adjudications performed (cost metric).
     pub recompute_count: u64,
+    /// Transient state of the admission agreement round (consensus
+    /// membership mode): carried across the round's stages, reset at
+    /// every round's submit stage. Inert in schedule mode.
+    pub round: crate::coordinator::consensus::RoundState,
 }
 
 /// Wall-time breakdown of one step (Appendix I.2 / §B overhead numbers).

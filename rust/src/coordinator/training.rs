@@ -22,6 +22,10 @@ use super::accuse::BanEvent;
 use super::adversary::{Adversary, AdversarySpec, GradientCtx, SurfaceSpec};
 use super::aggregators::Aggregator;
 use super::attacks::{AttackSchedule, CollusionBoard};
+use super::consensus::{
+    stage_admission_commit, stage_admission_propose, stage_admission_submit,
+    stage_admission_vote, AdmissionConfig,
+};
 use super::membership::{
     stage_boundary_apply, stage_boundary_join, ChurnKind, Membership, MembershipSchedule,
 };
@@ -100,6 +104,11 @@ pub struct RunConfig {
     /// `rejoin:<peer>@<step>`). Empty = static roster, bit-identical to
     /// the pre-membership behaviour. See `coordinator::membership`.
     pub churn: MembershipSchedule,
+    /// Admission policy: legacy schedule-driven churn (default), or
+    /// consensus mode, where joins come from `JOIN_REQUEST` petitions
+    /// committed by the BFT roster round and crashed peers are
+    /// timeout-evicted by vote. See `coordinator::consensus`.
+    pub admission: AdmissionConfig,
     /// Periodic crash-recovery checkpoints (None = off). Writes are
     /// pure side effects — no RNG draws, no messages — so enabling
     /// them never moves a run's metrics digest. See
@@ -131,9 +140,18 @@ impl RunConfig {
             session_mac: false,
             network: NetworkProfile::perfect(),
             churn: MembershipSchedule::empty(),
+            admission: AdmissionConfig::default(),
             checkpoint: None,
             segments: vec![],
         }
+    }
+
+    /// The schedule the execution models actually run by: the raw churn
+    /// in schedule mode, or the consensus-derived timeline (churn
+    /// departures + one join/rejoin entry per candidate petition) in
+    /// consensus mode. See `consensus::AdmissionConfig::derived_schedule`.
+    pub fn effective_churn(&self) -> MembershipSchedule {
+        self.admission.derived_schedule(&self.churn)
     }
 }
 
@@ -300,8 +318,21 @@ pub fn validate_attack_spec(cfg: &RunConfig) {
 /// every run entry point, including a standalone `btard peer` process,
 /// must apply it.
 pub fn validate_churn(cfg: &RunConfig) {
-    if let Err(e) = cfg.churn.validate(cfg.n_peers, cfg.steps) {
-        panic!("{e}");
+    if cfg.admission.is_consensus() {
+        // Consensus mode validates the joint (churn, candidates) shape:
+        // scheduled joins are a hard error there (the round, not the
+        // config, grants admission), and the *derived* timeline is what
+        // must be a legal roster trajectory.
+        if let Err(e) = cfg.admission.validate(cfg.n_peers, cfg.steps, &cfg.churn) {
+            panic!("{e}");
+        }
+    } else {
+        if let Err(e) = cfg.admission.validate(cfg.n_peers, cfg.steps, &cfg.churn) {
+            panic!("{e}");
+        }
+        if let Err(e) = cfg.churn.validate(cfg.n_peers, cfg.steps) {
+            panic!("{e}");
+        }
     }
     // A Byzantine peer cannot crash/rejoin: its adversary state
     // (collusion memory, observed params) is purely local and
@@ -445,6 +476,18 @@ struct PeerTask {
 /// barrier between dispatches makes the transport's drain mode exact.
 #[derive(Clone, Copy, Debug)]
 enum StageId {
+    /// Admission round stage 1 (consensus-mode round steps only): the
+    /// candidate broadcasts its signed JOIN_REQUEST petition.
+    ConsSubmit,
+    /// Admission round stage 2 (rank R): incumbents collect petitions
+    /// and broadcast their proposed roster document.
+    ConsPropose,
+    /// Admission round stage 3 (rank A): incumbents tally proposals and
+    /// broadcast their vote (document digest).
+    ConsVote,
+    /// Admission round stage 4 (rank B): incumbents collect votes and
+    /// broadcast a 2f+1 commit certificate (or an explicit abstain).
+    ConsCommit,
     /// Epoch-boundary stage 1 (boundary steps only): apply membership
     /// deltas, sponsor sends JOIN snapshots, leavers broadcast LEAVE.
     BoundaryApply,
@@ -530,6 +573,10 @@ fn run_peer_stage(task: &mut PeerTask, stage: StageId, step: u64) {
         return;
     }
     match stage {
+        StageId::ConsSubmit => stage_admission_submit(&mut task.ctx, step),
+        StageId::ConsPropose => stage_admission_propose(&mut task.ctx, step),
+        StageId::ConsVote => stage_admission_vote(&mut task.ctx, step),
+        StageId::ConsCommit => stage_admission_commit(&mut task.ctx, step),
         StageId::BoundaryApply => {
             if stage_boundary_apply(&mut task.ctx, step, &task.params, &*task.opt) {
                 // Graceful leave: excised, not banned — participation
@@ -727,6 +774,7 @@ pub fn run_btard_pooled(
     let fault_handle = transports[0].fault_handle();
     let board = CollusionBoard::new();
     let workers = workers.clamp(1, cfg.n_peers);
+    let effective = cfg.effective_churn();
 
     let tasks: Vec<Mutex<PeerTask>> = transports
         .into_iter()
@@ -790,7 +838,7 @@ pub fn run_btard_pooled(
                 .enumerate()
                 .filter(|(_, cell)| {
                     let t = lock_task(cell);
-                    !t.done && t.error.is_none() && !cfg.churn.held_out(t.peer, step)
+                    !t.done && t.error.is_none() && !effective.held_out(t.peer, step)
                 })
                 .map(|(i, _)| i)
                 .collect();
@@ -804,8 +852,23 @@ pub fn run_btard_pooled(
             // Epoch boundary: two membership stages ahead of the step's
             // twelve. Dispatched only when the schedule names this step,
             // so static-roster runs dispatch exactly what they always
-            // did (the golden-digest guarantee).
-            if cfg.churn.has_delta_at(step) {
+            // did (the golden-digest guarantee). Under consensus
+            // admission, a round step additionally dispatches the four
+            // agreement stages first — and a pure-eviction round has no
+            // derived-schedule delta, so the boundary stages key on
+            // `round` too (the committed document, not the schedule, is
+            // what the apply stage consumes there).
+            let round = cfg.admission.round_at(step, &effective);
+            if round {
+                dispatch(&shared, StageId::ConsSubmit, step);
+                dispatch(&shared, StageId::ConsPropose, step);
+                dispatch(&shared, StageId::ConsVote, step);
+                dispatch(&shared, StageId::ConsCommit, step);
+                if shared.failed.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            if effective.has_delta_at(step) || round {
                 dispatch(&shared, StageId::BoundaryApply, step);
                 dispatch(&shared, StageId::BoundaryJoin, step);
                 if shared.failed.load(Ordering::SeqCst) {
@@ -961,12 +1024,15 @@ fn build_peer_ctx(
         Behavior::Honest
     };
     let r0 = crate::crypto::sha256_parts(&[b"btard-r0", &cfg.seed.to_le_bytes()]);
-    // Epoch-0 roster: the universe minus scheduled joiners. The static
-    // path keeps the identity owner map (part j → peer j) bit-for-bit;
-    // a dynamic schedule derives epoch 0's owners from the initial
-    // roster the same way every later boundary does.
-    let live = cfg.churn.initial_live(cfg.n_peers);
-    let owners = if cfg.churn.is_empty() {
+    // Epoch-0 roster: the universe minus scheduled joiners (in consensus
+    // mode, minus candidates too — the *derived* timeline is the one the
+    // models run by). The static path keeps the identity owner map
+    // (part j → peer j) bit-for-bit; a dynamic schedule derives epoch
+    // 0's owners from the initial roster the same way every later
+    // boundary does.
+    let effective = cfg.effective_churn();
+    let live = effective.initial_live(cfg.n_peers);
+    let owners = if effective.is_empty() {
         super::partition::OwnerMap::initial(cfg.protocol.n0)
     } else {
         super::partition::OwnerMap::derive(cfg.protocol.n0, &live, cfg.protocol.global_seed, 0)
@@ -978,7 +1044,7 @@ fn build_peer_ctx(
         spec: super::partition::PartitionSpec::new(param_dim, cfg.protocol.n0),
         owners,
         live,
-        membership: Membership::new(cfg.churn.clone()),
+        membership: Membership::with_admission(effective, cfg.admission.clone()),
         ledger: super::accuse::BanLedger::new(),
         equiv: crate::net::gossip::EquivocationTracker::new(),
         behavior,
@@ -987,6 +1053,7 @@ fn build_peer_ctx(
         validators: vec![],
         archive: None,
         recompute_count: 0,
+        round: Default::default(),
     }
 }
 
@@ -1038,6 +1105,9 @@ pub fn peer_main(
     let mut metrics = Vec::new();
     let mut steps_done = 0u64;
     let mut final_metric = f64::NAN;
+    // The timeline the models run by: the raw churn, or (consensus
+    // admission) the derived candidate/eviction timeline.
+    let effective = cfg.effective_churn();
 
     'steps: for step in 0..cfg.steps {
         match life {
@@ -1046,25 +1116,34 @@ pub fn peer_main(
             // ticks, no traffic, matching what a not-yet-started or
             // dead process does.
             LifeSpan::Whole => {
-                if cfg.churn.held_out(me, step) {
+                if effective.held_out(me, step) {
                     continue;
                 }
             }
             LifeSpan::UntilCrash => {
-                if cfg.churn.crash_step(me) == Some(step) {
+                if effective.crash_step(me) == Some(step) {
                     break 'steps; // the runner SIGKILLs this process
                 }
-                if cfg.churn.held_out(me, step) {
+                if effective.held_out(me, step) {
                     continue;
                 }
             }
             LifeSpan::FromRejoin => {
-                if cfg.churn.rejoin_step(me).is_some_and(|r| step < r) {
+                if effective.rejoin_step(me).is_some_and(|r| step < r) {
                     continue;
                 }
             }
         }
-        if cfg.churn.has_delta_at(step) {
+        let round = cfg.admission.round_at(step, &effective);
+        if round {
+            // Admission agreement round, in the same order the pooled
+            // scheduler dispatches it.
+            stage_admission_submit(&mut ctx, step);
+            stage_admission_propose(&mut ctx, step);
+            stage_admission_vote(&mut ctx, step);
+            stage_admission_commit(&mut ctx, step);
+        }
+        if effective.has_delta_at(step) || round {
             // Boundary stages, in the same order the pooled scheduler
             // dispatches them (blocking receives absorb the wall-clock
             // skew the stage barrier removes).

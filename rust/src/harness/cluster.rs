@@ -386,8 +386,15 @@ pub fn run_peer(
     if id >= cfg.n_peers {
         return Err(format!("--id {id} outside the {}-peer config", cfg.n_peers));
     }
-    let crash_steps = cfg.churn.crash_steps(cfg.n_peers);
-    let rejoin_steps = cfg.churn.rejoin_steps(cfg.n_peers);
+    // The timeline the transport and the life-span split run by: the raw
+    // churn, or (consensus admission) the derived candidate/eviction
+    // timeline — a consensus candidate's socket process behaves exactly
+    // like a scheduled joiner at the transport layer (its links form at
+    // its petition step), while the protocol plane decides the actual
+    // admission.
+    let effective = cfg.effective_churn();
+    let crash_steps = effective.crash_steps(cfg.n_peers);
+    let rejoin_steps = effective.rejoin_steps(cfg.n_peers);
     let my_crash = crash_steps[id];
     let my_rejoin = rejoin_steps[id];
     if restarted && my_rejoin.is_none() {
@@ -480,7 +487,7 @@ pub fn run_peer(
         // the property the digest-identity CI cell checks end to end.
         gossip: loaded.transport == TransportKind::Gossip,
         overlay_epochs: if loaded.transport == TransportKind::Gossip {
-            cfg.churn.roster_timeline(cfg.n_peers)
+            effective.roster_timeline(cfg.n_peers)
         } else {
             vec![]
         },
@@ -491,7 +498,7 @@ pub fn run_peer(
         // The churn schedule's join-step table: which links form at
         // mesh-build time vs lazily at each joiner's epoch boundary,
         // and the epoch every inbound HELLO must claim.
-        join_steps: cfg.churn.join_steps(cfg.n_peers),
+        join_steps: effective.join_steps(cfg.n_peers),
         // Crash/rejoin schedule: incumbents let a crashed peer's links
         // die without ELIMINATE and redial at the rejoin boundary; a
         // restarted process builds no founding links and HELLOs at its
@@ -705,8 +712,32 @@ pub fn run_cluster(
     // Reject nonsense schedules in the parent, before forking anything:
     // leaving this to the children turns an immediate "peer 9 outside
     // the 9-id universe" into N per-peer log files and a generic
-    // rendezvous failure.
-    cfg.churn.validate(cfg.n_peers, cfg.steps)?;
+    // rendezvous failure. Consensus mode validates the joint
+    // (churn, candidates) shape instead of the raw churn rules.
+    cfg.admission.validate(cfg.n_peers, cfg.steps, &cfg.churn)?;
+    if !cfg.admission.is_consensus() {
+        cfg.churn.validate(cfg.n_peers, cfg.steps)?;
+    } else {
+        // The subprocess harness drives every crash through a SIGKILL plus
+        // a `--restart` second life, and it is that second life that writes
+        // the peer's final report. A consensus-mode crash whose peer never
+        // re-petitions has no second life — and therefore no report to
+        // merge — so permanent eviction stays an in-process (threaded /
+        // pooled) concern.
+        let effective = cfg.effective_churn();
+        let crashes = effective.crash_steps(cfg.n_peers);
+        let rejoins = effective.rejoin_steps(cfg.n_peers);
+        for k in 0..cfg.n_peers {
+            if crashes[k].is_some() && rejoins[k].is_none() {
+                return Err(format!(
+                    "cluster mode: crashed peer {k} never re-petitions, so it has \
+                     no second life (and writes no final report) under the \
+                     subprocess harness; exercise permanent eviction with the \
+                     threaded or pooled model instead"
+                ));
+            }
+        }
+    }
     std::fs::create_dir_all(&opts.out_dir)
         .map_err(|e| format!("creating {}: {e}", opts.out_dir.display()))?;
     // Clear any previous run's rendezvous artifacts: a stale roster.json
@@ -834,7 +865,11 @@ pub fn run_cluster(
     // `crash_<k>.json` marker and parks; the parent delivers a SIGKILL
     // (so every other peer sees an abrupt socket death, exactly like a
     // real crash) and forks the second life with `--restart`.
-    let crash_schedule = cfg.churn.crash_steps(n);
+    // Consensus admission derives the crash/rejoin timeline from the
+    // candidate petitions, so the parent must consult the same effective
+    // schedule the children run by (validation above guarantees every
+    // cluster-mode crash has a paired second life).
+    let crash_schedule = cfg.effective_churn().crash_steps(n);
     let mut awaiting_crash: Vec<bool> = crash_schedule.iter().map(|c| c.is_some()).collect();
     let mut exits: Vec<(usize, Json)> = Vec::new();
     let run_deadline = Instant::now() + opts.run_timeout;

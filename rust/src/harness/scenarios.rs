@@ -13,6 +13,7 @@
 use crate::coordinator::adversary::AdversarySpec;
 use crate::coordinator::attacks::AttackSchedule;
 use crate::coordinator::centered_clip::TauPolicy;
+use crate::coordinator::consensus::{AdmissionConfig, AdmissionMode};
 use crate::coordinator::membership::MembershipSchedule;
 use crate::coordinator::optimizer::LrSchedule;
 use crate::coordinator::training::{
@@ -72,8 +73,12 @@ pub struct ScenarioSpec {
     pub networks: Vec<String>,
     /// Dynamic-membership schedules per `MembershipSchedule::parse`
     /// ("none", or comma-joined `join:<peer>@<step>` /
-    /// `leave:<peer>@<step>` entries). Cells whose schedule cannot fire
-    /// at a given cluster size / step count are skipped with a notice.
+    /// `leave:<peer>@<step>` entries), or a consensus-admission entry
+    /// `consensus:<peer>@<step>[,<peer>@<step>...]` where each listed
+    /// candidate petitions the incumbents for admission at its step and
+    /// enters through the BFT roster round instead of a schedule slot.
+    /// Cells whose schedule cannot fire at a given cluster size / step
+    /// count are skipped with a notice.
     pub churn: Vec<String>,
     pub steps: u64,
     /// Objective dimension (raised to the cluster size when smaller, so
@@ -201,7 +206,7 @@ impl ScenarioSpec {
             let mut parsed = Vec::new();
             for c in churn {
                 let s = c.as_str().ok_or("churn entries must be strings")?;
-                MembershipSchedule::parse(s).map_err(|e| format!("churn '{s}': {e}"))?;
+                parse_churn_entry(s).map_err(|e| format!("churn '{s}': {e}"))?;
                 parsed.push(s.to_string());
             }
             spec.churn = parsed;
@@ -241,6 +246,27 @@ impl ScenarioSpec {
 
     fn byz_count(&self, n: usize) -> usize {
         ((n as f64 * self.byzantine_frac) as usize).min(n.saturating_sub(1) / 2)
+    }
+}
+
+/// Parse one churn-axis entry into the pair of configs a cell runs by:
+/// a plain `MembershipSchedule` spec yields (schedule, schedule-mode
+/// admission), while `consensus:<peer>@<step>[,...]` yields an empty
+/// schedule plus an `AdmissionConfig` whose candidates petition through
+/// the BFT roster round.
+fn parse_churn_entry(s: &str) -> Result<(MembershipSchedule, AdmissionConfig), String> {
+    if let Some(list) = s.strip_prefix("consensus:") {
+        let mut adm =
+            AdmissionConfig { mode: AdmissionMode::Consensus, ..AdmissionConfig::default() };
+        for item in list.split(',').filter(|i| !i.is_empty()) {
+            adm.candidates.push(AdmissionConfig::parse_candidate(item)?);
+        }
+        if adm.candidates.is_empty() {
+            return Err("consensus entry lists no candidates".to_string());
+        }
+        Ok((MembershipSchedule::parse("none")?, adm))
+    } else {
+        Ok((MembershipSchedule::parse(s)?, AdmissionConfig::default()))
     }
 }
 
@@ -366,9 +392,14 @@ pub fn run_matrix(spec: &ScenarioSpec, out_dir: &Path) -> std::io::Result<Matrix
                         // cell it cannot fire in (peer outside this
                         // size's universe, step past the run) is skipped
                         // loudly, never run silently as static.
-                        let schedule = MembershipSchedule::parse(churn)
+                        let (schedule, admission) = parse_churn_entry(churn)
                             .unwrap_or_else(|e| panic!("churn '{churn}' failed to parse: {e}"));
-                        if let Err(reason) = schedule.validate(n, spec.steps) {
+                        let joint = if admission.is_consensus() {
+                            admission.validate(n, spec.steps, &schedule)
+                        } else {
+                            schedule.validate(n, spec.steps)
+                        };
+                        if let Err(reason) = joint {
                             eprintln!(
                                 "scenario matrix: skipping n={n} attack={attack} arm={} \
                                  churn='{churn}': {reason}",
@@ -376,7 +407,8 @@ pub fn run_matrix(spec: &ScenarioSpec, out_dir: &Path) -> std::io::Result<Matrix
                             );
                             continue;
                         }
-                        let c = run_cell(spec, n, attack, arm, network, churn, schedule);
+                        let c =
+                            run_cell(spec, n, attack, arm, network, churn, schedule, admission);
                         w.row(&[
                             c.n.to_string(),
                             c.byz.to_string(),
@@ -438,6 +470,7 @@ pub fn run_matrix(spec: &ScenarioSpec, out_dir: &Path) -> std::io::Result<Matrix
     Ok(MatrixReport { cells, csv_path, json_path })
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_cell(
     spec: &ScenarioSpec,
     n: usize,
@@ -446,6 +479,7 @@ fn run_cell(
     network: &str,
     churn: &str,
     schedule: MembershipSchedule,
+    admission: AdmissionConfig,
 ) -> CellResult {
     let byz = if attack == "none" { 0 } else { spec.byz_count(n) };
     let attack_cfg = if attack == "none" {
@@ -488,6 +522,7 @@ fn run_cell(
                 network: NetworkProfile::from_name(network)
                     .unwrap_or_else(|| panic!("unknown network profile '{network}'")),
                 churn: schedule,
+                admission,
                 segments: vec![],
                 checkpoint: None,
             };
@@ -720,6 +755,49 @@ mod tests {
         let csv = std::fs::read_to_string(&report.csv_path).unwrap();
         assert!(csv.lines().next().unwrap().contains("churn"));
         assert!(csv.contains("join:3@1"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn consensus_axis_runs_a_petitioned_admission_cell() {
+        // `consensus:3@1` lists no schedule slot for peer 3: it petitions
+        // the three founders at step 1 and enters through the BFT roster
+        // round. The cell must complete like any churn cell, and the spec
+        // parser must accept the entry form (and reject malformed ones).
+        assert!(ScenarioSpec::parse(r#"{"churn": ["consensus:3@1"]}"#).is_ok());
+        assert!(ScenarioSpec::parse(r#"{"churn": ["consensus:"]}"#).is_err());
+        assert!(ScenarioSpec::parse(r#"{"churn": ["consensus:3"]}"#).is_err());
+        let spec = ScenarioSpec {
+            name: "unit_consensus".to_string(),
+            cluster_sizes: vec![4],
+            byzantine_frac: 0.0,
+            attacks: vec!["none".to_string()],
+            arms: vec![Arm::Btard],
+            networks: vec!["perfect".to_string()],
+            churn: vec!["none".to_string(), "consensus:3@1".to_string()],
+            steps: 3,
+            dim: 64,
+            attack_start: 1,
+            tau: 2.0,
+            delta_max: 5.0,
+            lr: 0.1,
+            seed: 3,
+            workers: 2,
+            eval_every: 1,
+            verify_signatures: false,
+        };
+        let dir =
+            std::env::temp_dir().join(format!("btard_scenarios_consensus_{}", std::process::id()));
+        let report = run_matrix(&spec, &dir).unwrap();
+        assert_eq!(report.cells.len(), 2, "{:?}", report.cells);
+        let cell = report
+            .cells
+            .iter()
+            .find(|c| c.churn == "consensus:3@1")
+            .expect("consensus cell must run");
+        assert_eq!(cell.steps_done, 3, "{cell:?}");
+        assert_eq!(cell.bans, 0, "a certified admission must not record bans");
+        assert!(cell.final_metric.is_finite());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -302,6 +302,11 @@ pub fn run_soak(opts: &SoakOptions) -> Result<SoakSummary, String> {
     }
 
     let failed = cells.iter().filter(|c| !c.pass).count();
+    // Surface the not-applicable checks at the top level too: "0 failed"
+    // with a dozen silently skipped invariants reads very differently
+    // from "0 failed, 0 skipped", and graders shouldn't have to sum the
+    // per-cell arrays to notice.
+    let skipped: usize = cells.iter().map(|c| c.skipped.len()).sum();
     let rows: Vec<Json> = cells
         .iter()
         .map(|c| {
@@ -324,7 +329,9 @@ pub fn run_soak(opts: &SoakOptions) -> Result<SoakSummary, String> {
     let summary = Json::obj(vec![
         ("campaign_seed", Json::num(opts.seed as f64)),
         ("cells", Json::Arr(rows)),
+        ("passed", Json::num((cells.len() - failed) as f64)),
         ("failed", Json::num(failed as f64)),
+        ("skipped", Json::num(skipped as f64)),
     ]);
     let summary_path = opts.out_dir.join("soak_summary.json");
     crate::util::atomic_write(&summary_path, &summary.to_string_pretty())

@@ -27,6 +27,7 @@
 use btard::coordinator::adversary::AdversarySpec;
 use btard::coordinator::attacks::AttackSchedule;
 use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::consensus::{AdmissionConfig, AdmissionMode};
 use btard::coordinator::membership::MembershipSchedule;
 use btard::coordinator::optimizer::LrSchedule;
 use btard::coordinator::runconfig::{load_run_config_full, TransportKind, WorkloadSpec};
@@ -96,6 +97,15 @@ fn main() {
                  \x20                             excises the peer abruptly and its rejoin\n\
                  \x20                             re-enters via a sponsor snapshot), e.g.\n\
                  \x20                             --churn join:8@3,leave:2@6\n\
+                 \x20 --admission MODE            admission authority: schedule (default) or\n\
+                 \x20                             consensus — joins decided by the in-protocol\n\
+                 \x20                             BFT roster round instead of the churn schedule\n\
+                 \x20 --candidates LIST           consensus-mode join petitions, comma-joined\n\
+                 \x20                             <peer>@<step> entries, e.g. --candidates 8@3\n\
+                 \x20 --evict-after K             consensus mode: steps of post-crash silence\n\
+                 \x20                             before the voted eviction (default 2)\n\
+                 \x20 --quorum Q                  consensus certificate size override\n\
+                 \x20                             (default: 2f+1 from the live count)\n\
                  \x20 --checkpoint-interval K     crash-recovery checkpoints every K steps\n\
                  \x20                             (0 = off, the default)\n\
                  \x20 --checkpoint-dir DIR        checkpoint directory (default\n\
@@ -247,6 +257,31 @@ fn parse_churn(args: &Args) -> MembershipSchedule {
     }
 }
 
+/// Admission policy from --admission / --candidates / --evict-after /
+/// --quorum (absent = legacy schedule mode; validated jointly with
+/// --churn by `validate_churn` at run start).
+fn parse_admission(args: &Args) -> AdmissionConfig {
+    let mut adm = AdmissionConfig::default();
+    match args.get("admission") {
+        None | Some("schedule") => {}
+        Some("consensus") => adm.mode = AdmissionMode::Consensus,
+        Some(other) => panic!("unknown --admission mode '{other}' (schedule | consensus)"),
+    }
+    if let Some(list) = args.get("candidates") {
+        for entry in list.split(',') {
+            let c = AdmissionConfig::parse_candidate(entry.trim())
+                .unwrap_or_else(|e| panic!("bad --candidates entry: {e}"));
+            adm.candidates.push(c);
+        }
+    }
+    adm.evict_after = args.get_u64("evict-after", adm.evict_after);
+    if let Some(q) = args.get("quorum") {
+        adm.quorum =
+            Some(q.parse().unwrap_or_else(|_| panic!("--quorum expects an integer")));
+    }
+    adm
+}
+
 /// Crash-recovery checkpointing from --checkpoint-interval /
 /// --checkpoint-dir / --checkpoint-keep (interval 0 = disabled, the
 /// default).
@@ -339,6 +374,7 @@ fn cmd_train(args: &Args) {
         session_mac: false,
         network: parse_network(args).unwrap_or_default(),
         churn: parse_churn(args),
+        admission: parse_admission(args),
         segments: vec![],
         checkpoint: parse_checkpoint(args),
     };
@@ -451,6 +487,7 @@ fn cluster_run_config(args: &Args) -> RunConfig {
         session_mac: args.get_bool("session-mac"),
         network: NetworkProfile::perfect(),
         churn: parse_churn(args),
+        admission: parse_admission(args),
         segments: vec![],
         checkpoint: parse_checkpoint(args),
     }

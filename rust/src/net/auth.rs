@@ -226,6 +226,10 @@ mod tests {
             slots::JOIN,
             slots::VERIFY_DONE,
             slots::LEAVE,
+            slots::JOIN_REQUEST,
+            slots::ROSTER_PROPOSE,
+            slots::ROSTER_VOTE,
+            slots::ROSTER_CERT,
         ] {
             assert!(requires_signature(slots::sub(tag, 7)), "tag {tag:#x}");
         }

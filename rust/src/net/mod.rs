@@ -117,6 +117,17 @@ pub mod slots {
     pub const JOIN: u32 = 0x0C00_0000;
     pub const VERIFY_DONE: u32 = 0x0D00_0000;
     pub const LEAVE: u32 = 0x0E00_0000;
+    /// Consensus admission (`coordinator::consensus`): a candidate's
+    /// signed petition to join, broadcast before it holds any roster
+    /// slot. Sub-index = candidate id.
+    pub const JOIN_REQUEST: u32 = 0x0F00_0000;
+    /// Rank-R message of the roster agreement round: an incumbent's
+    /// proposed roster document for the next epoch.
+    pub const ROSTER_PROPOSE: u32 = 0x1000_0000;
+    /// Rank-A message: an incumbent's vote (document digest).
+    pub const ROSTER_VOTE: u32 = 0x1100_0000;
+    /// Rank-B message: a commit certificate quoting ≥ 2f+1 votes.
+    pub const ROSTER_CERT: u32 = 0x1200_0000;
 
     /// Compose a slot from a tag and a sub-index (< 2^24).
     pub fn sub(tag: u32, idx: usize) -> u32 {

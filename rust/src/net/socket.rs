@@ -734,11 +734,17 @@ pub struct SocketConfig {
     pub connect_timeout: Duration,
     pub max_frame: usize,
     /// Per-peer join step over the whole universe (0 = founding member;
-    /// empty = all founding). This is the churn schedule's
-    /// `join_steps(n)` table: it decides which links form at mesh-build
-    /// time vs lazily at the peer's epoch boundary, gates wire sends to
+    /// empty = all founding). This is the *effective* churn schedule's
+    /// `join_steps(n)` table — under consensus admission the caller
+    /// derives it from the candidate petitions (see
+    /// [`crate::coordinator::consensus::AdmissionConfig::derived_schedule`]),
+    /// so a petitioning candidate looks exactly like a scheduled joiner
+    /// down here: the table decides which links form at mesh-build time
+    /// vs lazily at the peer's epoch boundary, gates wire sends to
     /// not-yet-admitted peers, and is the epoch an inbound HELLO must
-    /// claim to be accepted.
+    /// claim to be accepted. Whether the candidate is actually admitted
+    /// is the protocol plane's call (the roster certificate), not the
+    /// transport's.
     pub join_steps: Vec<u64>,
     /// Per-peer scheduled crash step (`None` = never crashes; empty =
     /// nobody does). During a peer's `[crash, rejoin)` window wire

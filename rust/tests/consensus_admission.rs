@@ -1,0 +1,249 @@
+//! Consensus-admission integration tests: the acceptance proof that the
+//! leaderless BFT roster round (JOIN_REQUEST petition → rank-R propose →
+//! rank-A vote → rank-B certificate → boundary apply) admits a peer that
+//! appears in **no** churn schedule, deterministically and bit-identically
+//! across every execution model.
+//!
+//! - A candidate petitioning at step s is admitted with **identical
+//!   digests** across the threaded model, the pooled scheduler at several
+//!   worker counts, and a loopback socket cluster (the petition is the
+//!   candidate-initiated handshake; its links form lazily like any late
+//!   joiner's).
+//! - The admission path changes *control traffic only*: the training
+//!   math (params, losses, bans) is bit-identical to the equivalent
+//!   schedule-mode join.
+//! - A Byzantine incumbent voting to reject cannot block an honest
+//!   admission below f+1 faults — the run is bit-identical to the clean
+//!   run, because a losing vote never enters the training transcript.
+//! - A crashed peer is timeout-evicted by vote and its id reclaimed by a
+//!   fresh petition (the readmission path), again model-invariantly.
+//!
+//! Schedule-mode runs dispatch exactly what they always did — pinned by
+//! `rust/tests/golden_metrics.rs` (static) and `rust/tests/membership.rs`
+//! (scheduled churn).
+
+use btard::coordinator::adversary::AdversarySpec;
+use btard::coordinator::attacks::{AttackSchedule, CollusionBoard};
+use btard::coordinator::consensus::{AdmissionConfig, AdmissionMode};
+use btard::coordinator::membership::MembershipSchedule;
+use btard::coordinator::optimizer::LrSchedule;
+use btard::coordinator::runconfig::WorkloadSpec;
+use btard::coordinator::training::{
+    peer_main, prepare_source, run_btard_pooled, run_btard_threaded, LifeSpan, OptSpec, RunConfig,
+};
+use btard::crypto::Mont;
+use btard::harness::{merge_reports, run_digest, PeerReport};
+use btard::net::socket::SocketNet;
+use btard::net::{bind_ephemeral, derive_keypair, Roster, RosterEntry, SocketConfig, Transport};
+use std::time::Duration;
+
+fn quad_workload() -> WorkloadSpec {
+    WorkloadSpec::Quadratic { dim: 64, mu: 0.1, l: 2.0, sigma: 1.0, seed: 9 }
+}
+
+fn consensus(candidates: &[(usize, u64)]) -> AdmissionConfig {
+    AdmissionConfig {
+        mode: AdmissionMode::Consensus,
+        candidates: candidates.to_vec(),
+        ..AdmissionConfig::default()
+    }
+}
+
+/// The baseline scenario: a 5-id universe where peer 4 holds no schedule
+/// slot at all — it petitions the four founders at step 2 and enters
+/// through the BFT round. Nesterov momentum is ON (RunConfig::quick), so
+/// digest equality also proves the post-commit sponsor snapshot carries
+/// bit-exact optimizer state to the admitted peer.
+fn petition_cfg() -> RunConfig {
+    let mut cfg = RunConfig::quick(5, 5);
+    cfg.admission = consensus(&[(4, 2)]);
+    cfg.eval_every = 2;
+    cfg.seed = 7;
+    cfg
+}
+
+#[test]
+fn consensus_admission_is_identical_across_exec_models_and_worker_counts() {
+    let cfg = petition_cfg();
+    let threaded = run_btard_threaded(&cfg, quad_workload().build());
+    let pooled2 = run_btard_pooled(&cfg, quad_workload().build(), 2);
+    let pooled5 = run_btard_pooled(&cfg, quad_workload().build(), 5);
+    assert_eq!(threaded.steps_done, cfg.steps, "admission must not end the run early");
+    assert!(threaded.peer_bytes[4] > 0, "the admitted candidate participated");
+    assert!(threaded.ban_events.is_empty(), "{:?}", threaded.ban_events);
+    let d = run_digest(&threaded);
+    assert_eq!(d, run_digest(&pooled2), "threaded vs pooled(2) under consensus admission");
+    assert_eq!(d, run_digest(&pooled5), "pooled worker count must not matter");
+}
+
+#[test]
+fn admission_changes_control_traffic_but_not_training_math() {
+    // The same roster timeline, reached two ways: a consensus petition
+    // at step 2 vs a schedule slot at step 2. The protocol plane differs
+    // (petitions, proposals, votes, certificates on the wire) but the
+    // training transcript — params, losses, bans — must be bit-identical,
+    // because the committed document feeds the very same boundary stages
+    // the schedule path runs.
+    let cons = run_btard_pooled(&petition_cfg(), quad_workload().build(), 3);
+    let mut sched_cfg = petition_cfg();
+    sched_cfg.admission = AdmissionConfig::default();
+    sched_cfg.churn = MembershipSchedule::parse("join:4@2").unwrap();
+    let sched = run_btard_pooled(&sched_cfg, quad_workload().build(), 3);
+
+    assert_eq!(cons.steps_done, sched.steps_done);
+    assert_eq!(cons.final_params, sched.final_params, "admission path leaked into training math");
+    assert_eq!(cons.final_metric.to_bits(), sched.final_metric.to_bits());
+    assert_eq!(cons.metrics.len(), sched.metrics.len());
+    for (a, b) in cons.metrics.iter().zip(&sched.metrics) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {} loss diverged", a.step);
+        assert_eq!(a.banned_now, b.banned_now, "step {} ban set diverged", a.step);
+    }
+    // ...and the round really ran: the agreement messages are extra
+    // bytes the schedule path never pays.
+    let total = |r: &btard::coordinator::training::RunResult| r.peer_bytes.iter().sum::<u64>();
+    assert!(
+        total(&cons) > total(&sched),
+        "consensus run sent no extra control traffic: {} vs {}",
+        total(&cons),
+        total(&sched)
+    );
+}
+
+#[test]
+fn byzantine_rejector_below_quorum_cannot_block_admission() {
+    // One Byzantine incumbent (of four) votes for the empty document.
+    // f = ⌊(4−1)/3⌋ = 1, quorum = 3: the three honest votes certify the
+    // admission regardless, and since a losing vote never enters the
+    // training transcript the whole run is bit-identical to the clean
+    // one — the strongest possible "cannot block" statement.
+    let mut byz = petition_cfg();
+    byz.byzantine = vec![1];
+    byz.attack = Some((
+        AdversarySpec::parse("reject_admission").unwrap(),
+        AttackSchedule::from_step(0),
+    ));
+    let clean = run_btard_pooled(&petition_cfg(), quad_workload().build(), 3);
+    let attacked = run_btard_pooled(&byz, quad_workload().build(), 3);
+    assert!(attacked.peer_bytes[4] > 0, "candidate must still be admitted");
+    assert!(attacked.ban_events.is_empty(), "{:?}", attacked.ban_events);
+    assert_eq!(
+        run_digest(&attacked),
+        run_digest(&clean),
+        "a sub-quorum rejection must be invisible to the run"
+    );
+}
+
+#[test]
+fn crashed_peer_is_voted_out_and_id_reclaimed_by_fresh_petition() {
+    // Peer 3 crashes abruptly at step 2 with no scheduled rejoin (legal
+    // only in consensus mode). After evict_after = 2 silent steps the
+    // incumbents vote the formal eviction at step 4, returning id 3 to
+    // the reclaimable pool; a fresh petition at step 5 re-admits it as a
+    // reclamation. Model-invariant, run completes at full length.
+    let mut cfg = RunConfig::quick(5, 7);
+    cfg.churn = MembershipSchedule::parse("crash:3@2").unwrap();
+    cfg.admission = consensus(&[(3, 5)]);
+    cfg.eval_every = 3;
+    cfg.seed = 11;
+    let threaded = run_btard_threaded(&cfg, quad_workload().build());
+    let pooled = run_btard_pooled(&cfg, quad_workload().build(), 3);
+    assert_eq!(threaded.steps_done, 7, "eviction + readmission must not end the run");
+    assert!(
+        threaded.ban_events.is_empty(),
+        "eviction is a vote, not a ban: {:?}",
+        threaded.ban_events
+    );
+    assert!(threaded.peer_bytes[3] > 0, "the reclaimed peer participated");
+    assert_eq!(run_digest(&threaded), run_digest(&pooled), "threaded vs pooled under eviction");
+
+    // Pure-eviction variant: nobody re-petitions, the round still fires
+    // (an eviction is roster business even with no candidate), and the
+    // remaining four peers finish the run.
+    let mut evict_only = RunConfig::quick(5, 6);
+    evict_only.churn = MembershipSchedule::parse("crash:3@2").unwrap();
+    evict_only.admission = consensus(&[]);
+    evict_only.eval_every = 3;
+    evict_only.seed = 11;
+    let t = run_btard_threaded(&evict_only, quad_workload().build());
+    let p = run_btard_pooled(&evict_only, quad_workload().build(), 2);
+    assert_eq!(t.steps_done, 6);
+    assert_eq!(run_digest(&t), run_digest(&p), "threaded vs pooled, eviction-only round");
+}
+
+/// Loopback socket cluster running a consensus admission: one endpoint
+/// per thread, each with its own per-"process" state, sharing only the
+/// roster. The transport tables come from the *effective* schedule (the
+/// consensus-derived timeline), exactly as `btard peer` computes them.
+fn run_socket_consensus_cluster(cfg: &RunConfig, workload: &WorkloadSpec) -> Vec<PeerReport> {
+    let n = cfg.n_peers;
+    let mont = Mont::new();
+    let mut listeners = Vec::with_capacity(n);
+    let mut entries = Vec::with_capacity(n);
+    for k in 0..n {
+        let (listener, addr) = bind_ephemeral().unwrap();
+        entries.push(RosterEntry {
+            id: k,
+            addr,
+            pubkey: derive_keypair(&mont, cfg.seed, k).public,
+        });
+        listeners.push(listener);
+    }
+    let roster = Roster { peers: entries };
+    let mut handles = Vec::with_capacity(n);
+    for (k, listener) in listeners.into_iter().enumerate() {
+        let roster = roster.clone();
+        let cfg = cfg.clone();
+        let workload = workload.clone();
+        handles.push(std::thread::spawn(move || {
+            let mont = Mont::new();
+            let secret = derive_keypair(&mont, cfg.seed, k);
+            let scfg = SocketConfig {
+                gossip_fanout: cfg.gossip_fanout,
+                verify_signatures: cfg.verify_signatures,
+                connect_timeout: Duration::from_secs(30),
+                join_steps: cfg.effective_churn().join_steps(cfg.n_peers),
+                ..SocketConfig::default()
+            };
+            let net = SocketNet::connect(listener, &roster, k, secret, &scfg).unwrap();
+            let info = net.info().clone();
+            let source = prepare_source(&cfg, workload.build());
+            let init_params = source.init_params(cfg.seed);
+            let board = CollusionBoard::new();
+            let out =
+                peer_main(Box::new(net), cfg.clone(), source, init_params, board, LifeSpan::Whole);
+            PeerReport::from_output(k, out, info.stats.total_bytes(k))
+        }));
+    }
+    handles.into_iter().map(|h| h.join().expect("peer thread panicked")).collect()
+}
+
+#[test]
+fn socket_cluster_admits_a_petitioning_candidate_bit_identically() {
+    // 5-id universe over real loopback TCP, signatures ON: peer 4 holds
+    // no roster slot and petitions at step 2. Its JOIN_REQUEST is the
+    // first frame it ever sends (links form lazily via epoch-stamped
+    // HELLOs), the founders run the R/A/B round over the wire, and the
+    // merged socket digest must equal both in-process models' digests
+    // bit-for-bit — petitions, proposals, votes and certificates are
+    // ordinary signed envelopes to the transport.
+    let mut cfg = RunConfig::quick(5, 4);
+    cfg.admission = consensus(&[(4, 2)]);
+    cfg.opt = OptSpec::Sgd { schedule: LrSchedule::Constant(0.1), momentum: 0.0, nesterov: false };
+    cfg.protocol.m_validators = 1;
+    cfg.eval_every = 2;
+    cfg.seed = 7;
+    let workload = quad_workload();
+
+    let threaded = run_digest(&run_btard_threaded(&cfg, workload.build()));
+    let pooled = run_digest(&run_btard_pooled(&cfg, workload.build(), 2));
+    assert_eq!(threaded, pooled, "in-process execution models must agree first");
+
+    let reports = run_socket_consensus_cluster(&cfg, &workload);
+    assert!(reports[4].own_bytes > 0, "{reports:?}");
+    let merged = merge_reports(cfg.n_peers, reports).unwrap();
+    assert_eq!(
+        run_digest(&merged),
+        threaded,
+        "a socket cluster admitting a petitioner must reproduce the in-process digest"
+    );
+}

@@ -70,6 +70,7 @@ fn crash_cfg() -> RunConfig {
         session_mac: false,
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::parse("crash:2@3,rejoin:2@5").unwrap(),
+        admission: Default::default(),
         segments: vec![],
         checkpoint: None,
     }
@@ -139,6 +140,7 @@ fn checkpointing_is_digest_neutral_on_the_golden_scenario() {
         session_mac: false,
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::empty(),
+        admission: Default::default(),
         segments: vec![],
         checkpoint: None,
     };
@@ -246,6 +248,7 @@ fn socket_cluster_with_a_crashed_and_restarted_peer_matches_in_process() {
         session_mac: false,
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::parse("crash:2@3,rejoin:2@5").unwrap(),
+        admission: Default::default(),
         segments: vec![],
         checkpoint: None,
     };

@@ -64,6 +64,7 @@ fn perfect_fabric_64_peer_run_matches_golden_digest() {
         session_mac: false,
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::empty(),
+        admission: Default::default(),
         segments: vec![],
         checkpoint: None,
     };

@@ -73,6 +73,7 @@ fn churn_cfg() -> RunConfig {
         session_mac: false,
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::parse("join:5@2,leave:2@4").unwrap(),
+        admission: Default::default(),
         segments: vec![],
         checkpoint: None,
     }
@@ -349,6 +350,7 @@ fn socket_churn_cluster_is_bit_identical_to_in_process_runs() {
         session_mac: false,
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::parse("join:4@2,leave:1@3").unwrap(),
+        admission: Default::default(),
         segments: vec![],
         checkpoint: None,
     };

@@ -55,6 +55,7 @@ fn sweep_cfg(n: usize, byz: usize, steps: u64, attack_start: u64) -> RunConfig {
         session_mac: false,
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::empty(),
+        admission: Default::default(),
         segments: vec![],
         checkpoint: None,
     }

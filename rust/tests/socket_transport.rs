@@ -72,6 +72,7 @@ fn socket_cfg() -> RunConfig {
         session_mac: false,
         network: NetworkProfile::perfect(),
         churn: MembershipSchedule::empty(),
+        admission: Default::default(),
         segments: vec![],
         checkpoint: None,
     }

@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# Advisory docs-consistency check for docs/PROTOCOL.md: every wire-slot
+# constant and every run-config key parsed by the code must at least be
+# *mentioned* in the spec. The lists are extracted from the source, so a
+# new slot or config key added without a spec touch is flagged here —
+# run from the repo root; CI runs it as a non-blocking step.
+#
+#   ./scripts/check_protocol_docs.sh
+#
+# Exit 0 = consistent, 1 = drift found (CI treats it as advisory).
+set -u
+cd "$(dirname "$0")/.."
+
+doc=docs/PROTOCOL.md
+fail=0
+if [ ! -f "$doc" ]; then
+    echo "missing $doc"
+    exit 1
+fi
+
+# Wire-slot constants: the u32 tags of net/mod.rs's slot catalog.
+for name in $(grep -oE 'pub const [A-Z_]+: u32' rust/src/net/mod.rs \
+        | awk '{print $3}' | tr -d ':'); do
+    if ! grep -q "\b$name\b" "$doc"; then
+        echo "DRIFT: slot constant $name is not mentioned in $doc"
+        fail=1
+    fi
+done
+
+# Run-config keys: every quoted key the runconfig parser reads.
+for key in $(grep -oE '\.get(_str|_u64|_usize|_f32|_bool)?\("[a-zA-Z_0-9]+"' \
+        rust/src/coordinator/runconfig.rs \
+        | sed -E 's/.*\("//' | tr -d '"' | sort -u); do
+    if ! grep -qE "(\`|\"|\b)$key(\`|\"|\b)" "$doc"; then
+        echo "DRIFT: run-config key '$key' is not mentioned in $doc"
+        fail=1
+    fi
+done
+
+if [ "$fail" -eq 0 ]; then
+    echo "docs/PROTOCOL.md covers every slot constant and run-config key"
+fi
+exit "$fail"
