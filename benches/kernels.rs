@@ -1,0 +1,277 @@
+//! Vector-kernel microbench: the runtime-dispatched SIMD layer
+//! (`util::kernels`) measured per dispatch level against its scalar
+//! reference — CenteredClip pass A/B and the fused iteration, the
+//! multi-buffer SHA-256 batch paths (gradient part hashing, batched
+//! HMAC), the optimizer elementwise applies, and the LUT hex decode.
+//!
+//! Records are named `<kernel>/<level>/...`; only levels this machine
+//! supports are emitted, so a weaker CI runner produces a strict subset
+//! (the regression gate reports missing levels as `only_base`, not
+//! failures). The report config carries shapes only — never the
+//! detected feature set — keeping fingerprints machine-independent.
+//!
+//! Run: cargo bench --bench kernels                      (full shapes)
+//!      BTARD_KERNELS_SMOKE=1 cargo bench --bench kernels   (CI, seconds)
+
+use btard::coordinator::centered_clip::clip_weight;
+use btard::crypto::{hmac_sha256_batch, sha256_batch, sha256_batch_f32};
+use btard::util::bench::{bench, black_box, BenchReport};
+use btard::util::json::Json;
+use btard::util::kernels::{self, apply, clip, Level};
+use btard::util::rng::Rng;
+use btard::util::{hex, unhex};
+use std::path::Path;
+use std::time::Duration;
+
+struct Shape {
+    smoke: bool,
+    clip_rows: usize,
+    clip_dim: usize,
+    sha_msgs: usize,
+    sha_msg_len: usize,
+    grad_parts: usize,
+    grad_part_len: usize,
+    apply_dim: usize,
+    hmac_links: usize,
+    hmac_frame_len: usize,
+    hex_f32s: usize,
+    budget: Duration,
+}
+
+impl Shape {
+    fn detect() -> Shape {
+        if std::env::var("BTARD_KERNELS_SMOKE").is_ok() {
+            Shape {
+                smoke: true,
+                clip_rows: 16,
+                clip_dim: 4096,
+                sha_msgs: 32,
+                sha_msg_len: 2048,
+                grad_parts: 16,
+                grad_part_len: 4096,
+                apply_dim: 65_536,
+                hmac_links: 63,
+                hmac_frame_len: 512,
+                hex_f32s: 16_384,
+                budget: Duration::from_millis(120),
+            }
+        } else {
+            Shape {
+                smoke: false,
+                clip_rows: 16,
+                clip_dim: 16_384,
+                sha_msgs: 64,
+                sha_msg_len: 4096,
+                grad_parts: 16,
+                grad_part_len: 16_384,
+                apply_dim: 262_144,
+                hmac_links: 63,
+                hmac_frame_len: 512,
+                hex_f32s: 262_144,
+                budget: Duration::from_millis(500),
+            }
+        }
+    }
+}
+
+fn main() {
+    let shape = Shape::detect();
+    let mut rep = BenchReport::new("kernels");
+    rep.config("smoke", Json::Bool(shape.smoke))
+        .config("clip_rows", Json::num(shape.clip_rows as f64))
+        .config("clip_dim", Json::num(shape.clip_dim as f64))
+        .config("sha_msgs", Json::num(shape.sha_msgs as f64))
+        .config("sha_msg_len", Json::num(shape.sha_msg_len as f64))
+        .config("grad_parts", Json::num(shape.grad_parts as f64))
+        .config("grad_part_len", Json::num(shape.grad_part_len as f64))
+        .config("apply_dim", Json::num(shape.apply_dim as f64))
+        .config("hmac_links", Json::num(shape.hmac_links as f64))
+        .config("hmac_frame_len", Json::num(shape.hmac_frame_len as f64))
+        .config("hex_f32s", Json::num(shape.hex_f32s as f64));
+
+    let levels = Level::available();
+    println!(
+        "=== vector kernels: levels available on this machine: {} ===\n",
+        levels.iter().map(|l| l.name()).collect::<Vec<_>>().join(", ")
+    );
+
+    clip_kernels(&mut rep, &shape, &levels);
+    sha256_kernels(&mut rep, &shape, &levels);
+    apply_kernels(&mut rep, &shape, &levels);
+    hex_decode(&mut rep, &shape);
+
+    println!("=== canonical report (btard-bench-v1) ===\n");
+    println!("{}", rep.table());
+    match rep.write(Path::new("results")) {
+        Ok(path) => println!("bench json: {}", path.display()),
+        Err(e) => {
+            eprintln!("FAILED to write BENCH_kernels.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+// --- CenteredClip pass A / pass B / fused iteration -------------------------
+
+fn clip_kernels(rep: &mut BenchReport, shape: &Shape, levels: &[Level]) {
+    let (n, p) = (shape.clip_rows, shape.clip_dim);
+    println!("=== clip kernels ({n}×{p}) ===\n");
+    let mut rng = Rng::new(7);
+    let rows: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; p];
+            rng.fill_gaussian(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let mut v = vec![0.0f32; p];
+    rng.fill_gaussian(&mut v, 0.5);
+    let tau = 2.0f32;
+
+    for &level in levels {
+        let lv = level.name();
+        let mut norms = vec![0.0f64; n];
+        let s = bench(&format!("clip/row_norms/{lv}"), shape.budget, || {
+            clip::row_norms_sq(level, &refs, &v, &mut norms);
+            black_box(&norms);
+        });
+        println!("{}", s.report());
+        rep.add_stats(&s);
+
+        let weights: Vec<f32> =
+            norms.iter().map(|&nsq| clip_weight(nsq.sqrt() as f32, tau)).collect();
+        let mut delta = vec![0.0f32; p];
+        let s = bench(&format!("clip/delta/{lv}"), shape.budget, || {
+            for (c, dchunk) in delta.chunks_mut(4096).enumerate() {
+                clip::delta_chunk(level, &refs, &v, &weights, dchunk, c * 4096);
+            }
+            black_box(&delta);
+        });
+        println!("{}", s.report());
+        rep.add_stats(&s);
+
+        // The fused iteration both passes run per clip step — the
+        // acceptance record (avx2 median must beat scalar on CI).
+        let mut delta = vec![0.0f32; p];
+        let mut weights = vec![0.0f32; n];
+        let s = bench(&format!("clip/iteration/{lv}"), shape.budget, || {
+            clip::row_norms_sq(level, &refs, &v, &mut norms);
+            for (w, &nsq) in weights.iter_mut().zip(&norms) {
+                *w = clip_weight(nsq.sqrt() as f32, tau);
+            }
+            for (c, dchunk) in delta.chunks_mut(4096).enumerate() {
+                clip::delta_chunk(level, &refs, &v, &weights, dchunk, c * 4096);
+            }
+            black_box(&delta);
+        });
+        println!("{}", s.report());
+        rep.add_stats(&s);
+    }
+    println!();
+}
+
+// --- multi-buffer SHA-256 ----------------------------------------------------
+
+fn sha256_kernels(rep: &mut BenchReport, shape: &Shape, levels: &[Level]) {
+    println!(
+        "=== sha256 batch ({} msgs × {} B; {} parts × {} f32; {} HMAC links) ===\n",
+        shape.sha_msgs, shape.sha_msg_len, shape.grad_parts, shape.grad_part_len, shape.hmac_links
+    );
+    let msgs: Vec<Vec<u8>> = (0..shape.sha_msgs)
+        .map(|i| (0..shape.sha_msg_len).map(|j| ((i * 131 + j) % 256) as u8).collect())
+        .collect();
+    let msg_refs: Vec<&[u8]> = msgs.iter().map(|m| m.as_slice()).collect();
+
+    let mut rng = Rng::new(8);
+    let grad: Vec<f32> = {
+        let mut g = vec![0.0f32; shape.grad_parts * shape.grad_part_len];
+        rng.fill_gaussian(&mut g, 1.0);
+        g
+    };
+    let parts: Vec<&[f32]> = grad.chunks(shape.grad_part_len).collect();
+
+    let keys: Vec<[u8; 32]> = (0..shape.hmac_links).map(|i| [i as u8; 32]).collect();
+    let frame: Vec<u8> = (0..shape.hmac_frame_len).map(|j| (j % 256) as u8).collect();
+
+    for &level in levels {
+        let lv = level.name();
+        kernels::with_forced_level(level, || {
+            let s = bench(&format!("sha256/batch/{lv}"), shape.budget, || {
+                black_box(sha256_batch(&msg_refs));
+            });
+            println!("{}", s.report());
+            rep.add_stats(&s);
+
+            let s = bench(&format!("sha256/grad_parts/{lv}"), shape.budget, || {
+                black_box(sha256_batch_f32(&parts));
+            });
+            println!("{}", s.report());
+            rep.add_stats(&s);
+
+            let frame_parts: Vec<[&[u8]; 1]> = keys.iter().map(|_| [frame.as_slice()]).collect();
+            let items: Vec<(&[u8], &[&[u8]])> = keys
+                .iter()
+                .zip(&frame_parts)
+                .map(|(k, p)| (k.as_slice(), p.as_slice()))
+                .collect();
+            let s = bench(&format!("sha256/hmac_broadcast/{lv}"), shape.budget, || {
+                black_box(hmac_sha256_batch(&items));
+            });
+            println!("{}", s.report());
+            rep.add_stats(&s);
+        });
+    }
+    println!();
+}
+
+// --- optimizer elementwise apply ---------------------------------------------
+
+fn apply_kernels(rep: &mut BenchReport, shape: &Shape, levels: &[Level]) {
+    let d = shape.apply_dim;
+    println!("=== optimizer apply (d={d}) ===\n");
+    let mut rng = Rng::new(9);
+    let mut grad = vec![0.0f32; d];
+    rng.fill_gaussian(&mut grad, 1.0);
+
+    for &level in levels {
+        let lv = level.name();
+        let mut params = vec![0.1f32; d];
+        let mut velocity = vec![0.0f32; d];
+        let s = bench(&format!("apply/sgd/{lv}"), shape.budget, || {
+            apply::sgd_apply(level, &mut params, &mut velocity, &grad, 1e-4, 0.9, 1e-4, true);
+            black_box(&params);
+        });
+        println!("{}", s.report());
+        rep.add_stats(&s);
+
+        let mut m = vec![0.0f32; d];
+        let mut v = vec![0.0f32; d];
+        let mut update = vec![0.0f32; d];
+        let params = vec![0.1f32; d];
+        let s = bench(&format!("apply/lamb_moments/{lv}"), shape.budget, || {
+            apply::lamb_moments(
+                level, &mut m, &mut v, &grad, &params, &mut update, 0.9, 0.999, 0.1, 0.001, 1e-6,
+                0.01,
+            );
+            black_box(&update);
+        });
+        println!("{}", s.report());
+        rep.add_stats(&s);
+    }
+    println!();
+}
+
+// --- hex decode (satellite: LUT unhex) ---------------------------------------
+
+fn hex_decode(rep: &mut BenchReport, shape: &Shape) {
+    println!("=== hex decode ({} f32 ≈ {} hex chars) ===\n", shape.hex_f32s, shape.hex_f32s * 8);
+    let bytes: Vec<u8> = (0..shape.hex_f32s * 4).map(|i| (i % 256) as u8).collect();
+    let encoded = hex(&bytes);
+    let s = bench("hex/unhex_lut", shape.budget, || {
+        black_box(unhex(&encoded).expect("valid hex"));
+    });
+    println!("{}", s.report());
+    rep.add_stats(&s);
+    println!();
+}

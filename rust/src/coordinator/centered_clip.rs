@@ -32,7 +32,16 @@
 //! need no re-blessing. The property test at the bottom pins
 //! bit-identity against an inlined copy of the scalar reference across
 //! shapes, τ values and worker counts.
+//!
+//! Both passes execute through the runtime-dispatched SIMD kernels in
+//! [`crate::util::kernels::clip`], which extend the same contract one
+//! level down: pass A lanes each carry one row's sequential f64 chain,
+//! pass B lanes each carry one element's f32 chain, so every dispatch
+//! level (scalar/SSE2/AVX2) produces identical bits. The integration
+//! test `kernels_identity` additionally sweeps every forced
+//! `BTARD_KERNELS` level against the scalar reference.
 
+use crate::util::kernels::{self, clip as clip_kernels};
 use crate::util::pool::WorkerPool;
 
 /// Below this many total elements (rows × dim) a clip call runs inline:
@@ -188,19 +197,25 @@ pub(crate) fn centered_clip_pooled(
     ClipResult { value: v, iters, final_step_norm: step_norm }
 }
 
-/// One row's ‖x − v‖² — the sequential f64 chain of the scalar loop.
-#[inline]
-fn row_norm_sq(row: &[f32], v: &[f32]) -> f64 {
-    let mut norm_sq = 0.0f64;
-    for (xi, vi) in row.iter().zip(v) {
-        let d = xi - vi;
-        norm_sq += d as f64 * d as f64;
+/// Pass A over one contiguous row range: batch the squared norms
+/// through the kernel layer (64 rows at a time through a stack buffer),
+/// then map them to clip weights. Row order is preserved and each
+/// row's chain is untouched, so the split into batches is bit-exact.
+fn weights_range(level: kernels::Level, rows: &[&[f32]], v: &[f32], tau: f32, out: &mut [f32]) {
+    let mut norms = [0.0f64; 64];
+    for (rchunk, wchunk) in rows.chunks(64).zip(out.chunks_mut(64)) {
+        let ns = &mut norms[..rchunk.len()];
+        clip_kernels::row_norms_sq(level, rchunk, v, ns);
+        for (w, &nsq) in wchunk.iter_mut().zip(ns.iter()) {
+            *w = clip_weight(nsq.sqrt() as f32, tau);
+        }
     }
-    norm_sq
 }
 
 /// Pass A: wᵢ = min{1, τ/‖xᵢ − v‖} for every row, fanned out across the
 /// pool when `par` (rows are independent — any split is bit-exact).
+/// Jobs are aligned to [`kernels::ROW_BLOCK`] rows so every worker but
+/// the last handles whole SIMD row groups.
 fn row_weights(
     rows: &[&[f32]],
     v: &[f32],
@@ -209,45 +224,30 @@ fn row_weights(
     pool: &WorkerPool,
     par: bool,
 ) {
+    let level = kernels::level();
     if !par || rows.len() < 2 {
-        for (w, r) in weights.iter_mut().zip(rows) {
-            *w = clip_weight(row_norm_sq(r, v).sqrt() as f32, tau);
-        }
+        weights_range(level, rows, v, tau, weights);
         return;
     }
-    let per_job = rows.len().div_ceil(pool.workers());
+    let per_job = pool.job_span(rows.len(), kernels::ROW_BLOCK);
     let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = weights
         .chunks_mut(per_job)
         .enumerate()
         .map(|(j, out)| {
             let lo = j * per_job;
             Box::new(move || {
-                for (k, w) in out.iter_mut().enumerate() {
-                    *w = clip_weight(row_norm_sq(rows[lo + k], v).sqrt() as f32, tau);
-                }
+                weights_range(level, &rows[lo..lo + out.len()], v, tau, out);
             }) as Box<dyn FnOnce() + Send + '_>
         })
         .collect();
     pool.scope_run(jobs);
 }
 
-/// One fixed dimension chunk of pass B: Δⱼ = Σᵢ (x_ij − vⱼ)·wᵢ with i in
-/// 0..n order — the exact per-element f32 chain of the scalar loop
-/// (rows outer, elements inner).
-fn delta_chunk(rows: &[&[f32]], v: &[f32], weights: &[f32], dchunk: &mut [f32], off: usize) {
-    dchunk.iter_mut().for_each(|d| *d = 0.0);
-    let hi = off + dchunk.len();
-    for (r, &w) in rows.iter().zip(weights) {
-        for ((di, xi), vi) in dchunk.iter_mut().zip(&r[off..hi]).zip(&v[off..hi]) {
-            *di += (xi - vi) * w;
-        }
-    }
-}
-
 /// Pass B: the delta reduction over fixed `COL_CHUNK`-wide dimension
 /// chunks, fanned out across the pool when `par`. Chunk boundaries and
 /// the chunk→worker assignment cannot affect the bits: no addition
-/// crosses a chunk edge.
+/// crosses a chunk edge. Each chunk runs through the dispatched
+/// [`clip_kernels::delta_chunk`].
 fn accumulate_delta(
     rows: &[&[f32]],
     v: &[f32],
@@ -256,14 +256,16 @@ fn accumulate_delta(
     pool: &WorkerPool,
     par: bool,
 ) {
+    let level = kernels::level();
     if !par || delta.len() <= COL_CHUNK {
         for (c, dchunk) in delta.chunks_mut(COL_CHUNK).enumerate() {
-            delta_chunk(rows, v, weights, dchunk, c * COL_CHUNK);
+            clip_kernels::delta_chunk(level, rows, v, weights, dchunk, c * COL_CHUNK);
         }
         return;
     }
-    let n_chunks = delta.len().div_ceil(COL_CHUNK);
-    let span = n_chunks.div_ceil(pool.workers()) * COL_CHUNK;
+    // Same span as the pre-kernel formula `div_ceil(n_chunks, workers)
+    // · COL_CHUNK`: div_ceil nests as div_ceil(p, w·C) either way.
+    let span = pool.job_span(delta.len(), COL_CHUNK);
     let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = delta
         .chunks_mut(span)
         .enumerate()
@@ -271,7 +273,7 @@ fn accumulate_delta(
             let base = j * span;
             Box::new(move || {
                 for (c, dchunk) in dpart.chunks_mut(COL_CHUNK).enumerate() {
-                    delta_chunk(rows, v, weights, dchunk, base + c * COL_CHUNK);
+                    clip_kernels::delta_chunk(level, rows, v, weights, dchunk, base + c * COL_CHUNK);
                 }
             }) as Box<dyn FnOnce() + Send + '_>
         })

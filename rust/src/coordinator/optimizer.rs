@@ -4,9 +4,14 @@
 //! by BTARD-CLIPPED-SGD.
 //!
 //! Every peer runs the optimizer on identical aggregated gradients, so
-//! parameter state stays bit-identical across the cluster.
+//! parameter state stays bit-identical across the cluster. The
+//! elementwise apply loops run through the runtime-dispatched SIMD
+//! kernels ([`crate::util::kernels::apply`]), which are bit-identical
+//! to the scalar loops at every dispatch level — the trust-ratio norms
+//! in LAMB are sequential reduction chains and stay scalar.
 
 use crate::runtime::ParamSegment;
+use crate::util::kernels::{self, apply as apply_kernels};
 
 /// Learning-rate schedule.
 #[derive(Clone, Copy, Debug)]
@@ -81,13 +86,16 @@ impl Sgd {
 impl Optimizer for Sgd {
     fn step(&mut self, step: u64, params: &mut [f32], grad: &[f32]) {
         let lr = self.schedule.lr(step);
-        let m = self.momentum;
-        for i in 0..params.len() {
-            let g = grad[i] + self.weight_decay * params[i];
-            self.velocity[i] = m * self.velocity[i] + g;
-            let update = if self.nesterov { g + m * self.velocity[i] } else { self.velocity[i] };
-            params[i] -= lr * update;
-        }
+        apply_kernels::sgd_apply(
+            kernels::level(),
+            params,
+            &mut self.velocity,
+            grad,
+            lr,
+            self.momentum,
+            self.weight_decay,
+            self.nesterov,
+        );
     }
 
     fn name(&self) -> &'static str {
@@ -152,24 +160,34 @@ impl Optimizer for Lamb {
         let t = (step + 1) as i32;
         let bc1 = 1.0 - self.beta1.powi(t);
         let bc2 = 1.0 - self.beta2.powi(t);
+        let level = kernels::level();
         for seg in &self.segments {
             let r = seg.offset..seg.offset + seg.len;
-            // Adam moments + bias correction, per segment.
+            // Adam moments + bias correction, per segment (segment-local
+            // slices so the kernel's lane index k matches the scalar
+            // loop's enumerate offset).
             let mut update = vec![0.0f32; seg.len];
-            for (k, i) in r.clone().enumerate() {
-                self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
-                self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
-                let mh = self.m[i] / bc1;
-                let vh = self.v[i] / bc2;
-                update[k] = mh / (vh.sqrt() + self.eps) + self.weight_decay * params[i];
-            }
+            apply_kernels::lamb_moments(
+                level,
+                &mut self.m[r.clone()],
+                &mut self.v[r.clone()],
+                &grad[r.clone()],
+                &params[r.clone()],
+                &mut update,
+                self.beta1,
+                self.beta2,
+                bc1,
+                bc2,
+                self.eps,
+                self.weight_decay,
+            );
             // Trust ratio: ‖w‖ / ‖update‖ (both clamped away from 0).
             let w_norm = crate::util::rng::l2_norm(&params[r.clone()]);
             let u_norm = crate::util::rng::l2_norm(&update);
             let trust = if w_norm > 0.0 && u_norm > 0.0 { w_norm / u_norm } else { 1.0 };
-            for (k, i) in r.enumerate() {
-                params[i] -= lr * trust * update[k];
-            }
+            // `lr * trust * u` evaluates left-to-right, so rounding
+            // `lr * trust` once up front is the identical chain.
+            apply_kernels::scaled_sub(level, &mut params[r], &update, lr * trust);
         }
     }
 

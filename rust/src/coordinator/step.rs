@@ -29,7 +29,7 @@ use super::centered_clip::{centered_clip_init, clipped_diff, TauPolicy};
 use super::membership::Membership;
 use super::messages::{Accusation, BanReason, GradCommit, VerifyScalars, Writer};
 use super::partition::{OwnerMap, PartitionSpec};
-use crate::crypto::{sha256_f32, sha256_parts, Digest};
+use crate::crypto::{sha256_batch_f32, sha256_f32, sha256_parts, Digest};
 use crate::model::GradientSource;
 use crate::mprng::{combine, MprngOutcome, MprngRound};
 use crate::net::gossip::EquivocationTracker;
@@ -477,9 +477,14 @@ pub fn stage_begin(ctx: &mut PeerCtx, step: u64, params: &[f32]) -> StepState {
 
     let t0 = Instant::now();
     if i_contribute {
-        let part_hashes: Vec<Digest> =
-            (0..n_parts).map(|j| sha256_f32(ctx.spec.slice(&grad, j))).collect();
-        let commit = GradCommit { full: sha256_f32(&grad), parts: part_hashes };
+        // All part slices plus the full gradient hash in one
+        // multi-buffer SHA-256 sweep (equal-size parts bucket together).
+        let mut slices: Vec<&[f32]> =
+            (0..n_parts).map(|j| ctx.spec.slice(&grad, j)).collect();
+        slices.push(&grad);
+        let mut hashes = sha256_batch_f32(&slices);
+        let full = hashes.pop().expect("batch returns one digest per input");
+        let commit = GradCommit { full, parts: hashes };
         let equivocate = match &mut ctx.behavior {
             Behavior::Byzantine(adv) => adv.corrupt_commit(step),
             Behavior::Honest => false,
@@ -1284,7 +1289,13 @@ fn validate_target(ctx: &mut PeerCtx, target: PeerId) -> Option<Accusation> {
     let seed = batch_seed(&archive.seed_r, target);
     let (_, g) = ctx.source.loss_and_grad(&archive.params, seed);
     ctx.recompute_count += 1;
-    if sha256_f32(&g) != commit.full {
+    // Full hash plus every part hash in one multi-buffer sweep; the
+    // mismatch scan below is order-preserving, so accusation part
+    // indices are unchanged.
+    let mut slices: Vec<&[f32]> = vec![&g];
+    slices.extend((0..ctx.spec.n_parts).map(|j| ctx.spec.slice(&g, j)));
+    let hashes = sha256_batch_f32(&slices);
+    if hashes[0] != commit.full {
         return Some(Accusation {
             target,
             reason: BanReason::GradientMismatch,
@@ -1292,7 +1303,7 @@ fn validate_target(ctx: &mut PeerCtx, target: PeerId) -> Option<Accusation> {
         });
     }
     for j in 0..ctx.spec.n_parts {
-        if sha256_f32(ctx.spec.slice(&g, j)) != commit.parts[j] {
+        if hashes[j + 1] != commit.parts[j] {
             return Some(Accusation {
                 target,
                 reason: BanReason::GradientMismatch,

@@ -11,4 +11,7 @@ pub use commit::{commit, verify_opening, Digest, Opening};
 pub use schnorr::{
     batch_verify, keygen, shared_secret, sign, verify, Mont, PublicKey, SecretKey, Signature,
 };
-pub use sha256::{hmac_sha256, sha256, sha256_f32, sha256_parts, Sha256};
+pub use sha256::{
+    hmac_sha256, hmac_sha256_batch, sha256, sha256_batch, sha256_batch_f32, sha256_batch_parts,
+    sha256_f32, sha256_parts, Sha256,
+};

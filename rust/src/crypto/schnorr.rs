@@ -17,7 +17,7 @@
 //! exponentiation costs ~20µs; signature checks are therefore cheap
 //! enough to keep enabled during simulated training runs.
 
-use super::sha256::{sha256_parts, Sha256};
+use super::sha256::{sha256_batch, sha256_batch_parts, sha256_parts, Sha256};
 use super::u256::U256;
 
 /// p = 2^255 - 19.
@@ -280,34 +280,53 @@ pub fn batch_verify(mont: &Mont, items: &[(&PublicKey, &[u8], &Signature)]) -> b
         return verify(mont, pk, msg, sig);
     }
     // Transcript digest binding every item (messages enter hashed, so
-    // huge payloads are absorbed once).
+    // huge payloads are absorbed once). The per-item message hashes run
+    // through the multi-buffer SHA-256 kernels in one sweep.
+    let msg_hashes = sha256_batch(&items.iter().map(|(_, m, _)| *m).collect::<Vec<_>>());
     let mut t = Sha256::new();
     t.update(b"btard-batch");
     t.update(&(items.len() as u64).to_le_bytes());
-    for (pk, msg, sig) in items {
+    for ((pk, _, sig), mh) in items.iter().zip(&msg_hashes) {
         t.update(&sig.r);
         t.update(&sig.s);
         t.update(&pk.0);
-        t.update(&sha256_parts(&[msg]));
+        t.update(mh);
     }
     let transcript = t.finalize();
 
+    // Coefficient and challenge digests, also batched. Coefficient
+    // inputs all share one length — an ideal multi-buffer bucket;
+    // challenges bucket by message length.
+    let idx_bytes: Vec<[u8; 8]> = (0..items.len()).map(|i| (i as u64).to_le_bytes()).collect();
+    let coef_parts: Vec<Vec<&[u8]>> = idx_bytes
+        .iter()
+        .map(|ib| vec![b"btard-batch-coef".as_slice(), &transcript, ib])
+        .collect();
+    let coef_refs: Vec<&[&[u8]]> = coef_parts.iter().map(|p| p.as_slice()).collect();
+    let coef_hashes = sha256_batch_parts(&coef_refs);
+    let chal_parts: Vec<Vec<&[u8]>> = items
+        .iter()
+        .map(|(pk, msg, sig)| vec![b"btard-schnorr".as_slice(), &sig.r, &pk.0, *msg])
+        .collect();
+    let chal_refs: Vec<&[&[u8]]> = chal_parts.iter().map(|p| p.as_slice()).collect();
+    let chal_hashes = sha256_batch_parts(&chal_refs);
+
     let mut lhs_exp = U256::ZERO; // Σ cᵢ·sᵢ mod p-1
     let mut rhs = U256::ONE;
-    for (i, (pk, msg, sig)) in items.iter().enumerate() {
+    for (i, (pk, _, sig)) in items.iter().enumerate() {
         let y = U256::from_be_bytes(&pk.0);
         let r = U256::from_be_bytes(&sig.r);
         if y.is_zero() || r.is_zero() || !y.lt(&p) || !r.lt(&p) {
             return false; // malformed group element — batch rejected
         }
         // cᵢ: 128 bits from the transcript, never zero.
-        let ci_bytes = sha256_parts(&[b"btard-batch-coef", &transcript, &(i as u64).to_le_bytes()]);
-        let mut ci = U256::from_be_bytes(&ci_bytes[..16]);
+        let mut ci = U256::from_be_bytes(&coef_hashes[i][..16]);
         if ci.is_zero() {
             ci = U256::ONE;
         }
         let s = U256::from_be_bytes(&sig.s).rem256(&pm1);
-        let e = challenge(&sig.r, &pk.0, msg);
+        // Same reduction `challenge` applies to its digest.
+        let e = U256::from_be_bytes(&chal_hashes[i]).rem256(&pm1);
         lhs_exp = lhs_exp.add_mod(&s.widening_mul(&ci).rem(&pm1), &pm1);
         let ec = e.widening_mul(&ci).rem(&pm1);
         rhs = mont.mul_norm(&rhs, &mont.pow(&r, &ci));

@@ -5,7 +5,9 @@
 //! allocation-free on the block path and covered by the official NIST
 //! test vectors below.
 
-const K: [u32; 64] = [
+use crate::util::kernels;
+
+pub(crate) const K: [u32; 64] = [
     0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
     0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
     0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
@@ -16,7 +18,7 @@ const K: [u32; 64] = [
     0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
 ];
 
-const H0: [u32; 8] = [
+pub(crate) const H0: [u32; 8] = [
     0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab, 0x5be0cd19,
 ];
 
@@ -89,53 +91,60 @@ impl Sha256 {
     }
 
     fn compress(&mut self, block: &[u8; 64]) {
-        let mut w = [0u32; 64];
-        for i in 0..16 {
-            w[i] = u32::from_be_bytes([
-                block[i * 4],
-                block[i * 4 + 1],
-                block[i * 4 + 2],
-                block[i * 4 + 3],
-            ]);
-        }
-        for i in 16..64 {
-            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
-            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
-            w[i] = w[i - 16]
-                .wrapping_add(s0)
-                .wrapping_add(w[i - 7])
-                .wrapping_add(s1);
-        }
-        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = self.h;
-        for i in 0..64 {
-            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
-            let ch = (e & f) ^ ((!e) & g);
-            let t1 = h
-                .wrapping_add(s1)
-                .wrapping_add(ch)
-                .wrapping_add(K[i])
-                .wrapping_add(w[i]);
-            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
-            let maj = (a & b) ^ (a & c) ^ (b & c);
-            let t2 = s0.wrapping_add(maj);
-            h = g;
-            g = f;
-            f = e;
-            e = d.wrapping_add(t1);
-            d = c;
-            c = b;
-            b = a;
-            a = t1.wrapping_add(t2);
-        }
-        self.h[0] = self.h[0].wrapping_add(a);
-        self.h[1] = self.h[1].wrapping_add(b);
-        self.h[2] = self.h[2].wrapping_add(c);
-        self.h[3] = self.h[3].wrapping_add(d);
-        self.h[4] = self.h[4].wrapping_add(e);
-        self.h[5] = self.h[5].wrapping_add(f);
-        self.h[6] = self.h[6].wrapping_add(g);
-        self.h[7] = self.h[7].wrapping_add(h);
+        compress_block(&mut self.h, block);
     }
+}
+
+/// One SHA-256 compression round over `block`, updating `h` in place.
+/// Shared by the incremental hasher and the multi-buffer kernels'
+/// scalar fallback (`util::kernels::sha256_mb`).
+pub(crate) fn compress_block(h: &mut [u32; 8], block: &[u8; 64]) {
+    let mut w = [0u32; 64];
+    for i in 0..16 {
+        w[i] = u32::from_be_bytes([
+            block[i * 4],
+            block[i * 4 + 1],
+            block[i * 4 + 2],
+            block[i * 4 + 3],
+        ]);
+    }
+    for i in 16..64 {
+        let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+        let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+        w[i] = w[i - 16]
+            .wrapping_add(s0)
+            .wrapping_add(w[i - 7])
+            .wrapping_add(s1);
+    }
+    let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh] = *h;
+    for i in 0..64 {
+        let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+        let ch = (e & f) ^ ((!e) & g);
+        let t1 = hh
+            .wrapping_add(s1)
+            .wrapping_add(ch)
+            .wrapping_add(K[i])
+            .wrapping_add(w[i]);
+        let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+        let maj = (a & b) ^ (a & c) ^ (b & c);
+        let t2 = s0.wrapping_add(maj);
+        hh = g;
+        g = f;
+        f = e;
+        e = d.wrapping_add(t1);
+        d = c;
+        c = b;
+        b = a;
+        a = t1.wrapping_add(t2);
+    }
+    h[0] = h[0].wrapping_add(a);
+    h[1] = h[1].wrapping_add(b);
+    h[2] = h[2].wrapping_add(c);
+    h[3] = h[3].wrapping_add(d);
+    h[4] = h[4].wrapping_add(e);
+    h[5] = h[5].wrapping_add(f);
+    h[6] = h[6].wrapping_add(g);
+    h[7] = h[7].wrapping_add(hh);
 }
 
 /// One-shot digest.
@@ -200,6 +209,88 @@ pub fn hmac_sha256(key: &[u8], parts: &[&[u8]]) -> [u8; 32] {
     outer.update(&opad);
     outer.update(&inner_digest);
     outer.finalize()
+}
+
+/// Batch one-shot digests through the multi-buffer kernels
+/// (`util::kernels::sha256_mb`). Output order matches input; every
+/// digest equals `sha256(msg)` bitwise at every dispatch level.
+pub fn sha256_batch(msgs: &[&[u8]]) -> Vec<[u8; 32]> {
+    let padded: Vec<Vec<u8>> = msgs.iter().map(|m| kernels::sha256_mb::pad_parts(&[m])).collect();
+    kernels::sha256_mb::digest_batch_padded(kernels::level(), &padded)
+}
+
+/// Batch variant of [`sha256_parts`]: one digest per item, each item a
+/// list of concatenated parts.
+pub fn sha256_batch_parts(items: &[&[&[u8]]]) -> Vec<[u8; 32]> {
+    let padded: Vec<Vec<u8>> =
+        items.iter().map(|parts| kernels::sha256_mb::pad_parts(parts)).collect();
+    kernels::sha256_mb::digest_batch_padded(kernels::level(), &padded)
+}
+
+/// Batch variant of [`sha256_f32`]: gradient part hashing in one
+/// multi-buffer sweep.
+pub fn sha256_batch_f32(slices: &[&[f32]]) -> Vec<[u8; 32]> {
+    let padded: Vec<Vec<u8>> = slices
+        .iter()
+        .map(|v| {
+            #[cfg(target_endian = "little")]
+            // SAFETY: f32 has no padding bytes, and on little-endian
+            // targets its in-memory bytes are exactly the protocol's
+            // little-endian wire encoding that sha256_f32 hashes.
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            };
+            #[cfg(not(target_endian = "little"))]
+            let owned: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+            #[cfg(not(target_endian = "little"))]
+            let bytes: &[u8] = &owned;
+            kernels::sha256_mb::pad_parts(&[bytes])
+        })
+        .collect();
+    kernels::sha256_mb::digest_batch_padded(kernels::level(), &padded)
+}
+
+/// Batch HMAC-SHA256: one `(key, parts)` pair per item. Both hash
+/// layers run through the multi-buffer kernels — the inner hashes all
+/// share the `ipad ‖ message` shape and the outer hashes are all
+/// exactly one block plus a digest, so both batches bucket perfectly.
+pub fn hmac_sha256_batch(items: &[(&[u8], &[&[u8]])]) -> Vec<[u8; 32]> {
+    let level = kernels::level();
+    let mut ipads = Vec::with_capacity(items.len());
+    let mut opads = Vec::with_capacity(items.len());
+    for (key, _) in items {
+        let mut k = [0u8; 64];
+        if key.len() > 64 {
+            k[..32].copy_from_slice(&sha256(key));
+        } else {
+            k[..key.len()].copy_from_slice(key);
+        }
+        let mut ipad = [0u8; 64];
+        let mut opad = [0u8; 64];
+        for i in 0..64 {
+            ipad[i] = k[i] ^ 0x36;
+            opad[i] = k[i] ^ 0x5c;
+        }
+        ipads.push(ipad);
+        opads.push(opad);
+    }
+    let inner_padded: Vec<Vec<u8>> = items
+        .iter()
+        .zip(&ipads)
+        .map(|((_, parts), ipad)| {
+            let mut all: Vec<&[u8]> = Vec::with_capacity(parts.len() + 1);
+            all.push(&ipad[..]);
+            all.extend_from_slice(parts);
+            kernels::sha256_mb::pad_parts(&all)
+        })
+        .collect();
+    let inner = kernels::sha256_mb::digest_batch_padded(level, &inner_padded);
+    let outer_padded: Vec<Vec<u8>> = opads
+        .iter()
+        .zip(&inner)
+        .map(|(opad, d)| kernels::sha256_mb::pad_parts(&[&opad[..], &d[..]]))
+        .collect();
+    kernels::sha256_mb::digest_batch_padded(level, &outer_padded)
 }
 
 #[cfg(test)]
@@ -278,6 +369,45 @@ mod tests {
             )),
             "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
         );
+    }
+
+    #[test]
+    fn batch_wrappers_match_scalar() {
+        let msgs: Vec<Vec<u8>> = (0..9).map(|i| vec![i as u8; i * 23]).collect();
+        let refs: Vec<&[u8]> = msgs.iter().map(|m| m.as_slice()).collect();
+        let expect: Vec<[u8; 32]> = msgs.iter().map(|m| sha256(m)).collect();
+        assert_eq!(sha256_batch(&refs), expect);
+
+        let part_items: Vec<Vec<&[u8]>> = msgs
+            .iter()
+            .map(|m| {
+                let mid = m.len() / 2;
+                vec![&m[..mid], &m[mid..]]
+            })
+            .collect();
+        let part_refs: Vec<&[&[u8]]> = part_items.iter().map(|p| p.as_slice()).collect();
+        assert_eq!(sha256_batch_parts(&part_refs), expect);
+
+        let grads: Vec<Vec<f32>> =
+            (0..7).map(|i| (0..i * 101).map(|j| j as f32 * 0.25 - i as f32).collect()).collect();
+        let grad_refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let grad_expect: Vec<[u8; 32]> = grads.iter().map(|g| sha256_f32(g)).collect();
+        assert_eq!(sha256_batch_f32(&grad_refs), grad_expect);
+    }
+
+    #[test]
+    fn hmac_batch_matches_scalar() {
+        let keys: Vec<Vec<u8>> = vec![vec![0x0b; 20], b"Jefe".to_vec(), vec![0xaa; 131], vec![]];
+        let msgs: Vec<&[u8]> = vec![b"Hi There", b"what do ya want for nothing?", b"x", b""];
+        let items: Vec<(&[u8], &[&[u8]])> = keys
+            .iter()
+            .zip(&msgs)
+            .map(|(k, m)| (k.as_slice(), std::slice::from_ref(m)))
+            .collect();
+        let got = hmac_sha256_batch(&items);
+        for (i, (k, m)) in keys.iter().zip(&msgs).enumerate() {
+            assert_eq!(got[i], hmac_sha256(k, std::slice::from_ref(m)), "item {i}");
+        }
     }
 
     #[test]

@@ -104,25 +104,24 @@ pub fn inprocess_digest(cfg: &RunConfig, workload: &WorkloadSpec) -> String {
 fn f32_slice_hex(vals: &[f32]) -> String {
     let mut out = String::with_capacity(vals.len() * 8);
     for v in vals {
-        out.push_str(&format!("{:08x}", v.to_bits()));
+        out.push_str(&crate::util::hex(&v.to_bits().to_be_bytes()));
     }
     out
 }
 
 fn f32_slice_unhex(s: &str) -> Result<Vec<f32>, String> {
-    // Byte-offset slicing below panics on non-char boundaries, so a
-    // corrupted report with a multi-byte character must be rejected as
-    // the Err it is, not a parent-process panic.
-    if !s.is_ascii() || s.len() % 8 != 0 {
+    // The shared LUT decoder rejects odd lengths, non-hex bytes and
+    // multi-byte characters in one pass; this runs per-f32 on merged
+    // 512-peer reports, where per-value from_str_radix was measurable.
+    if s.len() % 8 != 0 {
         return Err("malformed f32 bit string (want 8 ASCII hex chars per value)".to_string());
     }
-    (0..s.len() / 8)
-        .map(|i| {
-            u32::from_str_radix(&s[8 * i..8 * i + 8], 16)
-                .map(f32::from_bits)
-                .map_err(|_| "malformed f32 bit string".to_string())
-        })
-        .collect()
+    let bytes = crate::util::unhex(s)
+        .ok_or_else(|| "malformed f32 bit string (non-hex byte)".to_string())?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_bits(u32::from_be_bytes([c[0], c[1], c[2], c[3]])))
+        .collect())
 }
 
 fn f64_hex(v: f64) -> String {
@@ -630,6 +629,12 @@ pub struct ClusterOptions {
     /// Budget for the training run itself (children are killed past it —
     /// a hung peer must fail CI, not hang it).
     pub run_timeout: Duration,
+    /// Per-peer `BTARD_KERNELS` overrides (peer id → level name): pins a
+    /// child's vector-kernel dispatch level while the rest auto-detect.
+    /// Kernel selection is compute state, never protocol state, so a
+    /// mixed-level cluster must still be digest-identical — this is how
+    /// CI proves it over a real socket mesh.
+    pub peer_kernels: Vec<(usize, String)>,
 }
 
 pub struct ClusterOutcome {
@@ -786,6 +791,9 @@ pub fn run_cluster(
             .arg(opts.connect_timeout.as_millis().to_string());
         if restart {
             cmd.arg("--restart");
+        }
+        if let Some((_, level)) = opts.peer_kernels.iter().find(|(id, _)| *id == k) {
+            cmd.env("BTARD_KERNELS", level);
         }
         let child = cmd
             .stdout(std::process::Stdio::from(log))

@@ -131,6 +131,8 @@ fn main() {
                  \x20 --gossip-fanout F           overlay out-degree cap (default 8)\n\
                  \x20 --session-mac               per-link HMAC streams for bulk traffic\n\
                  \x20                             (adjudication slots stay Schnorr-signed)\n\
+                 \x20 --peer-kernels ID:LEVEL[,..] pin BTARD_KERNELS per child process\n\
+                 \x20                             (scalar|sse2|avx2|auto — digest must not move)\n\
                  \x20 --verify-inprocess          also run the in-process pooled run and\n\
                  \x20                             fail unless the digests are bit-identical\n\
                  \x20 --config FILE.json          full config (transport 'socket' or 'gossip')\n\
@@ -153,7 +155,9 @@ fn main() {
                  \x20                             diff two btard-bench-v1 reports; exits\n\
                  \x20                             nonzero when a gated-unit median regressed\n\
                  \x20                             past the band (advisory when the baseline\n\
-                 \x20                             is provisional or the shapes differ)"
+                 \x20                             is provisional or the shapes differ)\n\
+                 \x20 --markdown SUMMARY.md       append the per-record delta table as\n\
+                 \x20                             GitHub-flavored markdown (CI step summary)"
             );
         }
     }
@@ -493,6 +497,29 @@ fn cluster_run_config(args: &Args) -> RunConfig {
     }
 }
 
+/// Parse `--peer-kernels ID:LEVEL[,ID:LEVEL...]` — per-child
+/// `BTARD_KERNELS` pins for the mixed-dispatch digest gate. Level names
+/// are validated by the child at startup (`util::kernels::env_level`),
+/// not here: the child knows what its own CPU supports.
+fn parse_peer_kernels(args: &Args) -> Vec<(usize, String)> {
+    let Some(spec) = args.get("peer-kernels") else {
+        return vec![];
+    };
+    spec.split(',')
+        .filter(|pair| !pair.is_empty())
+        .map(|pair| {
+            let (id, level) = pair.split_once(':').unwrap_or_else(|| {
+                panic!("--peer-kernels expects ID:LEVEL pairs, got '{pair}'")
+            });
+            let id = id
+                .trim()
+                .parse()
+                .unwrap_or_else(|_| panic!("--peer-kernels: bad peer id in '{pair}'"));
+            (id, level.trim().to_string())
+        })
+        .collect()
+}
+
 fn cmd_cluster(args: &Args) {
     let (cfg, workload, transport) = match args.get("config") {
         Some(path) => {
@@ -520,6 +547,7 @@ fn cmd_cluster(args: &Args) {
         bin: std::env::current_exe().expect("resolving the btard binary path"),
         connect_timeout: Duration::from_millis(args.get_u64("connect-timeout-ms", 30_000)),
         run_timeout: Duration::from_secs(args.get_u64("run-timeout-s", 600)),
+        peer_kernels: parse_peer_kernels(args),
     };
     eprintln!(
         "btard cluster: forking {} peer processes ({} byzantine, attack={:?}, churn={}, \
@@ -758,7 +786,10 @@ fn cmd_bench_compare(args: &Args) {
     let (Some(base_path), Some(cur_path)) =
         (args.positional.get(1), args.positional.get(2))
     else {
-        eprintln!("usage: btard bench-compare BASELINE.json CURRENT.json [--tolerance 0.25]");
+        eprintln!(
+            "usage: btard bench-compare BASELINE.json CURRENT.json \
+             [--tolerance 0.25] [--markdown SUMMARY.md]"
+        );
         std::process::exit(2);
     };
     let tolerance = args.get_f32("tolerance", 0.25) as f64;
@@ -815,6 +846,30 @@ fn cmd_bench_compare(args: &Args) {
         cmp.regressions.len(),
         cmp.improvements.len()
     );
+    // --markdown PATH appends the per-record summary table (CI tees
+    // this into $GITHUB_STEP_SUMMARY). Appending — not truncating —
+    // lets several compare invocations share one summary file, and the
+    // write happens before the blocking exit so a FAIL still renders.
+    if let Some(md_path) = args.get("markdown") {
+        let title = current
+            .get("bench")
+            .and_then(Json::as_str)
+            .map(|b| format!("{b} (vs {base_path})"))
+            .unwrap_or_else(|| format!("{base_path} vs {cur_path}"));
+        let md = cmp.markdown(&title, tolerance);
+        let write = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(md_path)
+            .and_then(|mut f| std::io::Write::write_all(&mut f, md.as_bytes()));
+        match write {
+            Ok(()) => println!("  markdown summary appended to {md_path}"),
+            Err(e) => {
+                eprintln!("bench-compare: cannot write '{md_path}': {e}");
+                std::process::exit(2);
+            }
+        }
+    }
     if cmp.blocking_failure() {
         eprintln!("bench-compare: FAIL — median regression past the tolerance band");
         std::process::exit(1);

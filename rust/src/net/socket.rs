@@ -96,8 +96,8 @@ use super::gossip::{OverlaySchedule, RelayTracker, Seen};
 use super::local::{distinct_variants, ClusterInfo, Inbox};
 use super::{Envelope, MsgClass, PeerId, RecvError, RecvMode, TrafficStats, Transport};
 use crate::crypto::{
-    hmac_sha256, keygen, sha256, shared_secret, sign, verify, Mont, PublicKey, SecretKey,
-    Signature,
+    hmac_sha256, hmac_sha256_batch, keygen, sha256, shared_secret, sign, verify, Mont, PublicKey,
+    SecretKey, Signature,
 };
 use crate::util::json::Json;
 use crate::util::{hex, unhex};
@@ -321,14 +321,33 @@ fn frame_mac(key: &[u8; 32], seq: u64, fields: &[u8]) -> [u8; 32] {
 /// frame whose fields follow (written separately, so broadcasts share
 /// one fields buffer across recipients).
 fn mac_frame_prefix(fields: &[u8], seq: u64, key: &[u8; 32]) -> Vec<u8> {
-    let body_len = MAC_FIXED + fields.len();
+    mac_frame_prefix_with(fields.len(), &seq.to_le_bytes(), &frame_mac(key, seq, fields))
+}
+
+/// Assemble a session-MAC frame prefix from an already-computed MAC —
+/// the broadcast path computes MACs for all links in one batched
+/// multi-buffer HMAC sweep and then builds each prefix from its digest.
+fn mac_frame_prefix_with(fields_len: usize, seq_le: &[u8; 8], mac: &[u8; 32]) -> Vec<u8> {
+    let body_len = MAC_FIXED + fields_len;
     assert!(body_len <= u32::MAX as usize, "envelope payload too large for the frame codec");
     let mut out = Vec::with_capacity(8 + MAC_FIXED);
     out.extend_from_slice(&MAGIC);
     out.extend_from_slice(&(body_len as u32).to_le_bytes());
     out.push(KIND_MAC_ENVELOPE);
-    out.extend_from_slice(&seq.to_le_bytes());
-    out.extend_from_slice(&frame_mac(key, seq, fields));
+    out.extend_from_slice(seq_le);
+    out.extend_from_slice(mac);
+    out
+}
+
+/// Frame header + kind prefix for a plain (no session MAC) envelope
+/// frame whose fields follow.
+fn plain_frame_prefix(fields_len: usize) -> Vec<u8> {
+    let body_len = 1 + fields_len;
+    assert!(body_len <= u32::MAX as usize, "envelope payload too large for the frame codec");
+    let mut out = Vec::with_capacity(9);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.push(KIND_ENVELOPE);
     out
 }
 
@@ -1426,9 +1445,7 @@ impl IoLoop {
                         })
                         .collect(),
                 };
-                for to in targets {
-                    self.queue_frame(to, step, &fields, false);
-                }
+                self.queue_broadcast(&targets, step, &fields);
             }
             IoCmd::Inbound { peer, stream, fr } => self.install_inbound(peer, stream, fr, running),
             IoCmd::DialDone { to, result } => self.dial_done(to, result),
@@ -1511,37 +1528,84 @@ impl IoLoop {
         if to == self.me {
             return;
         }
-        if matches!(self.out[to], OutLink::Dead)
-            && self.rejoin_steps[to].map_or(false, |r| step >= r)
-        {
-            // The link died with the peer's first life; its scheduled
-            // rejoin is a fresh process (fresh address, fresh reader),
-            // so the link state machine gets a fresh start — and the
-            // new stream's MAC counter restarts from zero.
-            self.out[to] = OutLink::Absent;
-            if let Some(mac) = &mut self.mac_send[to] {
-                mac.next_seq = 0;
-            }
-        }
+        self.reset_rejoined_link(to, step);
         let prefix = match &mut self.mac_send[to] {
             Some(mac) => {
                 let prefix = mac_frame_prefix(fields, mac.next_seq, &mac.key);
                 mac.next_seq += 1;
                 prefix
             }
-            None => {
-                let body_len = 1 + fields.len();
-                assert!(
-                    body_len <= u32::MAX as usize,
-                    "envelope payload too large for the frame codec"
-                );
-                let mut out = Vec::with_capacity(9);
-                out.extend_from_slice(&MAGIC);
-                out.extend_from_slice(&(body_len as u32).to_le_bytes());
-                out.push(KIND_ENVELOPE);
-                out
-            }
+            None => plain_frame_prefix(fields.len()),
         };
+        self.queue_prefixed(to, prefix, fields, is_relay);
+    }
+
+    /// Queue one broadcast frame for every target. Observable per-link
+    /// behavior is exactly a sequence of [`Self::queue_frame`] calls in
+    /// target order — links are independent state machines, so hoisting
+    /// every link's MAC-counter advance ahead of the queueing lets all
+    /// the stream MACs run as one batched multi-buffer HMAC sweep.
+    fn queue_broadcast(&mut self, targets: &[PeerId], step: u64, fields: &[u8]) {
+        // Phase 1: per-link rejoin resets and MAC counter advances.
+        let mut macs: Vec<(usize, [u8; 32], [u8; 8])> = Vec::new();
+        for (ti, &to) in targets.iter().enumerate() {
+            if to == self.me {
+                continue;
+            }
+            self.reset_rejoined_link(to, step);
+            if let Some(mac) = &mut self.mac_send[to] {
+                macs.push((ti, mac.key, mac.next_seq.to_le_bytes()));
+                mac.next_seq += 1;
+            }
+        }
+        // Phase 2: every link's frame MAC in one batched sweep (the
+        // fields bytes are shared; only key and counter differ).
+        let parts: Vec<[&[u8]; 3]> = macs
+            .iter()
+            .map(|(_, _, seq)| [b"btard-mac-frame".as_slice(), seq, fields])
+            .collect();
+        let items: Vec<(&[u8], &[&[u8]])> = macs
+            .iter()
+            .zip(&parts)
+            .map(|((_, key, _), p)| (key.as_slice(), p.as_slice()))
+            .collect();
+        let digests = hmac_sha256_batch(&items);
+        let mut mac_prefix: Vec<Option<Vec<u8>>> = vec![None; targets.len()];
+        for ((ti, _, seq), d) in macs.iter().zip(&digests) {
+            mac_prefix[*ti] = Some(mac_frame_prefix_with(fields.len(), seq, d));
+        }
+        // Phase 3: queue per target in the original order.
+        for (ti, &to) in targets.iter().enumerate() {
+            if to == self.me {
+                continue;
+            }
+            let prefix = match mac_prefix[ti].take() {
+                Some(p) => p,
+                None => plain_frame_prefix(fields.len()),
+            };
+            self.queue_prefixed(to, prefix, fields, false);
+        }
+    }
+
+    /// Rejoin revival for a dead link: the link died with the peer's
+    /// first life; its scheduled rejoin is a fresh process (fresh
+    /// address, fresh reader), so the link state machine gets a fresh
+    /// start — and the new stream's MAC counter restarts from zero.
+    fn reset_rejoined_link(&mut self, to: PeerId, step: u64) {
+        if matches!(self.out[to], OutLink::Dead)
+            && self.rejoin_steps[to].map_or(false, |r| step >= r)
+        {
+            self.out[to] = OutLink::Absent;
+            if let Some(mac) = &mut self.mac_send[to] {
+                mac.next_seq = 0;
+            }
+        }
+    }
+
+    /// Tail of the frame-queueing path: dial bookkeeping, backlog
+    /// enforcement and stats, shared by the single-frame and broadcast
+    /// entry points.
+    fn queue_prefixed(&mut self, to: PeerId, prefix: Vec<u8>, fields: &[u8], is_relay: bool) {
         let frame_len = prefix.len() + fields.len();
         if matches!(self.out[to], OutLink::Absent) {
             // First frame to this peer: start the HELLO-prefixed dial.

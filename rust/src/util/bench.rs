@@ -359,11 +359,18 @@ pub struct BenchDelta {
     pub current: f64,
     /// current / base (f64::INFINITY when base is 0 and current isn't).
     pub ratio: f64,
+    /// True when this record's unit participates in the regression gate
+    /// (a lower-is-better unit, identical in both reports). Non-gated
+    /// records are advisory: shown in the summary, never blocking.
+    pub gated: bool,
 }
 
 /// Outcome of diffing a current report against a committed baseline.
 #[derive(Debug, Default)]
 pub struct BenchComparison {
+    /// Every record present in both reports, in current-report order
+    /// (the per-record table behind the classified buckets below).
+    pub deltas: Vec<BenchDelta>,
     /// Gated-unit records whose median grew past the tolerance band.
     pub regressions: Vec<BenchDelta>,
     /// Gated-unit records whose median shrank past the band.
@@ -386,6 +393,62 @@ impl BenchComparison {
     /// True when the comparison should fail a blocking CI gate.
     pub fn blocking_failure(&self) -> bool {
         !self.regressions.is_empty() && !self.provisional && !self.fingerprint_mismatch
+    }
+
+    /// Render the per-record comparison as a GitHub-flavored markdown
+    /// section (one table row per matched record, baseline/current/
+    /// delta, gated vs advisory) — the payload `btard bench-compare
+    /// --markdown` appends for `$GITHUB_STEP_SUMMARY`.
+    pub fn markdown(&self, title: &str, tolerance: f64) -> String {
+        let mut out = format!("### bench-compare: {title}\n\n");
+        if self.provisional {
+            out.push_str("> **Advisory** — baseline is provisional (hand-seeded, not measured on CI hardware); regressions cannot block.\n\n");
+        }
+        if self.fingerprint_mismatch {
+            out.push_str("> **Advisory** — config fingerprints differ; shapes are not comparable.\n\n");
+        }
+        out.push_str("| record | unit | baseline | current | delta | status |\n");
+        out.push_str("|---|---|---:|---:|---:|---|\n");
+        for d in &self.deltas {
+            let status = if !d.gated {
+                "advisory"
+            } else if d.ratio > 1.0 + tolerance {
+                "**REGRESSION**"
+            } else if d.ratio < 1.0 - tolerance {
+                "improved"
+            } else {
+                "gated, within band"
+            };
+            let pct = if d.ratio.is_finite() {
+                format!("{:+.1}%", (d.ratio - 1.0) * 100.0)
+            } else {
+                "n/a".to_string()
+            };
+            out.push_str(&format!(
+                "| `{}` | {} | {} | {} | {} | {} |\n",
+                d.name,
+                d.unit,
+                fmt_value(&d.unit, d.base),
+                fmt_value(&d.unit, d.current),
+                pct,
+                status,
+            ));
+        }
+        for name in &self.only_base {
+            out.push_str(&format!("| `{name}` | | (baseline only) | — | | advisory |\n"));
+        }
+        for name in &self.only_current {
+            out.push_str(&format!("| `{name}` | | — | (current only) | | advisory |\n"));
+        }
+        out.push_str(&format!(
+            "\n{} unchanged · {} regressed · {} improved · tolerance {:.0}% · verdict: **{}**\n\n",
+            self.unchanged,
+            self.regressions.len(),
+            self.improvements.len(),
+            tolerance * 100.0,
+            if self.blocking_failure() { "FAIL" } else { "OK" },
+        ));
+        out
     }
 }
 
@@ -454,7 +517,9 @@ pub fn compare_reports(
             base: base_median,
             current: *median,
             ratio,
+            gated,
         };
+        cmp.deltas.push(delta.clone());
         if gated && ratio > 1.0 + tolerance {
             cmp.regressions.push(delta);
         } else if gated && ratio < 1.0 - tolerance {
@@ -576,6 +641,26 @@ mod tests {
         assert!(!cmp.blocking_failure(), "mismatched shapes must not hard-fail");
         assert_eq!(cmp.only_current, vec!["brand_new".to_string()]);
         assert!(cmp.only_base.contains(&"step/verify".to_string()));
+    }
+
+    #[test]
+    fn markdown_summary_lists_every_record_and_the_verdict() {
+        let base = sample_report(10.0).to_json();
+        let cmp = compare_reports(&base, &sample_report(14.0).to_json(), 0.25).unwrap();
+        assert_eq!(cmp.deltas.len(), 3);
+        let md = cmp.markdown("unit", 0.25);
+        assert!(md.contains("### bench-compare: unit"));
+        assert!(md.contains("| `step/clip` |"), "{md}");
+        assert!(md.contains("**REGRESSION**"), "{md}");
+        assert!(md.contains("| `final_acc` |") && md.contains("advisory"), "{md}");
+        assert!(md.contains("verdict: **FAIL**"), "{md}");
+        // Provisional baselines render the advisory note and an OK verdict.
+        let Json::Obj(mut m) = base else { unreachable!() };
+        m.insert("provisional".into(), Json::Bool(true));
+        let cmp = compare_reports(&Json::Obj(m), &sample_report(14.0).to_json(), 0.25).unwrap();
+        let md = cmp.markdown("unit", 0.25);
+        assert!(md.contains("provisional"), "{md}");
+        assert!(md.contains("verdict: **OK**"), "{md}");
     }
 
     #[test]

@@ -1,0 +1,367 @@
+//! Optimizer elementwise-apply kernels (SGD momentum, LAMB moments).
+//!
+//! All loops here are elementwise over the parameter dimension:
+//! per-element f32 chains are independent, so 8 (AVX2) / 4 (SSE2)
+//! adjacent elements run in parallel lanes. Every intrinsic expression
+//! mirrors the scalar reference's operand order, with separate mul/add
+//! (never FMA) so each lane rounds exactly like the scalar loop. The
+//! LAMB trust-ratio norms stay scalar in the optimizer — a norm is a
+//! single sequential reduction chain whose order must not change.
+
+use super::Level;
+
+/// SGD-with-momentum fused update, the scalar reference:
+///
+/// ```text
+/// g        = grad[i] + weight_decay * params[i]
+/// vel[i]   = momentum * vel[i] + g
+/// update   = nesterov ? g + momentum * vel[i] : vel[i]
+/// params[i] -= lr * update
+/// ```
+#[allow(clippy::too_many_arguments)]
+pub fn sgd_apply(
+    level: Level,
+    params: &mut [f32],
+    velocity: &mut [f32],
+    grad: &[f32],
+    lr: f32,
+    momentum: f32,
+    weight_decay: f32,
+    nesterov: bool,
+) {
+    debug_assert_eq!(params.len(), grad.len());
+    debug_assert_eq!(params.len(), velocity.len());
+    match level {
+        Level::Scalar => {
+            sgd_apply_scalar(params, velocity, grad, 0, lr, momentum, weight_decay, nesterov)
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the dispatcher only hands out levels the CPU supports.
+        Level::Sse2 => unsafe {
+            sgd_apply_sse2(params, velocity, grad, lr, momentum, weight_decay, nesterov)
+        },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe {
+            sgd_apply_avx2(params, velocity, grad, lr, momentum, weight_decay, nesterov)
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => sgd_apply_scalar(params, velocity, grad, 0, lr, momentum, weight_decay, nesterov),
+    }
+}
+
+/// LAMB per-segment Adam moments + raw update, the scalar reference
+/// (slices are the segment's window, `update` is segment-local):
+///
+/// ```text
+/// m[k]      = beta1 * m[k] + (1 - beta1) * grad[k]
+/// v[k]      = beta2 * v[k] + (1 - beta2) * grad[k] * grad[k]
+/// update[k] = (m[k]/bc1) / (sqrt(v[k]/bc2) + eps) + weight_decay * params[k]
+/// ```
+#[allow(clippy::too_many_arguments)]
+pub fn lamb_moments(
+    level: Level,
+    m: &mut [f32],
+    v: &mut [f32],
+    grad: &[f32],
+    params: &[f32],
+    update: &mut [f32],
+    beta1: f32,
+    beta2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+    weight_decay: f32,
+) {
+    debug_assert_eq!(m.len(), update.len());
+    debug_assert_eq!(v.len(), update.len());
+    debug_assert_eq!(grad.len(), update.len());
+    debug_assert_eq!(params.len(), update.len());
+    match level {
+        Level::Scalar => {
+            lamb_moments_scalar(m, v, grad, params, update, 0, beta1, beta2, bc1, bc2, eps, weight_decay)
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the dispatcher only hands out levels the CPU supports.
+        Level::Sse2 => unsafe {
+            lamb_moments_sse2(m, v, grad, params, update, beta1, beta2, bc1, bc2, eps, weight_decay)
+        },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe {
+            lamb_moments_avx2(m, v, grad, params, update, beta1, beta2, bc1, bc2, eps, weight_decay)
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => lamb_moments_scalar(m, v, grad, params, update, 0, beta1, beta2, bc1, bc2, eps, weight_decay),
+    }
+}
+
+/// `params[k] -= scale * update[k]` — the LAMB apply step with the
+/// caller's pre-rounded `scale = lr * trust` (the scalar reference
+/// evaluates `lr * trust * u` left-to-right, so rounding `lr * trust`
+/// first is the identical chain).
+pub fn scaled_sub(level: Level, params: &mut [f32], update: &[f32], scale: f32) {
+    debug_assert_eq!(params.len(), update.len());
+    match level {
+        Level::Scalar => scaled_sub_scalar(params, update, 0, scale),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the dispatcher only hands out levels the CPU supports.
+        Level::Sse2 => unsafe { scaled_sub_sse2(params, update, scale) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { scaled_sub_avx2(params, update, scale) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scaled_sub_scalar(params, update, 0, scale),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar references (also the SIMD tails, via `from`)
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn sgd_apply_scalar(
+    params: &mut [f32],
+    velocity: &mut [f32],
+    grad: &[f32],
+    from: usize,
+    lr: f32,
+    momentum: f32,
+    weight_decay: f32,
+    nesterov: bool,
+) {
+    for i in from..params.len() {
+        let g = grad[i] + weight_decay * params[i];
+        velocity[i] = momentum * velocity[i] + g;
+        let update = if nesterov { g + momentum * velocity[i] } else { velocity[i] };
+        params[i] -= lr * update;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lamb_moments_scalar(
+    m: &mut [f32],
+    v: &mut [f32],
+    grad: &[f32],
+    params: &[f32],
+    update: &mut [f32],
+    from: usize,
+    beta1: f32,
+    beta2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+    weight_decay: f32,
+) {
+    for k in from..update.len() {
+        m[k] = beta1 * m[k] + (1.0 - beta1) * grad[k];
+        v[k] = beta2 * v[k] + (1.0 - beta2) * grad[k] * grad[k];
+        let mh = m[k] / bc1;
+        let vh = v[k] / bc2;
+        update[k] = mh / (vh.sqrt() + eps) + weight_decay * params[k];
+    }
+}
+
+fn scaled_sub_scalar(params: &mut [f32], update: &[f32], from: usize, scale: f32) {
+    for k in from..params.len() {
+        params[k] -= scale * update[k];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86_64 implementations
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn sgd_apply_avx2(
+    params: &mut [f32],
+    velocity: &mut [f32],
+    grad: &[f32],
+    lr: f32,
+    momentum: f32,
+    weight_decay: f32,
+    nesterov: bool,
+) {
+    let n = params.len();
+    let lr_v = _mm256_set1_ps(lr);
+    let m_v = _mm256_set1_ps(momentum);
+    let wd_v = _mm256_set1_ps(weight_decay);
+    let mut i = 0;
+    while i + 8 <= n {
+        let pv = _mm256_loadu_ps(params.as_ptr().add(i));
+        let gv = _mm256_loadu_ps(grad.as_ptr().add(i));
+        let vel0 = _mm256_loadu_ps(velocity.as_ptr().add(i));
+        let g = _mm256_add_ps(gv, _mm256_mul_ps(wd_v, pv));
+        let vel = _mm256_add_ps(_mm256_mul_ps(m_v, vel0), g);
+        let update = if nesterov { _mm256_add_ps(g, _mm256_mul_ps(m_v, vel)) } else { vel };
+        let pv = _mm256_sub_ps(pv, _mm256_mul_ps(lr_v, update));
+        _mm256_storeu_ps(velocity.as_mut_ptr().add(i), vel);
+        _mm256_storeu_ps(params.as_mut_ptr().add(i), pv);
+        i += 8;
+    }
+    sgd_apply_scalar(params, velocity, grad, i, lr, momentum, weight_decay, nesterov);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn sgd_apply_sse2(
+    params: &mut [f32],
+    velocity: &mut [f32],
+    grad: &[f32],
+    lr: f32,
+    momentum: f32,
+    weight_decay: f32,
+    nesterov: bool,
+) {
+    let n = params.len();
+    let lr_v = _mm_set1_ps(lr);
+    let m_v = _mm_set1_ps(momentum);
+    let wd_v = _mm_set1_ps(weight_decay);
+    let mut i = 0;
+    while i + 4 <= n {
+        let pv = _mm_loadu_ps(params.as_ptr().add(i));
+        let gv = _mm_loadu_ps(grad.as_ptr().add(i));
+        let vel0 = _mm_loadu_ps(velocity.as_ptr().add(i));
+        let g = _mm_add_ps(gv, _mm_mul_ps(wd_v, pv));
+        let vel = _mm_add_ps(_mm_mul_ps(m_v, vel0), g);
+        let update = if nesterov { _mm_add_ps(g, _mm_mul_ps(m_v, vel)) } else { vel };
+        let pv = _mm_sub_ps(pv, _mm_mul_ps(lr_v, update));
+        _mm_storeu_ps(velocity.as_mut_ptr().add(i), vel);
+        _mm_storeu_ps(params.as_mut_ptr().add(i), pv);
+        i += 4;
+    }
+    sgd_apply_scalar(params, velocity, grad, i, lr, momentum, weight_decay, nesterov);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn lamb_moments_avx2(
+    m: &mut [f32],
+    v: &mut [f32],
+    grad: &[f32],
+    params: &[f32],
+    update: &mut [f32],
+    beta1: f32,
+    beta2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+    weight_decay: f32,
+) {
+    let n = update.len();
+    let b1 = _mm256_set1_ps(beta1);
+    let b2 = _mm256_set1_ps(beta2);
+    // 1-β rounds once up front; the scalar loop's `(1.0 - beta)` is the
+    // same f32 constant every iteration.
+    let omb1 = _mm256_set1_ps(1.0 - beta1);
+    let omb2 = _mm256_set1_ps(1.0 - beta2);
+    let bc1_v = _mm256_set1_ps(bc1);
+    let bc2_v = _mm256_set1_ps(bc2);
+    let eps_v = _mm256_set1_ps(eps);
+    let wd_v = _mm256_set1_ps(weight_decay);
+    let mut k = 0;
+    while k + 8 <= n {
+        let gv = _mm256_loadu_ps(grad.as_ptr().add(k));
+        let pv = _mm256_loadu_ps(params.as_ptr().add(k));
+        let mv = _mm256_add_ps(
+            _mm256_mul_ps(b1, _mm256_loadu_ps(m.as_ptr().add(k))),
+            _mm256_mul_ps(omb1, gv),
+        );
+        let vv = _mm256_add_ps(
+            _mm256_mul_ps(b2, _mm256_loadu_ps(v.as_ptr().add(k))),
+            _mm256_mul_ps(_mm256_mul_ps(omb2, gv), gv),
+        );
+        let mh = _mm256_div_ps(mv, bc1_v);
+        let vh = _mm256_div_ps(vv, bc2_v);
+        let denom = _mm256_add_ps(_mm256_sqrt_ps(vh), eps_v);
+        let upd = _mm256_add_ps(_mm256_div_ps(mh, denom), _mm256_mul_ps(wd_v, pv));
+        _mm256_storeu_ps(m.as_mut_ptr().add(k), mv);
+        _mm256_storeu_ps(v.as_mut_ptr().add(k), vv);
+        _mm256_storeu_ps(update.as_mut_ptr().add(k), upd);
+        k += 8;
+    }
+    lamb_moments_scalar(m, v, grad, params, update, k, beta1, beta2, bc1, bc2, eps, weight_decay);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn lamb_moments_sse2(
+    m: &mut [f32],
+    v: &mut [f32],
+    grad: &[f32],
+    params: &[f32],
+    update: &mut [f32],
+    beta1: f32,
+    beta2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+    weight_decay: f32,
+) {
+    let n = update.len();
+    let b1 = _mm_set1_ps(beta1);
+    let b2 = _mm_set1_ps(beta2);
+    let omb1 = _mm_set1_ps(1.0 - beta1);
+    let omb2 = _mm_set1_ps(1.0 - beta2);
+    let bc1_v = _mm_set1_ps(bc1);
+    let bc2_v = _mm_set1_ps(bc2);
+    let eps_v = _mm_set1_ps(eps);
+    let wd_v = _mm_set1_ps(weight_decay);
+    let mut k = 0;
+    while k + 4 <= n {
+        let gv = _mm_loadu_ps(grad.as_ptr().add(k));
+        let pv = _mm_loadu_ps(params.as_ptr().add(k));
+        let mv = _mm_add_ps(
+            _mm_mul_ps(b1, _mm_loadu_ps(m.as_ptr().add(k))),
+            _mm_mul_ps(omb1, gv),
+        );
+        let vv = _mm_add_ps(
+            _mm_mul_ps(b2, _mm_loadu_ps(v.as_ptr().add(k))),
+            _mm_mul_ps(_mm_mul_ps(omb2, gv), gv),
+        );
+        let mh = _mm_div_ps(mv, bc1_v);
+        let vh = _mm_div_ps(vv, bc2_v);
+        let denom = _mm_add_ps(_mm_sqrt_ps(vh), eps_v);
+        let upd = _mm_add_ps(_mm_div_ps(mh, denom), _mm_mul_ps(wd_v, pv));
+        _mm_storeu_ps(m.as_mut_ptr().add(k), mv);
+        _mm_storeu_ps(v.as_mut_ptr().add(k), vv);
+        _mm_storeu_ps(update.as_mut_ptr().add(k), upd);
+        k += 4;
+    }
+    lamb_moments_scalar(m, v, grad, params, update, k, beta1, beta2, bc1, bc2, eps, weight_decay);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scaled_sub_avx2(params: &mut [f32], update: &[f32], scale: f32) {
+    let n = params.len();
+    let s_v = _mm256_set1_ps(scale);
+    let mut k = 0;
+    while k + 8 <= n {
+        let pv = _mm256_loadu_ps(params.as_ptr().add(k));
+        let uv = _mm256_loadu_ps(update.as_ptr().add(k));
+        _mm256_storeu_ps(params.as_mut_ptr().add(k), _mm256_sub_ps(pv, _mm256_mul_ps(s_v, uv)));
+        k += 8;
+    }
+    scaled_sub_scalar(params, update, k, scale);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn scaled_sub_sse2(params: &mut [f32], update: &[f32], scale: f32) {
+    let n = params.len();
+    let s_v = _mm_set1_ps(scale);
+    let mut k = 0;
+    while k + 4 <= n {
+        let pv = _mm_loadu_ps(params.as_ptr().add(k));
+        let uv = _mm_loadu_ps(update.as_ptr().add(k));
+        _mm_storeu_ps(params.as_mut_ptr().add(k), _mm_sub_ps(pv, _mm_mul_ps(s_v, uv)));
+        k += 4;
+    }
+    scaled_sub_scalar(params, update, k, scale);
+}

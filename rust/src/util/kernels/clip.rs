@@ -1,0 +1,263 @@
+//! CenteredClip pass A / pass B kernels.
+//!
+//! Pass A (row norms) vectorizes **across rows**: 4 (AVX2) or 2 (SSE2)
+//! f64 lanes, each carrying one row's sequential `Σ (xᵢⱼ − vⱼ)²`
+//! accumulation chain in ascending-j order — exactly the scalar chain,
+//! lane by lane. Elements are loaded four at a time and transposed so
+//! every lane still consumes its row's elements in order.
+//!
+//! Pass B (delta) vectorizes **across dimension elements**: per-element
+//! f32 chains `Δⱼ += (x_ij − vⱼ)·wᵢ` over rows i in 0..n order are
+//! independent, so 8 (AVX2) or 4 (SSE2) adjacent elements run in
+//! parallel lanes, rows iterated innermost in the same order as the
+//! scalar loop.
+//!
+//! No FMA anywhere: the scalar reference rounds the multiply before the
+//! add, so the kernels use separate mul/add intrinsics.
+
+use super::Level;
+
+/// One row's ‖x − v‖² — the sequential f64 chain of the scalar loop.
+/// This is the canonical scalar reference; the SIMD paths replay it
+/// lane-parallel.
+#[inline]
+pub fn row_norm_sq_scalar(row: &[f32], v: &[f32]) -> f64 {
+    let mut norm_sq = 0.0f64;
+    for (xi, vi) in row.iter().zip(v) {
+        let d = xi - vi;
+        norm_sq += d as f64 * d as f64;
+    }
+    norm_sq
+}
+
+/// Pass A: `out[i] = ‖rows[i] − v‖²` for every row, at `level`.
+pub fn row_norms_sq(level: Level, rows: &[&[f32]], v: &[f32], out: &mut [f64]) {
+    debug_assert_eq!(rows.len(), out.len());
+    debug_assert!(rows.iter().all(|r| r.len() == v.len()));
+    match level {
+        Level::Scalar => {
+            for (o, r) in out.iter_mut().zip(rows) {
+                *o = row_norm_sq_scalar(r, v);
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the dispatcher only hands out levels the CPU supports.
+        Level::Sse2 => unsafe { row_norms_sq_sse2(rows, v, out) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { row_norms_sq_avx2(rows, v, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => {
+            for (o, r) in out.iter_mut().zip(rows) {
+                *o = row_norm_sq_scalar(r, v);
+            }
+        }
+    }
+}
+
+/// Pass B scalar reference: `dchunk[j] = Σᵢ (rows[i][off+j] − v[off+j])·wᵢ`
+/// with rows outer — the exact per-element chain of the pre-SIMD loop.
+fn delta_chunk_scalar(rows: &[&[f32]], v: &[f32], weights: &[f32], dchunk: &mut [f32], off: usize) {
+    dchunk.iter_mut().for_each(|d| *d = 0.0);
+    let hi = off + dchunk.len();
+    for (r, &w) in rows.iter().zip(weights) {
+        for ((di, xi), vi) in dchunk.iter_mut().zip(&r[off..hi]).zip(&v[off..hi]) {
+            *di += (xi - vi) * w;
+        }
+    }
+}
+
+/// Pass B: one dimension chunk of the delta reduction, at `level`.
+pub fn delta_chunk(
+    level: Level,
+    rows: &[&[f32]],
+    v: &[f32],
+    weights: &[f32],
+    dchunk: &mut [f32],
+    off: usize,
+) {
+    debug_assert_eq!(rows.len(), weights.len());
+    debug_assert!(off + dchunk.len() <= v.len());
+    debug_assert!(rows.iter().all(|r| r.len() == v.len()));
+    match level {
+        Level::Scalar => delta_chunk_scalar(rows, v, weights, dchunk, off),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the dispatcher only hands out levels the CPU supports.
+        Level::Sse2 => unsafe { delta_chunk_sse2(rows, v, weights, dchunk, off) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { delta_chunk_avx2(rows, v, weights, dchunk, off) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => delta_chunk_scalar(rows, v, weights, dchunk, off),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86_64 implementations
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Pass A, AVX2: four rows per iteration. Four consecutive f32 diffs
+/// per row are transposed 4×4 so each per-j vector holds one element
+/// from each of the four rows; converting to f64 and accumulating in
+/// ascending j keeps every lane's chain in scalar order.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn row_norms_sq_avx2(rows: &[&[f32]], v: &[f32], out: &mut [f64]) {
+    let p = v.len();
+    let mut i = 0;
+    while i + 4 <= rows.len() {
+        let (r0, r1, r2, r3) = (rows[i], rows[i + 1], rows[i + 2], rows[i + 3]);
+        let mut acc = _mm256_setzero_pd();
+        let mut j = 0;
+        while j + 4 <= p {
+            let vv = _mm_loadu_ps(v.as_ptr().add(j));
+            let d0 = _mm_sub_ps(_mm_loadu_ps(r0.as_ptr().add(j)), vv);
+            let d1 = _mm_sub_ps(_mm_loadu_ps(r1.as_ptr().add(j)), vv);
+            let d2 = _mm_sub_ps(_mm_loadu_ps(r2.as_ptr().add(j)), vv);
+            let d3 = _mm_sub_ps(_mm_loadu_ps(r3.as_ptr().add(j)), vv);
+            // 4×4 transpose: t_k = [d0[k], d1[k], d2[k], d3[k]].
+            let lo01 = _mm_unpacklo_ps(d0, d1);
+            let lo23 = _mm_unpacklo_ps(d2, d3);
+            let hi01 = _mm_unpackhi_ps(d0, d1);
+            let hi23 = _mm_unpackhi_ps(d2, d3);
+            let t0 = _mm_movelh_ps(lo01, lo23);
+            let t1 = _mm_movehl_ps(lo23, lo01);
+            let t2 = _mm_movelh_ps(hi01, hi23);
+            let t3 = _mm_movehl_ps(hi23, hi01);
+            for t in [t0, t1, t2, t3] {
+                let pd = _mm256_cvtps_pd(t);
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(pd, pd));
+            }
+            j += 4;
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        // Tail elements continue each lane's chain in element order.
+        for (k, r) in [r0, r1, r2, r3].iter().enumerate() {
+            let mut s = lanes[k];
+            for jj in j..p {
+                let d = r[jj] - v[jj];
+                s += d as f64 * d as f64;
+            }
+            out[i + k] = s;
+        }
+        i += 4;
+    }
+    for k in i..rows.len() {
+        out[k] = row_norm_sq_scalar(rows[k], v);
+    }
+}
+
+/// Pass A, SSE2: two rows per iteration, same transpose-and-widen
+/// scheme over `__m128d` pairs.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn row_norms_sq_sse2(rows: &[&[f32]], v: &[f32], out: &mut [f64]) {
+    let p = v.len();
+    let mut i = 0;
+    while i + 2 <= rows.len() {
+        let (r0, r1) = (rows[i], rows[i + 1]);
+        let mut acc = _mm_setzero_pd();
+        let mut j = 0;
+        while j + 4 <= p {
+            let vv = _mm_loadu_ps(v.as_ptr().add(j));
+            let d0 = _mm_sub_ps(_mm_loadu_ps(r0.as_ptr().add(j)), vv);
+            let d1 = _mm_sub_ps(_mm_loadu_ps(r1.as_ptr().add(j)), vv);
+            let lo = _mm_unpacklo_ps(d0, d1); // [d0_0, d1_0, d0_1, d1_1]
+            let hi = _mm_unpackhi_ps(d0, d1); // [d0_2, d1_2, d0_3, d1_3]
+            for pair in [lo, _mm_movehl_ps(lo, lo), hi, _mm_movehl_ps(hi, hi)] {
+                let pd = _mm_cvtps_pd(pair);
+                acc = _mm_add_pd(acc, _mm_mul_pd(pd, pd));
+            }
+            j += 4;
+        }
+        let mut lanes = [0.0f64; 2];
+        _mm_storeu_pd(lanes.as_mut_ptr(), acc);
+        for (k, r) in [r0, r1].iter().enumerate() {
+            let mut s = lanes[k];
+            for jj in j..p {
+                let d = r[jj] - v[jj];
+                s += d as f64 * d as f64;
+            }
+            out[i + k] = s;
+        }
+        i += 2;
+    }
+    for k in i..rows.len() {
+        out[k] = row_norm_sq_scalar(rows[k], v);
+    }
+}
+
+/// Pass B, AVX2: 8 elements per lane group, rows innermost in 0..n
+/// order; the accumulator lives in a register and is stored once.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn delta_chunk_avx2(
+    rows: &[&[f32]],
+    v: &[f32],
+    weights: &[f32],
+    dchunk: &mut [f32],
+    off: usize,
+) {
+    let len = dchunk.len();
+    let mut j = 0;
+    while j + 8 <= len {
+        let vv = _mm256_loadu_ps(v.as_ptr().add(off + j));
+        let mut acc = _mm256_setzero_ps();
+        for (r, &w) in rows.iter().zip(weights) {
+            let x = _mm256_loadu_ps(r.as_ptr().add(off + j));
+            let wv = _mm256_set1_ps(w);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_sub_ps(x, vv), wv));
+        }
+        _mm256_storeu_ps(dchunk.as_mut_ptr().add(j), acc);
+        j += 8;
+    }
+    delta_tail(rows, v, weights, dchunk, off, j);
+}
+
+/// Pass B, SSE2: 4 elements per lane group.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn delta_chunk_sse2(
+    rows: &[&[f32]],
+    v: &[f32],
+    weights: &[f32],
+    dchunk: &mut [f32],
+    off: usize,
+) {
+    let len = dchunk.len();
+    let mut j = 0;
+    while j + 4 <= len {
+        let vv = _mm_loadu_ps(v.as_ptr().add(off + j));
+        let mut acc = _mm_setzero_ps();
+        for (r, &w) in rows.iter().zip(weights) {
+            let x = _mm_loadu_ps(r.as_ptr().add(off + j));
+            let wv = _mm_set1_ps(w);
+            acc = _mm_add_ps(acc, _mm_mul_ps(_mm_sub_ps(x, vv), wv));
+        }
+        _mm_storeu_ps(dchunk.as_mut_ptr().add(j), acc);
+        j += 4;
+    }
+    delta_tail(rows, v, weights, dchunk, off, j);
+}
+
+/// Scalar tail for pass B: elements `from..` of the chunk, per-element
+/// chains in the same row order.
+#[cfg(target_arch = "x86_64")]
+fn delta_tail(
+    rows: &[&[f32]],
+    v: &[f32],
+    weights: &[f32],
+    dchunk: &mut [f32],
+    off: usize,
+    from: usize,
+) {
+    for jj in from..dchunk.len() {
+        let mut d = 0.0f32;
+        for (r, &w) in rows.iter().zip(weights) {
+            d += (r[off + jj] - v[off + jj]) * w;
+        }
+        dchunk[jj] = d;
+    }
+}

@@ -1,0 +1,205 @@
+//! Runtime-dispatched SIMD vector kernels for the compute hot loops.
+//!
+//! The per-step wall clock of a BTARD run is dominated by local
+//! arithmetic — the CenteredClip iteration, the optimizer's elementwise
+//! apply, and the SHA-256 that seals every commitment and session-MAC
+//! frame. This module is the one place that arithmetic is vectorized:
+//! AVX2 and SSE2 paths via `core::arch::x86_64`, selected at runtime
+//! with `is_x86_feature_detected!`, with a portable scalar fallback
+//! that *is* the pre-SIMD reference code.
+//!
+//! ## Bit-exactness contract
+//!
+//! Every kernel produces **exactly** the bits of its scalar reference,
+//! at every dispatch level, by construction — no float reduction is
+//! ever reordered and no FMA contraction is introduced (Rust's scalar
+//! `a * b + c` rounds twice; the kernels use separate mul/add
+//! intrinsics to round identically):
+//!
+//! - **CenteredClip pass A** (row norms) vectorizes *across rows*: each
+//!   SIMD lane carries one row's sequential f64 accumulation chain, in
+//!   the same element order as the scalar loop.
+//! - **CenteredClip pass B** (delta) and the optimizer apply loops
+//!   vectorize *across dimension elements*: per-element f32 chains are
+//!   independent, and each lane replays its element's scalar chain in
+//!   the same row/step order.
+//! - **SHA-256** gets a multi-buffer path (4-way SSE2 / 8-way AVX2):
+//!   one message per 32-bit lane, exact integer math — trivially
+//!   identical to the scalar compression.
+//!
+//! Because of this contract, kernel selection is pure *compute* state:
+//! peers running at different levels produce bit-identical digests (the
+//! mixed-level cluster-smoke CI cell proves it over a real socket
+//! mesh), and no golden digest ever needs re-blessing when the dispatch
+//! changes.
+//!
+//! ## Selection
+//!
+//! `BTARD_KERNELS={auto,scalar,sse2,avx2}` overrides autodetection
+//! (`auto` and unset mean "best available"). Forcing a level the CPU
+//! cannot run panics loudly instead of faulting later. Tests force
+//! levels in-process with [`with_forced_level`], which serializes
+//! against other forcing tests and restores the override on exit.
+
+pub mod apply;
+pub mod clip;
+pub mod sha256_mb;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// A dispatch level, ordered by capability.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Scalar = 0,
+    Sse2 = 1,
+    Avx2 = 2,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Sse2 => "sse2",
+            Level::Avx2 => "avx2",
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Scalar,
+            1 => Level::Sse2,
+            _ => Level::Avx2,
+        }
+    }
+
+    /// Every level this machine can actually run, weakest first. The
+    /// bit-identity tests sweep exactly this list — forcing an
+    /// unavailable level is a panic, never a silently skipped case.
+    pub fn available() -> Vec<Level> {
+        let mut out = vec![Level::Scalar];
+        let best = detect();
+        if best >= Level::Sse2 {
+            out.push(Level::Sse2);
+        }
+        if best >= Level::Avx2 {
+            out.push(Level::Avx2);
+        }
+        out
+    }
+}
+
+/// Best level the CPU supports. SSE2 is baseline on x86_64 but the
+/// detection is still explicit — the kernels must never assume a
+/// feature the dispatcher did not verify.
+fn detect() -> Level {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Level::Avx2;
+        }
+        if std::arch::is_x86_feature_detected!("sse2") {
+            return Level::Sse2;
+        }
+    }
+    Level::Scalar
+}
+
+/// The env-or-detected level, resolved once per process.
+fn env_level() -> Level {
+    static CACHED: OnceLock<Level> = OnceLock::new();
+    *CACHED.get_or_init(|| match std::env::var("BTARD_KERNELS") {
+        Err(_) => detect(),
+        Ok(raw) => {
+            let s = raw.trim().to_ascii_lowercase();
+            if s.is_empty() || s == "auto" {
+                return detect();
+            }
+            let lvl = match s.as_str() {
+                "scalar" => Level::Scalar,
+                "sse2" => Level::Sse2,
+                "avx2" => Level::Avx2,
+                other => panic!("BTARD_KERNELS expects auto|scalar|sse2|avx2, got '{other}'"),
+            };
+            let best = detect();
+            assert!(
+                lvl <= best,
+                "BTARD_KERNELS={} but this CPU only supports {} — refusing to \
+                 dispatch instructions the hardware cannot run",
+                lvl.name(),
+                best.name()
+            );
+            lvl
+        }
+    })
+}
+
+/// Test-only forced override: 0 = none, else `Level as u8 + 1`.
+static FORCED: AtomicU8 = AtomicU8::new(0);
+
+/// The level every kernel dispatches at right now.
+#[inline]
+pub fn level() -> Level {
+    match FORCED.load(Ordering::Relaxed) {
+        0 => env_level(),
+        n => Level::from_u8(n - 1),
+    }
+}
+
+/// Run `f` with the dispatch level forced to `level`, restoring the
+/// previous state afterwards (also on panic). Forcing tests serialize
+/// on an internal mutex; concurrently running *non*-forcing tests may
+/// observe the override, which is harmless precisely because every
+/// level is bit-identical.
+pub fn with_forced_level<T>(level: Level, f: impl FnOnce() -> T) -> T {
+    static GUARD: Mutex<()> = Mutex::new(());
+    assert!(
+        Level::available().contains(&level),
+        "cannot force kernel level {} on this machine",
+        level.name()
+    );
+    let _serialize = GUARD.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+    struct Reset;
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            FORCED.store(0, Ordering::Relaxed);
+        }
+    }
+    let _reset = Reset;
+    FORCED.store(level as u8 + 1, Ordering::Relaxed);
+    f()
+}
+
+/// Row-group width of the widest pass-A kernel: pool jobs aligned to
+/// this many rows hand every worker full SIMD row groups (the last job
+/// keeps the remainder).
+pub const ROW_BLOCK: usize = 4;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_always_available_and_ordered() {
+        let levels = Level::available();
+        assert_eq!(levels[0], Level::Scalar);
+        for w in levels.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!(levels.contains(&level()));
+    }
+
+    #[test]
+    fn forcing_restores_on_exit_and_panic() {
+        let ambient = level();
+        with_forced_level(Level::Scalar, || {
+            assert_eq!(level(), Level::Scalar);
+        });
+        assert_eq!(level(), ambient);
+        let caught = std::panic::catch_unwind(|| {
+            with_forced_level(Level::Scalar, || panic!("boom"));
+        });
+        assert!(caught.is_err());
+        assert_eq!(level(), ambient);
+    }
+}

@@ -1,0 +1,307 @@
+//! Multi-buffer SHA-256: 4-way (SSE2) / 8-way (AVX2) compression.
+//!
+//! SHA-256 is pure 32-bit integer math, so a lane-per-message layout is
+//! trivially bit-identical to the scalar compression: each 32-bit SIMD
+//! lane runs one whole message's state chain, and no two messages ever
+//! interact. Messages are pre-padded by the caller ([`pad_parts`]),
+//! bucketed by padded block count so every lane in a group performs the
+//! same number of compressions, and partial lane groups duplicate the
+//! group's first message into the surplus lanes (wasted lanes, same
+//! control flow). A singleton group falls back to [`digest_padded`].
+//!
+//! Callers go through the batch wrappers in `crypto::sha256`
+//! (`sha256_batch`, `sha256_batch_parts`, `sha256_batch_f32`,
+//! `hmac_sha256_batch`) rather than this module directly.
+
+use super::Level;
+use crate::crypto::sha256::{compress_block, H0, K};
+use std::collections::BTreeMap;
+
+/// FIPS 180-4 padding for a message given as concatenated parts:
+/// `0x80`, zeros to 56 mod 64, then the 8-byte big-endian bit length.
+/// The result is always ≥ 1 full 64-byte block.
+pub fn pad_parts(parts: &[&[u8]]) -> Vec<u8> {
+    let len: usize = parts.iter().map(|p| p.len()).sum();
+    let bit_len = (len as u64).wrapping_mul(8);
+    let padded_len = (len + 9).div_ceil(64) * 64;
+    let mut out = Vec::with_capacity(padded_len);
+    for p in parts {
+        out.extend_from_slice(p);
+    }
+    out.push(0x80);
+    out.resize(padded_len - 8, 0);
+    out.extend_from_slice(&bit_len.to_be_bytes());
+    out
+}
+
+/// Scalar digest of a pre-padded message — the reference every SIMD
+/// lane must reproduce, and the singleton-group fallback.
+pub fn digest_padded(msg: &[u8]) -> [u8; 32] {
+    debug_assert!(!msg.is_empty() && msg.len() % 64 == 0);
+    let mut h = H0;
+    for block in msg.chunks_exact(64) {
+        compress_block(&mut h, block.try_into().unwrap());
+    }
+    let mut out = [0u8; 32];
+    for (i, w) in h.iter().enumerate() {
+        out[i * 4..(i + 1) * 4].copy_from_slice(&w.to_be_bytes());
+    }
+    out
+}
+
+/// Digest every pre-padded message at `level`; output order matches
+/// input order regardless of bucketing.
+pub fn digest_batch_padded(level: Level, msgs: &[Vec<u8>]) -> Vec<[u8; 32]> {
+    let mut out = vec![[0u8; 32]; msgs.len()];
+    let lanes = match level {
+        Level::Scalar => 1usize,
+        Level::Sse2 => 4,
+        Level::Avx2 => 8,
+    };
+    if lanes == 1 || msgs.len() == 1 {
+        for (o, m) in out.iter_mut().zip(msgs) {
+            *o = digest_padded(m);
+        }
+        return out;
+    }
+    // Bucket message indices by block count: lanes of one group must
+    // run the same number of compressions.
+    let mut buckets: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, m) in msgs.iter().enumerate() {
+        debug_assert!(!m.is_empty() && m.len() % 64 == 0);
+        buckets.entry(m.len() / 64).or_default().push(i);
+    }
+    for idxs in buckets.values() {
+        let mut k = 0;
+        while k < idxs.len() {
+            let group = &idxs[k..(k + lanes).min(idxs.len())];
+            k += group.len();
+            if group.len() == 1 {
+                out[group[0]] = digest_padded(&msgs[group[0]]);
+                continue;
+            }
+            match level {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: the dispatcher only hands out levels the CPU
+                // supports.
+                Level::Sse2 => unsafe { digest_x4_sse2(msgs, group, &mut out) },
+                #[cfg(target_arch = "x86_64")]
+                Level::Avx2 => unsafe { digest_x8_avx2(msgs, group, &mut out) },
+                _ => {
+                    for &i in group {
+                        out[i] = digest_padded(&msgs[i]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// x86_64 implementations
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Generates an N-lane compression function. Rotations are written
+/// inline as `(x >> r) | (x << (32-r))` with literal shift counts —
+/// srl/sll with an out-of-range count would zero the register, so both
+/// complements are spelled per rotation. All adds are the wrapping
+/// `add_epi32`; SHA-256 needs nothing else.
+#[cfg(target_arch = "x86_64")]
+macro_rules! mb_compress {
+    (
+        $name:ident, $feature:literal, $lanes:expr,
+        $set1:ident, $loadu:ident, $store:ident,
+        $add:ident, $and:ident, $or:ident, $xor:ident, $andnot:ident,
+        $sll:ident, $srl:ident
+    ) => {
+        #[target_feature(enable = $feature)]
+        unsafe fn $name(msgs: &[Vec<u8>], group: &[usize], out: &mut [[u8; 32]]) {
+            debug_assert!(group.len() >= 2 && group.len() <= $lanes);
+            // Lane l carries message group[l]; surplus lanes replay the
+            // group's first message.
+            let mut idx = [group[0]; $lanes];
+            idx[..group.len()].copy_from_slice(group);
+            let blocks = msgs[group[0]].len() / 64;
+            debug_assert!(group.iter().all(|&g| msgs[g].len() == blocks * 64));
+
+            let mut h = [
+                $set1(H0[0] as i32),
+                $set1(H0[1] as i32),
+                $set1(H0[2] as i32),
+                $set1(H0[3] as i32),
+                $set1(H0[4] as i32),
+                $set1(H0[5] as i32),
+                $set1(H0[6] as i32),
+                $set1(H0[7] as i32),
+            ];
+            for blk in 0..blocks {
+                // Gather the 16 message words: lane l takes message
+                // idx[l]'s big-endian word i of block blk.
+                let mut w = [$set1(0); 64];
+                for i in 0..16 {
+                    let off = blk * 64 + i * 4;
+                    let mut lane_words = [0i32; $lanes];
+                    for (lw, &mi) in lane_words.iter_mut().zip(&idx) {
+                        let m = &msgs[mi];
+                        *lw = u32::from_be_bytes([m[off], m[off + 1], m[off + 2], m[off + 3]])
+                            as i32;
+                    }
+                    w[i] = $loadu(lane_words.as_ptr() as *const _);
+                }
+                for i in 16..64 {
+                    let x15 = w[i - 15];
+                    let s0 = $xor(
+                        $xor(
+                            $or($srl::<7>(x15), $sll::<25>(x15)),
+                            $or($srl::<18>(x15), $sll::<14>(x15)),
+                        ),
+                        $srl::<3>(x15),
+                    );
+                    let x2 = w[i - 2];
+                    let s1 = $xor(
+                        $xor(
+                            $or($srl::<17>(x2), $sll::<15>(x2)),
+                            $or($srl::<19>(x2), $sll::<13>(x2)),
+                        ),
+                        $srl::<10>(x2),
+                    );
+                    w[i] = $add($add($add(w[i - 16], s0), w[i - 7]), s1);
+                }
+                let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh] = h;
+                for i in 0..64 {
+                    let s1 = $xor(
+                        $xor(
+                            $or($srl::<6>(e), $sll::<26>(e)),
+                            $or($srl::<11>(e), $sll::<21>(e)),
+                        ),
+                        $or($srl::<25>(e), $sll::<7>(e)),
+                    );
+                    // ch = (e & f) ^ (!e & g); andnot(a, b) is !a & b.
+                    let ch = $xor($and(e, f), $andnot(e, g));
+                    let t1 = $add($add($add($add(hh, s1), ch), $set1(K[i] as i32)), w[i]);
+                    let s0 = $xor(
+                        $xor(
+                            $or($srl::<2>(a), $sll::<30>(a)),
+                            $or($srl::<13>(a), $sll::<19>(a)),
+                        ),
+                        $or($srl::<22>(a), $sll::<10>(a)),
+                    );
+                    let maj = $xor($xor($and(a, b), $and(a, c)), $and(b, c));
+                    let t2 = $add(s0, maj);
+                    hh = g;
+                    g = f;
+                    f = e;
+                    e = $add(d, t1);
+                    d = c;
+                    c = b;
+                    b = a;
+                    a = $add(t1, t2);
+                }
+                h[0] = $add(h[0], a);
+                h[1] = $add(h[1], b);
+                h[2] = $add(h[2], c);
+                h[3] = $add(h[3], d);
+                h[4] = $add(h[4], e);
+                h[5] = $add(h[5], f);
+                h[6] = $add(h[6], g);
+                h[7] = $add(h[7], hh);
+            }
+            // Scatter each state word's real lanes back out, big-endian.
+            for (wi, reg) in h.iter().enumerate() {
+                let mut lane_words = [0u32; $lanes];
+                $store(lane_words.as_mut_ptr() as *mut _, *reg);
+                for (l, &g) in group.iter().enumerate() {
+                    out[g][wi * 4..(wi + 1) * 4].copy_from_slice(&lane_words[l].to_be_bytes());
+                }
+            }
+        }
+    };
+}
+
+#[cfg(target_arch = "x86_64")]
+mb_compress!(
+    digest_x8_avx2,
+    "avx2",
+    8,
+    _mm256_set1_epi32,
+    _mm256_loadu_si256,
+    _mm256_storeu_si256,
+    _mm256_add_epi32,
+    _mm256_and_si256,
+    _mm256_or_si256,
+    _mm256_xor_si256,
+    _mm256_andnot_si256,
+    _mm256_slli_epi32,
+    _mm256_srli_epi32
+);
+
+#[cfg(target_arch = "x86_64")]
+mb_compress!(
+    digest_x4_sse2,
+    "sse2",
+    4,
+    _mm_set1_epi32,
+    _mm_loadu_si128,
+    _mm_storeu_si128,
+    _mm_add_epi32,
+    _mm_and_si128,
+    _mm_or_si128,
+    _mm_xor_si128,
+    _mm_andnot_si128,
+    _mm_slli_epi32,
+    _mm_srli_epi32
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::sha256::sha256;
+
+    #[test]
+    fn padded_digest_matches_oneshot() {
+        for len in [0usize, 1, 3, 55, 56, 63, 64, 65, 127, 128, 1000] {
+            let msg: Vec<u8> = (0..len).map(|i| (i % 251) as u8).collect();
+            let padded = pad_parts(&[&msg]);
+            assert_eq!(padded.len() % 64, 0);
+            assert_eq!(digest_padded(&padded), sha256(&msg), "len={len}");
+        }
+    }
+
+    #[test]
+    fn pad_parts_matches_concat() {
+        let padded = pad_parts(&[b"ab".as_slice(), b"", b"cde"]);
+        assert_eq!(padded, pad_parts(&[b"abcde".as_slice()]));
+    }
+
+    #[test]
+    fn batch_matches_scalar_at_every_level() {
+        // Mixed lengths (different block-count buckets), group sizes
+        // that exercise full groups, partial groups, and singletons.
+        let msgs: Vec<Vec<u8>> = (0..19)
+            .map(|i| (0..(i * 37 + i % 3)).map(|j| ((i * 131 + j) % 256) as u8).collect())
+            .collect();
+        let padded: Vec<Vec<u8>> = msgs.iter().map(|m| pad_parts(&[m])).collect();
+        let expect: Vec<[u8; 32]> = msgs.iter().map(|m| sha256(m)).collect();
+        for level in Level::available() {
+            assert_eq!(
+                digest_batch_padded(level, &padded),
+                expect,
+                "level={}",
+                level.name()
+            );
+        }
+    }
+
+    #[test]
+    fn batch_empty_and_singleton() {
+        for level in Level::available() {
+            assert!(digest_batch_padded(level, &[]).is_empty());
+            let one = vec![pad_parts(&[b"abc".as_slice()])];
+            assert_eq!(digest_batch_padded(level, &one)[0], sha256(b"abc"));
+        }
+    }
+}

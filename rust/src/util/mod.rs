@@ -6,6 +6,7 @@ pub mod bench;
 pub mod cli;
 pub mod csv;
 pub mod json;
+pub mod kernels;
 pub mod pool;
 pub mod prop;
 pub mod rng;
@@ -39,17 +40,42 @@ pub fn atomic_write_bytes(path: &std::path::Path, content: &[u8]) -> std::io::Re
     std::fs::rename(&tmp, path)
 }
 
-/// Decode a hex string; returns None on bad input.
+/// 256-entry nibble lookup: `HEX_DECODE[b]` is the hex value of ASCII
+/// byte `b`, or `0xff` for a non-hex byte. Built at compile time.
+const HEX_DECODE: [u8; 256] = {
+    let mut t = [0xffu8; 256];
+    let mut i = 0usize;
+    while i < 10 {
+        t[b'0' as usize + i] = i as u8;
+        i += 1;
+    }
+    let mut j = 0usize;
+    while j < 6 {
+        t[b'a' as usize + j] = 10 + j as u8;
+        t[b'A' as usize + j] = 10 + j as u8;
+        j += 1;
+    }
+    t
+};
+
+/// Decode a hex string; returns None on bad input, including
+/// odd-length strings (a truncated trailing nibble is corruption, not
+/// a value). Table-driven: this runs per-f32 when parsing merged
+/// cluster reports, where the per-char `to_digit` match was measurable
+/// at 512-peer report sizes.
 pub fn unhex(s: &str) -> Option<Vec<u8>> {
     if s.len() % 2 != 0 {
         return None;
     }
-    let mut out = Vec::with_capacity(s.len() / 2);
     let b = s.as_bytes();
-    for i in (0..b.len()).step_by(2) {
-        let hi = (b[i] as char).to_digit(16)?;
-        let lo = (b[i + 1] as char).to_digit(16)?;
-        out.push(((hi << 4) | lo) as u8);
+    let mut out = Vec::with_capacity(b.len() / 2);
+    for pair in b.chunks_exact(2) {
+        let hi = HEX_DECODE[pair[0] as usize];
+        let lo = HEX_DECODE[pair[1] as usize];
+        if hi == 0xff || lo == 0xff {
+            return None;
+        }
+        out.push((hi << 4) | lo);
     }
     Some(out)
 }
@@ -65,5 +91,22 @@ mod tests {
         assert_eq!(hex(&[0xde, 0xad]), "dead");
         assert!(unhex("xyz").is_none());
         assert!(unhex("abc").is_none());
+    }
+
+    #[test]
+    fn unhex_table_semantics() {
+        // Every byte value round-trips through the table decode.
+        let all: Vec<u8> = (0..=255u8).collect();
+        assert_eq!(unhex(&hex(&all)).unwrap(), all);
+        // Uppercase accepted, mixed case too.
+        assert_eq!(unhex("DEadBEef").unwrap(), vec![0xde, 0xad, 0xbe, 0xef]);
+        // Odd length is rejected even when every char is valid hex.
+        assert!(unhex("f").is_none());
+        assert!(unhex("abcde").is_none());
+        // Non-hex bytes anywhere reject, including high/UTF-8 bytes.
+        assert!(unhex("0g").is_none());
+        assert!(unhex("g0").is_none());
+        assert!(unhex("é0").is_none());
+        assert_eq!(unhex("").unwrap(), Vec::<u8>::new());
     }
 }

@@ -68,6 +68,19 @@ impl WorkerPool {
         self.workers
     }
 
+    /// Per-job span for splitting `total` work items across the pool,
+    /// rounded up to a multiple of `align` (≥ 1 item): every job but
+    /// the last covers whole SIMD blocks / column chunks, so the
+    /// vector kernels never straddle a job boundary. For callers that
+    /// previously computed `div_ceil(div_ceil(total, align), workers) ·
+    /// align`, this is the same span — `div_ceil` nests to
+    /// `div_ceil(total, workers·align)` from either side.
+    pub fn job_span(&self, total: usize, align: usize) -> usize {
+        let align = align.max(1);
+        let per = total.div_ceil(self.workers.max(1));
+        per.div_ceil(align).max(1) * align
+    }
+
     /// Run every job to completion before returning. Jobs may borrow
     /// from the caller's stack: the latch wait below guarantees no job
     /// outlives this call, which is what justifies the lifetime
@@ -197,5 +210,24 @@ mod tests {
     fn empty_batch_is_a_noop_and_global_pool_exists() {
         WorkerPool::global().scope_run(vec![]);
         assert!(WorkerPool::global().workers() >= 1);
+    }
+
+    #[test]
+    fn job_span_covers_everything_and_aligns() {
+        for workers in [1usize, 2, 3, 7, 16] {
+            let pool = WorkerPool::new(workers);
+            for total in [1usize, 3, 4, 5, 63, 64, 65, 1000] {
+                for align in [1usize, 4, 4096] {
+                    let span = pool.job_span(total, align);
+                    assert!(span >= 1 && span % align == 0);
+                    // Enough jobs exist to cover all items, and no more
+                    // jobs than workers (except sub-align totals).
+                    assert!(span * workers >= total, "w={workers} t={total} a={align}");
+                    // Matches the legacy chunk-count formula.
+                    let legacy = total.div_ceil(align).div_ceil(workers) * align;
+                    assert_eq!(span, legacy.max(align));
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,299 @@
+//! Bit-identity gate for the runtime-dispatched vector kernels.
+//!
+//! Every SIMD level this machine supports must produce *byte-identical*
+//! results to the portable scalar reference — not "close", identical:
+//! CenteredClip norms and deltas feed commit hashes, and the golden
+//! 64-peer digest pins the whole pipeline. The sweeps deliberately hit
+//! non-multiple-of-lane-width shapes (tails), unaligned starting
+//! offsets (subslicing defeats any accidental alignment assumption),
+//! and a τ range spanning no-clip and everything-clipped.
+//!
+//! The final test re-runs the golden 64-peer scenario with the kernels
+//! forced to each available level and asserts the run digest never
+//! moves — kernel selection is compute state, not protocol state.
+
+use btard::coordinator::adversary::AdversarySpec;
+use btard::coordinator::attacks::AttackSchedule;
+use btard::coordinator::centered_clip::TauPolicy;
+use btard::coordinator::membership::MembershipSchedule;
+use btard::coordinator::optimizer::LrSchedule;
+use btard::coordinator::training::{run_btard_pooled, OptSpec, RunConfig};
+use btard::coordinator::ProtocolConfig;
+use btard::crypto::{
+    hmac_sha256, hmac_sha256_batch, sha256, sha256_batch, sha256_batch_f32, sha256_batch_parts,
+    sha256_f32, sha256_parts,
+};
+use btard::harness::run_digest;
+use btard::model::synthetic::Quadratic;
+use btard::model::GradientSource;
+use btard::net::NetworkProfile;
+use btard::util::kernels::{self, apply, clip, Level};
+use btard::util::rng::Rng;
+use std::sync::Arc;
+
+/// Dimension sweep: below one vector, exactly one vector, straddling
+/// the 4/8-lane widths and the pass-A 4-row block, plus larger shapes
+/// that exercise several full vectors *and* a tail.
+const DIMS: &[usize] = &[0, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 33, 64, 100, 257, 1024, 1031];
+const ROWS: &[usize] = &[1, 2, 3, 4, 5, 7, 8, 9, 16, 63];
+const TAUS: &[f32] = &[0.0, 0.5, 1.0, 2.0, 1e6, f32::INFINITY];
+
+fn gaussian_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_gaussian(&mut v, scale);
+    v
+}
+
+/// The levels to test against scalar on this machine (may be just
+/// [Scalar] on a non-x86_64 or pre-SSE2-detected host — then the tests
+/// degenerate to scalar==scalar, which is fine: CI has AVX2).
+fn simd_levels() -> Vec<Level> {
+    Level::available().into_iter().filter(|&l| l != Level::Scalar).collect()
+}
+
+#[test]
+fn clip_row_norms_bit_identical_across_levels() {
+    let mut rng = Rng::new(0xA11CE);
+    for &level in &simd_levels() {
+        for &rows_n in ROWS {
+            for &dim in DIMS {
+                // +3 then subslice: the kernel sees an unaligned window.
+                let storage: Vec<Vec<f32>> =
+                    (0..rows_n).map(|_| gaussian_vec(&mut rng, dim + 3, 1.0)).collect();
+                let rows: Vec<&[f32]> = storage.iter().map(|r| &r[3..]).collect();
+                let v_store = gaussian_vec(&mut rng, dim + 3, 0.5);
+                let v = &v_store[3..];
+
+                let mut want = vec![0.0f64; rows_n];
+                clip::row_norms_sq(Level::Scalar, &rows, v, &mut want);
+                let mut got = vec![0.0f64; rows_n];
+                clip::row_norms_sq(level, &rows, v, &mut got);
+                for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                    assert_eq!(
+                        w.to_bits(),
+                        g.to_bits(),
+                        "row_norms_sq {} row {i} (rows={rows_n} dim={dim}): {w:e} vs {g:e}",
+                        level.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn clip_delta_bit_identical_across_levels_and_taus() {
+    let mut rng = Rng::new(0xBEEF);
+    for &level in &simd_levels() {
+        for &rows_n in &[1usize, 3, 4, 7, 16] {
+            for &dim in DIMS {
+                let storage: Vec<Vec<f32>> =
+                    (0..rows_n).map(|_| gaussian_vec(&mut rng, dim + 1, 1.0)).collect();
+                let rows: Vec<&[f32]> = storage.iter().map(|r| &r[1..]).collect();
+                let v_store = gaussian_vec(&mut rng, dim + 1, 0.5);
+                let v = &v_store[1..];
+                for &tau in TAUS {
+                    let mut norms = vec![0.0f64; rows_n];
+                    clip::row_norms_sq(Level::Scalar, &rows, v, &mut norms);
+                    let weights: Vec<f32> = norms
+                        .iter()
+                        .map(|&nsq| {
+                            btard::coordinator::centered_clip::clip_weight(nsq.sqrt() as f32, tau)
+                        })
+                        .collect();
+                    // Chunked at a non-lane-multiple width so chunk
+                    // boundaries land mid-vector.
+                    let chunk = 13;
+                    let mut want = vec![0.0f32; dim];
+                    for (c, d) in want.chunks_mut(chunk).enumerate() {
+                        clip::delta_chunk(Level::Scalar, &rows, v, &weights, d, c * chunk);
+                    }
+                    let mut got = vec![0.0f32; dim];
+                    for (c, d) in got.chunks_mut(chunk).enumerate() {
+                        clip::delta_chunk(level, &rows, v, &weights, d, c * chunk);
+                    }
+                    for (k, (w, g)) in want.iter().zip(&got).enumerate() {
+                        assert_eq!(
+                            w.to_bits(),
+                            g.to_bits(),
+                            "delta {} k={k} (rows={rows_n} dim={dim} tau={tau}): {w:e} vs {g:e}",
+                            level.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn optimizer_applies_bit_identical_across_levels() {
+    let mut rng = Rng::new(0x0917);
+    for &level in &simd_levels() {
+        for &dim in DIMS {
+            let grad = gaussian_vec(&mut rng, dim, 1.0);
+            let p0 = gaussian_vec(&mut rng, dim, 0.3);
+            let v0 = gaussian_vec(&mut rng, dim, 0.1);
+
+            for &(momentum, wd, nesterov) in
+                &[(0.0f32, 0.0f32, false), (0.9, 1e-4, false), (0.9, 1e-4, true)]
+            {
+                let (mut ps, mut vs) = (p0.clone(), v0.clone());
+                apply::sgd_apply(Level::Scalar, &mut ps, &mut vs, &grad, 0.05, momentum, wd, nesterov);
+                let (mut pl, mut vl) = (p0.clone(), v0.clone());
+                apply::sgd_apply(level, &mut pl, &mut vl, &grad, 0.05, momentum, wd, nesterov);
+                assert!(
+                    ps.iter().zip(&pl).all(|(a, b)| a.to_bits() == b.to_bits())
+                        && vs.iter().zip(&vl).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "sgd_apply {} diverged (dim={dim} momentum={momentum} nesterov={nesterov})",
+                    level.name()
+                );
+            }
+
+            let m0 = gaussian_vec(&mut rng, dim, 0.01);
+            let w0 = gaussian_vec(&mut rng, dim, 0.01).iter().map(|x| x * x).collect::<Vec<_>>();
+            let (mut ms, mut qs, mut us) = (m0.clone(), w0.clone(), vec![0.0f32; dim]);
+            apply::lamb_moments(
+                Level::Scalar, &mut ms, &mut qs, &grad, &p0, &mut us, 0.9, 0.999, 0.1, 0.001,
+                1e-6, 0.01,
+            );
+            let (mut ml, mut ql, mut ul) = (m0.clone(), w0.clone(), vec![0.0f32; dim]);
+            apply::lamb_moments(
+                level, &mut ml, &mut ql, &grad, &p0, &mut ul, 0.9, 0.999, 0.1, 0.001, 1e-6, 0.01,
+            );
+            assert!(
+                ms.iter().zip(&ml).all(|(a, b)| a.to_bits() == b.to_bits())
+                    && qs.iter().zip(&ql).all(|(a, b)| a.to_bits() == b.to_bits())
+                    && us.iter().zip(&ul).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "lamb_moments {} diverged (dim={dim})",
+                level.name()
+            );
+
+            let mut pss = p0.clone();
+            apply::scaled_sub(Level::Scalar, &mut pss, &us, 0.0123);
+            let mut pls = p0.clone();
+            apply::scaled_sub(level, &mut pls, &ul, 0.0123);
+            assert!(
+                pss.iter().zip(&pls).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "scaled_sub {} diverged (dim={dim})",
+                level.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn sha256_batches_bit_identical_across_levels() {
+    // Mixed lengths spanning padding block-count buckets (0..=3 blocks),
+    // with enough messages to fill 8-lane groups plus a ragged tail.
+    let msgs: Vec<Vec<u8>> = (0..23u8)
+        .map(|i| {
+            let len = [0usize, 1, 54, 55, 56, 63, 64, 65, 119, 120, 128, 200][i as usize % 12]
+                + (i as usize % 3);
+            (0..len).map(|j| i.wrapping_mul(37).wrapping_add(j as u8)).collect()
+        })
+        .collect();
+    let refs: Vec<&[u8]> = msgs.iter().map(|m| m.as_slice()).collect();
+    let want: Vec<[u8; 32]> = refs.iter().map(|m| sha256(m)).collect();
+
+    let parts_items: Vec<[&[u8]; 3]> =
+        refs.iter().map(|m| [b"prefix".as_slice(), m, b"suffix".as_slice()]).collect();
+    let parts_refs: Vec<&[&[u8]]> = parts_items.iter().map(|p| p.as_slice()).collect();
+    let want_parts: Vec<[u8; 32]> = parts_refs.iter().map(|p| sha256_parts(p)).collect();
+
+    let floats: Vec<Vec<f32>> = (0..9).map(|i| vec![1.5f32 + i as f32; 5 + i * 7]).collect();
+    let float_refs: Vec<&[f32]> = floats.iter().map(|f| f.as_slice()).collect();
+    let want_f32: Vec<[u8; 32]> = float_refs.iter().map(|f| sha256_f32(f)).collect();
+
+    let keys: Vec<Vec<u8>> = (0..13).map(|i| vec![i as u8; [16, 32, 64, 65, 200][i % 5]]).collect();
+    let hmac_parts: Vec<[&[u8]; 2]> =
+        keys.iter().zip(&refs).map(|(_, m)| [b"frame".as_slice(), *m]).collect();
+    let hmac_items: Vec<(&[u8], &[&[u8]])> = keys
+        .iter()
+        .zip(&hmac_parts)
+        .map(|(k, p)| (k.as_slice(), p.as_slice()))
+        .collect();
+    let want_hmac: Vec<[u8; 32]> =
+        hmac_items.iter().map(|(k, p)| hmac_sha256(k, p)).collect();
+
+    for level in Level::available() {
+        kernels::with_forced_level(level, || {
+            assert_eq!(sha256_batch(&refs), want, "sha256_batch at {}", level.name());
+            assert_eq!(
+                sha256_batch_parts(&parts_refs),
+                want_parts,
+                "sha256_batch_parts at {}",
+                level.name()
+            );
+            assert_eq!(
+                sha256_batch_f32(&float_refs),
+                want_f32,
+                "sha256_batch_f32 at {}",
+                level.name()
+            );
+            assert_eq!(
+                hmac_sha256_batch(&hmac_items),
+                want_hmac,
+                "hmac_sha256_batch at {}",
+                level.name()
+            );
+        });
+    }
+}
+
+/// The golden 64-peer scenario (same shape golden_metrics.rs pins): the
+/// run digest must be identical with the kernels forced to every level
+/// this machine supports. This is the end-to-end closure of the
+/// bit-exactness contract — norms, deltas, optimizer steps and every
+/// commit/accusation hash flow through the kernels.
+#[test]
+fn golden_64_peer_digest_invariant_across_kernel_levels() {
+    let cfg = RunConfig {
+        n_peers: 64,
+        byzantine: (56..64).collect(),
+        attack: Some((
+            AdversarySpec::parse("sign_flip:1000").unwrap(),
+            AttackSchedule::from_step(2),
+        )),
+        steps: 4,
+        protocol: ProtocolConfig {
+            n0: 64,
+            tau: TauPolicy::Fixed(1.0),
+            m_validators: 8,
+            delta_max: 4.0,
+            ..ProtocolConfig::default()
+        },
+        opt: OptSpec::Sgd {
+            schedule: LrSchedule::Constant(0.1),
+            momentum: 0.0,
+            nesterov: false,
+        },
+        clip_lambda: None,
+        eval_every: 2,
+        seed: 7,
+        verify_signatures: false,
+        gossip_fanout: 8,
+        session_mac: false,
+        network: NetworkProfile::perfect(),
+        churn: MembershipSchedule::empty(),
+        admission: Default::default(),
+        segments: vec![],
+        checkpoint: None,
+    };
+    let run_at = |level: Level| {
+        kernels::with_forced_level(level, || {
+            let src: Arc<dyn GradientSource> = Arc::new(Quadratic::new(1024, 0.1, 2.0, 1.0, 9));
+            run_digest(&run_btard_pooled(&cfg, src, 4))
+        })
+    };
+    let scalar = run_at(Level::Scalar);
+    for level in Level::available() {
+        let digest = run_at(level);
+        assert_eq!(
+            digest,
+            scalar,
+            "64-peer run digest moved between scalar and {} kernels",
+            level.name()
+        );
+    }
+}
